@@ -1,0 +1,74 @@
+//! Classification pipeline (the paper's Figs. 4–5 workload as a single
+//! application): usps-like digits -> RSKPCA embedding -> 3-NN classifier,
+//! against the full-KPCA baseline.
+//!
+//! Run with: `cargo run --release --example classification_pipeline`
+//! (pass `--full` for paper-scale n=9298; default subsamples for a laptop
+//! single-core budget).
+
+use rskpca::classify::{accuracy, KnnClassifier};
+use rskpca::data::{train_test_split, usps_like};
+use rskpca::density::{RsdeEstimator, ShadowDensity};
+use rskpca::kernel::{median_heuristic, Kernel};
+use rskpca::kpca::{fit_kpca, fit_rskpca};
+use rskpca::metrics::Timer;
+use rskpca::prng::Pcg64;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let full_scale = std::env::args().any(|a| a == "--full");
+    let mut ds = usps_like(42);
+    if !full_scale {
+        let mut rng = Pcg64::new(9);
+        let idx = rng.sample_indices(ds.n(), 2000);
+        ds = ds.select(&idx);
+    }
+    let (train, test) = train_test_split(&ds, 0.9, 3);
+    let sigma = median_heuristic(&train.x, 2000, 5);
+    let kernel = Kernel::gaussian(sigma);
+    let rank = 15; // Table 1's k for usps
+    println!(
+        "usps-like: train n={} test n={} d={} sigma={sigma:.2} r={rank}",
+        train.n(),
+        test.n(),
+        train.dim()
+    );
+
+    // --- Full KPCA baseline ------------------------------------------
+    let t = Timer::start();
+    let kpca = fit_kpca(&train.x, &kernel, rank)?;
+    let kpca_fit = t.elapsed_s();
+    let t = Timer::start();
+    let z_test_full = kpca.transform(&test.x);
+    let kpca_embed = t.elapsed_s();
+    let z_train_full = kpca.transform(&train.x);
+    let knn = KnnClassifier::fit(z_train_full, train.y.clone(), 3);
+    let acc_full = accuracy(&knn.predict(&z_test_full), &test.y);
+    println!(
+        "full KPCA : fit {kpca_fit:>7.2}s embed {kpca_embed:>7.3}s \
+         accuracy {acc_full:.4}"
+    );
+
+    // --- ShDE + RSKPCA ------------------------------------------------
+    for ell in [3.0, 4.0, 5.0] {
+        let t = Timer::start();
+        let rs = ShadowDensity::new(ell).reduce(&train.x, &kernel);
+        let model = fit_rskpca(&rs, &kernel, rank)?;
+        let fit = t.elapsed_s();
+        let t = Timer::start();
+        let z_test = model.transform(&test.x);
+        let embed = t.elapsed_s();
+        let z_train = model.transform(&train.x);
+        let knn = KnnClassifier::fit(z_train, train.y.clone(), 3);
+        let acc = accuracy(&knn.predict(&z_test), &test.y);
+        println!(
+            "ell={ell:>3}  : fit {fit:>7.2}s ({:>5.1}x) embed \
+             {embed:>7.3}s ({:>5.1}x) accuracy {acc:.4} (m={}, {:.1}% \
+             retained)",
+            kpca_fit / fit,
+            kpca_embed / embed,
+            rs.m(),
+            100.0 * rs.retention()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! End-to-end driver (DESIGN.md §6, EXPERIMENTS.md §E2E): exercise the
+//! full three-layer system on a real workload.
+//!
+//! Pipeline: synthesize the german-like dataset at full scale -> fit
+//! ShDE+RSKPCA -> start the threaded embedding service over the **PJRT
+//! backend executing the AOT Pallas artifacts** (native fallback if
+//! `make artifacts` hasn't run) -> drive it with concurrent clients ->
+//! report latency percentiles, throughput, batch statistics, and the
+//! serving speedup over the full-KPCA model on the same service stack.
+//!
+//! Run with: `cargo run --release --example embedding_service`
+
+use std::path::Path;
+
+use rskpca::config::ServiceConfig;
+use rskpca::coordinator::serve;
+use rskpca::data::{german_like, train_test_split};
+use rskpca::density::{RsdeEstimator, ShadowDensity};
+use rskpca::kernel::Kernel;
+use rskpca::kpca::{fit_kpca, fit_rskpca, EmbeddingModel};
+use rskpca::linalg::Matrix;
+use rskpca::metrics::Timer;
+use rskpca::runtime::factory_from_name;
+
+const CLIENTS: usize = 4;
+const REQUESTS_PER_CLIENT: usize = 50;
+const ROWS_PER_REQUEST: usize = 16;
+
+fn drive(
+    label: &str,
+    model: EmbeddingModel,
+    backend: &str,
+    test: &Matrix,
+) -> Result<f64, Box<dyn std::error::Error>> {
+    let cfg = ServiceConfig {
+        max_batch: 256,
+        max_wait_us: 300,
+        queue_depth: 512,
+        workers: 1,
+    };
+    let svc = serve(
+        model,
+        factory_from_name(backend, Path::new("artifacts")),
+        cfg,
+    )?;
+    let t = Timer::start();
+    let mut clients = Vec::new();
+    for c in 0..CLIENTS {
+        let h = svc.handle();
+        let test = test.clone();
+        clients.push(std::thread::spawn(move || {
+            for r in 0..REQUESTS_PER_CLIENT {
+                let start = (c * 31 + r * ROWS_PER_REQUEST)
+                    % (test.rows() - ROWS_PER_REQUEST);
+                let idx: Vec<usize> =
+                    (start..start + ROWS_PER_REQUEST).collect();
+                h.embed(test.select_rows(&idx)).expect("embed");
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let wall = t.elapsed_s();
+    let snap = svc.shutdown();
+    let rows_per_s = snap.rows as f64 / wall;
+    println!(
+        "[{label}] {} rows in {wall:.3}s -> {rows_per_s:.0} rows/s | \
+         latency p50={:.0}us p95={:.0}us p99={:.0}us | {} batches, mean \
+         {:.1} rows",
+        snap.rows,
+        snap.latency_p50_us,
+        snap.latency_p95_us,
+        snap.latency_p99_us,
+        snap.batches,
+        snap.mean_batch_rows
+    );
+    Ok(rows_per_s)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let backend = if Path::new("artifacts/manifest.json").exists() {
+        "pjrt"
+    } else {
+        eprintln!("note: artifacts missing, using native backend");
+        "native"
+    };
+
+    // Fit on the full german-like dataset (Table 1 scale).
+    let ds = german_like(42);
+    let (train, test) = train_test_split(&ds, 0.8, 1);
+    let kernel = Kernel::gaussian(rskpca::kernel::median_heuristic(
+        &train.x, 2000, 7,
+    ));
+    println!(
+        "dataset: n={} d={} | kernel sigma={:.2} | backend={backend}",
+        ds.n(),
+        ds.dim(),
+        kernel.sigma
+    );
+
+    let t = Timer::start();
+    let rs = ShadowDensity::new(4.0).reduce(&train.x, &kernel);
+    let reduced = fit_rskpca(&rs, &kernel, 5)?;
+    println!(
+        "RSKPCA fit in {:.3}s: m={} ({:.1}% retained)",
+        t.elapsed_s(),
+        rs.m(),
+        100.0 * rs.retention()
+    );
+    let t = Timer::start();
+    let full = fit_kpca(&train.x, &kernel, 5)?;
+    println!(
+        "full KPCA fit in {:.3}s: retains {} points",
+        t.elapsed_s(),
+        full.n_retained()
+    );
+
+    // Serve both models through the identical stack; the throughput gap
+    // is the paper's O(rm)-vs-O(rn) testing-cost story, end to end.
+    let fast = drive("rskpca   ", reduced, backend, &test.x)?;
+    let slow = drive("full-kpca", full, backend, &test.x)?;
+    println!(
+        "\nserving speedup rskpca vs full KPCA: {:.1}x (retention {:.1}%)",
+        fast / slow,
+        100.0 * rs.retention()
+    );
+    Ok(())
+}

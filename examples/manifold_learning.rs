@@ -1,0 +1,86 @@
+//! KMLA extension (paper §3): reduced-set Laplacian eigenmaps and
+//! diffusion maps on the swiss roll, versus their full-data versions.
+//!
+//! Run with: `cargo run --release --example manifold_learning`
+
+use rskpca::data::swiss_roll;
+use rskpca::density::{RsdeEstimator, ShadowDensity};
+use rskpca::kernel::Kernel;
+use rskpca::kmla::{
+    diffusion_map, laplacian_eigenmaps, nystrom_extend, rs_diffusion_map,
+    rs_laplacian_eigenmaps,
+};
+use rskpca::metrics::Timer;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let ds = swiss_roll(1500, 0.1, 11);
+    let kernel = Kernel::gaussian(4.0);
+    println!("swiss roll: n={} d={}", ds.n(), ds.dim());
+
+    // Full Laplacian eigenmaps — O(n^3).
+    let t = Timer::start();
+    let full = laplacian_eigenmaps(&ds.x, &kernel, 3)?;
+    let full_s = t.elapsed_s();
+    println!(
+        "full eigenmaps    : {full_s:>7.2}s eigenvalues {:?}",
+        full.eigenvalues
+            .iter()
+            .map(|v| (v * 1e4).round() / 1e4)
+            .collect::<Vec<_>>()
+    );
+
+    // Reduced-set eigenmaps via ShDE (§3's generic eigenproblem (15)).
+    let t = Timer::start();
+    let rs = ShadowDensity::new(4.0).reduce(&ds.x, &kernel);
+    let reduced = rs_laplacian_eigenmaps(&rs, &kernel, 3)?;
+    let reduced_s = t.elapsed_s();
+    println!(
+        "reduced eigenmaps : {reduced_s:>7.2}s ({:.0}x, m={}) eigenvalues \
+         {:?}",
+        full_s / reduced_s,
+        rs.m(),
+        reduced
+            .eigenvalues
+            .iter()
+            .map(|v| (v * 1e4).round() / 1e4)
+            .collect::<Vec<_>>()
+    );
+    let max_rel = full
+        .eigenvalues
+        .iter()
+        .zip(&reduced.eigenvalues)
+        .map(|(a, b)| ((a - b) / a.abs().max(1e-12)).abs())
+        .fold(0.0f64, f64::max);
+    println!("eigenvalue max rel deviation: {max_rel:.4}");
+
+    // Out-of-sample extension of the reduced embedding.
+    let probe = swiss_roll(100, 0.1, 12);
+    let ext = nystrom_extend(&reduced, &rs, &kernel, &probe.x)?;
+    println!(
+        "out-of-sample extension: embedded {} fresh points to rank {}",
+        ext.rows(),
+        ext.cols()
+    );
+
+    // Diffusion maps, both forms.
+    let t = Timer::start();
+    let dm = diffusion_map(&ds.x, &kernel, 2, 2.0)?;
+    let dm_s = t.elapsed_s();
+    let t = Timer::start();
+    let rdm = rs_diffusion_map(&rs, &kernel, 2, 2.0)?;
+    let rdm_s = t.elapsed_s();
+    println!(
+        "diffusion maps    : full {dm_s:.2}s vs reduced {rdm_s:.3}s \
+         ({:.0}x); eigenvalues {:?} vs {:?}",
+        dm_s / rdm_s,
+        dm.eigenvalues
+            .iter()
+            .map(|v| (v * 1e4).round() / 1e4)
+            .collect::<Vec<_>>(),
+        rdm.eigenvalues
+            .iter()
+            .map(|v| (v * 1e4).round() / 1e4)
+            .collect::<Vec<_>>()
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: fit ShDE+RSKPCA on a toy dataset, compare against full
+//! KPCA, and project new points.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use rskpca::align::align_embeddings;
+use rskpca::data::gaussian_mixture_2d;
+use rskpca::density::{RsdeEstimator, ShadowDensity};
+use rskpca::kernel::Kernel;
+use rskpca::kpca::{fit_kpca, fit_rskpca};
+use rskpca::metrics::Timer;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. Data: a redundant 2-D mixture (the regime RSKPCA exploits).
+    let ds = gaussian_mixture_2d(2000, 4, 0.35, 7);
+    let kernel = Kernel::gaussian(1.0);
+    println!("data: n={} d={}", ds.n(), ds.dim());
+
+    // 2. Baseline: full KPCA — O(n^3) training, O(n) per projection.
+    let t = Timer::start();
+    let kpca = fit_kpca(&ds.x, &kernel, 4)?;
+    let kpca_fit = t.elapsed_s();
+    println!(
+        "full KPCA: fit {kpca_fit:.2}s, retains {} points",
+        kpca.n_retained()
+    );
+
+    // 3. RSKPCA: shadow selection (Algorithm 2) + weighted m x m
+    //    eigenproblem (Algorithm 1).  ell = 4 is the paper's generic pick.
+    let t = Timer::start();
+    let rs = ShadowDensity::new(4.0).reduce(&ds.x, &kernel);
+    let rskpca = fit_rskpca(&rs, &kernel, 4)?;
+    let rskpca_fit = t.elapsed_s();
+    println!(
+        "RSKPCA: fit {rskpca_fit:.3}s ({:.0}x faster), retains {} / {} \
+         points ({:.1}%)",
+        kpca_fit / rskpca_fit,
+        rs.m(),
+        ds.n(),
+        100.0 * rs.retention()
+    );
+
+    // 4. Fidelity: embed fresh points with both models and align.
+    let fresh = gaussian_mixture_2d(400, 4, 0.35, 8);
+    let t = Timer::start();
+    let o_full = kpca.transform(&fresh.x);
+    let full_embed = t.elapsed_s();
+    let t = Timer::start();
+    let o_reduced = rskpca.transform(&fresh.x);
+    let reduced_embed = t.elapsed_s();
+    let aligned = align_embeddings(&o_full, &o_reduced)?;
+    println!(
+        "embedding: rel err {:.4} after alignment; projection {:.0}x \
+         faster ({:.2}ms vs {:.2}ms for {} points)",
+        aligned.rel_err,
+        full_embed / reduced_embed,
+        reduced_embed * 1e3,
+        full_embed * 1e3,
+        fresh.n()
+    );
+
+    // 5. Single-point projection (the serving hot path).
+    let z = rskpca.transform_point(fresh.x.row(0));
+    println!("z(x_0) = {z:?}");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the paper's compute hot-spot (Gram tiles and the
+# fused reduced-set embedding), plus the pure-jnp oracles in ref.py.
+from . import ref  # noqa: F401
+from .embed import embed  # noqa: F401
+from .gram import KERNELS, TILE_I, TILE_J, gram  # noqa: F401

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: fused reduced-set embedding E = K(X, C) @ A.
+
+This is the paper's test-time map (O(km) per point): evaluate the kernel
+between a batch of query rows and the m retained centers, then project onto
+the k scaled eigenvectors.  Fusing the projection into the Gram tile means
+the (TI, TJ) kernel block never round-trips to HBM — each grid step
+accumulates its (TI, k) contribution directly, which is exactly the
+flash-attention-style "never materialize the big intermediate" trick mapped
+to the RSKPCA serve path.
+
+Grid = (n/TI, m/TJ); the j axis is a reduction axis: the output block index
+map pins every j step of a given i to the same (TI, k) output tile, and the
+kernel initializes on j == 0 / accumulates afterwards.  Pallas guarantees
+sequential grid order in interpret mode, making the accumulation safe.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gram import TILE_I, TILE_J, _distance_tile, _profile
+
+
+def _embed_kernel(gamma_ref, x_ref, c_ref, a_ref, o_ref, *, kernel):
+    """Pallas body: accumulate one (TI, k) projection contribution."""
+    j = pl.program_id(1)
+    gamma = gamma_ref[0, 0]
+    ktile = _profile(kernel, gamma, _distance_tile(x_ref[...], c_ref[...]))
+    contrib = jax.lax.dot_general(
+        ktile,
+        a_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (TI, k), MXU
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kernel", "tile_i", "tile_j", "interpret")
+)
+def embed(x, c, gamma, a, *, kernel="gaussian", tile_i=TILE_I, tile_j=TILE_J,
+          interpret=True):
+    """Fused reduced-set embedding, shape (n, k).
+
+    Args:
+      x: (n, d) f32 query rows, n divisible by tile_i.
+      c: (m, d) f32 centers, m divisible by tile_j.
+      gamma: (1, 1) f32 bandwidth parameter (runtime input).
+      a: (m, k) f32 projection coefficients (RSKPCA: W^{-1/2} eigvecs scaled
+        by lambda^{-1/2}; KDE: the weight column).
+    """
+    n, d = x.shape
+    m, _ = c.shape
+    _, k = a.shape
+    if n % tile_i or m % tile_j:
+        raise ValueError(f"shape ({n},{m}) not divisible by tile "
+                         f"({tile_i},{tile_j})")
+    gamma = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    grid = (n // tile_i, m // tile_j)
+    return pl.pallas_call(
+        functools.partial(_embed_kernel, kernel=kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),        # gamma
+            pl.BlockSpec((tile_i, d), lambda i, j: (i, 0)),   # X rows
+            pl.BlockSpec((tile_j, d), lambda i, j: (j, 0)),   # C rows
+            pl.BlockSpec((tile_j, k), lambda i, j: (j, 0)),   # A rows
+        ],
+        out_specs=pl.BlockSpec((tile_i, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(gamma, x, c, a)

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: tiled radially-symmetric Gram matrix.
+
+The compute hot-spot of every phase of RSKPCA (shadow quantization aside) is
+the evaluation of a kernel block K[i, j] = phi(||x_i - y_j||) — the weighted
+Gram matrix K~ at fit time, and K(X, C) at serve time.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the cross term x·yT of
+||x - y||^2 = x^2 + y^2 - 2 x·yT is a single MXU `dot` per (TI, TJ) output
+tile, contracted over the feature dim; the rank-1 correction and the kernel
+profile phi run on the VPU.  BlockSpecs stream TI rows of X and TJ rows of Y
+from HBM into VMEM per grid step — the schedule a CUDA implementation would
+express with threadblocks + shared memory.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers the same schedule to plain HLO, which is
+what `aot.py` exports and the rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes, chosen for the 128x128 MXU systolic array.  VMEM per
+# grid step at TI=TJ=128, d=576 (the largest feature bucket):
+#   (TI + TJ) * d * 4B  +  TI * TJ * 4B  =  576 KiB + 64 KiB  « 16 MiB,
+# leaving room for double buffering of the streamed X/Y tiles.
+TILE_I = 128
+TILE_J = 128
+
+KERNELS = ("gaussian", "laplacian", "cauchy")
+
+
+def _profile(kernel, gamma, d2):
+    """Apply the radial profile phi to a tile of squared distances (VPU)."""
+    if kernel == "gaussian":
+        return jnp.exp(-gamma * d2)
+    if kernel == "laplacian":
+        return jnp.exp(-gamma * jnp.sqrt(jnp.maximum(d2, 0.0)))
+    if kernel == "cauchy":
+        return 1.0 / (1.0 + gamma * d2)
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def _distance_tile(x, y):
+    """Squared-distance tile via the MXU-friendly expansion.
+
+    x: (TI, d), y: (TJ, d) -> (TI, TJ).  The cross term is the only O(d)
+    contraction and maps to one `dot`; the squared norms are cheap VPU
+    reductions.  Clamped at zero: the expansion can go slightly negative in
+    f32 for near-duplicate rows.
+    """
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (TI, 1)
+    y2 = jnp.sum(y * y, axis=1, keepdims=True)  # (TJ, 1)
+    xy = jax.lax.dot_general(
+        x,
+        y,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (TI, TJ), MXU
+    return jnp.maximum(x2 + y2.T - 2.0 * xy, 0.0)
+
+
+def _gram_kernel(gamma_ref, x_ref, y_ref, o_ref, *, kernel):
+    """Pallas body: one (TI, TJ) tile of the Gram matrix."""
+    gamma = gamma_ref[0, 0]
+    d2 = _distance_tile(x_ref[...], y_ref[...])
+    o_ref[...] = _profile(kernel, gamma, d2)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kernel", "tile_i", "tile_j", "interpret")
+)
+def gram(x, y, gamma, *, kernel="gaussian", tile_i=TILE_I, tile_j=TILE_J,
+         interpret=True):
+    """Tiled Gram matrix K[i, j] = phi(||x_i - y_j||), shape (n, m).
+
+    Args:
+      x: (n, d) f32, n divisible by tile_i.
+      y: (m, d) f32, m divisible by tile_j.
+      gamma: (1, 1) f32 — bandwidth parameter, a runtime input so a single
+        AOT artifact serves every sigma (gaussian: gamma = 1/(2 sigma^2)).
+      kernel: radial profile, one of KERNELS (static; baked per artifact).
+    """
+    n, d = x.shape
+    m, _ = y.shape
+    if n % tile_i or m % tile_j:
+        raise ValueError(f"shape ({n},{m}) not divisible by tile "
+                         f"({tile_i},{tile_j})")
+    gamma = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    grid = (n // tile_i, m // tile_j)
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, kernel=kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),        # gamma
+            pl.BlockSpec((tile_i, d), lambda i, j: (i, 0)),   # X rows
+            pl.BlockSpec((tile_j, d), lambda i, j: (j, 0)),   # Y rows
+        ],
+        out_specs=pl.BlockSpec((tile_i, tile_j), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(gamma, x, y)

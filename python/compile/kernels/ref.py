@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness anchor).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with nothing but jax.numpy, against which pytest + hypothesis check
+the kernels (see python/tests/test_kernel.py).  The references are also what
+the L2 model would compute if the Pallas path were disabled, so they double
+as the semantic spec of the artifacts the rust runtime loads.
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "sqdist_ref",
+    "gram_ref",
+    "embed_ref",
+    "kde_ref",
+]
+
+
+def sqdist_ref(x, y):
+    """Pairwise squared Euclidean distances.
+
+    x: (n, d), y: (m, d)  ->  (n, m) with D2[i,j] = ||x_i - y_j||^2.
+    Computed the numerically-stable way (explicit difference), not the
+    x2+y2-2xy expansion the kernel uses, so the test catches cancellation
+    bugs in the fast path.
+    """
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def gram_ref(x, y, gamma, kernel="gaussian"):
+    """Reference Gram matrix K[i,j] = phi(dist(x_i, y_j)).
+
+    gaussian : exp(-gamma * ||x - y||^2)      (gamma = 1 / (2 sigma^2))
+    laplacian: exp(-gamma * ||x - y||)        (gamma = 1 / sigma)
+    cauchy   : 1 / (1 + gamma * ||x - y||^2)
+    """
+    d2 = sqdist_ref(x, y)
+    if kernel == "gaussian":
+        return jnp.exp(-gamma * d2)
+    if kernel == "laplacian":
+        return jnp.exp(-gamma * jnp.sqrt(jnp.maximum(d2, 0.0)))
+    if kernel == "cauchy":
+        return 1.0 / (1.0 + gamma * d2)
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def embed_ref(x, c, gamma, a, kernel="gaussian"):
+    """Reference reduced-set embedding E = K(x, C) @ A.
+
+    x: (n, d) query rows, c: (m, d) centers, a: (m, k) projection
+    coefficients (scaled eigenvectors in RSKPCA).  This is the paper's
+    O(km)-per-point test-time map.
+    """
+    return gram_ref(x, c, gamma, kernel) @ a
+
+
+def kde_ref(x, c, w, gamma, n_total, kernel="gaussian"):
+    """Reference reduced-set density estimate (paper eq. 9).
+
+    p~(x_i) = (1/n_total) * sum_j w_j k(c_j, x_i).
+    """
+    return gram_ref(x, c, gamma, kernel) @ w / n_total

@@ -1,0 +1,60 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the rust runtime.
+
+Two graphs, both thin wrappers over the L1 Pallas kernels so that the Pallas
+schedule lowers into the exported HLO:
+
+  gram_model(X[n,d],  Y[m,d], gamma[1,1])            -> K[n,m]
+  embed_model(X[n,d], C[m,d], gamma[1,1], A[m,k])    -> E[n,k]
+
+Shapes are static per artifact; `aot.py` lowers a bucket lattice of them and
+the rust runtime zero-pads inputs into the nearest bucket.  Zero-padding the
+feature dimension is exact for radially symmetric kernels (both operands pad
+identically, so distances are unchanged); padded rows produce junk rows that
+rust slices off; padded centers are handled by zero weight / zero projection
+columns.
+
+gamma rides along as a runtime input so a single artifact serves every
+bandwidth; the kernel *profile* (gaussian / laplacian / cauchy) is static
+and baked into the artifact name.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import embed, gram
+
+
+def _tiles(n, m):
+    """Pick MXU-shaped tiles that divide the (already padded) bucket."""
+    return min(128, n), min(128, m)
+
+
+def gram_model(x, y, gamma, *, kernel="gaussian"):
+    """K[i,j] = phi(||x_i - y_j||) over a padded bucket."""
+    ti, tj = _tiles(x.shape[0], y.shape[0])
+    return gram(x, y, gamma, kernel=kernel, tile_i=ti, tile_j=tj)
+
+
+def embed_model(x, c, gamma, a, *, kernel="gaussian"):
+    """E = K(X, C) @ A — the serve-path projection, fused in L1."""
+    ti, tj = _tiles(x.shape[0], c.shape[0])
+    return embed(x, c, gamma, a, kernel=kernel, tile_i=ti, tile_j=tj)
+
+
+def gram_ref_model(x, y, gamma, *, kernel="gaussian"):
+    """Pure-jnp variant of gram_model (perf baseline artifact)."""
+    from .kernels import ref
+
+    return ref.gram_ref(x, y, gamma.reshape(()), kernel=kernel)
+
+
+def make_example_args(op, n, m, d, k):
+    """ShapeDtypeStructs for lowering one artifact."""
+    f32 = jnp.float32
+    from jax import ShapeDtypeStruct as S
+
+    if op == "gram":
+        return (S((n, d), f32), S((m, d), f32), S((1, 1), f32))
+    if op == "embed":
+        return (S((n, d), f32), S((m, d), f32), S((1, 1), f32),
+                S((m, k), f32))
+    raise ValueError(f"unknown op {op!r}")

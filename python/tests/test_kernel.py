@@ -1,0 +1,172 @@
+"""L1 correctness: Pallas gram/embed vs the pure-jnp oracle.
+
+hypothesis sweeps shapes, tile factorizations, bandwidths and kernel
+profiles; assert_allclose against ref.py is the core correctness signal for
+everything the rust runtime will execute.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import KERNELS, embed, gram, ref
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _data(seed, n, m, d, k=3, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(n, d)) * scale).astype(np.float32)
+    y = (rng.normal(size=(m, d)) * scale).astype(np.float32)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    return x, y, a
+
+
+def _gamma(g):
+    return np.array([[g]], dtype=np.float32)
+
+
+# ---------------------------------------------------------------- unit ----
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_gram_matches_ref_basic(kernel):
+    x, y, _ = _data(0, 32, 16, 7)
+    out = gram(x, y, _gamma(0.25), kernel=kernel, tile_i=16, tile_j=8)
+    expect = ref.gram_ref(x, y, 0.25, kernel=kernel)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_embed_matches_ref_basic(kernel):
+    x, c, a = _data(1, 32, 16, 7, k=5)
+    out = embed(x, c, _gamma(0.25), a, kernel=kernel, tile_i=16, tile_j=8)
+    expect = ref.embed_ref(x, c, 0.25, a, kernel=kernel)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+def test_gram_diagonal_is_kappa():
+    # k(x, x) = kappa = 1 for all three profiles.
+    x, _, _ = _data(2, 16, 16, 4)
+    for kernel in KERNELS:
+        out = np.asarray(
+            gram(x, x, _gamma(0.5), kernel=kernel, tile_i=8, tile_j=8))
+        # f32 cancellation in the x2+y2-2xy expansion leaves ~1e-6 residual
+        # *squared* distance on the diagonal; the laplacian's sqrt amplifies
+        # that to ~1e-3 in distance, hence the looser tolerance there.
+        atol = 2e-3 if kernel == "laplacian" else 2e-5
+        assert_allclose(np.diag(out), np.ones(16), atol=atol)
+
+
+def test_gram_symmetric_on_same_set():
+    x, _, _ = _data(3, 24, 24, 6)
+    out = np.asarray(gram(x, x, _gamma(0.1), tile_i=8, tile_j=8))
+    assert_allclose(out, out.T, atol=1e-6)
+
+
+def test_gram_values_in_unit_interval():
+    x, y, _ = _data(4, 16, 8, 5, scale=10.0)
+    for kernel in KERNELS:
+        out = np.asarray(
+            gram(x, y, _gamma(2.0), kernel=kernel, tile_i=8, tile_j=8))
+        assert out.min() >= 0.0 and out.max() <= 1.0 + 1e-6
+
+
+def test_gram_near_duplicate_rows_clamped():
+    # The x2+y2-2xy expansion can go negative in f32; the kernel clamps, so
+    # values must never exceed kappa even for duplicated rows.
+    rng = np.random.default_rng(5)
+    x = np.repeat(rng.normal(size=(4, 9)).astype(np.float32), 4, axis=0)
+    out = np.asarray(gram(x, x, _gamma(3.0), tile_i=8, tile_j=8))
+    assert out.max() <= 1.0 + 1e-6
+
+
+def test_gram_rejects_non_divisible_shapes():
+    x, y, _ = _data(6, 10, 8, 3)
+    with pytest.raises(ValueError):
+        gram(x, y, _gamma(1.0), tile_i=8, tile_j=8)
+
+
+def test_embed_zero_padded_centers_are_inert():
+    # Padding centers with junk rows but zero A-rows must not change E —
+    # this is the contract the rust runtime's bucket padding relies on.
+    x, c, a = _data(7, 16, 8, 5, k=4)
+    c_pad = np.concatenate([c, np.random.default_rng(8).normal(
+        size=(8, 5)).astype(np.float32)])
+    a_pad = np.concatenate([a, np.zeros((8, 4), np.float32)])
+    out = embed(x, c_pad, _gamma(0.3), a_pad, tile_i=8, tile_j=8)
+    expect = ref.embed_ref(x, c, 0.3, a)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+def test_gram_zero_padded_features_are_exact():
+    # Zero-padding the feature dim leaves all pairwise distances unchanged.
+    x, y, _ = _data(9, 16, 8, 6)
+    xp = np.concatenate([x, np.zeros((16, 10), np.float32)], axis=1)
+    yp = np.concatenate([y, np.zeros((8, 10), np.float32)], axis=1)
+    a_ = np.asarray(gram(x, y, _gamma(0.2), tile_i=8, tile_j=8))
+    b_ = np.asarray(gram(xp, yp, _gamma(0.2), tile_i=8, tile_j=8))
+    assert_allclose(a_, b_, atol=1e-6)
+
+
+def test_kde_is_embed_with_weight_column():
+    x, c, _ = _data(10, 16, 8, 5)
+    w = np.abs(np.random.default_rng(11).normal(
+        size=(8,))).astype(np.float32)
+    a = np.zeros((8, 2), np.float32)
+    a[:, 0] = w / 100.0
+    out = np.asarray(embed(x, c, _gamma(0.4), a, tile_i=8, tile_j=8))[:, 0]
+    expect = np.asarray(ref.kde_ref(x, c, w, 0.4, 100.0))
+    assert_allclose(out, expect, atol=ATOL, rtol=RTOL)
+
+
+# ---------------------------------------------------------- hypothesis ----
+
+_tiles = st.sampled_from([1, 2, 4, 8])
+_dims = st.integers(min_value=1, max_value=24)
+_gammas = st.floats(min_value=1e-3, max_value=5.0,
+                    allow_nan=False, allow_infinity=False)
+_kernels = st.sampled_from(KERNELS)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ti=_tiles, tj=_tiles, gi=st.integers(1, 3), gj=st.integers(1, 3),
+       d=_dims, g=_gammas, kernel=_kernels, seed=st.integers(0, 2**31))
+def test_gram_matches_ref_swept(ti, tj, gi, gj, d, g, kernel, seed):
+    n, m = ti * gi, tj * gj
+    x, y, _ = _data(seed, n, m, d)
+    out = gram(x, y, _gamma(g), kernel=kernel, tile_i=ti, tile_j=tj)
+    expect = ref.gram_ref(x, y, g, kernel=kernel)
+    assert_allclose(np.asarray(out), np.asarray(expect),
+                    atol=5e-5, rtol=5e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ti=_tiles, tj=_tiles, gi=st.integers(1, 3), gj=st.integers(1, 3),
+       d=_dims, k=st.integers(1, 8), g=_gammas, kernel=_kernels,
+       seed=st.integers(0, 2**31))
+def test_embed_matches_ref_swept(ti, tj, gi, gj, d, k, g, kernel, seed):
+    n, m = ti * gi, tj * gj
+    x, c, _ = _data(seed, n, m, d)
+    a = np.random.default_rng(seed ^ 0xABCDEF).normal(
+        size=(m, k)).astype(np.float32)
+    out = embed(x, c, _gamma(g), a, kernel=kernel, tile_i=ti, tile_j=tj)
+    expect = ref.embed_ref(x, c, g, a, kernel=kernel)
+    assert_allclose(np.asarray(out), np.asarray(expect),
+                    atol=2e-4, rtol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=_dims, g=_gammas, seed=st.integers(0, 2**31))
+def test_gram_monotone_in_distance_gaussian(d, g, seed):
+    # Farther rows can never have a larger gaussian kernel value.
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(1, d)).astype(np.float32)
+    steps = np.arange(1, 9, dtype=np.float32).reshape(8, 1)
+    unit = rng.normal(size=(1, d)).astype(np.float32)
+    unit /= max(np.linalg.norm(unit), 1e-9)
+    x = (base + steps * unit).astype(np.float32)
+    out = np.asarray(gram(x, base, _gamma(g), tile_i=8, tile_j=1))[:, 0]
+    assert np.all(np.diff(out) <= 1e-7)

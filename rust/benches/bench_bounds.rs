@@ -1,0 +1,39 @@
+//! Bench for the §5 bound calculators: the closed-form bounds are O(1);
+//! the measured counterparts are O(n^2)/O(n^3) — this bench documents the
+//! gap that makes the closed forms the practical tool.
+
+use rskpca::bench::harness;
+use rskpca::data::gaussian_mixture_2d;
+use rskpca::density::{RsdeEstimator, ShadowDensity};
+use rskpca::kernel::Kernel;
+use rskpca::mmd::{
+    measured_eigenvalue_diff, measured_hs_diff, mmd_reduced_set,
+    thm51_mmd_bound, thm52_eigenvalue_bound, thm53_hs_bound,
+};
+
+fn main() {
+    let mut b = harness();
+    let n = if rskpca::bench::quick_mode() { 80 } else { 200 };
+    let ds = gaussian_mixture_2d(n, 3, 0.4, 42);
+    let kernel = Kernel::gaussian(1.0);
+    let rs = ShadowDensity::new(4.0).reduce(&ds.x, &kernel);
+    let quant = rs.quantized_dataset().unwrap();
+
+    b.bench("bound/thm51_closed_form", || {
+        thm51_mmd_bound(&kernel, 4.0)
+    });
+    b.bench("bound/thm52_closed_form", || {
+        thm52_eigenvalue_bound(&kernel, 4.0)
+    });
+    b.bench("bound/thm53_closed_form", || thm53_hs_bound(&kernel, 4.0));
+    b.bench(&format!("measured/mmd_n{n}"), || {
+        mmd_reduced_set(&ds.x, &rs, &kernel)
+    });
+    b.bench(&format!("measured/hs_n{n}"), || {
+        measured_hs_diff(&ds.x, &quant, &kernel).unwrap()
+    });
+    b.bench(&format!("measured/eig_n{n}"), || {
+        measured_eigenvalue_diff(&ds.x, &quant, &kernel).unwrap()
+    });
+    b.write_csv(std::path::Path::new("bench_bounds.csv")).ok();
+}

@@ -1,0 +1,50 @@
+//! Bench for Figs. 4–5 (classification): the three pipeline stages —
+//! embedding-model fit, train/test embedding, k-NN prediction — on the
+//! usps-like dataset, KPCA versus ShDE+RSKPCA.
+
+use rskpca::bench::harness;
+use rskpca::classify::KnnClassifier;
+use rskpca::data::train_test_split;
+use rskpca::experiments::{dataset_by_name, fit_method, sigma_for, Method};
+use rskpca::kernel::Kernel;
+
+fn main() {
+    let mut b = harness();
+    let scale = if rskpca::bench::quick_mode() { 0.05 } else { 0.15 };
+    let ds = dataset_by_name("usps", scale, 42).unwrap();
+    let (train, test) = train_test_split(&ds, 0.9, 3);
+    let kernel = Kernel::gaussian(sigma_for(&ds));
+    let r = 15;
+    println!(
+        "# fig4/5 bench: usps train={} test={} d={} r={r}",
+        train.n(),
+        test.n(),
+        train.dim()
+    );
+
+    for method in [Method::Kpca, Method::Shde, Method::WNystrom] {
+        b.bench(&format!("fit/{}", method.name()), || {
+            fit_method(method, &train.x, &kernel, r, 60, 4.0, 1)
+                .unwrap()
+                .m
+        });
+    }
+    for method in [Method::Kpca, Method::Shde] {
+        let fitted =
+            fit_method(method, &train.x, &kernel, r, 60, 4.0, 1).unwrap();
+        let z_train = fitted.model.transform(&train.x);
+        let z_test = fitted.model.transform(&test.x);
+        b.bench_throughput(
+            &format!("embed_test/{}", method.name()),
+            test.n() as f64,
+            || fitted.model.transform(&test.x).rows(),
+        );
+        let knn = KnnClassifier::fit(z_train, train.y.clone(), 3);
+        b.bench_throughput(
+            &format!("knn_predict/{}", method.name()),
+            test.n() as f64,
+            || knn.predict(&z_test).len(),
+        );
+    }
+    b.write_csv(std::path::Path::new("bench_classification.csv")).ok();
+}

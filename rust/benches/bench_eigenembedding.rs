@@ -1,0 +1,53 @@
+//! Bench for Figs. 2–3 (eigenembedding): per-method fit and embed cost on
+//! the german-like dataset at matched m, the end-to-end pieces the
+//! figures' speedup panels measure.
+//!
+//! `cargo bench --bench bench_eigenembedding` (RSKPCA_BENCH_QUICK=1 for a
+//! fast pass).
+
+use rskpca::bench::harness;
+use rskpca::experiments::{
+    dataset_by_name, fit_method, sigma_for, Method,
+};
+use rskpca::kernel::Kernel;
+
+fn main() {
+    let mut b = harness();
+    let scale = if rskpca::bench::quick_mode() { 0.2 } else { 0.8 };
+    let ds = dataset_by_name("german", scale, 42).unwrap();
+    let kernel = Kernel::gaussian(sigma_for(&ds));
+    let r = 5;
+    // Matched m from ShDE at ell = 4.
+    let shde =
+        fit_method(Method::Shde, &ds.x, &kernel, r, 0, 4.0, 1).unwrap();
+    let m = shde.m;
+    println!(
+        "# fig2/3 bench: german n={} d={} m={m} r={r}",
+        ds.n(),
+        ds.dim()
+    );
+
+    for method in [
+        Method::Kpca,
+        Method::Shde,
+        Method::Subsample,
+        Method::Nystrom,
+        Method::WNystrom,
+    ] {
+        b.bench(&format!("fit/{}", method.name()), || {
+            fit_method(method, &ds.x, &kernel, r, m, 4.0, 1).unwrap().m
+        });
+    }
+    // Embed (test-time) cost: the figures' testing-speedup panel.
+    let probe = ds.x.select_rows(&(0..200.min(ds.n())).collect::<Vec<_>>());
+    for method in [Method::Kpca, Method::Shde, Method::Nystrom] {
+        let fitted =
+            fit_method(method, &ds.x, &kernel, r, m, 4.0, 1).unwrap();
+        b.bench_throughput(
+            &format!("embed200/{}", method.name()),
+            200.0,
+            || fitted.model.transform(&probe).rows(),
+        );
+    }
+    b.write_csv(std::path::Path::new("bench_eigenembedding.csv")).ok();
+}

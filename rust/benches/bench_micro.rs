@@ -1,0 +1,108 @@
+//! Micro benches over the hot paths: symmetric eigensolver, native Gram,
+//! PJRT gram/embed (when artifacts exist), and the end-to-end service
+//! throughput — the inputs to EXPERIMENTS.md §Perf.
+
+use std::path::Path;
+
+use rskpca::bench::harness;
+use rskpca::config::ServiceConfig;
+use rskpca::coordinator::serve;
+use rskpca::data::gaussian_mixture_2d;
+use rskpca::kernel::Kernel;
+use rskpca::kpca::fit_kpca;
+use rskpca::linalg::{eigh, Matrix};
+use rskpca::prng::Pcg64;
+use rskpca::runtime::{factory_from_name, GramBackend, NativeBackend, PjrtBackend};
+
+fn random(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed);
+    let mut m = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            m.set(i, j, rng.normal());
+        }
+    }
+    m
+}
+
+fn main() {
+    let mut b = harness();
+    let quick = rskpca::bench::quick_mode();
+
+    // Symmetric eigensolver scaling.
+    for &n in if quick { &[64usize, 128][..] } else { &[64, 128, 256, 512][..] } {
+        let x = random(n, n, 1);
+        let sym = x.matmul_transb(&x).unwrap().scale(1.0 / n as f64);
+        b.bench(&format!("eigh/n{n}"), || {
+            eigh(&sym).unwrap().values[0]
+        });
+    }
+
+    // Native gram.
+    let kernel = Kernel::gaussian(1.0);
+    for &(n, m, d) in if quick {
+        &[(256usize, 128usize, 32usize)][..]
+    } else {
+        &[(256, 128, 32), (1024, 512, 32), (1024, 512, 256)][..]
+    } {
+        let x = random(n, d, 2);
+        let y = random(m, d, 3);
+        let mut native = NativeBackend;
+        b.bench_throughput(
+            &format!("gram_native/{n}x{m}x{d}"),
+            (n * m) as f64,
+            || native.gram(&x, &y, &kernel).unwrap().rows(),
+        );
+    }
+
+    // PJRT gram/embed (artifact path), if built.
+    if Path::new("artifacts/manifest.json").exists() {
+        let mut pjrt = PjrtBackend::load(Path::new("artifacts")).unwrap();
+        for &(n, m, d) in if quick {
+            &[(256usize, 128usize, 32usize)][..]
+        } else {
+            &[(256, 128, 32), (1024, 512, 32), (1024, 512, 256)][..]
+        } {
+            let x = random(n, d, 2);
+            let y = random(m, d, 3);
+            b.bench_throughput(
+                &format!("gram_pjrt/{n}x{m}x{d}"),
+                (n * m) as f64,
+                || pjrt.gram(&x, &y, &kernel).unwrap().rows(),
+            );
+            let a = random(m, 5, 4).scale(0.2);
+            b.bench_throughput(
+                &format!("embed_pjrt/{n}x{m}x{d}k5"),
+                n as f64,
+                || pjrt.embed(&x, &y, &a, &kernel).unwrap().rows(),
+            );
+        }
+    } else {
+        println!("# artifacts missing: skipping PJRT benches");
+    }
+
+    // Shadow selection.
+    let big = gaussian_mixture_2d(if quick { 500 } else { 4000 }, 4, 0.3, 5);
+    let sd = rskpca::density::ShadowDensity::new(4.0);
+    use rskpca::density::RsdeEstimator;
+    b.bench_throughput("shadow_select", big.n() as f64, || {
+        sd.reduce(&big.x, &kernel).m()
+    });
+
+    // Service round-trip (native backend, batched).
+    let ds = gaussian_mixture_2d(400, 3, 0.4, 6);
+    let model = fit_kpca(&ds.x, &kernel, 4).unwrap();
+    let svc = serve(
+        model,
+        factory_from_name("native", Path::new("artifacts")),
+        ServiceConfig { max_batch: 128, max_wait_us: 100, ..Default::default() },
+    )
+    .unwrap();
+    let h = svc.handle();
+    let probe = ds.x.select_rows(&(0..16).collect::<Vec<_>>());
+    b.bench_throughput("service_roundtrip/16rows", 16.0, || {
+        h.embed(probe.clone()).unwrap().rows()
+    });
+    drop(svc);
+    b.write_csv(std::path::Path::new("bench_micro.csv")).ok();
+}

@@ -1,0 +1,27 @@
+//! Bench for Fig. 6 (retention): shadow-set selection cost across the
+//! four datasets and the ℓ grid — Algorithm 2's O(mn) single pass is the
+//! paper's training-cost advantage, so its absolute throughput matters.
+
+use rskpca::bench::harness;
+use rskpca::density::{RsdeEstimator, ShadowDensity};
+use rskpca::experiments::{dataset_by_name, sigma_for};
+use rskpca::kernel::Kernel;
+
+fn main() {
+    let mut b = harness();
+    let scale = if rskpca::bench::quick_mode() { 0.05 } else { 0.25 };
+    for name in ["german", "pendigits", "usps", "yale"] {
+        let ds = dataset_by_name(name, scale, 42).unwrap();
+        let kernel = Kernel::gaussian(sigma_for(&ds));
+        for ell in [3.0, 4.0, 5.0] {
+            let sd = ShadowDensity::new(ell);
+            let m = sd.reduce(&ds.x, &kernel).m();
+            b.bench_throughput(
+                &format!("shadow/{name}/ell{ell} (m={m})"),
+                ds.n() as f64,
+                || sd.reduce(&ds.x, &kernel).m(),
+            );
+        }
+    }
+    b.write_csv(std::path::Path::new("bench_retention.csv")).ok();
+}

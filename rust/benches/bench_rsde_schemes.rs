@@ -1,0 +1,42 @@
+//! Bench for Figs. 7–8 (RSDE schemes): selection cost of each reduced-set
+//! algorithm at matched m — the "center selection schemes that improve
+//! accuracy are costlier than ShDE" claim, measured.
+
+use rskpca::bench::harness;
+use rskpca::density::{
+    HerdingRsde, KMeansRsde, ParingRsde, RsdeEstimator, ShadowDensity,
+    UniformSubsample,
+};
+use rskpca::experiments::{dataset_by_name, sigma_for};
+use rskpca::kernel::Kernel;
+
+fn main() {
+    let mut b = harness();
+    let scale = if rskpca::bench::quick_mode() { 0.05 } else { 0.15 };
+    let ds = dataset_by_name("usps", scale, 42).unwrap();
+    let kernel = Kernel::gaussian(sigma_for(&ds));
+    let m = ShadowDensity::new(4.0).reduce(&ds.x, &kernel).m();
+    println!("# fig7/8 bench: usps n={} d={} matched m={m}", ds.n(), ds.dim());
+
+    let shde = ShadowDensity::new(4.0);
+    b.bench_throughput("rsde/shde", ds.n() as f64, || {
+        shde.reduce(&ds.x, &kernel).m()
+    });
+    let uni = UniformSubsample::new(m, 1);
+    b.bench_throughput("rsde/uniform", ds.n() as f64, || {
+        uni.reduce(&ds.x, &kernel).m()
+    });
+    let paring = ParingRsde::new(m, 1);
+    b.bench_throughput("rsde/paring", ds.n() as f64, || {
+        paring.reduce(&ds.x, &kernel).m()
+    });
+    let kmeans = KMeansRsde::new(m, 1);
+    b.bench_throughput("rsde/kmeans", ds.n() as f64, || {
+        kmeans.reduce(&ds.x, &kernel).m()
+    });
+    let herding = HerdingRsde::new(m, 1);
+    b.bench_throughput("rsde/herding", ds.n() as f64, || {
+        herding.reduce(&ds.x, &kernel).m()
+    });
+    b.write_csv(std::path::Path::new("bench_rsde_schemes.csv")).ok();
+}

@@ -1,0 +1,37 @@
+//! Bench for Table 2 (training cost): fit time versus n for full KPCA
+//! (O(n^3)) against ShDE+RSKPCA / Nyström (O(mn + m^3)) — the scaling gap
+//! the table asserts.
+
+use rskpca::bench::harness;
+use rskpca::data::gaussian_mixture_2d;
+use rskpca::experiments::{fit_method, Method};
+use rskpca::kernel::Kernel;
+
+fn main() {
+    let mut b = harness();
+    let sizes: &[usize] = if rskpca::bench::quick_mode() {
+        &[200, 400]
+    } else {
+        &[250, 500, 1000, 2000]
+    };
+    for &n in sizes {
+        let ds = gaussian_mixture_2d(n, 4, 0.35, 42);
+        let kernel = Kernel::gaussian(1.0);
+        b.bench(&format!("fit_kpca/n{n}"), || {
+            fit_method(Method::Kpca, &ds.x, &kernel, 5, 0, 4.0, 1)
+                .unwrap()
+                .m
+        });
+        b.bench(&format!("fit_shde_rskpca/n{n}"), || {
+            fit_method(Method::Shde, &ds.x, &kernel, 5, 0, 4.0, 1)
+                .unwrap()
+                .m
+        });
+        b.bench(&format!("fit_nystrom/n{n}"), || {
+            fit_method(Method::Nystrom, &ds.x, &kernel, 5, n / 10, 4.0, 1)
+                .unwrap()
+                .m
+        });
+    }
+    b.write_csv(std::path::Path::new("bench_training_cost.csv")).ok();
+}

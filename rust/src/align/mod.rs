@@ -1,0 +1,131 @@
+//! Embedding alignment — the paper's evaluation metric for eigenembedding
+//! fidelity (§6): `argmin_{A ∈ R^{r x r}} ||O - Õ A||_F`, where `O` is the
+//! reference (full-KPCA) embedding of held-out points and `Õ` the
+//! approximate one.  The optimal `A` is the least-squares solution
+//! `A = Õ⁺ O`; aligning first makes the comparison invariant to the
+//! rotation/scaling indeterminacy of eigenvector bases.
+
+use crate::error::Result;
+use crate::linalg::{lstsq, Matrix};
+
+/// Result of aligning an approximate embedding to a reference.
+#[derive(Clone, Debug)]
+pub struct AlignResult {
+    /// The optimal linear map A.
+    pub transform: Matrix,
+    /// `||O - Õ A||_F`.
+    pub frob_err: f64,
+    /// `||O - Õ A||_F / ||O||_F` (the scale-free number the figures plot).
+    pub rel_err: f64,
+}
+
+/// Align `approx` to `reference` (same row count; both n x r).
+pub fn align_embeddings(reference: &Matrix, approx: &Matrix)
+    -> Result<AlignResult> {
+    let a = lstsq(approx, reference)?;
+    let resid = approx.matmul(&a)?.sub(reference)?;
+    let frob_err = resid.frob_norm();
+    let norm = reference.frob_norm();
+    Ok(AlignResult {
+        transform: a,
+        frob_err,
+        rel_err: if norm > 0.0 { frob_err / norm } else { frob_err },
+    })
+}
+
+/// Eigenvalue-difference metric used alongside the embedding error in
+/// Figs. 2–3: relative L2 distance between eigenvalue vectors (padded with
+/// zeros if ranks differ).
+pub fn eigenvalue_error(reference: &[f64], approx: &[f64]) -> f64 {
+    let r = reference.len().max(approx.len());
+    let get = |v: &[f64], i: usize| v.get(i).copied().unwrap_or(0.0);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..r {
+        let d = get(reference, i) - get(approx, i);
+        num += d * d;
+        den += get(reference, i) * get(reference, i);
+    }
+    if den > 0.0 {
+        (num / den).sqrt()
+    } else {
+        num.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    fn random(n: usize, m: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let mut a = Matrix::zeros(n, m);
+        for i in 0..n {
+            for j in 0..m {
+                a.set(i, j, rng.normal());
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn identical_embeddings_align_perfectly() {
+        let o = random(30, 4, 1);
+        let res = align_embeddings(&o, &o).unwrap();
+        assert!(res.frob_err < 1e-9);
+        // A should be the identity.
+        assert!(
+            res.transform
+                .sub(&Matrix::identity(4))
+                .unwrap()
+                .max_abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn rotation_and_scale_are_fully_absorbed() {
+        let o = random(40, 3, 2);
+        // Build an arbitrary invertible map: rotation-ish + scaling.
+        let map = Matrix::from_vec(
+            3,
+            3,
+            vec![0.8, -0.6, 0.0, 0.6, 0.8, 0.0, 0.0, 0.0, 2.5],
+        )
+        .unwrap();
+        let tilted = o.matmul(&map).unwrap();
+        let res = align_embeddings(&o, &tilted).unwrap();
+        assert!(res.rel_err < 1e-9, "rel err {}", res.rel_err);
+    }
+
+    #[test]
+    fn column_sign_flips_are_absorbed() {
+        let o = random(25, 4, 3);
+        let flipped = o.scale_rows_cols(
+            &vec![1.0; 25],
+            &[1.0, -1.0, 1.0, -1.0],
+        )
+        .unwrap();
+        let res = align_embeddings(&o, &flipped).unwrap();
+        assert!(res.rel_err < 1e-9);
+    }
+
+    #[test]
+    fn genuinely_different_embeddings_have_residual() {
+        let o = random(50, 3, 4);
+        let other = random(50, 3, 5);
+        let res = align_embeddings(&o, &other).unwrap();
+        assert!(res.rel_err > 0.1, "rel err {}", res.rel_err);
+    }
+
+    #[test]
+    fn eigenvalue_error_basics() {
+        assert!(eigenvalue_error(&[1.0, 0.5], &[1.0, 0.5]) < 1e-15);
+        let e = eigenvalue_error(&[1.0, 0.0], &[0.0, 0.0]);
+        assert!((e - 1.0).abs() < 1e-12);
+        // Rank mismatch pads with zeros.
+        let e = eigenvalue_error(&[1.0, 0.5, 0.25], &[1.0, 0.5]);
+        assert!(e > 0.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! In-tree micro/throughput bench harness (criterion is unavailable
+//! offline).  The `rust/benches/*.rs` binaries (run via `cargo bench`) use
+//! this to produce stable, comparable rows:
+//!
+//! ```text
+//! bench_name                      mean 12.345ms  p50 12.1ms  p95 13.4ms  (20 iters)
+//! ```
+//!
+//! Design choices: explicit warmup, fixed iteration counts chosen from a
+//! target runtime, black-box on results, and a CSV dump hook so the
+//! experiment harness can archive bench output alongside figure data.
+
+use std::time::Instant;
+
+use crate::metrics::Histogram;
+
+/// One benchmark's collected timings.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Human-readable row.
+    pub fn row(&self) -> String {
+        let mut s = format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  ({} iters)",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            self.iters
+        );
+        if let Some(items) = self.items_per_iter {
+            s.push_str(&format!(
+                "  [{:.1} items/s]",
+                items / self.mean_s
+            ));
+        }
+        s
+    }
+
+    /// CSV row: name,iters,mean_s,p50_s,p95_s,min_s,throughput.
+    pub fn csv(&self) -> String {
+        format!(
+            "{},{},{:.9},{:.9},{:.9},{:.9},{}",
+            self.name,
+            self.iters,
+            self.mean_s,
+            self.p50_s,
+            self.p95_s,
+            self.min_s,
+            self.items_per_iter
+                .map(|i| format!("{:.3}", i / self.mean_s))
+                .unwrap_or_default()
+        )
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}us", s * 1e6)
+    }
+}
+
+/// The harness: collects results, prints rows as it goes.
+#[derive(Default)]
+pub struct Bencher {
+    pub results: Vec<BenchResult>,
+    /// Target per-benchmark measurement time (seconds).
+    pub target_s: f64,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Bencher { results: Vec::new(), target_s: 2.0, max_iters: 200 }
+    }
+
+    /// Quick-mode harness for CI / smoke runs.
+    pub fn quick() -> Self {
+        Bencher { results: Vec::new(), target_s: 0.3, max_iters: 20 }
+    }
+
+    /// Benchmark a closure.  `setup` runs outside the timed region.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T)
+        -> &BenchResult {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput annotation (items processed per call).
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_items(name, Some(items_per_iter), &mut f)
+    }
+
+    fn bench_with_items<T>(
+        &mut self,
+        name: &str,
+        items_per_iter: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        // Warmup + calibration: time one call.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_s / once) as usize)
+            .clamp(3, self.max_iters);
+
+        let mut hist = Histogram::new();
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            hist.record(t.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: hist.mean(),
+            p50_s: hist.percentile(50.0),
+            p95_s: hist.percentile(95.0),
+            min_s: hist.min(),
+            items_per_iter,
+        };
+        println!("{}", result.row());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Write all results as CSV (with header) to a file.
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,iters,mean_s,p50_s,p95_s,min_s,items_per_s")?;
+        for r in &self.results {
+            writeln!(f, "{}", r.csv())?;
+        }
+        Ok(())
+    }
+}
+
+/// Is `cargo bench` running in quick mode (RSKPCA_BENCH_QUICK set)?
+pub fn quick_mode() -> bool {
+    std::env::var("RSKPCA_BENCH_QUICK").is_ok()
+}
+
+/// Standard entry: quick harness under RSKPCA_BENCH_QUICK, full otherwise.
+pub fn harness() -> Bencher {
+    if quick_mode() {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::quick();
+        let r = b
+            .bench("spin", || {
+                let mut acc = 0u64;
+                for i in 0..50_000u64 {
+                    acc = acc.wrapping_add(i);
+                }
+                acc
+            })
+            .clone();
+        assert!(r.iters >= 3);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s * 1.5);
+        assert!(r.p50_s <= r.p95_s + 1e-12);
+    }
+
+    #[test]
+    fn throughput_annotation_appears() {
+        let mut b = Bencher::quick();
+        let r = b.bench_throughput("t", 100.0, || 1 + 1).clone();
+        assert!(r.items_per_iter == Some(100.0));
+        assert!(r.row().contains("items/s"));
+        assert!(r.csv().split(',').count() == 7);
+    }
+
+    #[test]
+    fn csv_dump_writes_header_and_rows() {
+        let mut b = Bencher::quick();
+        b.bench("a", || 0);
+        let path = std::env::temp_dir().join("rskpca_bench_test.csv");
+        b.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,iters"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,125 @@
+//! k-nearest-neighbour classification in the embedding space — the
+//! downstream task of the paper's classification experiments (Figs. 4–5,
+//! 7–8: 3-NN over KPCA embeddings, 10-fold cross-validation).
+
+use crate::linalg::{sq_euclidean, Matrix};
+
+/// A fitted k-NN classifier over embedded points.
+#[derive(Clone, Debug)]
+pub struct KnnClassifier {
+    pub k: usize,
+    train_z: Matrix,
+    train_y: Vec<u32>,
+}
+
+impl KnnClassifier {
+    /// Store the training embedding (k-NN is lazy).
+    pub fn fit(train_z: Matrix, train_y: Vec<u32>, k: usize) -> Self {
+        assert_eq!(train_z.rows(), train_y.len());
+        assert!(k >= 1);
+        KnnClassifier { k, train_z, train_y }
+    }
+
+    /// Predict the label of one embedded point: majority vote among the k
+    /// nearest training points, ties broken by summed distance (closer
+    /// class wins).
+    pub fn predict_point(&self, z: &[f64]) -> u32 {
+        let n = self.train_z.rows();
+        let k = self.k.min(n);
+        // Partial selection of the k smallest distances.
+        let mut best: Vec<(f64, u32)> = Vec::with_capacity(k + 1);
+        for i in 0..n {
+            let d = sq_euclidean(self.train_z.row(i), z);
+            if best.len() < k {
+                best.push((d, self.train_y[i]));
+                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            } else if d < best[k - 1].0 {
+                best[k - 1] = (d, self.train_y[i]);
+                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            }
+        }
+        // Vote with distance tie-break.
+        let mut votes: std::collections::BTreeMap<u32, (usize, f64)> =
+            std::collections::BTreeMap::new();
+        for &(d, label) in &best {
+            let e = votes.entry(label).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += d;
+        }
+        votes
+            .into_iter()
+            .max_by(|a, b| {
+                a.1 .0
+                    .cmp(&b.1 .0)
+                    .then(b.1 .1.partial_cmp(&a.1 .1).unwrap())
+            })
+            .map(|(label, _)| label)
+            .unwrap()
+    }
+
+    /// Predict a batch.
+    pub fn predict(&self, z: &Matrix) -> Vec<u32> {
+        (0..z.rows()).map(|i| self.predict_point(z.row(i))).collect()
+    }
+}
+
+/// Fraction of matching labels.
+pub fn accuracy(predicted: &[u32], truth: &[u32]) -> f64 {
+    assert_eq!(predicted.len(), truth.len());
+    if predicted.is_empty() {
+        return 0.0;
+    }
+    let hits = predicted
+        .iter()
+        .zip(truth)
+        .filter(|(a, b)| a == b)
+        .count();
+    hits as f64 / predicted.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+
+    #[test]
+    fn nearest_neighbour_is_exact_on_training_points() {
+        let ds = gaussian_mixture_2d(100, 4, 0.2, 1);
+        let knn = KnnClassifier::fit(ds.x.clone(), ds.y.clone(), 1);
+        let preds = knn.predict(&ds.x);
+        assert_eq!(accuracy(&preds, &ds.y), 1.0);
+    }
+
+    #[test]
+    fn separable_blobs_classify_well() {
+        let train = gaussian_mixture_2d(200, 3, 0.15, 2);
+        let test = gaussian_mixture_2d(100, 3, 0.15, 2); // same mixture
+        let knn = KnnClassifier::fit(train.x.clone(), train.y.clone(), 3);
+        let preds = knn.predict(&test.x);
+        let acc = accuracy(&preds, &test.y);
+        assert!(acc > 0.9, "accuracy {acc}");
+    }
+
+    #[test]
+    fn k_larger_than_train_set_is_clamped() {
+        let x = Matrix::from_vec(3, 1, vec![0.0, 1.0, 10.0]).unwrap();
+        let knn = KnnClassifier::fit(x, vec![0, 0, 1], 99);
+        // Majority of all 3 points is class 0.
+        assert_eq!(knn.predict_point(&[0.5]), 0);
+    }
+
+    #[test]
+    fn tie_break_prefers_closer_class() {
+        // k=2, one neighbour of each class: the closer one must win.
+        let x = Matrix::from_vec(2, 1, vec![0.0, 3.0]).unwrap();
+        let knn = KnnClassifier::fit(x, vec![7, 9], 2);
+        assert_eq!(knn.predict_point(&[0.5]), 7);
+        assert_eq!(knn.predict_point(&[2.9]), 9);
+    }
+
+    #[test]
+    fn accuracy_counts_matches() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 9, 3]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+}

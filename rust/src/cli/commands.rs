@@ -1,0 +1,251 @@
+//! CLI subcommand implementations.
+
+use std::path::{Path, PathBuf};
+
+use super::Args;
+use crate::config::RunConfig;
+use crate::data::{
+    gaussian_mixture_2d, load_dataset_csv, save_dataset_csv, swiss_roll,
+    Dataset,
+};
+use crate::density::ShadowDensity;
+use crate::error::{Error, Result};
+use crate::experiments::{self, ExperimentCtx};
+use crate::kernel::Kernel;
+use crate::kpca::{fit_rskpca, EmbeddingModel};
+use crate::linalg::Matrix;
+use crate::metrics::Timer;
+use crate::prng::Pcg64;
+use crate::runtime::factory_from_name;
+
+fn req_flag(args: &Args, name: &str) -> Result<String> {
+    args.flag(name)
+        .map(|s| s.to_string())
+        .ok_or_else(|| Error::Parse(format!("missing --{name}")))
+}
+
+/// `rskpca experiment <name|all> [...]`
+pub fn experiment(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| Error::Parse("experiment: missing name".into()))?;
+    let mut ctx = if args.has("quick") {
+        ExperimentCtx::quick()
+    } else {
+        ExperimentCtx::default()
+    };
+    ctx.out_dir = PathBuf::from(args.flag_or("out", ctx.out_dir.to_str().unwrap()));
+    ctx.scale = args.flag_f64("scale", ctx.scale)?;
+    ctx.runs = args.flag_usize("runs", ctx.runs)?;
+    ctx.ell_step = args.flag_f64("ell-step", ctx.ell_step)?;
+    ctx.seed = args.flag_usize("seed", ctx.seed as usize)? as u64;
+    if !(0.0..=1.0).contains(&ctx.scale) || ctx.scale <= 0.0 {
+        return Err(Error::Config("--scale must be in (0, 1]".into()));
+    }
+    let t = Timer::start();
+    experiments::run(&name, &ctx)?;
+    println!(
+        "\nexperiment '{name}' done in {:.1}s; CSVs in {}",
+        t.elapsed_s(),
+        ctx.out_dir.display()
+    );
+    Ok(())
+}
+
+/// Resolve a dataset: --data CSV file if given, else a named generator.
+fn resolve_dataset(spec: &str, seed: u64) -> Result<Dataset> {
+    match spec {
+        "german" | "pendigits" | "usps" | "yale" => {
+            experiments::dataset_by_name(spec, 1.0, seed)
+        }
+        "gmm2d" => Ok(gaussian_mixture_2d(1000, 3, 0.5, seed)),
+        "swiss_roll" => Ok(swiss_roll(1000, 0.05, seed)),
+        path => load_dataset_csv(Path::new(path), "custom"),
+    }
+}
+
+/// `rskpca fit --config FILE --model-out FILE [--data FILE]`
+pub fn fit(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_file(Path::new(&req_flag(args, "config")?))?;
+    let model_out = req_flag(args, "model-out")?;
+    let ds = match args.flag("data") {
+        Some(path) => load_dataset_csv(Path::new(path), "custom")?,
+        None => resolve_dataset(&cfg.dataset, cfg.seed)?,
+    };
+    let sigma = if cfg.sigma > 0.0 {
+        cfg.sigma
+    } else {
+        crate::kernel::median_heuristic(&ds.x, 2000, cfg.seed)
+    };
+    let kernel = Kernel::new(cfg.kernel, sigma);
+    println!(
+        "fit: dataset={} n={} d={} kernel={} sigma={sigma:.3} ell={} r={}",
+        ds.name,
+        ds.n(),
+        ds.dim(),
+        kernel.kind.name(),
+        cfg.ell,
+        cfg.rank
+    );
+    let t = Timer::start();
+    let rs = ShadowDensity::new(cfg.ell).fit(&ds.x, &kernel);
+    println!(
+        "  shadow: m={} ({:.1}% retained) in {:.3}s",
+        rs.m(),
+        100.0 * rs.retention(),
+        t.elapsed_s()
+    );
+    let model = fit_rskpca(&rs, &kernel, cfg.rank)?;
+    println!(
+        "  rskpca: r={} fit total {:.3}s; saving to {model_out}",
+        model.r(),
+        t.elapsed_s()
+    );
+    model.save(Path::new(&model_out))
+}
+
+/// `rskpca embed --model FILE --data FILE --out FILE [--backend B]`
+pub fn embed(args: &Args) -> Result<()> {
+    let model = EmbeddingModel::load(Path::new(&req_flag(args, "model")?))?;
+    let ds = load_dataset_csv(Path::new(&req_flag(args, "data")?), "in")?;
+    let out = req_flag(args, "out")?;
+    let backend_name = args.flag_or("backend", "native");
+    let artifacts = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+    let mut backend =
+        crate::runtime::backend_from_name(&backend_name, &artifacts)?;
+    let t = Timer::start();
+    let z = backend.embed(
+        &ds.x,
+        &model.centers,
+        &model.coeffs,
+        &model.kernel,
+    )?;
+    println!(
+        "embedded {} rows -> rank {} in {:.3}s ({} backend)",
+        ds.n(),
+        z.cols(),
+        t.elapsed_s(),
+        backend.name()
+    );
+    let emb = Dataset { x: z, y: ds.y.clone(), name: "embedding".into() };
+    save_dataset_csv(&emb, Path::new(&out))
+}
+
+/// `rskpca serve --model FILE [--requests N] [...]` — starts the service
+/// and drives it with an in-process load generator, reporting latency and
+/// throughput (the serving-benchmark entry point).
+pub fn serve(args: &Args) -> Result<()> {
+    let model = EmbeddingModel::load(Path::new(&req_flag(args, "model")?))?;
+    let backend_name = args.flag_or("backend", "native");
+    let artifacts = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+    let requests = args.flag_usize("requests", 200)?;
+    let rows_per = args.flag_usize("rows-per-request", 8)?;
+    let cfg = match args.flag("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?.service,
+        None => Default::default(),
+    };
+    let dim = model.centers.cols();
+    println!(
+        "serve: model={} centers={} r={} backend={backend_name} \
+         max_batch={} max_wait={}us queue={}",
+        model.method,
+        model.n_retained(),
+        model.r(),
+        cfg.max_batch,
+        cfg.max_wait_us,
+        cfg.queue_depth
+    );
+    let svc = crate::coordinator::serve(
+        model,
+        factory_from_name(&backend_name, &artifacts),
+        cfg,
+    )?;
+    let handle = svc.handle();
+
+    // Load generator: `requests` batches of random rows.
+    let mut rng = Pcg64::new(0xD05E);
+    let t = Timer::start();
+    let mut receivers = Vec::new();
+    let mut rejected = 0usize;
+    for _ in 0..requests {
+        let mut rows = Matrix::zeros(rows_per, dim);
+        for i in 0..rows_per {
+            for j in 0..dim {
+                rows.set(i, j, rng.normal());
+            }
+        }
+        match handle.try_embed(rows) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    for rx in receivers {
+        rx.recv()
+            .map_err(|_| Error::Service("reply dropped".into()))??;
+    }
+    let wall = t.elapsed_s();
+    let snap = svc.shutdown();
+    println!(
+        "served {} requests ({} rows) in {wall:.3}s -> {:.0} rows/s, \
+         {rejected} rejected",
+        snap.requests,
+        snap.rows,
+        snap.rows as f64 / wall
+    );
+    println!(
+        "latency p50={:.0}us p95={:.0}us p99={:.0}us; mean batch {:.1} \
+         rows over {} batches",
+        snap.latency_p50_us,
+        snap.latency_p95_us,
+        snap.latency_p99_us,
+        snap.mean_batch_rows,
+        snap.batches
+    );
+    Ok(())
+}
+
+/// `rskpca gen --dataset NAME --out FILE [--seed N]`
+pub fn gen(args: &Args) -> Result<()> {
+    let name = req_flag(args, "dataset")?;
+    let out = req_flag(args, "out")?;
+    let seed = args.flag_usize("seed", 42)? as u64;
+    let ds = resolve_dataset(&name, seed)?;
+    save_dataset_csv(&ds, Path::new(&out))?;
+    println!(
+        "wrote {} ({} rows x {} features, {} classes)",
+        out,
+        ds.n(),
+        ds.dim(),
+        ds.n_classes()
+    );
+    Ok(())
+}
+
+/// `rskpca info [--artifacts DIR]` — artifact registry summary.
+pub fn info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+    match crate::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "artifacts at {}: {} entries (row bucket {}, rank bucket \
+                 {})",
+                dir.display(),
+                m.artifacts.len(),
+                m.n_rows,
+                m.k_rank
+            );
+            for a in &m.artifacts {
+                println!(
+                    "  {:<40} op={:<5} kernel={:<9} m={:<5} d={:<4} k={}",
+                    a.name, a.op, a.kernel, a.m, a.d, a.k
+                );
+            }
+        }
+        Err(e) => {
+            println!("no artifacts: {e}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! ```text
+//! rskpca experiment <table1|table2|fig1..fig8|bounds|all>
+//!        [--out DIR] [--scale F] [--runs N] [--ell-step F] [--seed N]
+//!        [--quick]
+//! rskpca fit     --config FILE --model-out FILE [--data FILE]
+//! rskpca embed   --model FILE --data FILE --out FILE [--backend B]
+//! rskpca serve   --model FILE [--backend B] [--requests N]
+//!                [--rows-per-request N] [--config FILE]
+//! rskpca gen     --dataset NAME --out FILE [--seed N]
+//! rskpca info    [--artifacts DIR]
+//! ```
+
+mod commands;
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: subcommand, positional args, --flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw args (without argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        args.command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| Error::Parse("no subcommand".into()))?;
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // boolean flag when next token is absent or another flag
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        it.next().unwrap().clone()
+                    }
+                    _ => "true".to_string(),
+                };
+                args.flags.insert(name.to_string(), value);
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Parse(format!("--{name}: bad number '{v}'"))
+            }),
+        }
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Parse(format!("--{name}: bad integer '{v}'"))
+            }),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+const USAGE: &str = "\
+rskpca — Reduced-Set Kernel PCA (paper reproduction + embedding service)
+
+USAGE:
+  rskpca experiment <name|all> [--out DIR] [--scale F] [--runs N]
+                    [--ell-step F] [--seed N] [--quick]
+      names: table1 table2 fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 bounds
+  rskpca fit    --config FILE --model-out FILE [--data FILE]
+  rskpca embed  --model FILE --data FILE --out FILE [--backend native|pjrt]
+                [--artifacts DIR]
+  rskpca serve  --model FILE [--backend native|pjrt] [--requests N]
+                [--rows-per-request N] [--artifacts DIR] [--config FILE]
+  rskpca gen    --dataset german|pendigits|usps|yale|gmm2d|swiss_roll
+                --out FILE [--seed N]
+  rskpca info   [--artifacts DIR]
+  rskpca help
+";
+
+/// Run the CLI against process args; exit non-zero on error.
+pub fn run_or_exit() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&raw) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Dispatch a raw command line (exposed for tests).
+pub fn dispatch(raw: &[String]) -> Result<()> {
+    if raw.is_empty()
+        || raw[0] == "help"
+        || raw[0] == "--help"
+        || raw[0] == "-h"
+    {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(raw)?;
+    match args.command.as_str() {
+        "experiment" => commands::experiment(&args),
+        "fit" => commands::fit(&args),
+        "embed" => commands::embed(&args),
+        "serve" => commands::serve(&args),
+        "gen" => commands::gen(&args),
+        "info" => commands::info(&args),
+        other => Err(Error::Parse(format!("unknown command '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn to_vec(s: &[&str]) -> Vec<String> {
+        s.iter().map(|v| v.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&to_vec(&[
+            "experiment", "fig2", "--scale", "0.5", "--quick", "--runs",
+            "3",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "experiment");
+        assert_eq!(a.positional, vec!["fig2"]);
+        assert_eq!(a.flag_f64("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.flag_usize("runs", 1).unwrap(), 3);
+        assert!(a.has("quick"));
+        assert!(!a.has("seed"));
+        assert_eq!(a.flag_or("out", "results"), "results");
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = Args::parse(&to_vec(&["x", "--scale", "abc"])).unwrap();
+        assert!(a.flag_f64("scale", 1.0).is_err());
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert!(dispatch(&to_vec(&["help"])).is_ok());
+        assert!(dispatch(&to_vec(&[])).is_ok());
+        assert!(dispatch(&to_vec(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn gen_writes_csv() {
+        let out = std::env::temp_dir().join("rskpca_cli_gen.csv");
+        dispatch(&to_vec(&[
+            "gen",
+            "--dataset",
+            "gmm2d",
+            "--out",
+            out.to_str().unwrap(),
+            "--seed",
+            "7",
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.lines().count() >= 100);
+        std::fs::remove_file(&out).ok();
+    }
+}

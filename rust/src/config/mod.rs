@@ -1,0 +1,394 @@
+//! Configuration system: a TOML-subset parser plus the typed configs the
+//! CLI, experiment harness and embedding service consume.
+//!
+//! Supported TOML subset (all the project's configs need): `[section]`
+//! headers, `key = value` with string / float / integer / bool / inline
+//! array values, `#` comments.  No nested tables-in-arrays, no multi-line
+//! strings.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::kernel::KernelKind;
+
+/// A parsed TOML-subset document: section -> key -> value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+/// A TOML scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl TomlDoc {
+    /// Parse a document; keys before any `[section]` land in section "".
+    pub fn parse(input: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        for (lineno, raw) in input.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::Parse(format!("line {}: bad section", lineno + 1))
+                })?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Parse(format!(
+                    "line {}: expected 'key = value'",
+                    lineno + 1
+                ))
+            })?;
+            let value = parse_value(value.trim()).map_err(|e| {
+                Error::Parse(format!("line {}: {e}", lineno + 1))
+            })?;
+            doc.sections
+                .entry(current.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize)
+        -> usize {
+        self.get_f64(section, key, default as f64) as usize
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str)
+        -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .and_then(|v| v.as_bool())
+            .unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        return Err(Error::Parse("empty value".into()));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| Error::Parse("unterminated string".into()))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| Error::Parse("unterminated array".into()))?;
+        let items = split_top_level(inner)
+            .into_iter()
+            .filter(|p| !p.trim().is_empty())
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    s.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| Error::Parse(format!("bad value '{s}'")))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+// ------------------------------------------------------------------------
+// Typed configuration
+// ------------------------------------------------------------------------
+
+/// Everything an end-to-end run needs; parsed from a TOML file with
+/// sensible defaults for every field.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Dataset name: german | pendigits | usps | yale | gmm2d | swiss_roll.
+    pub dataset: String,
+    /// Kernel profile.
+    pub kernel: KernelKind,
+    /// Bandwidth sigma (0 => median heuristic).
+    pub sigma: f64,
+    /// Shadow parameter ell.
+    pub ell: f64,
+    /// Embedding rank r.
+    pub rank: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Execution backend for gram/embed: "native" or "pjrt".
+    pub backend: String,
+    /// Directory holding AOT artifacts.
+    pub artifacts_dir: String,
+    /// Embedding-service settings.
+    pub service: ServiceConfig,
+}
+
+/// Dynamic-batcher / service settings (coordinator layer).
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Max rows coalesced into one executed batch.
+    pub max_batch: usize,
+    /// Max time a request waits for batch-mates.
+    pub max_wait_us: u64,
+    /// Bounded queue depth (backpressure limit), in requests.
+    pub queue_depth: usize,
+    /// Number of worker threads executing batches.
+    pub workers: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_batch: 256,
+            max_wait_us: 500,
+            queue_depth: 1024,
+            workers: 1,
+        }
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "german".into(),
+            kernel: KernelKind::Gaussian,
+            sigma: 0.0,
+            ell: 4.0,
+            rank: 5,
+            seed: 42,
+            backend: "native".into(),
+            artifacts_dir: "artifacts".into(),
+            service: ServiceConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML text (missing keys keep defaults).
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = RunConfig::default();
+        cfg.dataset = doc.get_str("run", "dataset", &cfg.dataset);
+        let kname = doc.get_str("run", "kernel", "gaussian");
+        cfg.kernel = KernelKind::parse(&kname).ok_or_else(|| {
+            Error::Config(format!("unknown kernel '{kname}'"))
+        })?;
+        cfg.sigma = doc.get_f64("run", "sigma", cfg.sigma);
+        cfg.ell = doc.get_f64("run", "ell", cfg.ell);
+        cfg.rank = doc.get_usize("run", "rank", cfg.rank);
+        cfg.seed = doc.get_f64("run", "seed", cfg.seed as f64) as u64;
+        cfg.backend = doc.get_str("run", "backend", &cfg.backend);
+        cfg.artifacts_dir =
+            doc.get_str("run", "artifacts_dir", &cfg.artifacts_dir);
+        if !matches!(cfg.backend.as_str(), "native" | "pjrt") {
+            return Err(Error::Config(format!(
+                "backend must be 'native' or 'pjrt', got '{}'",
+                cfg.backend
+            )));
+        }
+        if cfg.ell <= 0.0 {
+            return Err(Error::Config("ell must be positive".into()));
+        }
+        if cfg.rank == 0 {
+            return Err(Error::Config("rank must be >= 1".into()));
+        }
+        let s = &mut cfg.service;
+        s.max_batch = doc.get_usize("service", "max_batch", s.max_batch);
+        s.max_wait_us =
+            doc.get_f64("service", "max_wait_us", s.max_wait_us as f64)
+                as u64;
+        s.queue_depth =
+            doc.get_usize("service", "queue_depth", s.queue_depth);
+        s.workers = doc.get_usize("service", "workers", s.workers);
+        if s.max_batch == 0 || s.queue_depth == 0 || s.workers == 0 {
+            return Err(Error::Config(
+                "service sizes must be >= 1".into(),
+            ));
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+        RunConfig::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_arrays_comments() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+top = 1
+[run]
+dataset = "usps"   # trailing comment
+sigma = 18.5
+deep = [1, 2, [3, 4]]
+flag = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_f64("", "top", 0.0), 1.0);
+        assert_eq!(doc.get_str("run", "dataset", "x"), "usps");
+        assert_eq!(doc.get_f64("run", "sigma", 0.0), 18.5);
+        assert!(doc.get_bool("run", "flag", false));
+        match doc.get("run", "deep").unwrap() {
+            TomlValue::Arr(items) => {
+                assert_eq!(items.len(), 3);
+                assert!(matches!(items[2], TomlValue::Arr(_)));
+            }
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("", "k", ""), "a#b");
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn run_config_defaults_and_overrides() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[run]
+dataset = "pendigits"
+kernel = "laplacian"
+ell = 3.5
+rank = 7
+backend = "pjrt"
+[service]
+max_batch = 128
+workers = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, "pendigits");
+        assert_eq!(cfg.kernel, KernelKind::Laplacian);
+        assert_eq!(cfg.ell, 3.5);
+        assert_eq!(cfg.rank, 7);
+        assert_eq!(cfg.backend, "pjrt");
+        assert_eq!(cfg.service.max_batch, 128);
+        assert_eq!(cfg.service.workers, 2);
+        // Untouched defaults survive.
+        assert_eq!(cfg.service.queue_depth, 1024);
+        assert_eq!(cfg.seed, 42);
+    }
+
+    #[test]
+    fn run_config_validates() {
+        assert!(RunConfig::from_toml("[run]\nkernel = \"bogus\"").is_err());
+        assert!(RunConfig::from_toml("[run]\nell = -1").is_err());
+        assert!(RunConfig::from_toml("[run]\nrank = 0").is_err());
+        assert!(RunConfig::from_toml("[run]\nbackend = \"gpu\"").is_err());
+        assert!(
+            RunConfig::from_toml("[service]\nmax_batch = 0").is_err()
+        );
+    }
+
+    #[test]
+    fn empty_config_is_all_defaults() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.dataset, "german");
+        assert_eq!(cfg.ell, 4.0);
+        assert_eq!(cfg.backend, "native");
+    }
+}

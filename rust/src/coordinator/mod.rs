@@ -1,0 +1,41 @@
+//! The embedding service — the L3 coordination layer.
+//!
+//! RSKPCA's selling point is cheap *evaluation* (`O(rm)` per point after
+//! the data is discarded), so the natural production artifact is a
+//! high-throughput kernel-embedding service: fit once, then serve
+//! projection requests.  This module provides it with the structure of a
+//! model-serving router scaled to a single host:
+//!
+//! * a bounded request queue (`sync_channel`) — **backpressure**: when the
+//!   queue is full, `try_embed` rejects instead of buffering unboundedly;
+//! * a **dynamic batcher** — the worker coalesces queued requests until
+//!   `max_batch` rows or `max_wait_us` elapse, then executes the whole
+//!   batch as one padded PJRT (or native) call, amortizing dispatch and
+//!   bucket padding;
+//! * per-request latency / batch-size / throughput **metrics**;
+//! * clean shutdown (explicit message + join).
+//!
+//! The worker thread exclusively owns the backend (PJRT executable cache
+//! is single-owner, no locks on the hot path).
+
+mod service;
+
+pub use service::{
+    EmbeddingService, ServiceHandle, ServiceStatsSnapshot,
+};
+
+use crate::config::ServiceConfig;
+use crate::error::Result;
+use crate::kpca::EmbeddingModel;
+use crate::runtime::BackendFactory;
+
+/// Start an embedding service for a fitted model over a backend factory.
+///
+/// Convenience wrapper around [`EmbeddingService::start`].
+pub fn serve(
+    model: EmbeddingModel,
+    factory: BackendFactory,
+    cfg: ServiceConfig,
+) -> Result<EmbeddingService> {
+    EmbeddingService::start(model, factory, cfg)
+}

@@ -1,0 +1,649 @@
+//! Threaded embedding service: bounded queue -> dynamic batcher -> backend.
+
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServiceConfig;
+use crate::error::{Error, Result};
+use crate::kpca::EmbeddingModel;
+use crate::linalg::Matrix;
+use crate::metrics::Histogram;
+use crate::runtime::GramBackend;
+
+/// One queued embedding request.
+struct EmbedRequest {
+    rows: Matrix,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<Matrix>>,
+}
+
+enum Msg {
+    Embed(EmbedRequest),
+    Shutdown,
+}
+
+/// Shared, mutex-guarded service counters (off the hot path: the worker
+/// updates them once per *batch*, not per row).
+#[derive(Default)]
+struct ServiceStats {
+    latency_us: Histogram,
+    batch_rows: Histogram,
+    requests: u64,
+    rejected: u64,
+    rows: u64,
+    batches: u64,
+}
+
+/// A point-in-time copy of the service metrics.
+#[derive(Clone, Debug)]
+pub struct ServiceStatsSnapshot {
+    pub requests: u64,
+    pub rejected: u64,
+    pub rows: u64,
+    pub batches: u64,
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    pub mean_batch_rows: f64,
+    pub max_batch_rows: f64,
+}
+
+/// Cloneable client handle.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<Msg>,
+    stats: Arc<Mutex<ServiceStats>>,
+    rank: usize,
+    dim: usize,
+}
+
+impl ServiceHandle {
+    /// Blocking embed: enqueue (waiting if the queue is full) and wait for
+    /// the result.
+    pub fn embed(&self, rows: Matrix) -> Result<Matrix> {
+        self.validate(&rows)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = EmbedRequest {
+            rows,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        self.tx
+            .send(Msg::Embed(req))
+            .map_err(|_| Error::Service("service stopped".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Service("service dropped reply".into()))?
+    }
+
+    /// Non-blocking embed: rejects immediately when the bounded queue is
+    /// full (backpressure surface).  Returns the receiver to await.
+    pub fn try_embed(&self, rows: Matrix)
+        -> Result<mpsc::Receiver<Result<Matrix>>> {
+        self.validate(&rows)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = EmbedRequest {
+            rows,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        match self.tx.try_send(Msg::Embed(req)) {
+            Ok(()) => Ok(reply_rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.stats.lock().unwrap().rejected += 1;
+                Err(Error::Service("queue full (backpressure)".into()))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(Error::Service("service stopped".into()))
+            }
+        }
+    }
+
+    fn validate(&self, rows: &Matrix) -> Result<()> {
+        if rows.rows() == 0 {
+            return Err(Error::Service("empty request".into()));
+        }
+        if rows.cols() != self.dim {
+            return Err(Error::Shape(format!(
+                "request dim {} != model dim {}",
+                rows.cols(),
+                self.dim
+            )));
+        }
+        Ok(())
+    }
+
+    /// Embedding rank of the served model.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Metrics snapshot.
+    pub fn stats(&self) -> ServiceStatsSnapshot {
+        let mut s = self.stats.lock().unwrap();
+        ServiceStatsSnapshot {
+            requests: s.requests,
+            rejected: s.rejected,
+            rows: s.rows,
+            batches: s.batches,
+            latency_p50_us: s.latency_us.percentile(50.0),
+            latency_p95_us: s.latency_us.percentile(95.0),
+            latency_p99_us: s.latency_us.percentile(99.0),
+            mean_batch_rows: s.batch_rows.mean(),
+            max_batch_rows: if s.batch_rows.is_empty() {
+                0.0
+            } else {
+                s.batch_rows.max()
+            },
+        }
+    }
+}
+
+/// The running service (owns the worker thread).
+pub struct EmbeddingService {
+    handle: ServiceHandle,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl EmbeddingService {
+    /// Spawn the worker and return the service.
+    ///
+    /// The backend is *constructed on the worker thread* from the given
+    /// factory (PJRT handles are not `Send`); construction failure is
+    /// reported synchronously as an `Err` here.
+    pub fn start(
+        model: EmbeddingModel,
+        factory: crate::runtime::BackendFactory,
+        cfg: ServiceConfig,
+    ) -> Result<EmbeddingService> {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
+        let stats = Arc::new(Mutex::new(ServiceStats::default()));
+        let handle = ServiceHandle {
+            tx,
+            stats: stats.clone(),
+            rank: model.r(),
+            dim: model.centers.cols(),
+        };
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("rskpca-embed-worker".into())
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                // Warm the backend before accepting traffic: the PJRT
+                // path compiles executables lazily, and a cold compile
+                // would otherwise land in the first client's latency.
+                let warm = Matrix::zeros(1, model.centers.cols());
+                if let Err(e) = backend.embed(
+                    &warm,
+                    &model.centers,
+                    &model.coeffs,
+                    &model.kernel,
+                ) {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+                let _ = ready_tx.send(Ok(()));
+                worker_loop(rx, model, backend, cfg, stats)
+            })
+            .map_err(|e| Error::Service(format!("spawn worker: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Service("worker died at startup".into()))??;
+        Ok(EmbeddingService { handle, worker: Some(worker) })
+    }
+
+    /// A cloneable client handle.
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful shutdown: drain-stop the worker and join it.
+    pub fn shutdown(mut self) -> ServiceStatsSnapshot {
+        let snap = self.handle.stats();
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        snap
+    }
+}
+
+impl Drop for EmbeddingService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The batching worker: collect -> execute -> split -> reply.
+fn worker_loop(
+    rx: Receiver<Msg>,
+    model: EmbeddingModel,
+    mut backend: Box<dyn GramBackend>,
+    cfg: ServiceConfig,
+    stats: Arc<Mutex<ServiceStats>>,
+) {
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(Msg::Embed(req)) => req,
+            Ok(Msg::Shutdown) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let mut total_rows = batch[0].rows.rows();
+        let deadline =
+            Instant::now() + Duration::from_micros(cfg.max_wait_us);
+        let mut shutdown = false;
+        // Coalesce until the batch is full or the deadline passes.
+        while total_rows < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Embed(req)) => {
+                    total_rows += req.rows.rows();
+                    batch.push(req);
+                }
+                Ok(Msg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+
+        execute_batch(&mut backend, &model, &batch, &stats);
+        if shutdown {
+            return;
+        }
+    }
+}
+
+fn execute_batch(
+    backend: &mut Box<dyn GramBackend>,
+    model: &EmbeddingModel,
+    batch: &[EmbedRequest],
+    stats: &Arc<Mutex<ServiceStats>>,
+) {
+    let total_rows: usize = batch.iter().map(|r| r.rows.rows()).sum();
+    let dim = model.centers.cols();
+    // Stack the batch.
+    let mut stacked = Matrix::zeros(total_rows, dim);
+    let mut at = 0usize;
+    for req in batch {
+        for i in 0..req.rows.rows() {
+            stacked.row_mut(at).copy_from_slice(req.rows.row(i));
+            at += 1;
+        }
+    }
+    // One backend call for the whole batch.
+    let result =
+        backend.embed(&stacked, &model.centers, &model.coeffs, &model.kernel);
+    // Metrics first (once per batch): a client observing its reply must
+    // already see this batch reflected in a stats snapshot.
+    {
+        let now = Instant::now();
+        let mut s = stats.lock().unwrap();
+        s.batches += 1;
+        s.requests += batch.len() as u64;
+        s.rows += total_rows as u64;
+        s.batch_rows.record(total_rows as f64);
+        for req in batch {
+            s.latency_us.record(
+                now.duration_since(req.enqueued).as_secs_f64() * 1e6,
+            );
+        }
+    }
+    // Split and reply.
+    match result {
+        Ok(embedded) => {
+            let mut at = 0usize;
+            for req in batch {
+                let q = req.rows.rows();
+                let idx: Vec<usize> = (at..at + q).collect();
+                let part = embedded.select_rows(&idx);
+                at += q;
+                let _ = req.reply.send(Ok(part));
+            }
+        }
+        Err(e) => {
+            for req in batch {
+                let _ = req
+                    .reply
+                    .send(Err(Error::Service(format!("batch failed: {e}"))));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+    use crate::data::gaussian_mixture_2d;
+    use crate::kernel::Kernel;
+    use crate::kpca::fit_kpca;
+    use crate::runtime::NativeBackend;
+
+    fn test_model() -> (EmbeddingModel, Matrix) {
+        let ds = gaussian_mixture_2d(80, 3, 0.4, 1);
+        let k = Kernel::gaussian(1.0);
+        let model = fit_kpca(&ds.x, &k, 4).unwrap();
+        (model, ds.x)
+    }
+
+    fn native() -> crate::runtime::BackendFactory {
+        Box::new(|| Ok(Box::new(NativeBackend)))
+    }
+
+    /// A backend that sleeps per call — for backpressure tests.
+    struct SlowBackend {
+        inner: NativeBackend,
+        delay: Duration,
+    }
+
+    impl GramBackend for SlowBackend {
+        fn gram(
+            &mut self,
+            x: &Matrix,
+            y: &Matrix,
+            kernel: &Kernel,
+        ) -> Result<Matrix> {
+            std::thread::sleep(self.delay);
+            self.inner.gram(x, y, kernel)
+        }
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+    }
+
+    #[test]
+    fn service_matches_direct_transform() {
+        let (model, x) = test_model();
+        let expect = model.transform(&x);
+        let svc = EmbeddingService::start(
+            model,
+            native(),
+            ServiceConfig::default(),
+        ).unwrap();
+        let h = svc.handle();
+        let got = h.embed(x.clone()).unwrap();
+        assert_eq!(got.rows(), x.rows());
+        assert!(got.sub(&expect).unwrap().max_abs() < 1e-9);
+        let snap = svc.shutdown();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.rows, 80);
+    }
+
+    #[test]
+    fn rows_never_reorder_within_or_across_requests() {
+        let (model, x) = test_model();
+        let expect = model.transform(&x);
+        let svc = EmbeddingService::start(
+            model,
+            native(),
+            ServiceConfig { max_batch: 16, max_wait_us: 2000, ..Default::default() },
+        ).unwrap();
+        let h = svc.handle();
+        // Many small requests, each a distinct slice; every reply must
+        // match its own slice's expected embedding.
+        let mut receivers = Vec::new();
+        for start in (0..80).step_by(8) {
+            let idx: Vec<usize> = (start..start + 8).collect();
+            let part = x.select_rows(&idx);
+            receivers.push((start, h.try_embed(part).unwrap()));
+        }
+        for (start, rx) in receivers {
+            let got = rx.recv().unwrap().unwrap();
+            for i in 0..8 {
+                for j in 0..got.cols() {
+                    assert!(
+                        (got.get(i, j) - expect.get(start + i, j)).abs()
+                            < 1e-9,
+                        "request@{start} row {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_clients_all_get_correct_answers() {
+        let (model, x) = test_model();
+        let expect = model.transform(&x);
+        let svc = EmbeddingService::start(
+            model,
+            native(),
+            ServiceConfig { max_batch: 32, max_wait_us: 500, ..Default::default() },
+        ).unwrap();
+        let mut threads = Vec::new();
+        for t in 0..4 {
+            let h = svc.handle();
+            let x = x.clone();
+            let expect = expect.clone();
+            threads.push(std::thread::spawn(move || {
+                for round in 0..5 {
+                    let start = ((t * 13 + round * 7) % 70) as usize;
+                    let idx: Vec<usize> = (start..start + 10).collect();
+                    let got = h.embed(x.select_rows(&idx)).unwrap();
+                    for i in 0..10 {
+                        for j in 0..got.cols() {
+                            assert!(
+                                (got.get(i, j)
+                                    - expect.get(start + i, j))
+                                .abs()
+                                    < 1e-9
+                            );
+                        }
+                    }
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.requests, 20);
+        assert_eq!(snap.rows, 200);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        let (model, x) = test_model();
+        let svc = EmbeddingService::start(
+            model,
+            Box::new(|| {
+                Ok(Box::new(SlowBackend {
+                    inner: NativeBackend,
+                    delay: Duration::from_millis(50),
+                }) as Box<dyn GramBackend>)
+            }),
+            ServiceConfig {
+                max_batch: 1,
+                max_wait_us: 1,
+                queue_depth: 2,
+                workers: 1,
+            },
+        ).unwrap();
+        let h = svc.handle();
+        let mut accepted = 0;
+        let mut rejected = 0;
+        let mut receivers = Vec::new();
+        for i in 0..20 {
+            let idx = vec![i % 80];
+            match h.try_embed(x.select_rows(&idx)) {
+                Ok(rx) => {
+                    accepted += 1;
+                    receivers.push(rx);
+                }
+                Err(Error::Service(_)) => rejected += 1,
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        assert!(rejected > 0, "no backpressure observed");
+        assert!(accepted >= 2, "queue should admit at least its depth");
+        for rx in receivers {
+            let _ = rx.recv().unwrap().unwrap();
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.rejected, rejected as u64);
+    }
+
+    #[test]
+    fn batcher_coalesces_under_load() {
+        let (model, x) = test_model();
+        let svc = EmbeddingService::start(
+            model,
+            native(),
+            ServiceConfig {
+                max_batch: 64,
+                max_wait_us: 20_000,
+                queue_depth: 256,
+                workers: 1,
+            },
+        ).unwrap();
+        let h = svc.handle();
+        let mut receivers = Vec::new();
+        for i in 0..40 {
+            let idx = vec![i % 80];
+            receivers.push(h.try_embed(x.select_rows(&idx)).unwrap());
+        }
+        for rx in receivers {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.requests, 40);
+        // Coalescing must have produced fewer batches than requests.
+        assert!(
+            snap.batches < 40,
+            "no coalescing: {} batches",
+            snap.batches
+        );
+        assert!(snap.mean_batch_rows > 1.0);
+        assert!(snap.max_batch_rows <= 64.0);
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let (model, _) = test_model();
+        let svc = EmbeddingService::start(
+            model,
+            native(),
+            ServiceConfig::default(),
+        ).unwrap();
+        let h = svc.handle();
+        assert!(h.embed(Matrix::zeros(0, 2)).is_err());
+        assert!(h.embed(Matrix::zeros(3, 7)).is_err()); // wrong dim
+        svc.shutdown();
+    }
+
+    /// A backend that fails every call — failure-injection for the batch
+    /// error path.
+    struct FailingBackend;
+
+    impl GramBackend for FailingBackend {
+        fn gram(
+            &mut self,
+            _x: &Matrix,
+            _y: &Matrix,
+            _kernel: &Kernel,
+        ) -> Result<Matrix> {
+            Err(Error::Runtime("injected failure".into()))
+        }
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    #[test]
+    fn backend_failure_propagates_to_every_batch_member() {
+        let (model, x) = test_model();
+        // Warmup uses the backend too, so the failing backend must be
+        // rejected at startup — that is itself the contract.
+        let err = EmbeddingService::start(
+            model.clone(),
+            Box::new(|| Ok(Box::new(FailingBackend))),
+            ServiceConfig::default(),
+        )
+        .err()
+        .expect("failing backend must fail startup warmup");
+        assert!(err.to_string().contains("injected"));
+
+        // A backend that fails only after warmup: inject per-call failure
+        // by succeeding exactly once.
+        struct FailAfterWarmup {
+            calls: usize,
+            inner: NativeBackend,
+        }
+        impl GramBackend for FailAfterWarmup {
+            fn gram(
+                &mut self,
+                x: &Matrix,
+                y: &Matrix,
+                kernel: &Kernel,
+            ) -> Result<Matrix> {
+                self.calls += 1;
+                if self.calls > 1 {
+                    return Err(Error::Runtime("late failure".into()));
+                }
+                self.inner.gram(x, y, kernel)
+            }
+            fn name(&self) -> &'static str {
+                "fail-after-warmup"
+            }
+        }
+        let svc = EmbeddingService::start(
+            model,
+            Box::new(|| {
+                Ok(Box::new(FailAfterWarmup {
+                    calls: 0,
+                    inner: NativeBackend,
+                }))
+            }),
+            ServiceConfig {
+                max_batch: 64,
+                max_wait_us: 10_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = svc.handle();
+        // Two requests coalesce into one failing batch; both must see Err.
+        let r1 = h.try_embed(x.select_rows(&[0, 1])).unwrap();
+        let r2 = h.try_embed(x.select_rows(&[2])).unwrap();
+        assert!(r1.recv().unwrap().is_err());
+        assert!(r2.recv().unwrap().is_err());
+        // The service keeps running after a failed batch.
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_via_drop() {
+        let (model, x) = test_model();
+        let svc = EmbeddingService::start(
+            model,
+            native(),
+            ServiceConfig::default(),
+        ).unwrap();
+        let h = svc.handle();
+        h.embed(x.select_rows(&[0, 1])).unwrap();
+        drop(svc); // Drop path also joins cleanly.
+        // Handle now errors instead of hanging.
+        assert!(h.embed(x.select_rows(&[0])).is_err());
+    }
+}

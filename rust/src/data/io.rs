@@ -1,0 +1,116 @@
+//! CSV persistence for datasets (label in the first column).
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use super::Dataset;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+/// Write a dataset as CSV: `label,f0,f1,...` per row, no header.
+pub fn save_dataset_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.n() {
+        write!(w, "{}", ds.y[i])?;
+        for v in ds.x.row(i) {
+            write!(w, ",{v}")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a dataset written by [`save_dataset_csv`].
+pub fn load_dataset_csv(path: &Path, name: &str) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+    let reader = BufReader::new(file);
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut labels: Vec<u32> = Vec::new();
+    let mut width = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split(',');
+        let label: u32 = parts
+            .next()
+            .ok_or_else(|| Error::Parse(format!("line {lineno}: empty")))?
+            .trim()
+            .parse()
+            .map_err(|e| {
+                Error::Parse(format!("line {lineno}: bad label ({e})"))
+            })?;
+        let feats: Vec<f64> = parts
+            .map(|p| {
+                p.trim().parse().map_err(|e| {
+                    Error::Parse(format!("line {lineno}: bad value ({e})"))
+                })
+            })
+            .collect::<Result<_>>()?;
+        match width {
+            None => width = Some(feats.len()),
+            Some(w) if w != feats.len() => {
+                return Err(Error::Parse(format!(
+                    "line {lineno}: {} features, expected {w}",
+                    feats.len()
+                )))
+            }
+            _ => {}
+        }
+        labels.push(label);
+        rows.push(feats);
+    }
+    let d = width.unwrap_or(0);
+    let mut x = Matrix::zeros(rows.len(), d);
+    for (i, row) in rows.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(row);
+    }
+    Ok(Dataset { x, y: labels, name: name.to_string() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("rskpca_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.csv");
+        let ds = gaussian_mixture_2d(50, 3, 0.5, 1);
+        save_dataset_csv(&ds, &path).unwrap();
+        let back = load_dataset_csv(&path, "gmm2d").unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.dim(), ds.dim());
+        assert_eq!(back.y, ds.y);
+        for i in 0..ds.n() {
+            for j in 0..ds.dim() {
+                assert!((back.x.get(i, j) - ds.x.get(i, j)).abs() < 1e-9);
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let dir = std::env::temp_dir().join("rskpca_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ragged.csv");
+        std::fs::write(&path, "0,1.0,2.0\n1,3.0\n").unwrap();
+        assert!(load_dataset_csv(&path, "bad").is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let err = load_dataset_csv(Path::new("/nonexistent/x.csv"), "x")
+            .unwrap_err();
+        assert!(matches!(err, Error::Io(_)));
+    }
+}

@@ -1,0 +1,197 @@
+//! k-means RSDE (Lloyd's algorithm, built from scratch) — the center
+//! selection used by the density-weighted Nyström method [Zhang & Kwok
+//! 2010] and one of the alternative RSDE schemes in Figs. 7–8.
+//!
+//! Centers are cluster centroids (reduced set *construction* — centers are
+//! generally not data points), weights are cluster sizes.  Cost is
+//! O(mn · iters): same per-pass complexity as ShDE but iterative, which is
+//! exactly the training-time disadvantage the paper calls out.
+
+use super::{ReducedSet, RsdeEstimator};
+use crate::kernel::Kernel;
+use crate::linalg::{sq_euclidean, Matrix};
+use crate::prng::Pcg64;
+
+/// Lloyd's k-means with k-means++ seeding.
+#[derive(Clone, Debug)]
+pub struct KMeansRsde {
+    pub m: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl KMeansRsde {
+    pub fn new(m: usize, seed: u64) -> Self {
+        KMeansRsde { m, max_iters: 25, seed }
+    }
+
+    pub fn with_iters(mut self, iters: usize) -> Self {
+        self.max_iters = iters;
+        self
+    }
+
+    /// k-means++ seeding: spread initial centroids by D^2 sampling.
+    fn seed_centroids(&self, x: &Matrix, m: usize, rng: &mut Pcg64)
+        -> Matrix {
+        let n = x.rows();
+        let mut chosen = vec![rng.below(n)];
+        let mut d2 = vec![f64::INFINITY; n];
+        while chosen.len() < m {
+            let last = *chosen.last().unwrap();
+            for i in 0..n {
+                let d = sq_euclidean(x.row(i), x.row(last));
+                if d < d2[i] {
+                    d2[i] = d;
+                }
+            }
+            let total: f64 = d2.iter().sum();
+            let next = if total <= 0.0 {
+                rng.below(n)
+            } else {
+                rng.weighted_index(&d2)
+            };
+            chosen.push(next);
+        }
+        x.select_rows(&chosen)
+    }
+}
+
+impl RsdeEstimator for KMeansRsde {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn reduce(&self, x: &Matrix, _kernel: &Kernel) -> ReducedSet {
+        let n = x.rows();
+        let d = x.cols();
+        let m = self.m.min(n).max(1);
+        let mut rng = Pcg64::new(self.seed);
+        let mut centroids = self.seed_centroids(x, m, &mut rng);
+        let mut assignment = vec![0usize; n];
+
+        for _iter in 0..self.max_iters {
+            // Assign.
+            let mut moved = false;
+            for i in 0..n {
+                let row = x.row(i);
+                let mut best = assignment[i];
+                let mut best_d = sq_euclidean(row, centroids.row(best));
+                for c in 0..m {
+                    let dist = sq_euclidean(row, centroids.row(c));
+                    if dist < best_d {
+                        best_d = dist;
+                        best = c;
+                    }
+                }
+                if best != assignment[i] {
+                    assignment[i] = best;
+                    moved = true;
+                }
+            }
+            // Update.
+            let mut sums = Matrix::zeros(m, d);
+            let mut counts = vec![0.0f64; m];
+            for i in 0..n {
+                let c = assignment[i];
+                counts[c] += 1.0;
+                let row = x.row(i);
+                let srow = sums.row_mut(c);
+                for j in 0..d {
+                    srow[j] += row[j];
+                }
+            }
+            for c in 0..m {
+                if counts[c] > 0.0 {
+                    let srow = sums.row_mut(c);
+                    for j in 0..d {
+                        srow[j] /= counts[c];
+                    }
+                    centroids.row_mut(c).copy_from_slice(sums.row(c));
+                } else {
+                    // Re-seed an empty cluster at a random data point.
+                    let i = rng.below(n);
+                    centroids.row_mut(c).copy_from_slice(x.row(i));
+                }
+            }
+            if !moved && _iter > 0 {
+                break;
+            }
+        }
+
+        let mut weights = vec![0.0; m];
+        for &a in &assignment {
+            weights[a] += 1.0;
+        }
+        ReducedSet {
+            centers: centroids,
+            weights,
+            n_source: n,
+            assignment: Some(assignment),
+            method: "kmeans".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+
+    #[test]
+    fn invariants_and_shapes() {
+        let x = gaussian_mixture_2d(300, 3, 0.3, 1).x;
+        let k = Kernel::gaussian(1.0);
+        let rs = KMeansRsde::new(10, 7).reduce(&x, &k);
+        assert_eq!(rs.m(), 10);
+        assert!(rs.check_invariants());
+        assert_eq!(rs.assignment.as_ref().unwrap().len(), 300);
+    }
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        // 3 tight, far-apart blobs; 3-means must place one centroid near
+        // each blob mean.
+        let mut rng = Pcg64::new(5);
+        let means = [(-20.0, 0.0), (20.0, 0.0), (0.0, 30.0)];
+        let mut rows = Vec::new();
+        for i in 0..150 {
+            let (mx, my) = means[i % 3];
+            rows.push(vec![mx + 0.2 * rng.normal(), my + 0.2 * rng.normal()]);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs).unwrap();
+        let k = Kernel::gaussian(1.0);
+        let rs = KMeansRsde::new(3, 2).reduce(&x, &k);
+        for (mx, my) in means {
+            let closest = (0..3)
+                .map(|c| {
+                    sq_euclidean(rs.centers.row(c), &[mx, my]).sqrt()
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(closest < 1.0, "no centroid near ({mx},{my})");
+        }
+        // Balanced weights.
+        for w in &rs.weights {
+            assert!((w - 50.0).abs() < 15.0, "weights {:?}", rs.weights);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let x = gaussian_mixture_2d(200, 4, 0.4, 3).x;
+        let k = Kernel::gaussian(1.0);
+        let a = KMeansRsde::new(8, 11).reduce(&x, &k);
+        let b = KMeansRsde::new(8, 11).reduce(&x, &k);
+        assert_eq!(a.centers.as_slice(), b.centers.as_slice());
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn m_larger_than_n_is_clamped() {
+        let x = gaussian_mixture_2d(5, 2, 0.3, 4).x;
+        let k = Kernel::gaussian(1.0);
+        let rs = KMeansRsde::new(50, 1).reduce(&x, &k);
+        assert!(rs.m() <= 5);
+        assert!(rs.check_invariants());
+    }
+}

@@ -1,0 +1,293 @@
+//! Density estimation: the KDE, the reduced-set representation, and every
+//! RSDE algorithm the paper evaluates (§4 and the "RSKPCA with different
+//! RSDE schemes" experiment, Figs. 7–8).
+//!
+//! * [`ShadowDensity`] — the paper's contribution (Algorithm 2): a
+//!   single-pass `O(mn)` greedy ε-cover with `ε = σ/ℓ`.
+//! * [`UniformSubsample`] — random centers, uniform weights (the baseline
+//!   the Nyström method implies).
+//! * [`KMeansRsde`] — Lloyd's k-means with cluster-size weights (the RSDE
+//!   used by the density-weighted Nyström method [Zhang & Kwok 2010]).
+//! * [`ParingRsde`] — a one-step quantization in the spirit of KDE paring
+//!   [Freedman & Kisilev 2010]: sample m pivots, absorb every point into
+//!   its nearest pivot.
+//! * [`HerdingRsde`] — kernel herding [Chen, Welling, Smola 2010]: greedy
+//!   samples matching the empirical mean embedding.
+//!
+//! All produce a [`ReducedSet`] whose weights sum to `n`, so the reduced
+//! density `p~(x) = (1/n) Σ_j w_j k(c_j, x)` (paper eq. 9) is a proper
+//! surrogate for the KDE `p^(x) = (1/n) Σ_i k(x_i, x)` (eq. 8).
+
+mod herding;
+mod kmeans;
+mod shadow;
+mod streaming;
+
+pub use herding::HerdingRsde;
+pub use kmeans::KMeansRsde;
+pub use shadow::ShadowDensity;
+pub use streaming::StreamingShadow;
+
+use crate::kernel::Kernel;
+use crate::linalg::{sq_euclidean, Matrix};
+use crate::prng::Pcg64;
+
+/// A reduced-set density estimate: m weighted centers standing in for the
+/// n-point empirical measure (paper eq. 10).
+#[derive(Clone, Debug)]
+pub struct ReducedSet {
+    /// m x d center matrix (rows of the original data, or constructed
+    /// centroids for k-means).
+    pub centers: Matrix,
+    /// Per-center weights; invariant: `weights.sum() == n_source`.
+    pub weights: Vec<f64>,
+    /// Size of the dataset this set was reduced from.
+    pub n_source: usize,
+    /// Data-to-center map alpha (paper §5) when the algorithm quantizes
+    /// actual data points; used by the bound calculators in `mmd::`.
+    pub assignment: Option<Vec<usize>>,
+    /// Which algorithm produced it (for experiment output).
+    pub method: String,
+}
+
+impl ReducedSet {
+    /// Number of retained centers m.
+    pub fn m(&self) -> usize {
+        self.centers.rows()
+    }
+
+    /// Fraction of the data retained, m/n (Figure 6's y-axis).
+    pub fn retention(&self) -> f64 {
+        self.m() as f64 / self.n_source as f64
+    }
+
+    /// Evaluate the reduced density p~(x) (paper eq. 9).
+    pub fn density(&self, x: &[f64], kernel: &Kernel) -> f64 {
+        let mut acc = 0.0;
+        for j in 0..self.m() {
+            acc += self.weights[j] * kernel.eval(self.centers.row(j), x);
+        }
+        acc / self.n_source as f64
+    }
+
+    /// The shadow-quantized dataset `C~ = {c_alpha(1) ... c_alpha(n)}`
+    /// (§5), needed by the operator-error measurements.  Only available
+    /// when the RSDE recorded an assignment.
+    pub fn quantized_dataset(&self) -> Option<Matrix> {
+        let assignment = self.assignment.as_ref()?;
+        let mut q = Matrix::zeros(assignment.len(), self.centers.cols());
+        for (i, &a) in assignment.iter().enumerate() {
+            q.row_mut(i).copy_from_slice(self.centers.row(a));
+        }
+        Some(q)
+    }
+
+    /// Debug invariant: weights non-negative and summing to n.
+    pub fn check_invariants(&self) -> bool {
+        let sum: f64 = self.weights.iter().sum();
+        self.weights.len() == self.m()
+            && self.weights.iter().all(|&w| w >= 0.0)
+            && (sum - self.n_source as f64).abs()
+                < 1e-6 * self.n_source as f64
+    }
+}
+
+/// Algorithms that turn a dataset into a [`ReducedSet`].
+pub trait RsdeEstimator {
+    /// Short name used in experiment tables ("shde", "kmeans", ...).
+    fn name(&self) -> &'static str;
+    /// Compute the reduced set.
+    fn reduce(&self, x: &Matrix, kernel: &Kernel) -> ReducedSet;
+}
+
+/// The full kernel density estimate (paper eq. 8) — the oracle the RSDEs
+/// approximate; O(n) per evaluation.
+#[derive(Clone, Debug)]
+pub struct Kde<'a> {
+    pub data: &'a Matrix,
+    pub kernel: Kernel,
+}
+
+impl<'a> Kde<'a> {
+    pub fn new(data: &'a Matrix, kernel: Kernel) -> Self {
+        Kde { data, kernel }
+    }
+
+    /// p^(x) = (1/n) sum_i k(x_i, x).
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        let n = self.data.rows();
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += self.kernel.eval(self.data.row(i), x);
+        }
+        acc / n as f64
+    }
+}
+
+/// Uniform random subsampling: m centers, each weighted n/m.  The
+/// degenerate RSDE implied by the plain Nyström method / subsampled KPCA.
+#[derive(Clone, Debug)]
+pub struct UniformSubsample {
+    pub m: usize,
+    pub seed: u64,
+}
+
+impl UniformSubsample {
+    pub fn new(m: usize, seed: u64) -> Self {
+        UniformSubsample { m, seed }
+    }
+}
+
+impl RsdeEstimator for UniformSubsample {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn reduce(&self, x: &Matrix, _kernel: &Kernel) -> ReducedSet {
+        let n = x.rows();
+        let m = self.m.min(n).max(1);
+        let mut rng = Pcg64::new(self.seed);
+        let idx = rng.sample_indices(n, m);
+        ReducedSet {
+            centers: x.select_rows(&idx),
+            weights: vec![n as f64 / m as f64; m],
+            n_source: n,
+            assignment: None,
+            method: "uniform".into(),
+        }
+    }
+}
+
+/// One-step quantization in the spirit of KDE paring [8]: sample m pivot
+/// points, absorb every data point into its nearest pivot, weight by
+/// absorption counts.  O(mn), single pass, records the assignment map.
+#[derive(Clone, Debug)]
+pub struct ParingRsde {
+    pub m: usize,
+    pub seed: u64,
+}
+
+impl ParingRsde {
+    pub fn new(m: usize, seed: u64) -> Self {
+        ParingRsde { m, seed }
+    }
+}
+
+impl RsdeEstimator for ParingRsde {
+    fn name(&self) -> &'static str {
+        "paring"
+    }
+
+    fn reduce(&self, x: &Matrix, _kernel: &Kernel) -> ReducedSet {
+        let n = x.rows();
+        let m = self.m.min(n).max(1);
+        let mut rng = Pcg64::new(self.seed);
+        let pivots = rng.sample_indices(n, m);
+        let centers = x.select_rows(&pivots);
+        let mut weights = vec![0.0; m];
+        let mut assignment = vec![0usize; n];
+        for i in 0..n {
+            let row = x.row(i);
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for j in 0..m {
+                let d = sq_euclidean(row, centers.row(j));
+                if d < best_d {
+                    best_d = d;
+                    best = j;
+                }
+            }
+            weights[best] += 1.0;
+            assignment[i] = best;
+        }
+        ReducedSet {
+            centers,
+            weights,
+            n_source: n,
+            assignment: Some(assignment),
+            method: "paring".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+
+    fn toy() -> (Matrix, Kernel) {
+        let ds = gaussian_mixture_2d(200, 3, 0.3, 1);
+        (ds.x, Kernel::gaussian(1.0))
+    }
+
+    #[test]
+    fn kde_is_average_of_kernels() {
+        let (x, k) = toy();
+        let kde = Kde::new(&x, k);
+        let q = [0.0, 0.0];
+        let manual: f64 = (0..x.rows())
+            .map(|i| k.eval(x.row(i), &q))
+            .sum::<f64>()
+            / x.rows() as f64;
+        assert!((kde.eval(&q) - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_subsample_invariants() {
+        let (x, k) = toy();
+        let rs = UniformSubsample::new(20, 7).reduce(&x, &k);
+        assert_eq!(rs.m(), 20);
+        assert!(rs.check_invariants());
+        assert!((rs.retention() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paring_invariants_and_assignment() {
+        let (x, k) = toy();
+        let rs = ParingRsde::new(25, 3).reduce(&x, &k);
+        assert_eq!(rs.m(), 25);
+        assert!(rs.check_invariants());
+        let assignment = rs.assignment.as_ref().unwrap();
+        assert_eq!(assignment.len(), 200);
+        assert!(assignment.iter().all(|&a| a < 25));
+        // Assignment really is nearest-pivot.
+        for i in (0..200).step_by(37) {
+            let a = assignment[i];
+            let da = sq_euclidean(x.row(i), rs.centers.row(a));
+            for j in 0..rs.m() {
+                assert!(
+                    da <= sq_euclidean(x.row(i), rs.centers.row(j)) + 1e-12
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduced_density_approximates_kde() {
+        let (x, k) = toy();
+        let kde = Kde::new(&x, k);
+        // A fine paring (m = n/2) should track the KDE closely.
+        let rs = ParingRsde::new(100, 5).reduce(&x, &k);
+        let mut err = 0.0;
+        let mut norm = 0.0;
+        for i in (0..x.rows()).step_by(7) {
+            let p = kde.eval(x.row(i));
+            let q = rs.density(x.row(i), &k);
+            err += (p - q) * (p - q);
+            norm += p * p;
+        }
+        assert!(err / norm < 0.05, "relative sq err {}", err / norm);
+    }
+
+    #[test]
+    fn quantized_dataset_replaces_rows_with_centers() {
+        let (x, k) = toy();
+        let rs = ParingRsde::new(10, 2).reduce(&x, &k);
+        let q = rs.quantized_dataset().unwrap();
+        assert_eq!(q.rows(), x.rows());
+        let assignment = rs.assignment.as_ref().unwrap();
+        for i in (0..x.rows()).step_by(13) {
+            assert_eq!(q.row(i), rs.centers.row(assignment[i]));
+        }
+    }
+}

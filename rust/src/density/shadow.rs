@@ -1,0 +1,206 @@
+//! The Shadow Density Estimate (paper §4, Algorithm 2) — the paper's fast,
+//! single-pass RSDE.
+//!
+//! Sweep the data once; each not-yet-absorbed point becomes a center and
+//! absorbs everything within `ε = σ/ℓ` into its *shadow set*.  Shadow sets
+//! are disjoint and cover the data; the center's weight is its shadow's
+//! cardinality.  `ℓ` is kernel-relative (not data-relative), which is the
+//! paper's key practical point: a generic `ℓ = 4` works across problems,
+//! and every error bound in §5 is a closed form in `ℓ`.
+
+use super::{ReducedSet, RsdeEstimator};
+use crate::kernel::Kernel;
+use crate::linalg::{sq_euclidean, Matrix};
+
+/// Shadow set selection (Algorithm 2).
+#[derive(Clone, Copy, Debug)]
+pub struct ShadowDensity {
+    /// The user-tuned parameter ℓ; ε = σ/ℓ.  Paper recommends ℓ ∈ [3, 5]
+    /// for the Gaussian (ℓ = 4 generic).
+    pub ell: f64,
+}
+
+impl ShadowDensity {
+    pub fn new(ell: f64) -> Self {
+        assert!(ell > 0.0, "ell must be positive");
+        ShadowDensity { ell }
+    }
+
+    /// Convenience: run Algorithm 2 and return the reduced set.
+    pub fn fit(&self, x: &Matrix, kernel: &Kernel) -> ReducedSet {
+        self.reduce(x, kernel)
+    }
+}
+
+impl RsdeEstimator for ShadowDensity {
+    fn name(&self) -> &'static str {
+        "shde"
+    }
+
+    /// Single pass, O(mn): for each unabsorbed point, scan the remaining
+    /// unabsorbed points once.  Matches Algorithm 2 exactly ("let c be the
+    /// first element of X"), so the result is deterministic in data order.
+    fn reduce(&self, x: &Matrix, kernel: &Kernel) -> ReducedSet {
+        let n = x.rows();
+        let eps = kernel.shadow_radius(self.ell);
+        let eps2 = eps * eps;
+        let mut absorbed = vec![false; n];
+        let mut assignment = vec![0usize; n];
+        let mut center_rows: Vec<usize> = Vec::new();
+        let mut weights: Vec<f64> = Vec::new();
+
+        for i in 0..n {
+            if absorbed[i] {
+                continue;
+            }
+            // i becomes a center; absorb its shadow (itself included).
+            let center_idx = center_rows.len();
+            center_rows.push(i);
+            let ci = x.row(i);
+            let mut count = 0.0;
+            for j in i..n {
+                if absorbed[j] {
+                    continue;
+                }
+                if j == i || sq_euclidean(ci, x.row(j)) < eps2 {
+                    absorbed[j] = true;
+                    assignment[j] = center_idx;
+                    count += 1.0;
+                }
+            }
+            weights.push(count);
+        }
+
+        ReducedSet {
+            centers: x.select_rows(&center_rows),
+            weights,
+            n_source: n,
+            assignment: Some(assignment),
+            method: format!("shde(ell={})", self.ell),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+    use crate::linalg::euclidean;
+
+    fn toy(n: usize, seed: u64) -> Matrix {
+        gaussian_mixture_2d(n, 4, 0.5, seed).x
+    }
+
+    #[test]
+    fn invariants_hold() {
+        let x = toy(300, 1);
+        let k = Kernel::gaussian(1.0);
+        let rs = ShadowDensity::new(4.0).fit(&x, &k);
+        assert!(rs.check_invariants());
+        assert!(rs.m() <= 300);
+        assert!(rs.m() >= 1);
+    }
+
+    #[test]
+    fn shadows_partition_the_data() {
+        let x = toy(200, 2);
+        let k = Kernel::gaussian(1.5);
+        let rs = ShadowDensity::new(3.0).fit(&x, &k);
+        let assignment = rs.assignment.as_ref().unwrap();
+        // Every point assigned exactly once (vector is total), weights
+        // count the partition cells.
+        let mut counts = vec![0.0; rs.m()];
+        for &a in assignment {
+            counts[a] += 1.0;
+        }
+        for (c, w) in counts.iter().zip(&rs.weights) {
+            assert_eq!(c, w);
+        }
+    }
+
+    #[test]
+    fn every_point_within_eps_of_its_center() {
+        let x = toy(250, 3);
+        let k = Kernel::gaussian(2.0);
+        let sd = ShadowDensity::new(3.5);
+        let rs = sd.fit(&x, &k);
+        let eps = k.shadow_radius(3.5);
+        let assignment = rs.assignment.as_ref().unwrap();
+        for i in 0..x.rows() {
+            let d = euclidean(x.row(i), rs.centers.row(assignment[i]));
+            assert!(d < eps + 1e-12, "point {i}: {d} >= {eps}");
+        }
+    }
+
+    #[test]
+    fn centers_are_pairwise_separated() {
+        // Any two centers are >= eps apart: a later center inside an
+        // earlier one's ball would have been absorbed.
+        let x = toy(250, 4);
+        let k = Kernel::gaussian(2.0);
+        let rs = ShadowDensity::new(4.0).fit(&x, &k);
+        let eps = k.shadow_radius(4.0);
+        for i in 0..rs.m() {
+            for j in (i + 1)..rs.m() {
+                let d = euclidean(rs.centers.row(i), rs.centers.row(j));
+                assert!(d >= eps - 1e-12, "centers {i},{j}: {d} < {eps}");
+            }
+        }
+    }
+
+    #[test]
+    fn ell_controls_retention_monotonically() {
+        let x = toy(400, 5);
+        let k = Kernel::gaussian(1.0);
+        let m3 = ShadowDensity::new(3.0).fit(&x, &k).m();
+        let m5 = ShadowDensity::new(5.0).fit(&x, &k).m();
+        let m10 = ShadowDensity::new(10.0).fit(&x, &k).m();
+        assert!(m3 <= m5, "m(3)={m3} m(5)={m5}");
+        assert!(m5 <= m10, "m(5)={m5} m(10)={m10}");
+    }
+
+    #[test]
+    fn tiny_eps_retains_everything() {
+        let x = toy(100, 6);
+        let k = Kernel::gaussian(1e-6); // eps ~ 0: nothing absorbed
+        let rs = ShadowDensity::new(4.0).fit(&x, &k);
+        assert_eq!(rs.m(), 100);
+        assert!(rs.weights.iter().all(|&w| (w - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn huge_eps_collapses_to_one_center() {
+        let x = toy(100, 7);
+        let k = Kernel::gaussian(1e6);
+        let rs = ShadowDensity::new(1.0).fit(&x, &k);
+        assert_eq!(rs.m(), 1);
+        assert_eq!(rs.weights[0], 100.0);
+    }
+
+    #[test]
+    fn duplicate_points_fold_into_one_center() {
+        let mut rows = Vec::new();
+        for _ in 0..50 {
+            rows.push(vec![1.0, 2.0]);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs).unwrap();
+        let k = Kernel::gaussian(1.0);
+        let rs = ShadowDensity::new(4.0).fit(&x, &k);
+        assert_eq!(rs.m(), 1);
+        assert_eq!(rs.weights[0], 50.0);
+    }
+
+    #[test]
+    fn redundant_data_compresses_hard() {
+        // Dense clusters: retention should drop well below 1.
+        let x = gaussian_mixture_2d(1000, 3, 0.1, 8).x;
+        let k = Kernel::gaussian(1.0);
+        let rs = ShadowDensity::new(4.0).fit(&x, &k);
+        assert!(
+            rs.retention() < 0.5,
+            "retention {} not < 0.5",
+            rs.retention()
+        );
+    }
+}

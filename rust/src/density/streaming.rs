@@ -1,0 +1,200 @@
+//! Streaming shadow density estimation — the online-learning extension
+//! the paper's introduction motivates (visual tracking, online KMLAs).
+//!
+//! Algorithm 2 is a greedy ε-cover, which admits a natural one-pass
+//! streaming form: for each arriving point, absorb it into the first
+//! existing center within ε (incrementing that center's weight) or
+//! promote it to a new center.  On a fixed dataset, processing points in
+//! order reproduces batch Algorithm 2 *exactly* (same centers, same
+//! weights) — see the equivalence test — while supporting unbounded
+//! streams with O(m) state and O(m) work per point.
+//!
+//! `merge` combines two streaming estimators (e.g. from shards): centers
+//! of one are re-streamed into the other carrying their weights, which
+//! preserves total mass and the ε-separation invariant.
+
+use super::ReducedSet;
+use crate::kernel::Kernel;
+use crate::linalg::{sq_euclidean, Matrix};
+
+/// Online shadow-set selector with O(m) state.
+#[derive(Clone, Debug)]
+pub struct StreamingShadow {
+    ell: f64,
+    eps2: f64,
+    dim: usize,
+    /// Flattened center rows (m x dim).
+    centers: Vec<f64>,
+    weights: Vec<f64>,
+    n_seen: usize,
+}
+
+impl StreamingShadow {
+    /// Create a selector for a fixed kernel bandwidth and ℓ.
+    pub fn new(kernel: &Kernel, ell: f64, dim: usize) -> Self {
+        let eps = kernel.shadow_radius(ell);
+        StreamingShadow {
+            ell,
+            eps2: eps * eps,
+            dim,
+            centers: Vec::new(),
+            weights: Vec::new(),
+            n_seen: 0,
+        }
+    }
+
+    /// Number of retained centers so far.
+    pub fn m(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Points observed so far.
+    pub fn n_seen(&self) -> usize {
+        self.n_seen
+    }
+
+    /// Observe one point: absorb or promote.  Returns the index of the
+    /// center that absorbed it (which may be brand new).
+    pub fn observe(&mut self, x: &[f64]) -> usize {
+        self.observe_weighted(x, 1.0)
+    }
+
+    /// Observe a point carrying `weight` units of mass (used by `merge`).
+    pub fn observe_weighted(&mut self, x: &[f64], weight: f64) -> usize {
+        assert_eq!(x.len(), self.dim, "dimension mismatch");
+        assert!(weight > 0.0);
+        self.n_seen += weight.round() as usize;
+        for j in 0..self.m() {
+            let c = &self.centers[j * self.dim..(j + 1) * self.dim];
+            if sq_euclidean(c, x) < self.eps2 {
+                self.weights[j] += weight;
+                return j;
+            }
+        }
+        self.centers.extend_from_slice(x);
+        self.weights.push(weight);
+        self.m() - 1
+    }
+
+    /// Fold another selector's centers into this one (shard merge).
+    /// Total mass is preserved; the result still satisfies the cover
+    /// radius 2ε (a merged point sits within ε of its shard center, which
+    /// sits within ε of the surviving center).
+    pub fn merge(&mut self, other: &StreamingShadow) {
+        assert_eq!(self.dim, other.dim);
+        for j in 0..other.m() {
+            let c = &other.centers[j * other.dim..(j + 1) * other.dim];
+            self.observe_weighted(c, other.weights[j]);
+        }
+    }
+
+    /// Snapshot the current reduced set.
+    pub fn snapshot(&self) -> ReducedSet {
+        let m = self.m();
+        let centers =
+            Matrix::from_vec(m, self.dim, self.centers.clone())
+                .expect("internal shape");
+        ReducedSet {
+            centers,
+            weights: self.weights.clone(),
+            n_source: self.n_seen.max(1),
+            assignment: None,
+            method: format!("streaming-shde(ell={})", self.ell),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+    use crate::density::{RsdeEstimator, ShadowDensity};
+    use crate::kpca::fit_rskpca;
+
+    #[test]
+    fn streaming_equals_batch_on_fixed_data() {
+        let ds = gaussian_mixture_2d(300, 3, 0.4, 1);
+        let kernel = Kernel::gaussian(1.0);
+        let batch = ShadowDensity::new(4.0).reduce(&ds.x, &kernel);
+        let mut stream = StreamingShadow::new(&kernel, 4.0, 2);
+        for i in 0..ds.n() {
+            stream.observe(ds.x.row(i));
+        }
+        let snap = stream.snapshot();
+        assert_eq!(snap.m(), batch.m());
+        assert_eq!(snap.weights, batch.weights);
+        for j in 0..batch.m() {
+            assert_eq!(snap.centers.row(j), batch.centers.row(j));
+        }
+    }
+
+    #[test]
+    fn state_is_o_of_m_not_n() {
+        let ds = gaussian_mixture_2d(2000, 3, 0.2, 2);
+        let kernel = Kernel::gaussian(1.5);
+        let mut stream = StreamingShadow::new(&kernel, 3.0, 2);
+        for i in 0..ds.n() {
+            stream.observe(ds.x.row(i));
+        }
+        assert_eq!(stream.n_seen(), 2000);
+        assert!(stream.m() < 200, "m = {}", stream.m());
+        let snap = stream.snapshot();
+        assert!(snap.check_invariants());
+    }
+
+    #[test]
+    fn snapshot_feeds_rskpca_incrementally() {
+        // The online use case: keep fitting RSKPCA from snapshots as data
+        // streams in; eigenvalues must stabilize.
+        let ds = gaussian_mixture_2d(600, 3, 0.4, 3);
+        let kernel = Kernel::gaussian(1.0);
+        let mut stream = StreamingShadow::new(&kernel, 4.0, 2);
+        let mut lambda_trajectory = Vec::new();
+        for i in 0..ds.n() {
+            stream.observe(ds.x.row(i));
+            if (i + 1) % 200 == 0 {
+                let model =
+                    fit_rskpca(&stream.snapshot(), &kernel, 2).unwrap();
+                lambda_trajectory.push(model.op_eigenvalues[0]);
+            }
+        }
+        assert_eq!(lambda_trajectory.len(), 3);
+        let last = lambda_trajectory[2];
+        let prev = lambda_trajectory[1];
+        assert!(
+            (last - prev).abs() / last < 0.15,
+            "top eigenvalue not stabilizing: {lambda_trajectory:?}"
+        );
+    }
+
+    #[test]
+    fn merge_preserves_mass_and_compresses() {
+        let ds = gaussian_mixture_2d(400, 3, 0.4, 4);
+        let kernel = Kernel::gaussian(1.0);
+        let mut a = StreamingShadow::new(&kernel, 4.0, 2);
+        let mut b = StreamingShadow::new(&kernel, 4.0, 2);
+        for i in 0..200 {
+            a.observe(ds.x.row(i));
+        }
+        for i in 200..400 {
+            b.observe(ds.x.row(i));
+        }
+        let m_before = a.m() + b.m();
+        a.merge(&b);
+        let snap = a.snapshot();
+        assert_eq!(snap.n_source, 400);
+        let total: f64 = snap.weights.iter().sum();
+        assert!((total - 400.0).abs() < 1e-9);
+        assert!(a.m() <= m_before, "merge must not inflate centers");
+    }
+
+    #[test]
+    fn rejects_dimension_mismatch() {
+        let kernel = Kernel::gaussian(1.0);
+        let mut s = StreamingShadow::new(&kernel, 4.0, 3);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || s.observe(&[1.0, 2.0]),
+        ));
+        assert!(r.is_err());
+    }
+}

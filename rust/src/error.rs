@@ -1,0 +1,71 @@
+//! Crate-wide error type.
+//!
+//! A single flat enum keeps error plumbing simple across the substrate
+//! modules; the runtime layer wraps `xla::Error` values into
+//! [`Error::Runtime`] with context about which artifact failed.
+
+use std::fmt;
+
+/// All the ways an rskpca operation can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// Shape or argument mismatch in a linear-algebra / model call.
+    Shape(String),
+    /// Numerical failure (eigensolver non-convergence, singular system...).
+    Numerical(String),
+    /// Invalid configuration value or file.
+    Config(String),
+    /// Parse failure (JSON / TOML / CSV / CLI).
+    Parse(String),
+    /// I/O failure, tagged with the path involved.
+    Io(String),
+    /// PJRT runtime failure (artifact load / compile / execute).
+    Runtime(String),
+    /// The embedding service rejected or dropped a request.
+    Service(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Service(m) => write!(f, "service error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        let e = Error::Shape("3x4 vs 5x6".into());
+        assert_eq!(e.to_string(), "shape error: 3x4 vs 5x6");
+        let e = Error::Runtime("no artifact".into());
+        assert!(e.to_string().contains("runtime"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,151 @@
+//! Figures 4–5: k-NN classification over KPCA embeddings versus the
+//! Nyström family (usps, yale).
+//!
+//! Protocol (paper §6): 3-NN on the rank-r KPCA embedding, 10-fold
+//! cross-validation; accuracy, training and testing speedups (relative to
+//! full KPCA), and retention, per ℓ.  The baseline ("none" in the paper's
+//! figures) is full KPCA and is ℓ-independent, so it is computed once per
+//! fold and reused across the grid.
+
+use std::io::Write;
+
+use super::{
+    dataset_by_name, fit_method, mean, rank_for, sigma_for, ExperimentCtx,
+    Method,
+};
+use crate::classify::{accuracy, KnnClassifier};
+use crate::data::stratified_kfold;
+use crate::error::Result;
+use crate::kernel::Kernel;
+use crate::metrics::Timer;
+
+const KNN_K: usize = 3;
+const METHODS: [Method; 4] = [
+    Method::Shde,
+    Method::Subsample,
+    Method::Nystrom,
+    Method::WNystrom,
+];
+
+pub fn run(ctx: &ExperimentCtx, dataset: &str) -> Result<()> {
+    let fig = if dataset == "usps" { "fig4" } else { "fig5" };
+    let ds = dataset_by_name(dataset, ctx.scale, ctx.seed)?;
+    let sigma = sigma_for(&ds);
+    let kernel = Kernel::gaussian(sigma);
+    let r = rank_for(dataset);
+    let folds_n = if ctx.runs <= 3 { 3 } else { 10 };
+    println!(
+        "{fig}: {dataset} n={} d={} r={r} sigma={sigma:.2} {folds_n}-fold \
+         CV, 3-NN",
+        ds.n(),
+        ds.dim()
+    );
+
+    let folds = stratified_kfold(&ds.y, folds_n, ctx.seed);
+
+    // Per-fold KPCA baseline (accuracy + timings), reused for every ell.
+    struct FoldBase {
+        train_idx: Vec<usize>,
+        test_idx: Vec<usize>,
+        fit_s: f64,
+        embed_s: f64,
+        acc: f64,
+    }
+    let mut bases = Vec::new();
+    for (train_idx, test_idx) in &folds {
+        let train = ds.select(train_idx);
+        let test = ds.select(test_idx);
+        let t = Timer::start();
+        let base =
+            fit_method(Method::Kpca, &train.x, &kernel, r, 0, 4.0, ctx.seed)?;
+        let fit_s = t.elapsed_s();
+        let t = Timer::start();
+        let z_test = base.model.transform(&test.x);
+        let embed_s = t.elapsed_s();
+        let z_train = base.model.transform(&train.x);
+        let knn = KnnClassifier::fit(z_train, train.y.clone(), KNN_K);
+        let acc = accuracy(&knn.predict(&z_test), &test.y);
+        bases.push(FoldBase {
+            train_idx: train_idx.clone(),
+            test_idx: test_idx.clone(),
+            fit_s,
+            embed_s,
+            acc,
+        });
+    }
+    let base_acc = mean(&bases.iter().map(|b| b.acc).collect::<Vec<_>>());
+    println!("  baseline kpca accuracy: {base_acc:.4}");
+
+    let mut csv = ctx.csv(
+        &format!("{fig}_classification_{dataset}.csv"),
+        "dataset,ell,method,accuracy,train_speedup,test_speedup,retention",
+    )?;
+    writeln!(
+        csv,
+        "{dataset},0,kpca,{base_acc:.6},1.0,1.0,1.0"
+    )?;
+
+    for ell in ctx.ell_grid() {
+        let mut rows: Vec<(Method, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> =
+            METHODS
+                .iter()
+                .map(|&m| (m, vec![], vec![], vec![], vec![]))
+                .collect();
+        for (fold_idx, base) in bases.iter().enumerate() {
+            let seed = ctx
+                .seed
+                .wrapping_add(fold_idx as u64 * 104729)
+                .wrapping_add((ell * 100.0) as u64);
+            let train = ds.select(&base.train_idx);
+            let test = ds.select(&base.test_idx);
+            let mut m_shared = 0usize;
+            for (mi, &method) in METHODS.iter().enumerate() {
+                let fitted = fit_method(
+                    method,
+                    &train.x,
+                    &kernel,
+                    r,
+                    m_shared.max(2),
+                    ell,
+                    seed,
+                )?;
+                if method == Method::Shde {
+                    m_shared = fitted.m;
+                }
+                let t = Timer::start();
+                let z_test = fitted.model.transform(&test.x);
+                let embed_s = t.elapsed_s();
+                let z_train = fitted.model.transform(&train.x);
+                let knn =
+                    KnnClassifier::fit(z_train, train.y.clone(), KNN_K);
+                let acc = accuracy(&knn.predict(&z_test), &test.y);
+                let row = &mut rows[mi];
+                row.1.push(acc);
+                row.2.push(base.fit_s / fitted.fit_seconds.max(1e-9));
+                row.3.push(base.embed_s / embed_s.max(1e-9));
+                row.4.push(fitted.m as f64 / train.n() as f64);
+            }
+        }
+        for (method, accs, trs, tes, rets) in &rows {
+            writeln!(
+                csv,
+                "{dataset},{ell},{},{:.6},{:.3},{:.3},{:.4}",
+                method.name(),
+                mean(accs),
+                mean(trs),
+                mean(tes),
+                mean(rets)
+            )?;
+        }
+        let shde = &rows[0];
+        println!(
+            "  ell={ell:>4}: shde acc={:.4} (kpca {base_acc:.4}) \
+             train_x={:.2} test_x={:.2} retained={:.1}%",
+            mean(&shde.1),
+            mean(&shde.2),
+            mean(&shde.3),
+            100.0 * mean(&shde.4)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! Figures 2–3: eigenembedding fidelity versus the Nyström family.
+//!
+//! Protocol (paper §6): KPCA is trained on the *entire* dataset; the
+//! approximate models (ShDE+RSKPCA, subsampled KPCA, Nyström, WNyström)
+//! train on 80%; all embed the held-out 20%; approximate embeddings are
+//! aligned to KPCA's via `argmin_A ||O − ÕA||_F`; errors, speedups and
+//! retention average over `runs` repetitions per ℓ.  The fixed-m methods
+//! use the m that ShDE found in the same run (the paper matches m the
+//! same way, averaged).
+//!
+//! The KPCA baseline depends only on the run's split, not on ℓ, so it is
+//! computed once per run and reused across the whole ℓ grid.
+
+use std::io::Write;
+
+use super::{
+    dataset_by_name, fit_method, mean, rank_for, sigma_for, ExperimentCtx,
+    Method,
+};
+use crate::align::{align_embeddings, eigenvalue_error};
+use crate::data::{train_test_split, Dataset};
+use crate::error::Result;
+use crate::kernel::Kernel;
+use crate::metrics::Timer;
+
+const METHODS: [Method; 4] = [
+    Method::Shde,
+    Method::Subsample,
+    Method::Nystrom,
+    Method::WNystrom,
+];
+
+#[derive(Default, Clone)]
+struct Acc {
+    embed_err: Vec<f64>,
+    eig_err: Vec<f64>,
+    train_speedup: Vec<f64>,
+    test_speedup: Vec<f64>,
+    retention: Vec<f64>,
+}
+
+struct RunBaseline {
+    train: Dataset,
+    test: Dataset,
+    o_ref: crate::linalg::Matrix,
+    ref_eigs: Vec<f64>,
+    fit_s: f64,
+    embed_s: f64,
+}
+
+pub fn run(ctx: &ExperimentCtx, dataset: &str) -> Result<()> {
+    let fig = if dataset == "german" { "fig2" } else { "fig3" };
+    let ds = dataset_by_name(dataset, ctx.scale, ctx.seed)?;
+    let sigma = sigma_for(&ds);
+    let kernel = Kernel::gaussian(sigma);
+    let r = rank_for(dataset);
+    println!(
+        "{fig}: {dataset} n={} (n_t={}) d={} r={r} sigma={sigma:.2} \
+         runs={} per ell",
+        ds.n(),
+        (ds.n() as f64 * 0.8) as usize,
+        ds.dim(),
+        ctx.runs
+    );
+
+    // One baseline per run, shared across the ell grid.
+    let mut baselines = Vec::with_capacity(ctx.runs);
+    for run_idx in 0..ctx.runs {
+        let seed = ctx.seed.wrapping_add(run_idx as u64 * 7919);
+        let t = Timer::start();
+        let baseline =
+            fit_method(Method::Kpca, &ds.x, &kernel, r, 0, 4.0, seed)?;
+        let fit_s = t.elapsed_s();
+        let (train, test) = train_test_split(&ds, 0.8, seed);
+        let t = Timer::start();
+        let o_ref = baseline.model.transform(&test.x);
+        let embed_s = t.elapsed_s();
+        baselines.push(RunBaseline {
+            train,
+            test,
+            o_ref,
+            ref_eigs: baseline.model.op_eigenvalues.clone(),
+            fit_s,
+            embed_s,
+        });
+    }
+
+    let mut csv = ctx.csv(
+        &format!("{fig}_eigenembedding_{dataset}.csv"),
+        "dataset,ell,method,embed_err,eig_err,train_speedup,test_speedup,\
+         retention",
+    )?;
+
+    for ell in ctx.ell_grid() {
+        let mut acc: Vec<Acc> = vec![Acc::default(); METHODS.len()];
+        for (run_idx, base) in baselines.iter().enumerate() {
+            let seed = ctx
+                .seed
+                .wrapping_add(run_idx as u64 * 7919)
+                .wrapping_add((ell * 100.0) as u64);
+            let mut m_shared = 0usize;
+            for (mi, &method) in METHODS.iter().enumerate() {
+                let fitted = fit_method(
+                    method,
+                    &base.train.x,
+                    &kernel,
+                    r,
+                    m_shared.max(2),
+                    ell,
+                    seed,
+                )?;
+                if method == Method::Shde {
+                    m_shared = fitted.m;
+                }
+                let t = Timer::start();
+                let o_approx = fitted.model.transform(&base.test.x);
+                let embed_time = t.elapsed_s();
+                let aligned = align_embeddings(&base.o_ref, &o_approx)?;
+                let a = &mut acc[mi];
+                a.embed_err.push(aligned.rel_err);
+                a.eig_err.push(eigenvalue_error(
+                    &base.ref_eigs,
+                    &fitted.model.op_eigenvalues,
+                ));
+                a.train_speedup
+                    .push(base.fit_s / fitted.fit_seconds.max(1e-9));
+                a.test_speedup
+                    .push(base.embed_s / embed_time.max(1e-9));
+                a.retention
+                    .push(fitted.m as f64 / base.train.n() as f64);
+            }
+        }
+        for (mi, &method) in METHODS.iter().enumerate() {
+            let a = &acc[mi];
+            writeln!(
+                csv,
+                "{dataset},{ell},{},{:.6},{:.6},{:.3},{:.3},{:.4}",
+                method.name(),
+                mean(&a.embed_err),
+                mean(&a.eig_err),
+                mean(&a.train_speedup),
+                mean(&a.test_speedup),
+                mean(&a.retention)
+            )?;
+        }
+        let shde = &acc[0];
+        println!(
+            "  ell={ell:>4}: shde embed_err={:.4} eig_err={:.4} \
+             train_x={:.2} test_x={:.2} retained={:.1}%",
+            mean(&shde.embed_err),
+            mean(&shde.eig_err),
+            mean(&shde.train_speedup),
+            mean(&shde.test_speedup),
+            100.0 * mean(&shde.retention)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,311 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation
+//! (§6).  Each driver regenerates its table/figure as a CSV in the output
+//! directory plus human-readable rows on stdout; EXPERIMENTS.md records
+//! the paper-vs-measured comparison.
+//!
+//! Scaling: the paper's largest runs (usps n_t = 8368 with full-KPCA
+//! baselines inside 10-fold CV) assume a MATLAB workstation budget; this
+//! reproduction runs on a single core, so every driver accepts a scale
+//! factor (`--scale`, default 0.25 for the heavy classification drivers)
+//! that subsamples the datasets while preserving their structure.  The
+//! *shape* of every comparison (who wins, crossover ℓ, speedup ordering)
+//! is scale-invariant; absolute speedups grow with n, so the full-scale
+//! numbers (`--scale 1`) are the paper-comparable ones.
+
+mod bounds;
+mod classification;
+mod eigenembedding;
+mod fig1;
+mod retention;
+mod rsde_schemes;
+mod table1;
+mod table2;
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use crate::data::{
+    german_like, pendigits_like, usps_like, yale_like, Dataset,
+};
+use crate::density::{
+    HerdingRsde, KMeansRsde, ParingRsde, RsdeEstimator, ShadowDensity,
+};
+use crate::error::{Error, Result};
+use crate::kernel::{median_heuristic, Kernel};
+use crate::kpca::{
+    fit_kpca, fit_nystrom, fit_rskpca, fit_subsampled_kpca,
+    fit_weighted_nystrom, EmbeddingModel,
+};
+use crate::metrics::Timer;
+
+/// Shared driver context.
+#[derive(Clone, Debug)]
+pub struct ExperimentCtx {
+    /// Output directory for CSVs.
+    pub out_dir: PathBuf,
+    /// Dataset scale factor in (0, 1].
+    pub scale: f64,
+    /// Repetitions per configuration (the paper averages 50).
+    pub runs: usize,
+    /// ℓ-grid step (paper: 0.1 over [3, 5]).
+    pub ell_step: f64,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl Default for ExperimentCtx {
+    fn default() -> Self {
+        ExperimentCtx {
+            out_dir: PathBuf::from("results"),
+            scale: 0.25,
+            runs: 10,
+            ell_step: 0.25,
+            seed: 42,
+        }
+    }
+}
+
+impl ExperimentCtx {
+    /// Fast smoke configuration (used by tests and `--quick`).
+    pub fn quick() -> Self {
+        ExperimentCtx {
+            out_dir: std::env::temp_dir().join("rskpca_results"),
+            scale: 0.08,
+            runs: 2,
+            ell_step: 1.0,
+            seed: 42,
+        }
+    }
+
+    /// The paper's ℓ grid [3, 5] at this context's step.
+    pub fn ell_grid(&self) -> Vec<f64> {
+        let mut grid = Vec::new();
+        let mut ell: f64 = 3.0;
+        while ell <= 5.0 + 1e-9 {
+            grid.push((ell * 100.0).round() / 100.0);
+            ell += self.ell_step;
+        }
+        grid
+    }
+
+    /// Open a CSV in the output dir and write its header.
+    pub fn csv(&self, name: &str, header: &str)
+        -> Result<std::io::BufWriter<std::fs::File>> {
+        std::fs::create_dir_all(&self.out_dir)
+            .map_err(|e| Error::Io(format!("{e}")))?;
+        let path = self.out_dir.join(name);
+        let f = std::fs::File::create(&path)
+            .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "{header}")?;
+        Ok(w)
+    }
+}
+
+/// Build a paper dataset by name, scaled.
+pub fn dataset_by_name(name: &str, scale: f64, seed: u64)
+    -> Result<Dataset> {
+    let full = match name {
+        "german" => german_like(seed),
+        "pendigits" => pendigits_like(seed),
+        "usps" => usps_like(seed),
+        "yale" => yale_like(seed),
+        other => {
+            return Err(Error::Config(format!("unknown dataset '{other}'")))
+        }
+    };
+    if scale >= 1.0 {
+        return Ok(full);
+    }
+    let keep = ((full.n() as f64 * scale) as usize).max(60);
+    let mut rng = crate::prng::Pcg64::new(seed ^ 0x5CA1E);
+    let idx = rng.sample_indices(full.n(), keep.min(full.n()));
+    Ok(full.select(&idx))
+}
+
+/// Table 1's embedding rank ("k" row) per dataset.
+pub fn rank_for(name: &str) -> usize {
+    match name {
+        "usps" => 15,
+        "yale" => 10,
+        _ => 5,
+    }
+}
+
+/// Bandwidth per dataset: the paper cross-validates σ (Table 1); the
+/// synthetic substitutes get the median heuristic, which the paper's grid
+/// brackets.  Deterministic per dataset.
+pub fn sigma_for(ds: &Dataset) -> f64 {
+    median_heuristic(&ds.x, 2000, 0xBA5E)
+}
+
+/// The comparison methods of Figs. 2–5 and 7–8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Kpca,
+    Subsample,
+    Nystrom,
+    WNystrom,
+    Shde,
+    KmeansRskpca,
+    ParingRskpca,
+    HerdingRskpca,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Kpca => "kpca",
+            Method::Subsample => "subsample",
+            Method::Nystrom => "nystrom",
+            Method::WNystrom => "wnystrom",
+            Method::Shde => "shde",
+            Method::KmeansRskpca => "kmeans",
+            Method::ParingRskpca => "paring",
+            Method::HerdingRskpca => "herding",
+        }
+    }
+}
+
+/// A fitted model plus its measured fit cost and retained-set size.
+pub struct FittedMethod {
+    pub model: EmbeddingModel,
+    pub fit_seconds: f64,
+    pub m: usize,
+}
+
+/// Fit one method.  `m` is the reduced-set size for the fixed-m methods;
+/// ShDE ignores it (ℓ determines m) and reports the m it found.
+pub fn fit_method(
+    method: Method,
+    x: &crate::linalg::Matrix,
+    kernel: &Kernel,
+    r: usize,
+    m: usize,
+    ell: f64,
+    seed: u64,
+) -> Result<FittedMethod> {
+    let t = Timer::start();
+    let (model, m_used) = match method {
+        Method::Kpca => (fit_kpca(x, kernel, r)?, x.rows()),
+        Method::Subsample => {
+            (fit_subsampled_kpca(x, kernel, r, m, seed)?, m)
+        }
+        Method::Nystrom => (fit_nystrom(x, kernel, r, m, seed)?, m),
+        Method::WNystrom => {
+            (fit_weighted_nystrom(x, kernel, r, m, seed)?, m)
+        }
+        Method::Shde => {
+            let rs = ShadowDensity::new(ell).reduce(x, kernel);
+            let mm = rs.m();
+            (fit_rskpca(&rs, kernel, r)?, mm)
+        }
+        Method::KmeansRskpca => {
+            let rs = KMeansRsde::new(m, seed).reduce(x, kernel);
+            (fit_rskpca(&rs, kernel, r)?, m)
+        }
+        Method::ParingRskpca => {
+            let rs = ParingRsde::new(m, seed).reduce(x, kernel);
+            (fit_rskpca(&rs, kernel, r)?, m)
+        }
+        Method::HerdingRskpca => {
+            let rs = HerdingRsde::new(m, seed).reduce(x, kernel);
+            (fit_rskpca(&rs, kernel, r)?, m)
+        }
+    };
+    Ok(FittedMethod { model, fit_seconds: t.elapsed_s(), m: m_used })
+}
+
+/// Run one named experiment (or "all").
+pub fn run(name: &str, ctx: &ExperimentCtx) -> Result<()> {
+    match name {
+        "table1" => table1::run(ctx),
+        "table2" => table2::run(ctx),
+        "fig1" => fig1::run(ctx),
+        "fig2" => eigenembedding::run(ctx, "german"),
+        "fig3" => eigenembedding::run(ctx, "pendigits"),
+        "fig4" => classification::run(ctx, "usps"),
+        "fig5" => classification::run(ctx, "yale"),
+        "fig6" => retention::run(ctx),
+        "fig7" => rsde_schemes::run(ctx, "usps"),
+        "fig8" => rsde_schemes::run(ctx, "yale"),
+        "bounds" => bounds::run(ctx),
+        "all" => {
+            for exp in [
+                "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
+                "fig7", "fig8", "table2", "bounds",
+            ] {
+                println!("\n=== experiment {exp} ===");
+                run(exp, ctx)?;
+            }
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown experiment '{other}'"))),
+    }
+}
+
+/// Mean of a slice (0 for empty).
+pub(crate) fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ell_grid_matches_paper_range() {
+        let ctx = ExperimentCtx { ell_step: 0.1, ..Default::default() };
+        let grid = ctx.ell_grid();
+        assert!((grid[0] - 3.0).abs() < 1e-9);
+        assert!((grid.last().unwrap() - 5.0).abs() < 1e-9);
+        assert_eq!(grid.len(), 21);
+    }
+
+    #[test]
+    fn dataset_by_name_scales() {
+        let ds = dataset_by_name("german", 0.1, 1).unwrap();
+        assert_eq!(ds.n(), 100);
+        assert_eq!(ds.dim(), 24);
+        assert!(dataset_by_name("nope", 1.0, 1).is_err());
+    }
+
+    #[test]
+    fn fit_method_covers_all_variants() {
+        let ds = dataset_by_name("german", 0.1, 2).unwrap();
+        let k = Kernel::gaussian(sigma_for(&ds));
+        for method in [
+            Method::Kpca,
+            Method::Subsample,
+            Method::Nystrom,
+            Method::WNystrom,
+            Method::Shde,
+            Method::KmeansRskpca,
+            Method::ParingRskpca,
+            Method::HerdingRskpca,
+        ] {
+            let f = fit_method(method, &ds.x, &k, 3, 20, 4.0, 7).unwrap();
+            assert!(f.m >= 1, "{method:?}");
+            assert!(f.fit_seconds >= 0.0);
+            let z = f.model.transform(&ds.x);
+            assert_eq!(z.rows(), ds.n());
+        }
+    }
+
+    #[test]
+    fn quick_experiments_run_end_to_end() {
+        // Smoke the cheap drivers end to end (heavier figs are smoked via
+        // the end-to-end integration test at tiny scales).
+        let ctx = ExperimentCtx::quick();
+        run("table1", &ctx).unwrap();
+        run("fig1", &ctx).unwrap();
+        run("fig6", &ctx).unwrap();
+        run("bounds", &ctx).unwrap();
+        assert!(ctx.out_dir.join("table1.csv").exists());
+        assert!(ctx.out_dir.join("fig6_retention.csv").exists());
+    }
+}

@@ -1,0 +1,131 @@
+//! Figures 7–8: RSKPCA accuracy under different RSDE schemes (ShDE,
+//! k-means, KDE paring, kernel herding) on usps / yale.
+//!
+//! Same classification protocol as Figs. 4–5 (3-NN, CV), but all four
+//! models are Algorithm 1 over different reduced sets of the *same* m
+//! (the m that ShDE found at this ℓ), isolating the influence of the RSDE
+//! itself — the paper's point that RSDE quality matters at small ℓ and
+//! washes out at large ℓ, while ShDE is by far the cheapest selector.
+
+use std::io::Write;
+
+use super::{
+    dataset_by_name, fit_method, mean, rank_for, sigma_for, ExperimentCtx,
+    Method,
+};
+use crate::classify::{accuracy, KnnClassifier};
+use crate::data::stratified_kfold;
+use crate::error::Result;
+use crate::kernel::Kernel;
+use crate::metrics::Timer;
+
+const KNN_K: usize = 3;
+const SCHEMES: [Method; 4] = [
+    Method::Shde,
+    Method::KmeansRskpca,
+    Method::ParingRskpca,
+    Method::HerdingRskpca,
+];
+
+pub fn run(ctx: &ExperimentCtx, dataset: &str) -> Result<()> {
+    let fig = if dataset == "usps" { "fig7" } else { "fig8" };
+    let ds = dataset_by_name(dataset, ctx.scale, ctx.seed)?;
+    let sigma = sigma_for(&ds);
+    let kernel = Kernel::gaussian(sigma);
+    let r = rank_for(dataset);
+    let folds_n = if ctx.runs <= 3 { 3 } else { 10 };
+    println!(
+        "{fig}: {dataset} n={} d={} r={r} sigma={sigma:.2} RSDE schemes, \
+         {folds_n}-fold CV",
+        ds.n(),
+        ds.dim()
+    );
+    let folds = stratified_kfold(&ds.y, folds_n, ctx.seed);
+
+    // Reference fit time (speedup denominator) is ell-independent:
+    // measure full KPCA once per fold.
+    let mut base_fits = Vec::with_capacity(folds.len());
+    for (train_idx, _) in &folds {
+        let train = ds.select(train_idx);
+        let t = Timer::start();
+        let base = fit_method(
+            Method::Kpca,
+            &train.x,
+            &kernel,
+            r,
+            0,
+            4.0,
+            ctx.seed,
+        )?;
+        drop(base);
+        base_fits.push(t.elapsed_s());
+    }
+
+    let mut csv = ctx.csv(
+        &format!("{fig}_rsde_schemes_{dataset}.csv"),
+        "dataset,ell,scheme,accuracy,rsde_seconds,train_speedup,retention",
+    )?;
+
+    for ell in ctx.ell_grid() {
+        let mut rows: Vec<(Method, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> =
+            SCHEMES
+                .iter()
+                .map(|&m| (m, vec![], vec![], vec![], vec![]))
+                .collect();
+        for (fold_idx, (train_idx, test_idx)) in folds.iter().enumerate() {
+            let seed = ctx
+                .seed
+                .wrapping_add(fold_idx as u64 * 6151)
+                .wrapping_add((ell * 100.0) as u64);
+            let train = ds.select(train_idx);
+            let test = ds.select(test_idx);
+            let base_fit = base_fits[fold_idx];
+            let mut m_shared = 0usize;
+            for (mi, &scheme) in SCHEMES.iter().enumerate() {
+                let fitted = fit_method(
+                    scheme,
+                    &train.x,
+                    &kernel,
+                    r,
+                    m_shared.max(2),
+                    ell,
+                    seed,
+                )?;
+                if scheme == Method::Shde {
+                    m_shared = fitted.m;
+                }
+                let z_train = fitted.model.transform(&train.x);
+                let z_test = fitted.model.transform(&test.x);
+                let knn =
+                    KnnClassifier::fit(z_train, train.y.clone(), KNN_K);
+                let acc = accuracy(&knn.predict(&z_test), &test.y);
+                let row = &mut rows[mi];
+                row.1.push(acc);
+                row.2.push(fitted.fit_seconds);
+                row.3.push(base_fit / fitted.fit_seconds.max(1e-9));
+                row.4.push(fitted.m as f64 / train.n() as f64);
+            }
+        }
+        for (scheme, accs, secs, speedups, rets) in &rows {
+            writeln!(
+                csv,
+                "{dataset},{ell},{},{:.6},{:.6},{:.3},{:.4}",
+                scheme.name(),
+                mean(accs),
+                mean(secs),
+                mean(speedups),
+                mean(rets)
+            )?;
+        }
+        println!(
+            "  ell={ell:>4}: shde={:.4} kmeans={:.4} paring={:.4} \
+             herding={:.4} (m~{:.1}%)",
+            mean(&rows[0].1),
+            mean(&rows[1].1),
+            mean(&rows[2].1),
+            mean(&rows[3].1),
+            100.0 * mean(&rows[0].4)
+        );
+    }
+    Ok(())
+}

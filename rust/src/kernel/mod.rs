@@ -1,0 +1,338 @@
+//! Kernel functions and native Gram computation.
+//!
+//! Radially symmetric kernels of the paper's form (eq. 19),
+//! `k(x, y) = phi(||x - y||^p / sigma^p)`, with the quantities the theory
+//! in §5 needs: the peak value `kappa`, the profile `phi`, the smoothness
+//! constant `C_X^k` (eq. 18), and the shadow radius `eps(l) = sigma / l`.
+//!
+//! The native (pure rust) Gram path here is the fallback / cross-check for
+//! the PJRT artifacts produced by the Pallas kernels; `runtime::Engine`
+//! picks whichever is configured and tests assert they agree.
+
+use crate::linalg::{sq_euclidean, Matrix};
+
+/// The radial profile families supported end to end (matching the L1
+/// Pallas kernels' static `kernel` parameter).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// `exp(-||x-y||^2 / (2 sigma^2))`, p = 2, C = 1/(2 sigma^2).
+    Gaussian,
+    /// `exp(-||x-y|| / sigma)`, p = 1, C = 1/sigma^2.
+    Laplacian,
+    /// `1 / (1 + ||x-y||^2 / sigma^2)`, p = 2.
+    Cauchy,
+}
+
+impl KernelKind {
+    /// Name as used in artifact files / configs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Gaussian => "gaussian",
+            KernelKind::Laplacian => "laplacian",
+            KernelKind::Cauchy => "cauchy",
+        }
+    }
+
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "gaussian" | "rbf" => Some(KernelKind::Gaussian),
+            "laplacian" => Some(KernelKind::Laplacian),
+            "cauchy" => Some(KernelKind::Cauchy),
+            _ => None,
+        }
+    }
+}
+
+/// A kernel = profile family + bandwidth.
+#[derive(Clone, Copy, Debug)]
+pub struct Kernel {
+    pub kind: KernelKind,
+    pub sigma: f64,
+}
+
+impl Kernel {
+    pub fn new(kind: KernelKind, sigma: f64) -> Self {
+        assert!(sigma > 0.0, "kernel bandwidth must be positive");
+        Kernel { kind, sigma }
+    }
+
+    pub fn gaussian(sigma: f64) -> Self {
+        Kernel::new(KernelKind::Gaussian, sigma)
+    }
+
+    pub fn laplacian(sigma: f64) -> Self {
+        Kernel::new(KernelKind::Laplacian, sigma)
+    }
+
+    pub fn cauchy(sigma: f64) -> Self {
+        Kernel::new(KernelKind::Cauchy, sigma)
+    }
+
+    /// Peak value kappa = k(x, x).  1 for all supported profiles.
+    pub fn kappa(&self) -> f64 {
+        1.0
+    }
+
+    /// The exponent p in eq. (19).
+    pub fn p(&self) -> f64 {
+        match self.kind {
+            KernelKind::Gaussian | KernelKind::Cauchy => 2.0,
+            KernelKind::Laplacian => 1.0,
+        }
+    }
+
+    /// The profile phi(s) of eq. (19): k(x,y) = phi(||x-y||^p / sigma^p)
+    /// (gaussian includes the conventional 1/2: phi(s) = exp(-s/2)).
+    pub fn phi(&self, s: f64) -> f64 {
+        match self.kind {
+            KernelKind::Gaussian => (-0.5 * s).exp(),
+            KernelKind::Laplacian => (-s).exp(),
+            KernelKind::Cauchy => 1.0 / (1.0 + s),
+        }
+    }
+
+    /// The `gamma` runtime input handed to the AOT artifacts:
+    /// gaussian/cauchy use gamma = 1/(2 sigma^2) resp. 1/sigma^2 applied to
+    /// squared distance, laplacian gamma = 1/sigma applied to distance.
+    pub fn gamma(&self) -> f64 {
+        match self.kind {
+            KernelKind::Gaussian => 1.0 / (2.0 * self.sigma * self.sigma),
+            KernelKind::Laplacian => 1.0 / self.sigma,
+            KernelKind::Cauchy => 1.0 / (self.sigma * self.sigma),
+        }
+    }
+
+    /// Evaluate k(x, y).
+    #[inline]
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        self.eval_sq_dist(sq_euclidean(x, y))
+    }
+
+    /// Evaluate from a precomputed squared distance.
+    #[inline]
+    pub fn eval_sq_dist(&self, d2: f64) -> f64 {
+        match self.kind {
+            KernelKind::Gaussian => (-self.gamma() * d2).exp(),
+            KernelKind::Laplacian => (-self.gamma() * d2.max(0.0).sqrt()).exp(),
+            KernelKind::Cauchy => 1.0 / (1.0 + self.gamma() * d2),
+        }
+    }
+
+    /// The smoothness constant `C_X^k` of eq. (18) used by Theorem 5.2:
+    /// 1/(2 sigma^2) for the Gaussian, 1/sigma^2 for the Laplacian
+    /// (Zhang & Kwok 2008); the Cauchy profile is 1-Lipschitz in s, giving
+    /// the same constant as the Gaussian up to the 1/2.
+    pub fn smoothness_constant(&self) -> f64 {
+        match self.kind {
+            KernelKind::Gaussian => 1.0 / (2.0 * self.sigma * self.sigma),
+            KernelKind::Laplacian => 1.0 / (self.sigma * self.sigma),
+            KernelKind::Cauchy => 1.0 / (self.sigma * self.sigma),
+        }
+    }
+
+    /// Shadow radius eps(l) = sigma / l (§4).
+    pub fn shadow_radius(&self, ell: f64) -> f64 {
+        assert!(ell > 0.0, "ell must be positive");
+        self.sigma / ell
+    }
+
+    /// The worst-case kernel value drop across a shadow:
+    /// `kappa - phi(1 / l^p)` — the quantity inside Theorems 5.1/5.3/5.4.
+    pub fn shadow_profile_gap(&self, ell: f64) -> f64 {
+        self.kappa() - self.phi(ell.powf(-self.p()))
+    }
+
+    /// Native Gram matrix K[i,j] = k(x_i, y_j).
+    pub fn gram(&self, x: &Matrix, y: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), y.cols(), "gram: feature dims differ");
+        let mut out = Matrix::zeros(x.rows(), y.rows());
+        for i in 0..x.rows() {
+            let xi = x.row(i);
+            for j in 0..y.rows() {
+                out.set(i, j, self.eval(xi, y.row(j)));
+            }
+        }
+        out
+    }
+
+    /// Symmetric Gram matrix K[i,j] = k(x_i, x_j), exploiting symmetry.
+    pub fn gram_sym(&self, x: &Matrix) -> Matrix {
+        let n = x.rows();
+        let mut out = Matrix::zeros(n, n);
+        for i in 0..n {
+            out.set(i, i, self.kappa());
+            for j in (i + 1)..n {
+                let v = self.eval(x.row(i), x.row(j));
+                out.set(i, j, v);
+                out.set(j, i, v);
+            }
+        }
+        out
+    }
+
+    /// Kernel row k(x, C) against a center set.
+    pub fn kernel_row(&self, x: &[f64], centers: &Matrix) -> Vec<f64> {
+        (0..centers.rows())
+            .map(|j| self.eval(x, centers.row(j)))
+            .collect()
+    }
+}
+
+/// Median-heuristic bandwidth: median pairwise distance over a subsample.
+/// The paper cross-validates sigma per dataset; the median heuristic is the
+/// standard starting grid point (used by `experiments::table1`).
+pub fn median_heuristic(x: &Matrix, max_pairs: usize, seed: u64) -> f64 {
+    use crate::prng::Pcg64;
+    let n = x.rows();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut rng = Pcg64::new(seed);
+    let mut dists = Vec::with_capacity(max_pairs);
+    for _ in 0..max_pairs {
+        let i = rng.below(n);
+        let mut j = rng.below(n);
+        if i == j {
+            j = (j + 1) % n;
+        }
+        dists.push(sq_euclidean(x.row(i), x.row(j)).sqrt());
+    }
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = dists[dists.len() / 2];
+    if med > 0.0 {
+        med
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_and_symmetry() {
+        for k in [Kernel::gaussian(2.0), Kernel::laplacian(2.0),
+                  Kernel::cauchy(2.0)] {
+            let x = [1.0, 2.0, 3.0];
+            let y = [0.5, -1.0, 2.0];
+            assert!((k.eval(&x, &x) - k.kappa()).abs() < 1e-15);
+            assert!((k.eval(&x, &y) - k.eval(&y, &x)).abs() < 1e-15);
+            assert!(k.eval(&x, &y) <= k.kappa());
+            assert!(k.eval(&x, &y) > 0.0);
+        }
+    }
+
+    #[test]
+    fn gaussian_matches_closed_form() {
+        let k = Kernel::gaussian(3.0);
+        let x = [0.0, 0.0];
+        let y = [3.0, 0.0];
+        // exp(-9 / (2*9)) = exp(-0.5)
+        assert!((k.eval(&x, &y) - (-0.5f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn laplacian_matches_closed_form() {
+        let k = Kernel::laplacian(2.0);
+        let x = [0.0];
+        let y = [4.0];
+        assert!((k.eval(&x, &y) - (-2.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phi_consistent_with_eval() {
+        // eval(x, y) == phi(||x-y||^p / sigma^p) for each profile.
+        let x = [1.0, -2.0, 0.5];
+        let y = [0.0, 1.0, 2.0];
+        let d = sq_euclidean(&x, &y).sqrt();
+        for k in [Kernel::gaussian(1.7), Kernel::laplacian(1.7),
+                  Kernel::cauchy(1.7)] {
+            let s = d.powf(k.p()) / k.sigma.powf(k.p());
+            assert!(
+                (k.eval(&x, &y) - k.phi(s)).abs() < 1e-12,
+                "{:?}", k.kind
+            );
+        }
+    }
+
+    #[test]
+    fn shadow_radius_and_gap() {
+        let k = Kernel::gaussian(30.0);
+        assert!((k.shadow_radius(4.0) - 7.5).abs() < 1e-12);
+        // Gap shrinks monotonically as ell grows.
+        let g3 = k.shadow_profile_gap(3.0);
+        let g5 = k.shadow_profile_gap(5.0);
+        assert!(g3 > g5);
+        assert!(g5 > 0.0);
+        // And vanishes in the limit.
+        assert!(k.shadow_profile_gap(1e6) < 1e-10);
+    }
+
+    #[test]
+    fn gram_sym_is_symmetric_unit_diag() {
+        use crate::prng::Pcg64;
+        let mut rng = Pcg64::new(0);
+        let mut x = Matrix::zeros(10, 4);
+        for i in 0..10 {
+            for j in 0..4 {
+                x.set(i, j, rng.normal());
+            }
+        }
+        let k = Kernel::gaussian(1.0);
+        let g = k.gram_sym(&x);
+        assert!(g.is_symmetric(1e-12));
+        for i in 0..10 {
+            assert!((g.get(i, i) - 1.0).abs() < 1e-15);
+        }
+        // Matches the asymmetric path.
+        let g2 = k.gram(&x, &x);
+        assert!(g.sub(&g2).unwrap().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_psd_via_eigh() {
+        use crate::linalg::eigh;
+        use crate::prng::Pcg64;
+        let mut rng = Pcg64::new(1);
+        let mut x = Matrix::zeros(12, 3);
+        for i in 0..12 {
+            for j in 0..3 {
+                x.set(i, j, rng.normal());
+            }
+        }
+        for k in [Kernel::gaussian(1.0), Kernel::laplacian(1.5),
+                  Kernel::cauchy(0.8)] {
+            let g = k.gram_sym(&x);
+            let e = eigh(&g).unwrap();
+            assert!(e.values.iter().all(|&v| v > -1e-9), "{:?}", k.kind);
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in [KernelKind::Gaussian, KernelKind::Laplacian,
+                     KernelKind::Cauchy] {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::parse("rbf"), Some(KernelKind::Gaussian));
+        assert_eq!(KernelKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn median_heuristic_scales_with_data() {
+        use crate::prng::Pcg64;
+        let mut rng = Pcg64::new(2);
+        let mut x = Matrix::zeros(100, 2);
+        for i in 0..100 {
+            for j in 0..2 {
+                x.set(i, j, rng.normal());
+            }
+        }
+        let s1 = median_heuristic(&x, 500, 7);
+        let x10 = x.scale(10.0);
+        let s10 = median_heuristic(&x10, 500, 7);
+        assert!((s10 / s1 - 10.0).abs() < 0.5, "s1={s1} s10={s10}");
+    }
+}

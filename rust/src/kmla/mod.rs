@@ -1,0 +1,396 @@
+//! Kernel Manifold Learning Algorithms — the §3 extension.
+//!
+//! The paper notes that methods whose integral operator has the generic
+//! form (eq. 14/15) — Laplacian eigenmaps, diffusion maps, normalized cut
+//! — admit the same reduced-set treatment as KPCA: substitute the weighted
+//! atomic measure for the empirical one and solve an m x m weighted
+//! eigenproblem.  This module implements Laplacian eigenmaps and diffusion
+//! maps in both full and reduced-set forms.
+//!
+//! Full form (n x n): normalized affinity `S = D^{-1/2} K D^{-1/2}`
+//! (eigenvectors of S give eigenmaps / diffusion coordinates).
+//! Reduced form (m x m): with the weighted measure, the affinity mass of
+//! center i is `w_i k(c_i, c_j) w_j`, so the degree is
+//! `d_i = Σ_j w_i w_j k(c_i, c_j)` and
+//! `S~ = D~^{-1/2} W K^C W D~^{-1/2}` — Algorithm 1's pattern applied to
+//! eq. (15).
+
+use crate::density::ReducedSet;
+use crate::error::{Error, Result};
+use crate::kernel::Kernel;
+use crate::linalg::{eigh, Matrix};
+
+/// A fitted manifold embedding (train-set coordinates).
+#[derive(Clone, Debug)]
+pub struct ManifoldEmbedding {
+    /// n x r embedding coordinates (rows align with the input).
+    pub coords: Matrix,
+    /// The eigenvalues used (descending, first trivial one dropped).
+    pub eigenvalues: Vec<f64>,
+    pub method: String,
+}
+
+/// Shared spectral core: given an affinity matrix `k_aff` and per-node
+/// masses `mass`, eigendecompose `D^{-1/2} M K M D^{-1/2}` (M = diag(mass))
+/// and return the top eigenpairs *after* the trivial constant component.
+fn normalized_spectral(
+    k_aff: &Matrix,
+    mass: &[f64],
+    r: usize,
+    method: &str,
+    diffusion_time: Option<f64>,
+) -> Result<ManifoldEmbedding> {
+    let n = k_aff.rows();
+    if k_aff.cols() != n || mass.len() != n {
+        return Err(Error::Shape("normalized_spectral: shapes".into()));
+    }
+    // Weighted degree d_i = m_i * sum_j m_j k_ij.
+    let mut degree = vec![0.0; n];
+    for i in 0..n {
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += mass[j] * k_aff.get(i, j);
+        }
+        degree[i] = mass[i] * acc;
+        if degree[i] <= 0.0 {
+            return Err(Error::Numerical(
+                "normalized_spectral: zero degree".into(),
+            ));
+        }
+    }
+    // S = D^{-1/2} M K M D^{-1/2}: symmetric; s_i = m_i / sqrt(d_i).
+    let s_scale: Vec<f64> = (0..n)
+        .map(|i| mass[i] / degree[i].sqrt())
+        .collect();
+    let s = k_aff.scale_rows_cols(&s_scale, &s_scale)?;
+    let eig = eigh(&s)?;
+    // Drop the trivial top eigenpair (constant direction, eigenvalue 1).
+    let avail = eig.values.len().saturating_sub(1);
+    let r_eff = r.min(avail);
+    if r_eff == 0 {
+        return Err(Error::Numerical("no nontrivial eigenpairs".into()));
+    }
+    let mut coords = Matrix::zeros(n, r_eff);
+    let mut eigenvalues = Vec::with_capacity(r_eff);
+    for out_j in 0..r_eff {
+        let j = out_j + 1; // skip trivial
+        let lam = eig.values[j];
+        eigenvalues.push(lam);
+        // Eigenmap coordinate: f = D^{-1/2} v (random-walk eigenvector);
+        // diffusion maps additionally scale by lam^t.
+        let t_scale = diffusion_time.map_or(1.0, |t| lam.max(0.0).powf(t));
+        for i in 0..n {
+            coords.set(
+                i,
+                out_j,
+                t_scale * eig.vectors.get(i, j) / degree[i].sqrt(),
+            );
+        }
+    }
+    Ok(ManifoldEmbedding {
+        coords,
+        eigenvalues,
+        method: method.to_string(),
+    })
+}
+
+/// Full Laplacian eigenmaps (Belkin & Niyogi) with kernel affinities.
+pub fn laplacian_eigenmaps(x: &Matrix, kernel: &Kernel, r: usize)
+    -> Result<ManifoldEmbedding> {
+    let k = kernel.gram_sym(x);
+    let mass = vec![1.0; x.rows()];
+    normalized_spectral(&k, &mass, r, "eigenmaps", None)
+}
+
+/// Reduced-set Laplacian eigenmaps: the §3 extension over an RSDE.
+/// Embeds the m centers; out-of-sample points extend via
+/// [`nystrom_extend`].
+pub fn rs_laplacian_eigenmaps(
+    rs: &ReducedSet,
+    kernel: &Kernel,
+    r: usize,
+) -> Result<ManifoldEmbedding> {
+    let k = kernel.gram_sym(&rs.centers);
+    let n = rs.n_source as f64;
+    let mass: Vec<f64> = rs.weights.iter().map(|&w| w / n).collect();
+    normalized_spectral(&k, &mass, r, "rs-eigenmaps", None)
+}
+
+/// Full diffusion maps (Coifman & Lafon) at diffusion time `t`.
+pub fn diffusion_map(x: &Matrix, kernel: &Kernel, r: usize, t: f64)
+    -> Result<ManifoldEmbedding> {
+    let k = kernel.gram_sym(x);
+    let mass = vec![1.0; x.rows()];
+    normalized_spectral(&k, &mass, r, "diffusion", Some(t))
+}
+
+/// Reduced-set diffusion maps.
+pub fn rs_diffusion_map(
+    rs: &ReducedSet,
+    kernel: &Kernel,
+    r: usize,
+    t: f64,
+) -> Result<ManifoldEmbedding> {
+    let k = kernel.gram_sym(&rs.centers);
+    let n = rs.n_source as f64;
+    let mass: Vec<f64> = rs.weights.iter().map(|&w| w / n).collect();
+    normalized_spectral(&k, &mass, r, "rs-diffusion", Some(t))
+}
+
+/// Normalized cut (Shi–Malik) bipartition: the sign of the first
+/// nontrivial eigenvector of the normalized affinity splits the graph
+/// with (relaxed) minimal normalized cut value.  Full-data form.
+pub fn normalized_cut(x: &Matrix, kernel: &Kernel) -> Result<Vec<u32>> {
+    let emb = laplacian_eigenmaps(x, kernel, 1)?;
+    Ok((0..x.rows())
+        .map(|i| u32::from(emb.coords.get(i, 0) >= 0.0))
+        .collect())
+}
+
+/// Reduced-set normalized cut (§3's pattern): partition the m weighted
+/// centers, then label arbitrary points by their nearest-center side.
+/// Cost O(m^3 + qm) instead of O(n^3).
+pub fn rs_normalized_cut(
+    rs: &ReducedSet,
+    kernel: &Kernel,
+    y: &Matrix,
+) -> Result<Vec<u32>> {
+    let emb = rs_laplacian_eigenmaps(rs, kernel, 1)?;
+    let center_side: Vec<u32> = (0..rs.m())
+        .map(|i| u32::from(emb.coords.get(i, 0) >= 0.0))
+        .collect();
+    Ok((0..y.rows())
+        .map(|q| {
+            let row = y.row(q);
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for j in 0..rs.m() {
+                let d = crate::linalg::sq_euclidean(row, rs.centers.row(j));
+                if d < best_d {
+                    best_d = d;
+                    best = j;
+                }
+            }
+            center_side[best]
+        })
+        .collect())
+}
+
+/// Nyström out-of-sample extension for reduced manifold embeddings:
+/// extend center coordinates to arbitrary points through the kernel,
+/// `f(y) = Σ_i k(y, c_i) m_i coords_i / λ` (row-normalized).
+pub fn nystrom_extend(
+    emb: &ManifoldEmbedding,
+    rs: &ReducedSet,
+    kernel: &Kernel,
+    y: &Matrix,
+) -> Result<Matrix> {
+    let m = rs.m();
+    if emb.coords.rows() != m {
+        return Err(Error::Shape(
+            "nystrom_extend: embedding is not over the reduced set".into(),
+        ));
+    }
+    let n = rs.n_source as f64;
+    let cross = kernel.gram(y, &rs.centers); // q x m
+    let mut out = Matrix::zeros(y.rows(), emb.coords.cols());
+    for q in 0..y.rows() {
+        for j in 0..emb.coords.cols() {
+            let lam = emb.eigenvalues[j];
+            if lam.abs() < 1e-12 {
+                continue;
+            }
+            let mut acc = 0.0;
+            let mut norm = 0.0;
+            for i in 0..m {
+                let wk = (rs.weights[i] / n) * cross.get(q, i);
+                acc += wk * emb.coords.get(i, j);
+                norm += wk;
+            }
+            if norm > 1e-300 {
+                out.set(q, j, acc / (lam * norm.max(1e-300)));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gaussian_mixture_2d, swiss_roll};
+    use crate::density::{RsdeEstimator, ShadowDensity};
+
+    #[test]
+    fn eigenmaps_shapes_and_spectrum() {
+        let ds = gaussian_mixture_2d(80, 3, 0.3, 1);
+        let k = Kernel::gaussian(1.0);
+        let emb = laplacian_eigenmaps(&ds.x, &k, 3).unwrap();
+        assert_eq!(emb.coords.rows(), 80);
+        assert_eq!(emb.coords.cols(), 3);
+        // Nontrivial eigenvalues of the normalized affinity lie in (0, 1].
+        for &v in &emb.eigenvalues {
+            assert!(v <= 1.0 + 1e-9 && v > -1.0, "eigenvalue {v}");
+        }
+        // Descending.
+        for w in emb.eigenvalues.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn eigenmaps_separate_far_clusters() {
+        // Two well-separated but weakly-coupled blobs: the first
+        // nontrivial coordinate must split them almost perfectly.  (If the
+        // blobs were *fully* decoupled the top block eigenvalues would be
+        // exactly degenerate and the eigenvectors could mix arbitrarily,
+        // so keep a small nonzero inter-blob affinity.)
+        let mut rows = Vec::new();
+        let mut rng = crate::prng::Pcg64::new(3);
+        for i in 0..60 {
+            let cx = if i < 30 { -3.0 } else { 3.0 };
+            rows.push(vec![cx + 0.3 * rng.normal(), 0.3 * rng.normal()]);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs).unwrap();
+        let k = Kernel::gaussian(2.0);
+        let emb = laplacian_eigenmaps(&x, &k, 1).unwrap();
+        let left: Vec<f64> = (0..30).map(|i| emb.coords.get(i, 0)).collect();
+        let right: Vec<f64> =
+            (30..60).map(|i| emb.coords.get(i, 0)).collect();
+        let lmean = left.iter().sum::<f64>() / 30.0;
+        let rmean = right.iter().sum::<f64>() / 30.0;
+        assert!(
+            lmean.signum() != rmean.signum(),
+            "clusters not separated: {lmean} vs {rmean}"
+        );
+        let misplaced = left.iter().filter(|v| v.signum() == rmean.signum())
+            .count()
+            + right.iter().filter(|v| v.signum() == lmean.signum()).count();
+        assert!(misplaced <= 2, "{misplaced} points on wrong side");
+    }
+
+    #[test]
+    fn reduced_eigenmaps_matches_full_on_degenerate_rsde() {
+        let ds = gaussian_mixture_2d(50, 2, 0.4, 4);
+        let k = Kernel::gaussian(1.0);
+        let full = laplacian_eigenmaps(&ds.x, &k, 2).unwrap();
+        let rs = ReducedSet {
+            centers: ds.x.clone(),
+            weights: vec![1.0; 50],
+            n_source: 50,
+            assignment: Some((0..50).collect()),
+            method: "degenerate".into(),
+        };
+        let red = rs_laplacian_eigenmaps(&rs, &k, 2).unwrap();
+        for j in 0..2 {
+            assert!(
+                (full.eigenvalues[j] - red.eigenvalues[j]).abs() < 1e-9,
+                "eigenvalue {j}"
+            );
+        }
+    }
+
+    #[test]
+    fn reduced_eigenmaps_tracks_full_spectrum_via_shde() {
+        let ds = swiss_roll(400, 0.1, 5);
+        let k = Kernel::gaussian(4.0);
+        let full = laplacian_eigenmaps(&ds.x, &k, 3).unwrap();
+        let rs = ShadowDensity::new(5.0).reduce(&ds.x, &k);
+        assert!(rs.m() < 400);
+        let red = rs_laplacian_eigenmaps(&rs, &k, 3).unwrap();
+        for j in 0..3 {
+            let rel = (full.eigenvalues[j] - red.eigenvalues[j]).abs()
+                / full.eigenvalues[j].abs().max(1e-9);
+            assert!(rel < 0.15, "eigenvalue {j}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn diffusion_time_damps_small_eigenvalues() {
+        let ds = gaussian_mixture_2d(60, 3, 0.4, 6);
+        let k = Kernel::gaussian(1.0);
+        let t1 = diffusion_map(&ds.x, &k, 2, 1.0).unwrap();
+        let t4 = diffusion_map(&ds.x, &k, 2, 4.0).unwrap();
+        // Higher t shrinks coordinates tied to sub-unit eigenvalues.
+        let n1 = t1.coords.frob_norm();
+        let n4 = t4.coords.frob_norm();
+        assert!(n4 <= n1 + 1e-12, "t=4 norm {n4} > t=1 norm {n1}");
+    }
+
+    #[test]
+    fn normalized_cut_splits_two_blobs() {
+        let mut rows = Vec::new();
+        let mut rng = crate::prng::Pcg64::new(11);
+        for i in 0..80 {
+            let cx = if i < 40 { -3.0 } else { 3.0 };
+            rows.push(vec![cx + 0.3 * rng.normal(), 0.3 * rng.normal()]);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs).unwrap();
+        let k = Kernel::gaussian(2.0);
+        let cut = normalized_cut(&x, &k).unwrap();
+        // Each blob should be (almost) pure in one side.
+        let left_ones = cut[..40].iter().filter(|&&c| c == 1).count();
+        let right_ones = cut[40..].iter().filter(|&&c| c == 1).count();
+        let purity = |ones: usize| (ones.max(40 - ones)) as f64 / 40.0;
+        assert!(purity(left_ones) > 0.95, "left purity");
+        assert!(purity(right_ones) > 0.95, "right purity");
+        assert_ne!(left_ones > 20, right_ones > 20, "blobs on same side");
+    }
+
+    #[test]
+    fn reduced_cut_agrees_with_full_cut() {
+        let mut rows = Vec::new();
+        let mut rng = crate::prng::Pcg64::new(12);
+        for i in 0..200 {
+            let cx = if i < 100 { -3.0 } else { 3.0 };
+            rows.push(vec![cx + 0.3 * rng.normal(), 0.3 * rng.normal()]);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs).unwrap();
+        let k = Kernel::gaussian(2.0);
+        let full = normalized_cut(&x, &k).unwrap();
+        let rs = ShadowDensity::new(4.0).reduce(&x, &k);
+        assert!(rs.m() < 200);
+        let red = rs_normalized_cut(&rs, &k, &x).unwrap();
+        // Agreement up to global label flip.
+        let agree =
+            full.iter().zip(&red).filter(|(a, b)| a == b).count();
+        let agreement = agree.max(200 - agree) as f64 / 200.0;
+        assert!(agreement > 0.95, "agreement {agreement}");
+    }
+
+    #[test]
+    fn nystrom_extension_reproduces_centers() {
+        let ds = gaussian_mixture_2d(150, 3, 0.4, 7);
+        let k = Kernel::gaussian(1.0);
+        let rs = ShadowDensity::new(4.0).reduce(&ds.x, &k);
+        let emb = rs_laplacian_eigenmaps(&rs, &k, 2).unwrap();
+        let ext = nystrom_extend(&emb, &rs, &k, &rs.centers).unwrap();
+        // Extension at the centers correlates strongly with the embedding
+        // itself (it is a smoothed version, not exact).
+        for j in 0..2 {
+            let a: Vec<f64> = (0..rs.m()).map(|i| emb.coords.get(i, j))
+                .collect();
+            let b: Vec<f64> = (0..rs.m()).map(|i| ext.get(i, j)).collect();
+            let corr = correlation(&a, &b);
+            assert!(corr.abs() > 0.9, "coord {j} corr {corr}");
+        }
+    }
+
+    fn correlation(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().sum::<f64>() / n;
+        let mb = b.iter().sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        for i in 0..a.len() {
+            cov += (a[i] - ma) * (b[i] - mb);
+            va += (a[i] - ma) * (a[i] - ma);
+            vb += (b[i] - mb) * (b[i] - mb);
+        }
+        cov / (va.sqrt() * vb.sqrt()).max(1e-300)
+    }
+}

@@ -1,0 +1,145 @@
+//! Full KPCA (the paper's baseline) and subsampled KPCA (the cheapest,
+//! weakest baseline in Figs. 2–3).
+
+use super::{build_coeffs, EmbeddingModel};
+use crate::error::Result;
+use crate::kernel::Kernel;
+use crate::linalg::{eigh, Matrix};
+use crate::prng::Pcg64;
+
+/// Full KPCA: eigendecompose the n x n Gram matrix (paper eq. 6),
+/// `O(n^3)` training, `O(rn)` per test projection.
+///
+/// Embedding: `z_ι(y) = (√n / λ̂_ι) Σ_i k(y, x_i) φ_i^ι` — the Nyström
+/// eigenfunction extension of the empirical eigenvector, normalized in
+/// `L²(p̂_n)` (Bengio et al. 2004).
+pub fn fit_kpca(x: &Matrix, kernel: &Kernel, r: usize)
+    -> Result<EmbeddingModel> {
+    let n = x.rows();
+    let gram = kernel.gram_sym(x);
+    let eig = eigh(&gram)?;
+    let sqrt_n = (n as f64).sqrt();
+    let s = vec![1.0; n];
+    let (coeffs, eigvals) =
+        build_coeffs(&eig, r, &s, |_, lam| sqrt_n / lam)?;
+    // Operator-normalized eigenvalues: λ̂ / n.
+    let op_eigenvalues = eigvals.iter().map(|&v| v / n as f64).collect();
+    Ok(EmbeddingModel {
+        kernel: *kernel,
+        centers: x.clone(),
+        coeffs,
+        op_eigenvalues,
+        method: "kpca".into(),
+    })
+}
+
+/// Subsampled KPCA: run full KPCA on a uniform random subset of m points
+/// and ignore the rest.  Fastest to train, weakest approximation — the
+/// paper's point that *unweighted* subsampling loses the density
+/// information the eigenproblem depends on.
+pub fn fit_subsampled_kpca(
+    x: &Matrix,
+    kernel: &Kernel,
+    r: usize,
+    m: usize,
+    seed: u64,
+) -> Result<EmbeddingModel> {
+    let n = x.rows();
+    let m = m.min(n).max(1);
+    let mut rng = Pcg64::new(seed);
+    let idx = rng.sample_indices(n, m);
+    let sub = x.select_rows(&idx);
+    let mut model = fit_kpca(&sub, kernel, r)?;
+    model.method = "subsample".into();
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+
+    #[test]
+    fn training_embedding_is_orthonormal_in_l2pn() {
+        // Columns of Z/sqrt(n) must be orthonormal: (1/n) Z^T Z = I.
+        let ds = gaussian_mixture_2d(80, 3, 0.4, 1);
+        let k = Kernel::gaussian(1.0);
+        let model = fit_kpca(&ds.x, &k, 5).unwrap();
+        let z = model.transform(&ds.x);
+        let gram = z.transpose().matmul(&z).unwrap().scale(1.0 / 80.0);
+        let eye = Matrix::identity(model.r());
+        assert!(
+            gram.sub(&eye).unwrap().max_abs() < 1e-8,
+            "max dev {}",
+            gram.sub(&eye).unwrap().max_abs()
+        );
+    }
+
+    #[test]
+    fn training_embedding_equals_scaled_eigenvectors() {
+        // z(x_j) = sqrt(n) * phi_j for training points.
+        let ds = gaussian_mixture_2d(50, 2, 0.5, 2);
+        let k = Kernel::gaussian(1.0);
+        let gram = k.gram_sym(&ds.x);
+        let eig = eigh(&gram).unwrap();
+        let model = fit_kpca(&ds.x, &k, 3).unwrap();
+        let z = model.transform(&ds.x);
+        let sqrt_n = (50f64).sqrt();
+        for j in 0..3 {
+            for i in 0..50 {
+                let expect = sqrt_n * eig.vectors.get(i, j);
+                assert!(
+                    (z.get(i, j) - expect).abs() < 1e-8,
+                    "component {j}, row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn op_eigenvalues_are_gram_eigenvalues_over_n() {
+        let ds = gaussian_mixture_2d(40, 2, 0.5, 3);
+        let k = Kernel::gaussian(1.0);
+        let gram = k.gram_sym(&ds.x);
+        let eig = eigh(&gram).unwrap();
+        let model = fit_kpca(&ds.x, &k, 4).unwrap();
+        for j in 0..model.r() {
+            assert!(
+                (model.op_eigenvalues[j] - eig.values[j] / 40.0).abs()
+                    < 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn rank_clamps_to_numerically_nonzero_spectrum() {
+        // Duplicated points make the Gram rank-deficient; requesting a
+        // huge r must clamp rather than divide by ~0.
+        let mut rows = Vec::new();
+        for i in 0..30 {
+            let v = (i % 3) as f64;
+            rows.push(vec![v, -v]);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs).unwrap();
+        let k = Kernel::gaussian(1.0);
+        let model = fit_kpca(&x, &k, 25).unwrap();
+        assert!(model.r() <= 3, "r = {}", model.r());
+        assert!(model
+            .op_eigenvalues
+            .iter()
+            .all(|&v| v > super::super::EIG_FLOOR / 30.0));
+    }
+
+    #[test]
+    fn subsampled_uses_m_centers() {
+        let ds = gaussian_mixture_2d(100, 3, 0.4, 4);
+        let k = Kernel::gaussian(1.0);
+        let model = fit_subsampled_kpca(&ds.x, &k, 4, 20, 9).unwrap();
+        assert_eq!(model.n_retained(), 20);
+        assert_eq!(model.method, "subsample");
+        let z = model.transform(&ds.x);
+        assert_eq!(z.rows(), 100);
+        assert_eq!(z.cols(), model.r());
+    }
+}

@@ -1,0 +1,223 @@
+//! Incomplete Cholesky Decomposition (ICD) KPCA — the remaining
+//! training-side baseline from the paper's related work (§1, [13]).
+//!
+//! ICD (Fine & Scheinberg) greedily builds a rank-m factor `L` (n x m)
+//! with `K ≈ L Lᵀ`, choosing at each step the pivot with the largest
+//! Schur-complement diagonal — no full kernel matrix is ever formed, but
+//! (like the Nyström family) all n points are retained for projections,
+//! which is exactly the testing-cost asymmetry RSKPCA removes.
+//!
+//! KPCA from the factor: eigenpairs `(λ, u)` of the m x m matrix `LᵀL`
+//! give approximate Gram eigenpairs `λ̂ = λ`, `φ̂ = L u / √λ`, which then
+//! follow the crate's standard embedding convention.
+
+use super::{build_coeffs, EmbeddingModel, EIG_FLOOR};
+use crate::error::{Error, Result};
+use crate::kernel::Kernel;
+use crate::linalg::{eigh, Matrix};
+
+/// The pivoted incomplete Cholesky factor.
+#[derive(Clone, Debug)]
+pub struct IcdFactor {
+    /// n x m factor with K ≈ L Lᵀ.
+    pub l: Matrix,
+    /// Pivot order (data indices chosen per step).
+    pub pivots: Vec<usize>,
+    /// Residual trace when the iteration stopped.
+    pub residual_trace: f64,
+}
+
+/// Greedily factor the kernel matrix of `x` to rank at most `m_max`,
+/// stopping early when the residual trace falls below `tol`.
+pub fn icd(x: &Matrix, kernel: &Kernel, m_max: usize, tol: f64)
+    -> Result<IcdFactor> {
+    let n = x.rows();
+    if n == 0 || m_max == 0 {
+        return Err(Error::Shape("icd: empty problem".into()));
+    }
+    let m_max = m_max.min(n);
+    // Residual diagonal d_i = k(x_i, x_i) - sum_s L[i,s]^2.
+    let mut d: Vec<f64> = (0..n).map(|_| kernel.kappa()).collect();
+    let mut l = Matrix::zeros(n, m_max);
+    let mut pivots = Vec::with_capacity(m_max);
+    let mut rank = 0usize;
+    for t in 0..m_max {
+        // Largest residual diagonal is the next pivot.
+        let (piv, &dmax) = d
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let trace: f64 = d.iter().map(|v| v.max(0.0)).sum();
+        if trace <= tol || dmax <= 1e-12 {
+            break;
+        }
+        let root = dmax.sqrt();
+        let piv_row = x.row(piv).to_vec();
+        // Column t: L[i, t] = (k(x_i, x_piv) - sum_s L[i,s] L[piv,s]) / root.
+        let lpiv: Vec<f64> = (0..t).map(|s| l.get(piv, s)).collect();
+        for i in 0..n {
+            let mut v = kernel.eval(x.row(i), &piv_row);
+            let li = l.row(i);
+            for (s, &lp) in lpiv.iter().enumerate() {
+                v -= li[s] * lp;
+            }
+            let v = v / root;
+            l.set(i, t, v);
+            d[i] -= v * v;
+        }
+        d[piv] = 0.0; // exact by construction; guard drift
+        pivots.push(piv);
+        rank = t + 1;
+    }
+    if rank == 0 {
+        return Err(Error::Numerical("icd: zero-rank kernel".into()));
+    }
+    let l = l.select_cols(&(0..rank).collect::<Vec<_>>());
+    let residual_trace = d.iter().map(|v| v.max(0.0)).sum();
+    Ok(IcdFactor { l, pivots, residual_trace })
+}
+
+/// KPCA through the ICD factor: train in O(n m^2 + m^3), retain all n
+/// points for projection (the Nyström-family testing cost).
+pub fn fit_icd_kpca(
+    x: &Matrix,
+    kernel: &Kernel,
+    r: usize,
+    m_max: usize,
+    tol: f64,
+) -> Result<EmbeddingModel> {
+    let n = x.rows();
+    let factor = icd(x, kernel, m_max, tol)?;
+    let ltl = factor.l.transpose().matmul(&factor.l)?;
+    let eig = eigh(&ltl)?;
+    let avail = eig.values.iter().take_while(|&&v| v > EIG_FLOOR).count();
+    let r_eff = r.min(avail);
+    if r_eff == 0 {
+        return Err(Error::Numerical("icd: no usable spectrum".into()));
+    }
+    // φ̂ columns = L u / sqrt(λ); embedding per the standard convention.
+    let mut phi = Matrix::zeros(n, r_eff);
+    for j in 0..r_eff {
+        let u = eig.vectors.col(j);
+        let col = factor.l.matvec(&u)?;
+        let scale = 1.0 / eig.values[j].sqrt();
+        for i in 0..n {
+            phi.set(i, j, col[i] * scale);
+        }
+    }
+    let fake = crate::linalg::Eigh {
+        values: eig.values[..r_eff].to_vec(),
+        vectors: phi,
+    };
+    let sqrt_n = (n as f64).sqrt();
+    let s = vec![1.0; n];
+    let (coeffs, eigvals) =
+        build_coeffs(&fake, r_eff, &s, |_, lam| sqrt_n / lam)?;
+    Ok(EmbeddingModel {
+        kernel: *kernel,
+        centers: x.clone(),
+        coeffs,
+        op_eigenvalues: eigvals.iter().map(|&v| v / n as f64).collect(),
+        method: "icd".into(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+    use crate::kpca::fit_kpca;
+
+    #[test]
+    fn full_rank_icd_reconstructs_gram() {
+        let ds = gaussian_mixture_2d(40, 2, 0.5, 1);
+        let k = Kernel::gaussian(1.0);
+        let f = icd(&ds.x, &k, 40, 0.0).unwrap();
+        let approx = f.l.matmul_transb(&f.l).unwrap();
+        let exact = k.gram_sym(&ds.x);
+        assert!(
+            approx.sub(&exact).unwrap().max_abs() < 1e-8,
+            "max dev {}",
+            approx.sub(&exact).unwrap().max_abs()
+        );
+    }
+
+    #[test]
+    fn truncated_icd_error_bounded_by_residual_trace() {
+        let ds = gaussian_mixture_2d(80, 3, 0.3, 2);
+        let k = Kernel::gaussian(1.0);
+        let f = icd(&ds.x, &k, 15, 0.0).unwrap();
+        let approx = f.l.matmul_transb(&f.l).unwrap();
+        let exact = k.gram_sym(&ds.x);
+        // Schur-complement property: per-entry error is bounded by the
+        // residual diagonal, whose trace ICD reports.
+        let err = exact.sub(&approx).unwrap();
+        for i in 0..80 {
+            assert!(
+                err.get(i, i) >= -1e-9,
+                "residual diagonal must be nonnegative"
+            );
+        }
+        let trace_err: f64 = (0..80).map(|i| err.get(i, i)).sum();
+        assert!((trace_err - f.residual_trace).abs() < 1e-6);
+    }
+
+    #[test]
+    fn early_stop_on_low_rank_kernel() {
+        // Duplicated rows => kernel rank == number of distinct rows.
+        let mut rows = Vec::new();
+        for i in 0..60 {
+            let v = (i % 4) as f64;
+            rows.push(vec![v, 2.0 * v]);
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let x = Matrix::from_rows(&refs).unwrap();
+        let k = Kernel::gaussian(1.0);
+        let f = icd(&x, &k, 60, 1e-9).unwrap();
+        assert!(f.l.cols() <= 4, "rank {} > 4", f.l.cols());
+        assert!(f.residual_trace < 1e-6);
+    }
+
+    #[test]
+    fn icd_kpca_matches_full_kpca_spectrum() {
+        let ds = gaussian_mixture_2d(100, 3, 0.4, 3);
+        let k = Kernel::gaussian(1.0);
+        let full = fit_kpca(&ds.x, &k, 4).unwrap();
+        let icd_model = fit_icd_kpca(&ds.x, &k, 4, 60, 1e-10).unwrap();
+        for j in 0..4 {
+            let rel = (full.op_eigenvalues[j]
+                - icd_model.op_eigenvalues[j])
+                .abs()
+                / full.op_eigenvalues[j];
+            assert!(rel < 1e-6, "eigenvalue {j} rel {rel}");
+        }
+        // Embeddings agree up to sign.
+        let zf = full.transform(&ds.x);
+        let zi = icd_model.transform(&ds.x);
+        for j in 0..4 {
+            let sign = if (zf.get(0, j) - zi.get(0, j)).abs()
+                < (zf.get(0, j) + zi.get(0, j)).abs()
+            {
+                1.0
+            } else {
+                -1.0
+            };
+            for i in 0..100 {
+                assert!(
+                    (zf.get(i, j) - sign * zi.get(i, j)).abs() < 1e-5,
+                    "col {j} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn icd_retains_all_points_like_nystrom() {
+        let ds = gaussian_mixture_2d(60, 2, 0.4, 4);
+        let k = Kernel::gaussian(1.0);
+        let model = fit_icd_kpca(&ds.x, &k, 3, 20, 1e-8).unwrap();
+        assert_eq!(model.n_retained(), 60);
+        assert_eq!(model.method, "icd");
+    }
+}

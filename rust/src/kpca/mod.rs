@@ -1,0 +1,161 @@
+//! Kernel PCA, reduced-set KPCA (the paper's Algorithm 1), and the
+//! Nyström-family baselines it is evaluated against.
+//!
+//! Every variant produces the same artifact — an [`EmbeddingModel`] — so
+//! the serve path, the experiment harness and the classifier are agnostic
+//! to which algorithm trained the model:
+//!
+//! `z(y) = K(y, centers) · coeffs`,
+//!
+//! where `centers` is the **retained set** (all n training points for full
+//! KPCA / Nyström / weighted Nyström — the paper's point about their O(n)
+//! testing cost — but only the m reduced centers for RSKPCA and subsampled
+//! KPCA) and `coeffs` are scaled eigenvectors.
+//!
+//! ## Embedding convention
+//!
+//! All constructors use the *eigenfunction* convention: component ι of the
+//! embedding estimates the eigenfunction `φ_ι` of the integral operator
+//! (paper eq. 3) normalized in `L²(p̂_n)`, i.e. for full KPCA
+//! `z_ι(y) = (√n / λ̂_ι) Σ_i k(y, x_i) φ_i^ι`.  Under this convention all
+//! five methods converge to the *same* target as their approximation
+//! quality improves, which is exactly what the paper's alignment metric
+//! (§6) compares.
+
+mod full;
+mod icd;
+mod model_io;
+mod nystrom;
+mod rskpca;
+
+pub use full::{fit_kpca, fit_subsampled_kpca};
+pub use icd::{fit_icd_kpca, icd, IcdFactor};
+pub use nystrom::{fit_nystrom, fit_weighted_nystrom};
+pub use rskpca::{fit_rskpca, RskpcaModel};
+
+use crate::error::{Error, Result};
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+
+/// Numerical floor below which an eigenvalue is considered zero and its
+/// component dropped.
+pub(crate) const EIG_FLOOR: f64 = 1e-10;
+
+/// A fitted kernel-embedding model (any KPCA variant).
+#[derive(Clone, Debug)]
+pub struct EmbeddingModel {
+    /// Kernel the model was fit with.
+    pub kernel: Kernel,
+    /// Retained point set the kernel row is evaluated against at test
+    /// time: n rows for KPCA/Nyström/WNyström, m << n for RSKPCA.
+    pub centers: Matrix,
+    /// `centers.rows() x r` projection coefficients.
+    pub coeffs: Matrix,
+    /// Operator-normalized eigenvalue estimates (descending, length r) —
+    /// comparable across methods and to paper Fig. 2/3's eigenvalue error.
+    pub op_eigenvalues: Vec<f64>,
+    /// Which algorithm produced the model.
+    pub method: String,
+}
+
+impl EmbeddingModel {
+    /// Embedding rank r.
+    pub fn r(&self) -> usize {
+        self.coeffs.cols()
+    }
+
+    /// Number of retained points (the paper's testing-cost driver).
+    pub fn n_retained(&self) -> usize {
+        self.centers.rows()
+    }
+
+    /// Table 2's SPACE column: floats stored by the model.
+    pub fn storage_floats(&self) -> usize {
+        self.centers.rows() * self.centers.cols()
+            + self.coeffs.rows() * self.coeffs.cols()
+    }
+
+    /// Project a batch of rows into the embedding (native path; the PJRT
+    /// path lives in `runtime::Engine::embed`).
+    pub fn transform(&self, x: &Matrix) -> Matrix {
+        let k = self.kernel.gram(x, &self.centers);
+        k.matmul(&self.coeffs)
+            .expect("coeffs shape consistent by construction")
+    }
+
+    /// Project a single point.
+    pub fn transform_point(&self, x: &[f64]) -> Vec<f64> {
+        let krow = self.kernel.kernel_row(x, &self.centers);
+        let mut z = vec![0.0; self.r()];
+        for (i, &kv) in krow.iter().enumerate() {
+            if kv == 0.0 {
+                continue;
+            }
+            let crow = self.coeffs.row(i);
+            for (j, zj) in z.iter_mut().enumerate() {
+                *zj += kv * crow[j];
+            }
+        }
+        z
+    }
+}
+
+/// Shared tail of every constructor: given eigenpairs of some surrogate
+/// operator plus the per-center left-scaling `s_i` and per-component
+/// scaling `t_ι`, build `coeffs[i, ι] = s_i * φ_i^ι * t_ι`, dropping
+/// components with eigenvalues below [`EIG_FLOOR`].
+pub(crate) fn build_coeffs(
+    eig: &crate::linalg::Eigh,
+    r: usize,
+    s: &[f64],
+    t: impl Fn(usize, f64) -> f64,
+) -> Result<(Matrix, Vec<f64>)> {
+    let avail = eig
+        .values
+        .iter()
+        .take_while(|&&v| v > EIG_FLOOR)
+        .count();
+    let r_eff = r.min(avail);
+    if r_eff == 0 {
+        return Err(Error::Numerical(
+            "no eigenvalues above the numerical floor".into(),
+        ));
+    }
+    let n = eig.vectors.rows();
+    let mut coeffs = Matrix::zeros(n, r_eff);
+    for (idx, &lam) in eig.values.iter().take(r_eff).enumerate() {
+        let scale = t(idx, lam);
+        for i in 0..n {
+            coeffs.set(i, idx, s[i] * eig.vectors.get(i, idx) * scale);
+        }
+    }
+    Ok((coeffs, eig.values[..r_eff].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+
+    #[test]
+    fn transform_point_matches_batch() {
+        let ds = gaussian_mixture_2d(60, 3, 0.4, 1);
+        let k = Kernel::gaussian(1.0);
+        let model = fit_kpca(&ds.x, &k, 4).unwrap();
+        let z = model.transform(&ds.x);
+        for i in (0..60).step_by(17) {
+            let zp = model.transform_point(ds.x.row(i));
+            for j in 0..model.r() {
+                assert!((zp[j] - z.get(i, j)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn storage_counts_centers_and_coeffs() {
+        let ds = gaussian_mixture_2d(40, 2, 0.4, 2);
+        let k = Kernel::gaussian(1.0);
+        let model = fit_kpca(&ds.x, &k, 3).unwrap();
+        assert_eq!(model.storage_floats(), 40 * 2 + 40 * model.r());
+    }
+}

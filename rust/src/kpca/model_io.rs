@@ -1,0 +1,134 @@
+//! Model persistence: fitted [`EmbeddingModel`]s round-trip through JSON
+//! so `rskpca fit` / `rskpca serve` / `rskpca embed` compose as separate
+//! process invocations (fit once, serve forever — the RSKPCA deployment
+//! story).
+
+use std::path::Path;
+
+use super::EmbeddingModel;
+use crate::error::{Error, Result};
+use crate::kernel::{Kernel, KernelKind};
+use crate::linalg::Matrix;
+use crate::ser::{parse, Json};
+
+impl EmbeddingModel {
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("format", Json::Str("rskpca-model-v1".into()))
+            .with("method", Json::Str(self.method.clone()))
+            .with("kernel", Json::Str(self.kernel.kind.name().into()))
+            .with("sigma", Json::Num(self.kernel.sigma))
+            .with("centers_rows", Json::Num(self.centers.rows() as f64))
+            .with("centers_cols", Json::Num(self.centers.cols() as f64))
+            .with("centers", Json::from_f64_slice(self.centers.as_slice()))
+            .with("coeffs_cols", Json::Num(self.coeffs.cols() as f64))
+            .with("coeffs", Json::from_f64_slice(self.coeffs.as_slice()))
+            .with(
+                "op_eigenvalues",
+                Json::from_f64_slice(&self.op_eigenvalues),
+            )
+    }
+
+    /// Deserialize from JSON (validating shapes).
+    pub fn from_json(v: &Json) -> Result<EmbeddingModel> {
+        let format = v.req_str("format")?;
+        if format != "rskpca-model-v1" {
+            return Err(Error::Parse(format!(
+                "unsupported model format '{format}'"
+            )));
+        }
+        let kind_name = v.req_str("kernel")?;
+        let kind = KernelKind::parse(kind_name).ok_or_else(|| {
+            Error::Parse(format!("unknown kernel '{kind_name}'"))
+        })?;
+        let sigma = v.req_f64("sigma")?;
+        if sigma <= 0.0 {
+            return Err(Error::Parse("sigma must be positive".into()));
+        }
+        let rows = v.req_usize("centers_rows")?;
+        let cols = v.req_usize("centers_cols")?;
+        let centers =
+            Matrix::from_vec(rows, cols, v.req("centers")?.to_f64_vec()?)?;
+        let ccols = v.req_usize("coeffs_cols")?;
+        let coeffs =
+            Matrix::from_vec(rows, ccols, v.req("coeffs")?.to_f64_vec()?)?;
+        let op_eigenvalues = v.req("op_eigenvalues")?.to_f64_vec()?;
+        if op_eigenvalues.len() != ccols {
+            return Err(Error::Parse(
+                "eigenvalue count != coeff columns".into(),
+            ));
+        }
+        Ok(EmbeddingModel {
+            kernel: Kernel::new(kind, sigma),
+            centers,
+            coeffs,
+            op_eigenvalues,
+            method: v.req_str("method")?.to_string(),
+        })
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| Error::Io(format!("{}: {e}", path.display())))
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<EmbeddingModel> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+        EmbeddingModel::from_json(&parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+    use crate::density::{RsdeEstimator, ShadowDensity};
+    use crate::kpca::{fit_rskpca, fit_kpca};
+
+    #[test]
+    fn roundtrip_preserves_transform() {
+        let ds = gaussian_mixture_2d(100, 3, 0.4, 1);
+        let k = Kernel::gaussian(1.0);
+        let rs = ShadowDensity::new(4.0).reduce(&ds.x, &k);
+        let model = fit_rskpca(&rs, &k, 4).unwrap();
+        let back =
+            EmbeddingModel::from_json(&model.to_json()).unwrap();
+        assert_eq!(back.method, model.method);
+        assert_eq!(back.r(), model.r());
+        let z1 = model.transform(&ds.x);
+        let z2 = back.transform(&ds.x);
+        assert!(z1.sub(&z2).unwrap().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ds = gaussian_mixture_2d(40, 2, 0.4, 2);
+        let k = Kernel::laplacian(2.0);
+        let model = fit_kpca(&ds.x, &k, 3).unwrap();
+        let path = std::env::temp_dir().join("rskpca_model_test.json");
+        model.save(&path).unwrap();
+        let back = EmbeddingModel::load(&path).unwrap();
+        assert_eq!(back.kernel.kind, crate::kernel::KernelKind::Laplacian);
+        assert!((back.kernel.sigma - 2.0).abs() < 1e-12);
+        let z1 = model.transform(&ds.x);
+        let z2 = back.transform(&ds.x);
+        assert!(z1.sub(&z2).unwrap().max_abs() < 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_documents() {
+        assert!(EmbeddingModel::from_json(&parse("{}").unwrap()).is_err());
+        let bad = parse(
+            r#"{"format":"rskpca-model-v1","method":"m","kernel":"gaussian",
+                "sigma":-1,"centers_rows":0,"centers_cols":0,"centers":[],
+                "coeffs_cols":0,"coeffs":[],"op_eigenvalues":[]}"#,
+        )
+        .unwrap();
+        assert!(EmbeddingModel::from_json(&bad).is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Nyström and density-weighted Nyström KPCA — the comparison methods of
+//! the paper's evaluation (§6).
+//!
+//! Both approximate the eigenvectors of the **full** n x n Gram matrix
+//! from an m-landmark eigenproblem, then project test points through the
+//! recovered full-data eigenvectors.  That last step is the structural
+//! difference from RSKPCA the paper leans on: these methods must retain
+//! all n training points, so their per-point testing cost stays `O(rn)`
+//! (Table 2's SPACE row: `O(nr)` versus RSKPCA's `O(mr)`).
+
+use super::{build_coeffs, EmbeddingModel, EIG_FLOOR};
+use crate::density::{KMeansRsde, RsdeEstimator};
+use crate::error::{Error, Result};
+use crate::kernel::Kernel;
+use crate::linalg::{eigh, Matrix};
+use crate::prng::Pcg64;
+
+/// Plain Nyström KPCA with uniformly sampled landmarks [Drineas & Mahoney
+/// 2005; Williams & Seeger].
+///
+/// Eigenpairs of `K_mm` extend to approximate eigenvectors of `K`:
+/// `λ̂_ι = (n/m) λ_ι^m`, `φ̂^ι ∝ K_nm u^ι`; the embedding then follows the
+/// full-KPCA convention through `(λ̂, φ̂)`.
+pub fn fit_nystrom(
+    x: &Matrix,
+    kernel: &Kernel,
+    r: usize,
+    m: usize,
+    seed: u64,
+) -> Result<EmbeddingModel> {
+    let n = x.rows();
+    let m = m.min(n).max(1);
+    let mut rng = Pcg64::new(seed);
+    let idx = rng.sample_indices(n, m);
+    let landmarks = x.select_rows(&idx);
+    let kmm = kernel.gram_sym(&landmarks);
+    let eig = eigh(&kmm)?;
+    let knm = kernel.gram(x, &landmarks); // n x m
+    extend_to_full_data(
+        x,
+        kernel,
+        r,
+        &knm,
+        &eig.values,
+        &eig.vectors,
+        (n as f64) / (m as f64),
+        "nystrom",
+    )
+}
+
+/// Density-weighted Nyström KPCA [Zhang & Kwok 2010]: landmarks are
+/// k-means centroids and the landmark eigenproblem is density-weighted
+/// (`W^{1/2} K_zz W^{1/2}` with cluster-share weights), which corrects the
+/// spectrum for non-uniform sampling.  Still retains all n points for
+/// projection.
+pub fn fit_weighted_nystrom(
+    x: &Matrix,
+    kernel: &Kernel,
+    r: usize,
+    m: usize,
+    seed: u64,
+) -> Result<EmbeddingModel> {
+    let n = x.rows();
+    let m = m.min(n).max(1);
+    let rs = KMeansRsde::new(m, seed).reduce(x, kernel);
+    let w_sqrt: Vec<f64> = rs
+        .weights
+        .iter()
+        .map(|&w| (w / n as f64).sqrt())
+        .collect();
+    let kzz = kernel.gram_sym(&rs.centers);
+    let ktilde = kzz.scale_rows_cols(&w_sqrt, &w_sqrt)?;
+    let eig = eigh(&ktilde)?;
+    // Weighted extension: K_nz W^{1/2} u has the same role K_nm u plays in
+    // the plain method; λ of K~ is already operator-normalized, so the
+    // full-Gram eigenvalue estimate is λ̂ = n λ.
+    let knz = kernel.gram(x, &rs.centers);
+    let mut knz_w = knz.clone();
+    for i in 0..n {
+        let row = knz_w.row_mut(i);
+        for (j, &w) in w_sqrt.iter().enumerate() {
+            row[j] *= w;
+        }
+    }
+    extend_to_full_data(
+        x,
+        kernel,
+        r,
+        &knz_w,
+        &eig.values,
+        &eig.vectors,
+        n as f64,
+        "wnystrom",
+    )
+}
+
+/// Shared Nyström extension: given landmark eigenpairs `(λ, u)` and the
+/// (possibly weighted) cross matrix `C = K_{n,landmarks}·S`, the
+/// approximate full-Gram eigenvector is `φ̂^ι ∝ C u^ι` (normalized) with
+/// eigenvalue estimate `λ̂_ι = eig_scale · λ_ι`; the embedding coefficients
+/// then follow the full-KPCA convention `A = √n φ̂ / λ̂` over all n points.
+#[allow(clippy::too_many_arguments)]
+fn extend_to_full_data(
+    x: &Matrix,
+    kernel: &Kernel,
+    r: usize,
+    cross: &Matrix,
+    lam: &[f64],
+    u: &Matrix,
+    eig_scale: f64,
+    method: &str,
+) -> Result<EmbeddingModel> {
+    let n = x.rows();
+    let avail = lam.iter().take_while(|&&v| v > EIG_FLOOR).count();
+    let r_eff = r.min(avail);
+    if r_eff == 0 {
+        return Err(Error::Numerical(
+            "nystrom: no eigenvalues above floor".into(),
+        ));
+    }
+    // φ̂ columns: normalize C u to unit length.
+    let mut phi = Matrix::zeros(n, r_eff);
+    let mut lam_hat = Vec::with_capacity(r_eff);
+    for j in 0..r_eff {
+        let uj = u.col(j);
+        let col = cross.matvec(&uj)?;
+        let norm = col.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm <= 1e-12 {
+            return Err(Error::Numerical(
+                "nystrom: degenerate extended eigenvector".into(),
+            ));
+        }
+        for i in 0..n {
+            phi.set(i, j, col[i] / norm);
+        }
+        lam_hat.push(eig_scale * lam[j]);
+    }
+    // Embedding convention: A_{iι} = √n φ̂_i^ι / λ̂_ι.
+    let fake_eig = crate::linalg::Eigh { values: lam_hat.clone(), vectors: phi };
+    let s = vec![1.0; n];
+    let sqrt_n = (n as f64).sqrt();
+    let (coeffs, _) = build_coeffs(&fake_eig, r_eff, &s, |_, l| sqrt_n / l)?;
+    let op_eigenvalues: Vec<f64> =
+        lam_hat.iter().map(|&l| l / n as f64).collect();
+    Ok(EmbeddingModel {
+        kernel: *kernel,
+        centers: x.clone(),
+        coeffs,
+        op_eigenvalues,
+        method: method.into(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+    use crate::kpca::fit_kpca;
+
+    #[test]
+    fn nystrom_with_all_points_matches_full_kpca_eigenvalues() {
+        let ds = gaussian_mixture_2d(60, 3, 0.4, 1);
+        let k = Kernel::gaussian(1.0);
+        let full = fit_kpca(&ds.x, &k, 4).unwrap();
+        let nys = fit_nystrom(&ds.x, &k, 4, 60, 7).unwrap();
+        for j in 0..4 {
+            let rel = (full.op_eigenvalues[j] - nys.op_eigenvalues[j]).abs()
+                / full.op_eigenvalues[j];
+            assert!(rel < 1e-9, "eigenvalue {j} rel {rel}");
+        }
+        // Embeddings match up to sign.
+        let zf = full.transform(&ds.x);
+        let zn = nys.transform(&ds.x);
+        for j in 0..4 {
+            let sign = if (zf.get(0, j) - zn.get(0, j)).abs()
+                < (zf.get(0, j) + zn.get(0, j)).abs()
+            {
+                1.0
+            } else {
+                -1.0
+            };
+            for i in 0..60 {
+                assert!(
+                    (zf.get(i, j) - sign * zn.get(i, j)).abs() < 1e-6,
+                    "col {j} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nystrom_eigenvalues_approach_full_with_m() {
+        let ds = gaussian_mixture_2d(300, 3, 0.4, 2);
+        let k = Kernel::gaussian(1.0);
+        let full = fit_kpca(&ds.x, &k, 3).unwrap();
+        let err = |model: &EmbeddingModel| -> f64 {
+            (0..3)
+                .map(|j| {
+                    (full.op_eigenvalues[j] - model.op_eigenvalues[j]).abs()
+                })
+                .sum()
+        };
+        // Average a few seeds: single-draw Nyström spectra are noisy.
+        let avg_err = |m: usize| -> f64 {
+            (0..5)
+                .map(|s| {
+                    err(&fit_nystrom(&ds.x, &k, 3, m, s).unwrap())
+                })
+                .sum::<f64>()
+                / 5.0
+        };
+        let e_small = avg_err(10);
+        let e_large = avg_err(150);
+        assert!(
+            e_large < e_small,
+            "m=150 err {e_large} not < m=10 err {e_small}"
+        );
+    }
+
+    #[test]
+    fn both_nystrom_variants_retain_all_points() {
+        let ds = gaussian_mixture_2d(120, 3, 0.4, 3);
+        let k = Kernel::gaussian(1.0);
+        let nys = fit_nystrom(&ds.x, &k, 3, 20, 1).unwrap();
+        let wny = fit_weighted_nystrom(&ds.x, &k, 3, 20, 1).unwrap();
+        assert_eq!(nys.n_retained(), 120);
+        assert_eq!(wny.n_retained(), 120);
+    }
+
+    #[test]
+    fn weighted_nystrom_produces_valid_embedding() {
+        let ds = gaussian_mixture_2d(150, 3, 0.4, 4);
+        let k = Kernel::gaussian(1.0);
+        let full = fit_kpca(&ds.x, &k, 3).unwrap();
+        let wny = fit_weighted_nystrom(&ds.x, &k, 3, 30, 5).unwrap();
+        assert_eq!(wny.r(), 3);
+        // Eigenvalues in the right ballpark (same order of magnitude).
+        for j in 0..3 {
+            let ratio = wny.op_eigenvalues[j] / full.op_eigenvalues[j];
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "eigenvalue {j} ratio {ratio}"
+            );
+        }
+        // Embedding columns roughly normalized in L2(pn).
+        let z = wny.transform(&ds.x);
+        for j in 0..3 {
+            let msq: f64 =
+                (0..150).map(|i| z.get(i, j) * z.get(i, j)).sum::<f64>()
+                    / 150.0;
+            assert!((0.3..3.0).contains(&msq), "col {j} mean-sq {msq}");
+        }
+    }
+
+    #[test]
+    fn nystrom_is_deterministic_in_seed() {
+        let ds = gaussian_mixture_2d(80, 2, 0.4, 6);
+        let k = Kernel::gaussian(1.0);
+        let a = fit_nystrom(&ds.x, &k, 3, 15, 11).unwrap();
+        let b = fit_nystrom(&ds.x, &k, 3, 15, 11).unwrap();
+        assert_eq!(a.coeffs.as_slice(), b.coeffs.as_slice());
+    }
+}

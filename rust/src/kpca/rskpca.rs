@@ -1,0 +1,186 @@
+//! Reduced-Set KPCA — the paper's Algorithm 1.
+//!
+//! Given any RSDE `(C, w)` with `Σ w = n`, form the density-weighted
+//! surrogate `K~ = W K^C W` with `W = diag(√(w_i/n))` (the empirical
+//! discretization of the density-weighted kernel, paper eq. 11/13),
+//! eigendecompose the m x m matrix, and reweight to get eigenfunction
+//! estimates.  Training is `O(m^3)` after the RSDE; projection is `O(rm)`
+//! per point; the original data is **discarded**.
+//!
+//! Derivation of the reweighting: with the atomic measure
+//! `p = (1/n) Σ w_i δ_{c_i}`, eq. (12) discretizes to
+//! `K~ φ~ = λ φ~` with `K~_ij = √(w_i/n) k(c_i, c_j) √(w_j/n)`, and the
+//! eigenfunction extension of eq. (3) evaluates as
+//! `φ_ι(y) = (1/λ_ι) Σ_i √(w_i/n) k(y, c_i) φ~_i^ι`,
+//! which for the degenerate RSDE (m = n, w ≡ 1) reduces exactly to the
+//! full-KPCA embedding convention — see the tests.
+
+use super::{build_coeffs, EmbeddingModel};
+use crate::density::ReducedSet;
+use crate::error::{Error, Result};
+use crate::kernel::Kernel;
+use crate::linalg::eigh;
+
+/// Fit Algorithm 1 on a reduced set.
+pub fn fit_rskpca(rs: &ReducedSet, kernel: &Kernel, r: usize)
+    -> Result<EmbeddingModel> {
+    if !rs.check_invariants() {
+        return Err(Error::Numerical(
+            "reduced set violates weight invariants".into(),
+        ));
+    }
+    let m = rs.m();
+    let n = rs.n_source as f64;
+    // W = diag(sqrt(w_i / n)).
+    let w_sqrt: Vec<f64> =
+        rs.weights.iter().map(|&w| (w / n).sqrt()).collect();
+    // K~ = W K^C W.
+    let kc = kernel.gram_sym(&rs.centers);
+    let ktilde = kc.scale_rows_cols(&w_sqrt, &w_sqrt)?;
+    let eig = eigh(&ktilde)?;
+    // coeffs[i, ι] = sqrt(w_i/n) φ~_i^ι / λ_ι.
+    let (coeffs, op_eigenvalues) =
+        build_coeffs(&eig, r, &w_sqrt, |_, lam| 1.0 / lam)?;
+    let _ = m;
+    Ok(EmbeddingModel {
+        kernel: *kernel,
+        centers: rs.centers.clone(),
+        coeffs,
+        op_eigenvalues,
+        method: format!("rskpca[{}]", rs.method),
+    })
+}
+
+/// Ergonomic façade bundling RSDE + Algorithm 1 (the crate-level
+/// quickstart API).
+pub struct RskpcaModel;
+
+impl RskpcaModel {
+    /// Fit Algorithm 1 on an already-computed reduced set.
+    pub fn fit(rs: &ReducedSet, kernel: &Kernel, r: usize)
+        -> Result<EmbeddingModel> {
+        fit_rskpca(rs, kernel, r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+    use crate::density::{RsdeEstimator, ShadowDensity, UniformSubsample};
+    use crate::kpca::fit_kpca;
+    use crate::linalg::Matrix;
+
+    /// A degenerate reduced set: every point its own center, weight 1.
+    fn degenerate_rs(x: &Matrix) -> ReducedSet {
+        ReducedSet {
+            centers: x.clone(),
+            weights: vec![1.0; x.rows()],
+            n_source: x.rows(),
+            assignment: Some((0..x.rows()).collect()),
+            method: "degenerate".into(),
+        }
+    }
+
+    #[test]
+    fn degenerate_reduced_set_reproduces_full_kpca() {
+        let ds = gaussian_mixture_2d(60, 3, 0.4, 1);
+        let k = Kernel::gaussian(1.0);
+        let full = fit_kpca(&ds.x, &k, 4).unwrap();
+        let rs = degenerate_rs(&ds.x);
+        let reduced = fit_rskpca(&rs, &k, 4).unwrap();
+        // Same operator eigenvalues...
+        for j in 0..4 {
+            assert!(
+                (full.op_eigenvalues[j] - reduced.op_eigenvalues[j]).abs()
+                    < 1e-10,
+                "eigenvalue {j}"
+            );
+        }
+        // ...and same embeddings up to per-column sign.
+        let zf = full.transform(&ds.x);
+        let zr = reduced.transform(&ds.x);
+        for j in 0..4 {
+            let sign = if (zf.get(0, j) - zr.get(0, j)).abs()
+                < (zf.get(0, j) + zr.get(0, j)).abs()
+            {
+                1.0
+            } else {
+                -1.0
+            };
+            for i in 0..60 {
+                assert!(
+                    (zf.get(i, j) - sign * zr.get(i, j)).abs() < 1e-7,
+                    "col {j} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shde_rskpca_approximates_full_kpca_eigenvalues() {
+        let ds = gaussian_mixture_2d(300, 3, 0.4, 2);
+        let k = Kernel::gaussian(1.5);
+        let full = fit_kpca(&ds.x, &k, 5).unwrap();
+        let rs = ShadowDensity::new(6.0).reduce(&ds.x, &k);
+        assert!(rs.m() < 300, "shadow did not compress");
+        let reduced = fit_rskpca(&rs, &k, 5).unwrap();
+        for j in 0..reduced.r().min(5) {
+            let rel = (full.op_eigenvalues[j] - reduced.op_eigenvalues[j])
+                .abs()
+                / full.op_eigenvalues[j];
+            assert!(rel < 0.1, "eigenvalue {j} rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn weighting_matters_versus_uniform() {
+        // RSKPCA on a *weighted* quantization should approximate the full
+        // spectrum better than on the same centers with uniform weights.
+        let ds = gaussian_mixture_2d(400, 3, 0.35, 3);
+        let k = Kernel::gaussian(1.0);
+        let full = fit_kpca(&ds.x, &k, 3).unwrap();
+        let shadow = ShadowDensity::new(4.0).reduce(&ds.x, &k);
+        let reduced = fit_rskpca(&shadow, &k, 3).unwrap();
+        let mut uniform = shadow.clone();
+        let mu = 400.0 / shadow.m() as f64;
+        uniform.weights = vec![mu; shadow.m()];
+        let unweighted = fit_rskpca(&uniform, &k, 3).unwrap();
+        let err_w: f64 = (0..3)
+            .map(|j| {
+                (full.op_eigenvalues[j] - reduced.op_eigenvalues[j]).abs()
+            })
+            .sum();
+        let err_u: f64 = (0..3)
+            .map(|j| {
+                (full.op_eigenvalues[j] - unweighted.op_eigenvalues[j])
+                    .abs()
+            })
+            .sum();
+        assert!(
+            err_w < err_u,
+            "weighted err {err_w} not better than uniform {err_u}"
+        );
+    }
+
+    #[test]
+    fn model_discards_original_data() {
+        let ds = gaussian_mixture_2d(250, 3, 0.3, 4);
+        let k = Kernel::gaussian(1.0);
+        let rs = ShadowDensity::new(4.0).reduce(&ds.x, &k);
+        let model = fit_rskpca(&rs, &k, 4).unwrap();
+        assert_eq!(model.n_retained(), rs.m());
+        assert!(model.n_retained() < 250);
+        assert!(model.storage_floats()
+            < 250 * ds.x.cols() + 250 * model.r());
+    }
+
+    #[test]
+    fn rejects_broken_weights() {
+        let ds = gaussian_mixture_2d(50, 2, 0.4, 5);
+        let k = Kernel::gaussian(1.0);
+        let mut rs = UniformSubsample::new(10, 1).reduce(&ds.x, &k);
+        rs.weights[0] = -3.0;
+        assert!(fit_rskpca(&rs, &k, 3).is_err());
+    }
+}

@@ -1,0 +1,57 @@
+//! # rskpca — Reduced-Set Kernel Principal Component Analysis
+//!
+//! A production-grade reproduction of *"Reduced-Set Kernel Principal
+//! Components Analysis for Improving the Training and Execution Speed of
+//! Kernel Machines"* (Kingravi, Vela, Gray; SDM 2013 / stat.ML 2015).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas Gram/embed kernels (`python/compile/kernels/`),
+//! * **L2** — JAX graphs AOT-lowered to HLO text (`python/compile/`),
+//! * **L3** — this crate: every algorithm in the paper (shadow density
+//!   estimates, RSKPCA, the Nyström family, MMD bounds, KMLA extensions),
+//!   the substrates they need (dense linear algebra, PRNG, datasets,
+//!   classification), a PJRT runtime that executes the AOT artifacts, and a
+//!   threaded embedding service with dynamic batching.
+//!
+//! Python never runs on the request path; after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use rskpca::data::german_like;
+//! use rskpca::kernel::Kernel;
+//! use rskpca::density::ShadowDensity;
+//! use rskpca::kpca::RskpcaModel;
+//!
+//! let ds = german_like(42);
+//! let kernel = Kernel::gaussian(30.0);
+//! let rsde = ShadowDensity::new(4.0).fit(&ds.x, &kernel);
+//! let model = RskpcaModel::fit(&rsde, &kernel, 5).unwrap();
+//! let z = model.transform(&ds.x);
+//! assert_eq!(z.cols(), 5);
+//! ```
+
+pub mod align;
+pub mod bench;
+pub mod classify;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod density;
+pub mod error;
+pub mod experiments;
+pub mod kernel;
+pub mod kmla;
+pub mod kpca;
+pub mod linalg;
+pub mod metrics;
+pub mod mmd;
+pub mod prng;
+pub mod runtime;
+pub mod ser;
+pub mod testutil;
+
+pub use error::{Error, Result};

@@ -1,0 +1,493 @@
+//! Symmetric eigendecomposition (the heart of every KPCA variant here).
+//!
+//! Two independent solvers:
+//!
+//! * [`eigh`] — Householder tridiagonalization (tred2) followed by the
+//!   implicit-shift QL iteration (tql2); `O(n^3)`, the production path.
+//! * [`jacobi_eigh`] — cyclic Jacobi rotations; slower but almost
+//!   impossible to get wrong, used to cross-validate `eigh` in tests and
+//!   property tests.
+//!
+//! Both return eigenvalues in **descending** order (KPCA convention: the
+//! leading components come first) with eigenvectors as matrix columns.
+
+use super::Matrix;
+use crate::error::{Error, Result};
+
+/// Result of a symmetric eigendecomposition.
+#[derive(Clone, Debug)]
+pub struct Eigh {
+    /// Eigenvalues, descending.
+    pub values: Vec<f64>,
+    /// Eigenvectors as columns, `vectors.col(i)` pairs with `values[i]`.
+    pub vectors: Matrix,
+}
+
+impl Eigh {
+    /// Keep only the leading `k` eigenpairs.
+    pub fn truncate(&self, k: usize) -> Eigh {
+        let k = k.min(self.values.len());
+        Eigh {
+            values: self.values[..k].to_vec(),
+            vectors: self.vectors.select_cols(&(0..k).collect::<Vec<_>>()),
+        }
+    }
+}
+
+/// Householder tridiagonalization with accumulation of the orthogonal
+/// transform (EISPACK `tred2`).  On return `z` holds Q, `d` the diagonal
+/// and `e` the subdiagonal (in `e[1..]`).
+fn tred2(z: &mut Vec<Vec<f64>>, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let scale: f64 =
+                (0..=l).map(|k| z[i][k].abs()).sum();
+            if scale == 0.0 {
+                e[i] = z[i][l];
+            } else {
+                for k in 0..=l {
+                    z[i][k] /= scale;
+                    h += z[i][k] * z[i][k];
+                }
+                let mut f = z[i][l];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[i][l] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[j][i] = z[i][j] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[j][k] * z[i][k];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[k][j] * z[i][k];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[i][j];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[i][j];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        z[j][k] -= f * e[k] + g * z[i][k];
+                    }
+                }
+            }
+        } else {
+            e[i] = z[i][l];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    // Accumulate the Householder transforms.  Rewritten from the textbook
+    // j-outer form into two row-contiguous passes (a vector-matrix product
+    // followed by a rank-1 update) — the j-outer form strides down columns
+    // and dominated the profile (see EXPERIMENTS.md §Perf).
+    let mut g_buf = vec![0.0f64; n];
+    for i in 0..n {
+        if d[i] != 0.0 {
+            let gs = &mut g_buf[..i];
+            gs.iter_mut().for_each(|g| *g = 0.0);
+            // g_j = sum_k z[i][k] * z[k][j]  (row-major friendly).
+            for k in 0..i {
+                let zik = z[i][k];
+                if zik == 0.0 {
+                    continue;
+                }
+                let zk = &z[k][..i];
+                for (g, &v) in gs.iter_mut().zip(zk) {
+                    *g += zik * v;
+                }
+            }
+            // z[k][j] -= g_j * z[k][i]  (rank-1 update, row-contiguous).
+            for k in 0..i {
+                let zki = z[k][i];
+                if zki == 0.0 {
+                    continue;
+                }
+                let zk = &mut z[k][..i];
+                for (v, &g) in zk.iter_mut().zip(gs.iter()) {
+                    *v -= g * zki;
+                }
+            }
+        }
+        d[i] = z[i][i];
+        z[i][i] = 1.0;
+        for j in 0..i {
+            z[j][i] = 0.0;
+            z[i][j] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL iteration on a symmetric tridiagonal matrix with
+/// eigenvector accumulation (EISPACK `tql2`).
+///
+/// `zt` holds the eigenvector matrix **transposed** (`zt[c][r]` = row r of
+/// column c): every Givens rotation then updates two *contiguous* arrays
+/// instead of striding down two matrix columns — the single biggest perf
+/// lever in the solver (see EXPERIMENTS.md §Perf).
+fn tql2(zt: &mut [Vec<f64>], d: &mut [f64], e: &mut [f64]) -> Result<()> {
+    let n = d.len();
+    if n == 0 {
+        return Ok(());
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    // Absolute deflation floor: rounding noise from the rotations keeps
+    // subdiagonals at ~eps * ||A|| even once converged, so a purely
+    // relative test (eps * local dd) stalls on clusters of eigenvalues
+    // near zero (e.g. Gram matrices of near-duplicate points).  Couplings
+    // below eps * ||A|| are numerically zero at the matrix scale.
+    let anorm = d
+        .iter()
+        .zip(e.iter())
+        .map(|(a, b)| a.abs() + b.abs())
+        .fold(0.0f64, f64::max);
+    let floor = f64::EPSILON * anorm;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Locate a negligible subdiagonal element.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd + floor {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 64 {
+                return Err(Error::Numerical(format!(
+                    "tql2: eigenvalue {l} failed to converge in 64 sweeps"
+                )));
+            }
+            // Form the implicit shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // Recover from underflow by deflating.
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Rotate eigenvector columns i and i+1 — contiguous rows
+                // of the transposed store.
+                let (left, right) = zt.split_at_mut(i + 1);
+                let zi = left[i].as_mut_slice();
+                let zi1 = right[0].as_mut_slice();
+                for (a, b2) in zi.iter_mut().zip(zi1.iter_mut()) {
+                    f = *b2;
+                    *b2 = s * *a + c * f;
+                    *a = c * *a - s * f;
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Full symmetric eigendecomposition, eigenvalues descending.
+///
+/// `a` must be square and symmetric to within `1e-8 * max|a|`; symmetry is
+/// enforced by averaging so callers can pass matrices with f32-roundtrip
+/// asymmetry.
+pub fn eigh(a: &Matrix) -> Result<Eigh> {
+    let n = a.rows();
+    if n != a.cols() {
+        return Err(Error::Shape(format!(
+            "eigh: matrix is {}x{}",
+            a.rows(),
+            a.cols()
+        )));
+    }
+    let tol = 1e-8 * a.max_abs().max(1.0);
+    if !a.is_symmetric(tol) {
+        return Err(Error::Numerical(
+            "eigh: matrix is not symmetric".into(),
+        ));
+    }
+    if n == 0 {
+        return Ok(Eigh { values: vec![], vectors: Matrix::zeros(0, 0) });
+    }
+    // Work in a Vec<Vec> for the index-heavy Householder sweeps; symmetrize.
+    let mut z: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..n).map(|j| 0.5 * (a.get(i, j) + a.get(j, i))).collect())
+        .collect();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(&mut z, &mut d, &mut e);
+    // Hand tql2 the transposed eigenvector store (columns as rows) so its
+    // Givens rotations run over contiguous memory.
+    let mut zt: Vec<Vec<f64>> = (0..n)
+        .map(|c| (0..n).map(|r| z[r][c]).collect())
+        .collect();
+    drop(z);
+    tql2(&mut zt, &mut d, &mut e)?;
+
+    // Sort descending, permuting eigenvector columns along.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (col, &src) in order.iter().enumerate() {
+        for row in 0..n {
+            vectors.set(row, col, zt[src][row]);
+        }
+    }
+    Ok(Eigh { values, vectors })
+}
+
+/// Cyclic Jacobi eigendecomposition — the slow, bulletproof cross-check.
+pub fn jacobi_eigh(a: &Matrix) -> Result<Eigh> {
+    let n = a.rows();
+    if n != a.cols() {
+        return Err(Error::Shape(format!(
+            "jacobi_eigh: matrix is {}x{}",
+            a.rows(),
+            a.cols()
+        )));
+    }
+    let mut m: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..n).map(|j| 0.5 * (a.get(i, j) + a.get(j, i))).collect())
+        .collect();
+    let mut v: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..n).map(|j| if i == j { 1.0 } else { 0.0 }).collect())
+        .collect();
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i][j] * m[i][j];
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + a.max_abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p][q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let theta = (m[q][q] - m[p][p]) / (2.0 * apq);
+                let t = theta.signum()
+                    / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let mkp = m[k][p];
+                    let mkq = m[k][q];
+                    m[k][p] = c * mkp - s * mkq;
+                    m[k][q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p][k];
+                    let mqk = m[q][k];
+                    m[p][k] = c * mpk - s * mqk;
+                    m[q][k] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k][p];
+                    let vkq = v[k][q];
+                    v[k][p] = c * vkp - s * vkq;
+                    v[k][q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m[j][j].partial_cmp(&m[i][i]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| m[i][i]).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (col, &src) in order.iter().enumerate() {
+        for row in 0..n {
+            vectors.set(row, col, v[row][src]);
+        }
+    }
+    Ok(Eigh { values, vectors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    fn random_symmetric(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        a
+    }
+
+    fn check_decomposition(a: &Matrix, eig: &Eigh, tol: f64) {
+        let n = a.rows();
+        // A v_i = lambda_i v_i
+        for i in 0..n {
+            let v = eig.vectors.col(i);
+            let av = a.matvec(&v).unwrap();
+            for r in 0..n {
+                assert!(
+                    (av[r] - eig.values[i] * v[r]).abs() < tol,
+                    "residual at eigpair {i}, row {r}"
+                );
+            }
+        }
+        // Orthonormal columns.
+        let vt_v = eig.vectors.transpose().matmul(&eig.vectors).unwrap();
+        assert!(
+            vt_v.sub(&Matrix::identity(n)).unwrap().max_abs() < tol,
+            "eigenvectors not orthonormal"
+        );
+        // Descending order.
+        for w in eig.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = Matrix::from_vec(2, 2, vec![2., 1., 1., 2.]).unwrap();
+        let e = eigh(&a).unwrap();
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Matrix::diag(&[5.0, -1.0, 3.0]);
+        let e = eigh(&a).unwrap();
+        assert_eq!(
+            e.values
+                .iter()
+                .map(|v| v.round() as i64)
+                .collect::<Vec<_>>(),
+            vec![5, 3, -1]
+        );
+        check_decomposition(&a, &e, 1e-10);
+    }
+
+    #[test]
+    fn random_matrices_satisfy_residuals() {
+        for (n, seed) in [(3usize, 1u64), (8, 2), (20, 3), (50, 4)] {
+            let a = random_symmetric(n, seed);
+            let e = eigh(&a).unwrap();
+            check_decomposition(&a, &e, 1e-8 * (n as f64));
+        }
+    }
+
+    #[test]
+    fn eigh_matches_jacobi() {
+        for seed in 10..14 {
+            let a = random_symmetric(12, seed);
+            let e1 = eigh(&a).unwrap();
+            let e2 = jacobi_eigh(&a).unwrap();
+            for (a_, b_) in e1.values.iter().zip(&e2.values) {
+                assert!((a_ - b_).abs() < 1e-9, "{a_} vs {b_}");
+            }
+        }
+    }
+
+    #[test]
+    fn trace_equals_eigenvalue_sum() {
+        let a = random_symmetric(15, 42);
+        let e = eigh(&a).unwrap();
+        let trace: f64 = (0..15).map(|i| a.get(i, i)).sum();
+        let sum: f64 = e.values.iter().sum();
+        assert!((trace - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn psd_gram_has_nonnegative_spectrum() {
+        // B^T B is PSD by construction.
+        let mut rng = Pcg64::new(9);
+        let mut b = Matrix::zeros(10, 6);
+        for i in 0..10 {
+            for j in 0..6 {
+                b.set(i, j, rng.normal());
+            }
+        }
+        let g = b.transpose().matmul(&b).unwrap();
+        let e = eigh(&g).unwrap();
+        assert!(e.values.iter().all(|&v| v > -1e-9));
+    }
+
+    #[test]
+    fn rejects_asymmetric_and_rectangular() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        assert!(eigh(&a).is_err());
+        assert!(eigh(&Matrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn truncate_keeps_leading_pairs() {
+        let a = Matrix::diag(&[4.0, 2.0, 1.0]);
+        let e = eigh(&a).unwrap().truncate(2);
+        assert_eq!(e.values.len(), 2);
+        assert_eq!(e.vectors.cols(), 2);
+        assert!((e.values[0] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn handles_degenerate_sizes() {
+        let e = eigh(&Matrix::zeros(0, 0)).unwrap();
+        assert!(e.values.is_empty());
+        let one = Matrix::from_vec(1, 1, vec![7.0]).unwrap();
+        let e = eigh(&one).unwrap();
+        assert!((e.values[0] - 7.0).abs() < 1e-15);
+        assert!((e.vectors.get(0, 0).abs() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        let a = Matrix::diag(&[2.0, 2.0, 2.0]);
+        let e = eigh(&a).unwrap();
+        for v in &e.values {
+            assert!((v - 2.0).abs() < 1e-12);
+        }
+        check_decomposition(&a, &e, 1e-10);
+    }
+}

@@ -1,0 +1,473 @@
+//! Dense linear algebra substrate (from scratch; no external crates).
+//!
+//! The paper's algorithms need: Gram-matrix construction, symmetric
+//! eigendecomposition (the heart of KPCA/RSKPCA), QR / least-squares (for
+//! embedding alignment), and blocked matrix products (for the projection
+//! paths).  Everything is `f64` internally; the PJRT boundary converts to
+//! `f32` (the artifact dtype) in `runtime/`.
+//!
+//! Layout: row-major `Vec<f64>`, which keeps the hot gram/matmul loops
+//! cache-friendly and makes zero-copy row views (`row`) possible.
+
+mod eigen;
+mod qr;
+
+pub use eigen::{eigh, jacobi_eigh, Eigh};
+pub use qr::{lstsq, solve_upper_triangular, QrFactor};
+
+use crate::error::{Error, Result};
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// rows x cols of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of order n.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Build from a flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "from_vec: {}x{} needs {} elements, got {}",
+                rows, cols, rows * cols, data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from row slices (all rows must share a length).
+    pub fn from_rows(rows: &[&[f64]]) -> Result<Self> {
+        if rows.is_empty() {
+            return Ok(Matrix::zeros(0, 0));
+        }
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != cols {
+                return Err(Error::Shape(format!(
+                    "from_rows: row {i} has {} cols, expected {cols}",
+                    r.len()
+                )));
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(Matrix { rows: rows.len(), cols, data })
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(values: &[f64]) -> Self {
+        let n = values.len();
+        let mut m = Matrix::zeros(n, n);
+        for (i, &v) in values.iter().enumerate() {
+            m.set(i, i, v);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Immutable view of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row i.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column j.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// The flat row-major buffer.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable flat buffer (used by the runtime's pad/unpad paths).
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// New matrix keeping the given rows (in order).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// New matrix keeping the given columns (in order).
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            for (c, &j) in idx.iter().enumerate() {
+                out.set(i, c, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// `self * other`, blocked over k for cache locality.
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::Shape(format!(
+                "matmul: {}x{} * {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(n, m);
+        // i-k-j loop order: streams `other` rows and the output row, both
+        // contiguous; no transpose materialization needed.
+        for i in 0..n {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * m..(i + 1) * m];
+            for (kk, &a) in a_row.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * m..(kk + 1) * m];
+                for j in 0..m {
+                    out_row[j] += a * b_row[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self * other^T` without materializing the transpose.
+    pub fn matmul_transb(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "matmul_transb: {}x{} * ({}x{})^T",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let (n, m) = (self.rows, other.rows);
+        let mut out = Matrix::zeros(n, m);
+        for i in 0..n {
+            let a = self.row(i);
+            for j in 0..m {
+                let b = other.row(j);
+                let mut acc = 0.0;
+                for t in 0..self.cols {
+                    acc += a[t] * b[t];
+                }
+                out.set(i, j, acc);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.cols {
+            return Err(Error::Shape(format!(
+                "matvec: {}x{} * len-{}",
+                self.rows, self.cols, v.len()
+            )));
+        }
+        Ok((0..self.rows)
+            .map(|i| {
+                self.row(i).iter().zip(v).map(|(a, b)| a * b).sum()
+            })
+            .collect())
+    }
+
+    /// Elementwise sum; shapes must match.
+    pub fn add(&self, other: &Matrix) -> Result<Matrix> {
+        self.zip_with(other, |a, b| a + b, "add")
+    }
+
+    /// Elementwise difference; shapes must match.
+    pub fn sub(&self, other: &Matrix) -> Result<Matrix> {
+        self.zip_with(other, |a, b| a - b, "sub")
+    }
+
+    fn zip_with(
+        &self,
+        other: &Matrix,
+        f: impl Fn(f64, f64) -> f64,
+        what: &str,
+    ) -> Result<Matrix> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "{what}: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Ok(Matrix { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// Scale every element.
+    pub fn scale(&self, s: f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v * s).collect(),
+        }
+    }
+
+    /// Apply `f` to every element.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij| — handy for tolerance checks.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |acc, &v| acc.max(v.abs()))
+    }
+
+    /// Is the matrix symmetric to within `tol`?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self.get(i, j) - self.get(j, i)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Left/right scale by diagonal vectors: `diag(l) * self * diag(r)`.
+    pub fn scale_rows_cols(&self, l: &[f64], r: &[f64]) -> Result<Matrix> {
+        if l.len() != self.rows || r.len() != self.cols {
+            return Err(Error::Shape(format!(
+                "scale_rows_cols: {}x{} with l={} r={}",
+                self.rows, self.cols, l.len(), r.len()
+            )));
+        }
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(i, j, l[i] * self.get(i, j) * r[j]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Convert to the f32 row-major buffer the PJRT artifacts consume.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Build from an f32 buffer coming back from PJRT.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "from_f32: {}x{} needs {} elements, got {}",
+                rows, cols, rows * cols, data.len()
+            )));
+        }
+        Ok(Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&v| v as f64).collect(),
+        })
+    }
+}
+
+/// Euclidean distance between two equal-length slices.
+#[inline]
+pub fn euclidean(a: &[f64], b: &[f64]) -> f64 {
+    sq_euclidean(a, b).sqrt()
+}
+
+/// Squared Euclidean distance between two equal-length slices.
+#[inline]
+pub fn sq_euclidean(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.row(0), &[1., 2., 3.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+        assert!(Matrix::from_vec(2, 2, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn matmul_matches_hand_computation() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.])
+            .unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+        assert!(a.matmul(&a).is_err());
+    }
+
+    #[test]
+    fn matmul_transb_equals_matmul_of_transpose() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Matrix::from_vec(4, 3,
+            (0..12).map(|v| v as f64).collect()).unwrap();
+        let c1 = a.matmul_transb(&b).unwrap();
+        let c2 = a.matmul(&b.transpose()).unwrap();
+        assert!(c1.sub(&c2).unwrap().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = Matrix::from_vec(3, 3,
+            (1..=9).map(|v| v as f64).collect()).unwrap();
+        let i = Matrix::identity(3);
+        assert_eq!(a.matmul(&i).unwrap(), a);
+        assert_eq!(i.matmul(&a).unwrap(), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn frobenius_norm() {
+        let a = Matrix::from_vec(2, 2, vec![3., 0., 0., 4.]).unwrap();
+        assert!(approx(a.frob_norm(), 5.0, 1e-12));
+    }
+
+    #[test]
+    fn select_rows_and_cols() {
+        let a = Matrix::from_vec(3, 3,
+            (0..9).map(|v| v as f64).collect()).unwrap();
+        let r = a.select_rows(&[2, 0]);
+        assert_eq!(r.row(0), &[6., 7., 8.]);
+        assert_eq!(r.row(1), &[0., 1., 2.]);
+        let c = a.select_cols(&[1]);
+        assert_eq!(c.col(0), vec![1., 4., 7.]);
+    }
+
+    #[test]
+    fn scale_rows_cols_matches_diag_products() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let out = a.scale_rows_cols(&[2.0, 3.0], &[5.0, 7.0]).unwrap();
+        let expect = Matrix::diag(&[2.0, 3.0])
+            .matmul(&a)
+            .unwrap()
+            .matmul(&Matrix::diag(&[5.0, 7.0]))
+            .unwrap();
+        assert!(out.sub(&expect).unwrap().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetry_check() {
+        let s = Matrix::from_vec(2, 2, vec![1., 2., 2., 5.]).unwrap();
+        assert!(s.is_symmetric(1e-12));
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 5.]).unwrap();
+        assert!(!a.is_symmetric(1e-12));
+        assert!(!Matrix::zeros(2, 3).is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let v = vec![1.0, 0.5, -1.0];
+        let got = a.matvec(&v).unwrap();
+        assert!(approx(got[0], 1.0 + 1.0 - 3.0, 1e-12));
+        assert!(approx(got[1], 4.0 + 2.5 - 6.0, 1e-12));
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let a = Matrix::from_vec(2, 2, vec![1.5, -2.25, 0.125, 3.0]).unwrap();
+        let b = Matrix::from_f32(2, 2, &a.to_f32()).unwrap();
+        assert!(a.sub(&b).unwrap().max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn distances() {
+        assert!(approx(euclidean(&[0., 0.], &[3., 4.]), 5.0, 1e-12));
+        assert!(approx(sq_euclidean(&[1., 1.], &[2., 2.]), 2.0, 1e-12));
+    }
+}

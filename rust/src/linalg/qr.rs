@@ -1,0 +1,256 @@
+//! Householder QR factorization and least squares.
+//!
+//! Used by the embedding-alignment step of the paper's evaluation protocol
+//! (`argmin_A ||O - Õ A||_F`, §6) and by the diffusion-map substrate.
+
+use super::Matrix;
+use crate::error::{Error, Result};
+
+/// Compact Householder QR of an `n x m` matrix with `n >= m`.
+///
+/// Stores the factored form (reflectors in the lower trapezoid) and exposes
+/// `q_transpose_mul` / `r()` — all a least-squares solve needs, without
+/// materializing Q.
+#[derive(Clone, Debug)]
+pub struct QrFactor {
+    /// Packed reflectors + R on and above the diagonal.
+    qr: Matrix,
+    /// Diagonal of R (kept separately; the packed diagonal holds reflector
+    /// pivots).
+    rdiag: Vec<f64>,
+}
+
+impl QrFactor {
+    /// Factor `a` (n x m, n >= m).
+    pub fn new(a: &Matrix) -> Result<Self> {
+        let (n, m) = (a.rows(), a.cols());
+        if n < m {
+            return Err(Error::Shape(format!(
+                "qr: need rows >= cols, got {n}x{m}"
+            )));
+        }
+        let mut qr = a.clone();
+        let mut rdiag = vec![0.0; m];
+        for k in 0..m {
+            // Norm of the k-th column below the diagonal.
+            let mut nrm = 0.0f64;
+            for i in k..n {
+                nrm = nrm.hypot(qr.get(i, k));
+            }
+            if nrm == 0.0 {
+                rdiag[k] = 0.0;
+                continue;
+            }
+            if qr.get(k, k) < 0.0 {
+                nrm = -nrm;
+            }
+            for i in k..n {
+                qr.set(i, k, qr.get(i, k) / nrm);
+            }
+            qr.set(k, k, qr.get(k, k) + 1.0);
+            // Apply the reflector to the remaining columns.
+            for j in (k + 1)..m {
+                let mut s = 0.0;
+                for i in k..n {
+                    s += qr.get(i, k) * qr.get(i, j);
+                }
+                s = -s / qr.get(k, k);
+                for i in k..n {
+                    qr.set(i, j, qr.get(i, j) + s * qr.get(i, k));
+                }
+            }
+            rdiag[k] = -nrm;
+        }
+        Ok(QrFactor { qr, rdiag })
+    }
+
+    /// Is R non-singular (full column rank)?
+    pub fn is_full_rank(&self) -> bool {
+        self.rdiag.iter().all(|&d| d.abs() > 1e-12)
+    }
+
+    /// The upper-triangular factor R (m x m).
+    pub fn r(&self) -> Matrix {
+        let m = self.qr.cols();
+        let mut r = Matrix::zeros(m, m);
+        for i in 0..m {
+            r.set(i, i, self.rdiag[i]);
+            for j in (i + 1)..m {
+                r.set(i, j, self.qr.get(i, j));
+            }
+        }
+        r
+    }
+
+    /// Compute `Q^T b` for each column of `b`, in place of materializing Q.
+    pub fn q_transpose_mul(&self, b: &Matrix) -> Result<Matrix> {
+        let (n, m) = (self.qr.rows(), self.qr.cols());
+        if b.rows() != n {
+            return Err(Error::Shape(format!(
+                "q_transpose_mul: b has {} rows, expected {n}",
+                b.rows()
+            )));
+        }
+        let mut out = b.clone();
+        for k in 0..m {
+            if self.qr.get(k, k) == 0.0 {
+                continue;
+            }
+            for j in 0..out.cols() {
+                let mut s = 0.0;
+                for i in k..n {
+                    s += self.qr.get(i, k) * out.get(i, j);
+                }
+                s = -s / self.qr.get(k, k);
+                for i in k..n {
+                    out.set(i, j, out.get(i, j) + s * self.qr.get(i, k));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Solve the least-squares problem `min ||a x - b||` for every column
+    /// of b, returning the m x b.cols() solution.
+    pub fn solve(&self, b: &Matrix) -> Result<Matrix> {
+        if !self.is_full_rank() {
+            return Err(Error::Numerical(
+                "qr solve: rank-deficient system".into(),
+            ));
+        }
+        let m = self.qr.cols();
+        let qtb = self.q_transpose_mul(b)?;
+        let mut x = Matrix::zeros(m, b.cols());
+        for j in 0..b.cols() {
+            for i in (0..m).rev() {
+                let mut s = qtb.get(i, j);
+                for k in (i + 1)..m {
+                    s -= self.qr.get(i, k) * x.get(k, j);
+                }
+                x.set(i, j, s / self.rdiag[i]);
+            }
+        }
+        Ok(x)
+    }
+}
+
+/// Solve `R x = b` for upper-triangular R (columns of b independently).
+pub fn solve_upper_triangular(r: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let m = r.rows();
+    if r.cols() != m || b.rows() != m {
+        return Err(Error::Shape(format!(
+            "solve_upper_triangular: R is {}x{}, b has {} rows",
+            r.rows(),
+            r.cols(),
+            b.rows()
+        )));
+    }
+    let mut x = Matrix::zeros(m, b.cols());
+    for j in 0..b.cols() {
+        for i in (0..m).rev() {
+            let d = r.get(i, i);
+            if d.abs() < 1e-300 {
+                return Err(Error::Numerical(
+                    "solve_upper_triangular: singular diagonal".into(),
+                ));
+            }
+            let mut s = b.get(i, j);
+            for k in (i + 1)..m {
+                s -= r.get(i, k) * x.get(k, j);
+            }
+            x.set(i, j, s / d);
+        }
+    }
+    Ok(x)
+}
+
+/// One-shot least squares: `argmin_x ||a x - b||_F`.
+pub fn lstsq(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    QrFactor::new(a)?.solve(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    fn random(n: usize, m: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let mut a = Matrix::zeros(n, m);
+        for i in 0..n {
+            for j in 0..m {
+                a.set(i, j, rng.normal());
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn qr_reconstructs_r_shape() {
+        let a = random(6, 3, 1);
+        let f = QrFactor::new(&a).unwrap();
+        let r = f.r();
+        assert_eq!(r.rows(), 3);
+        for i in 0..3 {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_solve_square() {
+        let a = Matrix::from_vec(2, 2, vec![2., 1., 1., 3.]).unwrap();
+        let b = Matrix::from_vec(2, 1, vec![5., 10.]).unwrap();
+        let x = lstsq(&a, &b).unwrap();
+        // 2x + y = 5, x + 3y = 10 -> x = 1, y = 3
+        assert!((x.get(0, 0) - 1.0).abs() < 1e-10);
+        assert!((x.get(1, 0) - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn least_squares_residual_is_orthogonal() {
+        let a = random(10, 4, 2);
+        let b = random(10, 2, 3);
+        let x = lstsq(&a, &b).unwrap();
+        let resid = a.matmul(&x).unwrap().sub(&b).unwrap();
+        // Normal equations: A^T (Ax - b) = 0.
+        let atr = a.transpose().matmul(&resid).unwrap();
+        assert!(atr.max_abs() < 1e-9, "max {}", atr.max_abs());
+    }
+
+    #[test]
+    fn recovers_planted_solution() {
+        let a = random(20, 5, 4);
+        let x_true = random(5, 3, 5);
+        let b = a.matmul(&x_true).unwrap();
+        let x = lstsq(&a, &b).unwrap();
+        assert!(x.sub(&x_true).unwrap().max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_underdetermined_and_rank_deficient() {
+        let a = random(3, 5, 6);
+        assert!(QrFactor::new(&a).is_err());
+        let mut sing = Matrix::zeros(4, 2);
+        for i in 0..4 {
+            sing.set(i, 0, 1.0);
+            sing.set(i, 1, 2.0); // col1 = 2*col0
+        }
+        let f = QrFactor::new(&sing).unwrap();
+        assert!(!f.is_full_rank());
+        assert!(f.solve(&Matrix::zeros(4, 1)).is_err());
+    }
+
+    #[test]
+    fn upper_triangular_solver() {
+        let r = Matrix::from_vec(3, 3,
+            vec![2., 1., 0., 0., 3., 1., 0., 0., 4.]).unwrap();
+        let b = Matrix::from_vec(3, 1, vec![5., 10., 8.]).unwrap();
+        let x = solve_upper_triangular(&r, &b).unwrap();
+        let back = r.matmul(&x).unwrap();
+        assert!(back.sub(&b).unwrap().max_abs() < 1e-12);
+        let sing = Matrix::zeros(3, 3);
+        assert!(solve_upper_triangular(&sing, &b).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! `rskpca` binary — the L3 leader entrypoint.  All logic lives in the
+//! library (`rskpca::cli`); see `rskpca help` for the command surface.
+
+fn main() {
+    rskpca::cli::run_or_exit();
+}

@@ -1,0 +1,175 @@
+//! Lightweight measurement utilities: wall-clock timers, counters, and a
+//! latency histogram with percentiles.  Used by the bench harness, the
+//! experiment drivers (speedup columns) and the embedding service's
+//! metrics endpoint.
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds elapsed since start.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    /// Microseconds elapsed since start.
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_s())
+}
+
+/// A latency histogram: records raw samples, reports percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// q-th percentile (q in [0, 100]), nearest-rank.
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = ((q / 100.0) * (self.samples.len() as f64 - 1.0))
+            .round() as usize;
+        self.samples[rank]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Summary line: "n=... mean=... p50=... p95=... p99=... max=...".
+    pub fn summary(&mut self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.3}{u} p50={:.3}{u} p95={:.3}{u} p99={:.3}{u} max={:.3}{u}",
+            self.len(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.max(),
+            u = unit,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        let mut acc = 0u64;
+        for i in 0..100_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        assert!(t.elapsed_s() >= 0.0);
+        assert!(t.elapsed_ms() >= t.elapsed_s());
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, s) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), 100);
+        assert!((h.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((h.percentile(100.0) - 100.0).abs() < 1e-12);
+        let p50 = h.percentile(50.0);
+        assert!((49.0..=52.0).contains(&p50), "p50={p50}");
+        assert!((h.mean() - 50.5).abs() < 1e-12);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 100.0);
+    }
+
+    #[test]
+    fn histogram_interleaves_records_and_queries() {
+        let mut h = Histogram::new();
+        h.record(5.0);
+        assert_eq!(h.percentile(50.0), 5.0);
+        h.record(1.0);
+        h.record(9.0);
+        assert_eq!(h.percentile(50.0), 5.0);
+        let s = h.summary("ms");
+        assert!(s.contains("n=3"));
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let mut h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

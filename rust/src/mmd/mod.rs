@@ -1,0 +1,336 @@
+//! Maximum Mean Discrepancy and the §5 error-bound calculators.
+//!
+//! Implements, for every theorem in the paper's analysis section, both the
+//! closed-form **bound** (a function of ℓ and the kernel only) and the
+//! corresponding **measured** quantity on actual data, so the
+//! `experiments::bounds` driver can verify `measured <= bound` and plot
+//! both curves against ℓ.
+
+use crate::density::ReducedSet;
+use crate::kernel::Kernel;
+use crate::linalg::{eigh, Matrix};
+use crate::error::{Error, Result};
+
+/// Biased MMD (paper eq. 20) between the empirical measure on `x` (uniform
+/// weights) and the weighted measure `(centers, weights)` with
+/// `Σ w_j = n`:
+///
+/// `MMD^2 = (1/n^2)[Σ k(x,x') + Σ w w' k(c,c') − 2 Σ w k(x,c)]`.
+pub fn mmd_weighted(
+    x: &Matrix,
+    centers: &Matrix,
+    weights: &[f64],
+    kernel: &Kernel,
+) -> f64 {
+    let n = x.rows() as f64;
+    let m = centers.rows();
+    assert_eq!(m, weights.len());
+
+    let mut xx = 0.0;
+    for i in 0..x.rows() {
+        for j in 0..x.rows() {
+            xx += kernel.eval(x.row(i), x.row(j));
+        }
+    }
+    let mut cc = 0.0;
+    for i in 0..m {
+        for j in 0..m {
+            cc += weights[i] * weights[j]
+                * kernel.eval(centers.row(i), centers.row(j));
+        }
+    }
+    let mut xc = 0.0;
+    for i in 0..x.rows() {
+        for j in 0..m {
+            xc += weights[j] * kernel.eval(x.row(i), centers.row(j));
+        }
+    }
+    ((xx + cc - 2.0 * xc) / (n * n)).max(0.0).sqrt()
+}
+
+/// MMD between the data and a [`ReducedSet`] (convenience wrapper).
+pub fn mmd_reduced_set(x: &Matrix, rs: &ReducedSet, kernel: &Kernel) -> f64 {
+    mmd_weighted(x, &rs.centers, &rs.weights, kernel)
+}
+
+/// Theorem 5.1: worst-case MMD bound
+/// `MMD(X, C~)_b <= sqrt(2 (kappa - phi(1/l^p)))`.
+pub fn thm51_mmd_bound(kernel: &Kernel, ell: f64) -> f64 {
+    (2.0 * kernel.shadow_profile_gap(ell)).max(0.0).sqrt()
+}
+
+/// Theorem 5.2: eigenvalue-difference bound
+/// `Σ_i (λ_i - λ̄_i)^2 <= 2 C_X^k (σ/l)^2`
+/// for the 1/n-normalized Gram matrices.
+pub fn thm52_eigenvalue_bound(kernel: &Kernel, ell: f64) -> f64 {
+    let eps = kernel.shadow_radius(ell);
+    2.0 * kernel.smoothness_constant() * eps * eps
+}
+
+/// Measured counterpart of Thm 5.2: `Σ_i (λ_i - λ̄_i)^2` between the
+/// 1/n-normalized Gram matrix of `x` and of the quantized dataset.
+pub fn measured_eigenvalue_diff(
+    x: &Matrix,
+    quantized: &Matrix,
+    kernel: &Kernel,
+) -> Result<f64> {
+    if x.rows() != quantized.rows() {
+        return Err(Error::Shape(format!(
+            "measured_eigenvalue_diff: {} vs {} rows",
+            x.rows(),
+            quantized.rows()
+        )));
+    }
+    let n = x.rows() as f64;
+    let k1 = kernel.gram_sym(x).scale(1.0 / n);
+    let k2 = kernel.gram_sym(quantized).scale(1.0 / n);
+    let e1 = eigh(&k1)?;
+    let e2 = eigh(&k2)?;
+    Ok(e1
+        .values
+        .iter()
+        .zip(&e2.values)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum())
+}
+
+/// Theorem 5.3: Hilbert–Schmidt operator bound
+/// `||K_n - K̄_n||_HS <= 2 kappa sqrt(2 (kappa - phi(1/l^p)))`.
+pub fn thm53_hs_bound(kernel: &Kernel, ell: f64) -> f64 {
+    2.0 * kernel.kappa() * thm51_mmd_bound(kernel, ell)
+}
+
+/// Measured counterpart of Thm 5.3 via the HS identity
+/// `<⟨·,a⟩b, ⟨·,c⟩d>_HS = ⟨a,c⟩⟨b,d⟩`:
+///
+/// `||K_n - K̄_n||_HS^2 = (1/n^2) Σ_ij [k(x_i,x_j)^2 + k(c_i,c_j)^2
+///                                       - 2 k(x_i,c_j)^2]`
+/// where `c_i = c_alpha(i)` is the quantized dataset.
+pub fn measured_hs_diff(
+    x: &Matrix,
+    quantized: &Matrix,
+    kernel: &Kernel,
+) -> Result<f64> {
+    if x.rows() != quantized.rows() {
+        return Err(Error::Shape(format!(
+            "measured_hs_diff: {} vs {} rows",
+            x.rows(),
+            quantized.rows()
+        )));
+    }
+    let n = x.rows();
+    let mut acc = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let kxx = kernel.eval(x.row(i), x.row(j));
+            let kcc = kernel.eval(quantized.row(i), quantized.row(j));
+            let kxc = kernel.eval(x.row(i), quantized.row(j));
+            acc += kxx * kxx + kcc * kcc - 2.0 * kxc * kxc;
+        }
+    }
+    Ok((acc / (n * n) as f64).max(0.0).sqrt())
+}
+
+/// Theorem 5.4: eigenspace-projection bound
+/// `||P^D(K_n) - P^D(K̄_n)||_HS <= 2 sqrt(2 kappa (kappa - phi(1/l^p))) / delta_D`
+/// where `delta_D = (λ_D - λ_{D+1}) / 2` is the spectral gap.
+pub fn thm54_projection_bound(kernel: &Kernel, ell: f64, delta_d: f64)
+    -> f64 {
+    let kappa = kernel.kappa();
+    2.0 * (2.0 * kappa * kernel.shadow_profile_gap(ell)).max(0.0).sqrt()
+        / delta_d
+}
+
+/// The spectral gap `delta_D` of the 1/n-normalized Gram matrix of `x`.
+pub fn spectral_gap(x: &Matrix, kernel: &Kernel, d: usize) -> Result<f64> {
+    let n = x.rows() as f64;
+    let k = kernel.gram_sym(x).scale(1.0 / n);
+    let e = eigh(&k)?;
+    if d >= e.values.len() {
+        return Err(Error::Shape(format!(
+            "spectral_gap: D={d} >= n={}",
+            e.values.len()
+        )));
+    }
+    Ok(0.5 * (e.values[d - 1] - e.values[d]))
+}
+
+/// Measured counterpart of Thm 5.4:
+/// `||P^D(K_n) - P^D(K̄_n)||_HS` via the H-space eigenvectors
+/// `u_ι = (1/sqrt(λ̂_ι)) Σ_i φ_i^ι ψ(x_i)`:
+///
+/// `||P_D - P̄_D||^2 = 2D - 2 Σ_{ι,ι'<=D} ⟨u_ι, ū_ι'⟩^2`,
+/// `⟨u_ι, ū_ι'⟩ = φ^ι^T K_{X,C̃} φ̄^ι' / sqrt(λ̂_ι λ̄̂_ι')`.
+pub fn measured_projection_diff(
+    x: &Matrix,
+    quantized: &Matrix,
+    kernel: &Kernel,
+    d: usize,
+) -> Result<f64> {
+    if x.rows() != quantized.rows() {
+        return Err(Error::Shape(format!(
+            "measured_projection_diff: {} vs {} rows",
+            x.rows(),
+            quantized.rows()
+        )));
+    }
+    let kx = kernel.gram_sym(x);
+    let kc = kernel.gram_sym(quantized);
+    let ex = eigh(&kx)?;
+    let ec = eigh(&kc)?;
+    if d > ex.values.len() {
+        return Err(Error::Shape(format!(
+            "measured_projection_diff: D={d} > n={}",
+            ex.values.len()
+        )));
+    }
+    let cross = kernel.gram(x, quantized); // K_{X, C~}
+    let mut sum_sq = 0.0;
+    for i in 0..d {
+        let li = ex.values[i];
+        if li <= 1e-12 {
+            continue;
+        }
+        let phi_i = ex.vectors.col(i);
+        // v = K_{X,C~}^T phi_i  (length n)
+        let v = cross.transpose().matvec(&phi_i)?;
+        for j in 0..d {
+            let lj = ec.values[j];
+            if lj <= 1e-12 {
+                continue;
+            }
+            let phi_j = ec.vectors.col(j);
+            let dot: f64 = v.iter().zip(&phi_j).map(|(a, b)| a * b).sum();
+            let inner = dot / (li * lj).sqrt();
+            sum_sq += inner * inner;
+        }
+    }
+    Ok((2.0 * d as f64 - 2.0 * sum_sq).max(0.0).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+    use crate::density::{RsdeEstimator, ShadowDensity};
+
+    fn setup(ell: f64) -> (Matrix, Matrix, ReducedSet, Kernel) {
+        let x = gaussian_mixture_2d(120, 3, 0.4, 1).x;
+        let k = Kernel::gaussian(1.0);
+        let rs = ShadowDensity::new(ell).reduce(&x, &k);
+        let q = rs.quantized_dataset().unwrap();
+        (x, q, rs, k)
+    }
+
+    #[test]
+    fn mmd_of_identical_sets_is_zero() {
+        let x = gaussian_mixture_2d(50, 2, 0.5, 2).x;
+        let k = Kernel::gaussian(1.0);
+        let w = vec![1.0; 50];
+        let v = mmd_weighted(&x, &x, &w, &k);
+        assert!(v < 1e-7, "mmd {v}");
+    }
+
+    #[test]
+    fn mmd_positive_for_different_sets() {
+        let x = gaussian_mixture_2d(50, 2, 0.5, 3).x;
+        let y = gaussian_mixture_2d(20, 2, 0.5, 4).x.scale(3.0);
+        let k = Kernel::gaussian(1.0);
+        let w = vec![2.5; 20];
+        assert!(mmd_weighted(&x, &y, &w, &k) > 0.01);
+    }
+
+    #[test]
+    fn thm51_bound_dominates_measured_mmd() {
+        for ell in [2.0, 3.0, 4.0, 6.0] {
+            let (x, _, rs, k) = setup(ell);
+            let measured = mmd_reduced_set(&x, &rs, &k);
+            let bound = thm51_mmd_bound(&k, ell);
+            assert!(
+                measured <= bound + 1e-9,
+                "ell={ell}: measured {measured} > bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn thm52_bound_dominates_measured_eigdiff() {
+        for ell in [2.0, 4.0] {
+            let (x, q, _, k) = setup(ell);
+            let measured = measured_eigenvalue_diff(&x, &q, &k).unwrap();
+            let bound = thm52_eigenvalue_bound(&k, ell);
+            assert!(
+                measured <= bound + 1e-9,
+                "ell={ell}: measured {measured} > bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn thm53_bound_dominates_measured_hs() {
+        for ell in [2.0, 4.0] {
+            let (x, q, _, k) = setup(ell);
+            let measured = measured_hs_diff(&x, &q, &k).unwrap();
+            let bound = thm53_hs_bound(&k, ell);
+            assert!(
+                measured <= bound + 1e-9,
+                "ell={ell}: measured {measured} > bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn bounds_shrink_with_ell() {
+        let k = Kernel::gaussian(2.0);
+        for f in [thm51_mmd_bound, thm52_eigenvalue_bound, thm53_hs_bound]
+        {
+            let b3 = f(&k, 3.0);
+            let b5 = f(&k, 5.0);
+            assert!(b5 < b3, "bound did not shrink: {b3} -> {b5}");
+        }
+    }
+
+    #[test]
+    fn projection_diff_zero_for_identical_data() {
+        let x = gaussian_mixture_2d(40, 2, 0.4, 5).x;
+        let k = Kernel::gaussian(1.0);
+        let v = measured_projection_diff(&x, &x, &k, 3).unwrap();
+        assert!(v < 1e-5, "projection diff {v}");
+    }
+
+    #[test]
+    fn projection_diff_decreases_with_ell() {
+        let x = gaussian_mixture_2d(100, 3, 0.4, 6).x;
+        let k = Kernel::gaussian(1.0);
+        let mut prev = f64::INFINITY;
+        for ell in [1.0, 2.0, 4.0, 8.0] {
+            let rs = ShadowDensity::new(ell).reduce(&x, &k);
+            let q = rs.quantized_dataset().unwrap();
+            let v = measured_projection_diff(&x, &q, &k, 3).unwrap();
+            assert!(
+                v <= prev + 0.05,
+                "projection diff grew at ell={ell}: {prev} -> {v}"
+            );
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn spectral_gap_is_positive_for_structured_data() {
+        let x = gaussian_mixture_2d(80, 3, 0.3, 7).x;
+        let k = Kernel::gaussian(1.0);
+        let gap = spectral_gap(&x, &k, 3).unwrap();
+        assert!(gap > 0.0);
+    }
+
+    #[test]
+    fn mmd_decreases_with_ell_for_shde() {
+        let mut prev = f64::INFINITY;
+        for ell in [1.5, 3.0, 6.0] {
+            let (x, _, rs, k) = setup(ell);
+            let v = mmd_reduced_set(&x, &rs, &k);
+            assert!(v <= prev + 1e-6, "mmd grew at ell={ell}");
+            prev = v;
+        }
+    }
+}

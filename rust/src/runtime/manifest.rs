@@ -1,0 +1,180 @@
+//! Artifact manifest: the contract `python/compile/aot.py` writes and the
+//! PJRT backend consumes (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::ser::parse;
+
+/// One AOT artifact's metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// "gram" or "embed".
+    pub op: String,
+    /// Kernel profile name ("gaussian" | "laplacian").
+    pub kernel: String,
+    /// Fixed row bucket (queries per execution).
+    pub n: usize,
+    /// Center bucket.
+    pub m: usize,
+    /// Feature bucket.
+    pub d: usize,
+    /// Rank bucket (embed only; 0 for gram).
+    pub k: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Row bucket shared by all artifacts.
+    pub n_rows: usize,
+    /// Rank bucket shared by all embed artifacts.
+    pub k_rank: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+    /// Directory the files live in.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Io(format!(
+                "{} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Manifest::parse_with_dir(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse_with_dir(text: &str, dir: &Path) -> Result<Manifest> {
+        let root = parse(text)?;
+        let n_rows = root.req_usize("n_rows")?;
+        let k_rank = root.req_usize("k_rank")?;
+        let arts = root
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("'artifacts' not array".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            artifacts.push(ArtifactSpec {
+                name: a.req_str("name")?.to_string(),
+                op: a.req_str("op")?.to_string(),
+                kernel: a.req_str("kernel")?.to_string(),
+                n: a.req_usize("n")?,
+                m: a.req_usize("m")?,
+                d: a.req_usize("d")?,
+                k: a.req_usize("k")?,
+                file: PathBuf::from(a.req_str("file")?),
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Parse("manifest has no artifacts".into()));
+        }
+        Ok(Manifest { n_rows, k_rank, artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Pick the smallest bucket artifact covering (op, kernel, m, d).
+    pub fn pick(&self, op: &str, kernel: &str, m: usize, d: usize)
+        -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.op == op && a.kernel == kernel && a.m >= m && a.d >= d
+            })
+            .min_by_key(|a| (a.m, a.d))
+    }
+
+    /// Largest center bucket available for (op, kernel, d) — used to chunk
+    /// very wide center sets.
+    pub fn max_m(&self, op: &str, kernel: &str, d: usize) -> Option<usize> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.op == op && a.kernel == kernel && a.d >= d)
+            .map(|a| a.m)
+            .max()
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn file_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "n_rows": 256, "k_rank": 16,
+      "artifacts": [
+        {"name": "gram_gaussian_n256_m128_d32", "op": "gram",
+         "kernel": "gaussian", "n": 256, "m": 128, "d": 32, "k": 0,
+         "file": "gram_gaussian_n256_m128_d32.hlo.txt"},
+        {"name": "gram_gaussian_n256_m512_d32", "op": "gram",
+         "kernel": "gaussian", "n": 256, "m": 512, "d": 32, "k": 0,
+         "file": "gram_gaussian_n256_m512_d32.hlo.txt"},
+        {"name": "gram_gaussian_n256_m128_d256", "op": "gram",
+         "kernel": "gaussian", "n": 256, "m": 128, "d": 256, "k": 0,
+         "file": "g3.hlo.txt"},
+        {"name": "embed_gaussian_n256_m128_d32_k16", "op": "embed",
+         "kernel": "gaussian", "n": 256, "m": 128, "d": 32, "k": 16,
+         "file": "e1.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m =
+            Manifest::parse_with_dir(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.n_rows, 256);
+        assert_eq!(m.k_rank, 16);
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(
+            m.file_path(&m.artifacts[0]),
+            Path::new("/tmp/a/gram_gaussian_n256_m128_d32.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn pick_selects_smallest_covering_bucket() {
+        let m =
+            Manifest::parse_with_dir(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let s = m.pick("gram", "gaussian", 100, 24).unwrap();
+        assert_eq!(s.m, 128);
+        assert_eq!(s.d, 32);
+        let s = m.pick("gram", "gaussian", 200, 24).unwrap();
+        assert_eq!(s.m, 512);
+        // d too large for the m=512 bucket set => falls to d=256, m=128.
+        let s = m.pick("gram", "gaussian", 100, 200).unwrap();
+        assert_eq!(s.d, 256);
+        // Nothing covers m=2000.
+        assert!(m.pick("gram", "gaussian", 2000, 24).is_none());
+        // Kernel mismatch.
+        assert!(m.pick("gram", "laplacian", 10, 10).is_none());
+    }
+
+    #[test]
+    fn max_m_reports_chunk_bound() {
+        let m =
+            Manifest::parse_with_dir(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.max_m("gram", "gaussian", 32), Some(512));
+        assert_eq!(m.max_m("embed", "gaussian", 32), Some(128));
+        assert_eq!(m.max_m("gram", "cauchy", 32), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse_with_dir("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse_with_dir(
+            r#"{"n_rows":256,"k_rank":16,"artifacts":[]}"#,
+            Path::new(".")
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Execution runtime: the boundary between the rust coordinator and the
+//! AOT-compiled XLA artifacts.
+//!
+//! Two interchangeable backends implement [`GramBackend`]:
+//!
+//! * [`NativeBackend`] — pure-rust kernel evaluation (`kernel::Kernel`),
+//!   always available; the correctness oracle for the PJRT path.
+//! * [`PjrtBackend`] (in `pjrt.rs`) — loads `artifacts/*.hlo.txt` (the HLO
+//!   text lowered from the L2 JAX graphs wrapping the L1 Pallas kernels),
+//!   compiles them on the PJRT CPU client once, and executes them with
+//!   bucket padding.  Python is never involved at this point.
+//!
+//! The backend trait is deliberately `&mut self`: the PJRT backend caches
+//! compiled executables lazily, and single ownership per worker thread
+//! keeps the service design lock-free on the hot path.
+
+mod manifest;
+mod pjrt;
+
+pub use manifest::{ArtifactSpec, Manifest};
+pub use pjrt::PjrtBackend;
+
+use crate::error::Result;
+use crate::kernel::Kernel;
+use crate::linalg::Matrix;
+
+/// A compute backend for the two artifact operations.
+///
+/// Not `Send`: the PJRT client holds thread-local handles (`Rc`
+/// internally), so a backend must be *constructed on* the thread that uses
+/// it.  The coordinator takes a `BackendFactory` and builds the backend
+/// inside its worker thread.
+pub trait GramBackend {
+    /// K[i,j] = k(x_i, y_j).
+    fn gram(&mut self, x: &Matrix, y: &Matrix, kernel: &Kernel)
+        -> Result<Matrix>;
+
+    /// E = K(X, centers) · coeffs — the serve-path projection.
+    fn embed(
+        &mut self,
+        x: &Matrix,
+        centers: &Matrix,
+        coeffs: &Matrix,
+        kernel: &Kernel,
+    ) -> Result<Matrix> {
+        // Default: compose from gram (backends may fuse).
+        let k = self.gram(x, centers, kernel)?;
+        k.matmul(coeffs)
+    }
+
+    /// Backend name for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust backend.
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl GramBackend for NativeBackend {
+    fn gram(&mut self, x: &Matrix, y: &Matrix, kernel: &Kernel)
+        -> Result<Matrix> {
+        Ok(kernel.gram(x, y))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Build a backend from a config string ("native" | "pjrt").
+pub fn backend_from_name(
+    name: &str,
+    artifacts_dir: &std::path::Path,
+) -> Result<Box<dyn GramBackend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend)),
+        "pjrt" => Ok(Box::new(PjrtBackend::load(artifacts_dir)?)),
+        other => Err(crate::error::Error::Config(format!(
+            "unknown backend '{other}'"
+        ))),
+    }
+}
+
+/// A thread-portable recipe for constructing a backend; the coordinator
+/// worker invokes it on its own thread (PJRT handles are not `Send`).
+pub type BackendFactory =
+    Box<dyn FnOnce() -> Result<Box<dyn GramBackend>> + Send>;
+
+/// Factory for a named backend over an artifacts dir.
+pub fn factory_from_name(name: &str, artifacts_dir: &std::path::Path)
+    -> BackendFactory {
+    let name = name.to_string();
+    let dir = artifacts_dir.to_path_buf();
+    Box::new(move || backend_from_name(&name, &dir))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+
+    #[test]
+    fn native_gram_matches_kernel() {
+        let ds = gaussian_mixture_2d(20, 2, 0.5, 1);
+        let k = Kernel::gaussian(1.0);
+        let mut b = NativeBackend;
+        let g = b.gram(&ds.x, &ds.x, &k).unwrap();
+        let expect = k.gram(&ds.x, &ds.x);
+        assert!(g.sub(&expect).unwrap().max_abs() < 1e-12);
+        assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn default_embed_composes_gram_and_matmul() {
+        let ds = gaussian_mixture_2d(15, 2, 0.5, 2);
+        let k = Kernel::gaussian(1.0);
+        let centers = ds.x.select_rows(&[0, 3, 7]);
+        let coeffs =
+            Matrix::from_vec(3, 2, vec![1., 0., 0., 1., 0.5, -0.5])
+                .unwrap();
+        let mut b = NativeBackend;
+        let e = b.embed(&ds.x, &centers, &coeffs, &k).unwrap();
+        let expect =
+            k.gram(&ds.x, &centers).matmul(&coeffs).unwrap();
+        assert!(e.sub(&expect).unwrap().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn backend_from_name_validates() {
+        let dir = std::path::Path::new("artifacts");
+        assert!(backend_from_name("native", dir).is_ok());
+        assert!(backend_from_name("quantum", dir).is_err());
+    }
+}

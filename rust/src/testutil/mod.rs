@@ -1,0 +1,180 @@
+//! In-tree property-testing harness (proptest is unavailable offline).
+//!
+//! `prop_check(name, cases, gen, check)` runs `check` on `cases` inputs
+//! produced by `gen` from a seeded [`Pcg64`] stream.  On failure it
+//! attempts a bounded shrink (re-generating with progressively smaller
+//! `size` hints) and panics with the failing seed + debug dump, so a
+//! failure is reproducible by construction: every case's seed derives from
+//! the test name.
+
+use crate::prng::Pcg64;
+
+/// Generation context: a seeded stream plus the current size hint
+/// (shrinking lowers the hint and regenerates).
+pub struct GenCtx<'a> {
+    pub rng: &'a mut Pcg64,
+    pub size: usize,
+}
+
+impl<'a> GenCtx<'a> {
+    /// Random usize in [lo, hi], scaled into the current size budget.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size.max(1));
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, len: usize) -> Vec<f64> {
+        (0..len).map(|_| self.rng.normal()).collect()
+    }
+
+    /// Random matrix of standard normals.
+    pub fn matrix(&mut self, rows: usize, cols: usize)
+        -> crate::linalg::Matrix {
+        let mut m = crate::linalg::Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.set(i, j, self.rng.normal());
+            }
+        }
+        m
+    }
+}
+
+/// Deterministic seed from a test name (FNV-1a).
+fn seed_from_name(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run a property over `cases` generated inputs.
+///
+/// `gen` builds a case from a [`GenCtx`]; `check` returns `Err(msg)` to
+/// fail.  On failure the case is re-generated at smaller sizes to find a
+/// smaller counterexample before panicking.
+pub fn prop_check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut GenCtx) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base_seed = seed_from_name(name);
+    for case in 0..cases {
+        let case_seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::new(case_seed);
+        let mut ctx = GenCtx { rng: &mut rng, size: 32 };
+        let input = gen(&mut ctx);
+        if let Err(msg) = check(&input) {
+            // Shrink: try the same seed at smaller size hints.
+            let mut smallest: Option<(usize, T, String)> = None;
+            for &size in &[16usize, 8, 4, 2, 1] {
+                let mut rng = Pcg64::new(case_seed);
+                let mut ctx = GenCtx { rng: &mut rng, size };
+                let candidate = gen(&mut ctx);
+                if let Err(m) = check(&candidate) {
+                    smallest = Some((size, candidate, m));
+                }
+            }
+            match smallest {
+                Some((size, c, m)) => panic!(
+                    "property '{name}' failed (case {case}, seed \
+                     {case_seed:#x}, shrunk to size {size}):\n  {m}\n  \
+                     input: {c:?}"
+                ),
+                None => panic!(
+                    "property '{name}' failed (case {case}, seed \
+                     {case_seed:#x}):\n  {msg}\n  input: {input:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check(
+            "abs_nonneg",
+            64,
+            |g| g.normal(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("abs < 0".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_panics_with_context() {
+        prop_check(
+            "always_fails",
+            4,
+            |g| g.usize_in(0, 100),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<usize> = Vec::new();
+        prop_check(
+            "det",
+            8,
+            |g| g.usize_in(0, 1000),
+            |&x| {
+                first.push(x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<usize> = Vec::new();
+        prop_check(
+            "det",
+            8,
+            |g| g.usize_in(0, 1000),
+            |&x| {
+                second.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        prop_check(
+            "bounds",
+            64,
+            |g| (g.usize_in(3, 10), g.f64_in(-2.0, 2.0)),
+            |&(n, v)| {
+                if !(3..=10).contains(&n) {
+                    return Err(format!("n={n} out of range"));
+                }
+                if !(-2.0..2.0).contains(&v) {
+                    return Err(format!("v={v} out of range"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,185 @@
+//! End-to-end integration: fit -> save -> load -> serve round-trips, the
+//! experiment drivers at smoke scale, and the CLI surface.
+
+use std::path::PathBuf;
+
+use rskpca::classify::{accuracy, KnnClassifier};
+use rskpca::config::ServiceConfig;
+use rskpca::coordinator::serve;
+use rskpca::data::{train_test_split};
+use rskpca::density::{RsdeEstimator, ShadowDensity};
+use rskpca::experiments::{self, dataset_by_name, sigma_for, ExperimentCtx};
+use rskpca::kernel::Kernel;
+use rskpca::kpca::{fit_kpca, fit_rskpca, EmbeddingModel};
+use rskpca::runtime::NativeBackend;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rskpca_e2e_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn fit_save_load_serve_roundtrip() {
+    let ds = dataset_by_name("german", 0.3, 7).unwrap();
+    let (train, test) = train_test_split(&ds, 0.8, 1);
+    let kernel = Kernel::gaussian(sigma_for(&ds));
+    let rs = ShadowDensity::new(4.0).reduce(&train.x, &kernel);
+    let model = fit_rskpca(&rs, &kernel, 5).unwrap();
+    let expect = model.transform(&test.x);
+
+    // save -> load
+    let path = tmpdir("roundtrip").join("model.json");
+    model.save(&path).unwrap();
+    let loaded = EmbeddingModel::load(&path).unwrap();
+
+    // serve the loaded model
+    let svc = serve(
+        loaded,
+        Box::new(|| Ok(Box::new(NativeBackend))),
+        ServiceConfig::default(),
+    )
+    .unwrap();
+    let got = svc.handle().embed(test.x.clone()).unwrap();
+    assert!(got.sub(&expect).unwrap().max_abs() < 1e-9);
+    svc.shutdown();
+}
+
+#[test]
+fn rskpca_embeddings_classify_comparably_to_kpca() {
+    // The headline behavioural claim at small scale: RSKPCA's embedding
+    // is as useful for classification as full KPCA's while retaining a
+    // fraction of the data.
+    let ds = dataset_by_name("pendigits", 0.2, 3).unwrap();
+    let (train, test) = train_test_split(&ds, 0.85, 2);
+    let kernel = Kernel::gaussian(sigma_for(&ds));
+    let full = fit_kpca(&train.x, &kernel, 5).unwrap();
+    let rs = ShadowDensity::new(4.0).reduce(&train.x, &kernel);
+    assert!(rs.retention() < 0.9, "no compression at ell=4");
+    let reduced = fit_rskpca(&rs, &kernel, 5).unwrap();
+
+    let acc = |model: &EmbeddingModel| {
+        let zt = model.transform(&train.x);
+        let zs = model.transform(&test.x);
+        let knn = KnnClassifier::fit(zt, train.y.clone(), 3);
+        accuracy(&knn.predict(&zs), &test.y)
+    };
+    let acc_full = acc(&full);
+    let acc_red = acc(&reduced);
+    assert!(
+        acc_red >= acc_full - 0.08,
+        "rskpca acc {acc_red} much worse than kpca {acc_full}"
+    );
+}
+
+#[test]
+fn experiment_drivers_smoke_at_tiny_scale() {
+    let mut ctx = ExperimentCtx::quick();
+    ctx.out_dir = tmpdir("experiments");
+    ctx.scale = 0.05;
+    ctx.runs = 1;
+    ctx.ell_step = 2.0;
+    for exp in ["fig2", "fig4", "fig7", "table2"] {
+        experiments::run(exp, &ctx)
+            .unwrap_or_else(|e| panic!("{exp} failed: {e}"));
+    }
+    assert!(ctx
+        .out_dir
+        .join("fig2_eigenembedding_german.csv")
+        .exists());
+    assert!(ctx
+        .out_dir
+        .join("fig4_classification_usps.csv")
+        .exists());
+    assert!(ctx.out_dir.join("fig7_rsde_schemes_usps.csv").exists());
+    assert!(ctx.out_dir.join("table2_cost.csv").exists());
+    // CSVs have headers + at least one data row.
+    for f in [
+        "fig2_eigenembedding_german.csv",
+        "fig4_classification_usps.csv",
+    ] {
+        let text =
+            std::fs::read_to_string(ctx.out_dir.join(f)).unwrap();
+        assert!(text.lines().count() >= 2, "{f} empty");
+    }
+}
+
+#[test]
+fn cli_fit_and_embed_commands_compose() {
+    let dir = tmpdir("cli");
+    let cfg_path = dir.join("run.toml");
+    std::fs::write(
+        &cfg_path,
+        "[run]\ndataset = \"gmm2d\"\nell = 4.0\nrank = 3\n",
+    )
+    .unwrap();
+    let model_path = dir.join("model.json");
+    let data_path = dir.join("data.csv");
+    let emb_path = dir.join("emb.csv");
+
+    let run = |args: &[&str]| {
+        rskpca::cli::dispatch(
+            &args.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        )
+    };
+    run(&[
+        "fit",
+        "--config",
+        cfg_path.to_str().unwrap(),
+        "--model-out",
+        model_path.to_str().unwrap(),
+    ])
+    .unwrap();
+    run(&[
+        "gen",
+        "--dataset",
+        "gmm2d",
+        "--out",
+        data_path.to_str().unwrap(),
+        "--seed",
+        "3",
+    ])
+    .unwrap();
+    run(&[
+        "embed",
+        "--model",
+        model_path.to_str().unwrap(),
+        "--data",
+        data_path.to_str().unwrap(),
+        "--out",
+        emb_path.to_str().unwrap(),
+    ])
+    .unwrap();
+    let emb = std::fs::read_to_string(&emb_path).unwrap();
+    assert_eq!(emb.lines().count(), 1000);
+    // label,z0,z1,z2 per line.
+    assert_eq!(emb.lines().next().unwrap().split(',').count(), 4);
+
+    // serve command drives the loaded model end to end.
+    run(&[
+        "serve",
+        "--model",
+        model_path.to_str().unwrap(),
+        "--requests",
+        "20",
+        "--rows-per-request",
+        "4",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn cli_rejects_bad_invocations() {
+    let run = |args: &[&str]| {
+        rskpca::cli::dispatch(
+            &args.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        )
+    };
+    assert!(run(&["experiment"]).is_err()); // missing name
+    assert!(run(&["experiment", "fig99", "--quick"]).is_err());
+    assert!(run(&["fit"]).is_err()); // missing flags
+    assert!(run(&["embed", "--model", "/nope.json"]).is_err());
+    assert!(
+        run(&["experiment", "table1", "--scale", "7", "--quick"]).is_err()
+    );
+}

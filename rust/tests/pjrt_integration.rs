@@ -1,0 +1,183 @@
+//! Integration: the PJRT backend executing real AOT artifacts must agree
+//! with the native kernel path, end to end (manifest -> HLO text ->
+//! compile -> pad -> execute -> unpad).
+//!
+//! Requires `make artifacts`; tests skip (with a note) if the artifacts
+//! directory is absent so `cargo test` stays runnable in a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use rskpca::data::gaussian_mixture_2d;
+use rskpca::kernel::Kernel;
+use rskpca::kpca::fit_kpca;
+use rskpca::linalg::Matrix;
+use rskpca::prng::Pcg64;
+use rskpca::runtime::{GramBackend, NativeBackend, PjrtBackend};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed);
+    let mut m = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            m.set(i, j, rng.normal());
+        }
+    }
+    m
+}
+
+fn max_rel_dev(a: &Matrix, b: &Matrix) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            let dev = (a.get(i, j) - b.get(i, j)).abs()
+                / (1.0 + a.get(i, j).abs());
+            worst = worst.max(dev);
+        }
+    }
+    worst
+}
+
+#[test]
+fn pjrt_gram_matches_native_across_buckets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut native = NativeBackend;
+    // Sweep odd shapes that exercise row chunking, m/d padding, and the
+    // d-bucket boundaries (32 / 256 / 576 lattice).
+    for (n, m, d, sigma, seed) in [
+        (10usize, 7usize, 3usize, 1.0f64, 1u64),
+        (300, 100, 24, 30.0, 2),   // german-like: row chunking + d=32
+        (64, 128, 16, 120.0, 3),   // exact m bucket
+        (33, 200, 40, 5.0, 4),     // d > 32 -> d=256 bucket
+        (20, 60, 300, 10.0, 5),    // d > 256 -> d=576 bucket
+    ] {
+        let x = random_matrix(n, d, seed);
+        let y = random_matrix(m, d, seed + 100);
+        let k = Kernel::gaussian(sigma);
+        let got = pjrt.gram(&x, &y, &k).unwrap();
+        let expect = native.gram(&x, &y, &k).unwrap();
+        assert_eq!(got.rows(), n);
+        assert_eq!(got.cols(), m);
+        let dev = max_rel_dev(&expect, &got);
+        assert!(dev < 1e-4, "gram n={n} m={m} d={d}: max rel dev {dev}");
+    }
+}
+
+#[test]
+fn pjrt_gram_laplacian_artifacts_work() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut native = NativeBackend;
+    let x = random_matrix(50, 20, 7);
+    let y = random_matrix(30, 20, 8);
+    let k = Kernel::laplacian(3.0);
+    let got = pjrt.gram(&x, &y, &k).unwrap();
+    let expect = native.gram(&x, &y, &k).unwrap();
+    let dev = max_rel_dev(&expect, &got);
+    assert!(dev < 1e-3, "laplacian max rel dev {dev}");
+}
+
+#[test]
+fn pjrt_embed_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut native = NativeBackend;
+    for (n, m, d, r, seed) in [
+        (40usize, 25usize, 6usize, 5usize, 11u64),
+        (300, 90, 24, 16, 12), // full rank bucket + row chunking
+        (10, 700, 10, 4, 13),  // centers wider than one embed bucket? no:
+                               // 700 <= 1024 bucket — padded not chunked
+    ] {
+        let x = random_matrix(n, d, seed);
+        let c = random_matrix(m, d, seed + 1);
+        let a = random_matrix(m, r, seed + 2).scale(0.3);
+        let k = Kernel::gaussian(4.0);
+        let got = pjrt.embed(&x, &c, &a, &k).unwrap();
+        let expect = native.embed(&x, &c, &a, &k).unwrap();
+        assert_eq!(got.rows(), n);
+        assert_eq!(got.cols(), r);
+        let dev = max_rel_dev(&expect, &got);
+        assert!(dev < 1e-4, "embed n={n} m={m} d={d} r={r}: dev {dev}");
+    }
+}
+
+#[test]
+fn pjrt_embed_chunks_very_wide_center_sets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut native = NativeBackend;
+    // 1500 centers > largest (1024) embed bucket -> chunk + accumulate.
+    let x = random_matrix(17, 8, 21);
+    let c = random_matrix(1500, 8, 22);
+    let a = random_matrix(1500, 3, 23).scale(0.1);
+    let k = Kernel::gaussian(2.0);
+    let got = pjrt.embed(&x, &c, &a, &k).unwrap();
+    let expect = native.embed(&x, &c, &a, &k).unwrap();
+    let dev = max_rel_dev(&expect, &got);
+    assert!(dev < 1e-3, "wide embed dev {dev}");
+    assert!(pjrt.executions > 1, "expected chunked execution");
+}
+
+#[test]
+fn pjrt_serves_a_fitted_model_through_the_coordinator() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Fit RSKPCA natively, then serve through the PJRT path and check the
+    // service output against the native transform.
+    let ds = gaussian_mixture_2d(200, 3, 0.4, 31);
+    let k = Kernel::gaussian(1.0);
+    let rs = rskpca::density::ShadowDensity::new(4.0).fit(&ds.x, &k);
+    let model = rskpca::kpca::fit_rskpca(&rs, &k, 4).unwrap();
+    let expect = model.transform(&ds.x);
+
+    let cfg = rskpca::config::ServiceConfig::default();
+    let svc = rskpca::coordinator::serve(
+        model,
+        rskpca::runtime::factory_from_name("pjrt", &dir),
+        cfg,
+    )
+    .unwrap();
+    let got = svc.handle().embed(ds.x.clone()).unwrap();
+    let dev = max_rel_dev(&expect, &got);
+    assert!(dev < 1e-4, "service dev {dev}");
+    let snap = svc.shutdown();
+    assert_eq!(snap.rows, 200);
+}
+
+#[test]
+fn pjrt_rejects_rank_beyond_bucket() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let x = random_matrix(8, 4, 41);
+    let c = random_matrix(8, 4, 42);
+    let a = random_matrix(8, 17, 43); // k bucket is 16
+    let k = Kernel::gaussian(1.0);
+    assert!(pjrt.embed(&x, &c, &a, &k).is_err());
+}
+
+#[test]
+fn full_kpca_model_served_via_pjrt_uses_gram_chunking() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Full KPCA retains all n=1200 centers (> 1024 bucket) — exercises the
+    // wide-center chunked embed path with a real model.
+    let ds = gaussian_mixture_2d(1200, 3, 0.4, 51);
+    let k = Kernel::gaussian(1.0);
+    let model = fit_kpca(&ds.x, &k, 3).unwrap();
+    let probe = ds.x.select_rows(&(0..30).collect::<Vec<_>>());
+    let expect = model.transform(&probe);
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let got = pjrt
+        .embed(&probe, &model.centers, &model.coeffs, &model.kernel)
+        .unwrap();
+    let dev = max_rel_dev(&expect, &got);
+    assert!(dev < 1e-3, "chunked full-KPCA dev {dev}");
+}

@@ -1,0 +1,366 @@
+//! Property-based invariants (in-tree harness; see `rskpca::testutil`).
+//!
+//! Covers the invariants DESIGN.md §7 calls out: shadow-set partition
+//! properties for random data/σ/ℓ, eigensolver residuals and
+//! orthonormality, RSKPCA eigenvalues within the Thm 5.2 bound, MMD within
+//! the Thm 5.1 bound, and coordinator routing/batching/state conservation
+//! under random request mixes.
+
+use rskpca::config::ServiceConfig;
+use rskpca::coordinator::EmbeddingService;
+use rskpca::density::{ReducedSet, RsdeEstimator, ShadowDensity};
+use rskpca::kernel::Kernel;
+use rskpca::kpca::{fit_kpca, fit_rskpca};
+use rskpca::linalg::{eigh, euclidean, Matrix};
+use rskpca::mmd::{mmd_reduced_set, thm51_mmd_bound};
+use rskpca::runtime::NativeBackend;
+use rskpca::testutil::prop_check;
+
+#[derive(Debug)]
+struct ShadowCase {
+    x: Matrix,
+    sigma: f64,
+    ell: f64,
+}
+
+fn shadow_case(g: &mut rskpca::testutil::GenCtx) -> ShadowCase {
+    let n = g.usize_in(5, 120);
+    let d = g.usize_in(1, 6);
+    let x = g.matrix(n, d);
+    ShadowCase {
+        x,
+        sigma: g.f64_in(0.05, 3.0),
+        ell: g.f64_in(0.5, 8.0),
+    }
+}
+
+#[test]
+fn prop_shadow_sets_partition_and_cover() {
+    prop_check("shadow_partition", 60, shadow_case, |case| {
+        let kernel = Kernel::gaussian(case.sigma);
+        let rs = ShadowDensity::new(case.ell).reduce(&case.x, &kernel);
+        if !rs.check_invariants() {
+            return Err("weight invariants violated".into());
+        }
+        let assignment = rs
+            .assignment
+            .as_ref()
+            .ok_or("shadow must record assignment")?;
+        if assignment.len() != case.x.rows() {
+            return Err("assignment not total".into());
+        }
+        let eps = kernel.shadow_radius(case.ell);
+        // Cover: every point within eps of its center.
+        for i in 0..case.x.rows() {
+            let c = rs.centers.row(assignment[i]);
+            if euclidean(case.x.row(i), c) >= eps {
+                return Err(format!("point {i} outside its shadow"));
+            }
+        }
+        // Partition: weights equal cell counts.
+        let mut counts = vec![0.0; rs.m()];
+        for &a in assignment {
+            counts[a] += 1.0;
+        }
+        if counts != rs.weights {
+            return Err("weights != cell sizes".into());
+        }
+        // Separation: centers pairwise >= eps apart.
+        for i in 0..rs.m() {
+            for j in (i + 1)..rs.m() {
+                if euclidean(rs.centers.row(i), rs.centers.row(j))
+                    < eps - 1e-12
+                {
+                    return Err(format!("centers {i},{j} too close"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eigh_residual_and_orthonormality() {
+    prop_check(
+        "eigh_residuals",
+        40,
+        |g| {
+            let n = g.usize_in(1, 24);
+            let b = g.matrix(n, n);
+            b.add(&b.transpose()).unwrap().scale(0.5)
+        },
+        |a| {
+            let n = a.rows();
+            let e = eigh(a).map_err(|e| e.to_string())?;
+            let tol = 1e-7 * (n as f64).max(1.0);
+            for i in 0..n {
+                let v = e.vectors.col(i);
+                let av = a.matvec(&v).unwrap();
+                for r in 0..n {
+                    if (av[r] - e.values[i] * v[r]).abs() > tol {
+                        return Err(format!(
+                            "residual {} at pair {i}",
+                            (av[r] - e.values[i] * v[r]).abs()
+                        ));
+                    }
+                }
+            }
+            let vtv = e.vectors.transpose().matmul(&e.vectors).unwrap();
+            let dev =
+                vtv.sub(&Matrix::identity(n)).unwrap().max_abs();
+            if dev > tol {
+                return Err(format!("not orthonormal: {dev}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_thm51_mmd_bound_holds() {
+    prop_check("thm51_bound", 40, shadow_case, |case| {
+        let kernel = Kernel::gaussian(case.sigma);
+        let rs = ShadowDensity::new(case.ell).reduce(&case.x, &kernel);
+        let measured = mmd_reduced_set(&case.x, &rs, &kernel);
+        let bound = thm51_mmd_bound(&kernel, case.ell);
+        if measured > bound + 1e-9 {
+            return Err(format!("MMD {measured} > bound {bound}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rskpca_spectrum_dominated_by_kpca_spectrum() {
+    // The weighted surrogate's spectrum must stay within the kernel's
+    // global bounds: 0 <= lambda~ <= kappa, and total mass <= kappa.
+    prop_check("rskpca_spectrum", 30, shadow_case, |case| {
+        if case.x.rows() < 4 {
+            return Ok(());
+        }
+        let kernel = Kernel::gaussian(case.sigma);
+        let rs = ShadowDensity::new(case.ell).reduce(&case.x, &kernel);
+        let model = fit_rskpca(&rs, &kernel, 3).map_err(|e| e.to_string())?;
+        let total: f64 = model.op_eigenvalues.iter().sum();
+        for &l in &model.op_eigenvalues {
+            if !(0.0..=kernel.kappa() + 1e-9).contains(&l) {
+                return Err(format!("eigenvalue {l} out of range"));
+            }
+        }
+        if total > kernel.kappa() + 1e-9 {
+            return Err(format!("trace {total} exceeds kappa"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_degenerate_rskpca_matches_kpca_eigenvalues() {
+    prop_check(
+        "degenerate_rskpca",
+        20,
+        |g| {
+            let n = g.usize_in(4, 40);
+            let d = g.usize_in(1, 4);
+            (g.matrix(n, d), g.f64_in(0.3, 2.0))
+        },
+        |(x, sigma)| {
+            let kernel = Kernel::gaussian(*sigma);
+            let full = fit_kpca(x, &kernel, 3).map_err(|e| e.to_string())?;
+            let rs = ReducedSet {
+                centers: x.clone(),
+                weights: vec![1.0; x.rows()],
+                n_source: x.rows(),
+                assignment: Some((0..x.rows()).collect()),
+                method: "degenerate".into(),
+            };
+            let red = fit_rskpca(&rs, &kernel, 3).map_err(|e| e.to_string())?;
+            for (a, b) in
+                full.op_eigenvalues.iter().zip(&red.op_eigenvalues)
+            {
+                if (a - b).abs() > 1e-8 {
+                    return Err(format!("eigenvalue mismatch {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrips_arbitrary_documents() {
+    use rskpca::ser::Json;
+    fn gen_json(g: &mut rskpca::testutil::GenCtx, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.usize_in(0, 1) == 1),
+            2 => Json::Num((g.normal() * 1e3).round() / 8.0),
+            3 => Json::Str(
+                (0..g.usize_in(0, 12))
+                    .map(|i| {
+                        // Mix in escapes and non-ascii.
+                        ['a', '"', '\\', '\n', 'ß', '7', ' '][(i
+                            + g.usize_in(0, 6))
+                            % 7]
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr(
+                (0..g.usize_in(0, 4))
+                    .map(|_| gen_json(g, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    prop_check(
+        "json_roundtrip",
+        100,
+        |g| gen_json(g, 3),
+        |doc| {
+            let text = doc.to_string();
+            let back = rskpca::ser::parse(&text)
+                .map_err(|e| format!("reparse failed: {e} for {text}"))?;
+            if &back != doc {
+                return Err(format!("roundtrip mismatch: {text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_toml_parser_never_panics() {
+    // Fuzz-ish: arbitrary line soup must parse or error, never panic.
+    prop_check(
+        "toml_no_panic",
+        120,
+        |g| {
+            let tokens = [
+                "[sec]", "[', '", "a = 1", "b = \"x\"", "c = [1, 2]",
+                "= 3", "weird", "# comment", "d = true", "e = [",
+                "f = \"unterminated", "[s2]", "g = 1e300", "h = -0.5",
+            ];
+            (0..g.usize_in(0, 10))
+                .map(|_| tokens[g.usize_in(0, tokens.len() - 1)])
+                .collect::<Vec<_>>()
+                .join("\n")
+        },
+        |doc| {
+            let _ = rskpca::config::TomlDoc::parse(doc); // must not panic
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_model_json_roundtrip_preserves_transform() {
+    prop_check(
+        "model_roundtrip",
+        12,
+        |g| {
+            let n = g.usize_in(5, 40);
+            let d = g.usize_in(1, 5);
+            (g.matrix(n, d), g.f64_in(0.3, 3.0))
+        },
+        |(x, sigma)| {
+            let kernel = Kernel::gaussian(*sigma);
+            let model =
+                fit_kpca(x, &kernel, 3).map_err(|e| e.to_string())?;
+            let back = rskpca::kpca::EmbeddingModel::from_json(
+                &model.to_json(),
+            )
+            .map_err(|e| e.to_string())?;
+            let z1 = model.transform(x);
+            let z2 = back.transform(x);
+            if z1.sub(&z2).unwrap().max_abs() > 1e-9 {
+                return Err("transform changed after roundtrip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_service_conserves_rows_and_order() {
+    // Coordinator state invariant: any random mix of request sizes gets
+    // back exactly its own rows, embedded correctly, in order.
+    prop_check(
+        "service_conservation",
+        8,
+        |g| {
+            let n = g.usize_in(30, 80);
+            let x = g.matrix(n, 3);
+            let sizes: Vec<usize> = (0..g.usize_in(1, 12))
+                .map(|_| g.usize_in(1, 9))
+                .collect();
+            let max_batch = g.usize_in(1, 32);
+            (x, sizes, max_batch)
+        },
+        |(x, sizes, max_batch)| {
+            let kernel = Kernel::gaussian(1.0);
+            let model =
+                fit_kpca(x, &kernel, 2).map_err(|e| e.to_string())?;
+            let expect = model.transform(x);
+            let svc = EmbeddingService::start(
+                model,
+                Box::new(|| Ok(Box::new(NativeBackend))),
+                ServiceConfig {
+                    max_batch: *max_batch,
+                    max_wait_us: 200,
+                    queue_depth: 64,
+                    workers: 1,
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            let h = svc.handle();
+            let mut receivers = Vec::new();
+            let mut at = 0usize;
+            for &s in sizes {
+                let s = s.min(x.rows() - 1);
+                let start = at % (x.rows() - s);
+                at += 13;
+                let idx: Vec<usize> = (start..start + s).collect();
+                receivers.push((
+                    idx.clone(),
+                    h.try_embed(x.select_rows(&idx))
+                        .map_err(|e| e.to_string())?,
+                ));
+            }
+            let mut total = 0usize;
+            for (idx, rx) in receivers {
+                let got = rx
+                    .recv()
+                    .map_err(|e| e.to_string())?
+                    .map_err(|e| e.to_string())?;
+                if got.rows() != idx.len() {
+                    return Err("row count changed".into());
+                }
+                total += got.rows();
+                for (r, &orig) in idx.iter().enumerate() {
+                    for c in 0..got.cols() {
+                        if (got.get(r, c) - expect.get(orig, c)).abs()
+                            > 1e-9
+                        {
+                            return Err(format!(
+                                "row {orig} embedded wrong"
+                            ));
+                        }
+                    }
+                }
+            }
+            let snap = svc.shutdown();
+            if snap.rows != total as u64 {
+                return Err(format!(
+                    "service counted {} rows, clients got {total}",
+                    snap.rows
+                ));
+            }
+            Ok(())
+        },
+    );
+}
