@@ -1,0 +1,38 @@
+#!/usr/bin/env bash
+# Local CI gate for the rskpca workspace (documented in README.md).
+#
+#   ./ci.sh          full gate: build, test, doc (warnings denied), fmt
+#   ./ci.sh quick    skip the release build (debug test cycle only)
+#
+# Tier-1 equivalent: `cargo build --release && cargo test -q`.
+
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+step() { printf '\n==> %s\n' "$*"; }
+
+if [ "${1:-}" != "quick" ]; then
+    step "cargo build --release"
+    cargo build --release
+
+    # Benches carry test = false (their harness-less main() must not run
+    # under `cargo test`), so compile them explicitly or they go
+    # entirely unchecked.
+    step "cargo build --benches"
+    cargo build --benches
+fi
+
+step "cargo test -q"
+cargo test -q
+
+step "cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+step "cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "rustfmt not installed; skipping format check"
+fi
+
+step "OK"

@@ -1,6 +1,7 @@
-//! Micro benches over the hot paths: symmetric eigensolver, native Gram,
-//! PJRT gram/embed (when artifacts exist), and the end-to-end service
-//! throughput — the inputs to EXPERIMENTS.md §Perf.
+//! Micro benches over the hot paths: symmetric eigensolver, native Gram
+//! (parallel vs serial), fused batched projection, PJRT gram/embed (when
+//! artifacts exist), and the end-to-end service throughput — the inputs
+//! to EXPERIMENTS.md §Perf.
 
 use std::path::Path;
 
@@ -10,7 +11,8 @@ use rskpca::coordinator::serve;
 use rskpca::data::gaussian_mixture_2d;
 use rskpca::kernel::Kernel;
 use rskpca::kpca::fit_kpca;
-use rskpca::linalg::{eigh, Matrix};
+use rskpca::linalg::{eigh, subspace_eigh, Matrix};
+use rskpca::parallel;
 use rskpca::prng::Pcg64;
 use rskpca::runtime::{factory_from_name, GramBackend, NativeBackend, PjrtBackend};
 
@@ -29,14 +31,52 @@ fn main() {
     let mut b = harness();
     let quick = rskpca::bench::quick_mode();
 
-    // Symmetric eigensolver scaling.
+    // Symmetric eigensolver scaling, full solve vs parallel top-k
+    // subspace iteration.
     for &n in if quick { &[64usize, 128][..] } else { &[64, 128, 256, 512][..] } {
         let x = random(n, n, 1);
         let sym = x.matmul_transb(&x).unwrap().scale(1.0 / n as f64);
         b.bench(&format!("eigh/n{n}"), || {
             eigh(&sym).unwrap().values[0]
         });
+        b.bench(&format!("subspace_eigh/k8/n{n}"), || {
+            subspace_eigh(&sym, 8, 200, 1e-10).unwrap().values[0]
+        });
     }
+
+    // Parallel vs serial symmetric Gram — the tentpole acceptance check:
+    // >= 2x wall clock at n=2000 with >= 4 threads, matching within
+    // 1e-10 (in fact bitwise).
+    let kernel = Kernel::gaussian(1.0);
+    let n_sym = if quick { 512 } else { 2000 };
+    let xs = random(n_sym, 32, 9);
+    let serial_mean = b
+        .bench(&format!("gram_sym_serial/n{n_sym}"), || {
+            kernel.gram_sym_serial(&xs).rows()
+        })
+        .mean_s;
+    let mut speedup_4t = 0.0;
+    for &t in &[2usize, 4, 8] {
+        parallel::set_threads(t);
+        let mean = b
+            .bench(&format!("gram_sym_par/t{t}/n{n_sym}"), || {
+                kernel.gram_sym(&xs).rows()
+            })
+            .mean_s;
+        if t == 4 {
+            speedup_4t = serial_mean / mean;
+        }
+    }
+    parallel::set_threads(0);
+    let dev = kernel
+        .gram_sym(&xs)
+        .sub(&kernel.gram_sym_serial(&xs))
+        .unwrap()
+        .max_abs();
+    println!(
+        "# gram_sym n={n_sym}: parallel(4t) speedup {speedup_4t:.2}x vs \
+         serial; max |par - serial| = {dev:.3e}"
+    );
 
     // Native gram.
     let kernel = Kernel::gaussian(1.0);
@@ -55,30 +95,37 @@ fn main() {
         );
     }
 
-    // PJRT gram/embed (artifact path), if built.
-    if Path::new("artifacts/manifest.json").exists() {
-        let mut pjrt = PjrtBackend::load(Path::new("artifacts")).unwrap();
-        for &(n, m, d) in if quick {
-            &[(256usize, 128usize, 32usize)][..]
-        } else {
-            &[(256, 128, 32), (1024, 512, 32), (1024, 512, 256)][..]
-        } {
-            let x = random(n, d, 2);
-            let y = random(m, d, 3);
-            b.bench_throughput(
-                &format!("gram_pjrt/{n}x{m}x{d}"),
-                (n * m) as f64,
-                || pjrt.gram(&x, &y, &kernel).unwrap().rows(),
-            );
-            let a = random(m, 5, 4).scale(0.2);
-            b.bench_throughput(
-                &format!("embed_pjrt/{n}x{m}x{d}k5"),
-                n as f64,
-                || pjrt.embed(&x, &y, &a, &kernel).unwrap().rows(),
-            );
-        }
+    // PJRT gram/embed (artifact path), if built.  load() also fails in
+    // stub builds (no `pjrt` feature) even when artifacts exist — skip,
+    // don't panic.
+    match if Path::new("artifacts/manifest.json").exists() {
+        PjrtBackend::load(Path::new("artifacts")).map(Some)
     } else {
-        println!("# artifacts missing: skipping PJRT benches");
+        Ok(None)
+    } {
+        Ok(Some(mut pjrt)) => {
+            for &(n, m, d) in if quick {
+                &[(256usize, 128usize, 32usize)][..]
+            } else {
+                &[(256, 128, 32), (1024, 512, 32), (1024, 512, 256)][..]
+            } {
+                let x = random(n, d, 2);
+                let y = random(m, d, 3);
+                b.bench_throughput(
+                    &format!("gram_pjrt/{n}x{m}x{d}"),
+                    (n * m) as f64,
+                    || pjrt.gram(&x, &y, &kernel).unwrap().rows(),
+                );
+                let a = random(m, 5, 4).scale(0.2);
+                b.bench_throughput(
+                    &format!("embed_pjrt/{n}x{m}x{d}k5"),
+                    n as f64,
+                    || pjrt.embed(&x, &y, &a, &kernel).unwrap().rows(),
+                );
+            }
+        }
+        Ok(None) => println!("# artifacts missing: skipping PJRT benches"),
+        Err(e) => println!("# pjrt unavailable ({e}): skipping PJRT benches"),
     }
 
     // Shadow selection.
@@ -92,6 +139,26 @@ fn main() {
     // Service round-trip (native backend, batched).
     let ds = gaussian_mixture_2d(400, 3, 0.4, 6);
     let model = fit_kpca(&ds.x, &kernel, 4).unwrap();
+
+    // Batched projection through the fused parallel path, 1 thread vs
+    // auto.
+    parallel::set_threads(1);
+    let tb_serial = b
+        .bench_throughput("transform_batch/t1/400x400", 400.0, || {
+            model.transform_batch(&ds.x).rows()
+        })
+        .mean_s;
+    parallel::set_threads(0);
+    let tb_auto = b
+        .bench_throughput("transform_batch/auto/400x400", 400.0, || {
+            model.transform_batch(&ds.x).rows()
+        })
+        .mean_s;
+    println!(
+        "# transform_batch 400x400: auto-thread speedup {:.2}x",
+        tb_serial / tb_auto
+    );
+
     let svc = serve(
         model,
         factory_from_name("native", Path::new("artifacts")),

@@ -1,11 +1,13 @@
 //! Bench for Table 2 (training cost): fit time versus n for full KPCA
 //! (O(n^3)) against ShDE+RSKPCA / Nyström (O(mn + m^3)) — the scaling gap
-//! the table asserts.
+//! the table asserts — plus a serial-vs-parallel comparison of the fit
+//! path (the Gram phase fans out through `rskpca::parallel`).
 
 use rskpca::bench::harness;
 use rskpca::data::gaussian_mixture_2d;
 use rskpca::experiments::{fit_method, Method};
 use rskpca::kernel::Kernel;
+use rskpca::parallel;
 
 fn main() {
     let mut b = harness();
@@ -33,5 +35,32 @@ fn main() {
                 .m
         });
     }
+    // Serial vs parallel ShDE+RSKPCA fit at the largest size: the O(mn)
+    // shadow sweep stays serial and the m x m gram/eigensolve is small,
+    // but the density-weighted Gram and projection phases fan out — this
+    // row shows how much of the reduced-set fit the engine reaches.
+    let n = *sizes.last().unwrap();
+    let ds = gaussian_mixture_2d(n, 4, 0.35, 43);
+    let kernel = Kernel::gaussian(1.0);
+    parallel::set_threads(1);
+    let serial = b
+        .bench(&format!("fit_shde_rskpca_t1/n{n}"), || {
+            fit_method(Method::Shde, &ds.x, &kernel, 5, 0, 4.0, 1)
+                .unwrap()
+                .m
+        })
+        .mean_s;
+    parallel::set_threads(0);
+    let auto = b
+        .bench(&format!("fit_shde_rskpca_auto/n{n}"), || {
+            fit_method(Method::Shde, &ds.x, &kernel, 5, 0, 4.0, 1)
+                .unwrap()
+                .m
+        })
+        .mean_s;
+    println!(
+        "# fit_shde_rskpca n={n}: auto-thread speedup {:.2}x",
+        serial / auto
+    );
     b.write_csv(std::path::Path::new("bench_training_cost.csv")).ok();
 }

@@ -1,8 +1,16 @@
 //! k-nearest-neighbour classification in the embedding space — the
 //! downstream task of the paper's classification experiments (Figs. 4–5,
 //! 7–8: 3-NN over KPCA embeddings, 10-fold cross-validation).
+//!
+//! Batch prediction is embarrassingly parallel (one independent
+//! neighbour search per query row) and fans out across
+//! [`crate::parallel`] compute threads above a work threshold; per-row
+//! results are identical at any thread count.
 
 use crate::linalg::{sq_euclidean, Matrix};
+
+/// Minimum query-rows x train-rows product before `predict` fans out.
+const PREDICT_PAR_MIN: usize = 1 << 14;
 
 /// A fitted k-NN classifier over embedded points.
 #[derive(Clone, Debug)]
@@ -57,9 +65,19 @@ impl KnnClassifier {
             .unwrap()
     }
 
-    /// Predict a batch.
+    /// Predict a batch (parallel over query rows above a work
+    /// threshold; each row's vote is independent, so results match the
+    /// serial path exactly).
     pub fn predict(&self, z: &Matrix) -> Vec<u32> {
-        (0..z.rows()).map(|i| self.predict_point(z.row(i))).collect()
+        let n = z.rows();
+        let work = n.saturating_mul(self.train_z.rows());
+        let threads =
+            crate::parallel::threads_for_work(work, PREDICT_PAR_MIN);
+        let mut out = vec![0u32; n];
+        crate::parallel::par_fill_rows(&mut out, 1, threads, |i, slot| {
+            slot[0] = self.predict_point(z.row(i));
+        });
+        out
     }
 }
 

@@ -24,6 +24,19 @@ fn req_flag(args: &Args, name: &str) -> Result<String> {
         .ok_or_else(|| Error::Parse(format!("missing --{name}")))
 }
 
+/// Wire the compute-thread count into the parallel engine: an explicit
+/// `--threads N` flag wins, else the config's `[run] threads` knob
+/// (0 = auto-detect).
+fn apply_threads(args: &Args, config_threads: usize) -> Result<()> {
+    let t = if args.flag("threads").is_some() {
+        args.flag_usize("threads", 0)?
+    } else {
+        config_threads
+    };
+    crate::parallel::set_threads(t);
+    Ok(())
+}
+
 /// `rskpca experiment <name|all> [...]`
 pub fn experiment(args: &Args) -> Result<()> {
     let name = args
@@ -31,6 +44,7 @@ pub fn experiment(args: &Args) -> Result<()> {
         .first()
         .cloned()
         .ok_or_else(|| Error::Parse("experiment: missing name".into()))?;
+    apply_threads(args, 0)?;
     let mut ctx = if args.has("quick") {
         ExperimentCtx::quick()
     } else {
@@ -69,6 +83,7 @@ fn resolve_dataset(spec: &str, seed: u64) -> Result<Dataset> {
 /// `rskpca fit --config FILE --model-out FILE [--data FILE]`
 pub fn fit(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_file(Path::new(&req_flag(args, "config")?))?;
+    apply_threads(args, cfg.threads)?;
     let model_out = req_flag(args, "model-out")?;
     let ds = match args.flag("data") {
         Some(path) => load_dataset_csv(Path::new(path), "custom")?,
@@ -108,6 +123,7 @@ pub fn fit(args: &Args) -> Result<()> {
 
 /// `rskpca embed --model FILE --data FILE --out FILE [--backend B]`
 pub fn embed(args: &Args) -> Result<()> {
+    apply_threads(args, 0)?;
     let model = EmbeddingModel::load(Path::new(&req_flag(args, "model")?))?;
     let ds = load_dataset_csv(Path::new(&req_flag(args, "data")?), "in")?;
     let out = req_flag(args, "out")?;
@@ -143,8 +159,15 @@ pub fn serve(args: &Args) -> Result<()> {
     let requests = args.flag_usize("requests", 200)?;
     let rows_per = args.flag_usize("rows-per-request", 8)?;
     let cfg = match args.flag("config") {
-        Some(path) => RunConfig::from_file(Path::new(path))?.service,
-        None => Default::default(),
+        Some(path) => {
+            let rc = RunConfig::from_file(Path::new(path))?;
+            apply_threads(args, rc.threads)?;
+            rc.service
+        }
+        None => {
+            apply_threads(args, 0)?;
+            Default::default()
+        }
     };
     let dim = model.centers.cols();
     println!(

@@ -3,11 +3,13 @@
 //! ```text
 //! rskpca experiment <table1|table2|fig1..fig8|bounds|all>
 //!        [--out DIR] [--scale F] [--runs N] [--ell-step F] [--seed N]
-//!        [--quick]
+//!        [--quick] [--threads N]
 //! rskpca fit     --config FILE --model-out FILE [--data FILE]
+//!                [--threads N]
 //! rskpca embed   --model FILE --data FILE --out FILE [--backend B]
+//!                [--threads N]
 //! rskpca serve   --model FILE [--backend B] [--requests N]
-//!                [--rows-per-request N] [--config FILE]
+//!                [--rows-per-request N] [--config FILE] [--threads N]
 //! rskpca gen     --dataset NAME --out FILE [--seed N]
 //! rskpca info    [--artifacts DIR]
 //! ```

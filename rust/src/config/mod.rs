@@ -205,6 +205,10 @@ pub struct RunConfig {
     pub backend: String,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
+    /// Compute threads for the parallel engine (`crate::parallel`);
+    /// 0 = auto (one per available core).  Flows into
+    /// `parallel::set_threads` when the CLI loads the config.
+    pub threads: usize,
     /// Embedding-service settings.
     pub service: ServiceConfig,
 }
@@ -244,6 +248,7 @@ impl Default for RunConfig {
             seed: 42,
             backend: "native".into(),
             artifacts_dir: "artifacts".into(),
+            threads: 0,
             service: ServiceConfig::default(),
         }
     }
@@ -266,6 +271,7 @@ impl RunConfig {
         cfg.backend = doc.get_str("run", "backend", &cfg.backend);
         cfg.artifacts_dir =
             doc.get_str("run", "artifacts_dir", &cfg.artifacts_dir);
+        cfg.threads = doc.get_usize("run", "threads", cfg.threads);
         if !matches!(cfg.backend.as_str(), "native" | "pjrt") {
             return Err(Error::Config(format!(
                 "backend must be 'native' or 'pjrt', got '{}'",
@@ -355,6 +361,7 @@ kernel = "laplacian"
 ell = 3.5
 rank = 7
 backend = "pjrt"
+threads = 6
 [service]
 max_batch = 128
 workers = 2
@@ -366,6 +373,7 @@ workers = 2
         assert_eq!(cfg.ell, 3.5);
         assert_eq!(cfg.rank, 7);
         assert_eq!(cfg.backend, "pjrt");
+        assert_eq!(cfg.threads, 6);
         assert_eq!(cfg.service.max_batch, 128);
         assert_eq!(cfg.service.workers, 2);
         // Untouched defaults survive.
@@ -390,5 +398,6 @@ workers = 2
         assert_eq!(cfg.dataset, "german");
         assert_eq!(cfg.ell, 4.0);
         assert_eq!(cfg.backend, "native");
+        assert_eq!(cfg.threads, 0); // auto
     }
 }

@@ -17,6 +17,22 @@
 //!
 //! The worker thread exclusively owns the backend (PJRT executable cache
 //! is single-owner, no locks on the hot path).
+//!
+//! ## Threading model
+//!
+//! Two orthogonal levels of parallelism:
+//!
+//! 1. **Batching thread** — one worker owns the queue and the backend and
+//!    executes whole coalesced batches (`ServiceConfig::workers` sizes
+//!    this layer; the single-owner backend keeps it at 1 today).
+//! 2. **Compute threads** — *inside* one batch execution, the native
+//!    backend's fused projection (`Kernel::embed_rows`) fans batch rows
+//!    out across the [`crate::parallel`] engine, so a single big batch
+//!    saturates the host's cores.  The count flows from the `[run]
+//!    threads` config knob (0 = auto).
+//!
+//! Dynamic batching therefore does double duty: it amortizes dispatch
+//! *and* hands the compute engine row counts big enough to parallelize.
 
 mod service;
 

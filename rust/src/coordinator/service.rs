@@ -291,7 +291,10 @@ fn execute_batch(
             at += 1;
         }
     }
-    // One backend call for the whole batch.
+    // One backend call for the whole batch.  For the native backend this
+    // is the fused parallel projection (`Kernel::embed_rows`): the
+    // stacked rows fan out across the `crate::parallel` compute threads,
+    // so coalescing directly buys multi-core utilization.
     let result =
         backend.embed(&stacked, &model.centers, &model.coeffs, &model.kernel);
     // Metrics first (once per batch): a client observing its reply must

@@ -8,8 +8,35 @@
 //! The native (pure rust) Gram path here is the fallback / cross-check for
 //! the PJRT artifacts produced by the Pallas kernels; `runtime::Engine`
 //! picks whichever is configured and tests assert they agree.
+//!
+//! Gram construction is cache-blocked and, above a work threshold, fans
+//! out across [`crate::parallel`] row bands: the symmetric sweep computes
+//! only the upper triangle (bands balanced by row cost `n - i`) and
+//! mirrors it in a tiled serial pass, so the parallel result is bitwise
+//! identical to [`Kernel::gram_sym_serial`] at any thread count.
 
+use std::ops::Range;
+
+use crate::error::{Error, Result};
 use crate::linalg::{sq_euclidean, Matrix};
+use crate::parallel;
+
+/// Minimum output elements before the Gram paths fan out to threads;
+/// below this, thread-spawn latency dominates the compute.
+const GRAM_PAR_MIN: usize = 4096;
+
+/// Minimum scalar-op estimate before the fused projection
+/// ([`Kernel::embed_rows`]) fans out.  Flop-scaled (n·m·d), matching
+/// `linalg`'s threshold, so small serve batches never pay spawn latency.
+const EMBED_PAR_MIN_FLOPS: usize = 1 << 16;
+
+/// Column tile width of the cache-blocked Gram inner loops: one tile of
+/// `y` rows stays hot in L1/L2 while a band of `x` rows streams past.
+const GRAM_BLOCK: usize = 64;
+
+/// Tile edge for the symmetric-mirror pass (keeps the strided
+/// upper-triangle reads cache-resident while writing the lower triangle).
+const MIRROR_TILE: usize = 64;
 
 /// The radial profile families supported end to end (matching the L1
 /// Pallas kernels' static `kernel` parameter).
@@ -57,6 +84,18 @@ impl Kernel {
         Kernel { kind, sigma }
     }
 
+    /// Gaussian (RBF) kernel `exp(-||x-y||^2 / (2 sigma^2))`.
+    ///
+    /// ```
+    /// use rskpca::kernel::Kernel;
+    ///
+    /// let k = Kernel::gaussian(3.0);
+    /// // Peak value at zero distance ...
+    /// assert!((k.eval(&[0.0, 0.0], &[0.0, 0.0]) - 1.0).abs() < 1e-12);
+    /// // ... and exp(-0.5) one bandwidth away.
+    /// let v = k.eval(&[0.0, 0.0], &[3.0, 0.0]);
+    /// assert!((v - (-0.5f64).exp()).abs() < 1e-12);
+    /// ```
     pub fn gaussian(sigma: f64) -> Self {
         Kernel::new(KernelKind::Gaussian, sigma)
     }
@@ -143,21 +182,117 @@ impl Kernel {
         self.kappa() - self.phi(ell.powf(-self.p()))
     }
 
-    /// Native Gram matrix K[i,j] = k(x_i, y_j).
+    /// Native Gram matrix K[i,j] = k(x_i, y_j): cache-blocked and, above
+    /// a work threshold, parallel over row bands.  Bitwise identical to
+    /// [`Kernel::gram_serial`] at any thread count (every element is the
+    /// same `eval` call; only the write order changes).
     pub fn gram(&self, x: &Matrix, y: &Matrix) -> Matrix {
         assert_eq!(x.cols(), y.cols(), "gram: feature dims differ");
-        let mut out = Matrix::zeros(x.rows(), y.rows());
-        for i in 0..x.rows() {
-            let xi = x.row(i);
-            for j in 0..y.rows() {
-                out.set(i, j, self.eval(xi, y.row(j)));
+        let (n, m) = (x.rows(), y.rows());
+        let threads =
+            parallel::threads_for_work(n.saturating_mul(m), GRAM_PAR_MIN);
+        if threads <= 1 {
+            return self.gram_serial(x, y);
+        }
+        let mut out = Matrix::zeros(n, m);
+        let ranges = parallel::even_ranges(n, threads);
+        parallel::par_row_bands_mut(
+            out.as_mut_slice(),
+            m,
+            &ranges,
+            |rows, band| self.fill_gram_band(x, y, rows, band),
+        );
+        out
+    }
+
+    /// Single-threaded reference Gram path (also the small-input fast
+    /// path); kept public so benches and tests can compare against the
+    /// parallel engine.
+    pub fn gram_serial(&self, x: &Matrix, y: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), y.cols(), "gram: feature dims differ");
+        let (n, m) = (x.rows(), y.rows());
+        let mut out = Matrix::zeros(n, m);
+        if n > 0 && m > 0 {
+            self.fill_gram_band(x, y, 0..n, out.as_mut_slice());
+        }
+        out
+    }
+
+    /// Cache-blocked fill of the Gram rows `rows` of K(x, y) into `band`
+    /// (the row-major sub-buffer holding exactly those rows).
+    fn fill_gram_band(
+        &self,
+        x: &Matrix,
+        y: &Matrix,
+        rows: Range<usize>,
+        band: &mut [f64],
+    ) {
+        let m = y.rows();
+        if m == 0 {
+            return;
+        }
+        for jb in (0..m).step_by(GRAM_BLOCK) {
+            let jend = (jb + GRAM_BLOCK).min(m);
+            for (k, row) in band.chunks_mut(m).enumerate() {
+                let xi = x.row(rows.start + k);
+                for j in jb..jend {
+                    row[j] = self.eval(xi, y.row(j));
+                }
+            }
+        }
+    }
+
+    /// Symmetric Gram matrix K[i,j] = k(x_i, x_j), exploiting symmetry:
+    /// the strict upper triangle is computed once (in parallel above a
+    /// work threshold, row bands balanced by the triangular cost `n - i`)
+    /// and mirrored in a tiled pass.  Bitwise identical to
+    /// [`Kernel::gram_sym_serial`] at any thread count.
+    pub fn gram_sym(&self, x: &Matrix) -> Matrix {
+        let n = x.rows();
+        let threads =
+            parallel::threads_for_work(n.saturating_mul(n), GRAM_PAR_MIN);
+        if threads <= 1 {
+            return self.gram_sym_serial(x);
+        }
+        let mut out = Matrix::zeros(n, n);
+        let ranges =
+            parallel::weighted_ranges(n, threads, |i| (n - i) as f64);
+        parallel::par_row_bands_mut(
+            out.as_mut_slice(),
+            n,
+            &ranges,
+            |rows, band| {
+                for (k, row) in band.chunks_mut(n).enumerate() {
+                    let i = rows.start + k;
+                    row[i] = self.kappa();
+                    let xi = x.row(i);
+                    for j in (i + 1)..n {
+                        row[j] = self.eval(xi, x.row(j));
+                    }
+                }
+            },
+        );
+        // Mirror the strict upper triangle into the lower one, tiled so
+        // the strided column reads stay cache-resident.  Memory-bound and
+        // a small fraction of the kernel-evaluation cost.
+        for bi in (0..n).step_by(MIRROR_TILE) {
+            let iend = (bi + MIRROR_TILE).min(n);
+            for bj in (0..=bi).step_by(MIRROR_TILE) {
+                let jend = (bj + MIRROR_TILE).min(n);
+                for i in bi..iend {
+                    for j in bj..jend.min(i) {
+                        let v = out.get(j, i);
+                        out.set(i, j, v);
+                    }
+                }
             }
         }
         out
     }
 
-    /// Symmetric Gram matrix K[i,j] = k(x_i, x_j), exploiting symmetry.
-    pub fn gram_sym(&self, x: &Matrix) -> Matrix {
+    /// Single-threaded reference for [`Kernel::gram_sym`]; kept public so
+    /// benches and tests can compare against the parallel engine.
+    pub fn gram_sym_serial(&self, x: &Matrix) -> Matrix {
         let n = x.rows();
         let mut out = Matrix::zeros(n, n);
         for i in 0..n {
@@ -176,6 +311,62 @@ impl Kernel {
         (0..centers.rows())
             .map(|j| self.eval(x, centers.row(j)))
             .collect()
+    }
+
+    /// Fused batched projection `K(x, centers) · coeffs` — the serve-path
+    /// workhorse behind [`crate::kpca::EmbeddingModel::transform_batch`]
+    /// and the native backend's batch executor.  Never materializes the
+    /// `n x m` Gram matrix; each output row accumulates over the centers
+    /// exactly like `transform_point`, and rows fan out across
+    /// [`crate::parallel`] bands above a work threshold (bitwise
+    /// identical results at any thread count).
+    pub fn embed_rows(
+        &self,
+        x: &Matrix,
+        centers: &Matrix,
+        coeffs: &Matrix,
+    ) -> Result<Matrix> {
+        if x.cols() != centers.cols() {
+            return Err(Error::Shape(format!(
+                "embed_rows: x dim {} != centers dim {}",
+                x.cols(),
+                centers.cols()
+            )));
+        }
+        if coeffs.rows() != centers.rows() {
+            return Err(Error::Shape(format!(
+                "embed_rows: coeffs rows {} != centers rows {}",
+                coeffs.rows(),
+                centers.rows()
+            )));
+        }
+        let (n, m, r) = (x.rows(), centers.rows(), coeffs.cols());
+        let mut out = Matrix::zeros(n, r);
+        if n == 0 || r == 0 {
+            return Ok(out);
+        }
+        let work = n.saturating_mul(m).saturating_mul(x.cols().max(1));
+        let threads =
+            parallel::threads_for_work(work, EMBED_PAR_MIN_FLOPS);
+        parallel::par_fill_rows(
+            out.as_mut_slice(),
+            r,
+            threads,
+            |i, out_row| {
+                let xi = x.row(i);
+                for c in 0..m {
+                    let kv = self.eval(xi, centers.row(c));
+                    if kv == 0.0 {
+                        continue;
+                    }
+                    let crow = coeffs.row(c);
+                    for (o, &cv) in out_row.iter_mut().zip(crow) {
+                        *o += kv * cv;
+                    }
+                }
+            },
+        );
+        Ok(out)
     }
 }
 
@@ -308,6 +499,57 @@ mod tests {
             let e = eigh(&g).unwrap();
             assert!(e.values.iter().all(|&v| v > -1e-9), "{:?}", k.kind);
         }
+    }
+
+    use crate::testutil::random_matrix;
+
+    #[test]
+    fn parallel_gram_paths_match_serial_reference() {
+        // Sizes above GRAM_PAR_MIN so the banded path actually engages
+        // (at >= 2 available threads); equality must be exact.
+        let x = random_matrix(90, 5, 11);
+        let y = random_matrix(70, 5, 12);
+        for k in [Kernel::gaussian(1.3), Kernel::laplacian(0.9),
+                  Kernel::cauchy(2.1)] {
+            let g = k.gram(&x, &y);
+            assert_eq!(g, k.gram_serial(&x, &y), "{:?}", k.kind);
+            let gs = k.gram_sym(&x);
+            assert_eq!(gs, k.gram_sym_serial(&x), "{:?}", k.kind);
+        }
+    }
+
+    #[test]
+    fn gram_handles_degenerate_shapes() {
+        let k = Kernel::gaussian(1.0);
+        let empty = Matrix::zeros(0, 3);
+        let x = random_matrix(4, 3, 1);
+        assert_eq!(k.gram(&empty, &x).rows(), 0);
+        assert_eq!(k.gram(&x, &empty).cols(), 0);
+        assert_eq!(k.gram_sym(&empty).rows(), 0);
+    }
+
+    #[test]
+    fn embed_rows_equals_gram_matmul() {
+        let x = random_matrix(40, 4, 3);
+        let c = random_matrix(25, 4, 4);
+        let a = random_matrix(25, 6, 5).scale(0.3);
+        let k = Kernel::gaussian(1.2);
+        let fused = k.embed_rows(&x, &c, &a).unwrap();
+        let composed = k.gram(&x, &c).matmul(&a).unwrap();
+        assert!(fused.sub(&composed).unwrap().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn embed_rows_validates_shapes() {
+        let k = Kernel::gaussian(1.0);
+        let x = random_matrix(3, 4, 1);
+        let c = random_matrix(5, 4, 2);
+        let a = random_matrix(5, 2, 3);
+        assert!(k.embed_rows(&x, &c, &a).is_ok());
+        let bad_dim = random_matrix(3, 2, 4);
+        assert!(k.embed_rows(&bad_dim, &c, &a).is_err());
+        let bad_coeffs = random_matrix(4, 2, 5);
+        assert!(k.embed_rows(&x, &c, &bad_coeffs).is_err());
     }
 
     #[test]

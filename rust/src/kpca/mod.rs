@@ -21,6 +21,12 @@
 //! five methods converge to the *same* target as their approximation
 //! quality improves, which is exactly what the paper's alignment metric
 //! (§6) compares.
+//!
+//! Projection is served by [`EmbeddingModel::transform_batch`], which
+//! embeds query rows independently across [`crate::parallel`] compute
+//! threads through the fused `Kernel::embed_rows` path (no Gram
+//! temporary); `classify`, `mmd`, the experiment harness and the
+//! coordinator's batch executor all consume it.
 
 mod full;
 mod icd;
@@ -76,11 +82,37 @@ impl EmbeddingModel {
     }
 
     /// Project a batch of rows into the embedding (native path; the PJRT
-    /// path lives in `runtime::Engine::embed`).
+    /// path lives in the runtime backend's `embed`).  Alias for
+    /// [`EmbeddingModel::transform_batch`].
     pub fn transform(&self, x: &Matrix) -> Matrix {
-        let k = self.kernel.gram(x, &self.centers);
-        k.matmul(&self.coeffs)
-            .expect("coeffs shape consistent by construction")
+        self.transform_batch(x)
+    }
+
+    /// Batched multi-row projection `z(Y) = K(Y, centers) · coeffs` via
+    /// the fused parallel path ([`crate::kernel::Kernel::embed_rows`]):
+    /// rows are embedded independently across compute threads without
+    /// materializing the Gram matrix.  Row `i` of the result equals
+    /// [`EmbeddingModel::transform_point`] on row `i` bit-for-bit, at any
+    /// thread count.
+    ///
+    /// ```
+    /// use rskpca::data::gaussian_mixture_2d;
+    /// use rskpca::kernel::Kernel;
+    /// use rskpca::kpca::fit_kpca;
+    ///
+    /// let ds = gaussian_mixture_2d(50, 3, 0.4, 7);
+    /// let model = fit_kpca(&ds.x, &Kernel::gaussian(1.0), 3).unwrap();
+    /// let z = model.transform_batch(&ds.x);
+    /// assert_eq!((z.rows(), z.cols()), (50, 3));
+    /// ```
+    pub fn transform_batch(&self, x: &Matrix) -> Matrix {
+        // Surface the typed shape error (e.g. a query dim that doesn't
+        // match the model's feature dim) instead of blaming model
+        // invariants.
+        match self.kernel.embed_rows(x, &self.centers, &self.coeffs) {
+            Ok(z) => z,
+            Err(e) => panic!("transform_batch: {e}"),
+        }
     }
 
     /// Project a single point.

@@ -21,6 +21,20 @@ use crate::prng::Pcg64;
 /// Eigenpairs of `K_mm` extend to approximate eigenvectors of `K`:
 /// `λ̂_ι = (n/m) λ_ι^m`, `φ̂^ι ∝ K_nm u^ι`; the embedding then follows the
 /// full-KPCA convention through `(λ̂, φ̂)`.
+///
+/// ```
+/// use rskpca::data::gaussian_mixture_2d;
+/// use rskpca::kernel::Kernel;
+/// use rskpca::kpca::fit_nystrom;
+///
+/// let ds = gaussian_mixture_2d(120, 3, 0.4, 5);
+/// // 20 landmarks approximate the 120-point eigenproblem; the model
+/// // still retains all 120 points for projection (Table 2's SPACE row).
+/// let model = fit_nystrom(&ds.x, &Kernel::gaussian(1.0), 3, 20, 9)
+///     .unwrap();
+/// assert_eq!(model.n_retained(), 120);
+/// assert_eq!(model.transform_batch(&ds.x).cols(), model.r());
+/// ```
 pub fn fit_nystrom(
     x: &Matrix,
     kernel: &Kernel,

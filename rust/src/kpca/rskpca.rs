@@ -22,6 +22,24 @@ use crate::kernel::Kernel;
 use crate::linalg::eigh;
 
 /// Fit Algorithm 1 on a reduced set.
+///
+/// ```
+/// use rskpca::data::gaussian_mixture_2d;
+/// use rskpca::density::{RsdeEstimator, ShadowDensity};
+/// use rskpca::kernel::Kernel;
+/// use rskpca::kpca::fit_rskpca;
+///
+/// let ds = gaussian_mixture_2d(200, 3, 0.3, 1);
+/// let kernel = Kernel::gaussian(1.0);
+/// // Algorithm 2: reduce the data to m weighted shadow centers ...
+/// let rs = ShadowDensity::new(4.0).reduce(&ds.x, &kernel);
+/// assert!(rs.m() < 200);
+/// // ... then Algorithm 1: density-weighted KPCA on the m centers.
+/// let model = fit_rskpca(&rs, &kernel, 4).unwrap();
+/// assert_eq!(model.n_retained(), rs.m());
+/// let z = model.transform_batch(&ds.x);
+/// assert_eq!(z.rows(), 200);
+/// ```
 pub fn fit_rskpca(rs: &ReducedSet, kernel: &Kernel, r: usize)
     -> Result<EmbeddingModel> {
     if !rs.check_invariants() {

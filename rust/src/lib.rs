@@ -11,11 +11,15 @@
 //! * **L3** — this crate: every algorithm in the paper (shadow density
 //!   estimates, RSKPCA, the Nyström family, MMD bounds, KMLA extensions),
 //!   the substrates they need (dense linear algebra, PRNG, datasets,
-//!   classification), a PJRT runtime that executes the AOT artifacts, and a
-//!   threaded embedding service with dynamic batching.
+//!   classification), a shared parallel compute engine ([`parallel`])
+//!   that every hot path fans out through, a PJRT runtime that executes
+//!   the AOT artifacts (behind the `pjrt` cargo feature), and a threaded
+//!   embedding service with dynamic batching.
 //!
 //! Python never runs on the request path; after `make artifacts` the rust
-//! binary is self-contained.
+//! binary is self-contained.  See the repository's `README.md` for a
+//! quickstart and `ARCHITECTURE.md` for the module graph and the
+//! threading model.
 //!
 //! ## Quickstart
 //!
@@ -49,6 +53,7 @@ pub mod kpca;
 pub mod linalg;
 pub mod metrics;
 pub mod mmd;
+pub mod parallel;
 pub mod prng;
 pub mod runtime;
 pub mod ser;

@@ -8,14 +8,30 @@
 //!
 //! Layout: row-major `Vec<f64>`, which keeps the hot gram/matmul loops
 //! cache-friendly and makes zero-copy row views (`row`) possible.
+//!
+//! The dense products (`matmul`, `matmul_transb`, `matvec`) dispatch to
+//! [`crate::parallel`] row bands above a flop threshold; each output row
+//! is produced by the same accumulation order as the serial loop, so the
+//! results are bitwise identical at any thread count.  `subspace_eigh`
+//! builds on the parallel products for leading-eigenpair extraction.
 
 mod eigen;
 mod qr;
 
-pub use eigen::{eigh, jacobi_eigh, Eigh};
+pub use eigen::{eigh, jacobi_eigh, subspace_eigh, Eigh};
 pub use qr::{lstsq, solve_upper_triangular, QrFactor};
 
 use crate::error::{Error, Result};
+
+/// Minimum scalar-op estimate before a dense product fans out to
+/// threads; below this, spawn latency beats the parallel win.
+const PAR_MIN_FLOPS: usize = 1 << 16;
+
+/// Thread count for a dense kernel of `flops` scalar ops (1 below the
+/// parallel threshold).
+fn par_threads_for(flops: usize) -> usize {
+    crate::parallel::threads_for_work(flops, PAR_MIN_FLOPS)
+}
 
 /// Dense row-major `f64` matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -160,7 +176,11 @@ impl Matrix {
         out
     }
 
-    /// `self * other`, blocked over k for cache locality.
+    /// `self * other`, parallel over output-row bands above the flop
+    /// threshold.  Within a row the i-k-j loop order streams `other`
+    /// rows and the output row, both contiguous; no transpose
+    /// materialization needed.  Per-row accumulation order matches the
+    /// serial loop exactly, so results are thread-count invariant.
     pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
         if self.cols != other.rows {
             return Err(Error::Shape(format!(
@@ -170,25 +190,33 @@ impl Matrix {
         }
         let (n, k, m) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(n, m);
-        // i-k-j loop order: streams `other` rows and the output row, both
-        // contiguous; no transpose materialization needed.
-        for i in 0..n {
-            let a_row = self.row(i);
-            let out_row = &mut out.data[i * m..(i + 1) * m];
-            for (kk, &a) in a_row.iter().enumerate().take(k) {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[kk * m..(kk + 1) * m];
-                for j in 0..m {
-                    out_row[j] += a * b_row[j];
-                }
-            }
+        if n == 0 || m == 0 {
+            return Ok(out);
         }
+        let threads =
+            par_threads_for(n.saturating_mul(k).saturating_mul(m));
+        crate::parallel::par_fill_rows(
+            &mut out.data,
+            m,
+            threads,
+            |i, out_row| {
+                let a_row = self.row(i);
+                for (kk, &a) in a_row.iter().enumerate().take(k) {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let b_row = &other.data[kk * m..(kk + 1) * m];
+                    for j in 0..m {
+                        out_row[j] += a * b_row[j];
+                    }
+                }
+            },
+        );
         Ok(out)
     }
 
-    /// `self * other^T` without materializing the transpose.
+    /// `self * other^T` without materializing the transpose; parallel
+    /// over output-row bands above the flop threshold.
     pub fn matmul_transb(&self, other: &Matrix) -> Result<Matrix> {
         if self.cols != other.cols {
             return Err(Error::Shape(format!(
@@ -198,21 +226,34 @@ impl Matrix {
         }
         let (n, m) = (self.rows, other.rows);
         let mut out = Matrix::zeros(n, m);
-        for i in 0..n {
-            let a = self.row(i);
-            for j in 0..m {
-                let b = other.row(j);
-                let mut acc = 0.0;
-                for t in 0..self.cols {
-                    acc += a[t] * b[t];
-                }
-                out.set(i, j, acc);
-            }
+        if n == 0 || m == 0 {
+            return Ok(out);
         }
+        let threads = par_threads_for(
+            n.saturating_mul(m).saturating_mul(self.cols),
+        );
+        crate::parallel::par_fill_rows(
+            &mut out.data,
+            m,
+            threads,
+            |i, out_row| {
+                let a = self.row(i);
+                for (j, slot) in out_row.iter_mut().enumerate() {
+                    let b = other.row(j);
+                    let mut acc = 0.0;
+                    for t in 0..self.cols {
+                        acc += a[t] * b[t];
+                    }
+                    *slot = acc;
+                }
+            },
+        );
         Ok(out)
     }
 
-    /// Matrix-vector product.
+    /// Matrix-vector product (parallel over output chunks above the flop
+    /// threshold; per-element dot products are order-identical to the
+    /// serial path).
     pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
         if v.len() != self.cols {
             return Err(Error::Shape(format!(
@@ -220,11 +261,14 @@ impl Matrix {
                 self.rows, self.cols, v.len()
             )));
         }
-        Ok((0..self.rows)
-            .map(|i| {
-                self.row(i).iter().zip(v).map(|(a, b)| a * b).sum()
-            })
-            .collect())
+        let mut out = vec![0.0; self.rows];
+        let threads =
+            par_threads_for(self.rows.saturating_mul(self.cols));
+        crate::parallel::par_fill_rows(&mut out, 1, threads, |i, slot| {
+            slot[0] =
+                self.row(i).iter().zip(v).map(|(a, b)| a * b).sum();
+        });
+        Ok(out)
     }
 
     /// Elementwise sum; shapes must match.

@@ -5,11 +5,27 @@
 //! corresponding **measured** quantity on actual data, so the
 //! `experiments::bounds` driver can verify `measured <= bound` and plot
 //! both curves against ℓ.
+//!
+//! The `O(n^2)` double sums (biased MMD, the Hilbert–Schmidt difference)
+//! fan their outer loop across [`crate::parallel`] compute threads above
+//! a work threshold; each chunk accumulates in index order and chunk
+//! partials are combined in order, so results are deterministic for a
+//! fixed thread count (re-association vs. the flat serial sum stays at
+//! rounding level).
 
 use crate::density::ReducedSet;
 use crate::kernel::Kernel;
 use crate::linalg::{eigh, Matrix};
 use crate::error::{Error, Result};
+use crate::parallel;
+
+/// Minimum kernel evaluations before the MMD double sums fan out.
+const MMD_PAR_MIN: usize = 1 << 14;
+
+/// Thread count for an `evals`-sized double sum (1 below the threshold).
+fn mmd_threads(evals: usize) -> usize {
+    parallel::threads_for_work(evals, MMD_PAR_MIN)
+}
 
 /// Biased MMD (paper eq. 20) between the empirical measure on `x` (uniform
 /// weights) and the weighted measure `(centers, weights)` with
@@ -26,12 +42,18 @@ pub fn mmd_weighted(
     let m = centers.rows();
     assert_eq!(m, weights.len());
 
-    let mut xx = 0.0;
-    for i in 0..x.rows() {
-        for j in 0..x.rows() {
-            xx += kernel.eval(x.row(i), x.row(j));
+    let nx = x.rows();
+    // The three double sums are independent row reductions; the two
+    // n-outer ones are parallel (m << n by construction, so the m x m
+    // block stays serial).
+    let xx = parallel::par_sum(nx, mmd_threads(nx * nx), |i| {
+        let xi = x.row(i);
+        let mut acc = 0.0;
+        for j in 0..nx {
+            acc += kernel.eval(xi, x.row(j));
         }
-    }
+        acc
+    });
     let mut cc = 0.0;
     for i in 0..m {
         for j in 0..m {
@@ -39,12 +61,14 @@ pub fn mmd_weighted(
                 * kernel.eval(centers.row(i), centers.row(j));
         }
     }
-    let mut xc = 0.0;
-    for i in 0..x.rows() {
+    let xc = parallel::par_sum(nx, mmd_threads(nx * m), |i| {
+        let xi = x.row(i);
+        let mut acc = 0.0;
         for j in 0..m {
-            xc += weights[j] * kernel.eval(x.row(i), centers.row(j));
+            acc += weights[j] * kernel.eval(xi, centers.row(j));
         }
-    }
+        acc
+    });
     ((xx + cc - 2.0 * xc) / (n * n)).max(0.0).sqrt()
 }
 
@@ -119,15 +143,18 @@ pub fn measured_hs_diff(
         )));
     }
     let n = x.rows();
-    let mut acc = 0.0;
-    for i in 0..n {
+    let acc = parallel::par_sum(n, mmd_threads(3 * n * n), |i| {
+        let xi = x.row(i);
+        let qi = quantized.row(i);
+        let mut acc = 0.0;
         for j in 0..n {
-            let kxx = kernel.eval(x.row(i), x.row(j));
-            let kcc = kernel.eval(quantized.row(i), quantized.row(j));
-            let kxc = kernel.eval(x.row(i), quantized.row(j));
+            let kxx = kernel.eval(xi, x.row(j));
+            let kcc = kernel.eval(qi, quantized.row(j));
+            let kxc = kernel.eval(xi, quantized.row(j));
             acc += kxx * kxx + kcc * kcc - 2.0 * kxc * kxc;
         }
-    }
+        acc
+    });
     Ok((acc / (n * n) as f64).max(0.0).sqrt())
 }
 

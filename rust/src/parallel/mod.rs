@@ -1,0 +1,461 @@
+//! Shared parallel blocked compute engine (std threads, zero deps).
+//!
+//! Every compute hot path in the crate — Gram construction
+//! ([`crate::kernel`]), dense products ([`crate::linalg`]), subspace
+//! iteration ([`crate::linalg::subspace_eigh`]), batched projection
+//! ([`crate::kpca::EmbeddingModel::transform_batch`]), batch k-NN
+//! ([`crate::classify`]) and the MMD sums ([`crate::mmd`]) — fans out
+//! through this module.  The design goals, in order:
+//!
+//! 1. **Determinism.**  Work is split into *contiguous index ranges*
+//!    computed up front (no work stealing, no atomics on the data path),
+//!    so for a fixed input and thread count the floating-point result is
+//!    reproducible — and for the per-element kernels (Gram, matmul rows,
+//!    projections) it is *bitwise identical* to the serial path at any
+//!    thread count, because each output element is produced by the exact
+//!    same sequence of operations.  Only chunked *reductions*
+//!    ([`par_sum`]) re-associate additions.
+//! 2. **Safety.**  Mutable outputs are partitioned with `split_at_mut`
+//!    into disjoint row bands before any thread starts; there is no
+//!    `unsafe` anywhere in the engine.
+//! 3. **Scoped lifetimes.**  [`std::thread::scope`] lets workers borrow
+//!    inputs directly — no `Arc`, no cloning of matrices.
+//!
+//! ## Thread-count resolution
+//!
+//! The count flows from the `threads` knob of
+//! [`crate::config::RunConfig`] (CLI: `--threads`, TOML: `[run] threads`)
+//! into the process-global [`set_threads`]; `0` means "auto" (one thread
+//! per available core, capped at [`MAX_THREADS`]).  Hot paths fall back
+//! to serial execution below a work threshold so tiny inputs never pay
+//! thread-spawn latency.
+//!
+//! ```
+//! use rskpca::parallel;
+//!
+//! // Deterministic fork/join over contiguous ranges.
+//! let ranges = parallel::even_ranges(10, 3);
+//! let partials = parallel::par_map_parts(&ranges, |_part, r| {
+//!     r.map(|i| i as u64).sum::<u64>()
+//! });
+//! assert_eq!(partials.iter().sum::<u64>(), 45);
+//!
+//! // Two-way fork/join.
+//! let (a, b) = parallel::par_join(|| 2 + 2, || "done");
+//! assert_eq!((a, b), (4, "done"));
+//! ```
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Hard cap on compute threads — far above any sensible single-host
+/// setting; protects against pathological config values.
+pub const MAX_THREADS: usize = 64;
+
+/// Process-global configured thread count; 0 = auto.
+static CONFIGURED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the global compute-thread count (0 = auto-detect).  Wired from
+/// the `[run] threads` config knob / `--threads` CLI flag.
+pub fn set_threads(n: usize) {
+    CONFIGURED_THREADS.store(n.min(MAX_THREADS), Ordering::Relaxed);
+}
+
+/// The globally configured thread count (0 = auto).
+pub fn configured_threads() -> usize {
+    CONFIGURED_THREADS.load(Ordering::Relaxed)
+}
+
+/// Threads the host offers (1 if detection fails).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
+/// Thread count for a job of `work` units with a serial-fallback
+/// threshold: 1 below `min_work` (callers skip spawn latency without
+/// touching the resolver), else the configured/auto count.  The single
+/// entry point every sized hot path dispatches through.
+pub fn threads_for_work(work: usize, min_work: usize) -> usize {
+    if work < min_work {
+        1
+    } else {
+        resolve_threads(0)
+    }
+}
+
+/// Resolve an explicit request into a concrete thread count: a non-zero
+/// `requested` wins, else the global setting, else auto-detect; always in
+/// `1..=MAX_THREADS`.
+pub fn resolve_threads(requested: usize) -> usize {
+    let n = if requested > 0 {
+        requested
+    } else {
+        match configured_threads() {
+            0 => available_threads(),
+            n => n,
+        }
+    };
+    n.clamp(1, MAX_THREADS)
+}
+
+/// Split `0..n` into at most `parts` non-empty contiguous ranges of
+/// near-equal length (the first `n % parts` ranges get one extra item).
+pub fn even_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Split `0..n` into at most `parts` non-empty contiguous ranges with
+/// near-equal total `cost` (per-item weights).  Used to balance
+/// triangular workloads such as the symmetric Gram sweep, where row `i`
+/// costs `n - i` kernel evaluations.
+pub fn weighted_ranges(
+    n: usize,
+    parts: usize,
+    cost: impl Fn(usize) -> f64,
+) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    if parts == 1 {
+        return vec![0..n];
+    }
+    let total: f64 = (0..n).map(&cost).sum();
+    if !(total > 0.0) || !total.is_finite() {
+        return even_ranges(n, parts);
+    }
+    let per = total / parts as f64;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut cum = 0.0f64;
+    for i in 0..n {
+        cum += cost(i);
+        let built = out.len();
+        if built + 1 == parts {
+            // The final range takes everything left.
+            break;
+        }
+        let ranges_after_this = parts - built - 1;
+        let items_left = n - i - 1;
+        // Close the current range once its cumulative budget is met, or
+        // when every remaining range needs one of the remaining items.
+        if cum >= per * (built + 1) as f64 || items_left == ranges_after_this
+        {
+            out.push(start..i + 1);
+            start = i + 1;
+        }
+    }
+    // `start < n` always holds on reachable paths (the items-left guard
+    // forces the last closes onto distinct trailing items), but guard it
+    // so the non-empty invariant is locally evident.
+    if start < n {
+        out.push(start..n);
+    }
+    out
+}
+
+/// Run `f(part_index, range)` for each range, each on its own scoped
+/// thread (part 0 runs on the caller's thread); results are returned in
+/// part order.  With zero or one range no thread is spawned.
+pub fn par_map_parts<R, F>(ranges: &[Range<usize>], f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, Range<usize>) -> R + Sync,
+{
+    match ranges.len() {
+        0 => Vec::new(),
+        1 => vec![f(0, ranges[0].clone())],
+        _ => std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = ranges[1..]
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    let r = r.clone();
+                    s.spawn(move || f(i + 1, r))
+                })
+                .collect();
+            let mut out = Vec::with_capacity(ranges.len());
+            out.push(f(0, ranges[0].clone()));
+            for h in handles {
+                out.push(h.join().expect("parallel worker panicked"));
+            }
+            out
+        }),
+    }
+}
+
+/// Fork/join a pair of closures; `a` runs on the caller's thread.
+pub fn par_join<RA, RB>(
+    a: impl FnOnce() -> RA + Send,
+    b: impl FnOnce() -> RB + Send,
+) -> (RA, RB)
+where
+    RA: Send,
+    RB: Send,
+{
+    std::thread::scope(|s| {
+        let hb = s.spawn(b);
+        let ra = a();
+        let rb = hb.join().expect("parallel worker panicked");
+        (ra, rb)
+    })
+}
+
+/// Partition a row-major buffer (`row_len` elements per row) into the
+/// given contiguous row ranges and run `f(range, band)` for each, where
+/// `band` is the disjoint sub-slice holding exactly those rows.  The
+/// ranges must tile `0..rows` in order (as produced by [`even_ranges`] /
+/// [`weighted_ranges`]).  Band 0 runs on the caller's thread.
+pub fn par_row_bands_mut<T, F>(
+    data: &mut [T],
+    row_len: usize,
+    ranges: &[Range<usize>],
+    f: F,
+) where
+    T: Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    if ranges.is_empty() || row_len == 0 {
+        return;
+    }
+    debug_assert_eq!(ranges[0].start, 0, "ranges must start at row 0");
+    debug_assert_eq!(
+        ranges[ranges.len() - 1].end * row_len,
+        data.len(),
+        "ranges must tile the whole buffer"
+    );
+    if ranges.len() == 1 {
+        f(ranges[0].clone(), data);
+        return;
+    }
+    // Pre-split into disjoint bands (no unsafe, no overlap by
+    // construction).  `mem::take` moves the full-lifetime slice out of
+    // `rest` so each split's halves keep the original lifetime.
+    let mut bands: Vec<(Range<usize>, &mut [T])> =
+        Vec::with_capacity(ranges.len());
+    let mut rest = data;
+    let mut expect_start = 0usize;
+    for r in ranges {
+        debug_assert_eq!(r.start, expect_start, "ranges must be contiguous");
+        expect_start = r.end;
+        let (head, tail) = std::mem::take(&mut rest)
+            .split_at_mut((r.end - r.start) * row_len);
+        bands.push((r.clone(), head));
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut iter = bands.into_iter();
+        let first = iter.next().expect("at least two bands");
+        let handles: Vec<_> = iter
+            .map(|(r, band)| s.spawn(move || f(r, band)))
+            .collect();
+        f(first.0, first.1);
+        for h in handles {
+            h.join().expect("parallel worker panicked");
+        }
+    });
+}
+
+/// Fill every row of a row-major `rows x row_len` buffer in parallel:
+/// rows are split evenly across `threads` bands and `f(row_index, row)`
+/// runs once per row.  Each row is produced by exactly the same code at
+/// any thread count, so results are bitwise independent of `threads`.
+pub fn par_fill_rows<T, F>(data: &mut [T], row_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() || row_len == 0 {
+        return;
+    }
+    debug_assert_eq!(data.len() % row_len, 0);
+    let rows = data.len() / row_len;
+    let ranges = even_ranges(rows, threads.max(1));
+    par_row_bands_mut(data, row_len, &ranges, |range, band| {
+        for (k, row) in band.chunks_mut(row_len).enumerate() {
+            f(range.start + k, row);
+        }
+    });
+}
+
+/// Parallel sum of `term(i)` over `0..n`, split into at most `parts`
+/// contiguous chunks.  Each chunk accumulates serially in index order and
+/// the per-chunk partials are added in chunk order — deterministic for a
+/// fixed `(n, parts)`, but re-associated versus the flat serial sum
+/// (differences are at rounding level).
+pub fn par_sum(n: usize, parts: usize, term: impl Fn(usize) -> f64 + Sync)
+    -> f64 {
+    let ranges = even_ranges(n, parts.max(1));
+    par_map_parts(&ranges, |_, r| {
+        let mut acc = 0.0;
+        for i in r {
+            acc += term(i);
+        }
+        acc
+    })
+    .into_iter()
+    .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_ranges_tile_and_balance() {
+        for (n, parts) in [(10usize, 3usize), (7, 7), (5, 9), (1, 1),
+                           (100, 8)] {
+            let r = even_ranges(n, parts);
+            assert!(r.len() <= parts && r.len() <= n.max(1));
+            assert_eq!(r[0].start, 0);
+            assert_eq!(r[r.len() - 1].end, n);
+            for w in r.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            let lens: Vec<usize> = r.iter().map(|x| x.len()).collect();
+            let (mn, mx) = (
+                lens.iter().min().unwrap(),
+                lens.iter().max().unwrap(),
+            );
+            assert!(mx - mn <= 1, "uneven: {lens:?}");
+            assert!(lens.iter().all(|&l| l > 0));
+        }
+        assert!(even_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn weighted_ranges_balance_triangular_cost() {
+        let n = 100;
+        let cost = |i: usize| (n - i) as f64;
+        let r = weighted_ranges(n, 4, cost);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[0].start, 0);
+        assert_eq!(r[3].end, n);
+        for w in r.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+        let total: f64 = (0..n).map(cost).sum();
+        for part in &r {
+            let c: f64 = part.clone().map(cost).sum();
+            // Within 2x of the ideal share (coarse, but catches the
+            // unbalanced-even-split failure mode where the first band
+            // gets ~1.75x the ideal work).
+            assert!(
+                c < 0.5 * total,
+                "range {part:?} holds {c} of {total}"
+            );
+        }
+        // The triangular split front-loads fewer rows per band.
+        assert!(r[0].len() < r[3].len());
+    }
+
+    #[test]
+    fn weighted_ranges_degenerate_costs_fall_back() {
+        let r = weighted_ranges(10, 3, |_| 0.0);
+        assert_eq!(r, even_ranges(10, 3));
+        assert_eq!(weighted_ranges(0, 3, |_| 1.0), Vec::new());
+        assert_eq!(weighted_ranges(5, 1, |_| 1.0), vec![0..5]);
+    }
+
+    #[test]
+    fn par_map_parts_preserves_order() {
+        let ranges = even_ranges(50, 8);
+        let ids = par_map_parts(&ranges, |part, r| (part, r.start));
+        for (i, (part, start)) in ids.iter().enumerate() {
+            assert_eq!(*part, i);
+            assert_eq!(*start, ranges[i].start);
+        }
+    }
+
+    #[test]
+    fn par_fill_rows_matches_serial() {
+        let rows = 37;
+        let cols = 11;
+        let fill = |i: usize, row: &mut [f64]| {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (i * 31 + j) as f64;
+            }
+        };
+        let mut serial = vec![0.0; rows * cols];
+        for i in 0..rows {
+            fill(i, &mut serial[i * cols..(i + 1) * cols]);
+        }
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut par = vec![0.0; rows * cols];
+            par_fill_rows(&mut par, cols, threads, fill);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_row_bands_cover_all_rows_once() {
+        let rows = 23;
+        let cols = 3;
+        let mut data = vec![0u32; rows * cols];
+        let ranges = even_ranges(rows, 5);
+        par_row_bands_mut(&mut data, cols, &ranges, |range, band| {
+            for (k, row) in band.chunks_mut(cols).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (range.start + k + 1) as u32;
+                }
+            }
+        });
+        for i in 0..rows {
+            for j in 0..cols {
+                assert_eq!(data[i * cols + j], (i + 1) as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn par_sum_close_to_serial() {
+        let n = 10_000;
+        let term = |i: usize| ((i as f64) * 0.37).sin();
+        let serial: f64 = (0..n).map(term).sum();
+        for parts in [1usize, 2, 7, 16] {
+            let p = par_sum(n, parts, term);
+            assert!(
+                (p - serial).abs() < 1e-9,
+                "parts={parts}: {p} vs {serial}"
+            );
+        }
+    }
+
+    #[test]
+    fn par_join_returns_both() {
+        let (a, b) = par_join(|| 21 * 2, || "ok".to_string());
+        assert_eq!(a, 42);
+        assert_eq!(b, "ok");
+    }
+
+    #[test]
+    fn resolve_threads_clamps() {
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(1_000_000), MAX_THREADS);
+        assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn threads_for_work_respects_threshold() {
+        assert_eq!(threads_for_work(99, 100), 1);
+        assert!(threads_for_work(100, 100) >= 1);
+        assert_eq!(threads_for_work(0, 1), 1);
+    }
+}

@@ -5,16 +5,26 @@
 //!
 //! * [`NativeBackend`] — pure-rust kernel evaluation (`kernel::Kernel`),
 //!   always available; the correctness oracle for the PJRT path.
-//! * [`PjrtBackend`] (in `pjrt.rs`) — loads `artifacts/*.hlo.txt` (the HLO
-//!   text lowered from the L2 JAX graphs wrapping the L1 Pallas kernels),
-//!   compiles them on the PJRT CPU client once, and executes them with
-//!   bucket padding.  Python is never involved at this point.
+//! * [`PjrtBackend`] (in `pjrt_xla.rs`, behind the `pjrt` cargo feature)
+//!   — loads `artifacts/*.hlo.txt` (the HLO text lowered from the L2 JAX
+//!   graphs wrapping the L1 Pallas kernels), compiles them on the PJRT
+//!   CPU client once, and executes them with bucket padding.  Python is
+//!   never involved at this point.  Builds without the feature get an
+//!   API-compatible stub (`pjrt.rs`) whose `load` reports a runtime
+//!   error, so the crate compiles without the `xla` bindings.
 //!
 //! The backend trait is deliberately `&mut self`: the PJRT backend caches
 //! compiled executables lazily, and single ownership per worker thread
-//! keeps the service design lock-free on the hot path.
+//! keeps the service design lock-free on the hot path.  Inside one
+//! backend call, data-parallel work (Gram rows, fused projection rows)
+//! fans out through [`crate::parallel`].
 
 mod manifest;
+
+#[cfg(feature = "pjrt")]
+#[path = "pjrt_xla.rs"]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
 mod pjrt;
 
 pub use manifest::{ArtifactSpec, Manifest};
@@ -60,6 +70,19 @@ impl GramBackend for NativeBackend {
     fn gram(&mut self, x: &Matrix, y: &Matrix, kernel: &Kernel)
         -> Result<Matrix> {
         Ok(kernel.gram(x, y))
+    }
+
+    /// Fused projection: skips the n x m Gram temporary entirely and
+    /// embeds rows in parallel (`Kernel::embed_rows`).  This is the path
+    /// the coordinator's batch executor takes for every native batch.
+    fn embed(
+        &mut self,
+        x: &Matrix,
+        centers: &Matrix,
+        coeffs: &Matrix,
+        kernel: &Kernel,
+    ) -> Result<Matrix> {
+        kernel.embed_rows(x, centers, coeffs)
     }
 
     fn name(&self) -> &'static str {
@@ -111,7 +134,7 @@ mod tests {
     }
 
     #[test]
-    fn default_embed_composes_gram_and_matmul() {
+    fn fused_embed_agrees_with_gram_matmul_composition() {
         let ds = gaussian_mixture_2d(15, 2, 0.5, 2);
         let k = Kernel::gaussian(1.0);
         let centers = ds.x.select_rows(&[0, 3, 7]);

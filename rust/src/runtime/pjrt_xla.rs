@@ -1,0 +1,337 @@
+//! The PJRT backend: execute the AOT artifacts from the rust hot path.
+//!
+//! Pipeline per call: pick the smallest covering (m, d) bucket from the
+//! manifest, zero-pad inputs into the bucket (feature-dim padding is exact
+//! for radial kernels; padded centers carry zero coeffs/weights; padded
+//! rows are sliced off), chunk rows in units of the artifact's fixed row
+//! bucket, execute, unpad.  Center sets wider than the largest bucket are
+//! chunked and (for embed) accumulated — embed is linear in the centers.
+//!
+//! Executables are compiled once per artifact and cached; all execution is
+//! synchronous on the caller's thread (the coordinator provides the
+//! parallelism story).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::GramBackend;
+use crate::error::{Error, Result};
+use crate::kernel::{Kernel, KernelKind};
+use crate::linalg::Matrix;
+
+/// PJRT-backed implementation of [`GramBackend`].
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (for metrics/tests).
+    pub executions: u64,
+}
+
+impl PjrtBackend {
+    /// Create a backend over an artifacts directory (reads the manifest;
+    /// compiles lazily on first use of each artifact).
+    pub fn load(dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("pjrt client: {e:?}")))?;
+        Ok(PjrtBackend {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+            executions: 0,
+        })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn kernel_name(kernel: &Kernel) -> Result<&'static str> {
+        match kernel.kind {
+            KernelKind::Gaussian => Ok("gaussian"),
+            KernelKind::Laplacian => Ok("laplacian"),
+            KernelKind::Cauchy => Err(Error::Runtime(
+                "no cauchy artifacts in the lattice; use the native \
+                 backend"
+                    .into(),
+            )),
+        }
+    }
+
+    fn executable(&mut self, spec: &ArtifactSpec)
+        -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(&spec.name) {
+            let path = self.manifest.file_path(spec);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| {
+                    Error::Runtime(format!(
+                        "load {}: {e:?}",
+                        path.display()
+                    ))
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| {
+                Error::Runtime(format!("compile {}: {e:?}", spec.name))
+            })?;
+            self.compiled.insert(spec.name.clone(), exe);
+        }
+        Ok(&self.compiled[&spec.name])
+    }
+
+    /// Zero-pad `src` (rows x cols, possibly using only the first
+    /// `live_rows` rows) into an f32 buffer of shape (pad_rows, pad_cols).
+    fn pad_f32(
+        src: &Matrix,
+        row_start: usize,
+        live_rows: usize,
+        pad_rows: usize,
+        pad_cols: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0f32; pad_rows * pad_cols];
+        for r in 0..live_rows {
+            let srow = src.row(row_start + r);
+            let dst = &mut out[r * pad_cols..r * pad_cols + src.cols()];
+            for (d, &v) in dst.iter_mut().zip(srow.iter()) {
+                *d = v as f32;
+            }
+        }
+        out
+    }
+
+    fn literal(buf: &[f32], rows: usize, cols: usize)
+        -> Result<xla::Literal> {
+        xla::Literal::vec1(buf)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| Error::Runtime(format!("literal reshape: {e:?}")))
+    }
+
+    /// Execute one artifact over row chunks of `x`, with the center-side
+    /// operand(s) already padded; returns the (x.rows() x out_cols_live)
+    /// result, slicing off row padding and column padding.
+    fn run_chunked(
+        &mut self,
+        spec_name: &str,
+        spec: &ArtifactSpec,
+        x: &Matrix,
+        fixed_inputs: &[xla::Literal],
+        out_cols_bucket: usize,
+        out_cols_live: usize,
+    ) -> Result<Matrix> {
+        let n_bucket = spec.n;
+        let mut out = Matrix::zeros(x.rows(), out_cols_live);
+        let mut row = 0usize;
+        while row < x.rows() {
+            let live = (x.rows() - row).min(n_bucket);
+            let xbuf = Self::pad_f32(x, row, live, n_bucket, spec.d);
+            let xlit = Self::literal(&xbuf, n_bucket, spec.d)?;
+            let mut args: Vec<&xla::Literal> = vec![&xlit];
+            args.extend(fixed_inputs.iter());
+            let exe = self.executable(spec)?;
+            let result = exe
+                .execute::<&xla::Literal>(&args)
+                .map_err(|e| {
+                    Error::Runtime(format!("execute {spec_name}: {e:?}"))
+                })?[0][0]
+                .to_literal_sync()
+                .map_err(|e| {
+                    Error::Runtime(format!("fetch {spec_name}: {e:?}"))
+                })?;
+            self.executions += 1;
+            let tuple = result.to_tuple1().map_err(|e| {
+                Error::Runtime(format!("untuple {spec_name}: {e:?}"))
+            })?;
+            let vals: Vec<f32> = tuple.to_vec().map_err(|e| {
+                Error::Runtime(format!("to_vec {spec_name}: {e:?}"))
+            })?;
+            if vals.len() != n_bucket * out_cols_bucket {
+                return Err(Error::Runtime(format!(
+                    "{spec_name}: expected {} outputs, got {}",
+                    n_bucket * out_cols_bucket,
+                    vals.len()
+                )));
+            }
+            for r in 0..live {
+                for c in 0..out_cols_live {
+                    out.set(
+                        row + r,
+                        c,
+                        vals[r * out_cols_bucket + c] as f64,
+                    );
+                }
+            }
+            row += live;
+        }
+        Ok(out)
+    }
+
+    /// gram via one bucket (centers fit a single bucket).
+    fn gram_one_bucket(
+        &mut self,
+        x: &Matrix,
+        y: &Matrix,
+        kernel: &Kernel,
+        spec: ArtifactSpec,
+    ) -> Result<Matrix> {
+        let ybuf = Self::pad_f32(y, 0, y.rows(), spec.m, spec.d);
+        let ylit = Self::literal(&ybuf, spec.m, spec.d)?;
+        let glit = Self::literal(&[kernel.gamma() as f32], 1, 1)?;
+        let fixed = vec![ylit, glit];
+        self.run_chunked(
+            &spec.name.clone(),
+            &spec,
+            x,
+            &fixed,
+            spec.m,
+            y.rows(),
+        )
+    }
+
+    /// embed via one bucket.
+    fn embed_one_bucket(
+        &mut self,
+        x: &Matrix,
+        centers: &Matrix,
+        coeffs: &Matrix,
+        kernel: &Kernel,
+        spec: ArtifactSpec,
+    ) -> Result<Matrix> {
+        let cbuf = Self::pad_f32(centers, 0, centers.rows(), spec.m, spec.d);
+        let clit = Self::literal(&cbuf, spec.m, spec.d)?;
+        let glit = Self::literal(&[kernel.gamma() as f32], 1, 1)?;
+        let abuf = Self::pad_f32(coeffs, 0, coeffs.rows(), spec.m, spec.k);
+        let alit = Self::literal(&abuf, spec.m, spec.k)?;
+        let fixed = vec![clit, glit, alit];
+        self.run_chunked(
+            &spec.name.clone(),
+            &spec,
+            x,
+            &fixed,
+            spec.k,
+            coeffs.cols(),
+        )
+    }
+}
+
+impl GramBackend for PjrtBackend {
+    fn gram(&mut self, x: &Matrix, y: &Matrix, kernel: &Kernel)
+        -> Result<Matrix> {
+        if x.cols() != y.cols() {
+            return Err(Error::Shape(format!(
+                "gram: {}d vs {}d",
+                x.cols(),
+                y.cols()
+            )));
+        }
+        let kname = Self::kernel_name(kernel)?;
+        if let Some(spec) =
+            self.manifest.pick("gram", kname, y.rows(), y.cols())
+        {
+            return self.gram_one_bucket(x, y, kernel, spec.clone());
+        }
+        // Centers wider than the largest bucket: chunk columns.
+        let max_m = self
+            .manifest
+            .max_m("gram", kname, y.cols())
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no gram artifact covers kernel={kname} d={}",
+                    y.cols()
+                ))
+            })?;
+        let mut out = Matrix::zeros(x.rows(), y.rows());
+        let mut col = 0usize;
+        while col < y.rows() {
+            let live = (y.rows() - col).min(max_m);
+            let idx: Vec<usize> = (col..col + live).collect();
+            let ychunk = y.select_rows(&idx);
+            let spec = self
+                .manifest
+                .pick("gram", kname, live, y.cols())
+                .expect("max_m guaranteed a bucket");
+            let part =
+                self.gram_one_bucket(x, &ychunk, kernel, spec.clone())?;
+            for i in 0..x.rows() {
+                for j in 0..live {
+                    out.set(i, col + j, part.get(i, j));
+                }
+            }
+            col += live;
+        }
+        Ok(out)
+    }
+
+    fn embed(
+        &mut self,
+        x: &Matrix,
+        centers: &Matrix,
+        coeffs: &Matrix,
+        kernel: &Kernel,
+    ) -> Result<Matrix> {
+        if centers.rows() != coeffs.rows() {
+            return Err(Error::Shape(format!(
+                "embed: {} centers vs {} coeff rows",
+                centers.rows(),
+                coeffs.rows()
+            )));
+        }
+        let kname = Self::kernel_name(kernel)?;
+        let k_bucket = self.manifest.k_rank;
+        if coeffs.cols() > k_bucket {
+            return Err(Error::Runtime(format!(
+                "embed: rank {} exceeds artifact rank bucket {k_bucket}",
+                coeffs.cols()
+            )));
+        }
+        if let Some(spec) = self
+            .manifest
+            .pick("embed", kname, centers.rows(), centers.cols())
+        {
+            return self.embed_one_bucket(
+                x,
+                centers,
+                coeffs,
+                kernel,
+                spec.clone(),
+            );
+        }
+        // Wide center sets: embed is linear in centers — accumulate chunks.
+        let max_m = self
+            .manifest
+            .max_m("embed", kname, centers.cols())
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no embed artifact covers kernel={kname} d={}",
+                    centers.cols()
+                ))
+            })?;
+        let mut out = Matrix::zeros(x.rows(), coeffs.cols());
+        let mut row = 0usize;
+        while row < centers.rows() {
+            let live = (centers.rows() - row).min(max_m);
+            let idx: Vec<usize> = (row..row + live).collect();
+            let cchunk = centers.select_rows(&idx);
+            let achunk = coeffs.select_rows(&idx);
+            let spec = self
+                .manifest
+                .pick("embed", kname, live, centers.cols())
+                .expect("max_m guaranteed a bucket");
+            let part = self.embed_one_bucket(
+                x,
+                &cchunk,
+                &achunk,
+                kernel,
+                spec.clone(),
+            )?;
+            out = out.add(&part)?;
+            row += live;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -9,6 +9,21 @@
 
 use crate::prng::Pcg64;
 
+/// Seeded standard-normal matrix — the shared generator for tests and
+/// benches that need deterministic random inputs outside a
+/// [`prop_check`] run.
+pub fn random_matrix(rows: usize, cols: usize, seed: u64)
+    -> crate::linalg::Matrix {
+    let mut rng = Pcg64::new(seed);
+    let mut m = crate::linalg::Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            m.set(i, j, rng.normal());
+        }
+    }
+    m
+}
+
 /// Generation context: a seeded stream plus the current size hint
 /// (shrinking lowers the hint and regenerates).
 pub struct GenCtx<'a> {

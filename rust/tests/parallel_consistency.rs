@@ -1,0 +1,255 @@
+//! Parallel-engine consistency: every parallel hot path must agree with
+//! its serial reference across thread counts {1, 2, 8}, and fixed seeds
+//! must give bit-identical results run to run.
+//!
+//! For the per-element kernels (Gram, matmul, batched projection, k-NN)
+//! agreement is *exact* — each output element is produced by the same
+//! operation sequence at any thread count.  For the chunked reductions
+//! (MMD sums) agreement is within re-association rounding (<= 1e-10,
+//! far tighter in practice).
+//!
+//! The tests mutate the process-global thread setting
+//! (`parallel::set_threads`), so they serialize on a local mutex and
+//! restore the auto default on exit.
+
+use std::sync::{Mutex, MutexGuard};
+
+use rskpca::classify::KnnClassifier;
+use rskpca::data::gaussian_mixture_2d;
+use rskpca::density::{RsdeEstimator, ShadowDensity};
+use rskpca::kernel::Kernel;
+use rskpca::kpca::{fit_kpca, fit_nystrom, fit_rskpca};
+use rskpca::linalg::subspace_eigh;
+use rskpca::mmd::mmd_weighted;
+use rskpca::parallel;
+use rskpca::testutil::{prop_check, random_matrix};
+
+static THREAD_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize tests that flip the global thread count; recover from
+/// poisoning so one failure doesn't cascade.
+fn lock() -> MutexGuard<'static, ()> {
+    THREAD_LOCK
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Run `f` once per thread count in {1, 2, 8}, restoring auto after.
+fn for_thread_counts(mut f: impl FnMut(usize)) {
+    for &t in &[1usize, 2, 8] {
+        parallel::set_threads(t);
+        f(t);
+    }
+    parallel::set_threads(0);
+}
+
+#[test]
+fn gram_paths_bitwise_equal_across_thread_counts() {
+    let _g = lock();
+    // Big enough that the parallel bands engage at t >= 2.
+    let x = random_matrix(130, 6, 1);
+    let y = random_matrix(85, 6, 2);
+    for kernel in [
+        Kernel::gaussian(1.1),
+        Kernel::laplacian(0.8),
+        Kernel::cauchy(1.9),
+    ] {
+        let gram_ref = kernel.gram_serial(&x, &y);
+        let sym_ref = kernel.gram_sym_serial(&x);
+        for_thread_counts(|t| {
+            assert_eq!(
+                kernel.gram(&x, &y),
+                gram_ref,
+                "gram {:?} at t={t}",
+                kernel.kind
+            );
+            assert_eq!(
+                kernel.gram_sym(&x),
+                sym_ref,
+                "gram_sym {:?} at t={t}",
+                kernel.kind
+            );
+        });
+    }
+}
+
+#[test]
+fn prop_gram_sym_parallel_matches_serial() {
+    let _g = lock();
+    prop_check(
+        "gram_sym_parallel",
+        25,
+        |g| {
+            // Lower bound 70 keeps n^2 above the parallel threshold so
+            // the banded path actually runs (the size hint caps n near
+            // 102).
+            let n = g.usize_in(70, 120);
+            let d = g.usize_in(1, 5);
+            (g.matrix(n, d), g.f64_in(0.3, 3.0))
+        },
+        |(x, sigma)| {
+            let kernel = Kernel::gaussian(*sigma);
+            let reference = kernel.gram_sym_serial(x);
+            for &t in &[1usize, 2, 8] {
+                parallel::set_threads(t);
+                let par = kernel.gram_sym(x);
+                parallel::set_threads(0);
+                let dev = par.sub(&reference).unwrap().max_abs();
+                if dev > 1e-10 {
+                    return Err(format!(
+                        "t={t}: max dev {dev} (n={})",
+                        x.rows()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn matmul_and_matvec_thread_count_invariant() {
+    let _g = lock();
+    let a = random_matrix(70, 90, 3);
+    let bm = random_matrix(90, 60, 4);
+    let v: Vec<f64> = (0..90).map(|i| (i as f64 * 0.31).cos()).collect();
+    parallel::set_threads(1);
+    let mm_ref = a.matmul(&bm).unwrap();
+    let mt_ref = a.matmul_transb(&random_matrix(50, 90, 5)).unwrap();
+    let mv_ref = a.matvec(&v).unwrap();
+    for_thread_counts(|t| {
+        assert_eq!(a.matmul(&bm).unwrap(), mm_ref, "matmul t={t}");
+        assert_eq!(
+            a.matmul_transb(&random_matrix(50, 90, 5)).unwrap(),
+            mt_ref,
+            "matmul_transb t={t}"
+        );
+        assert_eq!(a.matvec(&v).unwrap(), mv_ref, "matvec t={t}");
+    });
+}
+
+#[test]
+fn subspace_eigh_thread_count_invariant_and_correct() {
+    let _g = lock();
+    let ds = gaussian_mixture_2d(120, 3, 0.4, 6);
+    let kernel = Kernel::gaussian(1.0);
+    parallel::set_threads(1);
+    let gram = kernel.gram_sym(&ds.x).scale(1.0 / 120.0);
+    let reference = subspace_eigh(&gram, 4, 300, 1e-13).unwrap();
+    for_thread_counts(|t| {
+        let e = subspace_eigh(&gram, 4, 300, 1e-13).unwrap();
+        assert_eq!(e.values, reference.values, "values t={t}");
+        assert_eq!(
+            e.vectors.as_slice(),
+            reference.vectors.as_slice(),
+            "vectors t={t}"
+        );
+    });
+    // And the Ritz pairs really solve the eigenproblem.
+    for j in 0..4 {
+        let v = reference.vectors.col(j);
+        let av = gram.matvec(&v).unwrap();
+        for i in 0..v.len() {
+            assert!(
+                (av[i] - reference.values[j] * v[i]).abs() < 1e-7,
+                "residual at pair {j}"
+            );
+        }
+    }
+}
+
+#[test]
+fn transform_batch_matches_serial_for_all_backbones() {
+    let _g = lock();
+    // 300 query rows x 150 centers x 2 dims clears the fused-projection
+    // flop threshold, so the full-KPCA / Nyström models exercise the
+    // parallel bands at t >= 2 (the small RSKPCA center set stays on the
+    // serial fast path, which the equality check covers too).
+    let train = gaussian_mixture_2d(150, 3, 0.4, 7);
+    let test = gaussian_mixture_2d(300, 3, 0.4, 8);
+    let kernel = Kernel::gaussian(1.0);
+    let rs = ShadowDensity::new(4.0).reduce(&train.x, &kernel);
+    parallel::set_threads(1);
+    let models = vec![
+        fit_kpca(&train.x, &kernel, 4).unwrap(),
+        fit_nystrom(&train.x, &kernel, 4, 30, 9).unwrap(),
+        fit_rskpca(&rs, &kernel, 4).unwrap(),
+    ];
+    for model in &models {
+        parallel::set_threads(1);
+        let reference = model.transform_batch(&test.x);
+        // Row i must equal the single-point path bit-for-bit.
+        for i in (0..test.x.rows()).step_by(29) {
+            let zp = model.transform_point(test.x.row(i));
+            for j in 0..model.r() {
+                assert_eq!(
+                    zp[j],
+                    reference.get(i, j),
+                    "{}: point path differs at ({i},{j})",
+                    model.method
+                );
+            }
+        }
+        for_thread_counts(|t| {
+            assert_eq!(
+                model.transform_batch(&test.x),
+                reference,
+                "{} at t={t}",
+                model.method
+            );
+        });
+    }
+    parallel::set_threads(0);
+}
+
+#[test]
+fn knn_predict_thread_count_invariant() {
+    let _g = lock();
+    let train = gaussian_mixture_2d(300, 3, 0.3, 10);
+    let test = gaussian_mixture_2d(120, 3, 0.3, 11);
+    let knn = KnnClassifier::fit(train.x.clone(), train.y.clone(), 3);
+    parallel::set_threads(1);
+    let reference = knn.predict(&test.x);
+    for_thread_counts(|t| {
+        assert_eq!(knn.predict(&test.x), reference, "knn t={t}");
+    });
+}
+
+#[test]
+fn mmd_sums_within_reassociation_tolerance() {
+    let _g = lock();
+    let x = gaussian_mixture_2d(220, 3, 0.4, 12).x;
+    let kernel = Kernel::gaussian(1.0);
+    let rs = ShadowDensity::new(4.0).reduce(&x, &kernel);
+    parallel::set_threads(1);
+    let reference = mmd_weighted(&x, &rs.centers, &rs.weights, &kernel);
+    for_thread_counts(|t| {
+        let v = mmd_weighted(&x, &rs.centers, &rs.weights, &kernel);
+        assert!(
+            (v - reference).abs() <= 1e-10,
+            "mmd t={t}: {v} vs {reference}"
+        );
+    });
+}
+
+#[test]
+fn fits_are_deterministic_under_fixed_seeds_at_8_threads() {
+    let _g = lock();
+    parallel::set_threads(8);
+    let ds = gaussian_mixture_2d(180, 3, 0.35, 13);
+    let kernel = Kernel::gaussian(1.2);
+    let rs1 = ShadowDensity::new(4.0).reduce(&ds.x, &kernel);
+    let rs2 = ShadowDensity::new(4.0).reduce(&ds.x, &kernel);
+    assert_eq!(rs1.weights, rs2.weights);
+    let m1 = fit_rskpca(&rs1, &kernel, 4).unwrap();
+    let m2 = fit_rskpca(&rs2, &kernel, 4).unwrap();
+    assert_eq!(m1.coeffs.as_slice(), m2.coeffs.as_slice());
+    assert_eq!(m1.op_eigenvalues, m2.op_eigenvalues);
+    let n1 = fit_nystrom(&ds.x, &kernel, 3, 25, 77).unwrap();
+    let n2 = fit_nystrom(&ds.x, &kernel, 3, 25, 77).unwrap();
+    assert_eq!(n1.coeffs.as_slice(), n2.coeffs.as_slice());
+    let z1 = m1.transform_batch(&ds.x);
+    let z2 = m2.transform_batch(&ds.x);
+    assert_eq!(z1.as_slice(), z2.as_slice());
+    parallel::set_threads(0);
+}
