@@ -25,6 +25,19 @@ fi
 step "cargo test -q"
 cargo test -q
 
+step "cargo clippy --all-targets (warnings denied)"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy -q --all-targets -- -D warnings
+else
+    echo "clippy not installed; skipping lint"
+fi
+
+# Release-built example smoke stays out of the quick debug cycle.
+if [ "${1:-}" != "quick" ]; then
+    step "online lifecycle example smoke (drift scenario)"
+    cargo run --release --example online_drift -- --quick
+fi
+
 step "cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

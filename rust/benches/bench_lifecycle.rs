@@ -1,0 +1,194 @@
+//! Online-lifecycle bench: incremental `EmbeddingModel::refresh` versus
+//! a full retrain (re-reduce all n source points + refit), at
+//! m ∈ {100, 400, 1000} with n = 10·m source points, plus hot-swap
+//! publish latency under concurrent `embed` load.
+//!
+//! The dataset is a jittered grid of exactly m ε-separated sites so the
+//! streaming cover retains exactly m centers — the knob the lifecycle
+//! cost model is parameterized by.  Full retrain pays O(n·m) for the
+//! re-reduction plus the O(m³) exact eigensolve; refresh pays only the
+//! incremental Gram update plus the m×m solve (O(m²k) under the
+//! `Subspace` policy the refreshed model records) — the ≥5× gap the
+//! acceptance criteria ask for at m = 1000.
+//!
+//! Run: `cargo bench --bench bench_lifecycle`
+//! (quick: `RSKPCA_BENCH_QUICK=1 cargo bench --bench bench_lifecycle`)
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use rskpca::bench::{harness, quick_mode};
+use rskpca::config::ServiceConfig;
+use rskpca::coordinator::{EmbeddingService, ModelRegistry, DEFAULT_MODEL};
+use rskpca::density::{RsdeEstimator, ShadowDensity, StreamingShadow};
+use rskpca::kernel::Kernel;
+use rskpca::kpca::{fit_rskpca, fit_rskpca_with, EigSolver, GramCache};
+use rskpca::linalg::Matrix;
+use rskpca::prng::Pcg64;
+use rskpca::runtime::NativeBackend;
+
+/// n points jittered (±0.05 per coordinate, so any two points of one
+/// site are within 0.1·√2 < 0.25 of each other) around m grid sites
+/// spaced 1.0 apart; with eps = sigma/ell = 0.25 the streaming cover
+/// retains exactly m centers (every site appears at least once).
+///
+/// Points before `cut` use only the first `m_pre` sites; the remaining
+/// `m - m_pre` sites first appear at `cut`, so the delta window the
+/// refresh benchmark replays carries real center *additions* (the
+/// incremental Gram-extension path), not just weight bumps.
+fn grid_stream(m: usize, n: usize, cut: usize, m_pre: usize, seed: u64)
+    -> Matrix {
+    assert!(m_pre <= m && cut + (m - m_pre) <= n && m_pre <= cut);
+    let side = (m as f64).sqrt().ceil() as usize;
+    let mut rng = Pcg64::new(seed);
+    let mut x = Matrix::zeros(n, 2);
+    for i in 0..n {
+        let site = if i < m_pre {
+            i
+        } else if i < cut {
+            rng.below(m_pre)
+        } else if i < cut + (m - m_pre) {
+            m_pre + (i - cut)
+        } else {
+            rng.below(m)
+        };
+        x.set(i, 0, (site / side) as f64 + 0.05 * rng.range(-1.0, 1.0));
+        x.set(i, 1, (site % side) as f64 + 0.05 * rng.range(-1.0, 1.0));
+    }
+    x
+}
+
+fn main() {
+    let mut b = harness();
+    let kernel = Kernel::gaussian(1.0); // eps = 0.25 at ell = 4
+    let rank = 5;
+    let sizes: &[usize] =
+        if quick_mode() { &[50, 100] } else { &[100, 400, 1000] };
+
+    for &m in sizes {
+        let n = 10 * m;
+        // The last 10% of the stream is the delta window; 5% of the
+        // sites first appear inside it, so the refresh replays genuine
+        // center additions (Gram extension) on top of weight bumps.
+        let cut = n - n / 10;
+        let m_pre = m - (m / 20).max(1);
+        let x = grid_stream(m, n, cut, m_pre, 42);
+
+        let mut stream = StreamingShadow::new(&kernel, 4.0, 2);
+        for i in 0..cut {
+            stream.observe(x.row(i));
+        }
+        stream.drain_delta();
+        let base_exact =
+            fit_rskpca(&stream.snapshot(), &kernel, rank).unwrap();
+        let base_sub = fit_rskpca_with(
+            &stream.snapshot(),
+            &kernel,
+            rank,
+            &EigSolver::Subspace { k: 0, tol: 1e-10 },
+        )
+        .unwrap();
+        let base_cache = GramCache::new(&kernel, &base_exact.centers);
+        for i in cut..n {
+            stream.observe(x.row(i));
+        }
+        let delta = stream.drain_delta();
+        assert_eq!(stream.m(), m, "grid did not yield exactly m centers");
+        assert_eq!(
+            delta.added.rows(),
+            m - m_pre,
+            "delta window must introduce new centers"
+        );
+
+        // Full retrain: re-reduce all n points, refit from scratch.
+        let retrain = b
+            .bench(&format!("retrain_full/m{m}_n{n}"), || {
+                let rs = ShadowDensity::new(4.0).reduce(&x, &kernel);
+                fit_rskpca(&rs, &kernel, rank).unwrap().r()
+            })
+            .mean_s;
+
+        // Incremental refresh, exact m x m solve.
+        let refresh_exact = b
+            .bench(&format!("refresh_exact/m{m}"), || {
+                let mut model = base_exact.clone();
+                let mut cache = base_cache.clone();
+                model.refresh(&delta, &mut cache, rank).unwrap();
+                model.meta.version
+            })
+            .mean_s;
+
+        // Incremental refresh under the Subspace policy (the policy is
+        // recorded in the model metadata, so refresh just follows it).
+        let refresh_sub = b
+            .bench(&format!("refresh_subspace/m{m}"), || {
+                let mut model = base_sub.clone();
+                let mut cache = base_cache.clone();
+                model.refresh(&delta, &mut cache, rank).unwrap();
+                model.meta.version
+            })
+            .mean_s;
+
+        println!(
+            "# m={m}: retrain/refresh_exact = {:.1}x, \
+             retrain/refresh_subspace = {:.1}x",
+            retrain / refresh_exact,
+            retrain / refresh_sub
+        );
+    }
+
+    // Hot-swap latency under concurrent embed load, at the largest size:
+    // publish is a pointer swap under a write lock, so it should sit far
+    // below a single batch execution.
+    let m = *sizes.last().unwrap();
+    let x = grid_stream(m, 10 * m, 9 * m, m, 7);
+    let rs = ShadowDensity::new(4.0).reduce(&x, &kernel);
+    let model = fit_rskpca(&rs, &kernel, rank).unwrap();
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish(DEFAULT_MODEL, model.clone());
+    let svc = EmbeddingService::start_with_registry(
+        registry.clone(),
+        DEFAULT_MODEL,
+        Box::new(|| Ok(Box::new(NativeBackend))),
+        ServiceConfig {
+            max_batch: 64,
+            max_wait_us: 200,
+            queue_depth: 512,
+            workers: 1,
+        },
+    )
+    .unwrap();
+    let running = Arc::new(AtomicBool::new(true));
+    let mut clients = Vec::new();
+    for c in 0..2u64 {
+        let h = svc.handle();
+        let running = running.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(0xC11E + c);
+            while running.load(Ordering::Relaxed) {
+                let mut rows = Matrix::zeros(16, 2);
+                for i in 0..16 {
+                    for j in 0..2 {
+                        rows.set(i, j, rng.normal());
+                    }
+                }
+                let _ = h.embed(rows);
+            }
+        }));
+    }
+    b.bench(&format!("hot_swap_publish/m{m}"), || {
+        registry.publish(DEFAULT_MODEL, model.clone())
+    });
+    running.store(false, Ordering::Relaxed);
+    for c in clients {
+        c.join().unwrap();
+    }
+    let snap = svc.shutdown();
+    println!(
+        "# hot swap: worker observed {} swaps over {} batches \
+         (serving v{})",
+        snap.model_swaps, snap.batches, snap.model_version
+    );
+
+    b.write_csv(std::path::Path::new("bench_lifecycle.csv")).ok();
+}

@@ -12,7 +12,7 @@ use crate::density::ShadowDensity;
 use crate::error::{Error, Result};
 use crate::experiments::{self, ExperimentCtx};
 use crate::kernel::Kernel;
-use crate::kpca::{fit_rskpca, EmbeddingModel};
+use crate::kpca::{fit_rskpca_with, EmbeddingModel, OnlineRskpca};
 use crate::linalg::Matrix;
 use crate::metrics::Timer;
 use crate::prng::Pcg64;
@@ -96,13 +96,15 @@ pub fn fit(args: &Args) -> Result<()> {
     };
     let kernel = Kernel::new(cfg.kernel, sigma);
     println!(
-        "fit: dataset={} n={} d={} kernel={} sigma={sigma:.3} ell={} r={}",
+        "fit: dataset={} n={} d={} kernel={} sigma={sigma:.3} ell={} r={} \
+         solver={}",
         ds.name,
         ds.n(),
         ds.dim(),
         kernel.kind.name(),
         cfg.ell,
-        cfg.rank
+        cfg.rank,
+        cfg.solver.name()
     );
     let t = Timer::start();
     let rs = ShadowDensity::new(cfg.ell).fit(&ds.x, &kernel);
@@ -112,7 +114,7 @@ pub fn fit(args: &Args) -> Result<()> {
         100.0 * rs.retention(),
         t.elapsed_s()
     );
-    let model = fit_rskpca(&rs, &kernel, cfg.rank)?;
+    let model = fit_rskpca_with(&rs, &kernel, cfg.rank, &cfg.solver)?;
     println!(
         "  rskpca: r={} fit total {:.3}s; saving to {model_out}",
         model.r(),
@@ -152,33 +154,48 @@ pub fn embed(args: &Args) -> Result<()> {
 /// `rskpca serve --model FILE [--requests N] [...]` — starts the service
 /// and drives it with an in-process load generator, reporting latency and
 /// throughput (the serving-benchmark entry point).
+///
+/// With `--refresh N` a background refresher thread feeds the same
+/// traffic into an online RSKPCA lifecycle ([`OnlineRskpca`]) and
+/// hot-swaps the served model every N requests through the service's
+/// [`crate::coordinator::ModelRegistry`] — streaming deltas →
+/// incremental refit → publish, with the batcher never draining.
 pub fn serve(args: &Args) -> Result<()> {
     let model = EmbeddingModel::load(Path::new(&req_flag(args, "model")?))?;
     let backend_name = args.flag_or("backend", "native");
     let artifacts = PathBuf::from(args.flag_or("artifacts", "artifacts"));
     let requests = args.flag_usize("requests", 200)?;
     let rows_per = args.flag_usize("rows-per-request", 8)?;
-    let cfg = match args.flag("config") {
+    let refresh_every = args.flag_usize("refresh", 0)?;
+    let ell = args.flag_f64("ell", 4.0)?;
+    let (cfg, solver) = match args.flag("config") {
         Some(path) => {
             let rc = RunConfig::from_file(Path::new(path))?;
             apply_threads(args, rc.threads)?;
-            rc.service
+            (rc.service, rc.solver)
         }
         None => {
             apply_threads(args, 0)?;
-            Default::default()
+            (Default::default(), Default::default())
         }
     };
     let dim = model.centers.cols();
+    let rank = model.r().max(1);
+    let kernel = model.kernel;
     println!(
         "serve: model={} centers={} r={} backend={backend_name} \
-         max_batch={} max_wait={}us queue={}",
+         max_batch={} max_wait={}us queue={} refresh={}",
         model.method,
         model.n_retained(),
         model.r(),
         cfg.max_batch,
         cfg.max_wait_us,
-        cfg.queue_depth
+        cfg.queue_depth,
+        if refresh_every > 0 {
+            format!("every {refresh_every} requests")
+        } else {
+            "off".into()
+        }
     );
     let svc = crate::coordinator::serve(
         model,
@@ -186,6 +203,37 @@ pub fn serve(args: &Args) -> Result<()> {
         cfg,
     )?;
     let handle = svc.handle();
+
+    // Background refresher: observes the same traffic and periodically
+    // publishes a refreshed model into the serving slot (hot swap).
+    // The feed is bounded and lossy (`try_send` below): when a refresh
+    // is in progress the generator drops rows instead of queueing them,
+    // so memory stays bounded and the post-run join never has a backlog
+    // of expensive refreshes to drain.
+    let (feed_tx, feed_rx) =
+        std::sync::mpsc::sync_channel::<Matrix>(2 * refresh_every.max(1));
+    let refresher = (refresh_every > 0).then(|| {
+        let registry = svc.registry();
+        let slot = svc.model_name().to_string();
+        std::thread::spawn(move || -> usize {
+            let mut online =
+                OnlineRskpca::new(kernel, ell, dim, rank, solver);
+            let mut published = 0usize;
+            let mut pending = 0usize;
+            while let Ok(rows) = feed_rx.recv() {
+                online.observe_rows(&rows);
+                pending += 1;
+                if pending >= refresh_every {
+                    pending = 0;
+                    if let Ok(Some(m)) = online.refresh() {
+                        registry.publish(&slot, m.clone());
+                        published += 1;
+                    }
+                }
+            }
+            published
+        })
+    });
 
     // Load generator: `requests` batches of random rows.
     let mut rng = Pcg64::new(0xD05E);
@@ -199,6 +247,10 @@ pub fn serve(args: &Args) -> Result<()> {
                 rows.set(i, j, rng.normal());
             }
         }
+        if refresh_every > 0 {
+            // Lossy feed: drop the sample when the refresher is busy.
+            let _ = feed_tx.try_send(rows.clone());
+        }
         match handle.try_embed(rows) {
             Ok(rx) => receivers.push(rx),
             Err(_) => rejected += 1,
@@ -209,6 +261,9 @@ pub fn serve(args: &Args) -> Result<()> {
             .map_err(|_| Error::Service("reply dropped".into()))??;
     }
     let wall = t.elapsed_s();
+    drop(feed_tx);
+    let published =
+        refresher.map(|h| h.join().unwrap_or(0)).unwrap_or(0);
     let snap = svc.shutdown();
     println!(
         "served {} requests ({} rows) in {wall:.3}s -> {:.0} rows/s, \
@@ -226,6 +281,13 @@ pub fn serve(args: &Args) -> Result<()> {
         snap.mean_batch_rows,
         snap.batches
     );
+    if refresh_every > 0 {
+        println!(
+            "refresher published {published} model(s); worker observed \
+             {} hot swap(s), now serving v{}",
+            snap.model_swaps, snap.model_version
+        );
+    }
     Ok(())
 }
 

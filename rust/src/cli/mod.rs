@@ -10,6 +10,7 @@
 //!                [--threads N]
 //! rskpca serve   --model FILE [--backend B] [--requests N]
 //!                [--rows-per-request N] [--config FILE] [--threads N]
+//!                [--refresh N] [--ell F]
 //! rskpca gen     --dataset NAME --out FILE [--seed N]
 //! rskpca info    [--artifacts DIR]
 //! ```
@@ -97,6 +98,9 @@ USAGE:
                 [--artifacts DIR]
   rskpca serve  --model FILE [--backend native|pjrt] [--requests N]
                 [--rows-per-request N] [--artifacts DIR] [--config FILE]
+                [--refresh N] [--ell F]
+      --refresh N hot-swaps the served model every N requests from a
+      background online-RSKPCA refresher fed by the live traffic
   rskpca gen    --dataset german|pendigits|usps|yale|gmm2d|swiss_roll
                 --out FILE [--seed N]
   rskpca info   [--artifacts DIR]

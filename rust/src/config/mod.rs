@@ -11,6 +11,7 @@ use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::kernel::KernelKind;
+use crate::kpca::EigSolver;
 
 /// A parsed TOML-subset document: section -> key -> value.
 #[derive(Clone, Debug, Default)]
@@ -209,6 +210,10 @@ pub struct RunConfig {
     /// 0 = auto (one per available core).  Flows into
     /// `parallel::set_threads` when the CLI loads the config.
     pub threads: usize,
+    /// Eigensolver policy for the fit pipeline: `solver = "exact"`
+    /// (default) or `"subspace"`, the latter tunable via
+    /// `solver_k` (0 = requested rank) and `solver_tol`.
+    pub solver: EigSolver,
     /// Embedding-service settings.
     pub service: ServiceConfig,
 }
@@ -249,6 +254,7 @@ impl Default for RunConfig {
             backend: "native".into(),
             artifacts_dir: "artifacts".into(),
             threads: 0,
+            solver: EigSolver::Exact,
             service: ServiceConfig::default(),
         }
     }
@@ -272,6 +278,22 @@ impl RunConfig {
         cfg.artifacts_dir =
             doc.get_str("run", "artifacts_dir", &cfg.artifacts_dir);
         cfg.threads = doc.get_usize("run", "threads", cfg.threads);
+        let solver_name = doc.get_str("run", "solver", "exact");
+        cfg.solver = EigSolver::parse(&solver_name).ok_or_else(|| {
+            Error::Config(format!(
+                "solver must be 'exact' or 'subspace[...]', got \
+                 '{solver_name}'"
+            ))
+        })?;
+        if let EigSolver::Subspace { k, tol } = &mut cfg.solver {
+            *k = doc.get_usize("run", "solver_k", *k);
+            *tol = doc.get_f64("run", "solver_tol", *tol);
+            if *tol <= 0.0 {
+                return Err(Error::Config(
+                    "solver_tol must be positive".into(),
+                ));
+            }
+        }
         if !matches!(cfg.backend.as_str(), "native" | "pjrt") {
             return Err(Error::Config(format!(
                 "backend must be 'native' or 'pjrt', got '{}'",
@@ -390,6 +412,30 @@ workers = 2
         assert!(
             RunConfig::from_toml("[service]\nmax_batch = 0").is_err()
         );
+        assert!(
+            RunConfig::from_toml("[run]\nsolver = \"magic\"").is_err()
+        );
+        assert!(RunConfig::from_toml(
+            "[run]\nsolver = \"subspace\"\nsolver_tol = -1"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn solver_policy_parses_with_knobs() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.solver, EigSolver::Exact);
+        let cfg = RunConfig::from_toml(
+            "[run]\nsolver = \"subspace\"\nsolver_k = 8\n\
+             solver_tol = 1e-10",
+        )
+        .unwrap();
+        assert_eq!(cfg.solver, EigSolver::Subspace { k: 8, tol: 1e-10 });
+        // The compact string form works too.
+        let cfg =
+            RunConfig::from_toml("[run]\nsolver = \"subspace:k=4\"")
+                .unwrap();
+        assert_eq!(cfg.solver, EigSolver::Subspace { k: 4, tol: 1e-12 });
     }
 
     #[test]

@@ -12,11 +12,20 @@
 //!   `max_batch` rows or `max_wait_us` elapse, then executes the whole
 //!   batch as one padded PJRT (or native) call, amortizing dispatch and
 //!   bucket padding;
-//! * per-request latency / batch-size / throughput **metrics**;
+//! * per-request latency / batch-size / throughput **metrics**
+//!   (including hot-swap counts and the serving model version);
+//! * a versioned [`ModelRegistry`] of named `Arc<EmbeddingModel>` slots
+//!   with **atomic hot swap**: the worker fetches the current model once
+//!   per batch, so a background refresher thread
+//!   ([`crate::kpca::OnlineRskpca`]) can publish refreshed models while
+//!   traffic flows — in-flight batches finish against the old model, the
+//!   next batch serves the new one, and the queue is never drained;
 //! * clean shutdown (explicit message + join).
 //!
 //! The worker thread exclusively owns the backend (PJRT executable cache
-//! is single-owner, no locks on the hot path).
+//! is single-owner, no locks on the hot path); the registry is the only
+//! shared-state surface, and its write lock is held only for the
+//! pointer swap.
 //!
 //! ## Threading model
 //!
@@ -34,11 +43,15 @@
 //! Dynamic batching therefore does double duty: it amortizes dispatch
 //! *and* hands the compute engine row counts big enough to parallelize.
 
+mod registry;
 mod service;
 
+pub use registry::{ModelRegistry, DEFAULT_MODEL};
 pub use service::{
     EmbeddingService, ServiceHandle, ServiceStatsSnapshot,
 };
+
+use std::sync::Arc;
 
 use crate::config::ServiceConfig;
 use crate::error::Result;
@@ -54,4 +67,17 @@ pub fn serve(
     cfg: ServiceConfig,
 ) -> Result<EmbeddingService> {
     EmbeddingService::start(model, factory, cfg)
+}
+
+/// Start an embedding service over an existing registry slot (the
+/// hot-swappable form of [`serve`]).
+///
+/// Convenience wrapper around [`EmbeddingService::start_with_registry`].
+pub fn serve_registry(
+    registry: Arc<ModelRegistry>,
+    model_name: &str,
+    factory: BackendFactory,
+    cfg: ServiceConfig,
+) -> Result<EmbeddingService> {
+    EmbeddingService::start_with_registry(registry, model_name, factory, cfg)
 }

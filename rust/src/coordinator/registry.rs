@@ -1,0 +1,178 @@
+//! Versioned model registry — the hot-swap surface of the serving layer.
+//!
+//! The registry holds named, versioned slots of `Arc<EmbeddingModel>`.
+//! Publishing to an existing name is an **atomic hot swap**: the write
+//! lock is held only for the pointer replacement, in-flight batches keep
+//! the `Arc` they already fetched (and finish against the old model),
+//! and the next batch the worker executes sees the new version — no
+//! queue drain, no worker restart.  A background refresher thread can
+//! therefore keep publishing refreshed models
+//! ([`crate::kpca::OnlineRskpca`]) while the batcher serves traffic.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::kpca::EmbeddingModel;
+
+/// Slot name used by the single-model convenience constructors
+/// (`EmbeddingService::start`, `coordinator::serve`).
+pub const DEFAULT_MODEL: &str = "default";
+
+#[derive(Debug)]
+struct Slot {
+    model: Arc<EmbeddingModel>,
+    version: u64,
+}
+
+/// Named, versioned `Arc<EmbeddingModel>` slots with atomic hot swap.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    slots: RwLock<BTreeMap<String, Slot>>,
+    swaps: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// Empty registry.
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Publish a model under `name`, returning its version (1 for a new
+    /// slot; replacing an existing slot bumps its version and the global
+    /// swap count).  Readers holding the previous `Arc` are unaffected.
+    pub fn publish(&self, name: &str, model: EmbeddingModel) -> u64 {
+        let mut slots = self.slots.write().unwrap();
+        match slots.get_mut(name) {
+            Some(slot) => {
+                slot.model = Arc::new(model);
+                slot.version += 1;
+                self.swaps.fetch_add(1, Ordering::Relaxed);
+                slot.version
+            }
+            None => {
+                slots.insert(
+                    name.to_string(),
+                    Slot { model: Arc::new(model), version: 1 },
+                );
+                1
+            }
+        }
+    }
+
+    /// Current model under `name`.
+    pub fn get(&self, name: &str) -> Option<Arc<EmbeddingModel>> {
+        self.slots
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|slot| slot.model.clone())
+    }
+
+    /// Current model and its version under `name`.
+    pub fn get_versioned(
+        &self,
+        name: &str,
+    ) -> Option<(Arc<EmbeddingModel>, u64)> {
+        self.slots
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|slot| (slot.model.clone(), slot.version))
+    }
+
+    /// Current version under `name`.
+    pub fn version(&self, name: &str) -> Option<u64> {
+        self.slots.read().unwrap().get(name).map(|slot| slot.version)
+    }
+
+    /// Registered model names (sorted).
+    pub fn names(&self) -> Vec<String> {
+        self.slots.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    /// Is the registry empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total hot swaps (publishes that replaced an existing slot) since
+    /// creation, across all names.
+    pub fn swap_count(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+    use crate::kernel::Kernel;
+    use crate::kpca::fit_kpca;
+
+    fn model(seed: u64) -> EmbeddingModel {
+        let ds = gaussian_mixture_2d(30, 2, 0.4, seed);
+        fit_kpca(&ds.x, &Kernel::gaussian(1.0), 2).unwrap()
+    }
+
+    #[test]
+    fn publish_versions_and_counts_swaps() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert_eq!(reg.publish("a", model(1)), 1);
+        assert_eq!(reg.publish("b", model(2)), 1);
+        assert_eq!(reg.swap_count(), 0, "first publishes are not swaps");
+        assert_eq!(reg.publish("a", model(3)), 2);
+        assert_eq!(reg.publish("a", model(4)), 3);
+        assert_eq!(reg.swap_count(), 2);
+        assert_eq!(reg.version("a"), Some(3));
+        assert_eq!(reg.version("b"), Some(1));
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.get("missing").is_none());
+    }
+
+    #[test]
+    fn readers_keep_their_arc_across_a_swap() {
+        let reg = ModelRegistry::new();
+        reg.publish(DEFAULT_MODEL, model(5));
+        let (old, v1) = reg.get_versioned(DEFAULT_MODEL).unwrap();
+        reg.publish(DEFAULT_MODEL, model(6));
+        let (new, v2) = reg.get_versioned(DEFAULT_MODEL).unwrap();
+        assert_eq!(v1, 1);
+        assert_eq!(v2, 2);
+        // The old Arc is still alive and unchanged.
+        assert!(!Arc::ptr_eq(&old, &new));
+        assert_eq!(old.n_retained(), 30);
+    }
+
+    #[test]
+    fn concurrent_publish_and_get_are_safe() {
+        let reg = Arc::new(ModelRegistry::new());
+        reg.publish(DEFAULT_MODEL, model(7));
+        let mut threads = Vec::new();
+        for t in 0..4u64 {
+            let reg = reg.clone();
+            threads.push(std::thread::spawn(move || {
+                for i in 0..10 {
+                    if t % 2 == 0 {
+                        reg.publish(DEFAULT_MODEL, model(t * 100 + i));
+                    } else {
+                        let got = reg.get(DEFAULT_MODEL).unwrap();
+                        assert_eq!(got.n_retained(), 30);
+                    }
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(reg.swap_count(), 20);
+        assert_eq!(reg.version(DEFAULT_MODEL), Some(21));
+    }
+}

@@ -1,10 +1,18 @@
-//! Threaded embedding service: bounded queue -> dynamic batcher -> backend.
+//! Threaded embedding service: bounded queue -> dynamic batcher -> backend,
+//! serving whichever model version the [`ModelRegistry`] currently holds.
+//!
+//! The worker fetches the model `Arc` once per *batch*, so a hot swap
+//! ([`ModelRegistry::publish`]) never blocks the batcher: in-flight
+//! batches finish against the model they fetched and the next batch sees
+//! the new version.  Swap observations are surfaced in the stats
+//! snapshot (`model_swaps`, `model_version`).
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::registry::{ModelRegistry, DEFAULT_MODEL};
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
 use crate::kpca::EmbeddingModel;
@@ -34,6 +42,11 @@ struct ServiceStats {
     rejected: u64,
     rows: u64,
     batches: u64,
+    /// Hot swaps the worker has observed (model version changed between
+    /// two executed batches).
+    model_swaps: u64,
+    /// Version of the model the worker most recently served.
+    model_version: u64,
 }
 
 /// A point-in-time copy of the service metrics.
@@ -48,6 +61,11 @@ pub struct ServiceStatsSnapshot {
     pub latency_p99_us: f64,
     pub mean_batch_rows: f64,
     pub max_batch_rows: f64,
+    /// Hot swaps observed by the batching worker.
+    pub model_swaps: u64,
+    /// Model version the worker most recently served (the registry may
+    /// already hold a newer one that no batch has picked up yet).
+    pub model_version: u64,
 }
 
 /// Cloneable client handle.
@@ -57,6 +75,8 @@ pub struct ServiceHandle {
     stats: Arc<Mutex<ServiceStats>>,
     rank: usize,
     dim: usize,
+    registry: Arc<ModelRegistry>,
+    model_name: String,
 }
 
 impl ServiceHandle {
@@ -115,9 +135,21 @@ impl ServiceHandle {
         Ok(())
     }
 
-    /// Embedding rank of the served model.
+    /// Embedding rank of the model the service started with (hot swaps
+    /// may serve a different rank; replies carry their own width).
     pub fn rank(&self) -> usize {
         self.rank
+    }
+
+    /// The registry backing this service — publish to
+    /// [`ServiceHandle::model_name`] to hot-swap the served model.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        self.registry.clone()
+    }
+
+    /// Registry slot this service serves from.
+    pub fn model_name(&self) -> &str {
+        &self.model_name
     }
 
     /// Metrics snapshot.
@@ -137,6 +169,8 @@ impl ServiceHandle {
             } else {
                 s.batch_rows.max()
             },
+            model_swaps: s.model_swaps,
+            model_version: s.model_version,
         }
     }
 }
@@ -148,7 +182,9 @@ pub struct EmbeddingService {
 }
 
 impl EmbeddingService {
-    /// Spawn the worker and return the service.
+    /// Spawn the worker serving a single model (placed in a fresh
+    /// registry under [`DEFAULT_MODEL`], so it stays hot-swappable via
+    /// [`EmbeddingService::registry`]).
     ///
     /// The backend is *constructed on the worker thread* from the given
     /// factory (PJRT handles are not `Send`); construction failure is
@@ -158,14 +194,42 @@ impl EmbeddingService {
         factory: crate::runtime::BackendFactory,
         cfg: ServiceConfig,
     ) -> Result<EmbeddingService> {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.publish(DEFAULT_MODEL, model);
+        Self::start_with_registry(registry, DEFAULT_MODEL, factory, cfg)
+    }
+
+    /// Spawn the worker serving registry slot `model_name`.  The slot
+    /// must already hold a model; later publishes to the same name
+    /// hot-swap what subsequent batches serve, without draining the
+    /// queue (a swapped-in model must keep the feature dimension the
+    /// handles validate against).
+    pub fn start_with_registry(
+        registry: Arc<ModelRegistry>,
+        model_name: &str,
+        factory: crate::runtime::BackendFactory,
+        cfg: ServiceConfig,
+    ) -> Result<EmbeddingService> {
+        let (model0, version0) =
+            registry.get_versioned(model_name).ok_or_else(|| {
+                Error::Service(format!(
+                    "no model named '{model_name}' in the registry"
+                ))
+            })?;
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
-        let stats = Arc::new(Mutex::new(ServiceStats::default()));
+        let stats = Arc::new(Mutex::new(ServiceStats {
+            model_version: version0,
+            ..Default::default()
+        }));
         let handle = ServiceHandle {
             tx,
             stats: stats.clone(),
-            rank: model.r(),
-            dim: model.centers.cols(),
+            rank: model0.r(),
+            dim: model0.centers.cols(),
+            registry: registry.clone(),
+            model_name: model_name.to_string(),
         };
+        let name = model_name.to_string();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let worker = std::thread::Builder::new()
             .name("rskpca-embed-worker".into())
@@ -180,18 +244,19 @@ impl EmbeddingService {
                 // Warm the backend before accepting traffic: the PJRT
                 // path compiles executables lazily, and a cold compile
                 // would otherwise land in the first client's latency.
-                let warm = Matrix::zeros(1, model.centers.cols());
+                let warm = Matrix::zeros(1, model0.centers.cols());
                 if let Err(e) = backend.embed(
                     &warm,
-                    &model.centers,
-                    &model.coeffs,
-                    &model.kernel,
+                    &model0.centers,
+                    &model0.coeffs,
+                    &model0.kernel,
                 ) {
                     let _ = ready_tx.send(Err(e));
                     return;
                 }
+                drop(model0);
                 let _ = ready_tx.send(Ok(()));
-                worker_loop(rx, model, backend, cfg, stats)
+                worker_loop(rx, registry, name, version0, backend, cfg, stats)
             })
             .map_err(|e| Error::Service(format!("spawn worker: {e}")))?;
         ready_rx
@@ -203,6 +268,17 @@ impl EmbeddingService {
     /// A cloneable client handle.
     pub fn handle(&self) -> ServiceHandle {
         self.handle.clone()
+    }
+
+    /// The registry backing this service (publish to
+    /// [`EmbeddingService::model_name`] to hot-swap).
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        self.handle.registry()
+    }
+
+    /// Registry slot this service serves from.
+    pub fn model_name(&self) -> &str {
+        self.handle.model_name()
     }
 
     /// Graceful shutdown: drain-stop the worker and join it.
@@ -225,14 +301,18 @@ impl Drop for EmbeddingService {
     }
 }
 
-/// The batching worker: collect -> execute -> split -> reply.
+/// The batching worker: collect -> fetch current model -> execute ->
+/// split -> reply.
 fn worker_loop(
     rx: Receiver<Msg>,
-    model: EmbeddingModel,
+    registry: Arc<ModelRegistry>,
+    model_name: String,
+    initial_version: u64,
     mut backend: Box<dyn GramBackend>,
     cfg: ServiceConfig,
     stats: Arc<Mutex<ServiceStats>>,
 ) {
+    let mut last_version = initial_version;
     loop {
         // Block for the first request of a batch.
         let first = match rx.recv() {
@@ -267,7 +347,14 @@ fn worker_loop(
             }
         }
 
-        execute_batch(&mut backend, &model, &batch, &stats);
+        execute_batch(
+            &mut backend,
+            &registry,
+            &model_name,
+            &batch,
+            &stats,
+            &mut last_version,
+        );
         if shutdown {
             return;
         }
@@ -276,27 +363,53 @@ fn worker_loop(
 
 fn execute_batch(
     backend: &mut Box<dyn GramBackend>,
-    model: &EmbeddingModel,
+    registry: &ModelRegistry,
+    model_name: &str,
     batch: &[EmbedRequest],
     stats: &Arc<Mutex<ServiceStats>>,
+    last_version: &mut u64,
 ) {
+    // Fetch the model once per batch: this Arc is what the whole batch
+    // executes against, so a concurrent hot swap affects only the *next*
+    // batch and never blocks this one.
+    let Some((model, version)) = registry.get_versioned(model_name)
+    else {
+        for req in batch {
+            let _ = req.reply.send(Err(Error::Service(format!(
+                "model '{model_name}' was removed from the registry"
+            ))));
+        }
+        return;
+    };
     let total_rows: usize = batch.iter().map(|r| r.rows.rows()).sum();
     let dim = model.centers.cols();
-    // Stack the batch.
-    let mut stacked = Matrix::zeros(total_rows, dim);
-    let mut at = 0usize;
-    for req in batch {
-        for i in 0..req.rows.rows() {
-            stacked.row_mut(at).copy_from_slice(req.rows.row(i));
-            at += 1;
+    let result = if batch.iter().any(|r| r.rows.cols() != dim) {
+        // Only reachable if a hot swap changed the feature dimension the
+        // handles validated against — refuse the batch, keep serving.
+        Err(Error::Shape(format!(
+            "hot-swapped model expects dim {dim}, request differs"
+        )))
+    } else {
+        // Stack the batch.
+        let mut stacked = Matrix::zeros(total_rows, dim);
+        let mut at = 0usize;
+        for req in batch {
+            for i in 0..req.rows.rows() {
+                stacked.row_mut(at).copy_from_slice(req.rows.row(i));
+                at += 1;
+            }
         }
-    }
-    // One backend call for the whole batch.  For the native backend this
-    // is the fused parallel projection (`Kernel::embed_rows`): the
-    // stacked rows fan out across the `crate::parallel` compute threads,
-    // so coalescing directly buys multi-core utilization.
-    let result =
-        backend.embed(&stacked, &model.centers, &model.coeffs, &model.kernel);
+        // One backend call for the whole batch.  For the native backend
+        // this is the fused parallel projection (`Kernel::embed_rows`):
+        // the stacked rows fan out across the `crate::parallel` compute
+        // threads, so coalescing directly buys multi-core utilization.
+        backend.embed(
+            &stacked,
+            &model.centers,
+            &model.coeffs,
+            &model.kernel,
+        )
+    };
     // Metrics first (once per batch): a client observing its reply must
     // already see this batch reflected in a stats snapshot.
     {
@@ -306,6 +419,11 @@ fn execute_batch(
         s.requests += batch.len() as u64;
         s.rows += total_rows as u64;
         s.batch_rows.record(total_rows as f64);
+        if version != *last_version {
+            s.model_swaps += 1;
+            *last_version = version;
+        }
+        s.model_version = version;
         for req in batch {
             s.latency_us.record(
                 now.duration_since(req.enqueued).as_secs_f64() * 1e6,
@@ -539,6 +657,36 @@ mod tests {
         );
         assert!(snap.mean_batch_rows > 1.0);
         assert!(snap.max_batch_rows <= 64.0);
+    }
+
+    #[test]
+    fn hot_swap_serves_new_model_and_counts() {
+        let (model, x) = test_model();
+        let expect_old = model.transform(&x);
+        let doubled = EmbeddingModel {
+            coeffs: model.coeffs.scale(2.0),
+            ..model.clone()
+        };
+        let svc = EmbeddingService::start(
+            model,
+            native(),
+            ServiceConfig::default(),
+        )
+        .unwrap();
+        let h = svc.handle();
+        let z1 = h.embed(x.clone()).unwrap();
+        assert!(z1.sub(&expect_old).unwrap().max_abs() < 1e-9);
+        // Publish a new version; the very next batch serves it.
+        let registry = svc.registry();
+        assert_eq!(registry.publish(svc.model_name(), doubled), 2);
+        let z2 = h.embed(x.clone()).unwrap();
+        assert!(
+            z2.sub(&expect_old.scale(2.0)).unwrap().max_abs() < 1e-9
+        );
+        let snap = svc.shutdown();
+        assert_eq!(snap.model_swaps, 1);
+        assert_eq!(snap.model_version, 2);
+        assert_eq!(registry.swap_count(), 1);
     }
 
     #[test]

@@ -26,7 +26,7 @@ mod streaming;
 pub use herding::HerdingRsde;
 pub use kmeans::KMeansRsde;
 pub use shadow::ShadowDensity;
-pub use streaming::StreamingShadow;
+pub use streaming::{ShadowDelta, StreamingShadow};
 
 use crate::kernel::Kernel;
 use crate::linalg::{sq_euclidean, Matrix};

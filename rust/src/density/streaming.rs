@@ -12,10 +12,75 @@
 //! `merge` combines two streaming estimators (e.g. from shards): centers
 //! of one are re-streamed into the other carrying their weights, which
 //! preserves total mass and the ε-separation invariant.
+//!
+//! ## Deltas (the online-lifecycle feed)
+//!
+//! Consumers that maintain derived state (the incremental RSKPCA trainer
+//! in `kpca::trainer`) do not want to rescan the whole cover after every
+//! point.  [`StreamingShadow::drain_delta`] reports exactly what changed
+//! since the previous drain as a [`ShadowDelta`]: center rows **added**,
+//! positions **removed** (decay-driven expiry), how many weight **bumps**
+//! occurred, plus the full current weight vector.  Replaying `removed`
+//! (descending) then appending `added` onto the previously drained
+//! center list reproduces the streamer's current center ordering exactly
+//! — the contract `kpca::GramCache::apply_delta` relies on.
+//!
+//! ## Decay (drift adaptation)
+//!
+//! [`StreamingShadow::with_decay`] turns on exponential forgetting: every
+//! observation multiplies all existing mass by `decay`, and centers whose
+//! effective weight falls below `floor` are expired at the next drain.
+//! Snapshots renormalize the surviving mass to `n_seen` so the
+//! [`ReducedSet`] weight invariant (`Σw = n_source`) keeps holding and
+//! the density-weighted eigenproblem sees a proper probability vector.
+
+use std::collections::HashSet;
 
 use super::ReducedSet;
 use crate::kernel::Kernel;
 use crate::linalg::{sq_euclidean, Matrix};
+
+/// Raw-mass scale at which decayed weights are renormalized in place to
+/// avoid overflow of the shared boost factor.
+const BOOST_RENORM: f64 = 1e12;
+
+/// What changed in a [`StreamingShadow`] since the previous
+/// [`StreamingShadow::drain_delta`] call.
+///
+/// Replay contract: starting from the previously drained center list,
+/// remove the positions in `removed` (highest first), then append the
+/// rows of `added` — the result is the streamer's current center list,
+/// in order, and `weights[i]` belongs to center `i` of that list.
+#[derive(Clone, Debug)]
+pub struct ShadowDelta {
+    /// Positions (into the *previously drained* center ordering) of
+    /// centers that were expired by decay, ascending.
+    pub removed: Vec<usize>,
+    /// Center rows promoted since the last drain, in promotion order;
+    /// appended after the removals are applied.
+    pub added: Matrix,
+    /// Full current weight vector (normalized so `Σw = n_source`),
+    /// aligned with the post-replay center ordering.
+    pub weights: Vec<f64>,
+    /// Normalization count for `weights` (the points observed so far).
+    pub n_source: usize,
+    /// Number of absorb-into-existing-center events since the last drain
+    /// (weight-only changes; zero together with empty `removed`/`added`
+    /// means the window saw no observations).
+    pub bumped: usize,
+}
+
+impl ShadowDelta {
+    /// Did the center *set* change (rows added or removed)?
+    pub fn is_structural(&self) -> bool {
+        !self.removed.is_empty() || self.added.rows() > 0
+    }
+
+    /// Did nothing at all change since the last drain?
+    pub fn is_empty(&self) -> bool {
+        !self.is_structural() && self.bumped == 0
+    }
+}
 
 /// Online shadow-set selector with O(m) state.
 #[derive(Clone, Debug)]
@@ -25,8 +90,23 @@ pub struct StreamingShadow {
     dim: usize,
     /// Flattened center rows (m x dim).
     centers: Vec<f64>,
+    /// Raw mass per center; effective weight = raw / `boost`.
     weights: Vec<f64>,
+    /// Stable per-center ids (never reused) for delta bookkeeping.
+    ids: Vec<u64>,
+    next_id: u64,
     n_seen: usize,
+    /// Per-observation retention factor; 1.0 = no forgetting.
+    decay: f64,
+    /// Effective-weight floor below which a decayed center expires.
+    prune_below: f64,
+    /// Shared inflation factor: raw mass recorded at time t is
+    /// `weight * decay^-t`, so old mass decays without O(m) rescans.
+    boost: f64,
+    /// Center ids as of the last `drain_delta` call, in drained order.
+    baseline: Vec<u64>,
+    /// Weight-bump events since the last drain.
+    bumped: usize,
 }
 
 impl StreamingShadow {
@@ -39,8 +119,30 @@ impl StreamingShadow {
             dim,
             centers: Vec::new(),
             weights: Vec::new(),
+            ids: Vec::new(),
+            next_id: 0,
             n_seen: 0,
+            decay: 1.0,
+            prune_below: 0.0,
+            boost: 1.0,
+            baseline: Vec::new(),
+            bumped: 0,
         }
+    }
+
+    /// Enable exponential forgetting: each observation scales all
+    /// existing mass by `decay` (in `(0, 1]`; 1.0 disables), and centers
+    /// whose effective weight drops below `floor` are expired at the
+    /// next [`StreamingShadow::drain_delta`].
+    pub fn with_decay(mut self, decay: f64, floor: f64) -> Self {
+        assert!(
+            decay > 0.0 && decay <= 1.0,
+            "decay must be in (0, 1], got {decay}"
+        );
+        assert!(floor >= 0.0, "prune floor must be non-negative");
+        self.decay = decay;
+        self.prune_below = floor;
+        self
     }
 
     /// Number of retained centers so far.
@@ -54,7 +156,8 @@ impl StreamingShadow {
     }
 
     /// Observe one point: absorb or promote.  Returns the index of the
-    /// center that absorbed it (which may be brand new).
+    /// center that absorbed it (which may be brand new; the index is
+    /// only stable until the next decay-driven expiry).
     pub fn observe(&mut self, x: &[f64]) -> usize {
         self.observe_weighted(x, 1.0)
     }
@@ -64,28 +167,121 @@ impl StreamingShadow {
         assert_eq!(x.len(), self.dim, "dimension mismatch");
         assert!(weight > 0.0);
         self.n_seen += weight.round() as usize;
+        if self.decay < 1.0 {
+            self.boost /= self.decay;
+            if self.boost > BOOST_RENORM {
+                let b = self.boost;
+                for w in &mut self.weights {
+                    *w /= b;
+                }
+                self.boost = 1.0;
+            }
+        }
+        let raw = weight * self.boost;
         for j in 0..self.m() {
             let c = &self.centers[j * self.dim..(j + 1) * self.dim];
             if sq_euclidean(c, x) < self.eps2 {
-                self.weights[j] += weight;
+                self.weights[j] += raw;
+                self.bumped += 1;
                 return j;
             }
         }
         self.centers.extend_from_slice(x);
-        self.weights.push(weight);
+        self.weights.push(raw);
+        self.ids.push(self.next_id);
+        self.next_id += 1;
         self.m() - 1
     }
 
     /// Fold another selector's centers into this one (shard merge).
     /// Total mass is preserved; the result still satisfies the cover
     /// radius 2ε (a merged point sits within ε of its shard center, which
-    /// sits within ε of the surviving center).
+    /// sits within ε of the surviving center).  Intended for non-decayed
+    /// shards; with decay active the merged mass arrives as fresh mass.
     pub fn merge(&mut self, other: &StreamingShadow) {
         assert_eq!(self.dim, other.dim);
         for j in 0..other.m() {
             let c = &other.centers[j * other.dim..(j + 1) * other.dim];
-            self.observe_weighted(c, other.weights[j]);
+            self.observe_weighted(c, other.weights[j] / other.boost);
         }
+    }
+
+    /// Current weights normalized so they sum to `n_seen` (exact raw
+    /// counts when decay is off, so the batch-equivalence guarantee is
+    /// preserved bit for bit).
+    fn normalized_weights(&self) -> Vec<f64> {
+        if self.decay >= 1.0 {
+            return self.weights.clone();
+        }
+        let total: f64 = self.weights.iter().sum();
+        if total <= 0.0 {
+            return self.weights.clone();
+        }
+        let scale = self.n_seen.max(1) as f64 / total;
+        self.weights.iter().map(|&w| w * scale).collect()
+    }
+
+    /// Expire decayed centers (effective weight below the floor).
+    fn prune_expired(&mut self) {
+        if self.decay >= 1.0 || self.prune_below <= 0.0 {
+            return;
+        }
+        let raw_floor = self.prune_below * self.boost;
+        if self.weights.iter().all(|&w| w >= raw_floor) {
+            return;
+        }
+        let mut keep = 0usize;
+        for j in 0..self.m() {
+            if self.weights[j] >= raw_floor {
+                if keep != j {
+                    self.weights[keep] = self.weights[j];
+                    self.ids[keep] = self.ids[j];
+                    let (dst, src) = (keep * self.dim, j * self.dim);
+                    for k in 0..self.dim {
+                        self.centers[dst + k] = self.centers[src + k];
+                    }
+                }
+                keep += 1;
+            }
+        }
+        self.weights.truncate(keep);
+        self.ids.truncate(keep);
+        self.centers.truncate(keep * self.dim);
+    }
+
+    /// Report everything that changed since the previous drain (expiring
+    /// decayed centers first) and reset the change log.  See
+    /// [`ShadowDelta`] for the replay contract.
+    pub fn drain_delta(&mut self) -> ShadowDelta {
+        self.prune_expired();
+        let current: HashSet<u64> = self.ids.iter().copied().collect();
+        let previous: HashSet<u64> = self.baseline.iter().copied().collect();
+        let removed: Vec<usize> = self
+            .baseline
+            .iter()
+            .enumerate()
+            .filter(|(_, id)| !current.contains(*id))
+            .map(|(pos, _)| pos)
+            .collect();
+        let added_idx: Vec<usize> = (0..self.m())
+            .filter(|&j| !previous.contains(&self.ids[j]))
+            .collect();
+        let mut added = Matrix::zeros(added_idx.len(), self.dim);
+        for (r, &j) in added_idx.iter().enumerate() {
+            added
+                .row_mut(r)
+                .copy_from_slice(&self.centers[j * self.dim..(j + 1) * self.dim]);
+        }
+        let delta = ShadowDelta {
+            removed,
+            added,
+            weights: self.normalized_weights(),
+            n_source: self.n_seen.max(1),
+            bumped: self.bumped,
+        };
+        self.baseline = self.ids.clone();
+        self.bumped = 0;
+        delta
     }
 
     /// Snapshot the current reduced set.
@@ -96,7 +292,7 @@ impl StreamingShadow {
                 .expect("internal shape");
         ReducedSet {
             centers,
-            weights: self.weights.clone(),
+            weights: self.normalized_weights(),
             n_source: self.n_seen.max(1),
             assignment: None,
             method: format!("streaming-shde(ell={})", self.ell),
@@ -196,5 +392,108 @@ mod tests {
             || s.observe(&[1.0, 2.0]),
         ));
         assert!(r.is_err());
+    }
+
+    /// Replay a delta onto a shadow copy of the center list (the contract
+    /// `GramCache::apply_delta` uses).
+    fn replay(centers: &mut Vec<Vec<f64>>, delta: &ShadowDelta) {
+        for &pos in delta.removed.iter().rev() {
+            centers.remove(pos);
+        }
+        for r in 0..delta.added.rows() {
+            centers.push(delta.added.row(r).to_vec());
+        }
+    }
+
+    #[test]
+    fn drain_delta_reports_additions_and_bumps() {
+        let ds = gaussian_mixture_2d(300, 3, 0.4, 5);
+        let kernel = Kernel::gaussian(1.0);
+        let mut stream = StreamingShadow::new(&kernel, 4.0, 2);
+        for i in 0..150 {
+            stream.observe(ds.x.row(i));
+        }
+        let first = stream.drain_delta();
+        // First drain: everything is an addition, nothing removed.
+        assert!(first.removed.is_empty());
+        assert_eq!(first.added.rows(), stream.m());
+        assert_eq!(first.weights.len(), stream.m());
+        assert_eq!(first.n_source, 150);
+        assert_eq!(first.bumped, 150 - stream.m());
+        // Idle drain: empty delta.
+        let idle = stream.drain_delta();
+        assert!(idle.is_empty());
+        // Second window: only the new centers appear.
+        let m0 = stream.m();
+        for i in 150..300 {
+            stream.observe(ds.x.row(i));
+        }
+        let second = stream.drain_delta();
+        assert!(second.removed.is_empty(), "no decay => no removals");
+        assert_eq!(second.added.rows(), stream.m() - m0);
+        assert_eq!(second.weights.len(), stream.m());
+        assert_eq!(second.weights, stream.snapshot().weights);
+    }
+
+    #[test]
+    fn delta_replay_reconstructs_center_ordering() {
+        let ds = gaussian_mixture_2d(500, 4, 0.4, 6);
+        let kernel = Kernel::gaussian(1.0);
+        let mut stream =
+            StreamingShadow::new(&kernel, 4.0, 2).with_decay(0.97, 0.2);
+        let mut shadow_list: Vec<Vec<f64>> = Vec::new();
+        for chunk in 0..5 {
+            for i in (chunk * 100)..((chunk + 1) * 100) {
+                stream.observe(ds.x.row(i));
+            }
+            let delta = stream.drain_delta();
+            replay(&mut shadow_list, &delta);
+            let snap = stream.snapshot();
+            assert_eq!(shadow_list.len(), snap.m(), "chunk {chunk}");
+            assert_eq!(delta.weights.len(), snap.m());
+            for (j, row) in shadow_list.iter().enumerate() {
+                assert_eq!(row.as_slice(), snap.centers.row(j));
+            }
+        }
+    }
+
+    #[test]
+    fn decay_expires_stale_centers_and_reports_removals() {
+        let kernel = Kernel::gaussian(1.0); // eps = 0.25 at ell = 4
+        let mut stream =
+            StreamingShadow::new(&kernel, 4.0, 2).with_decay(0.9, 0.05);
+        // Cluster A, then a long run of far-away cluster B.
+        for _ in 0..20 {
+            stream.observe(&[0.0, 0.0]);
+        }
+        let first = stream.drain_delta();
+        assert_eq!(first.added.rows(), 1);
+        for _ in 0..200 {
+            stream.observe(&[10.0, 10.0]);
+        }
+        let second = stream.drain_delta();
+        // A's mass decayed below the floor: expired and reported.
+        assert_eq!(second.removed, vec![0]);
+        assert_eq!(stream.m(), 1);
+        let snap = stream.snapshot();
+        assert_eq!(snap.centers.row(0), &[10.0, 10.0]);
+        // Renormalized weights keep the ReducedSet invariant.
+        assert!(snap.check_invariants());
+        assert_eq!(snap.n_source, 220);
+    }
+
+    #[test]
+    fn decay_survives_long_streams_without_overflow() {
+        let kernel = Kernel::gaussian(1.0);
+        let mut stream =
+            StreamingShadow::new(&kernel, 4.0, 1).with_decay(0.5, 1e-3);
+        // 0.5^-t overflows f64 after ~1074 steps without renormalization.
+        for i in 0..5000 {
+            stream.observe(&[(i % 7) as f64 * 10.0]);
+        }
+        assert!(stream.weights.iter().all(|w| w.is_finite()));
+        let snap = stream.snapshot();
+        assert!(snap.check_invariants());
+        assert_eq!(snap.m(), 7);
     }
 }

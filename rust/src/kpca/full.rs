@@ -1,10 +1,11 @@
 //! Full KPCA (the paper's baseline) and subsampled KPCA (the cheapest,
 //! weakest baseline in Figs. 2–3).
 
-use super::{build_coeffs, EmbeddingModel};
+use super::trainer::{self, TrainPlan};
+use super::{EigSolver, EmbeddingModel};
 use crate::error::Result;
 use crate::kernel::Kernel;
-use crate::linalg::{eigh, Matrix};
+use crate::linalg::Matrix;
 use crate::prng::Pcg64;
 
 /// Full KPCA: eigendecompose the n x n Gram matrix (paper eq. 6),
@@ -15,22 +16,25 @@ use crate::prng::Pcg64;
 /// `L²(p̂_n)` (Bengio et al. 2004).
 pub fn fit_kpca(x: &Matrix, kernel: &Kernel, r: usize)
     -> Result<EmbeddingModel> {
-    let n = x.rows();
-    let gram = kernel.gram_sym(x);
-    let eig = eigh(&gram)?;
-    let sqrt_n = (n as f64).sqrt();
-    let s = vec![1.0; n];
-    let (coeffs, eigvals) =
-        build_coeffs(&eig, r, &s, |_, lam| sqrt_n / lam)?;
-    // Operator-normalized eigenvalues: λ̂ / n.
-    let op_eigenvalues = eigvals.iter().map(|&v| v / n as f64).collect();
-    Ok(EmbeddingModel {
-        kernel: *kernel,
-        centers: x.clone(),
-        coeffs,
-        op_eigenvalues,
+    fit_kpca_with(x, kernel, r, &EigSolver::Exact)
+}
+
+/// [`fit_kpca`] under an explicit eigensolver policy (the
+/// [`EigSolver::Subspace`] policy trades the `O(n³)` exact solve for
+/// `O(n²k)` leading-pair extraction on the parallel engine).
+pub fn fit_kpca_with(
+    x: &Matrix,
+    kernel: &Kernel,
+    r: usize,
+    solver: &EigSolver,
+) -> Result<EmbeddingModel> {
+    let plan = TrainPlan {
+        points: x,
+        weights: None,
         method: "kpca".into(),
-    })
+        rsde: None,
+    };
+    trainer::fit_plan(&plan, kernel, r, solver)
 }
 
 /// Subsampled KPCA: run full KPCA on a uniform random subset of m points
@@ -58,6 +62,7 @@ pub fn fit_subsampled_kpca(
 mod tests {
     use super::*;
     use crate::data::gaussian_mixture_2d;
+    use crate::linalg::eigh;
 
     #[test]
     fn training_embedding_is_orthonormal_in_l2pn() {

@@ -8,10 +8,13 @@
 //! which is exactly the testing-cost asymmetry RSKPCA removes.
 //!
 //! KPCA from the factor: eigenpairs `(λ, u)` of the m x m matrix `LᵀL`
-//! give approximate Gram eigenpairs `λ̂ = λ`, `φ̂ = L u / √λ`, which then
-//! follow the crate's standard embedding convention.
+//! give approximate Gram eigenpairs `λ̂ = λ`, `φ̂ = L u / √λ` (the
+//! trainer's shared spectrum extension with `cross = L`, since
+//! `‖L u‖ = √λ`), which then follow the crate's standard embedding
+//! convention.
 
-use super::{build_coeffs, EmbeddingModel, EIG_FLOOR};
+use super::trainer::extend_spectrum;
+use super::EmbeddingModel;
 use crate::error::{Error, Result};
 use crate::kernel::Kernel;
 use crate::linalg::{eigh, Matrix};
@@ -87,40 +90,21 @@ pub fn fit_icd_kpca(
     m_max: usize,
     tol: f64,
 ) -> Result<EmbeddingModel> {
-    let n = x.rows();
     let factor = icd(x, kernel, m_max, tol)?;
     let ltl = factor.l.transpose().matmul(&factor.l)?;
     let eig = eigh(&ltl)?;
-    let avail = eig.values.iter().take_while(|&&v| v > EIG_FLOOR).count();
-    let r_eff = r.min(avail);
-    if r_eff == 0 {
-        return Err(Error::Numerical("icd: no usable spectrum".into()));
-    }
-    // φ̂ columns = L u / sqrt(λ); embedding per the standard convention.
-    let mut phi = Matrix::zeros(n, r_eff);
-    for j in 0..r_eff {
-        let u = eig.vectors.col(j);
-        let col = factor.l.matvec(&u)?;
-        let scale = 1.0 / eig.values[j].sqrt();
-        for i in 0..n {
-            phi.set(i, j, col[i] * scale);
-        }
-    }
-    let fake = crate::linalg::Eigh {
-        values: eig.values[..r_eff].to_vec(),
-        vectors: phi,
-    };
-    let sqrt_n = (n as f64).sqrt();
-    let s = vec![1.0; n];
-    let (coeffs, eigvals) =
-        build_coeffs(&fake, r_eff, &s, |_, lam| sqrt_n / lam)?;
-    Ok(EmbeddingModel {
-        kernel: *kernel,
-        centers: x.clone(),
-        coeffs,
-        op_eigenvalues: eigvals.iter().map(|&v| v / n as f64).collect(),
-        method: "icd".into(),
-    })
+    // φ̂ = L u / ‖L u‖ = L u / √λ; λ̂ = λ — the trainer's shared
+    // extension with cross = L and eig_scale = 1.
+    extend_spectrum(
+        x,
+        kernel,
+        r,
+        &factor.l,
+        &eig.values,
+        &eig.vectors,
+        1.0,
+        "icd",
+    )
 }
 
 #[cfg(test)]

@@ -27,17 +27,32 @@
 //! threads through the fused `Kernel::embed_rows` path (no Gram
 //! temporary); `classify`, `mmd`, the experiment harness and the
 //! coordinator's batch executor all consume it.
+//!
+//! ## Training pipeline and the online lifecycle
+//!
+//! All five constructors run through the unified trainer pipeline
+//! (`trainer.rs`): build the (possibly density-weighted) Gram surrogate,
+//! eigensolve it under an [`EigSolver`] policy (`Exact` | `Subspace`),
+//! and scale eigenvectors into coefficients.  Reduced-set models
+//! additionally support [`EmbeddingModel::refresh`] — an incremental
+//! refit from a streaming [`crate::density::ShadowDelta`] that re-solves
+//! only the m×m weighted system (the paper's cheap-update claim) with
+//! the center Gram maintained by a [`GramCache`]; [`OnlineRskpca`]
+//! packages the whole stream → delta → refresh loop for the serving
+//! layer's background refresher.
 
 mod full;
 mod icd;
 mod model_io;
 mod nystrom;
 mod rskpca;
+mod trainer;
 
-pub use full::{fit_kpca, fit_subsampled_kpca};
+pub use full::{fit_kpca, fit_kpca_with, fit_subsampled_kpca};
 pub use icd::{fit_icd_kpca, icd, IcdFactor};
 pub use nystrom::{fit_nystrom, fit_weighted_nystrom};
-pub use rskpca::{fit_rskpca, RskpcaModel};
+pub use rskpca::{fit_rskpca, fit_rskpca_with, RskpcaModel};
+pub use trainer::{EigSolver, GramCache, ModelMeta, OnlineRskpca};
 
 use crate::error::{Error, Result};
 use crate::kernel::Kernel;
@@ -62,6 +77,9 @@ pub struct EmbeddingModel {
     pub op_eigenvalues: Vec<f64>,
     /// Which algorithm produced the model.
     pub method: String,
+    /// Lifecycle metadata: refresh version counter, eigensolver policy,
+    /// and source RSDE kind (persisted by the v2 model format).
+    pub meta: ModelMeta,
 }
 
 impl EmbeddingModel {

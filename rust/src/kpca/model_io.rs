@@ -2,20 +2,39 @@
 //! so `rskpca fit` / `rskpca serve` / `rskpca embed` compose as separate
 //! process invocations (fit once, serve forever — the RSKPCA deployment
 //! story).
+//!
+//! Format versioning: the `format` field is the version byte.  v2
+//! (`rskpca-model-v2`, current) adds the lifecycle metadata — refresh
+//! `version` counter, eigensolver policy, and source RSDE kind.  v1
+//! files (`rskpca-model-v1`) still load, with default metadata.
 
 use std::path::Path;
 
-use super::EmbeddingModel;
+use super::{EigSolver, EmbeddingModel, ModelMeta};
 use crate::error::{Error, Result};
 use crate::kernel::{Kernel, KernelKind};
 use crate::linalg::Matrix;
 use crate::ser::{parse, Json};
 
+/// Current on-disk format tag.
+const FORMAT_V2: &str = "rskpca-model-v2";
+/// Legacy format tag (read-only compatibility).
+const FORMAT_V1: &str = "rskpca-model-v1";
+
 impl EmbeddingModel {
-    /// Serialize to JSON.
+    /// Serialize to JSON (always writes the current v2 format).
     pub fn to_json(&self) -> Json {
         Json::obj()
-            .with("format", Json::Str("rskpca-model-v1".into()))
+            .with("format", Json::Str(FORMAT_V2.into()))
+            .with("version", Json::Num(self.meta.version as f64))
+            .with("solver", Json::Str(self.meta.solver.name()))
+            .with(
+                "rsde",
+                match &self.meta.rsde {
+                    Some(kind) => Json::Str(kind.clone()),
+                    None => Json::Null,
+                },
+            )
             .with("method", Json::Str(self.method.clone()))
             .with("kernel", Json::Str(self.kernel.kind.name().into()))
             .with("sigma", Json::Num(self.kernel.sigma))
@@ -30,14 +49,39 @@ impl EmbeddingModel {
             )
     }
 
-    /// Deserialize from JSON (validating shapes).
+    /// Deserialize from JSON (validating shapes); accepts both the
+    /// current v2 format and legacy v1 files (which load with default
+    /// metadata).
     pub fn from_json(v: &Json) -> Result<EmbeddingModel> {
         let format = v.req_str("format")?;
-        if format != "rskpca-model-v1" {
-            return Err(Error::Parse(format!(
-                "unsupported model format '{format}'"
-            )));
-        }
+        let meta = match format {
+            FORMAT_V1 => ModelMeta::default(),
+            FORMAT_V2 => {
+                let version = v.req_usize("version")? as u64;
+                let solver_name = v.req_str("solver")?;
+                let solver = EigSolver::parse(solver_name)
+                    .ok_or_else(|| {
+                        Error::Parse(format!(
+                            "unknown solver policy '{solver_name}'"
+                        ))
+                    })?;
+                let rsde = match v.get("rsde") {
+                    None | Some(Json::Null) => None,
+                    Some(Json::Str(kind)) => Some(kind.clone()),
+                    Some(_) => {
+                        return Err(Error::Parse(
+                            "field 'rsde' is not a string".into(),
+                        ))
+                    }
+                };
+                ModelMeta { version, solver, rsde }
+            }
+            other => {
+                return Err(Error::Parse(format!(
+                    "unsupported model format '{other}'"
+                )))
+            }
+        };
         let kind_name = v.req_str("kernel")?;
         let kind = KernelKind::parse(kind_name).ok_or_else(|| {
             Error::Parse(format!("unknown kernel '{kind_name}'"))
@@ -65,6 +109,7 @@ impl EmbeddingModel {
             coeffs,
             op_eigenvalues,
             method: v.req_str("method")?.to_string(),
+            meta,
         })
     }
 
@@ -87,7 +132,7 @@ mod tests {
     use super::*;
     use crate::data::gaussian_mixture_2d;
     use crate::density::{RsdeEstimator, ShadowDensity};
-    use crate::kpca::{fit_rskpca, fit_kpca};
+    use crate::kpca::{fit_kpca, fit_rskpca, fit_rskpca_with};
 
     #[test]
     fn roundtrip_preserves_transform() {
@@ -102,6 +147,45 @@ mod tests {
         let z1 = model.transform(&ds.x);
         let z2 = back.transform(&ds.x);
         assert!(z1.sub(&z2).unwrap().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn roundtrip_preserves_lifecycle_metadata() {
+        let ds = gaussian_mixture_2d(120, 3, 0.4, 6);
+        let k = Kernel::gaussian(1.0);
+        let rs = ShadowDensity::new(4.0).reduce(&ds.x, &k);
+        let solver = EigSolver::Subspace { k: 6, tol: 1e-11 };
+        let mut model = fit_rskpca_with(&rs, &k, 4, &solver).unwrap();
+        model.meta.version = 7; // as if refreshed seven times
+        let back =
+            EmbeddingModel::from_json(&model.to_json()).unwrap();
+        assert_eq!(back.meta, model.meta);
+        assert_eq!(back.meta.version, 7);
+        assert_eq!(back.meta.solver, solver);
+        assert_eq!(back.meta.rsde.as_deref(), Some(rs.method.as_str()));
+    }
+
+    #[test]
+    fn v1_documents_load_with_default_metadata() {
+        // A hand-written legacy file: no version/solver/rsde fields.
+        let doc = parse(
+            r#"{"format":"rskpca-model-v1","method":"kpca",
+                "kernel":"gaussian","sigma":1.5,
+                "centers_rows":2,"centers_cols":2,
+                "centers":[0.0,0.0,1.0,1.0],
+                "coeffs_cols":1,"coeffs":[0.5,-0.5],
+                "op_eigenvalues":[0.25]}"#,
+        )
+        .unwrap();
+        let model = EmbeddingModel::from_json(&doc).unwrap();
+        assert_eq!(model.meta, ModelMeta::default());
+        assert_eq!(model.meta.version, 0);
+        assert_eq!(model.meta.solver, EigSolver::Exact);
+        assert!(model.meta.rsde.is_none());
+        assert_eq!(model.n_retained(), 2);
+        // Re-saving upgrades the file to v2.
+        let upgraded = model.to_json();
+        assert_eq!(upgraded.req_str("format").unwrap(), "rskpca-model-v2");
     }
 
     #[test]
@@ -130,5 +214,17 @@ mod tests {
         )
         .unwrap();
         assert!(EmbeddingModel::from_json(&bad).is_err());
+        // v2 with an unknown solver policy is rejected, as is an unknown
+        // future format.
+        let bad_solver = parse(
+            r#"{"format":"rskpca-model-v2","version":0,"solver":"magic",
+                "rsde":null,"method":"m","kernel":"gaussian","sigma":1,
+                "centers_rows":0,"centers_cols":0,"centers":[],
+                "coeffs_cols":0,"coeffs":[],"op_eigenvalues":[]}"#,
+        )
+        .unwrap();
+        assert!(EmbeddingModel::from_json(&bad_solver).is_err());
+        let future = parse(r#"{"format":"rskpca-model-v9"}"#).unwrap();
+        assert!(EmbeddingModel::from_json(&future).is_err());
     }
 }

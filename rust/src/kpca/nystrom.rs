@@ -8,9 +8,10 @@
 //! all n training points, so their per-point testing cost stays `O(rn)`
 //! (Table 2's SPACE row: `O(nr)` versus RSKPCA's `O(mr)`).
 
-use super::{build_coeffs, EmbeddingModel, EIG_FLOOR};
+use super::trainer::{extend_spectrum, weighted_eig};
+use super::{EigSolver, EmbeddingModel};
 use crate::density::{KMeansRsde, RsdeEstimator};
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::kernel::Kernel;
 use crate::linalg::{eigh, Matrix};
 use crate::prng::Pcg64;
@@ -50,7 +51,7 @@ pub fn fit_nystrom(
     let kmm = kernel.gram_sym(&landmarks);
     let eig = eigh(&kmm)?;
     let knm = kernel.gram(x, &landmarks); // n x m
-    extend_to_full_data(
+    extend_spectrum(
         x,
         kernel,
         r,
@@ -77,26 +78,22 @@ pub fn fit_weighted_nystrom(
     let n = x.rows();
     let m = m.min(n).max(1);
     let rs = KMeansRsde::new(m, seed).reduce(x, kernel);
-    let w_sqrt: Vec<f64> = rs
-        .weights
-        .iter()
-        .map(|&w| (w / n as f64).sqrt())
-        .collect();
+    // Density-weighted landmark eigenproblem K~ = W^{1/2} K_zz W^{1/2},
+    // through the unified trainer's weighted stage.
     let kzz = kernel.gram_sym(&rs.centers);
-    let ktilde = kzz.scale_rows_cols(&w_sqrt, &w_sqrt)?;
-    let eig = eigh(&ktilde)?;
+    let (eig, w_sqrt) =
+        weighted_eig(&kzz, &rs.weights, n, &EigSolver::Exact, r)?;
     // Weighted extension: K_nz W^{1/2} u has the same role K_nm u plays in
     // the plain method; λ of K~ is already operator-normalized, so the
     // full-Gram eigenvalue estimate is λ̂ = n λ.
-    let knz = kernel.gram(x, &rs.centers);
-    let mut knz_w = knz.clone();
+    let mut knz_w = kernel.gram(x, &rs.centers);
     for i in 0..n {
         let row = knz_w.row_mut(i);
         for (j, &w) in w_sqrt.iter().enumerate() {
             row[j] *= w;
         }
     }
-    extend_to_full_data(
+    extend_spectrum(
         x,
         kernel,
         r,
@@ -106,63 +103,6 @@ pub fn fit_weighted_nystrom(
         n as f64,
         "wnystrom",
     )
-}
-
-/// Shared Nyström extension: given landmark eigenpairs `(λ, u)` and the
-/// (possibly weighted) cross matrix `C = K_{n,landmarks}·S`, the
-/// approximate full-Gram eigenvector is `φ̂^ι ∝ C u^ι` (normalized) with
-/// eigenvalue estimate `λ̂_ι = eig_scale · λ_ι`; the embedding coefficients
-/// then follow the full-KPCA convention `A = √n φ̂ / λ̂` over all n points.
-#[allow(clippy::too_many_arguments)]
-fn extend_to_full_data(
-    x: &Matrix,
-    kernel: &Kernel,
-    r: usize,
-    cross: &Matrix,
-    lam: &[f64],
-    u: &Matrix,
-    eig_scale: f64,
-    method: &str,
-) -> Result<EmbeddingModel> {
-    let n = x.rows();
-    let avail = lam.iter().take_while(|&&v| v > EIG_FLOOR).count();
-    let r_eff = r.min(avail);
-    if r_eff == 0 {
-        return Err(Error::Numerical(
-            "nystrom: no eigenvalues above floor".into(),
-        ));
-    }
-    // φ̂ columns: normalize C u to unit length.
-    let mut phi = Matrix::zeros(n, r_eff);
-    let mut lam_hat = Vec::with_capacity(r_eff);
-    for j in 0..r_eff {
-        let uj = u.col(j);
-        let col = cross.matvec(&uj)?;
-        let norm = col.iter().map(|v| v * v).sum::<f64>().sqrt();
-        if norm <= 1e-12 {
-            return Err(Error::Numerical(
-                "nystrom: degenerate extended eigenvector".into(),
-            ));
-        }
-        for i in 0..n {
-            phi.set(i, j, col[i] / norm);
-        }
-        lam_hat.push(eig_scale * lam[j]);
-    }
-    // Embedding convention: A_{iι} = √n φ̂_i^ι / λ̂_ι.
-    let fake_eig = crate::linalg::Eigh { values: lam_hat.clone(), vectors: phi };
-    let s = vec![1.0; n];
-    let sqrt_n = (n as f64).sqrt();
-    let (coeffs, _) = build_coeffs(&fake_eig, r_eff, &s, |_, l| sqrt_n / l)?;
-    let op_eigenvalues: Vec<f64> =
-        lam_hat.iter().map(|&l| l / n as f64).collect();
-    Ok(EmbeddingModel {
-        kernel: *kernel,
-        centers: x.clone(),
-        coeffs,
-        op_eigenvalues,
-        method: method.into(),
-    })
 }
 
 #[cfg(test)]

@@ -15,11 +15,11 @@
 //! which for the degenerate RSDE (m = n, w ≡ 1) reduces exactly to the
 //! full-KPCA embedding convention — see the tests.
 
-use super::{build_coeffs, EmbeddingModel};
+use super::trainer::{self, TrainPlan};
+use super::{EigSolver, EmbeddingModel};
 use crate::density::ReducedSet;
 use crate::error::{Error, Result};
 use crate::kernel::Kernel;
-use crate::linalg::eigh;
 
 /// Fit Algorithm 1 on a reduced set.
 ///
@@ -42,31 +42,32 @@ use crate::linalg::eigh;
 /// ```
 pub fn fit_rskpca(rs: &ReducedSet, kernel: &Kernel, r: usize)
     -> Result<EmbeddingModel> {
+    fit_rskpca_with(rs, kernel, r, &EigSolver::Exact)
+}
+
+/// [`fit_rskpca`] under an explicit eigensolver policy; the policy is
+/// recorded in the model's metadata and re-used by
+/// [`EmbeddingModel::refresh`].
+pub fn fit_rskpca_with(
+    rs: &ReducedSet,
+    kernel: &Kernel,
+    r: usize,
+    solver: &EigSolver,
+) -> Result<EmbeddingModel> {
     if !rs.check_invariants() {
         return Err(Error::Numerical(
             "reduced set violates weight invariants".into(),
         ));
     }
-    let m = rs.m();
-    let n = rs.n_source as f64;
-    // W = diag(sqrt(w_i / n)).
-    let w_sqrt: Vec<f64> =
-        rs.weights.iter().map(|&w| (w / n).sqrt()).collect();
-    // K~ = W K^C W.
-    let kc = kernel.gram_sym(&rs.centers);
-    let ktilde = kc.scale_rows_cols(&w_sqrt, &w_sqrt)?;
-    let eig = eigh(&ktilde)?;
-    // coeffs[i, ι] = sqrt(w_i/n) φ~_i^ι / λ_ι.
-    let (coeffs, op_eigenvalues) =
-        build_coeffs(&eig, r, &w_sqrt, |_, lam| 1.0 / lam)?;
-    let _ = m;
-    Ok(EmbeddingModel {
-        kernel: *kernel,
-        centers: rs.centers.clone(),
-        coeffs,
-        op_eigenvalues,
+    // The pipeline forms K~ = W K^C W with W = diag(sqrt(w_i / n)),
+    // eigensolves it, and builds coeffs[i, ι] = sqrt(w_i/n) φ~_i^ι / λ_ι.
+    let plan = TrainPlan {
+        points: &rs.centers,
+        weights: Some((&rs.weights, rs.n_source)),
         method: format!("rskpca[{}]", rs.method),
-    })
+        rsde: Some(rs.method.clone()),
+    };
+    trainer::fit_plan(&plan, kernel, r, solver)
 }
 
 /// Ergonomic façade bundling RSDE + Algorithm 1 (the crate-level

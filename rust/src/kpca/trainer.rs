@@ -1,0 +1,798 @@
+//! The unified trainer pipeline — one fit scaffolding shared by every
+//! KPCA constructor, plus the **online model lifecycle** built on it.
+//!
+//! Before this module, `full.rs` / `rskpca.rs` / `nystrom.rs` / `icd.rs`
+//! each re-implemented the same tail: build a (possibly density-weighted)
+//! Gram surrogate, eigendecompose it, and run `build_coeffs` under one of
+//! two scaling conventions.  That tail now lives here as a
+//! [`TrainPlan`] → weighted Gram → eigensolve → `build_coeffs` pipeline,
+//! which buys three things at once:
+//!
+//! * an [`EigSolver`] **policy** (`Exact` | `Subspace`) threaded through
+//!   every constructor, so `linalg::subspace_eigh` finally reaches the
+//!   fit path (validated against exact `eigh` by property tests);
+//! * [`EmbeddingModel::refresh`] — the paper's Table 2 asymmetry made
+//!   operational: after streaming deltas
+//!   ([`crate::density::ShadowDelta`]), only the m×m weighted system is
+//!   re-solved (`O(m³)` exact, `O(m²k)` subspace) instead of re-reducing
+//!   all n source points, with the center Gram maintained incrementally
+//!   by [`GramCache`];
+//! * [`OnlineRskpca`] — the stream→delta→refresh loop packaged as one
+//!   object for the serving layer's background refresher.
+
+use crate::density::ShadowDelta;
+use crate::error::{Error, Result};
+use crate::kernel::Kernel;
+use crate::linalg::{eigh, subspace_eigh, Eigh, Matrix};
+
+use super::{build_coeffs, EmbeddingModel, EIG_FLOOR};
+
+/// Sweep cap for the subspace policy (each sweep is one parallel `A·Q`).
+const SUBSPACE_MAX_ITERS: usize = 500;
+
+/// Eigensolver policy for the fit pipeline.
+///
+/// `Exact` runs the full `O(m³)` tridiagonal solver; `Subspace` runs
+/// blocked subspace iteration for the leading eigenpairs only (`O(m²k)`
+/// per sweep on the parallel matmul engine) — the right choice when the
+/// requested rank r is far below m, which is the common serving regime.
+/// Subspace iteration is PSD-only by design; every surrogate this crate
+/// eigendecomposes (kernel Gram matrices and their weighted forms) is
+/// PSD by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum EigSolver {
+    /// Full symmetric eigendecomposition (`linalg::eigh`).
+    #[default]
+    Exact,
+    /// Leading-k subspace iteration (`linalg::subspace_eigh`); `k = 0`
+    /// means "use the requested embedding rank".
+    Subspace {
+        /// Number of leading eigenpairs to extract (0 = requested rank).
+        k: usize,
+        /// Relative Ritz-value convergence tolerance.
+        tol: f64,
+    },
+}
+
+impl EigSolver {
+    /// Solve for (at least) the `want` leading eigenpairs of symmetric
+    /// PSD `a`, values descending.
+    pub fn solve(&self, a: &Matrix, want: usize) -> Result<Eigh> {
+        match *self {
+            EigSolver::Exact => eigh(a),
+            EigSolver::Subspace { k, tol } => {
+                let k_eff = if k == 0 { want } else { k.max(want) };
+                let tol = if tol > 0.0 { tol } else { 1e-12 };
+                subspace_eigh(a, k_eff, SUBSPACE_MAX_ITERS, tol)
+            }
+        }
+    }
+
+    /// Canonical config/serialization name; round-trips through
+    /// [`EigSolver::parse`].
+    pub fn name(&self) -> String {
+        match *self {
+            EigSolver::Exact => "exact".into(),
+            EigSolver::Subspace { k, tol } => {
+                format!("subspace:k={k},tol={tol:e}")
+            }
+        }
+    }
+
+    /// Parse a policy name: `exact`, `subspace`, `subspace:k=8`, or
+    /// `subspace:k=8,tol=1e-10`.
+    pub fn parse(s: &str) -> Option<EigSolver> {
+        if s == "exact" {
+            return Some(EigSolver::Exact);
+        }
+        let rest = s.strip_prefix("subspace")?;
+        let mut k = 0usize;
+        let mut tol = 1e-12;
+        if !rest.is_empty() {
+            for part in rest.strip_prefix(':')?.split(',') {
+                let (key, val) = part.split_once('=')?;
+                match key.trim() {
+                    "k" => k = val.trim().parse().ok()?,
+                    "tol" => tol = val.trim().parse().ok()?,
+                    _ => return None,
+                }
+            }
+        }
+        Some(EigSolver::Subspace { k, tol })
+    }
+}
+
+/// Model metadata carried by every [`EmbeddingModel`] (persisted by the
+/// v2 model format; v1 files load with the defaults).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ModelMeta {
+    /// Lifecycle counter: 0 for a batch fit, incremented by each
+    /// [`EmbeddingModel::refresh`].
+    pub version: u64,
+    /// The eigensolver policy that produced (and will refresh) the
+    /// coefficients.
+    pub solver: EigSolver,
+    /// The RSDE kind the reduced set came from (`None` for constructors
+    /// that retain the raw data); refresh requires `Some`.
+    pub rsde: Option<String>,
+}
+
+/// Everything the shared pipeline needs to fit one model.
+pub(crate) struct TrainPlan<'a> {
+    /// Retained point set (the model's future `centers`).
+    pub points: &'a Matrix,
+    /// `Some((w, n))` selects the density-weighted convention
+    /// (`K~ = W K W`, `W = diag(√(w/n))` — paper eq. 11/13); `None`
+    /// selects the uniform full-KPCA convention over `points`.
+    pub weights: Option<(&'a [f64], usize)>,
+    /// `EmbeddingModel::method` tag.
+    pub method: String,
+    /// Source RSDE kind for the model metadata.
+    pub rsde: Option<String>,
+}
+
+/// Density-weighted eigenproblem shared by the RSKPCA pipeline and the
+/// weighted-Nyström landmark stage: form `K~ = W K W` from a precomputed
+/// center Gram and solve it under the given policy.  Returns the
+/// eigenpairs and the `√(w/n)` scaling vector.
+pub(crate) fn weighted_eig(
+    gram: &Matrix,
+    weights: &[f64],
+    n_source: usize,
+    solver: &EigSolver,
+    want: usize,
+) -> Result<(Eigh, Vec<f64>)> {
+    let n = n_source as f64;
+    let w_sqrt: Vec<f64> =
+        weights.iter().map(|&w| (w / n).sqrt()).collect();
+    let ktilde = gram.scale_rows_cols(&w_sqrt, &w_sqrt)?;
+    let eig = solver.solve(&ktilde, want)?;
+    Ok((eig, w_sqrt))
+}
+
+/// The full pipeline: Gram of the plan's points, then
+/// [`fit_plan_with_gram`].
+pub(crate) fn fit_plan(
+    plan: &TrainPlan<'_>,
+    kernel: &Kernel,
+    r: usize,
+    solver: &EigSolver,
+) -> Result<EmbeddingModel> {
+    let gram = kernel.gram_sym(plan.points);
+    fit_plan_with_gram(&gram, plan, kernel, r, solver)
+}
+
+/// The pipeline tail from a precomputed Gram (the refresh path reuses
+/// this with an incrementally maintained Gram): apply the plan's
+/// weighting, eigensolve under the policy, and build the coefficients
+/// under the matching embedding convention.
+pub(crate) fn fit_plan_with_gram(
+    gram: &Matrix,
+    plan: &TrainPlan<'_>,
+    kernel: &Kernel,
+    r: usize,
+    solver: &EigSolver,
+) -> Result<EmbeddingModel> {
+    let (coeffs, op_eigenvalues) = match plan.weights {
+        None => {
+            // Uniform convention: z_ι(y) = (√n/λ̂_ι) Σ_i k(y, x_i) φ_i^ι,
+            // operator eigenvalues λ̂/n.
+            let n = plan.points.rows();
+            let eig = solver.solve(gram, r)?;
+            let s = vec![1.0; n];
+            let sqrt_n = (n as f64).sqrt();
+            let (coeffs, vals) =
+                build_coeffs(&eig, r, &s, |_, lam| sqrt_n / lam)?;
+            let op: Vec<f64> =
+                vals.iter().map(|&v| v / n as f64).collect();
+            (coeffs, op)
+        }
+        Some((weights, n_source)) => {
+            // Density-weighted convention: coeffs √(w/n) φ~ / λ, with λ
+            // of K~ already operator-normalized.
+            let (eig, w_sqrt) =
+                weighted_eig(gram, weights, n_source, solver, r)?;
+            build_coeffs(&eig, r, &w_sqrt, |_, lam| 1.0 / lam)?
+        }
+    };
+    Ok(EmbeddingModel {
+        kernel: *kernel,
+        centers: plan.points.clone(),
+        coeffs,
+        op_eigenvalues,
+        method: plan.method.clone(),
+        meta: ModelMeta {
+            version: 0,
+            solver: *solver,
+            rsde: plan.rsde.clone(),
+        },
+    })
+}
+
+/// Shared Nyström-family extension (used by `fit_nystrom`,
+/// `fit_weighted_nystrom` and `fit_icd_kpca`): given landmark/factor
+/// eigenpairs `(λ, u)` and the cross matrix `C`, the approximate
+/// full-Gram eigenvector is `φ̂^ι ∝ C u^ι` (normalized) with eigenvalue
+/// estimate `λ̂_ι = eig_scale · λ_ι`; the embedding coefficients then
+/// follow the uniform convention `A = √n φ̂ / λ̂` over all n points.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn extend_spectrum(
+    x: &Matrix,
+    kernel: &Kernel,
+    r: usize,
+    cross: &Matrix,
+    lam: &[f64],
+    u: &Matrix,
+    eig_scale: f64,
+    method: &str,
+) -> Result<EmbeddingModel> {
+    let n = x.rows();
+    let avail = lam.iter().take_while(|&&v| v > EIG_FLOOR).count();
+    let r_eff = r.min(avail);
+    if r_eff == 0 {
+        return Err(Error::Numerical(format!(
+            "{method}: no eigenvalues above floor"
+        )));
+    }
+    // φ̂ columns: normalize C u to unit length.
+    let mut phi = Matrix::zeros(n, r_eff);
+    let mut lam_hat = Vec::with_capacity(r_eff);
+    for j in 0..r_eff {
+        let uj = u.col(j);
+        let col = cross.matvec(&uj)?;
+        let norm = col.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm <= 1e-12 {
+            return Err(Error::Numerical(format!(
+                "{method}: degenerate extended eigenvector"
+            )));
+        }
+        for i in 0..n {
+            phi.set(i, j, col[i] / norm);
+        }
+        lam_hat.push(eig_scale * lam[j]);
+    }
+    let fake_eig = Eigh { values: lam_hat.clone(), vectors: phi };
+    let s = vec![1.0; n];
+    let sqrt_n = (n as f64).sqrt();
+    let (coeffs, _) =
+        build_coeffs(&fake_eig, r_eff, &s, |_, l| sqrt_n / l)?;
+    let op_eigenvalues: Vec<f64> =
+        lam_hat.iter().map(|&l| l / n as f64).collect();
+    Ok(EmbeddingModel {
+        kernel: *kernel,
+        centers: x.clone(),
+        coeffs,
+        op_eigenvalues,
+        method: method.into(),
+        meta: ModelMeta::default(),
+    })
+}
+
+/// Incrementally maintained center set + its symmetric kernel Gram —
+/// the state [`EmbeddingModel::refresh`] updates in `O(Δm · m)` kernel
+/// evaluations per delta instead of recomputing all `O(m²)`.
+///
+/// Entries are produced by the same scalar `Kernel::eval` path as
+/// `Kernel::gram_sym`, so the cached Gram stays **bitwise identical** to
+/// a from-scratch `gram_sym` of the same centers; refresh therefore
+/// agrees with a batch refit exactly (up to the eigensolver's own
+/// determinism, which is bit-reproducible too).
+#[derive(Clone, Debug)]
+pub struct GramCache {
+    centers: Matrix,
+    gram: Matrix,
+}
+
+impl GramCache {
+    /// Build the cache for a center set (one full `gram_sym`).
+    pub fn new(kernel: &Kernel, centers: &Matrix) -> GramCache {
+        GramCache {
+            centers: centers.clone(),
+            gram: kernel.gram_sym(centers),
+        }
+    }
+
+    /// The cached center set.
+    pub fn centers(&self) -> &Matrix {
+        &self.centers
+    }
+
+    /// The cached m×m Gram matrix.
+    pub fn gram(&self) -> &Matrix {
+        &self.gram
+    }
+
+    /// Number of cached centers.
+    pub fn m(&self) -> usize {
+        self.centers.rows()
+    }
+
+    /// Replay a [`ShadowDelta`]: drop the removed rows/columns, then
+    /// append the added centers, computing only the new cross entries
+    /// (`O(Δm · m)` kernel evaluations).  Validates the whole delta
+    /// before mutating, so an `Err` leaves the cache unchanged.
+    pub fn apply_delta(
+        &mut self,
+        kernel: &Kernel,
+        delta: &ShadowDelta,
+    ) -> Result<()> {
+        let m0 = self.centers.rows();
+        for pair in delta.removed.windows(2) {
+            if pair[0] >= pair[1] {
+                return Err(Error::Shape(
+                    "apply_delta: removals must be ascending and unique"
+                        .into(),
+                ));
+            }
+        }
+        if let Some(&last) = delta.removed.last() {
+            if last >= m0 {
+                return Err(Error::Shape(format!(
+                    "apply_delta: removal index {last} >= m = {m0}"
+                )));
+            }
+        }
+        if delta.added.rows() > 0
+            && delta.added.cols() != self.centers.cols()
+        {
+            return Err(Error::Shape(format!(
+                "apply_delta: added dim {} != center dim {}",
+                delta.added.cols(),
+                self.centers.cols()
+            )));
+        }
+        let m1 = m0 - delta.removed.len() + delta.added.rows();
+        if delta.weights.len() != m1 {
+            return Err(Error::Shape(format!(
+                "apply_delta: {} weights for {} centers",
+                delta.weights.len(),
+                m1
+            )));
+        }
+
+        if !delta.removed.is_empty() {
+            let mut removed = delta.removed.iter().peekable();
+            let keep: Vec<usize> = (0..m0)
+                .filter(|i| {
+                    if removed.peek() == Some(&i) {
+                        removed.next();
+                        false
+                    } else {
+                        true
+                    }
+                })
+                .collect();
+            self.centers = self.centers.select_rows(&keep);
+            self.gram = self.gram.select_rows(&keep).select_cols(&keep);
+        }
+
+        let a = delta.added.rows();
+        if a > 0 {
+            let mk = self.centers.rows();
+            let m_new = mk + a;
+            let dim = delta.added.cols();
+            let mut centers = Matrix::zeros(m_new, dim);
+            for i in 0..mk {
+                centers.row_mut(i).copy_from_slice(self.centers.row(i));
+            }
+            for i in 0..a {
+                centers
+                    .row_mut(mk + i)
+                    .copy_from_slice(delta.added.row(i));
+            }
+            let mut gram = Matrix::zeros(m_new, m_new);
+            for i in 0..mk {
+                gram.row_mut(i)[..mk].copy_from_slice(self.gram.row(i));
+            }
+            for i in mk..m_new {
+                gram.set(i, i, kernel.kappa());
+                for j in 0..i {
+                    let v = kernel.eval(centers.row(i), centers.row(j));
+                    gram.set(i, j, v);
+                    gram.set(j, i, v);
+                }
+            }
+            self.centers = centers;
+            self.gram = gram;
+        }
+        Ok(())
+    }
+}
+
+impl EmbeddingModel {
+    /// Incrementally refit this reduced-set model from a streaming delta
+    /// — the paper's cheap-update claim made operational: instead of
+    /// re-reducing all n source points and refitting (`O(nm) + O(m³)`),
+    /// only the m×m weighted system is re-solved from the updated
+    /// reduced set (`O(m³)` exact, `O(m²k)` under the `Subspace` policy
+    /// recorded in `meta.solver`), with the center Gram maintained
+    /// incrementally by the [`GramCache`].
+    ///
+    /// The cache must track this model's centers (create it once with
+    /// [`GramCache::new`] after the initial fit).  On success the model
+    /// is replaced in place and `meta.version` is incremented; refreshing
+    /// after streaming a dataset agrees with a from-scratch
+    /// [`fit_rskpca`](super::fit_rskpca) on the same reduced set to
+    /// better than 1e-10 (see `tests/end_to_end.rs`).
+    ///
+    /// ```
+    /// use rskpca::data::gaussian_mixture_2d;
+    /// use rskpca::density::StreamingShadow;
+    /// use rskpca::kernel::Kernel;
+    /// use rskpca::kpca::{fit_rskpca, GramCache};
+    ///
+    /// let ds = gaussian_mixture_2d(300, 3, 0.4, 1);
+    /// let kernel = Kernel::gaussian(1.0);
+    /// let mut stream = StreamingShadow::new(&kernel, 4.0, 2);
+    /// for i in 0..200 {
+    ///     stream.observe(ds.x.row(i));
+    /// }
+    /// stream.drain_delta(); // consume the initial window
+    /// let mut model = fit_rskpca(&stream.snapshot(), &kernel, 3).unwrap();
+    /// let mut cache = GramCache::new(&kernel, &model.centers);
+    /// // 100 more points arrive: refresh instead of refitting.
+    /// for i in 200..300 {
+    ///     stream.observe(ds.x.row(i));
+    /// }
+    /// let delta = stream.drain_delta();
+    /// model.refresh(&delta, &mut cache, 3).unwrap();
+    /// assert_eq!(model.meta.version, 1);
+    /// assert_eq!(model.n_retained(), stream.snapshot().m());
+    /// ```
+    pub fn refresh(
+        &mut self,
+        delta: &ShadowDelta,
+        cache: &mut GramCache,
+        r: usize,
+    ) -> Result<()> {
+        if self.meta.rsde.is_none() {
+            return Err(Error::Shape(format!(
+                "refresh: model '{}' was not fit from a reduced set",
+                self.method
+            )));
+        }
+        if cache.centers.rows() != self.centers.rows() {
+            return Err(Error::Shape(format!(
+                "refresh: cache tracks {} centers, model has {}",
+                cache.centers.rows(),
+                self.centers.rows()
+            )));
+        }
+        cache.apply_delta(&self.kernel, delta)?;
+        let plan = TrainPlan {
+            points: &cache.centers,
+            weights: Some((&delta.weights, delta.n_source)),
+            method: self.method.clone(),
+            rsde: self.meta.rsde.clone(),
+        };
+        let solver = self.meta.solver;
+        let mut refreshed = fit_plan_with_gram(
+            &cache.gram,
+            &plan,
+            &self.kernel,
+            r,
+            &solver,
+        )?;
+        refreshed.meta.version = self.meta.version + 1;
+        *self = refreshed;
+        Ok(())
+    }
+}
+
+/// The full online lifecycle in one object: stream points into an
+/// ε-cover, drain deltas, and keep a served model fresh through
+/// [`EmbeddingModel::refresh`] (falling back to a from-scratch fit when
+/// the incremental solve cannot proceed, e.g. before any data arrived).
+/// This is what the coordinator's background refresher runs.
+pub struct OnlineRskpca {
+    kernel: Kernel,
+    r: usize,
+    solver: EigSolver,
+    stream: crate::density::StreamingShadow,
+    cache: Option<GramCache>,
+    model: Option<EmbeddingModel>,
+}
+
+impl OnlineRskpca {
+    /// New lifecycle over a fresh (non-decaying) streaming cover.
+    pub fn new(
+        kernel: Kernel,
+        ell: f64,
+        dim: usize,
+        r: usize,
+        solver: EigSolver,
+    ) -> Self {
+        let stream =
+            crate::density::StreamingShadow::new(&kernel, ell, dim);
+        Self::from_stream(kernel, stream, r, solver)
+    }
+
+    /// New lifecycle over a caller-configured stream (e.g. one with
+    /// decay enabled for drift adaptation).
+    pub fn from_stream(
+        kernel: Kernel,
+        stream: crate::density::StreamingShadow,
+        r: usize,
+        solver: EigSolver,
+    ) -> Self {
+        OnlineRskpca { kernel, r, solver, stream, cache: None, model: None }
+    }
+
+    /// Observe one point.
+    pub fn observe(&mut self, x: &[f64]) {
+        self.stream.observe(x);
+    }
+
+    /// Observe a batch of rows.
+    pub fn observe_rows(&mut self, rows: &Matrix) {
+        for i in 0..rows.rows() {
+            self.stream.observe(rows.row(i));
+        }
+    }
+
+    /// The underlying streaming cover.
+    pub fn stream(&self) -> &crate::density::StreamingShadow {
+        &self.stream
+    }
+
+    /// The current model, if one has been fit yet.
+    pub fn model(&self) -> Option<&EmbeddingModel> {
+        self.model.as_ref()
+    }
+
+    /// Drain the stream's delta and bring the model up to date:
+    /// incremental [`EmbeddingModel::refresh`] when a model exists, a
+    /// from-scratch [`fit_rskpca_with`](super::fit_rskpca_with)
+    /// otherwise.  Returns `None` while the stream is still empty.
+    pub fn refresh(&mut self) -> Result<Option<&EmbeddingModel>> {
+        let delta = self.stream.drain_delta();
+        let mut up_to_date = false;
+        if let (Some(model), Some(cache)) =
+            (self.model.as_mut(), self.cache.as_mut())
+        {
+            if delta.is_empty() {
+                up_to_date = true;
+            } else {
+                // A failed incremental solve (e.g. a collapsed spectrum
+                // after heavy decay) falls through to the full refit.
+                up_to_date =
+                    model.refresh(&delta, cache, self.r).is_ok();
+            }
+        }
+        if !up_to_date {
+            if self.stream.m() == 0 {
+                return Ok(None);
+            }
+            let rs = self.stream.snapshot();
+            let version =
+                self.model.as_ref().map_or(0, |m| m.meta.version + 1);
+            let mut model = super::fit_rskpca_with(
+                &rs,
+                &self.kernel,
+                self.r,
+                &self.solver,
+            )?;
+            model.meta.version = version;
+            self.cache =
+                Some(GramCache::new(&self.kernel, &model.centers));
+            self.model = Some(model);
+        }
+        Ok(self.model.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture_2d;
+    use crate::density::{RsdeEstimator, ShadowDensity, StreamingShadow};
+    use crate::kpca::{fit_kpca, fit_kpca_with, fit_rskpca};
+    use crate::testutil::prop_check;
+
+    #[test]
+    fn solver_names_round_trip() {
+        for solver in [
+            EigSolver::Exact,
+            EigSolver::Subspace { k: 0, tol: 1e-12 },
+            EigSolver::Subspace { k: 8, tol: 1e-10 },
+        ] {
+            let name = solver.name();
+            assert_eq!(EigSolver::parse(&name), Some(solver), "{name}");
+        }
+        assert_eq!(EigSolver::parse("subspace"),
+            Some(EigSolver::Subspace { k: 0, tol: 1e-12 }));
+        assert_eq!(EigSolver::parse("subspace:k=4"),
+            Some(EigSolver::Subspace { k: 4, tol: 1e-12 }));
+        assert!(EigSolver::parse("qr").is_none());
+        assert!(EigSolver::parse("subspace:j=4").is_none());
+    }
+
+    #[test]
+    fn subspace_policy_matches_exact_fit() {
+        let ds = gaussian_mixture_2d(200, 3, 0.4, 9);
+        let k = Kernel::gaussian(1.0);
+        let exact = fit_kpca(&ds.x, &k, 4).unwrap();
+        let sub = fit_kpca_with(
+            &ds.x,
+            &k,
+            4,
+            &EigSolver::Subspace { k: 0, tol: 1e-13 },
+        )
+        .unwrap();
+        assert_eq!(sub.meta.solver,
+            EigSolver::Subspace { k: 0, tol: 1e-13 });
+        for j in 0..4 {
+            let rel = (exact.op_eigenvalues[j] - sub.op_eigenvalues[j])
+                .abs()
+                / exact.op_eigenvalues[j];
+            assert!(rel < 1e-8, "eigenvalue {j} rel {rel}");
+        }
+        // The training embedding keeps the L²(p̂_n) orthonormality
+        // invariant regardless of which solver produced it (entrywise
+        // vector comparison would be brittle for clustered eigenvalues).
+        let z = sub.transform(&ds.x);
+        let gram = z.transpose().matmul(&z).unwrap().scale(1.0 / 200.0);
+        let eye = Matrix::identity(sub.r());
+        assert!(
+            gram.sub(&eye).unwrap().max_abs() < 1e-6,
+            "subspace embedding not orthonormal: {}",
+            gram.sub(&eye).unwrap().max_abs()
+        );
+    }
+
+    #[test]
+    fn prop_subspace_eigenvalues_match_exact_on_psd_grams() {
+        prop_check(
+            "trainer_subspace_vs_exact",
+            25,
+            |g| {
+                let d = g.usize_in(3, 12);
+                let n = d + g.usize_in(5, 30);
+                let k = g.usize_in(1, d.min(4));
+                (g.matrix(n, d), k)
+            },
+            |(b, k)| {
+                let gram = b
+                    .transpose()
+                    .matmul(b)
+                    .unwrap()
+                    .scale(1.0 / b.rows() as f64);
+                let exact = EigSolver::Exact
+                    .solve(&gram, *k)
+                    .map_err(|e| e.to_string())?;
+                let sub = EigSolver::Subspace { k: *k, tol: 1e-13 }
+                    .solve(&gram, *k)
+                    .map_err(|e| e.to_string())?;
+                let kk = (*k).min(exact.values.len());
+                if sub.values.len() < kk {
+                    return Err(format!(
+                        "subspace returned {} pairs, wanted {kk}",
+                        sub.values.len()
+                    ));
+                }
+                let scale = exact.values[0].max(1.0);
+                for j in 0..kk {
+                    let diff =
+                        (sub.values[j] - exact.values[j]).abs();
+                    if diff > 1e-7 * scale {
+                        return Err(format!(
+                            "eigenvalue {j}: {} vs {} (diff {diff})",
+                            sub.values[j], exact.values[j]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gram_cache_matches_from_scratch_gram() {
+        let ds = gaussian_mixture_2d(400, 3, 0.4, 17);
+        let kernel = Kernel::gaussian(1.0);
+        let mut stream =
+            StreamingShadow::new(&kernel, 4.0, 2).with_decay(0.99, 0.05);
+        for i in 0..200 {
+            stream.observe(ds.x.row(i));
+        }
+        stream.drain_delta();
+        let mut cache =
+            GramCache::new(&kernel, &stream.snapshot().centers);
+        for i in 200..400 {
+            stream.observe(ds.x.row(i));
+        }
+        let delta = stream.drain_delta();
+        cache.apply_delta(&kernel, &delta).unwrap();
+        let snap = stream.snapshot();
+        assert_eq!(cache.m(), snap.m());
+        assert_eq!(
+            cache.centers().as_slice(),
+            snap.centers.as_slice(),
+            "center replay diverged"
+        );
+        let fresh = kernel.gram_sym(&snap.centers);
+        assert_eq!(
+            cache.gram().as_slice(),
+            fresh.as_slice(),
+            "cached gram not bitwise equal to gram_sym"
+        );
+    }
+
+    #[test]
+    fn apply_delta_validates_before_mutating() {
+        let ds = gaussian_mixture_2d(60, 2, 0.4, 3);
+        let kernel = Kernel::gaussian(1.0);
+        let rs = ShadowDensity::new(4.0).reduce(&ds.x, &kernel);
+        let mut cache = GramCache::new(&kernel, &rs.centers);
+        let before = cache.gram().clone();
+        let m = cache.m();
+        let bad = ShadowDelta {
+            removed: vec![m + 3],
+            added: Matrix::zeros(0, 2),
+            weights: vec![1.0; m],
+            n_source: 60,
+            bumped: 0,
+        };
+        assert!(cache.apply_delta(&kernel, &bad).is_err());
+        let wrong_len = ShadowDelta {
+            removed: vec![],
+            added: Matrix::zeros(0, 2),
+            weights: vec![1.0; m + 2],
+            n_source: 60,
+            bumped: 1,
+        };
+        assert!(cache.apply_delta(&kernel, &wrong_len).is_err());
+        assert_eq!(cache.gram().as_slice(), before.as_slice());
+    }
+
+    #[test]
+    fn refresh_rejects_non_reduced_models() {
+        let ds = gaussian_mixture_2d(50, 2, 0.4, 5);
+        let kernel = Kernel::gaussian(1.0);
+        let mut model = fit_kpca(&ds.x, &kernel, 3).unwrap();
+        let mut cache = GramCache::new(&kernel, &model.centers);
+        let delta = ShadowDelta {
+            removed: vec![],
+            added: Matrix::zeros(0, 2),
+            weights: vec![1.0; 50],
+            n_source: 50,
+            bumped: 1,
+        };
+        assert!(model.refresh(&delta, &mut cache, 3).is_err());
+    }
+
+    #[test]
+    fn online_lifecycle_tracks_batch_fit() {
+        let ds = gaussian_mixture_2d(600, 3, 0.4, 7);
+        let kernel = Kernel::gaussian(1.0);
+        let mut online =
+            OnlineRskpca::new(kernel, 4.0, 2, 3, EigSolver::Exact);
+        assert!(online.refresh().unwrap().is_none(), "no data yet");
+        for chunk in 0..3 {
+            for i in (chunk * 200)..((chunk + 1) * 200) {
+                online.observe(ds.x.row(i));
+            }
+            let model = online.refresh().unwrap().unwrap();
+            assert_eq!(model.meta.version, chunk as u64);
+        }
+        let online_model = online.model().unwrap();
+        let batch =
+            fit_rskpca(&online.stream().snapshot(), &kernel, 3).unwrap();
+        assert_eq!(online_model.n_retained(), batch.n_retained());
+        for (a, b) in online_model
+            .op_eigenvalues
+            .iter()
+            .zip(&batch.op_eigenvalues)
+        {
+            assert!((a - b).abs() < 1e-10);
+        }
+        assert!(
+            online_model
+                .coeffs
+                .sub(&batch.coeffs)
+                .unwrap()
+                .max_abs()
+                < 1e-10
+        );
+    }
+}

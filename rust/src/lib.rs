@@ -13,8 +13,11 @@
 //!   the substrates they need (dense linear algebra, PRNG, datasets,
 //!   classification), a shared parallel compute engine ([`parallel`])
 //!   that every hot path fans out through, a PJRT runtime that executes
-//!   the AOT artifacts (behind the `pjrt` cargo feature), and a threaded
-//!   embedding service with dynamic batching.
+//!   the AOT artifacts (behind the `pjrt` cargo feature), a threaded
+//!   embedding service with dynamic batching, and an online model
+//!   lifecycle (streaming deltas → incremental
+//!   [`kpca::EmbeddingModel::refresh`] → atomic hot swap through the
+//!   coordinator's versioned model registry).
 //!
 //! Python never runs on the request path; after `make artifacts` the rust
 //! binary is self-contained.  See the repository's `README.md` for a

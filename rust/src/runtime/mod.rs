@@ -18,6 +18,15 @@
 //! keeps the service design lock-free on the hot path.  Inside one
 //! backend call, data-parallel work (Gram rows, fused projection rows)
 //! fans out through [`crate::parallel`].
+//!
+//! **Hot-swap contract.** The coordinator's model registry can replace
+//! the served model between batches, so a backend must tolerate
+//! consecutive `embed` calls whose `centers`/`coeffs` shapes differ
+//! (e.g. a refreshed reduced set that grew by a few centers).  The
+//! native backend is shape-oblivious; the PJRT backend handles this
+//! through its bucket padding, compiling a new executable when a swap
+//! crosses into an unseen bucket — that one-off compile lands in the
+//! first post-swap batch's latency, not in the swap itself.
 
 mod manifest;
 

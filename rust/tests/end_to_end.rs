@@ -1,17 +1,23 @@
 //! End-to-end integration: fit -> save -> load -> serve round-trips, the
-//! experiment drivers at smoke scale, and the CLI surface.
+//! online lifecycle (incremental refresh ≡ batch refit, non-blocking hot
+//! swap), the experiment drivers at smoke scale, and the CLI surface.
 
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 use rskpca::classify::{accuracy, KnnClassifier};
 use rskpca::config::ServiceConfig;
-use rskpca::coordinator::serve;
-use rskpca::data::{train_test_split};
-use rskpca::density::{RsdeEstimator, ShadowDensity};
+use rskpca::coordinator::{
+    serve, EmbeddingService, ModelRegistry, DEFAULT_MODEL,
+};
+use rskpca::data::{gaussian_mixture_2d, train_test_split};
+use rskpca::density::{RsdeEstimator, ShadowDensity, StreamingShadow};
 use rskpca::experiments::{self, dataset_by_name, sigma_for, ExperimentCtx};
 use rskpca::kernel::Kernel;
-use rskpca::kpca::{fit_kpca, fit_rskpca, EmbeddingModel};
-use rskpca::runtime::NativeBackend;
+use rskpca::kpca::{fit_kpca, fit_rskpca, EmbeddingModel, GramCache};
+use rskpca::linalg::Matrix;
+use rskpca::runtime::{GramBackend, NativeBackend};
 
 fn tmpdir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("rskpca_e2e_{name}"));
@@ -70,6 +76,127 @@ fn rskpca_embeddings_classify_comparably_to_kpca() {
         acc_red >= acc_full - 0.08,
         "rskpca acc {acc_red} much worse than kpca {acc_full}"
     );
+}
+
+#[test]
+fn incremental_refresh_matches_batch_fit() {
+    // Stream a fixed dataset in chunks, `refresh` after each delta
+    // batch, and check the final model against a from-scratch
+    // `fit_rskpca` on the same reduced set: the incremental path
+    // maintains the Gram bitwise, so agreement is to solver roundoff —
+    // well inside the 1e-10 acceptance bound.
+    let ds = gaussian_mixture_2d(600, 3, 0.4, 11);
+    let kernel = Kernel::gaussian(1.0);
+    let mut stream = StreamingShadow::new(&kernel, 4.0, 2);
+    for i in 0..150 {
+        stream.observe(ds.x.row(i));
+    }
+    stream.drain_delta(); // consume the initial window
+    let mut model = fit_rskpca(&stream.snapshot(), &kernel, 4).unwrap();
+    let mut cache = GramCache::new(&kernel, &model.centers);
+    for chunk in 1..4 {
+        for i in (chunk * 150)..((chunk + 1) * 150) {
+            stream.observe(ds.x.row(i));
+        }
+        let delta = stream.drain_delta();
+        model.refresh(&delta, &mut cache, 4).unwrap();
+        assert_eq!(model.meta.version, chunk as u64);
+    }
+    let batch = fit_rskpca(&stream.snapshot(), &kernel, 4).unwrap();
+    assert_eq!(model.n_retained(), batch.n_retained());
+    assert!(
+        model.centers.sub(&batch.centers).unwrap().max_abs() < 1e-12,
+        "center replay diverged"
+    );
+    for (a, b) in model.op_eigenvalues.iter().zip(&batch.op_eigenvalues)
+    {
+        assert!((a - b).abs() < 1e-10, "eigenvalues {a} vs {b}");
+    }
+    assert!(
+        model.coeffs.sub(&batch.coeffs).unwrap().max_abs() < 1e-10,
+        "coefficients diverged: {}",
+        model.coeffs.sub(&batch.coeffs).unwrap().max_abs()
+    );
+    let z_inc = model.transform(&ds.x);
+    let z_batch = batch.transform(&ds.x);
+    assert!(z_inc.sub(&z_batch).unwrap().max_abs() < 1e-10);
+}
+
+/// A backend whose every call sleeps — lets the test publish a new model
+/// while a batch is provably in flight.
+struct SlowBackend {
+    delay: Duration,
+}
+
+impl GramBackend for SlowBackend {
+    fn gram(
+        &mut self,
+        x: &Matrix,
+        y: &Matrix,
+        kernel: &Kernel,
+    ) -> rskpca::Result<Matrix> {
+        std::thread::sleep(self.delay);
+        Ok(kernel.gram(x, y))
+    }
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+}
+
+#[test]
+fn hot_swap_is_non_blocking_and_versioned() {
+    let ds = gaussian_mixture_2d(80, 3, 0.4, 21);
+    let kernel = Kernel::gaussian(1.0);
+    let model = fit_kpca(&ds.x, &kernel, 3).unwrap();
+    let flipped = EmbeddingModel {
+        coeffs: model.coeffs.scale(-1.0),
+        ..model.clone()
+    };
+    let query = ds.x.select_rows(&(0..8).collect::<Vec<_>>());
+    let expect_old = model.transform(&query);
+    let expect_new = expect_old.scale(-1.0);
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish(DEFAULT_MODEL, model);
+    let svc = EmbeddingService::start_with_registry(
+        registry.clone(),
+        DEFAULT_MODEL,
+        Box::new(|| {
+            Ok(Box::new(SlowBackend {
+                delay: Duration::from_millis(250),
+            }) as Box<dyn GramBackend>)
+        }),
+        ServiceConfig {
+            max_batch: 8,
+            max_wait_us: 500,
+            queue_depth: 64,
+            workers: 1,
+        },
+    )
+    .unwrap();
+    let h = svc.handle();
+    // Enqueue a request; the worker picks it up and enters the slow
+    // backend call holding the v1 model Arc.
+    let in_flight = h.try_embed(query.clone()).unwrap();
+    std::thread::sleep(Duration::from_millis(60));
+    // Publish v2 while that batch is mid-execution: must not block.
+    let v2 = registry.publish(DEFAULT_MODEL, flipped);
+    assert_eq!(v2, 2);
+    // A post-swap request is served by the next batch, against v2.
+    let z_new = h.embed(query.clone()).unwrap();
+    // The in-flight batch completed against the model it fetched (v1).
+    let z_old = in_flight.recv().unwrap().unwrap();
+    assert!(
+        z_old.sub(&expect_old).unwrap().max_abs() < 1e-9,
+        "in-flight request must complete against the old model"
+    );
+    assert!(
+        z_new.sub(&expect_new).unwrap().max_abs() < 1e-9,
+        "post-swap request must see the new model"
+    );
+    let snap = svc.shutdown();
+    assert_eq!(snap.model_swaps, 1);
+    assert_eq!(snap.model_version, 2);
 }
 
 #[test]
@@ -164,6 +291,21 @@ fn cli_fit_and_embed_commands_compose() {
         "20",
         "--rows-per-request",
         "4",
+    ])
+    .unwrap();
+
+    // serve --refresh: the background refresher observes the traffic and
+    // hot-swaps the served model mid-run.
+    run(&[
+        "serve",
+        "--model",
+        model_path.to_str().unwrap(),
+        "--requests",
+        "40",
+        "--rows-per-request",
+        "4",
+        "--refresh",
+        "10",
     ])
     .unwrap();
 }
