@@ -36,6 +36,58 @@ fi
 if [ "${1:-}" != "quick" ]; then
     step "online lifecycle example smoke (drift scenario)"
     cargo run --release --example online_drift -- --quick
+
+    step "HTTP serving smoke (serve --listen / healthz / loadgen / SIGTERM)"
+    smoke_dir=$(mktemp -d)
+    serve_pid=""
+    # Every exit path (including a failed loadgen under set -e) kills
+    # the background server and removes the scratch dir.
+    cleanup_smoke() {
+        [ -n "$serve_pid" ] && kill "$serve_pid" 2>/dev/null || true
+        rm -rf "$smoke_dir"
+    }
+    trap cleanup_smoke EXIT
+    cat > "$smoke_dir/run.toml" <<'EOF'
+[run]
+dataset = "gmm2d"
+ell = 4.0
+rank = 4
+[server]
+workers = 2
+EOF
+    target/release/rskpca fit --config "$smoke_dir/run.toml" \
+        --model-out "$smoke_dir/model.json"
+    # --config exercises the [server] section plumbing; --listen
+    # overrides its addr with an ephemeral port.
+    target/release/rskpca serve --model "$smoke_dir/model.json" \
+        --config "$smoke_dir/run.toml" \
+        --listen 127.0.0.1:0 > "$smoke_dir/serve.log" 2>&1 &
+    serve_pid=$!
+    # The server prints its ephemeral port on the "listening on" line.
+    port=""
+    for _ in $(seq 1 100); do
+        port=$(sed -n 's#.*listening on http://127\.0\.0\.1:\([0-9][0-9]*\).*#\1#p' \
+            "$smoke_dir/serve.log")
+        [ -n "$port" ] && break
+        sleep 0.1
+    done
+    if [ -z "$port" ]; then
+        echo "server never reported its port:"
+        cat "$smoke_dir/serve.log"
+        exit 1
+    fi
+    # loadgen polls /healthz before the burst and exits non-zero
+    # unless it got 2xx embed responses.
+    target/release/rskpca loadgen --target "127.0.0.1:$port" \
+        --clients 2 --requests 20
+    # Clean SIGTERM shutdown: acceptor close -> drain -> join -> exit 0.
+    kill -TERM "$serve_pid"
+    wait "$serve_pid"
+    serve_pid=""
+    echo "serve shut down cleanly"
+    cat "$smoke_dir/serve.log"
+    cleanup_smoke
+    trap - EXIT
 fi
 
 step "cargo doc --no-deps (warnings denied)"

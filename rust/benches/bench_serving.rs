@@ -1,0 +1,160 @@
+//! Loopback end-to-end serving bench: HTTP ingress → coordinator
+//! queue → dynamic batcher → native backend, measured with the
+//! closed-loop load generator across model kinds (full KPCA vs RSKPCA
+//! at m ∈ {100, 400}) and HTTP worker counts {1, 4}.
+//!
+//! The punchline row set is the paper's serving claim made concrete:
+//! RSKPCA evaluates m ≪ n kernels per projected row, so at equal
+//! traffic the reduced-set models clear more rows/s at lower p99 than
+//! the full-KPCA model whose centers are the whole training set — the
+//! reduced-set serving speedup printed at the end.
+//!
+//! Run: `cargo bench --bench bench_serving`
+//! (quick: `RSKPCA_BENCH_QUICK=1 cargo bench --bench bench_serving`)
+
+use rskpca::bench::quick_mode;
+use rskpca::config::{ServerConfig, ServiceConfig};
+use rskpca::coordinator::EmbeddingService;
+use rskpca::data::gaussian_mixture_2d;
+use rskpca::density::ShadowDensity;
+use rskpca::kernel::Kernel;
+use rskpca::kpca::{fit_kpca, fit_rskpca, EmbeddingModel};
+use rskpca::linalg::Matrix;
+use rskpca::prng::Pcg64;
+use rskpca::runtime::{BackendFactory, NativeBackend};
+use rskpca::server::loadgen::{self, LoadgenConfig};
+use rskpca::server::HttpServer;
+
+/// n points jittered (±0.05 per coordinate) around m grid sites spaced
+/// 1.0 apart; with eps = sigma/ell = 0.25 the shadow cover retains
+/// exactly m centers, pinning the reduced-set size the serving cost
+/// scales with.
+fn grid_points(m: usize, n: usize, seed: u64) -> Matrix {
+    let side = (m as f64).sqrt().ceil() as usize;
+    let mut rng = Pcg64::new(seed);
+    let mut x = Matrix::zeros(n, 2);
+    for i in 0..n {
+        let site = if i < m { i } else { rng.below(m) };
+        let (r, c) = (site / side, site % side);
+        x.set(i, 0, r as f64 + rng.range(-0.05, 0.05));
+        x.set(i, 1, c as f64 + rng.range(-0.05, 0.05));
+    }
+    x
+}
+
+fn native() -> BackendFactory {
+    Box::new(|| Ok(Box::new(NativeBackend)))
+}
+
+fn main() {
+    let quick = quick_mode();
+    let rank = 8;
+    let kernel = Kernel::gaussian(1.0);
+    let n_full = if quick { 300 } else { 1000 };
+    let (clients, requests_per_client) =
+        if quick { (2, 25) } else { (4, 120) };
+    let rows_per_request = 8;
+
+    // Full KPCA: every training point is a serving center (the O(rn)
+    // per-point test cost the paper attacks).
+    let ds = gaussian_mixture_2d(n_full, 3, 0.5, 11);
+    let full = fit_kpca(&ds.x, &kernel, rank).unwrap();
+
+    // RSKPCA at pinned reduced-set sizes m ∈ {100, 400}.
+    let mut models: Vec<(String, EmbeddingModel)> =
+        vec![(format!("full_n{n_full}"), full)];
+    for m in [100usize, 400] {
+        let x = grid_points(m, 4 * m, 29 + m as u64);
+        let rs = ShadowDensity::new(4.0).fit(&x, &kernel);
+        let model = fit_rskpca(&rs, &kernel, rank).unwrap();
+        models.push((format!("rskpca_m{}", model.n_retained()), model));
+    }
+
+    println!(
+        "bench_serving: loopback HTTP end-to-end ({clients} clients x \
+         {requests_per_client} requests x {rows_per_request} rows)\n"
+    );
+    let mut csv = String::from(
+        "model,centers,http_workers,rows_per_s,p50_us,p95_us,p99_us,\
+         ok,rejected,errors\n",
+    );
+    // (model name, workers, rows/s) for the speedup summary.
+    let mut results: Vec<(String, usize, f64)> = Vec::new();
+
+    for (name, model) in &models {
+        for &workers in &[1usize, 4] {
+            let svc = EmbeddingService::start(
+                model.clone(),
+                native(),
+                ServiceConfig::default(),
+            )
+            .unwrap();
+            let server_cfg = ServerConfig {
+                listen: "127.0.0.1:0".into(),
+                workers,
+                ..Default::default()
+            };
+            let server =
+                HttpServer::start(svc.handle(), &server_cfg).unwrap();
+            let mut report = loadgen::run(&LoadgenConfig {
+                target: server.local_addr().to_string(),
+                clients,
+                requests_per_client,
+                rows_per_request,
+                dim: 0,
+                seed: 0xBE_EF,
+                warmup_ms: 3000,
+            })
+            .unwrap();
+            let label = format!("serving/{name}/w{workers}");
+            println!(
+                "{label:<34} {:>9.0} rows/s  p50 {:>7.0}us  \
+                 p95 {:>7.0}us  p99 {:>7.0}us  ({} ok, {} rejected, \
+                 {} errors)",
+                report.rows_per_s(),
+                report.latency_us.percentile(50.0),
+                report.latency_us.percentile(95.0),
+                report.latency_us.p99(),
+                report.requests_ok,
+                report.rejected,
+                report.errors
+            );
+            csv.push_str(&format!(
+                "{name},{},{workers},{:.1},{:.1},{:.1},{:.1},{},{},{}\n",
+                model.n_retained(),
+                report.rows_per_s(),
+                report.latency_us.percentile(50.0),
+                report.latency_us.percentile(95.0),
+                report.latency_us.p99(),
+                report.requests_ok,
+                report.rejected,
+                report.errors
+            ));
+            results.push((name.clone(), workers, report.rows_per_s()));
+            server.shutdown();
+            svc.shutdown();
+        }
+    }
+
+    // The paper's serving claim, measured end to end over the wire.
+    let rate = |name: &str, workers: usize| -> f64 {
+        results
+            .iter()
+            .find(|(n, w, _)| n == name && *w == workers)
+            .map(|(_, _, r)| *r)
+            .unwrap_or(0.0)
+    };
+    let full_name = format!("full_n{n_full}");
+    println!();
+    for (name, _) in models.iter().skip(1) {
+        let base = rate(&full_name, 4).max(1e-9);
+        println!(
+            "reduced-set serving speedup {name} vs {full_name} \
+             (4 http workers): {:.2}x",
+            rate(name, 4) / base
+        );
+    }
+    std::fs::write("bench_serving.csv", csv)
+        .expect("write bench_serving.csv");
+    println!("\nwrote bench_serving.csv");
+}

@@ -3,7 +3,8 @@
 use std::path::{Path, PathBuf};
 
 use super::Args;
-use crate::config::RunConfig;
+use crate::config::{RunConfig, ServerConfig};
+use crate::coordinator::EmbeddingService;
 use crate::data::{
     gaussian_mixture_2d, load_dataset_csv, save_dataset_csv, swiss_roll,
     Dataset,
@@ -17,6 +18,8 @@ use crate::linalg::Matrix;
 use crate::metrics::Timer;
 use crate::prng::Pcg64;
 use crate::runtime::factory_from_name;
+use crate::server::loadgen::LoadgenConfig;
+use crate::server::HttpServer;
 
 fn req_flag(args: &Args, name: &str) -> Result<String> {
     args.flag(name)
@@ -151,34 +154,50 @@ pub fn embed(args: &Args) -> Result<()> {
     save_dataset_csv(&emb, Path::new(&out))
 }
 
-/// `rskpca serve --model FILE [--requests N] [...]` — starts the service
-/// and drives it with an in-process load generator, reporting latency and
-/// throughput (the serving-benchmark entry point).
+/// `rskpca serve --model FILE [--listen ADDR | --selftest] [...]` —
+/// starts the embedding service and fronts it with the HTTP serving
+/// layer ([`HttpServer`]): `POST /embed`, `GET /stats`, `GET /healthz`,
+/// `GET /models`, `POST /models/swap`.  Plain `serve` blocks on the
+/// listener until Ctrl-C / SIGTERM, then tears down in order (acceptor
+/// close → connection drain → worker join → queue drain).
 ///
-/// With `--refresh N` a background refresher thread feeds the same
-/// traffic into an online RSKPCA lifecycle ([`OnlineRskpca`]) and
-/// hot-swaps the served model every N requests through the service's
-/// [`crate::coordinator::ModelRegistry`] — streaming deltas →
-/// incremental refit → publish, with the batcher never draining.
+/// `--selftest` skips the listener and drives the service with the
+/// legacy in-process synthetic loop instead (`--requests`,
+/// `--rows-per-request`) — the quick no-network sanity check.
+///
+/// With `--refresh N` a background refresher thread feeds the live
+/// traffic (HTTP or synthetic) into an online RSKPCA lifecycle
+/// ([`OnlineRskpca`]) and hot-swaps the served model every N requests
+/// through the service's [`crate::coordinator::ModelRegistry`] —
+/// streaming deltas → incremental refit → publish, with the batcher
+/// never draining.
 pub fn serve(args: &Args) -> Result<()> {
     let model = EmbeddingModel::load(Path::new(&req_flag(args, "model")?))?;
     let backend_name = args.flag_or("backend", "native");
     let artifacts = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+    let selftest = args.has("selftest");
     let requests = args.flag_usize("requests", 200)?;
     let rows_per = args.flag_usize("rows-per-request", 8)?;
     let refresh_every = args.flag_usize("refresh", 0)?;
     let ell = args.flag_f64("ell", 4.0)?;
-    let (cfg, solver) = match args.flag("config") {
+    let (cfg, mut server_cfg, solver) = match args.flag("config") {
         Some(path) => {
             let rc = RunConfig::from_file(Path::new(path))?;
             apply_threads(args, rc.threads)?;
-            (rc.service, rc.solver)
+            (rc.service, rc.server, rc.solver)
         }
         None => {
             apply_threads(args, 0)?;
-            (Default::default(), Default::default())
+            (
+                Default::default(),
+                ServerConfig::default(),
+                Default::default(),
+            )
         }
     };
+    if let Some(listen) = args.flag("listen") {
+        server_cfg.listen = listen.to_string();
+    }
     let dim = model.centers.cols();
     let rank = model.r().max(1);
     let kernel = model.kernel;
@@ -202,14 +221,13 @@ pub fn serve(args: &Args) -> Result<()> {
         factory_from_name(&backend_name, &artifacts),
         cfg,
     )?;
-    let handle = svc.handle();
 
-    // Background refresher: observes the same traffic and periodically
-    // publishes a refreshed model into the serving slot (hot swap).
-    // The feed is bounded and lossy (`try_send` below): when a refresh
-    // is in progress the generator drops rows instead of queueing them,
-    // so memory stays bounded and the post-run join never has a backlog
-    // of expensive refreshes to drain.
+    // Background refresher: observes the served traffic and
+    // periodically publishes a refreshed model into the serving slot
+    // (hot swap).  The feed is bounded and lossy (`try_send` at every
+    // producer): when a refresh is in progress, samples are dropped
+    // instead of queued, so memory stays bounded and the post-run join
+    // never has a backlog of expensive refreshes to drain.
     let (feed_tx, feed_rx) =
         std::sync::mpsc::sync_channel::<Matrix>(2 * refresh_every.max(1));
     let refresher = (refresh_every > 0).then(|| {
@@ -234,43 +252,25 @@ pub fn serve(args: &Args) -> Result<()> {
             published
         })
     });
+    let feed = (refresh_every > 0).then(|| feed_tx.clone());
 
-    // Load generator: `requests` batches of random rows.
-    let mut rng = Pcg64::new(0xD05E);
-    let t = Timer::start();
-    let mut receivers = Vec::new();
-    let mut rejected = 0usize;
-    for _ in 0..requests {
-        let mut rows = Matrix::zeros(rows_per, dim);
-        for i in 0..rows_per {
-            for j in 0..dim {
-                rows.set(i, j, rng.normal());
-            }
-        }
-        if refresh_every > 0 {
-            // Lossy feed: drop the sample when the refresher is busy.
-            let _ = feed_tx.try_send(rows.clone());
-        }
-        match handle.try_embed(rows) {
-            Ok(rx) => receivers.push(rx),
-            Err(_) => rejected += 1,
-        }
-    }
-    for rx in receivers {
-        rx.recv()
-            .map_err(|_| Error::Service("reply dropped".into()))??;
-    }
-    let wall = t.elapsed_s();
+    let wall = if selftest {
+        serve_selftest(&svc, feed, requests, rows_per, dim)
+    } else {
+        serve_listen(&svc, &server_cfg, feed)
+    };
     drop(feed_tx);
     let published =
         refresher.map(|h| h.join().unwrap_or(0)).unwrap_or(0);
     let snap = svc.shutdown();
+    let wall = wall?;
     println!(
         "served {} requests ({} rows) in {wall:.3}s -> {:.0} rows/s, \
-         {rejected} rejected",
+         {} rejected",
         snap.requests,
         snap.rows,
-        snap.rows as f64 / wall
+        snap.rows as f64 / wall.max(1e-9),
+        snap.rejected
     );
     println!(
         "latency p50={:.0}us p95={:.0}us p99={:.0}us; mean batch {:.1} \
@@ -287,6 +287,106 @@ pub fn serve(args: &Args) -> Result<()> {
              {} hot swap(s), now serving v{}",
             snap.model_swaps, snap.model_version
         );
+    }
+    Ok(())
+}
+
+/// Listener mode: serve HTTP until Ctrl-C / SIGTERM, then tear down in
+/// order.  Returns the wall time spent serving.
+fn serve_listen(
+    svc: &EmbeddingService,
+    server_cfg: &ServerConfig,
+    feed: Option<std::sync::mpsc::SyncSender<Matrix>>,
+) -> Result<f64> {
+    let server =
+        HttpServer::start_with_feed(svc.handle(), server_cfg, feed)?;
+    crate::server::install_shutdown_handler();
+    let t = Timer::start();
+    // The "listening on" line is load-bearing: with port 0 it is how
+    // scripts (ci.sh's smoke step) discover the ephemeral port.
+    println!(
+        "listening on http://{} ({} connection workers, \
+         queue_policy={}, max_body={}B)",
+        server.local_addr(),
+        server_cfg.workers,
+        server_cfg.queue_policy.name(),
+        server_cfg.max_body_bytes
+    );
+    println!(
+        "routes: POST /embed | GET /stats | GET /healthz | GET /models \
+         | POST /models/swap   (Ctrl-C / SIGTERM to stop)"
+    );
+    while !crate::server::shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("shutdown: closing acceptor, draining connections");
+    server.shutdown();
+    Ok(t.elapsed_s())
+}
+
+/// `--selftest`: the in-process synthetic load loop (no network).
+/// Returns the wall time spent serving.
+fn serve_selftest(
+    svc: &EmbeddingService,
+    feed: Option<std::sync::mpsc::SyncSender<Matrix>>,
+    requests: usize,
+    rows_per: usize,
+    dim: usize,
+) -> Result<f64> {
+    let handle = svc.handle();
+    let mut rng = Pcg64::new(0xD05E);
+    let t = Timer::start();
+    let mut receivers = Vec::new();
+    for _ in 0..requests {
+        let mut rows = Matrix::zeros(rows_per, dim);
+        for i in 0..rows_per {
+            for j in 0..dim {
+                rows.set(i, j, rng.normal());
+            }
+        }
+        if let Some(feed) = &feed {
+            // Lossy feed: drop the sample when the refresher is busy.
+            let _ = feed.try_send(rows.clone());
+        }
+        match handle.try_embed(rows) {
+            Ok(rx) => receivers.push(rx),
+            Err(Error::Saturated(_)) => {} // counted in the snapshot
+            Err(e) => return Err(e),
+        }
+    }
+    for rx in receivers {
+        rx.recv()
+            .map_err(|_| Error::Service("reply dropped".into()))??;
+    }
+    Ok(t.elapsed_s())
+}
+
+/// `rskpca loadgen --target HOST:PORT [...]` — closed-loop
+/// multi-threaded client replaying row batches against a running
+/// `rskpca serve` instance; reports throughput and latency percentiles
+/// and exits non-zero when no request succeeds.
+pub fn loadgen(args: &Args) -> Result<()> {
+    let cfg = LoadgenConfig {
+        target: args.flag_or("target", "127.0.0.1:7878"),
+        clients: args.flag_usize("clients", 4)?,
+        requests_per_client: args.flag_usize("requests", 50)?,
+        rows_per_request: args.flag_usize("rows-per-request", 8)?,
+        dim: args.flag_usize("dim", 0)?,
+        seed: args.flag_usize("seed", 0x10AD)? as u64,
+        warmup_ms: args.flag_usize("wait-ms", 5000)? as u64,
+    };
+    println!(
+        "loadgen: target={} clients={} requests/client={} \
+         rows/request={}",
+        cfg.target, cfg.clients, cfg.requests_per_client,
+        cfg.rows_per_request
+    );
+    let mut report = crate::server::loadgen::run(&cfg)?;
+    println!("{}", report.render());
+    if report.requests_ok == 0 {
+        return Err(Error::Service(
+            "no request succeeded — is the server healthy?".into(),
+        ));
     }
     Ok(())
 }

@@ -8,9 +8,12 @@
 //!                [--threads N]
 //! rskpca embed   --model FILE --data FILE --out FILE [--backend B]
 //!                [--threads N]
-//! rskpca serve   --model FILE [--backend B] [--requests N]
-//!                [--rows-per-request N] [--config FILE] [--threads N]
-//!                [--refresh N] [--ell F]
+//! rskpca serve   --model FILE [--listen ADDR] [--backend B]
+//!                [--config FILE] [--threads N] [--refresh N] [--ell F]
+//!                [--selftest [--requests N] [--rows-per-request N]]
+//! rskpca loadgen [--target HOST:PORT] [--clients N] [--requests N]
+//!                [--rows-per-request N] [--dim D] [--seed N]
+//!                [--wait-ms MS]
 //! rskpca gen     --dataset NAME --out FILE [--seed N]
 //! rskpca info    [--artifacts DIR]
 //! ```
@@ -96,11 +99,20 @@ USAGE:
   rskpca fit    --config FILE --model-out FILE [--data FILE]
   rskpca embed  --model FILE --data FILE --out FILE [--backend native|pjrt]
                 [--artifacts DIR]
-  rskpca serve  --model FILE [--backend native|pjrt] [--requests N]
-                [--rows-per-request N] [--artifacts DIR] [--config FILE]
-                [--refresh N] [--ell F]
+  rskpca serve  --model FILE [--listen HOST:PORT] [--backend native|pjrt]
+                [--artifacts DIR] [--config FILE] [--refresh N] [--ell F]
+                [--selftest [--requests N] [--rows-per-request N]]
+      serves HTTP (POST /embed, GET /stats, GET /healthz, GET /models,
+      POST /models/swap) until Ctrl-C / SIGTERM; --listen overrides the
+      [server] config section (port 0 = ephemeral, printed at startup);
+      --selftest runs the in-process synthetic loop instead of listening
       --refresh N hot-swaps the served model every N requests from a
       background online-RSKPCA refresher fed by the live traffic
+  rskpca loadgen [--target HOST:PORT] [--clients N] [--requests N]
+                [--rows-per-request N] [--dim D] [--seed N] [--wait-ms MS]
+      closed-loop load generator against a running serve instance;
+      reports rows/s and latency p50/p95/p99 (row dim auto-discovered
+      via GET /models unless --dim is given)
   rskpca gen    --dataset german|pendigits|usps|yale|gmm2d|swiss_roll
                 --out FILE [--seed N]
   rskpca info   [--artifacts DIR]
@@ -136,6 +148,7 @@ pub fn dispatch(raw: &[String]) -> Result<()> {
         "fit" => commands::fit(&args),
         "embed" => commands::embed(&args),
         "serve" => commands::serve(&args),
+        "loadgen" => commands::loadgen(&args),
         "gen" => commands::gen(&args),
         "info" => commands::info(&args),
         other => Err(Error::Parse(format!("unknown command '{other}'"))),

@@ -1,5 +1,5 @@
 //! Configuration system: a TOML-subset parser plus the typed configs the
-//! CLI, experiment harness and embedding service consume.
+//! CLI, experiment harness, embedding service and HTTP server consume.
 //!
 //! Supported TOML subset (all the project's configs need): `[section]`
 //! headers, `key = value` with string / float / integer / bool / inline
@@ -216,6 +216,8 @@ pub struct RunConfig {
     pub solver: EigSolver,
     /// Embedding-service settings.
     pub service: ServiceConfig,
+    /// HTTP front-end settings.
+    pub server: ServerConfig,
 }
 
 /// Dynamic-batcher / service settings (coordinator layer).
@@ -242,6 +244,83 @@ impl Default for ServiceConfig {
     }
 }
 
+/// What the HTTP layer does when the coordinator queue is saturated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Non-blocking admission: saturation surfaces as HTTP 429 with a
+    /// `Retry-After` hint (the default — the acceptor never blocks on
+    /// the embed queue).
+    Reject,
+    /// The connection worker blocks until queue space frees up (bounds
+    /// concurrency at the HTTP worker pool instead of returning 429).
+    Block,
+}
+
+impl QueuePolicy {
+    /// Parse a config string: "reject" | "block".
+    pub fn parse(s: &str) -> Option<QueuePolicy> {
+        match s {
+            "reject" => Some(QueuePolicy::Reject),
+            "block" => Some(QueuePolicy::Block),
+            _ => None,
+        }
+    }
+
+    /// Canonical config-string form.
+    pub fn name(self) -> &'static str {
+        match self {
+            QueuePolicy::Reject => "reject",
+            QueuePolicy::Block => "block",
+        }
+    }
+}
+
+/// HTTP front-end settings (`[server]` section; consumed by
+/// `crate::server`).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Listen address, e.g. "127.0.0.1:7878" (port 0 binds an
+    /// ephemeral port, printed at startup).
+    pub listen: String,
+    /// Fixed pool of connection-handler threads — also the maximum
+    /// number of concurrently served keep-alive connections.
+    pub workers: usize,
+    /// Largest accepted request body in bytes (413 beyond).
+    pub max_body_bytes: usize,
+    /// Admission-control policy when the coordinator queue is full.
+    pub queue_policy: QueuePolicy,
+    /// `Retry-After` hint attached to 429/503 responses, milliseconds.
+    pub retry_after_ms: u64,
+    /// Idle keep-alive read timeout before a connection is closed,
+    /// milliseconds (also bounds slow-written requests).
+    pub keep_alive_ms: u64,
+    /// Accepted connections queued for a free worker before the
+    /// acceptor answers 503 directly instead of buffering.
+    pub conn_backlog: usize,
+    /// Allow `POST /models/swap` to load models from a *server-side*
+    /// file path (`{"path": ...}`).  Off by default: the route is
+    /// unauthenticated, and letting any client point the server at
+    /// arbitrary readable files is a filesystem probe / model
+    /// replacement hazard.  Inline `{"model": ...}` swaps are always
+    /// allowed.
+    pub allow_path_swap: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:7878".into(),
+            workers: 4,
+            max_body_bytes: 8 << 20,
+            queue_policy: QueuePolicy::Reject,
+            retry_after_ms: 100,
+            keep_alive_ms: 5000,
+            conn_backlog: 64,
+            allow_path_swap: false,
+        }
+    }
+}
+
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
@@ -256,6 +335,7 @@ impl Default for RunConfig {
             threads: 0,
             solver: EigSolver::Exact,
             service: ServiceConfig::default(),
+            server: ServerConfig::default(),
         }
     }
 }
@@ -317,6 +397,42 @@ impl RunConfig {
         if s.max_batch == 0 || s.queue_depth == 0 || s.workers == 0 {
             return Err(Error::Config(
                 "service sizes must be >= 1".into(),
+            ));
+        }
+        let sv = &mut cfg.server;
+        sv.listen = doc.get_str("server", "listen", &sv.listen);
+        sv.workers = doc.get_usize("server", "workers", sv.workers);
+        sv.max_body_bytes =
+            doc.get_usize("server", "max_body_bytes", sv.max_body_bytes);
+        let qp = doc.get_str("server", "queue_policy",
+            sv.queue_policy.name());
+        sv.queue_policy = QueuePolicy::parse(&qp).ok_or_else(|| {
+            Error::Config(format!(
+                "queue_policy must be 'reject' or 'block', got '{qp}'"
+            ))
+        })?;
+        sv.retry_after_ms =
+            doc.get_f64("server", "retry_after_ms", sv.retry_after_ms as f64)
+                as u64;
+        sv.keep_alive_ms =
+            doc.get_f64("server", "keep_alive_ms", sv.keep_alive_ms as f64)
+                as u64;
+        sv.conn_backlog =
+            doc.get_usize("server", "conn_backlog", sv.conn_backlog);
+        sv.allow_path_swap = doc.get_bool(
+            "server",
+            "allow_path_swap",
+            sv.allow_path_swap,
+        );
+        if sv.workers == 0 || sv.conn_backlog == 0 || sv.keep_alive_ms == 0 {
+            return Err(Error::Config(
+                "server workers / conn_backlog / keep_alive_ms must be \
+                 >= 1".into(),
+            ));
+        }
+        if sv.max_body_bytes < 1024 {
+            return Err(Error::Config(
+                "server max_body_bytes must be >= 1024".into(),
             ));
         }
         Ok(cfg)
@@ -445,5 +561,47 @@ workers = 2
         assert_eq!(cfg.ell, 4.0);
         assert_eq!(cfg.backend, "native");
         assert_eq!(cfg.threads, 0); // auto
+        assert_eq!(cfg.server.listen, "127.0.0.1:7878");
+        assert_eq!(cfg.server.workers, 4);
+        assert_eq!(cfg.server.queue_policy, QueuePolicy::Reject);
+    }
+
+    #[test]
+    fn server_section_parses_and_validates() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[server]
+listen = "0.0.0.0:9090"
+workers = 8
+max_body_bytes = 65536
+queue_policy = "block"
+retry_after_ms = 250
+keep_alive_ms = 2000
+conn_backlog = 16
+allow_path_swap = true
+"#,
+        )
+        .unwrap();
+        let sv = &cfg.server;
+        assert_eq!(sv.listen, "0.0.0.0:9090");
+        assert_eq!(sv.workers, 8);
+        assert_eq!(sv.max_body_bytes, 65536);
+        assert_eq!(sv.queue_policy, QueuePolicy::Block);
+        assert_eq!(sv.retry_after_ms, 250);
+        assert_eq!(sv.keep_alive_ms, 2000);
+        assert_eq!(sv.conn_backlog, 16);
+        assert!(sv.allow_path_swap);
+        assert!(!ServerConfig::default().allow_path_swap);
+        assert!(RunConfig::from_toml(
+            "[server]\nqueue_policy = \"explode\""
+        )
+        .is_err());
+        assert!(RunConfig::from_toml("[server]\nworkers = 0").is_err());
+        assert!(
+            RunConfig::from_toml("[server]\nmax_body_bytes = 16").is_err()
+        );
+        assert!(
+            RunConfig::from_toml("[server]\nkeep_alive_ms = 0").is_err()
+        );
     }
 }

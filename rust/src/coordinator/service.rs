@@ -98,8 +98,9 @@ impl ServiceHandle {
             .map_err(|_| Error::Service("service dropped reply".into()))?
     }
 
-    /// Non-blocking embed: rejects immediately when the bounded queue is
-    /// full (backpressure surface).  Returns the receiver to await.
+    /// Non-blocking embed: rejects immediately with [`Error::Saturated`]
+    /// when the bounded queue is full (the admission-control surface the
+    /// HTTP layer maps to 429).  Returns the receiver to await.
     pub fn try_embed(&self, rows: Matrix)
         -> Result<mpsc::Receiver<Result<Matrix>>> {
         self.validate(&rows)?;
@@ -113,7 +114,9 @@ impl ServiceHandle {
             Ok(()) => Ok(reply_rx),
             Err(mpsc::TrySendError::Full(_)) => {
                 self.stats.lock().unwrap().rejected += 1;
-                Err(Error::Service("queue full (backpressure)".into()))
+                Err(Error::Saturated(
+                    "embed queue full (backpressure)".into(),
+                ))
             }
             Err(mpsc::TrySendError::Disconnected(_)) => {
                 Err(Error::Service("service stopped".into()))
@@ -612,7 +615,7 @@ mod tests {
                     accepted += 1;
                     receivers.push(rx);
                 }
-                Err(Error::Service(_)) => rejected += 1,
+                Err(Error::Saturated(_)) => rejected += 1,
                 Err(e) => panic!("unexpected error {e}"),
             }
         }

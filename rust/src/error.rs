@@ -23,6 +23,12 @@ pub enum Error {
     Runtime(String),
     /// The embedding service rejected or dropped a request.
     Service(String),
+    /// Admission control: the service queue is saturated and the
+    /// request was rejected instead of queued.  Unlike the other
+    /// variants this is a *transient* condition — retry after backing
+    /// off (the HTTP layer maps it to `429 Too Many Requests` with a
+    /// `Retry-After` hint).
+    Saturated(String),
 }
 
 impl fmt::Display for Error {
@@ -35,6 +41,7 @@ impl fmt::Display for Error {
             Error::Io(m) => write!(f, "io error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Service(m) => write!(f, "service error: {m}"),
+            Error::Saturated(m) => write!(f, "saturated: {m}"),
         }
     }
 }

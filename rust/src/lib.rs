@@ -14,10 +14,12 @@
 //!   classification), a shared parallel compute engine ([`parallel`])
 //!   that every hot path fans out through, a PJRT runtime that executes
 //!   the AOT artifacts (behind the `pjrt` cargo feature), a threaded
-//!   embedding service with dynamic batching, and an online model
+//!   embedding service with dynamic batching, an online model
 //!   lifecycle (streaming deltas → incremental
 //!   [`kpca::EmbeddingModel::refresh`] → atomic hot swap through the
-//!   coordinator's versioned model registry).
+//!   coordinator's versioned model registry), and a dependency-free
+//!   HTTP/1.1 front end ([`server`]) with admission control and a
+//!   closed-loop load generator.
 //!
 //! Python never runs on the request path; after `make artifacts` the rust
 //! binary is self-contained.  See the repository's `README.md` for a
@@ -60,6 +62,7 @@ pub mod parallel;
 pub mod prng;
 pub mod runtime;
 pub mod ser;
+pub mod server;
 pub mod testutil;
 
 pub use error::{Error, Result};

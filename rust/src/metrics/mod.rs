@@ -39,11 +39,26 @@ pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, t.elapsed_s())
 }
 
-/// A latency histogram: records raw samples, reports percentiles.
+/// Retention cap: beyond this many samples the histogram becomes a
+/// bounded reservoir — new samples overwrite slots round-robin, so a
+/// long-running server (the listener mode records per request,
+/// indefinitely) holds at most ~512 KiB per histogram instead of
+/// growing without bound.  Because percentile queries sort the buffer
+/// in place, interleaved record/query traffic permutes which logical
+/// sample each slot holds; at the cap, eviction therefore
+/// approximates *random replacement* (a long-horizon sample of the
+/// stream) rather than a strict most-recent window.  Benches and
+/// tests stay far below the cap and are exact.
+const MAX_SAMPLES: usize = 65_536;
+
+/// A latency histogram: records raw samples (bounded reservoir beyond
+/// [`MAX_SAMPLES`]), reports percentiles.
 #[derive(Clone, Debug, Default)]
 pub struct Histogram {
     samples: Vec<f64>,
     sorted: bool,
+    /// Next slot to overwrite once the reservoir is full.
+    at: usize,
 }
 
 impl Histogram {
@@ -52,7 +67,12 @@ impl Histogram {
     }
 
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
+        if self.samples.len() < MAX_SAMPLES {
+            self.samples.push(v);
+        } else {
+            self.samples[self.at] = v;
+            self.at = (self.at + 1) % MAX_SAMPLES;
+        }
         self.sorted = false;
     }
 
@@ -72,16 +92,52 @@ impl Histogram {
         }
     }
 
-    /// q-th percentile (q in [0, 100]), nearest-rank.
+    /// q-th percentile (q in [0, 100]), linearly interpolated between
+    /// the two adjacent order statistics (numpy's default "linear"
+    /// method) — a fractional rank no longer truncates to a neighbor,
+    /// which matters for tail quantiles (p99) over small sample counts.
     pub fn percentile(&mut self, q: f64) -> f64 {
         assert!((0.0..=100.0).contains(&q));
         if self.samples.is_empty() {
             return 0.0;
         }
         self.ensure_sorted();
-        let rank = ((q / 100.0) * (self.samples.len() as f64 - 1.0))
-            .round() as usize;
-        self.samples[rank]
+        let pos = (q / 100.0) * (self.samples.len() as f64 - 1.0);
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            return self.samples[lo];
+        }
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    /// 99th percentile (tail-latency headline number).
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Fold another histogram's samples into this one (used to
+    /// aggregate per-thread latency histograms, e.g. by the load
+    /// generator's closed-loop clients).  When the combined sample
+    /// count exceeds the retention cap, the concatenation is
+    /// decimated with an even stride — both sources stay
+    /// proportionally represented (plain truncation would silently
+    /// drop every later-merged source).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.samples.is_empty() {
+            return;
+        }
+        self.samples.extend_from_slice(&other.samples);
+        if self.samples.len() > MAX_SAMPLES {
+            let len = self.samples.len();
+            let decimated: Vec<f64> = (0..MAX_SAMPLES)
+                .map(|i| self.samples[i * len / MAX_SAMPLES])
+                .collect();
+            self.samples = decimated;
+            self.at = 0;
+        }
+        self.sorted = false;
     }
 
     pub fn mean(&self) -> f64 {
@@ -170,6 +226,75 @@ mod tests {
         let mut h = Histogram::new();
         assert!(h.is_empty());
         assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.p99(), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates_between_adjacent_samples() {
+        // [1, 2, 3, 4]: p50 sits at position 1.5 -> 2.5, not a sample.
+        let mut h = Histogram::new();
+        for v in [4.0, 2.0, 1.0, 3.0] {
+            h.record(v);
+        }
+        assert!((h.percentile(50.0) - 2.5).abs() < 1e-12);
+        assert!((h.percentile(25.0) - 1.75).abs() < 1e-12);
+        // 1..=100: p50 = 50.5 (position 49.5), p99 = 99.01.
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert!((h.percentile(50.0) - 50.5).abs() < 1e-12);
+        assert!((h.p99() - 99.01).abs() < 1e-9);
+        // Exact ranks are untouched by interpolation.
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded_and_tracks_recent_values() {
+        let mut h = Histogram::new();
+        for i in 0..(MAX_SAMPLES + 5_000) {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), MAX_SAMPLES);
+        // Early samples were overwritten by recent ones: the first
+        // 5_000 slots now hold values from the post-cap stream.
+        assert!(h.max() >= (MAX_SAMPLES + 4_999) as f64 - 0.5);
+        assert!(h.percentile(50.0) > 2_000.0);
+    }
+
+    #[test]
+    fn merge_aggregates_samples() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 1..=50 {
+            a.record(i as f64);
+        }
+        for i in 51..=100 {
+            b.record(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 100);
+        assert!((a.percentile(50.0) - 50.5).abs() < 1e-12);
+        assert_eq!(a.max(), 100.0);
+        // Merging an empty histogram is a no-op.
+        a.merge(&Histogram::new());
+        assert_eq!(a.len(), 100);
+    }
+
+    #[test]
+    fn merge_decimates_instead_of_truncating_at_the_cap() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for _ in 0..MAX_SAMPLES {
+            a.record(1.0);
+            b.record(3.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), MAX_SAMPLES);
+        // Both sources survive in equal proportion (truncation would
+        // leave mean = 1.0).
+        assert!((a.mean() - 2.0).abs() < 0.01, "mean {}", a.mean());
     }
 }

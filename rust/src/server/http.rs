@@ -1,0 +1,695 @@
+//! Hand-rolled HTTP/1.1 substrate (std-only; no hyper, no tokio).
+//!
+//! Covers exactly what the serving layer needs: a buffered,
+//! split-read-tolerant request parser ([`RequestReader`]) that preserves
+//! pipelined leftovers across keep-alive requests, a response writer
+//! ([`Response`]), and a tiny keep-alive client ([`ClientConn`]) shared
+//! by the load generator, the CI smoke step and the integration tests.
+//!
+//! Scope limits are deliberate: no chunked transfer encoding (501), no
+//! TLS, no multipart — request bodies are length-delimited JSON.  Every
+//! protocol violation maps to a 4xx/5xx status via [`HttpError::Bad`]
+//! so a malformed client can never wedge a connection worker.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::error::Error;
+use crate::ser::Json;
+
+/// Hard cap on the request/response head (request line + headers).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Read-buffer granularity.
+const READ_CHUNK: usize = 4096;
+
+/// How an HTTP read can fail.
+#[derive(Debug)]
+pub enum HttpError {
+    /// The peer closed the connection cleanly at a message boundary
+    /// (EOF before the first byte of a new message) — not an error,
+    /// just the end of a keep-alive session.
+    Closed,
+    /// Protocol violation; `status` is what to send before closing.
+    Bad { status: u16, msg: String },
+    /// Transport failure (including read timeouts on idle connections).
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    fn bad(status: u16, msg: &str) -> HttpError {
+        HttpError::Bad { status, msg: msg.to_string() }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Closed => write!(f, "connection closed"),
+            HttpError::Bad { status, msg } => {
+                write!(f, "http {status}: {msg}")
+            }
+            HttpError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl From<HttpError> for Error {
+    fn from(e: HttpError) -> Error {
+        Error::Service(format!("http: {e}"))
+    }
+}
+
+/// A parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Method token, verbatim (e.g. "GET", "POST").
+    pub method: String,
+    /// Request target, verbatim (path plus optional query string).
+    pub target: String,
+    /// Protocol version (e.g. "HTTP/1.1").
+    pub version: String,
+    /// Headers in arrival order; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    /// Length-delimited body (empty when no `content-length`).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value under `name` (lowercase).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The path component of the target (query string stripped).
+    pub fn path(&self) -> &str {
+        match self.target.split_once('?') {
+            Some((path, _)) => path,
+            None => &self.target,
+        }
+    }
+
+    /// HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close; an explicit
+    /// `Connection` header overrides either way.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(|v| v.to_ascii_lowercase()) {
+            Some(v) if v == "close" => false,
+            Some(v) if v == "keep-alive" => true,
+            _ => self.version == "HTTP/1.1",
+        }
+    }
+}
+
+/// Stateful per-connection request reader.  Tolerates arbitrarily split
+/// reads (a request head or body may arrive one byte at a time) and
+/// preserves bytes read past the current message for the next call, so
+/// pipelined keep-alive requests are never dropped.
+#[derive(Debug, Default)]
+pub struct RequestReader {
+    buf: Vec<u8>,
+}
+
+impl RequestReader {
+    pub fn new() -> RequestReader {
+        RequestReader::default()
+    }
+
+    /// Read one full request from `stream`.
+    pub fn next_request(
+        &mut self,
+        stream: &mut impl Read,
+        max_body: usize,
+    ) -> Result<Request, HttpError> {
+        let header_end = fill_until_head_end(stream, &mut self.buf)?;
+        // Own the head so the buffer can be drained afterwards.
+        let head = match std::str::from_utf8(&self.buf[..header_end]) {
+            Ok(s) => s.to_string(),
+            Err(_) => {
+                return Err(HttpError::bad(400, "non-utf8 request head"))
+            }
+        };
+        let mut lines = head.split("\r\n");
+        let request_line = lines
+            .next()
+            .ok_or_else(|| HttpError::bad(400, "empty request head"))?;
+        let mut parts = request_line.split(' ');
+        let (Some(method), Some(target), Some(version), None) =
+            (parts.next(), parts.next(), parts.next(), parts.next())
+        else {
+            return Err(HttpError::bad(400, "malformed request line"));
+        };
+        if method.is_empty() || target.is_empty() {
+            return Err(HttpError::bad(400, "malformed request line"));
+        }
+        if !version.starts_with("HTTP/1.") {
+            return Err(HttpError::bad(
+                505,
+                "only HTTP/1.x is supported",
+            ));
+        }
+        let headers = parse_headers(lines)?;
+        if headers
+            .iter()
+            .any(|(k, _)| k == "transfer-encoding")
+        {
+            return Err(HttpError::bad(
+                501,
+                "transfer-encoding is not supported; send \
+                 content-length",
+            ));
+        }
+        let content_length = content_length(&headers)?;
+        if content_length > max_body {
+            return Err(HttpError::bad(
+                413,
+                &format!(
+                    "body of {content_length} bytes exceeds the \
+                     {max_body}-byte limit"
+                ),
+            ));
+        }
+        let body_start = header_end + 4;
+        let total = body_start + content_length;
+        fill_to(stream, &mut self.buf, total, "truncated request body")?;
+        let body = self.buf[body_start..total].to_vec();
+        self.buf.drain(..total);
+        Ok(Request {
+            method: method.to_string(),
+            target: target.to_string(),
+            version: version.to_string(),
+            headers,
+            body,
+        })
+    }
+}
+
+/// Grow `buf` from `stream` until it contains the `\r\n\r\n` head
+/// terminator; returns the terminator's start offset.
+fn fill_until_head_end(
+    stream: &mut impl Read,
+    buf: &mut Vec<u8>,
+) -> Result<usize, HttpError> {
+    loop {
+        if let Some(pos) =
+            buf.windows(4).position(|w| w == b"\r\n\r\n")
+        {
+            // The limit applies to the head itself, not to how much
+            // happened to arrive in one read (pipelined bytes after
+            // the terminator are legitimate).
+            if pos > MAX_HEAD_BYTES {
+                return Err(HttpError::bad(
+                    431,
+                    "message head exceeds 16 KiB",
+                ));
+            }
+            return Ok(pos);
+        }
+        // No terminator yet: once the buffer is past the limit the
+        // eventual terminator position can only be worse.
+        if buf.len() > MAX_HEAD_BYTES + 3 {
+            return Err(HttpError::bad(
+                431,
+                "message head exceeds 16 KiB",
+            ));
+        }
+        let mut tmp = [0u8; READ_CHUNK];
+        let n = stream.read(&mut tmp).map_err(HttpError::Io)?;
+        if n == 0 {
+            return if buf.is_empty() {
+                Err(HttpError::Closed)
+            } else {
+                Err(HttpError::bad(400, "truncated message head"))
+            };
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// Grow `buf` from `stream` until it holds at least `total` bytes.
+fn fill_to(
+    stream: &mut impl Read,
+    buf: &mut Vec<u8>,
+    total: usize,
+    on_eof: &str,
+) -> Result<(), HttpError> {
+    while buf.len() < total {
+        let mut tmp = [0u8; READ_CHUNK];
+        let n = stream.read(&mut tmp).map_err(HttpError::Io)?;
+        if n == 0 {
+            return Err(HttpError::bad(400, on_eof));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    Ok(())
+}
+
+/// Parse `name: value` lines; names are lowercased, values trimmed.
+fn parse_headers<'a>(
+    lines: impl Iterator<Item = &'a str>,
+) -> Result<Vec<(String, String)>, HttpError> {
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line.split_once(':').ok_or_else(|| {
+            HttpError::bad(400, "header line without ':'")
+        })?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::bad(400, "malformed header name"));
+        }
+        headers.push((
+            name.to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+    Ok(headers)
+}
+
+/// Extract and validate `content-length` (0 when absent).  Duplicate
+/// headers with disagreeing values are a request-smuggling vector and
+/// are rejected outright.
+fn content_length(
+    headers: &[(String, String)],
+) -> Result<usize, HttpError> {
+    let mut length: Option<usize> = None;
+    for (k, v) in headers {
+        if k != "content-length" {
+            continue;
+        }
+        let parsed = v.parse::<usize>().map_err(|_| {
+            HttpError::bad(400, &format!("bad content-length '{v}'"))
+        })?;
+        match length {
+            Some(prev) if prev != parsed => {
+                return Err(HttpError::bad(
+                    400,
+                    "conflicting content-length headers",
+                ));
+            }
+            _ => length = Some(parsed),
+        }
+    }
+    Ok(length.unwrap_or(0))
+}
+
+/// Canonical reason phrase for the status codes the server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// An outgoing response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Extra headers (e.g. `Retry-After`) appended verbatim.
+    pub extra_headers: Vec<(String, String)>,
+}
+
+impl Response {
+    /// A JSON-bodied response.
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.to_string().into_bytes(),
+            extra_headers: Vec::new(),
+        }
+    }
+
+    /// An error response with a `{"error": ..., "status": ...}` body.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(
+            status,
+            &Json::obj()
+                .with("error", Json::Str(msg.to_string()))
+                .with("status", Json::Num(status as f64)),
+        )
+    }
+
+    /// Builder-style extra header.
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.extra_headers
+            .push((name.to_string(), value.to_string()));
+        self
+    }
+
+    /// Serialize onto the wire.  `keep_alive` selects the `Connection`
+    /// header; the body is always length-delimited.
+    pub fn write_to(
+        &self,
+        w: &mut impl Write,
+        keep_alive: bool,
+    ) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nserver: rskpca\r\ncontent-type: {}\r\n\
+             content-length: {}\r\nconnection: {}\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        for (k, v) in &self.extra_headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// A parsed response on the client side.
+#[derive(Clone, Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    /// Headers in arrival order; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// First header value under `name` (lowercase).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> crate::error::Result<Json> {
+        let text = std::str::from_utf8(&self.body).map_err(|_| {
+            Error::Parse("non-utf8 response body".into())
+        })?;
+        crate::ser::parse(text)
+    }
+}
+
+/// Read one full response (status line, headers, length-delimited
+/// body) from `stream`, buffering through `buf` across calls.
+pub(crate) fn read_client_response(
+    stream: &mut impl Read,
+    buf: &mut Vec<u8>,
+) -> Result<ClientResponse, HttpError> {
+    let header_end = fill_until_head_end(stream, buf)?;
+    let head = match std::str::from_utf8(&buf[..header_end]) {
+        Ok(s) => s.to_string(),
+        Err(_) => {
+            return Err(HttpError::bad(400, "non-utf8 response head"))
+        }
+    };
+    let mut lines = head.split("\r\n");
+    let status_line = lines
+        .next()
+        .ok_or_else(|| HttpError::bad(400, "empty response head"))?;
+    let mut parts = status_line.splitn(3, ' ');
+    let version = parts
+        .next()
+        .ok_or_else(|| HttpError::bad(400, "bad status line"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::bad(400, "bad status line"));
+    }
+    let status = parts
+        .next()
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| HttpError::bad(400, "bad status code"))?;
+    let headers = parse_headers(lines)?;
+    let content_length = content_length(&headers)?;
+    let body_start = header_end + 4;
+    let total = body_start + content_length;
+    fill_to(stream, buf, total, "truncated response body")?;
+    let body = buf[body_start..total].to_vec();
+    buf.drain(..total);
+    Ok(ClientResponse { status, headers, body })
+}
+
+/// A blocking keep-alive HTTP/1.1 client connection.
+#[derive(Debug)]
+pub struct ClientConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl ClientConn {
+    /// Connect to `addr` ("host:port") with the given timeout; the
+    /// connection uses TCP_NODELAY and a 30 s read timeout.
+    pub fn connect(
+        addr: &str,
+        timeout: Duration,
+    ) -> crate::error::Result<ClientConn> {
+        let sock = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::Io(format!("resolve {addr}: {e}")))?
+            .next()
+            .ok_or_else(|| {
+                Error::Io(format!("{addr}: no usable address"))
+            })?;
+        let stream =
+            TcpStream::connect_timeout(&sock, timeout).map_err(|e| {
+                Error::Io(format!("connect {addr}: {e}"))
+            })?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        Ok(ClientConn { stream, buf: Vec::new() })
+    }
+
+    /// One request/response round trip (closed-loop).  `body` may be
+    /// empty for GETs.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> crate::error::Result<ClientResponse> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: rskpca\r\n\
+             content-type: application/json\r\n\
+             content-length: {}\r\n\r\n",
+            body.len()
+        );
+        self.stream
+            .write_all(head.as_bytes())
+            .and_then(|()| self.stream.write_all(body))
+            .and_then(|()| self.stream.flush())
+            .map_err(|e| Error::Io(format!("send {method} {path}: {e}")))?;
+        read_client_response(&mut self.stream, &mut self.buf)
+            .map_err(Error::from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A reader that trickles its data `chunk` bytes per `read` call —
+    /// the pathological split-read source.
+    struct Trickle<'a> {
+        data: &'a [u8],
+        at: usize,
+        chunk: usize,
+    }
+
+    impl Read for Trickle<'_> {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let n = self
+                .chunk
+                .min(out.len())
+                .min(self.data.len() - self.at);
+            out[..n].copy_from_slice(&self.data[self.at..self.at + n]);
+            self.at += n;
+            Ok(n)
+        }
+    }
+
+    fn parse_one(
+        raw: &[u8],
+        chunk: usize,
+        max_body: usize,
+    ) -> Result<Request, HttpError> {
+        let mut src = Trickle { data: raw, at: 0, chunk };
+        RequestReader::new().next_request(&mut src, max_body)
+    }
+
+    #[test]
+    fn parses_request_under_split_reads() {
+        let raw = b"POST /embed?x=1 HTTP/1.1\r\nHost: h\r\n\
+                    Content-Length: 11\r\n\r\nhello world";
+        for chunk in [1, 2, 3, 7, 4096] {
+            let req = parse_one(raw, chunk, 1024).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.target, "/embed?x=1");
+            assert_eq!(req.path(), "/embed");
+            assert_eq!(req.version, "HTTP/1.1");
+            assert_eq!(req.header("host"), Some("h"));
+            assert_eq!(req.body, b"hello world");
+            assert!(req.keep_alive());
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_survive_the_buffer() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\n\
+                    POST /embed HTTP/1.1\r\ncontent-length: 2\r\n\r\nok";
+        let mut src = Trickle { data: raw, at: 0, chunk: 5 };
+        let mut reader = RequestReader::new();
+        let first = reader.next_request(&mut src, 1024).unwrap();
+        assert_eq!(first.method, "GET");
+        assert_eq!(first.path(), "/healthz");
+        assert!(first.body.is_empty());
+        let second = reader.next_request(&mut src, 1024).unwrap();
+        assert_eq!(second.method, "POST");
+        assert_eq!(second.body, b"ok");
+        // Clean close at the boundary.
+        assert!(matches!(
+            reader.next_request(&mut src, 1024),
+            Err(HttpError::Closed)
+        ));
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let raw = b"POST /embed HTTP/1.1\r\ncontent-length: 999\r\n\r\n";
+        match parse_one(raw, 4096, 100) {
+            Err(HttpError::Bad { status: 413, .. }) => {}
+            other => panic!("expected 413, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_content_length_is_400() {
+        for raw in [
+            &b"POST / HTTP/1.1\r\ncontent-length: abc\r\n\r\n"[..],
+            &b"POST / HTTP/1.1\r\ncontent-length: -5\r\n\r\n"[..],
+            &b"POST / HTTP/1.1\r\ncontent-length: 2\r\n\
+               content-length: 7\r\n\r\nhi"[..],
+        ] {
+            match parse_one(raw, 4096, 1024) {
+                Err(HttpError::Bad { status: 400, .. }) => {}
+                other => panic!("expected 400, got {other:?}"),
+            }
+        }
+        // Agreeing duplicates are tolerated.
+        let raw = b"POST / HTTP/1.1\r\ncontent-length: 2\r\n\
+                    content-length: 2\r\n\r\nhi";
+        assert_eq!(parse_one(raw, 4096, 1024).unwrap().body, b"hi");
+    }
+
+    #[test]
+    fn truncated_messages_are_400_not_hangs() {
+        // EOF mid-head.
+        match parse_one(b"GET / HT", 3, 1024) {
+            Err(HttpError::Bad { status: 400, .. }) => {}
+            other => panic!("expected 400, got {other:?}"),
+        }
+        // EOF mid-body.
+        let raw = b"POST / HTTP/1.1\r\ncontent-length: 50\r\n\r\nshort";
+        match parse_one(raw, 4096, 1024) {
+            Err(HttpError::Bad { status: 400, .. }) => {}
+            other => panic!("expected 400, got {other:?}"),
+        }
+        // EOF before any byte is a clean close.
+        assert!(matches!(
+            parse_one(b"", 1, 1024),
+            Err(HttpError::Closed)
+        ));
+    }
+
+    #[test]
+    fn protocol_violations_map_to_statuses() {
+        // Head too large -> 431.
+        let mut huge = b"GET / HTTP/1.1\r\n".to_vec();
+        huge.extend_from_slice(
+            format!("x-pad: {}\r\n\r\n", "a".repeat(20_000)).as_bytes(),
+        );
+        match parse_one(&huge, 4096, 1024) {
+            Err(HttpError::Bad { status: 431, .. }) => {}
+            other => panic!("expected 431, got {other:?}"),
+        }
+        // Chunked -> 501.
+        let raw = b"POST / HTTP/1.1\r\n\
+                    transfer-encoding: chunked\r\n\r\n";
+        match parse_one(raw, 4096, 1024) {
+            Err(HttpError::Bad { status: 501, .. }) => {}
+            other => panic!("expected 501, got {other:?}"),
+        }
+        // Unknown protocol -> 505.
+        match parse_one(b"GET / SPDY/3\r\n\r\n", 4096, 1024) {
+            Err(HttpError::Bad { status: 505, .. }) => {}
+            other => panic!("expected 505, got {other:?}"),
+        }
+        // Garbage request line -> 400.
+        match parse_one(b"ONE-TOKEN\r\n\r\n", 4096, 1024) {
+            Err(HttpError::Bad { status: 400, .. }) => {}
+            other => panic!("expected 400, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn keep_alive_defaults_follow_the_version() {
+        let req = parse_one(b"GET / HTTP/1.0\r\n\r\n", 4096, 0).unwrap();
+        assert!(!req.keep_alive());
+        let raw = b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n";
+        assert!(parse_one(raw, 4096, 0).unwrap().keep_alive());
+        let raw = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        assert!(!parse_one(raw, 4096, 0).unwrap().keep_alive());
+    }
+
+    #[test]
+    fn response_roundtrips_through_client_parser() {
+        let resp = Response::json(
+            200,
+            &Json::obj().with("ok", Json::Bool(true)),
+        )
+        .with_header("retry-after", "1");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let mut src = &wire[..];
+        let mut buf = Vec::new();
+        let parsed =
+            read_client_response(&mut src, &mut buf).unwrap();
+        assert_eq!(parsed.status, 200);
+        assert_eq!(parsed.header("retry-after"), Some("1"));
+        assert_eq!(parsed.header("connection"), Some("keep-alive"));
+        let v = parsed.json().unwrap();
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+
+        let err = Response::error(429, "slow down");
+        let mut wire = Vec::new();
+        err.write_to(&mut wire, false).unwrap();
+        let mut src = &wire[..];
+        let parsed =
+            read_client_response(&mut src, &mut Vec::new()).unwrap();
+        assert_eq!(parsed.status, 429);
+        assert_eq!(parsed.header("connection"), Some("close"));
+        assert_eq!(
+            parsed.json().unwrap().req_str("error").unwrap(),
+            "slow down"
+        );
+    }
+}

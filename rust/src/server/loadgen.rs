@@ -1,0 +1,327 @@
+//! Closed-loop load generator: N client threads, each holding one
+//! keep-alive connection and replaying `POST /embed` batches
+//! back-to-back (a new request is issued only after the previous reply
+//! lands — so offered load adapts to service capacity instead of
+//! overrunning it).  Aggregates per-thread latency histograms into a
+//! throughput / percentile report; 429s are counted separately from
+//! hard errors, making admission control directly observable.
+//!
+//! Used by the `rskpca loadgen` CLI subcommand, the CI smoke step, the
+//! loopback integration tests, and `benches/bench_serving.rs`.
+
+use std::time::{Duration, Instant};
+
+use super::http::ClientConn;
+use crate::error::{Error, Result};
+use crate::metrics::Histogram;
+use crate::prng::Pcg64;
+
+/// Connect timeout for each client connection.
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(2000);
+
+/// Load-generator knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address: "host:port" (an `http://` prefix is tolerated).
+    pub target: String,
+    /// Concurrent closed-loop client threads.
+    pub clients: usize,
+    /// Requests each client issues.
+    pub requests_per_client: usize,
+    /// Rows per `POST /embed` request.
+    pub rows_per_request: usize,
+    /// Feature dimension of generated rows; 0 = discover from
+    /// `GET /models`.
+    pub dim: usize,
+    /// PRNG seed (each client derives its own stream).
+    pub seed: u64,
+    /// How long to poll `GET /healthz` before giving up.
+    pub warmup_ms: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            target: "127.0.0.1:7878".into(),
+            clients: 4,
+            requests_per_client: 50,
+            rows_per_request: 8,
+            dim: 0,
+            seed: 0x10AD,
+            warmup_ms: 5000,
+        }
+    }
+}
+
+/// Aggregated results of one load-generation run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    pub clients: usize,
+    pub requests_ok: u64,
+    /// 429 responses (admission control working as designed).
+    pub rejected: u64,
+    /// Transport failures and non-200/429 statuses.
+    pub errors: u64,
+    pub rows_ok: u64,
+    pub wall_s: f64,
+    /// End-to-end request latency of successful requests, microseconds.
+    pub latency_us: Histogram,
+}
+
+impl LoadgenReport {
+    /// Successful rows per second of wall time.
+    pub fn rows_per_s(&self) -> f64 {
+        self.rows_ok as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Successful requests per second of wall time.
+    pub fn requests_per_s(&self) -> f64 {
+        self.requests_ok as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render(&mut self) -> String {
+        let total = self.requests_ok + self.rejected + self.errors;
+        let max_us = if self.latency_us.is_empty() {
+            0.0
+        } else {
+            self.latency_us.max()
+        };
+        format!(
+            "loadgen: {total} requests from {} clients in {:.3}s — \
+             {} ok, {} rejected (429), {} errors\n\
+             throughput: {:.0} rows/s ({:.1} req/s)\n\
+             latency: mean={:.0}us p50={:.0}us p95={:.0}us \
+             p99={:.0}us max={:.0}us",
+            self.clients,
+            self.wall_s,
+            self.requests_ok,
+            self.rejected,
+            self.errors,
+            self.rows_per_s(),
+            self.requests_per_s(),
+            self.latency_us.mean(),
+            self.latency_us.percentile(50.0),
+            self.latency_us.percentile(95.0),
+            self.latency_us.p99(),
+            max_us,
+        )
+    }
+}
+
+/// Accept "host:port", "http://host:port" or a trailing slash.
+pub fn normalize_target(target: &str) -> String {
+    let t = target.strip_prefix("http://").unwrap_or(target);
+    t.trim_end_matches('/').to_string()
+}
+
+/// Poll `GET /healthz` until it answers 200 or `budget` expires.
+pub fn wait_healthy(target: &str, budget: Duration) -> Result<()> {
+    let deadline = Instant::now() + budget;
+    loop {
+        if let Ok(mut conn) =
+            ClientConn::connect(target, Duration::from_millis(250))
+        {
+            if let Ok(resp) = conn.request("GET", "/healthz", b"") {
+                if resp.status == 200 {
+                    return Ok(());
+                }
+            }
+        }
+        if Instant::now() >= deadline {
+            return Err(Error::Service(format!(
+                "server at {target} not healthy within {budget:?}"
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// Discover the serving model's feature dimension via `GET /models`.
+pub fn discover_dim(target: &str) -> Result<usize> {
+    let mut conn = ClientConn::connect(target, CONNECT_TIMEOUT)?;
+    let resp = conn.request("GET", "/models", b"")?;
+    if resp.status != 200 {
+        return Err(Error::Service(format!(
+            "GET /models answered {}",
+            resp.status
+        )));
+    }
+    let v = resp.json()?;
+    let serving = v.req_str("serving")?.to_string();
+    let models = v
+        .req("models")?
+        .as_arr()
+        .ok_or_else(|| Error::Parse("'models' is not an array".into()))?;
+    for m in models {
+        if m.req_str("name")? == serving {
+            return m.req_usize("dim");
+        }
+    }
+    Err(Error::Service(format!(
+        "serving model '{serving}' not in the registry listing"
+    )))
+}
+
+/// Per-client partial tally, merged by [`run`].
+#[derive(Default)]
+struct ClientTally {
+    requests_ok: u64,
+    rejected: u64,
+    errors: u64,
+    rows_ok: u64,
+    latency_us: Histogram,
+}
+
+/// Run the closed-loop load generation described by `cfg`.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    if cfg.clients == 0 || cfg.requests_per_client == 0 {
+        return Err(Error::Config(
+            "loadgen needs >= 1 client and >= 1 request".into(),
+        ));
+    }
+    if cfg.rows_per_request == 0 {
+        return Err(Error::Config(
+            "loadgen needs >= 1 row per request".into(),
+        ));
+    }
+    let target = normalize_target(&cfg.target);
+    wait_healthy(&target, Duration::from_millis(cfg.warmup_ms))?;
+    let dim =
+        if cfg.dim > 0 { cfg.dim } else { discover_dim(&target)? };
+    let t0 = Instant::now();
+    let mut threads = Vec::with_capacity(cfg.clients);
+    for client in 0..cfg.clients {
+        let target = target.clone();
+        let cfg = cfg.clone();
+        threads.push(std::thread::spawn(move || {
+            client_loop(&target, &cfg, dim, client as u64)
+        }));
+    }
+    let mut report = LoadgenReport {
+        clients: cfg.clients,
+        ..Default::default()
+    };
+    for t in threads {
+        let part = t.join().map_err(|_| {
+            Error::Service("loadgen client panicked".into())
+        })?;
+        report.requests_ok += part.requests_ok;
+        report.rejected += part.rejected;
+        report.errors += part.errors;
+        report.rows_ok += part.rows_ok;
+        report.latency_us.merge(&part.latency_us);
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+fn client_loop(
+    target: &str,
+    cfg: &LoadgenConfig,
+    dim: usize,
+    client: u64,
+) -> ClientTally {
+    let mut tally = ClientTally::default();
+    let mut rng = Pcg64::new(
+        cfg.seed ^ client.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let mut conn: Option<ClientConn> = None;
+    for _ in 0..cfg.requests_per_client {
+        let body =
+            random_rows_body(&mut rng, cfg.rows_per_request, dim);
+        if conn.is_none() {
+            conn = ClientConn::connect(target, CONNECT_TIMEOUT).ok();
+            if conn.is_none() {
+                tally.errors += 1;
+                continue;
+            }
+        }
+        let t = Instant::now();
+        let resp = conn
+            .as_mut()
+            .expect("connection established above")
+            .request("POST", "/embed", body.as_bytes());
+        match resp {
+            Ok(r) if r.status == 200 => {
+                tally.requests_ok += 1;
+                tally.rows_ok += cfg.rows_per_request as u64;
+                tally
+                    .latency_us
+                    .record(t.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok(r) if r.status == 429 => tally.rejected += 1,
+            Ok(_) => tally.errors += 1,
+            Err(_) => {
+                // Transport failure: drop the connection and let the
+                // next iteration reconnect.
+                tally.errors += 1;
+                conn = None;
+            }
+        }
+    }
+    tally
+}
+
+/// A `{"rows": [[...], ...]}` body of standard-normal rows.
+fn random_rows_body(
+    rng: &mut Pcg64,
+    rows: usize,
+    dim: usize,
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(16 + rows * dim * 10);
+    s.push_str("{\"rows\":[");
+    for i in 0..rows {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('[');
+        for j in 0..dim {
+            if j > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{:.6}", rng.normal());
+        }
+        s.push(']');
+    }
+    s.push_str("]}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_normalization() {
+        assert_eq!(normalize_target("127.0.0.1:80"), "127.0.0.1:80");
+        assert_eq!(
+            normalize_target("http://127.0.0.1:80/"),
+            "127.0.0.1:80"
+        );
+    }
+
+    #[test]
+    fn body_generator_emits_valid_json() {
+        let mut rng = Pcg64::new(7);
+        let body = random_rows_body(&mut rng, 3, 2);
+        let v = crate::ser::parse(&body).unwrap();
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn report_renders_without_samples() {
+        let mut r = LoadgenReport::default();
+        let text = r.render();
+        assert!(text.contains("0 ok"));
+    }
+
+    #[test]
+    fn config_validation() {
+        let cfg = LoadgenConfig { clients: 0, ..Default::default() };
+        assert!(run(&cfg).is_err());
+    }
+}

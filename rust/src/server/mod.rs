@@ -1,0 +1,384 @@
+//! The network serving layer: a dependency-free HTTP/1.1 front end
+//! over the coordinator's embedding service.
+//!
+//! ```text
+//! clients ──► acceptor (non-blocking; 503 when the pending-connection
+//!    │        queue overflows — the acceptor itself never blocks)
+//!    │             │ bounded sync_channel(conn_backlog)
+//!    ▼             ▼
+//!  keep-alive   worker pool (cfg.workers connection handlers;
+//!  connections  parse → route → respond, per-route latency recorded)
+//!                    │
+//!                POST /embed ──► ServiceHandle
+//!                    │            queue_policy = reject: try_embed,
+//!                    │              saturation → 429 + Retry-After
+//!                    │            queue_policy = block: embed (waits)
+//!                    ▼
+//!            coordinator queue → dynamic batcher → backend
+//! ```
+//!
+//! **Backpressure contract.**  Saturation surfaces at two levels, and
+//! neither blocks the acceptor: (1) the coordinator's bounded embed
+//! queue — under the default `reject` policy a full queue answers
+//! `429 Too Many Requests` with a `Retry-After` hint, so a closed-loop
+//! client backs off instead of stacking requests; (2) the bounded
+//! pending-connection queue in front of the worker pool — when every
+//! handler is busy and the backlog is full, the acceptor answers
+//! `503 Service Unavailable` directly and closes.  Everything else
+//! (parse errors, bad shapes, oversized bodies) is a per-request 4xx
+//! on a connection that stays usable.
+//!
+//! The module is std-only, like the rest of the crate: hand-rolled
+//! HTTP in [`http`], route handlers in `routes`, per-route metrics in
+//! `stats`, signal-driven shutdown ([`install_shutdown_handler`] /
+//! [`shutdown_requested`]), and a closed-loop client harness in
+//! [`loadgen`].
+
+pub mod http;
+pub mod loadgen;
+mod routes;
+mod signal;
+mod stats;
+
+pub use signal::{
+    install_shutdown_handler, request_shutdown, shutdown_requested,
+};
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServerConfig;
+use crate::coordinator::ServiceHandle;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+use self::http::{HttpError, RequestReader, Response};
+use self::stats::RouteStats;
+
+/// Cap on concurrent 503-drain helper threads spawned by the acceptor
+/// (beyond it, rejected sockets are dropped outright).
+const MAX_DRAIN_THREADS: u64 = 32;
+
+/// Total wall-clock budget for draining unread bytes before a close.
+const DRAIN_BUDGET: Duration = Duration::from_millis(500);
+
+/// Shared state every connection handler sees.
+struct ServerState {
+    handle: ServiceHandle,
+    cfg: ServerConfig,
+    routes: RouteStats,
+    started: Instant,
+    shutdown: Arc<AtomicBool>,
+    conns_accepted: AtomicU64,
+    conns_rejected: AtomicU64,
+    /// Live 503-drain helper threads (bounded; see `accept_loop`).
+    drain_threads: AtomicU64,
+    /// Lossy tap feeding request rows to a background refresher
+    /// (`serve --refresh N`); `None` when no refresher runs.
+    refresh_feed: Option<Mutex<SyncSender<Matrix>>>,
+}
+
+impl ServerState {
+    fn conns_accepted(&self) -> u64 {
+        self.conns_accepted.load(Ordering::Relaxed)
+    }
+
+    fn conns_rejected(&self) -> u64 {
+        self.conns_rejected.load(Ordering::Relaxed)
+    }
+}
+
+/// The running HTTP front end: one non-blocking acceptor thread plus a
+/// fixed pool of connection-handler threads, all serving through a
+/// [`ServiceHandle`].  Dropping (or calling [`HttpServer::shutdown`])
+/// runs the orderly teardown: acceptor close → pending-connection
+/// drain → worker join.  The embedding service itself is owned by the
+/// caller and outlives the front end.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.listen` and start serving requests against `handle`.
+    pub fn start(
+        handle: ServiceHandle,
+        cfg: &ServerConfig,
+    ) -> Result<HttpServer> {
+        HttpServer::start_with_feed(handle, cfg, None)
+    }
+
+    /// [`HttpServer::start`] plus a lossy refresher tap: every
+    /// `POST /embed` body is `try_send`-forwarded (clone) into `feed`,
+    /// so a background [`crate::kpca::OnlineRskpca`] refresher can
+    /// learn from live traffic and hot-swap the served model.
+    pub fn start_with_feed(
+        handle: ServiceHandle,
+        cfg: &ServerConfig,
+        feed: Option<SyncSender<Matrix>>,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.listen).map_err(|e| {
+            Error::Io(format!("bind {}: {e}", cfg.listen))
+        })?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Io(format!("local_addr: {e}")))?;
+        // Non-blocking accept so the acceptor can poll the shutdown
+        // flag; accepted streams are switched back to blocking.
+        listener.set_nonblocking(true).map_err(|e| {
+            Error::Io(format!("set_nonblocking: {e}"))
+        })?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(ServerState {
+            handle,
+            cfg: cfg.clone(),
+            routes: RouteStats::new(),
+            started: Instant::now(),
+            shutdown: shutdown.clone(),
+            conns_accepted: AtomicU64::new(0),
+            conns_rejected: AtomicU64::new(0),
+            drain_threads: AtomicU64::new(0),
+            refresh_feed: feed.map(Mutex::new),
+        });
+        let (conn_tx, conn_rx) =
+            mpsc::sync_channel::<TcpStream>(cfg.conn_backlog);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let rx = conn_rx.clone();
+            let st = state.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("rskpca-http-{i}"))
+                    .spawn(move || worker_loop(&rx, &st))
+                    .map_err(|e| {
+                        Error::Service(format!("spawn http worker: {e}"))
+                    })?,
+            );
+        }
+        let st = state.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("rskpca-http-accept".into())
+            .spawn(move || accept_loop(&listener, conn_tx, &st))
+            .map_err(|e| {
+                Error::Service(format!("spawn acceptor: {e}"))
+            })?;
+        Ok(HttpServer {
+            addr,
+            shutdown,
+            acceptor: Some(acceptor),
+            workers,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Orderly teardown: stop accepting, drain pending connections,
+    /// join every handler thread.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Accept until shutdown.  Never blocks on downstream capacity: a full
+/// pending-connection queue is answered with an immediate 503.
+fn accept_loop(
+    listener: &TcpListener,
+    conn_tx: SyncSender<TcpStream>,
+    state: &Arc<ServerState>,
+) {
+    while !state.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                state
+                    .conns_accepted
+                    .fetch_add(1, Ordering::Relaxed);
+                match conn_tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(stream)) => {
+                        state
+                            .conns_rejected
+                            .fetch_add(1, Ordering::Relaxed);
+                        let retry_s = ((state.cfg.retry_after_ms
+                            + 999)
+                            / 1000)
+                            .max(1);
+                        let resp = Response::error(
+                            503,
+                            "all connection handlers busy",
+                        )
+                        .with_header(
+                            "retry-after",
+                            &retry_s.to_string(),
+                        );
+                        // The client has usually already written its
+                        // request; closing with those bytes unread
+                        // would RST the 503 away (see
+                        // `respond_and_close`).  Drain on a short
+                        // throwaway thread so the acceptor itself
+                        // never blocks — but bound the helpers and
+                        // tolerate spawn failure: under a genuine
+                        // connection flood, dropping the socket (an
+                        // RST instead of a readable 503) beats
+                        // unbounded threads or a dead acceptor.
+                        let live = state
+                            .drain_threads
+                            .load(Ordering::Relaxed);
+                        if live < MAX_DRAIN_THREADS {
+                            state
+                                .drain_threads
+                                .fetch_add(1, Ordering::Relaxed);
+                            let st = state.clone();
+                            let spawned =
+                                std::thread::Builder::new()
+                                    .name("rskpca-http-503".into())
+                                    .spawn(move || {
+                                        respond_and_close(
+                                            stream, &resp,
+                                        );
+                                        st.drain_threads.fetch_sub(
+                                            1,
+                                            Ordering::Relaxed,
+                                        );
+                                    });
+                            if spawned.is_err() {
+                                state.drain_threads.fetch_sub(
+                                    1,
+                                    Ordering::Relaxed,
+                                );
+                            }
+                        }
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => return,
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // Transient accept failure (e.g. EMFILE): back off
+                // briefly instead of spinning.
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    // Dropping conn_tx ends the workers' recv loop once the pending
+    // backlog drains.
+}
+
+/// Pull connections off the shared queue until the acceptor hangs up.
+fn worker_loop(
+    rx: &Arc<Mutex<Receiver<TcpStream>>>,
+    state: &Arc<ServerState>,
+) {
+    loop {
+        let conn = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => return,
+            };
+            guard.recv()
+        };
+        match conn {
+            Ok(stream) => handle_connection(stream, state),
+            Err(_) => return,
+        }
+    }
+}
+
+/// Serve one keep-alive connection until it closes, errors, times out
+/// idle, or the server shuts down (then the final response carries
+/// `Connection: close`).
+fn handle_connection(mut stream: TcpStream, state: &Arc<ServerState>) {
+    let _ = stream.set_nodelay(true);
+    // One timeout doubles as the idle keep-alive limit and a
+    // slow-request bound, so a stalled client can't pin a worker.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(
+        state.cfg.keep_alive_ms.max(1),
+    )));
+    let mut reader = RequestReader::new();
+    loop {
+        match reader
+            .next_request(&mut stream, state.cfg.max_body_bytes)
+        {
+            Ok(req) => {
+                let resp = routes::dispatch(state, &req);
+                let close = !req.keep_alive()
+                    || state.shutdown.load(Ordering::SeqCst);
+                if resp.write_to(&mut stream, !close).is_err() {
+                    return;
+                }
+                if close {
+                    return;
+                }
+            }
+            Err(HttpError::Closed) => return,
+            Err(HttpError::Io(_)) => return,
+            Err(HttpError::Bad { status, msg }) => {
+                // Protocol-level violation: answer and close — the
+                // byte stream can no longer be trusted to be framed.
+                respond_and_close(
+                    stream,
+                    &Response::error(status, &msg),
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// Write a final response, then half-close and briefly drain unread
+/// request bytes before dropping the socket.  Closing with unread
+/// receive data makes the kernel RST the connection, which can destroy
+/// an in-flight error response (e.g. a 413 sent before the body was
+/// consumed); draining first lets the client actually read it.
+fn respond_and_close(mut stream: TcpStream, resp: &Response) {
+    use std::io::Read as _;
+    if resp.write_to(&mut stream, false).is_err() {
+        return;
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream
+        .set_read_timeout(Some(Duration::from_millis(200)));
+    let deadline = Instant::now() + DRAIN_BUDGET;
+    let mut scratch = [0u8; 4096];
+    // Bounded drain — by bytes (256 KiB) *and* wall clock, so neither
+    // a firehose nor a trickling client can pin the draining thread.
+    for _ in 0..64 {
+        if Instant::now() >= deadline {
+            break;
+        }
+        match stream.read(&mut scratch) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}

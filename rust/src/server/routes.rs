@@ -1,0 +1,401 @@
+//! Route table and handlers: the operational surface of the serving
+//! subsystem.
+//!
+//! | route              | purpose                                        |
+//! |--------------------|------------------------------------------------|
+//! | `POST /embed`      | rows in, embeddings out (batched, admission-controlled) |
+//! | `GET /stats`       | service snapshot + per-route latency histograms |
+//! | `GET /healthz`     | liveness                                       |
+//! | `GET /models`      | registry listing (names, versions, shapes)     |
+//! | `POST /models/swap`| publish a model into the registry (hot swap)   |
+//!
+//! Error mapping: invalid JSON / shapes → 400, gated path-swap → 403,
+//! unknown route → 404, wrong method → 405, swap dim conflict → 409,
+//! queue saturation → 429 + `Retry-After`, backend failure → 500.
+
+use std::path::Path;
+use std::time::Instant;
+
+use super::http::{Request, Response};
+use super::ServerState;
+use crate::error::Error;
+use crate::kpca::EmbeddingModel;
+use crate::linalg::Matrix;
+use crate::ser::Json;
+
+/// Dispatch one request, recording per-route latency and errors.
+pub(super) fn dispatch(state: &ServerState, req: &Request) -> Response {
+    let t = Instant::now();
+    let (label, resp) = route(state, req);
+    state.routes.record(
+        label,
+        t.elapsed().as_secs_f64() * 1e6,
+        resp.status >= 400,
+    );
+    resp
+}
+
+fn route(
+    state: &ServerState,
+    req: &Request,
+) -> (&'static str, Response) {
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => ("GET /healthz", healthz(state)),
+        ("GET", "/stats") => ("GET /stats", stats(state)),
+        ("GET", "/models") => ("GET /models", models(state)),
+        ("POST", "/models/swap") => {
+            ("POST /models/swap", swap(state, req))
+        }
+        ("POST", "/embed") => ("POST /embed", embed(state, req)),
+        (_, "/healthz" | "/stats" | "/models" | "/models/swap"
+            | "/embed") => (
+            "other",
+            Response::error(405, "method not allowed for this route"),
+        ),
+        _ => ("other", Response::error(404, "no such route")),
+    }
+}
+
+fn healthz(state: &ServerState) -> Response {
+    Response::json(
+        200,
+        &Json::obj()
+            .with("status", Json::Str("ok".into()))
+            .with(
+                "model",
+                Json::Str(state.handle.model_name().to_string()),
+            )
+            .with(
+                "uptime_s",
+                Json::Num(state.started.elapsed().as_secs_f64()),
+            ),
+    )
+}
+
+fn stats(state: &ServerState) -> Response {
+    let s = state.handle.stats();
+    let service = Json::obj()
+        .with("requests", Json::Num(s.requests as f64))
+        .with("rejected", Json::Num(s.rejected as f64))
+        .with("rows", Json::Num(s.rows as f64))
+        .with("batches", Json::Num(s.batches as f64))
+        .with("latency_p50_us", Json::Num(s.latency_p50_us))
+        .with("latency_p95_us", Json::Num(s.latency_p95_us))
+        .with("latency_p99_us", Json::Num(s.latency_p99_us))
+        .with("mean_batch_rows", Json::Num(s.mean_batch_rows))
+        .with("max_batch_rows", Json::Num(s.max_batch_rows))
+        .with("model_swaps", Json::Num(s.model_swaps as f64))
+        .with("model_version", Json::Num(s.model_version as f64));
+    let http = Json::obj()
+        .with(
+            "conns_accepted",
+            Json::Num(state.conns_accepted() as f64),
+        )
+        .with(
+            "conns_rejected",
+            Json::Num(state.conns_rejected() as f64),
+        );
+    Response::json(
+        200,
+        &Json::obj()
+            .with("service", service)
+            .with("routes", state.routes.to_json())
+            .with("http", http)
+            .with(
+                "uptime_s",
+                Json::Num(state.started.elapsed().as_secs_f64()),
+            ),
+    )
+}
+
+fn models(state: &ServerState) -> Response {
+    let registry = state.handle.registry();
+    let serving = state.handle.model_name().to_string();
+    let mut entries = Vec::new();
+    for name in registry.names() {
+        if let Some((model, version)) = registry.get_versioned(&name) {
+            entries.push(
+                Json::obj()
+                    .with("name", Json::Str(name.clone()))
+                    .with("version", Json::Num(version as f64))
+                    .with(
+                        "method",
+                        Json::Str(model.method.clone()),
+                    )
+                    .with(
+                        "centers",
+                        Json::Num(model.n_retained() as f64),
+                    )
+                    .with("rank", Json::Num(model.r() as f64))
+                    .with(
+                        "dim",
+                        Json::Num(model.centers.cols() as f64),
+                    )
+                    .with("serving", Json::Bool(name == serving)),
+            );
+        }
+    }
+    Response::json(
+        200,
+        &Json::obj()
+            .with("serving", Json::Str(serving))
+            .with("models", Json::Arr(entries))
+            .with(
+                "swap_count",
+                Json::Num(registry.swap_count() as f64),
+            ),
+    )
+}
+
+fn swap(state: &ServerState, req: &Request) -> Response {
+    let v = match parse_json_body(&req.body) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let name = match v.get("name") {
+        None => state.handle.model_name().to_string(),
+        Some(Json::Str(s)) => s.clone(),
+        Some(_) => {
+            return Response::error(400, "'name' must be a string")
+        }
+    };
+    let model = if let Some(mj) = v.get("model") {
+        match EmbeddingModel::from_json(mj) {
+            Ok(m) => m,
+            Err(e) => {
+                return Response::error(
+                    400,
+                    &format!("bad inline model: {e}"),
+                )
+            }
+        }
+    } else if let Some(p) = v.get("path").and_then(|p| p.as_str()) {
+        // Server-side file loads are an operator opt-in: the route is
+        // unauthenticated, so by default clients may only ship the
+        // model inline.
+        if !state.cfg.allow_path_swap {
+            return Response::error(
+                403,
+                "path-based swap is disabled; send the model inline \
+                 or set [server] allow_path_swap = true",
+            );
+        }
+        match EmbeddingModel::load(Path::new(p)) {
+            Ok(m) => m,
+            Err(e) => {
+                return Response::error(
+                    400,
+                    &format!("cannot load model from '{p}': {e}"),
+                )
+            }
+        }
+    } else {
+        return Response::error(
+            400,
+            "swap needs an inline 'model' or a server-side 'path'",
+        );
+    };
+    let registry = state.handle.registry();
+    // Refuse a swap that would change the feature dimension of an
+    // existing slot: the service handles validated requests against
+    // the old dim, and the batch executor would refuse every batch.
+    if let Some(current) = registry.get(&name) {
+        if current.centers.cols() != model.centers.cols() {
+            return Response::error(
+                409,
+                &format!(
+                    "slot '{name}' serves dim {}, new model has dim {}",
+                    current.centers.cols(),
+                    model.centers.cols()
+                ),
+            );
+        }
+    }
+    let version = registry.publish(&name, model);
+    Response::json(
+        200,
+        &Json::obj()
+            .with("name", Json::Str(name))
+            .with("version", Json::Num(version as f64))
+            .with(
+                "swap_count",
+                Json::Num(registry.swap_count() as f64),
+            ),
+    )
+}
+
+fn embed(state: &ServerState, req: &Request) -> Response {
+    let v = match parse_json_body(&req.body) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let rows = match rows_from_json(&v) {
+        Ok(m) => m,
+        Err(msg) => return Response::error(400, &msg),
+    };
+    // Lossy tap for the background refresher (`serve --refresh N`):
+    // never blocks the request path — when the refresher is mid-refit
+    // the sample is simply dropped.
+    if let Some(feed) = &state.refresh_feed {
+        if let Ok(tx) = feed.lock() {
+            let _ = tx.try_send(rows.clone());
+        }
+    }
+    // Registry version before submission: versions only ever
+    // increment, so if it is unchanged after the reply, no swap
+    // happened in between and the batch provably served this version.
+    let registry = state.handle.registry();
+    let version_before = registry
+        .version(state.handle.model_name())
+        .unwrap_or(0);
+    let result = if state.cfg.queue_policy
+        == crate::config::QueuePolicy::Block
+    {
+        state.handle.embed(rows)
+    } else {
+        match state.handle.try_embed(rows) {
+            Ok(rx) => rx.recv().unwrap_or_else(|_| {
+                Err(Error::Service("reply dropped".into()))
+            }),
+            Err(e) => Err(e),
+        }
+    };
+    match result {
+        Ok(z) => {
+            let version_after = registry
+                .version(state.handle.model_name())
+                .unwrap_or(0);
+            // Null during a swap window: the batch ran against one of
+            // the two versions and the handler cannot know which.
+            let version = if version_before == version_after {
+                Json::Num(version_after as f64)
+            } else {
+                Json::Null
+            };
+            Response::json(
+                200,
+                &Json::obj()
+                    .with("rows", Json::Num(z.rows() as f64))
+                    .with("rank", Json::Num(z.cols() as f64))
+                    .with("model_version", version)
+                    .with("embedding", matrix_to_json(&z)),
+            )
+        }
+        Err(Error::Saturated(m)) => {
+            // Admission control: saturation is transient, so answer
+            // 429 with a Retry-After hint instead of queueing the
+            // connection worker behind the embed queue.
+            let retry_ms = state.cfg.retry_after_ms;
+            let retry_s = ((retry_ms + 999) / 1000).max(1);
+            Response::json(
+                429,
+                &Json::obj()
+                    .with("error", Json::Str(m))
+                    .with("status", Json::Num(429.0))
+                    .with(
+                        "retry_after_ms",
+                        Json::Num(retry_ms as f64),
+                    ),
+            )
+            .with_header("retry-after", &retry_s.to_string())
+        }
+        Err(Error::Shape(m)) => Response::error(400, &m),
+        Err(e) => Response::error(500, &e.to_string()),
+    }
+}
+
+/// Parse a request body as JSON (400 on non-UTF-8 or bad JSON).
+fn parse_json_body(body: &[u8]) -> Result<Json, Response> {
+    let text = std::str::from_utf8(body).map_err(|_| {
+        Response::error(400, "body is not valid utf-8")
+    })?;
+    crate::ser::parse(text).map_err(|e| {
+        Response::error(400, &format!("bad json body: {e}"))
+    })
+}
+
+/// Extract `{"rows": [[f64, ...], ...]}` into a row-major matrix.
+fn rows_from_json(v: &Json) -> Result<Matrix, String> {
+    let rows = v
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| {
+            "body must be {\"rows\": [[...], ...]}".to_string()
+        })?;
+    if rows.is_empty() {
+        return Err("'rows' must not be empty".into());
+    }
+    let cols = rows[0]
+        .as_arr()
+        .map(|a| a.len())
+        .ok_or_else(|| "'rows' items must be arrays".to_string())?;
+    if cols == 0 {
+        return Err("rows must have at least one column".into());
+    }
+    let mut m = Matrix::zeros(rows.len(), cols);
+    for (i, row) in rows.iter().enumerate() {
+        let row = row
+            .as_arr()
+            .ok_or_else(|| format!("row {i} is not an array"))?;
+        if row.len() != cols {
+            return Err(format!(
+                "ragged rows: row {i} has {} columns, row 0 has {cols}",
+                row.len()
+            ));
+        }
+        for (j, x) in row.iter().enumerate() {
+            m.set(
+                i,
+                j,
+                x.as_f64().ok_or_else(|| {
+                    format!("row {i} col {j} is not a number")
+                })?,
+            );
+        }
+    }
+    Ok(m)
+}
+
+/// Nested-array JSON view of a matrix (row major).
+fn matrix_to_json(m: &Matrix) -> Json {
+    let mut rows = Vec::with_capacity(m.rows());
+    for i in 0..m.rows() {
+        rows.push(Json::from_f64_slice(m.row(i)));
+    }
+    Json::Arr(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_parse_validates_shape() {
+        let ok = crate::ser::parse(r#"{"rows": [[1, 2], [3, 4]]}"#)
+            .unwrap();
+        let m = rows_from_json(&ok).unwrap();
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        assert_eq!(m.get(1, 0), 3.0);
+
+        for bad in [
+            r#"{"cols": []}"#,
+            r#"{"rows": []}"#,
+            r#"{"rows": [[]]}"#,
+            r#"{"rows": [[1, 2], [3]]}"#,
+            r#"{"rows": [[1, "x"]]}"#,
+            r#"{"rows": [1, 2]}"#,
+        ] {
+            let v = crate::ser::parse(bad).unwrap();
+            assert!(rows_from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn matrix_json_roundtrips() {
+        let m = Matrix::from_vec(2, 3, vec![1.5, -2.0, 0.25, 4.0, 5.0, -6.5])
+            .unwrap();
+        let j = Json::obj().with("rows", matrix_to_json(&m));
+        let back = rows_from_json(&j).unwrap();
+        assert_eq!(back, m);
+    }
+}

@@ -1,0 +1,112 @@
+//! Per-route HTTP metrics: hit/error counters and latency histograms,
+//! surfaced by `GET /stats` next to the coordinator's
+//! [`crate::coordinator::ServiceStatsSnapshot`].
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::metrics::Histogram;
+use crate::ser::Json;
+
+#[derive(Default)]
+struct RouteEntry {
+    hits: u64,
+    errors: u64,
+    latency_us: Histogram,
+}
+
+/// Mutex-guarded per-route counters.  Recording happens once per
+/// request after the response is built — off the embed hot path, which
+/// is dominated by the batch execution anyway.
+#[derive(Default)]
+pub struct RouteStats {
+    inner: Mutex<BTreeMap<&'static str, RouteEntry>>,
+}
+
+impl RouteStats {
+    pub fn new() -> RouteStats {
+        RouteStats::default()
+    }
+
+    /// Record one handled request under a static route label.
+    pub fn record(
+        &self,
+        route: &'static str,
+        latency_us: f64,
+        error: bool,
+    ) {
+        let mut guard = self.inner.lock().unwrap();
+        let entry = guard.entry(route).or_default();
+        entry.hits += 1;
+        if error {
+            entry.errors += 1;
+        }
+        entry.latency_us.record(latency_us);
+    }
+
+    /// Hit count for a route label (testing / introspection).
+    pub fn hits(&self, route: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(route)
+            .map(|e| e.hits)
+            .unwrap_or(0)
+    }
+
+    /// Snapshot as a JSON object keyed by route label.
+    pub fn to_json(&self) -> Json {
+        let mut guard = self.inner.lock().unwrap();
+        let mut obj = Json::obj();
+        for (route, e) in guard.iter_mut() {
+            obj = obj.with(
+                route,
+                Json::obj()
+                    .with("hits", Json::Num(e.hits as f64))
+                    .with("errors", Json::Num(e.errors as f64))
+                    .with(
+                        "latency_mean_us",
+                        Json::Num(e.latency_us.mean()),
+                    )
+                    .with(
+                        "latency_p50_us",
+                        Json::Num(e.latency_us.percentile(50.0)),
+                    )
+                    .with(
+                        "latency_p95_us",
+                        Json::Num(e.latency_us.percentile(95.0)),
+                    )
+                    .with(
+                        "latency_p99_us",
+                        Json::Num(e.latency_us.p99()),
+                    ),
+            );
+        }
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_serializes_per_route() {
+        let stats = RouteStats::new();
+        for i in 0..10 {
+            stats.record("POST /embed", 100.0 + i as f64, false);
+        }
+        stats.record("GET /stats", 5.0, false);
+        stats.record("other", 1.0, true);
+        assert_eq!(stats.hits("POST /embed"), 10);
+        assert_eq!(stats.hits("GET /stats"), 1);
+        assert_eq!(stats.hits("GET /missing"), 0);
+        let v = stats.to_json();
+        let embed = v.get("POST /embed").unwrap();
+        assert_eq!(embed.req_f64("hits").unwrap(), 10.0);
+        assert_eq!(embed.req_f64("errors").unwrap(), 0.0);
+        assert!(embed.req_f64("latency_p99_us").unwrap() >= 100.0);
+        let other = v.get("other").unwrap();
+        assert_eq!(other.req_f64("errors").unwrap(), 1.0);
+    }
+}

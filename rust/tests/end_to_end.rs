@@ -282,11 +282,14 @@ fn cli_fit_and_embed_commands_compose() {
     // label,z0,z1,z2 per line.
     assert_eq!(emb.lines().next().unwrap().split(',').count(), 4);
 
-    // serve command drives the loaded model end to end.
+    // serve --selftest drives the loaded model end to end in-process
+    // (plain `serve` now blocks on the HTTP listener; the network path
+    // is covered by tests/server_http.rs).
     run(&[
         "serve",
         "--model",
         model_path.to_str().unwrap(),
+        "--selftest",
         "--requests",
         "20",
         "--rows-per-request",
@@ -300,6 +303,7 @@ fn cli_fit_and_embed_commands_compose() {
         "serve",
         "--model",
         model_path.to_str().unwrap(),
+        "--selftest",
         "--requests",
         "40",
         "--rows-per-request",

@@ -1,0 +1,535 @@
+//! Loopback integration tests for the HTTP serving subsystem: real TCP
+//! on an ephemeral port, concurrent clients, a mid-traffic hot swap
+//! over the wire, and 429-on-saturation semantics.
+
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use rskpca::config::{QueuePolicy, ServerConfig, ServiceConfig};
+use rskpca::coordinator::EmbeddingService;
+use rskpca::data::gaussian_mixture_2d;
+use rskpca::error::Result;
+use rskpca::kernel::Kernel;
+use rskpca::kpca::{fit_kpca, EmbeddingModel};
+use rskpca::linalg::Matrix;
+use rskpca::runtime::{BackendFactory, GramBackend, NativeBackend};
+use rskpca::ser::Json;
+use rskpca::server::http::ClientConn;
+use rskpca::server::loadgen::{self, LoadgenConfig};
+use rskpca::server::HttpServer;
+
+const CONNECT: Duration = Duration::from_millis(2000);
+
+fn test_model() -> (EmbeddingModel, Matrix) {
+    let ds = gaussian_mixture_2d(80, 3, 0.4, 1);
+    let k = Kernel::gaussian(1.0);
+    let model = fit_kpca(&ds.x, &k, 4).unwrap();
+    (model, ds.x)
+}
+
+fn native() -> BackendFactory {
+    Box::new(|| Ok(Box::new(NativeBackend)))
+}
+
+fn server_cfg() -> ServerConfig {
+    ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 8,
+        ..Default::default()
+    }
+}
+
+/// Spawn service + HTTP front end; returns both plus the target addr.
+fn start(
+    model: EmbeddingModel,
+    svc_cfg: ServiceConfig,
+    srv_cfg: &ServerConfig,
+    factory: BackendFactory,
+) -> (EmbeddingService, HttpServer, String) {
+    let svc = EmbeddingService::start(model, factory, svc_cfg).unwrap();
+    let server = HttpServer::start(svc.handle(), srv_cfg).unwrap();
+    let target = server.local_addr().to_string();
+    (svc, server, target)
+}
+
+/// Full-precision `{"rows": [...]}` body for selected rows of `x`.
+fn rows_body(x: &Matrix, idx: &[usize]) -> String {
+    let mut s = String::from("{\"rows\":[");
+    for (n, &i) in idx.iter().enumerate() {
+        if n > 0 {
+            s.push(',');
+        }
+        s.push('[');
+        for j in 0..x.cols() {
+            if j > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{}", x.get(i, j));
+        }
+        s.push(']');
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Extract the `embedding` field of a 200 response body.
+fn embedding_from(body: &[u8]) -> Matrix {
+    let v = rskpca::ser::parse(std::str::from_utf8(body).unwrap())
+        .unwrap();
+    let rows = v.get("embedding").unwrap().as_arr().unwrap();
+    let cols = rows[0].as_arr().unwrap().len();
+    let mut m = Matrix::zeros(rows.len(), cols);
+    for (i, row) in rows.iter().enumerate() {
+        for (j, x) in row.as_arr().unwrap().iter().enumerate() {
+            m.set(i, j, x.as_f64().unwrap());
+        }
+    }
+    m
+}
+
+fn close_to(a: &Matrix, b: &Matrix, tol: f64) -> bool {
+    a.rows() == b.rows()
+        && a.cols() == b.cols()
+        && a.sub(b).unwrap().max_abs() < tol
+}
+
+#[test]
+fn healthz_models_stats_and_unknown_routes() {
+    let (model, x) = test_model();
+    let (svc, server, target) = start(
+        model,
+        ServiceConfig::default(),
+        &server_cfg(),
+        native(),
+    );
+    let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+
+    let resp = conn.request("GET", "/healthz", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.json().unwrap().req_str("status").unwrap(), "ok");
+
+    let resp = conn.request("GET", "/models", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let v = resp.json().unwrap();
+    assert_eq!(v.req_str("serving").unwrap(), "default");
+    let models = v.req("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].req_usize("dim").unwrap(), 2);
+    assert_eq!(models[0].req_usize("version").unwrap(), 1);
+
+    // Drive one embed so /stats has service + route samples.
+    let body = rows_body(&x, &[0, 1, 2]);
+    let resp = conn
+        .request("POST", "/embed", body.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 200);
+
+    let resp = conn.request("GET", "/stats", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let v = resp.json().unwrap();
+    let service = v.req("service").unwrap();
+    assert_eq!(service.req_f64("requests").unwrap(), 1.0);
+    assert_eq!(service.req_f64("rows").unwrap(), 3.0);
+    assert!(service.req_f64("latency_p99_us").unwrap() > 0.0);
+    let routes = v.req("routes").unwrap();
+    let embed_route = routes.get("POST /embed").unwrap();
+    assert_eq!(embed_route.req_f64("hits").unwrap(), 1.0);
+    assert!(embed_route.req_f64("latency_p99_us").unwrap() > 0.0);
+
+    // Unknown route and wrong method.
+    assert_eq!(
+        conn.request("GET", "/nope", b"").unwrap().status,
+        404
+    );
+    assert_eq!(
+        conn.request("DELETE", "/healthz", b"").unwrap().status,
+        405
+    );
+    // Server-side path swaps are gated off by default (403) — only
+    // inline models are accepted on an unauthenticated surface.
+    let resp = conn
+        .request(
+            "POST",
+            "/models/swap",
+            br#"{"path": "/etc/hostname"}"#,
+        )
+        .unwrap();
+    assert_eq!(resp.status, 403);
+    drop(conn);
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn embed_over_http_matches_direct_transform() {
+    let (model, x) = test_model();
+    let expect = model.transform(&x);
+    let (svc, server, target) = start(
+        model,
+        ServiceConfig::default(),
+        &server_cfg(),
+        native(),
+    );
+    let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+    let idx: Vec<usize> = (10..30).collect();
+    let body = rows_body(&x, &idx);
+    let resp = conn
+        .request("POST", "/embed", body.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    let got = embedding_from(&resp.body);
+    let want = expect.select_rows(&idx);
+    assert!(close_to(&got, &want, 1e-9), "HTTP embed diverged");
+    let v = resp.json().unwrap();
+    assert_eq!(v.req_usize("rows").unwrap(), idx.len());
+    assert_eq!(v.req_usize("rank").unwrap(), want.cols());
+    drop(conn);
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn malformed_bodies_get_400_and_connection_survives() {
+    let (model, x) = test_model();
+    let (svc, server, target) = start(
+        model,
+        ServiceConfig::default(),
+        &server_cfg(),
+        native(),
+    );
+    let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+    for bad in [
+        "this is not json",
+        r#"{"rows": []}"#,
+        r#"{"rows": [[1, 2], [3]]}"#,
+        r#"{"rows": [[1, 2, 3]]}"#, // wrong feature dim -> shape error
+        r#"{"wrong": 1}"#,
+    ] {
+        let resp = conn
+            .request("POST", "/embed", bad.as_bytes())
+            .unwrap();
+        assert_eq!(resp.status, 400, "body {bad:?}");
+    }
+    // The same keep-alive connection still serves good requests.
+    let body = rows_body(&x, &[0]);
+    let resp = conn
+        .request("POST", "/embed", body.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    drop(conn);
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn oversized_body_is_413_and_raw_bad_content_length_is_400() {
+    let (model, x) = test_model();
+    let mut cfg = server_cfg();
+    cfg.max_body_bytes = 1024;
+    let (svc, server, target) =
+        start(model, ServiceConfig::default(), &cfg, native());
+
+    // ~8 KiB body against a 1 KiB limit -> 413.
+    let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+    let idx: Vec<usize> = (0..60).collect();
+    let body = rows_body(&x, &idx);
+    assert!(body.len() > 1024);
+    let resp = conn
+        .request("POST", "/embed", body.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 413);
+
+    // Raw socket with a garbage content-length -> 400 and close.
+    let mut raw = TcpStream::connect(&target).unwrap();
+    raw.write_all(
+        b"POST /embed HTTP/1.1\r\ncontent-length: banana\r\n\r\n",
+    )
+    .unwrap();
+    let mut text = String::new();
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    raw.read_to_string(&mut text).unwrap();
+    assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+    server.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn concurrent_hammer_with_midtraffic_hot_swap() {
+    let (model, x) = test_model();
+    let expect_old = model.transform(&x);
+    let doubled = EmbeddingModel {
+        coeffs: model.coeffs.scale(2.0),
+        ..model.clone()
+    };
+    let expect_new = expect_old.scale(2.0);
+    let (svc, server, target) = start(
+        model,
+        ServiceConfig {
+            max_batch: 64,
+            max_wait_us: 300,
+            ..Default::default()
+        },
+        &server_cfg(),
+        native(),
+    );
+
+    let served_new = Arc::new(AtomicU64::new(0));
+    let served_old = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for t in 0..4u64 {
+        let target = target.clone();
+        let x = x.clone();
+        let expect_old = expect_old.clone();
+        let expect_new = expect_new.clone();
+        let served_new = served_new.clone();
+        let served_old = served_old.clone();
+        clients.push(std::thread::spawn(move || -> Result<()> {
+            let mut conn = ClientConn::connect(&target, CONNECT)?;
+            for round in 0..30u64 {
+                // Pace the rounds so the mid-traffic swap reliably
+                // lands while requests are still flowing.
+                std::thread::sleep(Duration::from_millis(2));
+                let start = ((t * 13 + round * 7) % 70) as usize;
+                let idx: Vec<usize> = (start..start + 8).collect();
+                let body = rows_body(&x, &idx);
+                let resp =
+                    conn.request("POST", "/embed", body.as_bytes())?;
+                // Zero malformed responses allowed: every reply is a
+                // parseable 200 matching exactly one model version.
+                assert_eq!(resp.status, 200);
+                let got = embedding_from(&resp.body);
+                let want_old = expect_old.select_rows(&idx);
+                let want_new = expect_new.select_rows(&idx);
+                if close_to(&got, &want_old, 1e-9) {
+                    served_old.fetch_add(1, Ordering::Relaxed);
+                } else if close_to(&got, &want_new, 1e-9) {
+                    served_new.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    panic!(
+                        "response matches neither model version \
+                         (thread {t}, round {round})"
+                    );
+                }
+            }
+            Ok(())
+        }));
+    }
+
+    // Mid-traffic: publish the doubled model over the wire (clients
+    // pace at ~2 ms/round, so they are still mid-run here).
+    std::thread::sleep(Duration::from_millis(20));
+    let mut admin = ClientConn::connect(&target, CONNECT).unwrap();
+    let swap_body = Json::obj()
+        .with("model", doubled.to_json())
+        .to_string();
+    let resp = admin
+        .request("POST", "/models/swap", swap_body.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    let v = resp.json().unwrap();
+    assert_eq!(v.req_usize("version").unwrap(), 2);
+
+    for c in clients {
+        c.join().unwrap().unwrap();
+    }
+    // The swap happened mid-traffic: the new model must have served
+    // at least one request, and nothing was malformed.
+    assert!(
+        served_new.load(Ordering::Relaxed) > 0,
+        "hot swap never took effect"
+    );
+    assert_eq!(
+        served_old.load(Ordering::Relaxed)
+            + served_new.load(Ordering::Relaxed),
+        120
+    );
+
+    // The registry reflects the swap.
+    let resp = admin.request("GET", "/models", b"").unwrap();
+    let v = resp.json().unwrap();
+    let models = v.req("models").unwrap().as_arr().unwrap();
+    assert_eq!(models[0].req_usize("version").unwrap(), 2);
+    drop(admin);
+    server.shutdown();
+    svc.shutdown();
+}
+
+/// A backend that sleeps per batch — drives the queue into saturation.
+struct SlowBackend {
+    inner: NativeBackend,
+    delay: Duration,
+}
+
+impl GramBackend for SlowBackend {
+    fn gram(
+        &mut self,
+        x: &Matrix,
+        y: &Matrix,
+        kernel: &Kernel,
+    ) -> Result<Matrix> {
+        std::thread::sleep(self.delay);
+        self.inner.gram(x, y, kernel)
+    }
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+}
+
+#[test]
+fn saturation_answers_429_with_retry_after() {
+    let (model, x) = test_model();
+    let mut cfg = server_cfg();
+    cfg.retry_after_ms = 1500;
+    let (svc, server, target) = start(
+        model,
+        ServiceConfig {
+            max_batch: 1,
+            max_wait_us: 1,
+            queue_depth: 1,
+            workers: 1,
+        },
+        &cfg,
+        Box::new(|| {
+            Ok(Box::new(SlowBackend {
+                inner: NativeBackend,
+                delay: Duration::from_millis(30),
+            }) as Box<dyn GramBackend>)
+        }),
+    );
+
+    let ok = Arc::new(AtomicU64::new(0));
+    let rejected = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for t in 0..8u64 {
+        let target = target.clone();
+        let x = x.clone();
+        let ok = ok.clone();
+        let rejected = rejected.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut conn =
+                ClientConn::connect(&target, CONNECT).unwrap();
+            for round in 0..4u64 {
+                let i = ((t * 4 + round) % 80) as usize;
+                let body = rows_body(&x, &[i]);
+                let resp = conn
+                    .request("POST", "/embed", body.as_bytes())
+                    .unwrap();
+                match resp.status {
+                    200 => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    429 => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                        // Admission control must carry the back-off
+                        // hint (1500 ms rounds up to 2 s).
+                        assert_eq!(
+                            resp.header("retry-after"),
+                            Some("2")
+                        );
+                        let v = resp.json().unwrap();
+                        assert_eq!(
+                            v.req_f64("retry_after_ms").unwrap(),
+                            1500.0
+                        );
+                    }
+                    other => panic!("unexpected status {other}"),
+                }
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert!(
+        rejected.load(Ordering::Relaxed) > 0,
+        "tiny queue never rejected under 8-way concurrency"
+    );
+    assert!(
+        ok.load(Ordering::Relaxed) > 0,
+        "saturated server should still serve some requests"
+    );
+    server.shutdown();
+    let snap = svc.shutdown();
+    assert_eq!(snap.rejected, rejected.load(Ordering::Relaxed));
+}
+
+#[test]
+fn block_policy_waits_instead_of_rejecting() {
+    let (model, x) = test_model();
+    let mut cfg = server_cfg();
+    cfg.queue_policy = QueuePolicy::Block;
+    let (svc, server, target) = start(
+        model,
+        ServiceConfig {
+            max_batch: 1,
+            max_wait_us: 1,
+            queue_depth: 1,
+            workers: 1,
+        },
+        &cfg,
+        Box::new(|| {
+            Ok(Box::new(SlowBackend {
+                inner: NativeBackend,
+                delay: Duration::from_millis(10),
+            }) as Box<dyn GramBackend>)
+        }),
+    );
+    let mut clients = Vec::new();
+    for t in 0..4u64 {
+        let target = target.clone();
+        let x = x.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut conn =
+                ClientConn::connect(&target, CONNECT).unwrap();
+            for round in 0..3u64 {
+                let i = ((t * 3 + round) % 80) as usize;
+                let body = rows_body(&x, &[i]);
+                let resp = conn
+                    .request("POST", "/embed", body.as_bytes())
+                    .unwrap();
+                assert_eq!(resp.status, 200, "block policy must wait");
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    server.shutdown();
+    let snap = svc.shutdown();
+    assert_eq!(snap.rejected, 0);
+    assert_eq!(snap.requests, 12);
+}
+
+#[test]
+fn loadgen_round_trip_reports_throughput() {
+    let (model, _) = test_model();
+    let (svc, server, target) = start(
+        model,
+        ServiceConfig::default(),
+        &server_cfg(),
+        native(),
+    );
+    let mut report = loadgen::run(&LoadgenConfig {
+        target,
+        clients: 3,
+        requests_per_client: 10,
+        rows_per_request: 4,
+        dim: 0, // exercises GET /models discovery
+        seed: 9,
+        warmup_ms: 3000,
+    })
+    .unwrap();
+    assert_eq!(report.requests_ok, 30);
+    assert_eq!(report.rows_ok, 120);
+    assert_eq!(report.errors, 0);
+    assert!(report.rows_per_s() > 0.0);
+    assert!(report.latency_us.p99() > 0.0);
+    let text = report.render();
+    assert!(text.contains("30 ok"), "{text}");
+    server.shutdown();
+    svc.shutdown();
+}
