@@ -149,7 +149,7 @@ fn main() {
     let svc = EmbeddingService::start_with_registry(
         registry.clone(),
         DEFAULT_MODEL,
-        Box::new(|| Ok(Box::new(NativeBackend))),
+        Box::new(|| Ok(Box::new(NativeBackend::new()))),
         ServiceConfig {
             max_batch: 64,
             max_wait_us: 200,

@@ -1,11 +1,16 @@
-//! Micro benches over the hot paths: symmetric eigensolver, native Gram
-//! (parallel vs serial), fused batched projection, PJRT gram/embed (when
-//! artifacts exist), and the end-to-end service throughput — the inputs
-//! to EXPERIMENTS.md §Perf.
+//! Micro benches over the hot paths: symmetric eigensolver, packed
+//! GEMM vs the naive serial reference, the distance-free (norm-trick)
+//! Gram vs the naive pair-by-pair reference, fused batched projection,
+//! PJRT gram/embed (when artifacts exist), and the end-to-end service
+//! throughput — the inputs to EXPERIMENTS.md §Perf.
+//!
+//! Besides stdout and `bench_micro.csv`, the run emits the
+//! machine-readable `BENCH_MICRO.json` at the repo root (op, n/m/d,
+//! threads, ns/op, rows/s) so the perf trajectory is tracked across PRs.
 
 use std::path::Path;
 
-use rskpca::bench::harness;
+use rskpca::bench::{harness, BenchMeta};
 use rskpca::config::ServiceConfig;
 use rskpca::coordinator::serve;
 use rskpca::data::gaussian_mixture_2d;
@@ -44,25 +49,76 @@ fn main() {
         });
     }
 
-    // Parallel vs serial symmetric Gram — the tentpole acceptance check:
-    // >= 2x wall clock at n=2000 with >= 4 threads, matching within
-    // 1e-10 (in fact bitwise).
+    // Packed GEMM vs the naive serial triple loop.
+    let n_mm = if quick { 256 } else { 512 };
+    {
+        let a = random(n_mm, n_mm, 7);
+        let bm = random(n_mm, n_mm, 8);
+        parallel::set_threads(1);
+        let naive_mean = b
+            .bench_meta(
+                &format!("matmul_serial/n{n_mm}"),
+                BenchMeta::new("gemm_serial", n_mm, n_mm, n_mm, 1),
+                n_mm as f64,
+                || a.matmul_serial(&bm).unwrap().rows(),
+            )
+            .mean_s;
+        let gemm_1t = b
+            .bench_meta(
+                &format!("matmul_gemm/t1/n{n_mm}"),
+                BenchMeta::new("gemm", n_mm, n_mm, n_mm, 1),
+                n_mm as f64,
+                || a.matmul(&bm).unwrap().rows(),
+            )
+            .mean_s;
+        for &t in &[2usize, 4, 8] {
+            parallel::set_threads(t);
+            b.bench_meta(
+                &format!("matmul_gemm/t{t}/n{n_mm}"),
+                BenchMeta::new("gemm", n_mm, n_mm, n_mm, t),
+                n_mm as f64,
+                || a.matmul(&bm).unwrap().rows(),
+            );
+        }
+        parallel::set_threads(0);
+        println!(
+            "# gemm n={n_mm}: packed micro-kernel 1-thread speedup \
+             {:.2}x vs naive serial",
+            naive_mean / gemm_1t
+        );
+    }
+
+    // Norm-trick vs naive serial symmetric Gram — the tentpole
+    // acceptance check: >= 3x single-thread at n=2000, d=64 over the
+    // retained serial reference, scaling across threads {2,4,8}, and
+    // <= 1e-10 agreement everywhere.
     let kernel = Kernel::gaussian(1.0);
     let n_sym = if quick { 512 } else { 2000 };
-    let xs = random(n_sym, 32, 9);
+    let d_sym = 64;
+    let xs = random(n_sym, d_sym, 9);
     let serial_mean = b
-        .bench(&format!("gram_sym_serial/n{n_sym}"), || {
-            kernel.gram_sym_serial(&xs).rows()
-        })
+        .bench_meta(
+            &format!("gram_sym_serial/n{n_sym}"),
+            BenchMeta::new("gram_sym_serial", n_sym, n_sym, d_sym, 1),
+            n_sym as f64,
+            || kernel.gram_sym_serial(&xs).rows(),
+        )
         .mean_s;
+    let mut speedup_1t = 0.0;
     let mut speedup_4t = 0.0;
-    for &t in &[2usize, 4, 8] {
+    for &t in &[1usize, 2, 4, 8] {
         parallel::set_threads(t);
         let mean = b
-            .bench(&format!("gram_sym_par/t{t}/n{n_sym}"), || {
-                kernel.gram_sym(&xs).rows()
-            })
+            .bench_meta(
+                &format!("gram_sym/t{t}/n{n_sym}"),
+                BenchMeta::new("gram_sym", n_sym, n_sym, d_sym, t),
+                n_sym as f64,
+                || kernel.gram_sym(&xs).rows(),
+            )
             .mean_s;
+        if t == 1 {
+            speedup_1t = serial_mean / mean;
+        }
         if t == 4 {
             speedup_4t = serial_mean / mean;
         }
@@ -74,11 +130,12 @@ fn main() {
         .unwrap()
         .max_abs();
     println!(
-        "# gram_sym n={n_sym}: parallel(4t) speedup {speedup_4t:.2}x vs \
-         serial; max |par - serial| = {dev:.3e}"
+        "# gram_sym n={n_sym} d={d_sym}: norm-trick GEMM speedup \
+         {speedup_1t:.2}x (1 thread) / {speedup_4t:.2}x (4 threads) vs \
+         naive serial; max |fast - serial| = {dev:.3e}"
     );
 
-    // Native gram.
+    // Native gram (asymmetric norm-trick path, through the backend).
     let kernel = Kernel::gaussian(1.0);
     for &(n, m, d) in if quick {
         &[(256usize, 128usize, 32usize)][..]
@@ -87,9 +144,10 @@ fn main() {
     } {
         let x = random(n, d, 2);
         let y = random(m, d, 3);
-        let mut native = NativeBackend;
-        b.bench_throughput(
+        let mut native = NativeBackend::new();
+        b.bench_meta(
             &format!("gram_native/{n}x{m}x{d}"),
+            BenchMeta::new("gram", n, m, d, 0),
             (n * m) as f64,
             || native.gram(&x, &y, &kernel).unwrap().rows(),
         );
@@ -140,19 +198,25 @@ fn main() {
     let ds = gaussian_mixture_2d(400, 3, 0.4, 6);
     let model = fit_kpca(&ds.x, &kernel, 4).unwrap();
 
-    // Batched projection through the fused parallel path, 1 thread vs
+    // Batched projection through the fused norm-trick path, 1 thread vs
     // auto.
     parallel::set_threads(1);
     let tb_serial = b
-        .bench_throughput("transform_batch/t1/400x400", 400.0, || {
-            model.transform_batch(&ds.x).rows()
-        })
+        .bench_meta(
+            "transform_batch/t1/400x400",
+            BenchMeta::new("embed", 400, 400, 2, 1),
+            400.0,
+            || model.transform_batch(&ds.x).rows(),
+        )
         .mean_s;
     parallel::set_threads(0);
     let tb_auto = b
-        .bench_throughput("transform_batch/auto/400x400", 400.0, || {
-            model.transform_batch(&ds.x).rows()
-        })
+        .bench_meta(
+            "transform_batch/auto/400x400",
+            BenchMeta::new("embed", 400, 400, 2, 0),
+            400.0,
+            || model.transform_batch(&ds.x).rows(),
+        )
         .mean_s;
     println!(
         "# transform_batch 400x400: auto-thread speedup {:.2}x",
@@ -167,9 +231,20 @@ fn main() {
     .unwrap();
     let h = svc.handle();
     let probe = ds.x.select_rows(&(0..16).collect::<Vec<_>>());
-    b.bench_throughput("service_roundtrip/16rows", 16.0, || {
-        h.embed(probe.clone()).unwrap().rows()
-    });
+    b.bench_meta(
+        "service_roundtrip/16rows",
+        BenchMeta::new("service", 16, 400, 2, 0),
+        16.0,
+        || h.embed(probe.clone()).unwrap().rows(),
+    );
     drop(svc);
     b.write_csv(std::path::Path::new("bench_micro.csv")).ok();
+    // Machine-readable artifact at the repo root (the bench runs with
+    // the crate dir as cwd; the manifest dir pins it regardless).
+    let json_path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_MICRO.json");
+    match b.write_json(&json_path) {
+        Ok(()) => println!("# wrote {}", json_path.display()),
+        Err(e) => println!("# could not write BENCH_MICRO.json: {e}"),
+    }
 }

@@ -11,8 +11,14 @@
 //!
 //! Run: `cargo bench --bench bench_serving`
 //! (quick: `RSKPCA_BENCH_QUICK=1 cargo bench --bench bench_serving`)
+//!
+//! Besides stdout and `bench_serving.csv`, the run emits the
+//! machine-readable `BENCH_SERVING.json` at the repo root (model, op,
+//! centers, http workers, rows/s, latency percentiles) so serving perf
+//! is tracked across PRs.
 
 use rskpca::bench::quick_mode;
+use rskpca::ser::Json;
 use rskpca::config::{ServerConfig, ServiceConfig};
 use rskpca::coordinator::EmbeddingService;
 use rskpca::data::gaussian_mixture_2d;
@@ -43,7 +49,7 @@ fn grid_points(m: usize, n: usize, seed: u64) -> Matrix {
 }
 
 fn native() -> BackendFactory {
-    Box::new(|| Ok(Box::new(NativeBackend)))
+    Box::new(|| Ok(Box::new(NativeBackend::new())))
 }
 
 fn main() {
@@ -80,6 +86,8 @@ fn main() {
     );
     // (model name, workers, rows/s) for the speedup summary.
     let mut results: Vec<(String, usize, f64)> = Vec::new();
+    // Machine-readable rows for BENCH_SERVING.json.
+    let mut json_rows: Vec<Json> = Vec::new();
 
     for (name, model) in &models {
         for &workers in &[1usize, 4] {
@@ -131,6 +139,42 @@ fn main() {
                 report.errors
             ));
             results.push((name.clone(), workers, report.rows_per_s()));
+            json_rows.push(
+                Json::obj()
+                    .with("name", Json::Str(label.clone()))
+                    .with("op", Json::Str("serving".into()))
+                    .with("model", Json::Str(name.clone()))
+                    .with(
+                        "n",
+                        Json::Num(
+                            (clients * requests_per_client
+                                * rows_per_request)
+                                as f64,
+                        ),
+                    )
+                    .with("m", Json::Num(model.n_retained() as f64))
+                    .with("d", Json::Num(2.0))
+                    .with("threads", Json::Num(workers as f64))
+                    .with(
+                        "rows_per_s",
+                        Json::Num(report.rows_per_s()),
+                    )
+                    .with(
+                        "p50_us",
+                        Json::Num(report.latency_us.percentile(50.0)),
+                    )
+                    .with(
+                        "p95_us",
+                        Json::Num(report.latency_us.percentile(95.0)),
+                    )
+                    .with("p99_us", Json::Num(report.latency_us.p99()))
+                    .with(
+                        "ok",
+                        Json::Num(report.requests_ok as f64),
+                    )
+                    .with("rejected", Json::Num(report.rejected as f64))
+                    .with("errors", Json::Num(report.errors as f64)),
+            );
             server.shutdown();
             svc.shutdown();
         }
@@ -156,5 +200,12 @@ fn main() {
     }
     std::fs::write("bench_serving.csv", csv)
         .expect("write bench_serving.csv");
-    println!("\nwrote bench_serving.csv");
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../BENCH_SERVING.json");
+    std::fs::write(&json_path, Json::Arr(json_rows).to_string())
+        .expect("write BENCH_SERVING.json");
+    println!(
+        "\nwrote bench_serving.csv and {}",
+        json_path.display()
+    );
 }

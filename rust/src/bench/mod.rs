@@ -13,6 +13,36 @@
 use std::time::Instant;
 
 use crate::metrics::Histogram;
+use crate::ser::Json;
+
+/// Structured dimensions of one benchmark row, carried into the
+/// machine-readable `BENCH_*.json` artifacts so the perf trajectory can
+/// be tracked across PRs instead of scraped from stdout.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BenchMeta {
+    /// Operation family (`gram_sym`, `gemm`, `embed`, `serving`, ...).
+    pub op: &'static str,
+    /// Primary problem size (rows / n).
+    pub n: usize,
+    /// Secondary size (columns / centers); 0 when not applicable.
+    pub m: usize,
+    /// Feature dimension; 0 when not applicable.
+    pub d: usize,
+    /// Compute threads the row ran with (0 = auto).
+    pub threads: usize,
+}
+
+impl BenchMeta {
+    pub fn new(
+        op: &'static str,
+        n: usize,
+        m: usize,
+        d: usize,
+        threads: usize,
+    ) -> Self {
+        BenchMeta { op, n, m, d, threads }
+    }
+}
 
 /// One benchmark's collected timings.
 #[derive(Clone, Debug)]
@@ -25,6 +55,8 @@ pub struct BenchResult {
     pub min_s: f64,
     /// Optional items-per-iteration for throughput reporting.
     pub items_per_iter: Option<f64>,
+    /// Structured dimensions for the JSON artifact (None = untagged).
+    pub meta: Option<BenchMeta>,
 }
 
 impl BenchResult {
@@ -61,6 +93,29 @@ impl BenchResult {
                 .map(|i| format!("{:.3}", i / self.mean_s))
                 .unwrap_or_default()
         )
+    }
+
+    /// JSON object for the machine-readable artifact: op/n/m/d/threads
+    /// from the meta tag plus ns/op and rows/s.
+    pub fn json(&self) -> Json {
+        let meta = self.meta.unwrap_or_default();
+        let mut obj = Json::obj()
+            .with("name", Json::Str(self.name.clone()))
+            .with("op", Json::Str(meta.op.to_string()))
+            .with("n", Json::Num(meta.n as f64))
+            .with("m", Json::Num(meta.m as f64))
+            .with("d", Json::Num(meta.d as f64))
+            .with("threads", Json::Num(meta.threads as f64))
+            .with("iters", Json::Num(self.iters as f64))
+            .with("ns_per_op", Json::Num(self.mean_s * 1e9))
+            .with("p50_ns", Json::Num(self.p50_s * 1e9))
+            .with("p95_ns", Json::Num(self.p95_s * 1e9));
+        obj = match self.items_per_iter {
+            Some(items) => obj
+                .with("rows_per_s", Json::Num(items / self.mean_s)),
+            None => obj.with("rows_per_s", Json::Null),
+        };
+        obj
     }
 }
 
@@ -110,6 +165,22 @@ impl Bencher {
         self.bench_with_items(name, Some(items_per_iter), &mut f)
     }
 
+    /// Benchmark with a structured [`BenchMeta`] tag (op, n/m/d,
+    /// threads) and a throughput annotation — the rows the JSON
+    /// artifacts are built from.
+    pub fn bench_meta<T>(
+        &mut self,
+        name: &str,
+        meta: BenchMeta,
+        items_per_iter: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_items(name, Some(items_per_iter), &mut f);
+        let last = self.results.last_mut().unwrap();
+        last.meta = Some(meta);
+        self.results.last().unwrap()
+    }
+
     fn bench_with_items<T>(
         &mut self,
         name: &str,
@@ -137,6 +208,7 @@ impl Bencher {
             p95_s: hist.percentile(95.0),
             min_s: hist.min(),
             items_per_iter,
+            meta: None,
         };
         println!("{}", result.row());
         self.results.push(result);
@@ -152,6 +224,14 @@ impl Bencher {
             writeln!(f, "{}", r.csv())?;
         }
         Ok(())
+    }
+
+    /// Write all results as a machine-readable JSON array — the
+    /// `BENCH_*.json` artifacts tracked at the repo root so the perf
+    /// trajectory survives across PRs.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let rows: Vec<Json> = self.results.iter().map(|r| r.json()).collect();
+        std::fs::write(path, Json::Arr(rows).to_string())
     }
 }
 
@@ -209,6 +289,32 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("name,iters"));
         assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn json_dump_round_trips_meta() {
+        let mut b = Bencher::quick();
+        b.bench_meta(
+            "gram_sym/t4/n2000",
+            BenchMeta::new("gram_sym", 2000, 2000, 64, 4),
+            2000.0,
+            || 7,
+        );
+        b.bench("untagged", || 1);
+        let path = std::env::temp_dir().join("rskpca_bench_test.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::ser::parse(&text).unwrap();
+        let rows = v.as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].req_str("op").unwrap(), "gram_sym");
+        assert_eq!(rows[0].req_usize("n").unwrap(), 2000);
+        assert_eq!(rows[0].req_usize("d").unwrap(), 64);
+        assert_eq!(rows[0].req_usize("threads").unwrap(), 4);
+        assert!(rows[0].req_f64("ns_per_op").unwrap() > 0.0);
+        assert!(rows[0].req_f64("rows_per_s").unwrap() > 0.0);
+        assert_eq!(rows[1].req_str("op").unwrap(), "");
         std::fs::remove_file(&path).ok();
     }
 }

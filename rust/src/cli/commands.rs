@@ -391,6 +391,134 @@ pub fn loadgen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `rskpca bench gemm [--quick] [--json] [--sizes N,N,..] [--threads N]`
+/// — effective GFLOP/s for the packed GEMM and the distance-free
+/// symmetric Gram at n ∈ {512, 2048, 8192} (quick: 512 only), so
+/// hardware-roofline regressions are visible straight from the CLI.
+///
+/// Conventions: GEMM is square (`C = A·B`, 2n³ flops); Gram is
+/// `gram_sym` on `n x 64` data counted at the full-cross-product cost
+/// `2n²d` ("effective" — the engine computes roughly half of that by
+/// exploiting symmetry, so beating the GEMM number here is expected).
+/// `--json` writes `BENCH_GEMM.json` at the repo root (`--out`
+/// overrides the path).
+pub fn bench(args: &Args) -> Result<()> {
+    use crate::ser::Json;
+    use std::time::Instant;
+
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("gemm");
+    if what != "gemm" {
+        return Err(Error::Parse(format!(
+            "bench: unknown suite '{what}' (expected 'gemm')"
+        )));
+    }
+    apply_threads(args, 0)?;
+    let quick = args.has("quick");
+    let sizes: Vec<usize> = match args.flag("sizes") {
+        Some(s) => s
+            .split(',')
+            .map(|v| {
+                v.trim().parse().map_err(|_| {
+                    Error::Parse(format!("--sizes: bad integer '{v}'"))
+                })
+            })
+            .collect::<Result<Vec<usize>>>()?,
+        None if quick => vec![512],
+        None => vec![512, 2048, 8192],
+    };
+    let d = 64usize;
+    let threads = crate::parallel::resolve_threads(0);
+    let target_s = if quick { 0.3 } else { 1.0 };
+
+    // Warmup + calibration, then best-of timing (the roofline-relevant
+    // number is the best achieved rate, not the mean).
+    fn time_best(target_s: f64, f: &mut dyn FnMut()) -> f64 {
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((target_s / once) as usize).clamp(1, 10);
+        let mut best = once;
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        best
+    }
+
+    println!(
+        "bench gemm: effective GFLOP/s at {threads} compute thread(s)\n"
+    );
+    let kernel = Kernel::gaussian(1.0);
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in &sizes {
+        // Square GEMM: 2n³ flops.  n=8192 holds three 512 MiB
+        // operands — run it on a machine with a few GiB free.
+        let a = crate::testutil::random_matrix(n, n, 101 + n as u64);
+        let b = crate::testutil::random_matrix(n, n, 202 + n as u64);
+        let secs = time_best(target_s, &mut || {
+            std::hint::black_box(a.matmul(&b).unwrap().rows());
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / secs / 1e9;
+        println!(
+            "{:<18} {secs:>9.3}s   {gflops:>8.2} GFLOP/s",
+            format!("gemm/n{n}")
+        );
+        rows.push(
+            Json::obj()
+                .with("name", Json::Str(format!("gemm/n{n}")))
+                .with("op", Json::Str("gemm".into()))
+                .with("n", Json::Num(n as f64))
+                .with("m", Json::Num(n as f64))
+                .with("d", Json::Num(n as f64))
+                .with("threads", Json::Num(threads as f64))
+                .with("seconds", Json::Num(secs))
+                .with("gflops", Json::Num(gflops)),
+        );
+        drop((a, b));
+
+        // Distance-free symmetric Gram on n x 64 data, counted at the
+        // full-cross-product cost 2n²d.
+        let x = crate::testutil::random_matrix(n, d, 303 + n as u64);
+        let secs = time_best(target_s, &mut || {
+            std::hint::black_box(kernel.gram_sym(&x).rows());
+        });
+        let gflops =
+            2.0 * (n as f64) * (n as f64) * (d as f64) / secs / 1e9;
+        println!(
+            "{:<18} {secs:>9.3}s   {gflops:>8.2} GFLOP/s (effective)",
+            format!("gram_sym/n{n}xd{d}")
+        );
+        rows.push(
+            Json::obj()
+                .with("name", Json::Str(format!("gram_sym/n{n}")))
+                .with("op", Json::Str("gram_sym".into()))
+                .with("n", Json::Num(n as f64))
+                .with("m", Json::Num(n as f64))
+                .with("d", Json::Num(d as f64))
+                .with("threads", Json::Num(threads as f64))
+                .with("seconds", Json::Num(secs))
+                .with("gflops", Json::Num(gflops)),
+        );
+    }
+    if args.has("json") {
+        let default_out = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../BENCH_GEMM.json")
+            .to_string_lossy()
+            .into_owned();
+        let out = args.flag_or("out", &default_out);
+        std::fs::write(&out, Json::Arr(rows).to_string()).map_err(
+            |e| Error::Io(format!("write {out}: {e}")),
+        )?;
+        println!("\nwrote {out}");
+    }
+    Ok(())
+}
+
 /// `rskpca gen --dataset NAME --out FILE [--seed N]`
 pub fn gen(args: &Args) -> Result<()> {
     let name = req_flag(args, "dataset")?;

@@ -14,6 +14,8 @@
 //! rskpca loadgen [--target HOST:PORT] [--clients N] [--requests N]
 //!                [--rows-per-request N] [--dim D] [--seed N]
 //!                [--wait-ms MS]
+//! rskpca bench   gemm [--quick] [--json] [--sizes N,N,..] [--threads N]
+//!                [--out FILE]
 //! rskpca gen     --dataset NAME --out FILE [--seed N]
 //! rskpca info    [--artifacts DIR]
 //! ```
@@ -113,6 +115,11 @@ USAGE:
       closed-loop load generator against a running serve instance;
       reports rows/s and latency p50/p95/p99 (row dim auto-discovered
       via GET /models unless --dim is given)
+  rskpca bench  gemm [--quick] [--json] [--sizes N,N,..] [--out FILE]
+      effective GFLOP/s for the packed GEMM and the distance-free
+      symmetric Gram at n in {512, 2048, 8192} (quick: 512 only);
+      --json writes BENCH_GEMM.json at the repo root for cross-PR
+      roofline tracking
   rskpca gen    --dataset german|pendigits|usps|yale|gmm2d|swiss_roll
                 --out FILE [--seed N]
   rskpca info   [--artifacts DIR]
@@ -149,6 +156,7 @@ pub fn dispatch(raw: &[String]) -> Result<()> {
         "embed" => commands::embed(&args),
         "serve" => commands::serve(&args),
         "loadgen" => commands::loadgen(&args),
+        "bench" => commands::bench(&args),
         "gen" => commands::gen(&args),
         "info" => commands::info(&args),
         other => Err(Error::Parse(format!("unknown command '{other}'"))),
@@ -190,6 +198,32 @@ mod tests {
         assert!(dispatch(&to_vec(&["help"])).is_ok());
         assert!(dispatch(&to_vec(&[])).is_ok());
         assert!(dispatch(&to_vec(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn bench_gemm_writes_json() {
+        let out = std::env::temp_dir().join("rskpca_bench_gemm.json");
+        dispatch(&to_vec(&[
+            "bench",
+            "gemm",
+            "--quick",
+            "--json",
+            "--sizes",
+            "64",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let v = crate::ser::parse(&text).unwrap();
+        let rows = v.as_arr().unwrap();
+        assert_eq!(rows.len(), 2); // gemm + gram_sym at one size
+        assert_eq!(rows[0].req_str("op").unwrap(), "gemm");
+        assert!(rows[0].req_f64("gflops").unwrap() > 0.0);
+        assert_eq!(rows[1].req_str("op").unwrap(), "gram_sym");
+        std::fs::remove_file(&out).ok();
+        // Unknown suites are rejected.
+        assert!(dispatch(&to_vec(&["bench", "qr"])).is_err());
     }
 
     #[test]

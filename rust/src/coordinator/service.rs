@@ -472,7 +472,7 @@ mod tests {
     }
 
     fn native() -> crate::runtime::BackendFactory {
-        Box::new(|| Ok(Box::new(NativeBackend)))
+        Box::new(|| Ok(Box::new(NativeBackend::new())))
     }
 
     /// A backend that sleeps per call — for backpressure tests.
@@ -593,7 +593,7 @@ mod tests {
             model,
             Box::new(|| {
                 Ok(Box::new(SlowBackend {
-                    inner: NativeBackend,
+                    inner: NativeBackend::new(),
                     delay: Duration::from_millis(50),
                 }) as Box<dyn GramBackend>)
             }),
@@ -766,7 +766,7 @@ mod tests {
             Box::new(|| {
                 Ok(Box::new(FailAfterWarmup {
                     calls: 0,
-                    inner: NativeBackend,
+                    inner: NativeBackend::new(),
                 }))
             }),
             ServiceConfig {

@@ -9,16 +9,46 @@
 //! the PJRT artifacts produced by the Pallas kernels; `runtime::Engine`
 //! picks whichever is configured and tests assert they agree.
 //!
-//! Gram construction is cache-blocked and, above a work threshold, fans
-//! out across [`crate::parallel`] row bands: the symmetric sweep computes
-//! only the upper triangle (bands balanced by row cost `n - i`) and
-//! mirrors it in a tiled serial pass, so the parallel result is bitwise
-//! identical to [`Kernel::gram_sym_serial`] at any thread count.
+//! ## The distance-free (norm-trick) Gram path
+//!
+//! Batch Gram construction never computes per-pair distances.  Using
+//! `||x - y||² = ||x||² + ||y||² - 2·x·y`, the whole distance matrix
+//! collapses to one cross-product GEMM plus a cheap epilogue:
+//!
+//! 1. row squared norms of each operand, computed once (`O((n+m)d)`);
+//! 2. `G = X · Yᵀ` through the packed micro-kernel GEMM
+//!    (`linalg::gemm` — for the symmetric form only diagonal-crossing
+//!    tiles are computed and the strict lower triangle is mirrored);
+//! 3. a fused epilogue pass rewrites each entry in place:
+//!    `K[i,j] = phi(max(nx_i + ny_j - 2·G[i,j], 0))` — the `max(·, 0)`
+//!    clamps the tiny negative distances floating-point cancellation
+//!    can produce for near-identical rows, so Gaussian / Laplacian /
+//!    Cauchy stay exact at (and near) the diagonal.
+//!
+//! This restructures `O(n·m·d)` latency-bound distance loops into a
+//! register-blocked GEMM plus `O(n·m)` profile evaluations — the same
+//! flop reshaping that makes Nyström-style kernel approximation
+//! practical at scale.  The scalar pair-by-pair `*_serial` paths are
+//! retained as deliberately naive cross-check references; property
+//! tests pin the two to <= 1e-10 agreement, while the batch path itself
+//! is bitwise identical at any thread count (strict k-order
+//! accumulation everywhere).
+//!
+//! All batch paths run through a reusable [`Scratch`] workspace (row
+//! norms, packed GEMM panels, Gram tiles): `gram` / `gram_sym` /
+//! `embed_rows` use a thread-local scratch, and the `*_with` variants
+//! let long-lived owners — the coordinator's batch worker via
+//! [`crate::runtime::NativeBackend`] — reuse one workspace so the
+//! steady-state serving hot loop reuses every compute buffer without
+//! growth (per-request heap traffic: the response buffer plus
+//! O(threads) fork/join bookkeeping, nothing scaling with row count).
 
+use std::cell::RefCell;
 use std::ops::Range;
 
 use crate::error::{Error, Result};
-use crate::linalg::{sq_euclidean, Matrix};
+use crate::linalg::gemm::{self, BSrc};
+use crate::linalg::{dot4, sq_euclidean, Matrix};
 use crate::parallel;
 
 /// Minimum output elements before the Gram paths fan out to threads;
@@ -30,13 +60,110 @@ const GRAM_PAR_MIN: usize = 4096;
 /// `linalg`'s threshold, so small serve batches never pay spawn latency.
 const EMBED_PAR_MIN_FLOPS: usize = 1 << 16;
 
-/// Column tile width of the cache-blocked Gram inner loops: one tile of
-/// `y` rows stays hot in L1/L2 while a band of `x` rows streams past.
-const GRAM_BLOCK: usize = 64;
+/// Row-block height of the fused projection: one Gram tile
+/// (`EMBED_TILE_ROWS x m`) is materialized per block, profiled in
+/// place, and immediately folded into the coefficient GEMM — the full
+/// `n x m` Gram never exists.
+const EMBED_TILE_ROWS: usize = 64;
 
 /// Tile edge for the symmetric-mirror pass (keeps the strided
 /// upper-triangle reads cache-resident while writing the lower triangle).
 const MIRROR_TILE: usize = 64;
+
+/// Grow `buf` to at least `len`, counting the growth event (the
+/// zero-allocation contract is "no growth after warmup").
+fn ensure(buf: &mut Vec<f64>, len: usize, grows: &mut u64) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+        *grows += 1;
+    }
+}
+
+/// Reusable workspace for the distance-free Gram and fused projection
+/// paths: row norms, packed GEMM panels, and per-band Gram tiles, all
+/// grown to their high-water mark once and reused allocation-free
+/// afterwards.
+///
+/// One `Scratch` is owned per long-lived compute thread — the
+/// coordinator's batch worker holds one inside its
+/// [`crate::runtime::NativeBackend`], so every `POST /embed` batch
+/// reuses the same buffers; ad-hoc callers go through the thread-local
+/// scratch behind [`Kernel::gram`] / [`Kernel::embed_rows`].
+#[derive(Default, Debug)]
+pub struct Scratch {
+    x_norms: Vec<f64>,
+    y_norms: Vec<f64>,
+    gemm: gemm::GemmScratch,
+    bands: Vec<BandScratch>,
+    grows: u64,
+}
+
+/// Per-compute-thread slice of the workspace used by the fused
+/// projection (each band worker owns one: a Gram tile plus GEMM packing
+/// buffers).
+#[derive(Default, Debug)]
+struct BandScratch {
+    tile: Vec<f64>,
+    gemm: gemm::GemmScratch,
+    grows: u64,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total buffer-growth events across every sub-buffer.  After a
+    /// warmup call at the serving shapes this must stay constant —
+    /// the zero-allocation hot-loop contract the serving tests assert.
+    pub fn grow_events(&self) -> u64 {
+        self.grows
+            + self.gemm.grow_events()
+            + self
+                .bands
+                .iter()
+                .map(|b| b.grows + b.gemm.grow_events())
+                .sum::<u64>()
+    }
+}
+
+thread_local! {
+    static THREAD_SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Run `f` with this thread's reusable kernel [`Scratch`].
+fn with_thread_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    THREAD_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Row squared norms `||x_i||²` via the 4-wide unrolled dot.
+fn row_sq_norms(x: &Matrix, out: &mut Vec<f64>, grows: &mut u64) {
+    let n = x.rows();
+    ensure(out, n, grows);
+    for (i, slot) in out[..n].iter_mut().enumerate() {
+        let r = x.row(i);
+        *slot = dot4(r, r);
+    }
+}
+
+/// Apply the radial profile to a norm-trick cross-product entry:
+/// `phi(max(nx + ny - 2g, 0))`, with `gamma` hoisted out of the loop.
+/// Arithmetic matches [`Kernel::eval_sq_dist`] exactly for each family.
+#[inline]
+fn profile_from_cross(
+    kind: KernelKind,
+    gamma: f64,
+    nx: f64,
+    ny: f64,
+    g: f64,
+) -> f64 {
+    let d2 = (nx + ny - 2.0 * g).max(0.0);
+    match kind {
+        KernelKind::Gaussian => (-gamma * d2).exp(),
+        KernelKind::Laplacian => (-gamma * d2.sqrt()).exp(),
+        KernelKind::Cauchy => 1.0 / (1.0 + gamma * d2),
+    }
+}
 
 /// The radial profile families supported end to end (matching the L1
 /// Pallas kernels' static `kernel` parameter).
@@ -182,79 +309,129 @@ impl Kernel {
         self.kappa() - self.phi(ell.powf(-self.p()))
     }
 
-    /// Native Gram matrix K[i,j] = k(x_i, y_j): cache-blocked and, above
-    /// a work threshold, parallel over row bands.  Bitwise identical to
-    /// [`Kernel::gram_serial`] at any thread count (every element is the
-    /// same `eval` call; only the write order changes).
+    /// Deliberately naive scalar evaluation (plain, non-unrolled
+    /// distance loop) backing the serial reference Gram paths — the
+    /// fixed point the norm-trick engine is property-tested against.
+    fn eval_ref(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = 0.0;
+        for (a, b) in x.iter().zip(y) {
+            let d = a - b;
+            acc += d * d;
+        }
+        self.eval_sq_dist(acc)
+    }
+
+    /// Native Gram matrix K[i,j] = k(x_i, y_j) through the distance-free
+    /// norm-trick path (row norms once, cross-product GEMM, fused
+    /// profile epilogue), parallel above a work threshold.  Results are
+    /// bitwise identical at any thread count and agree with the naive
+    /// [`Kernel::gram_serial`] reference to <= 1e-10.
     pub fn gram(&self, x: &Matrix, y: &Matrix) -> Matrix {
+        with_thread_scratch(|s| self.gram_with(s, x, y))
+    }
+
+    /// [`Kernel::gram`] with a caller-owned [`Scratch`] (no buffer
+    /// growth once warmed at the call shapes).
+    pub fn gram_with(
+        &self,
+        s: &mut Scratch,
+        x: &Matrix,
+        y: &Matrix,
+    ) -> Matrix {
         assert_eq!(x.cols(), y.cols(), "gram: feature dims differ");
-        let (n, m) = (x.rows(), y.rows());
+        let (n, m, d) = (x.rows(), y.rows(), x.cols());
+        let mut out = Matrix::zeros(n, m);
+        if n == 0 || m == 0 {
+            return out;
+        }
+        row_sq_norms(x, &mut s.x_norms, &mut s.grows);
+        row_sq_norms(y, &mut s.y_norms, &mut s.grows);
         let threads =
             parallel::threads_for_work(n.saturating_mul(m), GRAM_PAR_MIN);
-        if threads <= 1 {
-            return self.gram_serial(x, y);
-        }
-        let mut out = Matrix::zeros(n, m);
-        let ranges = parallel::even_ranges(n, threads);
-        parallel::par_row_bands_mut(
+        gemm::gemm_into(
+            out.as_mut_slice(),
+            n,
+            m,
+            d,
+            x.as_slice(),
+            BSrc::Trans(y.as_slice()),
+            false,
+            threads,
+            &mut s.gemm,
+        );
+        let xn = &s.x_norms[..n];
+        let yn = &s.y_norms[..m];
+        let (kind, gamma) = (self.kind, self.gamma());
+        parallel::par_fill_rows(
             out.as_mut_slice(),
             m,
-            &ranges,
-            |rows, band| self.fill_gram_band(x, y, rows, band),
+            threads,
+            |i, row| {
+                let nx = xn[i];
+                for (v, &ny) in row.iter_mut().zip(yn) {
+                    *v = profile_from_cross(kind, gamma, nx, ny, *v);
+                }
+            },
         );
         out
     }
 
-    /// Single-threaded reference Gram path (also the small-input fast
-    /// path); kept public so benches and tests can compare against the
-    /// parallel engine.
+    /// Naive single-threaded pair-by-pair Gram — the cross-check
+    /// reference for [`Kernel::gram`]; kept public so benches and tests
+    /// can compare the norm-trick engine against it.
     pub fn gram_serial(&self, x: &Matrix, y: &Matrix) -> Matrix {
         assert_eq!(x.cols(), y.cols(), "gram: feature dims differ");
         let (n, m) = (x.rows(), y.rows());
         let mut out = Matrix::zeros(n, m);
-        if n > 0 && m > 0 {
-            self.fill_gram_band(x, y, 0..n, out.as_mut_slice());
+        for i in 0..n {
+            let xi = x.row(i);
+            let row = out.row_mut(i);
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = self.eval_ref(xi, y.row(j));
+            }
         }
         out
     }
 
-    /// Cache-blocked fill of the Gram rows `rows` of K(x, y) into `band`
-    /// (the row-major sub-buffer holding exactly those rows).
-    fn fill_gram_band(
-        &self,
-        x: &Matrix,
-        y: &Matrix,
-        rows: Range<usize>,
-        band: &mut [f64],
-    ) {
-        let m = y.rows();
-        if m == 0 {
-            return;
-        }
-        for jb in (0..m).step_by(GRAM_BLOCK) {
-            let jend = (jb + GRAM_BLOCK).min(m);
-            for (k, row) in band.chunks_mut(m).enumerate() {
-                let xi = x.row(rows.start + k);
-                for j in jb..jend {
-                    row[j] = self.eval(xi, y.row(j));
-                }
-            }
-        }
+    /// Symmetric Gram matrix K[i,j] = k(x_i, x_j) through the
+    /// distance-free path, exploiting symmetry end to end: row norms
+    /// once, cross-product GEMM over diagonal-crossing tiles only, the
+    /// profile epilogue on the diagonal + strict upper triangle (row
+    /// bands balanced by the triangular cost `n - i`), and a tiled
+    /// mirror pass for the lower triangle.  The diagonal is pinned to
+    /// `kappa` exactly (the norm-trick cancellation clamp never lets a
+    /// self-distance go negative, but the diagonal never even pays the
+    /// rounding).  Bitwise identical at any thread count; agrees with
+    /// the naive [`Kernel::gram_sym_serial`] reference to <= 1e-10.
+    pub fn gram_sym(&self, x: &Matrix) -> Matrix {
+        with_thread_scratch(|s| self.gram_sym_with(s, x))
     }
 
-    /// Symmetric Gram matrix K[i,j] = k(x_i, x_j), exploiting symmetry:
-    /// the strict upper triangle is computed once (in parallel above a
-    /// work threshold, row bands balanced by the triangular cost `n - i`)
-    /// and mirrored in a tiled pass.  Bitwise identical to
-    /// [`Kernel::gram_sym_serial`] at any thread count.
-    pub fn gram_sym(&self, x: &Matrix) -> Matrix {
-        let n = x.rows();
+    /// [`Kernel::gram_sym`] with a caller-owned [`Scratch`].
+    pub fn gram_sym_with(&self, s: &mut Scratch, x: &Matrix) -> Matrix {
+        let (n, d) = (x.rows(), x.cols());
+        let mut out = Matrix::zeros(n, n);
+        if n == 0 {
+            return out;
+        }
+        row_sq_norms(x, &mut s.x_norms, &mut s.grows);
         let threads =
             parallel::threads_for_work(n.saturating_mul(n), GRAM_PAR_MIN);
-        if threads <= 1 {
-            return self.gram_sym_serial(x);
-        }
-        let mut out = Matrix::zeros(n, n);
+        gemm::gemm_into(
+            out.as_mut_slice(),
+            n,
+            n,
+            d,
+            x.as_slice(),
+            BSrc::Trans(x.as_slice()),
+            true,
+            threads,
+            &mut s.gemm,
+        );
+        let xn = &s.x_norms[..n];
+        let (kind, gamma) = (self.kind, self.gamma());
+        let kappa = self.kappa();
         let ranges =
             parallel::weighted_ranges(n, threads, |i| (n - i) as f64);
         parallel::par_row_bands_mut(
@@ -264,17 +441,20 @@ impl Kernel {
             |rows, band| {
                 for (k, row) in band.chunks_mut(n).enumerate() {
                     let i = rows.start + k;
-                    row[i] = self.kappa();
-                    let xi = x.row(i);
+                    row[i] = kappa;
+                    let nx = xn[i];
                     for j in (i + 1)..n {
-                        row[j] = self.eval(xi, x.row(j));
+                        row[j] = profile_from_cross(
+                            kind, gamma, nx, xn[j], row[j],
+                        );
                     }
                 }
             },
         );
         // Mirror the strict upper triangle into the lower one, tiled so
-        // the strided column reads stay cache-resident.  Memory-bound and
-        // a small fraction of the kernel-evaluation cost.
+        // the strided column reads stay cache-resident.  This also
+        // overwrites whatever the skipped below-diagonal GEMM tiles left
+        // behind.  Memory-bound and a small fraction of the total cost.
         for bi in (0..n).step_by(MIRROR_TILE) {
             let iend = (bi + MIRROR_TILE).min(n);
             for bj in (0..=bi).step_by(MIRROR_TILE) {
@@ -290,15 +470,16 @@ impl Kernel {
         out
     }
 
-    /// Single-threaded reference for [`Kernel::gram_sym`]; kept public so
-    /// benches and tests can compare against the parallel engine.
+    /// Naive single-threaded reference for [`Kernel::gram_sym`]
+    /// (pair-by-pair scalar distances over the triangle); kept public so
+    /// benches and tests can compare the norm-trick engine against it.
     pub fn gram_sym_serial(&self, x: &Matrix) -> Matrix {
         let n = x.rows();
         let mut out = Matrix::zeros(n, n);
         for i in 0..n {
             out.set(i, i, self.kappa());
             for j in (i + 1)..n {
-                let v = self.eval(x.row(i), x.row(j));
+                let v = self.eval_ref(x.row(i), x.row(j));
                 out.set(i, j, v);
                 out.set(j, i, v);
             }
@@ -316,12 +497,34 @@ impl Kernel {
     /// Fused batched projection `K(x, centers) · coeffs` — the serve-path
     /// workhorse behind [`crate::kpca::EmbeddingModel::transform_batch`]
     /// and the native backend's batch executor.  Never materializes the
-    /// `n x m` Gram matrix; each output row accumulates over the centers
-    /// exactly like `transform_point`, and rows fan out across
-    /// [`crate::parallel`] bands above a work threshold (bitwise
-    /// identical results at any thread count).
+    /// `n x m` Gram matrix: each row block produces one distance-free
+    /// Gram tile (norm trick + packed GEMM), profiles it in place, and
+    /// immediately folds it into the coefficient GEMM.  Row bands fan
+    /// out across [`crate::parallel`] compute threads above a work
+    /// threshold, with bitwise identical results at any thread count;
+    /// against the scalar [`Kernel::kernel_row`] path agreement is to
+    /// rounding (<= 1e-10).
     pub fn embed_rows(
         &self,
+        x: &Matrix,
+        centers: &Matrix,
+        coeffs: &Matrix,
+    ) -> Result<Matrix> {
+        with_thread_scratch(|s| self.embed_rows_with(s, x, centers, coeffs))
+    }
+
+    /// [`Kernel::embed_rows`] with a caller-owned [`Scratch`] — the
+    /// allocation-free serving form: once warmed at the serving shapes,
+    /// every buffer the Gram/projection hot loop touches (norms,
+    /// packed panels, Gram tiles) is reused without growth (asserted
+    /// via [`Scratch::grow_events`] in `tests/parallel_consistency.rs`).
+    /// The only per-call heap traffic left is the returned output
+    /// matrix plus, when the batch clears the parallel threshold,
+    /// O(threads) fork/join bookkeeping — nothing scales with the row
+    /// count, and the `n x m` Gram is never materialized.
+    pub fn embed_rows_with(
+        &self,
+        s: &mut Scratch,
         x: &Matrix,
         centers: &Matrix,
         coeffs: &Matrix,
@@ -342,31 +545,132 @@ impl Kernel {
         }
         let (n, m, r) = (x.rows(), centers.rows(), coeffs.cols());
         let mut out = Matrix::zeros(n, r);
-        if n == 0 || r == 0 {
+        if n == 0 || r == 0 || m == 0 {
             return Ok(out);
         }
+        row_sq_norms(x, &mut s.x_norms, &mut s.grows);
+        row_sq_norms(centers, &mut s.y_norms, &mut s.grows);
         let work = n.saturating_mul(m).saturating_mul(x.cols().max(1));
         let threads =
             parallel::threads_for_work(work, EMBED_PAR_MIN_FLOPS);
-        parallel::par_fill_rows(
-            out.as_mut_slice(),
+        if s.bands.len() < threads {
+            s.bands.resize_with(threads, BandScratch::default);
+            s.grows += 1;
+        }
+        let ctx = EmbedCtx {
+            x,
+            centers,
+            coeffs,
+            xn: &s.x_norms[..n],
+            cn: &s.y_norms[..m],
+            kind: self.kind,
+            gamma: self.gamma(),
+            m,
             r,
-            threads,
-            |i, out_row| {
-                let xi = x.row(i);
-                for c in 0..m {
-                    let kv = self.eval(xi, centers.row(c));
-                    if kv == 0.0 {
-                        continue;
-                    }
-                    let crow = coeffs.row(c);
-                    for (o, &cv) in out_row.iter_mut().zip(crow) {
-                        *o += kv * cv;
-                    }
+            d: x.cols(),
+        };
+        let ranges = parallel::even_ranges(n, threads);
+        if ranges.len() == 1 {
+            embed_band(&ctx, 0..n, out.as_mut_slice(), &mut s.bands[0]);
+        } else {
+            // Split the output into disjoint row bands and hand each its
+            // own BandScratch before any thread starts.
+            let mut jobs: Vec<(Range<usize>, &mut [f64], &mut BandScratch)> =
+                Vec::with_capacity(ranges.len());
+            let mut out_rest: &mut [f64] = out.as_mut_slice();
+            let mut bands_rest: &mut [BandScratch] =
+                &mut s.bands[..ranges.len()];
+            for range in &ranges {
+                let (band_out, out_tail) =
+                    out_rest.split_at_mut(range.len() * r);
+                let (bs, bs_tail) = bands_rest.split_at_mut(1);
+                jobs.push((range.clone(), band_out, &mut bs[0]));
+                out_rest = out_tail;
+                bands_rest = bs_tail;
+            }
+            std::thread::scope(|scope| {
+                let ctx = &ctx;
+                let mut it = jobs.into_iter();
+                let head = it.next().expect("at least two bands");
+                let handles: Vec<_> = it
+                    .map(|(range, band_out, bs)| {
+                        scope.spawn(move || {
+                            embed_band(ctx, range, band_out, bs)
+                        })
+                    })
+                    .collect();
+                embed_band(ctx, head.0, head.1, head.2);
+                for h in handles {
+                    h.join().expect("embed worker panicked");
                 }
-            },
-        );
+            });
+        }
         Ok(out)
+    }
+}
+
+/// Shared read-only state for one fused-projection call.
+struct EmbedCtx<'a> {
+    x: &'a Matrix,
+    centers: &'a Matrix,
+    coeffs: &'a Matrix,
+    xn: &'a [f64],
+    cn: &'a [f64],
+    kind: KernelKind,
+    gamma: f64,
+    m: usize,
+    r: usize,
+    d: usize,
+}
+
+/// One band of the fused projection: for each `EMBED_TILE_ROWS`-row
+/// block, (1) Gram tile via the norm trick (cross-product GEMM +
+/// profile epilogue), (2) coefficient GEMM straight into the output
+/// band.  Serial GEMMs — the parallelism lives at the band level.
+fn embed_band(
+    ctx: &EmbedCtx<'_>,
+    rows: Range<usize>,
+    out_band: &mut [f64],
+    bs: &mut BandScratch,
+) {
+    let BandScratch { tile, gemm: gs, grows } = bs;
+    ensure(tile, EMBED_TILE_ROWS * ctx.m, grows);
+    let mut i0 = rows.start;
+    while i0 < rows.end {
+        let bl = (rows.end - i0).min(EMBED_TILE_ROWS);
+        let xa = &ctx.x.as_slice()[i0 * ctx.d..(i0 + bl) * ctx.d];
+        let t = &mut tile[..bl * ctx.m];
+        gemm::gemm_into(
+            t,
+            bl,
+            ctx.m,
+            ctx.d,
+            xa,
+            BSrc::Trans(ctx.centers.as_slice()),
+            false,
+            1,
+            gs,
+        );
+        for (k, row) in t.chunks_mut(ctx.m).enumerate() {
+            let nx = ctx.xn[i0 + k];
+            for (v, &nc) in row.iter_mut().zip(ctx.cn) {
+                *v = profile_from_cross(ctx.kind, ctx.gamma, nx, nc, *v);
+            }
+        }
+        let ob = &mut out_band
+            [(i0 - rows.start) * ctx.r..(i0 - rows.start + bl) * ctx.r];
+        gemm::gemm_into(
+            ob,
+            bl,
+            ctx.r,
+            ctx.m,
+            t,
+            BSrc::Normal(ctx.coeffs.as_slice()),
+            false,
+            1,
+            gs,
+        );
+        i0 += bl;
     }
 }
 
@@ -504,18 +808,117 @@ mod tests {
     use crate::testutil::random_matrix;
 
     #[test]
-    fn parallel_gram_paths_match_serial_reference() {
+    fn norm_trick_gram_matches_serial_reference() {
         // Sizes above GRAM_PAR_MIN so the banded path actually engages
-        // (at >= 2 available threads); equality must be exact.
+        // (at >= 2 available threads); the distance-free path must agree
+        // with the naive pair-by-pair reference to the 1e-10 contract.
         let x = random_matrix(90, 5, 11);
         let y = random_matrix(70, 5, 12);
         for k in [Kernel::gaussian(1.3), Kernel::laplacian(0.9),
                   Kernel::cauchy(2.1)] {
             let g = k.gram(&x, &y);
-            assert_eq!(g, k.gram_serial(&x, &y), "{:?}", k.kind);
+            let dev = g.sub(&k.gram_serial(&x, &y)).unwrap().max_abs();
+            assert!(dev <= 1e-10, "{:?}: gram dev {dev:e}", k.kind);
             let gs = k.gram_sym(&x);
-            assert_eq!(gs, k.gram_sym_serial(&x), "{:?}", k.kind);
+            let dev =
+                gs.sub(&k.gram_sym_serial(&x)).unwrap().max_abs();
+            assert!(dev <= 1e-10, "{:?}: gram_sym dev {dev:e}", k.kind);
+            // The symmetric path pins the diagonal to kappa exactly.
+            for i in 0..x.rows() {
+                assert_eq!(gs.get(i, i), k.kappa(), "{:?}", k.kind);
+            }
         }
+    }
+
+    #[test]
+    fn prop_sq_euclidean_matches_norm_trick_gram_entries() {
+        use crate::testutil::prop_check;
+        prop_check(
+            "sq_euclidean_vs_norm_trick",
+            30,
+            |g| {
+                let n = g.usize_in(2, 40);
+                let m = g.usize_in(2, 40);
+                let d = g.usize_in(1, 24);
+                (g.matrix(n, d), g.matrix(m, d), g.f64_in(0.4, 2.5))
+            },
+            |(x, y, sigma)| {
+                let k = Kernel::gaussian(*sigma);
+                let gram = k.gram(x, y);
+                for i in 0..x.rows() {
+                    for j in 0..y.rows() {
+                        // The unrolled scalar distance feeding `eval`
+                        // must agree with the distance-free entry.
+                        let via_scalar = k
+                            .eval_sq_dist(sq_euclidean(x.row(i), y.row(j)));
+                        let dev = (via_scalar - gram.get(i, j)).abs();
+                        if dev > 1e-10 {
+                            return Err(format!(
+                                "entry ({i},{j}): scalar {via_scalar} vs \
+                                 norm-trick {} (dev {dev:e})",
+                                gram.get(i, j)
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cancellation_clamp_keeps_duplicates_at_kappa() {
+        // Rows scaled far from the origin make the norm-trick
+        // cancellation worst-case; exact duplicates must never produce
+        // NaN (negative d2 under a sqrt) or values above kappa, and the
+        // duplicate pair must sit at the peak.  The Laplacian pays a
+        // sqrt amplification of the clamped residual near zero
+        // distance, hence its looser bound.
+        let mut x = random_matrix(8, 6, 21).scale(1e2);
+        let dup = x.row(3).to_vec();
+        x.row_mut(6).copy_from_slice(&dup);
+        for (k, tol) in [
+            (Kernel::gaussian(1.0), 1e-9),
+            (Kernel::laplacian(1.0), 1e-5),
+            (Kernel::cauchy(1.0), 1e-9),
+        ] {
+            let g = k.gram(&x, &x);
+            for i in 0..8 {
+                for j in 0..8 {
+                    let v = g.get(i, j);
+                    assert!(v.is_finite(), "{:?} ({i},{j})", k.kind);
+                    assert!(
+                        v <= k.kappa() + 1e-12,
+                        "{:?} ({i},{j}) = {v}",
+                        k.kind
+                    );
+                }
+            }
+            assert!(
+                (g.get(3, 6) - k.kappa()).abs() < tol,
+                "{:?}: duplicate pair {}",
+                k.kind,
+                g.get(3, 6)
+            );
+            let gs = k.gram_sym(&x);
+            assert!((gs.get(3, 6) - k.kappa()).abs() < tol);
+        }
+    }
+
+    #[test]
+    fn gram_with_reused_scratch_is_stable() {
+        let x = random_matrix(50, 7, 31);
+        let y = random_matrix(30, 7, 32);
+        let k = Kernel::gaussian(1.1);
+        let mut s = Scratch::new();
+        let g0 = k.gram_with(&mut s, &x, &y);
+        let gs0 = k.gram_sym_with(&mut s, &x);
+        let warm = s.grow_events();
+        for _ in 0..4 {
+            assert_eq!(k.gram_with(&mut s, &x, &y), g0);
+            assert_eq!(k.gram_sym_with(&mut s, &x), gs0);
+        }
+        assert_eq!(s.grow_events(), warm, "scratch grew after warmup");
     }
 
     #[test]

@@ -107,11 +107,13 @@ impl EmbeddingModel {
     }
 
     /// Batched multi-row projection `z(Y) = K(Y, centers) · coeffs` via
-    /// the fused parallel path ([`crate::kernel::Kernel::embed_rows`]):
-    /// rows are embedded independently across compute threads without
-    /// materializing the Gram matrix.  Row `i` of the result equals
-    /// [`EmbeddingModel::transform_point`] on row `i` bit-for-bit, at any
-    /// thread count.
+    /// the fused distance-free path
+    /// ([`crate::kernel::Kernel::embed_rows`]): per row block, one
+    /// norm-trick Gram tile feeds the coefficient GEMM directly — the
+    /// full Gram matrix is never materialized — and row bands fan out
+    /// across compute threads.  Results are bitwise identical at any
+    /// thread count and match [`EmbeddingModel::transform_point`] (the
+    /// scalar path) to rounding (<= 1e-10).
     ///
     /// ```
     /// use rskpca::data::gaussian_mixture_2d;
@@ -128,6 +130,32 @@ impl EmbeddingModel {
         // match the model's feature dim) instead of blaming model
         // invariants.
         match self.kernel.embed_rows(x, &self.centers, &self.coeffs) {
+            Ok(z) => z,
+            Err(e) => panic!("transform_batch: {e}"),
+        }
+    }
+
+    /// [`EmbeddingModel::transform_batch`] with a caller-owned
+    /// [`crate::kernel::Scratch`] — the allocation-free serving form.
+    /// The coordinator's batch worker routes every batch through the
+    /// scratch owned by its `NativeBackend`, so steady-state `POST
+    /// /embed` traffic reuses every projection buffer without growth
+    /// (per-batch heap traffic: the output matrix + O(threads)
+    /// fork/join bookkeeping, nothing scaling with the row count).
+    /// Output is bitwise identical to
+    /// [`EmbeddingModel::transform_batch`] and stable across repeated
+    /// calls with a reused scratch.
+    pub fn transform_batch_with(
+        &self,
+        scratch: &mut crate::kernel::Scratch,
+        x: &Matrix,
+    ) -> Matrix {
+        match self.kernel.embed_rows_with(
+            scratch,
+            x,
+            &self.centers,
+            &self.coeffs,
+        ) {
             Ok(z) => z,
             Err(e) => panic!("transform_batch: {e}"),
         }

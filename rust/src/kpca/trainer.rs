@@ -272,11 +272,13 @@ pub(crate) fn extend_spectrum(
 /// the state [`EmbeddingModel::refresh`] updates in `O(Δm · m)` kernel
 /// evaluations per delta instead of recomputing all `O(m²)`.
 ///
-/// Entries are produced by the same scalar `Kernel::eval` path as
-/// `Kernel::gram_sym`, so the cached Gram stays **bitwise identical** to
-/// a from-scratch `gram_sym` of the same centers; refresh therefore
-/// agrees with a batch refit exactly (up to the eigensolver's own
-/// determinism, which is bit-reproducible too).
+/// New entries are produced by the scalar `Kernel::eval` path (the
+/// right tool for `O(Δm · m)` individual pairs), while `gram_sym` runs
+/// the distance-free norm-trick engine; the cached Gram therefore
+/// agrees with a from-scratch `gram_sym` of the same centers to
+/// rounding (well under 1e-12 on unit-scale centers — enforced by
+/// `gram_cache_matches_from_scratch_gram`), and refresh agrees with a
+/// batch refit inside the 1e-10 acceptance bound.
 #[derive(Clone, Debug)]
 pub struct GramCache {
     centers: Matrix,
@@ -711,10 +713,12 @@ mod tests {
             "center replay diverged"
         );
         let fresh = kernel.gram_sym(&snap.centers);
-        assert_eq!(
-            cache.gram().as_slice(),
-            fresh.as_slice(),
-            "cached gram not bitwise equal to gram_sym"
+        // Scalar incremental entries vs the norm-trick batch engine:
+        // identical up to cancellation rounding.
+        let dev = cache.gram().sub(&fresh).unwrap().max_abs();
+        assert!(
+            dev <= 1e-12,
+            "cached gram deviates from gram_sym by {dev:e}"
         );
     }
 

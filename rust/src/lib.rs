@@ -12,7 +12,10 @@
 //!   estimates, RSKPCA, the Nyström family, MMD bounds, KMLA extensions),
 //!   the substrates they need (dense linear algebra, PRNG, datasets,
 //!   classification), a shared parallel compute engine ([`parallel`])
-//!   that every hot path fans out through, a PJRT runtime that executes
+//!   that every hot path fans out through, a packed micro-kernel GEMM
+//!   + distance-free (norm-trick) Gram compute core ([`linalg`] /
+//!   [`kernel`]) with a reusable zero-allocation serving scratch
+//!   ([`kernel::Scratch`]), a PJRT runtime that executes
 //!   the AOT artifacts (behind the `pjrt` cargo feature), a threaded
 //!   embedding service with dynamic batching, an online model
 //!   lifecycle (streaming deltas → incremental

@@ -9,16 +9,22 @@
 //! Layout: row-major `Vec<f64>`, which keeps the hot gram/matmul loops
 //! cache-friendly and makes zero-copy row views (`row`) possible.
 //!
-//! The dense products (`matmul`, `matmul_transb`, `matvec`) dispatch to
-//! [`crate::parallel`] row bands above a flop threshold; each output row
-//! is produced by the same accumulation order as the serial loop, so the
-//! results are bitwise identical at any thread count.  `subspace_eigh`
-//! builds on the parallel products for leading-eigenpair extraction.
+//! The dense products (`matmul`, `matmul_transb`) lower to the packed,
+//! register-blocked micro-kernel GEMM in `gemm.rs` (4x8 register tile,
+//! KC-blocked, B-panel packing), parallel over row bands of panels above
+//! a flop threshold.  Every output element is accumulated in strictly
+//! increasing k order, so results are bitwise identical at any thread
+//! count; the naive `*_serial` triple loops are retained as cross-check
+//! references (property-tested to <= 1e-10 agreement, exact in
+//! practice).  `subspace_eigh` builds on the parallel products for
+//! leading-eigenpair extraction.
 
 mod eigen;
+pub(crate) mod gemm;
 mod qr;
 
 pub use eigen::{eigh, jacobi_eigh, subspace_eigh, Eigh};
+pub use gemm::GemmScratch;
 pub use qr::{lstsq, solve_upper_triangular, QrFactor};
 
 use crate::error::{Error, Result};
@@ -176,11 +182,13 @@ impl Matrix {
         out
     }
 
-    /// `self * other`, parallel over output-row bands above the flop
-    /// threshold.  Within a row the i-k-j loop order streams `other`
-    /// rows and the output row, both contiguous; no transpose
-    /// materialization needed.  Per-row accumulation order matches the
-    /// serial loop exactly, so results are thread-count invariant.
+    /// `self * other` through the packed micro-kernel GEMM
+    /// (`gemm.rs`): B-panel packing, a 4x8 register tile, KC cache
+    /// blocking, parallel over row bands of panels above the flop
+    /// threshold.  Every output element accumulates in strictly
+    /// increasing k order, so results are bitwise identical at any
+    /// thread count and agree with [`Matrix::matmul_serial`] to
+    /// rounding (<= 1e-10, enforced by property tests).
     pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
         if self.cols != other.rows {
             return Err(Error::Shape(format!(
@@ -195,28 +203,51 @@ impl Matrix {
         }
         let threads =
             par_threads_for(n.saturating_mul(k).saturating_mul(m));
-        crate::parallel::par_fill_rows(
-            &mut out.data,
-            m,
-            threads,
-            |i, out_row| {
-                let a_row = self.row(i);
-                for (kk, &a) in a_row.iter().enumerate().take(k) {
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let b_row = &other.data[kk * m..(kk + 1) * m];
-                    for j in 0..m {
-                        out_row[j] += a * b_row[j];
-                    }
-                }
-            },
-        );
+        gemm::with_thread_scratch(|s| {
+            gemm::gemm_into(
+                &mut out.data,
+                n,
+                m,
+                k,
+                &self.data,
+                gemm::BSrc::Normal(&other.data),
+                false,
+                threads,
+                s,
+            )
+        });
         Ok(out)
     }
 
-    /// `self * other^T` without materializing the transpose; parallel
-    /// over output-row bands above the flop threshold.
+    /// Naive i-k-j triple loop — the serial cross-check reference for
+    /// [`Matrix::matmul`] (kept deliberately unoptimized; benches and
+    /// property tests compare the GEMM path against it).
+    pub fn matmul_serial(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::Shape(format!(
+                "matmul_serial: {}x{} * {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(n, m);
+        for i in 0..n {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * m..(i + 1) * m];
+            for (kk, &a) in a_row.iter().enumerate().take(k) {
+                let b_row = &other.data[kk * m..(kk + 1) * m];
+                for j in 0..m {
+                    out_row[j] += a * b_row[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self * other^T` without materializing the transpose, through the
+    /// packed GEMM (the transposed operand is paid for once, in the
+    /// B-panel pack, instead of once per output row).  Same determinism
+    /// contract as [`Matrix::matmul`].
     pub fn matmul_transb(&self, other: &Matrix) -> Result<Matrix> {
         if self.cols != other.cols {
             return Err(Error::Shape(format!(
@@ -232,28 +263,51 @@ impl Matrix {
         let threads = par_threads_for(
             n.saturating_mul(m).saturating_mul(self.cols),
         );
-        crate::parallel::par_fill_rows(
-            &mut out.data,
-            m,
-            threads,
-            |i, out_row| {
-                let a = self.row(i);
-                for (j, slot) in out_row.iter_mut().enumerate() {
-                    let b = other.row(j);
-                    let mut acc = 0.0;
-                    for t in 0..self.cols {
-                        acc += a[t] * b[t];
-                    }
-                    *slot = acc;
-                }
-            },
-        );
+        gemm::with_thread_scratch(|s| {
+            gemm::gemm_into(
+                &mut out.data,
+                n,
+                m,
+                self.cols,
+                &self.data,
+                gemm::BSrc::Trans(&other.data),
+                false,
+                threads,
+                s,
+            )
+        });
         Ok(out)
     }
 
-    /// Matrix-vector product (parallel over output chunks above the flop
-    /// threshold; per-element dot products are order-identical to the
-    /// serial path).
+    /// Naive dot-product loop — the serial cross-check reference for
+    /// [`Matrix::matmul_transb`].
+    pub fn matmul_transb_serial(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.cols {
+            return Err(Error::Shape(format!(
+                "matmul_transb_serial: {}x{} * ({}x{})^T",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let (n, m) = (self.rows, other.rows);
+        let mut out = Matrix::zeros(n, m);
+        for i in 0..n {
+            let a = self.row(i);
+            for j in 0..m {
+                let b = other.row(j);
+                let mut acc = 0.0;
+                for t in 0..self.cols {
+                    acc += a[t] * b[t];
+                }
+                out.set(i, j, acc);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Matrix-vector product: one 4-wide unrolled dot ([`dot4`]) per
+    /// output element, parallel over output chunks above the flop
+    /// threshold.  Per-element operation order is independent of the
+    /// thread count (bitwise invariant).
     pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
         if v.len() != self.cols {
             return Err(Error::Shape(format!(
@@ -265,10 +319,25 @@ impl Matrix {
         let threads =
             par_threads_for(self.rows.saturating_mul(self.cols));
         crate::parallel::par_fill_rows(&mut out, 1, threads, |i, slot| {
-            slot[0] =
-                self.row(i).iter().zip(v).map(|(a, b)| a * b).sum();
+            slot[0] = dot4(self.row(i), v);
         });
         Ok(out)
+    }
+
+    /// Naive serial-chain matvec — the cross-check reference for
+    /// [`Matrix::matvec`].
+    pub fn matvec_serial(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.cols {
+            return Err(Error::Shape(format!(
+                "matvec_serial: {}x{} * len-{}",
+                self.rows, self.cols, v.len()
+            )));
+        }
+        Ok((0..self.rows)
+            .map(|i| {
+                self.row(i).iter().zip(v).map(|(a, b)| a * b).sum()
+            })
+            .collect())
     }
 
     /// Elementwise sum; shapes must match.
@@ -389,16 +458,59 @@ pub fn euclidean(a: &[f64], b: &[f64]) -> f64 {
     sq_euclidean(a, b).sqrt()
 }
 
-/// Squared Euclidean distance between two equal-length slices.
+/// Squared Euclidean distance between two equal-length slices,
+/// accumulated 4-wide: four independent partial sums break the
+/// add-latency chain of the naive loop (and let LLVM vectorize the
+/// body), then combine as `((s0+s1) + (s2+s3)) + tail`.
+///
+/// This is the scalar fast path serving `Kernel::eval` and the small-n
+/// fallbacks; the batch Gram paths avoid per-pair distances entirely
+/// via the norm trick (see `kernel::Kernel::gram`), and a property test
+/// pins the two to <= 1e-10 agreement.
 #[inline]
 pub fn sq_euclidean(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
-    for i in 0..a.len() {
-        let d = a[i] - b[i];
-        acc += d * d;
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+    for (pa, pb) in (&mut ca).zip(&mut cb) {
+        let d0 = pa[0] - pb[0];
+        let d1 = pa[1] - pb[1];
+        let d2 = pa[2] - pb[2];
+        let d3 = pa[3] - pb[3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
     }
-    acc
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        let d = x - y;
+        tail += d * d;
+    }
+    ((s0 + s1) + (s2 + s3)) + tail
+}
+
+/// 4-wide unrolled dot product (same accumulator scheme as
+/// [`sq_euclidean`]); used by [`Matrix::matvec`] and the row-norm
+/// precomputation of the distance-free Gram paths.
+#[inline]
+pub fn dot4(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+    for (pa, pb) in (&mut ca).zip(&mut cb) {
+        s0 += pa[0] * pb[0];
+        s1 += pa[1] * pb[1];
+        s2 += pa[2] * pb[2];
+        s3 += pa[3] * pb[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    ((s0 + s1) + (s2 + s3)) + tail
 }
 
 #[cfg(test)]
@@ -513,5 +625,60 @@ mod tests {
     fn distances() {
         assert!(approx(euclidean(&[0., 0.], &[3., 4.]), 5.0, 1e-12));
         assert!(approx(sq_euclidean(&[1., 1.], &[2., 2.]), 2.0, 1e-12));
+        // Unrolled path handles every remainder length.
+        for len in 0..9usize {
+            let a: Vec<f64> =
+                (0..len).map(|i| (i as f64 * 0.7).sin()).collect();
+            let b: Vec<f64> =
+                (0..len).map(|i| (i as f64 * 0.3).cos()).collect();
+            let naive: f64 =
+                a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!(
+                approx(sq_euclidean(&a, &b), naive, 1e-12),
+                "len={len}"
+            );
+            let naive_dot: f64 =
+                a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(approx(dot4(&a, &b), naive_dot, 1e-12), "len={len}");
+        }
+    }
+
+    #[test]
+    fn gemm_paths_match_serial_references() {
+        use crate::testutil::random_matrix;
+        for &(n, k, m) in &[
+            (1usize, 1usize, 1usize),
+            (7, 5, 9),
+            (40, 33, 21),
+            (64, 300, 17),
+        ] {
+            let a = random_matrix(n, k, (n + 3 * k) as u64);
+            let b = random_matrix(k, m, (m + 5 * k) as u64);
+            let fast = a.matmul(&b).unwrap();
+            let slow = a.matmul_serial(&b).unwrap();
+            assert!(
+                fast.sub(&slow).unwrap().max_abs() < 1e-10,
+                "matmul {n}x{k}x{m}"
+            );
+            let bt = random_matrix(m, k, (n + 11 * m) as u64);
+            let fast_t = a.matmul_transb(&bt).unwrap();
+            let slow_t = a.matmul_transb_serial(&bt).unwrap();
+            assert!(
+                fast_t.sub(&slow_t).unwrap().max_abs() < 1e-10,
+                "matmul_transb {n}x{k}x{m}"
+            );
+            let v: Vec<f64> =
+                (0..k).map(|i| (i as f64 * 0.41).sin()).collect();
+            let mv = a.matvec(&v).unwrap();
+            let mv_ref = a.matvec_serial(&v).unwrap();
+            for (x, y) in mv.iter().zip(&mv_ref) {
+                assert!((x - y).abs() < 1e-10, "matvec {n}x{k}");
+            }
+        }
+        // Shape mismatches surface on the serial references too.
+        let a = Matrix::zeros(2, 3);
+        assert!(a.matmul_serial(&Matrix::zeros(2, 2)).is_err());
+        assert!(a.matmul_transb_serial(&Matrix::zeros(2, 2)).is_err());
+        assert!(a.matvec_serial(&[1.0]).is_err());
     }
 }

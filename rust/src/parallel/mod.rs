@@ -9,12 +9,15 @@
 //!
 //! 1. **Determinism.**  Work is split into *contiguous index ranges*
 //!    computed up front (no work stealing, no atomics on the data path),
-//!    so for a fixed input and thread count the floating-point result is
-//!    reproducible — and for the per-element kernels (Gram, matmul rows,
-//!    projections) it is *bitwise identical* to the serial path at any
-//!    thread count, because each output element is produced by the exact
-//!    same sequence of operations.  Only chunked *reductions*
-//!    ([`par_sum`]) re-associate additions.
+//!    so for a fixed input the floating-point result is reproducible —
+//!    and for the per-element kernels (Gram entries, GEMM output
+//!    elements, projections) it is *bitwise identical at any thread
+//!    count*, because each output element is produced by the exact same
+//!    operation sequence (strict k-order accumulation) regardless of
+//!    band boundaries.  Only chunked *reductions* ([`par_sum`])
+//!    re-associate additions.  The naive `*_serial` cross-check
+//!    references agree to rounding (<= 1e-10), not bitwise — the
+//!    GEMM/norm-trick engine restructures their flops.
 //! 2. **Safety.**  Mutable outputs are partitioned with `split_at_mut`
 //!    into disjoint row bands before any thread starts; there is no
 //!    `unsafe` anywhere in the engine.

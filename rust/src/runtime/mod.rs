@@ -71,19 +71,35 @@ pub trait GramBackend {
     fn name(&self) -> &'static str;
 }
 
-/// Pure-rust backend.
+/// Pure-rust backend.  Owns a reusable [`crate::kernel::Scratch`]
+/// workspace (row norms, packed GEMM panels, Gram tiles): the
+/// coordinator's batch worker constructs one backend on its thread and
+/// keeps it for the service lifetime, so every batch after the first
+/// reuses the Gram/projection buffers without growth (remaining
+/// per-batch heap traffic: the output matrix + O(threads) fork/join
+/// bookkeeping).
 #[derive(Default)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    scratch: crate::kernel::Scratch,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 impl GramBackend for NativeBackend {
     fn gram(&mut self, x: &Matrix, y: &Matrix, kernel: &Kernel)
         -> Result<Matrix> {
-        Ok(kernel.gram(x, y))
+        Ok(kernel.gram_with(&mut self.scratch, x, y))
     }
 
-    /// Fused projection: skips the n x m Gram temporary entirely and
-    /// embeds rows in parallel (`Kernel::embed_rows`).  This is the path
-    /// the coordinator's batch executor takes for every native batch.
+    /// Fused projection: skips the n x m Gram temporary entirely —
+    /// per row block one distance-free Gram tile feeds the coefficient
+    /// GEMM (`Kernel::embed_rows_with`), reusing this backend's scratch
+    /// across batches.  This is the path the coordinator's batch
+    /// executor takes for every native batch.
     fn embed(
         &mut self,
         x: &Matrix,
@@ -91,7 +107,7 @@ impl GramBackend for NativeBackend {
         coeffs: &Matrix,
         kernel: &Kernel,
     ) -> Result<Matrix> {
-        kernel.embed_rows(x, centers, coeffs)
+        kernel.embed_rows_with(&mut self.scratch, x, centers, coeffs)
     }
 
     fn name(&self) -> &'static str {
@@ -105,7 +121,7 @@ pub fn backend_from_name(
     artifacts_dir: &std::path::Path,
 ) -> Result<Box<dyn GramBackend>> {
     match name {
-        "native" => Ok(Box::new(NativeBackend)),
+        "native" => Ok(Box::new(NativeBackend::new())),
         "pjrt" => Ok(Box::new(PjrtBackend::load(artifacts_dir)?)),
         other => Err(crate::error::Error::Config(format!(
             "unknown backend '{other}'"
@@ -135,7 +151,7 @@ mod tests {
     fn native_gram_matches_kernel() {
         let ds = gaussian_mixture_2d(20, 2, 0.5, 1);
         let k = Kernel::gaussian(1.0);
-        let mut b = NativeBackend;
+        let mut b = NativeBackend::new();
         let g = b.gram(&ds.x, &ds.x, &k).unwrap();
         let expect = k.gram(&ds.x, &ds.x);
         assert!(g.sub(&expect).unwrap().max_abs() < 1e-12);
@@ -150,7 +166,7 @@ mod tests {
         let coeffs =
             Matrix::from_vec(3, 2, vec![1., 0., 0., 1., 0.5, -0.5])
                 .unwrap();
-        let mut b = NativeBackend;
+        let mut b = NativeBackend::new();
         let e = b.embed(&ds.x, &centers, &coeffs, &k).unwrap();
         let expect =
             k.gram(&ds.x, &centers).matmul(&coeffs).unwrap();

@@ -33,6 +33,16 @@
 //! `stats`, signal-driven shutdown ([`install_shutdown_handler`] /
 //! [`shutdown_requested`]), and a closed-loop client harness in
 //! [`loadgen`].
+//!
+//! **Hot-loop allocation contract.**  Connection workers only parse,
+//! enqueue, and format — the Gram/projection compute for `POST /embed`
+//! runs on the coordinator's batch worker, whose `NativeBackend` owns a
+//! reusable `kernel::Scratch` (norms, packed GEMM panels, Gram tiles).
+//! Once warmed at the serving shapes, every compute buffer is reused
+//! without growth (asserted via `Scratch::grow_events` in the test
+//! suite); per-batch heap traffic is limited to the response buffers
+//! plus O(compute-threads) fork/join bookkeeping — nothing scales with
+//! the row count, and the batch Gram is never materialized.
 
 pub mod http;
 pub mod loadgen;

@@ -61,7 +61,7 @@ fn max_rel_dev(a: &Matrix, b: &Matrix) -> f64 {
 fn pjrt_gram_matches_native_across_buckets() {
     let Some(dir) = artifacts_dir() else { return };
     let mut pjrt = PjrtBackend::load(&dir).unwrap();
-    let mut native = NativeBackend;
+    let mut native = NativeBackend::new();
     // Sweep odd shapes that exercise row chunking, m/d padding, and the
     // d-bucket boundaries (32 / 256 / 576 lattice).
     for (n, m, d, sigma, seed) in [
@@ -92,7 +92,7 @@ fn pjrt_gram_matches_native_across_buckets() {
 fn pjrt_gram_laplacian_artifacts_work() {
     let Some(dir) = artifacts_dir() else { return };
     let mut pjrt = PjrtBackend::load(&dir).unwrap();
-    let mut native = NativeBackend;
+    let mut native = NativeBackend::new();
     let x = random_matrix(50, 20, 7);
     let y = random_matrix(30, 20, 8);
     let k = Kernel::laplacian(3.0);
@@ -111,7 +111,7 @@ fn pjrt_gram_laplacian_artifacts_work() {
 fn pjrt_embed_matches_native() {
     let Some(dir) = artifacts_dir() else { return };
     let mut pjrt = PjrtBackend::load(&dir).unwrap();
-    let mut native = NativeBackend;
+    let mut native = NativeBackend::new();
     for (n, m, d, r, seed) in [
         (40usize, 25usize, 6usize, 5usize, 11u64),
         (300, 90, 24, 16, 12), // full rank bucket + row chunking
@@ -140,7 +140,7 @@ fn pjrt_embed_matches_native() {
 fn pjrt_embed_chunks_very_wide_center_sets() {
     let Some(dir) = artifacts_dir() else { return };
     let mut pjrt = PjrtBackend::load(&dir).unwrap();
-    let mut native = NativeBackend;
+    let mut native = NativeBackend::new();
     // 1500 centers > largest (1024) embed bucket -> chunk + accumulate.
     let x = random_matrix(17, 8, 21);
     let c = random_matrix(1500, 8, 22);

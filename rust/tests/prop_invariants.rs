@@ -308,7 +308,7 @@ fn prop_service_conserves_rows_and_order() {
             let expect = model.transform(x);
             let svc = EmbeddingService::start(
                 model,
-                Box::new(|| Ok(Box::new(NativeBackend))),
+                Box::new(|| Ok(Box::new(NativeBackend::new()))),
                 ServiceConfig {
                     max_batch: *max_batch,
                     max_wait_us: 200,

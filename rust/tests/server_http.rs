@@ -32,7 +32,7 @@ fn test_model() -> (EmbeddingModel, Matrix) {
 }
 
 fn native() -> BackendFactory {
-    Box::new(|| Ok(Box::new(NativeBackend)))
+    Box::new(|| Ok(Box::new(NativeBackend::new())))
 }
 
 fn server_cfg() -> ServerConfig {
@@ -395,7 +395,7 @@ fn saturation_answers_429_with_retry_after() {
         &cfg,
         Box::new(|| {
             Ok(Box::new(SlowBackend {
-                inner: NativeBackend,
+                inner: NativeBackend::new(),
                 delay: Duration::from_millis(30),
             }) as Box<dyn GramBackend>)
         }),
@@ -473,7 +473,7 @@ fn block_policy_waits_instead_of_rejecting() {
         &cfg,
         Box::new(|| {
             Ok(Box::new(SlowBackend {
-                inner: NativeBackend,
+                inner: NativeBackend::new(),
                 delay: Duration::from_millis(10),
             }) as Box<dyn GramBackend>)
         }),
