@@ -26,10 +26,13 @@ step "cargo test -q"
 cargo test -q
 
 # The GEMM/norm-trick cross-check bounds (<= 1e-10 vs the naive serial
-# references) are only meaningful with release-mode codegen (FMA /
-# reordering differ from debug); run the consistency suite there too.
+# references) and the blocked-eigensolver cross-checks (<= 1e-9 vs
+# eigh_serial/jacobi, including the 513-order multi-panel case that is
+# debug-gated for speed) are only meaningful with release-mode codegen
+# (FMA / reordering differ from debug); run the consistency suite there
+# too.
 if [ "${1:-}" != "quick" ]; then
-    step "GEMM/Gram cross-checks under --release"
+    step "GEMM/Gram + eigensolver cross-checks under --release"
     cargo test --release -q --test parallel_consistency
 fi
 
@@ -116,15 +119,19 @@ EOF
     trap - EXIT
 
     step "bench --json smoke (BENCH_*.json artifacts)"
-    # Quick bench run + CLI roofline bench: both must land their
-    # machine-readable artifacts at the repo root so the perf
+    # Quick bench run + CLI roofline/eigensolver benches: all must land
+    # their machine-readable artifacts at the repo root so the perf
     # trajectory is tracked across PRs.  Remove stale artifacts first
-    # so the existence check asserts THIS run produced them.
-    rm -f ../BENCH_MICRO.json ../BENCH_GEMM.json
+    # so the existence check asserts THIS run produced them.  The eigen
+    # suite runs at full size (n in {512, 2048}) — its headline number
+    # is the blocked-vs-serial speedup at n = 2048 on 8 threads.
+    rm -f ../BENCH_MICRO.json ../BENCH_GEMM.json ../BENCH_EIGEN.json
     RSKPCA_BENCH_QUICK=1 cargo bench --bench bench_micro
     target/release/rskpca bench gemm --quick --json
+    target/release/rskpca bench eigen --json
     test -f ../BENCH_MICRO.json || { echo "BENCH_MICRO.json missing"; exit 1; }
     test -f ../BENCH_GEMM.json || { echo "BENCH_GEMM.json missing"; exit 1; }
+    test -f ../BENCH_EIGEN.json || { echo "BENCH_EIGEN.json missing"; exit 1; }
 fi
 
 step "cargo doc --no-deps (warnings denied)"

@@ -16,7 +16,7 @@ use rskpca::coordinator::serve;
 use rskpca::data::gaussian_mixture_2d;
 use rskpca::kernel::Kernel;
 use rskpca::kpca::fit_kpca;
-use rskpca::linalg::{eigh, subspace_eigh, Matrix};
+use rskpca::linalg::{eigh, eigh_serial, subspace_eigh, Matrix};
 use rskpca::parallel;
 use rskpca::prng::Pcg64;
 use rskpca::runtime::{factory_from_name, GramBackend, NativeBackend, PjrtBackend};
@@ -36,13 +36,17 @@ fn main() {
     let mut b = harness();
     let quick = rskpca::bench::quick_mode();
 
-    // Symmetric eigensolver scaling, full solve vs parallel top-k
-    // subspace iteration.
+    // Symmetric eigensolver scaling: blocked production solve vs the
+    // retained serial tred2/tql2 reference vs parallel top-k subspace
+    // iteration (the full sweep lives in `rskpca bench eigen`).
     for &n in if quick { &[64usize, 128][..] } else { &[64, 128, 256, 512][..] } {
         let x = random(n, n, 1);
         let sym = x.matmul_transb(&x).unwrap().scale(1.0 / n as f64);
         b.bench(&format!("eigh/n{n}"), || {
             eigh(&sym).unwrap().values[0]
+        });
+        b.bench(&format!("eigh_serial/n{n}"), || {
+            eigh_serial(&sym).unwrap().values[0]
         });
         b.bench(&format!("subspace_eigh/k8/n{n}"), || {
             subspace_eigh(&sym, 8, 200, 1e-10).unwrap().values[0]

@@ -391,6 +391,61 @@ pub fn loadgen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared bench timing: warmup + calibration, then best-of (the
+/// roofline-relevant number is the best achieved rate, not the mean).
+fn time_best(target_s: f64, f: &mut dyn FnMut()) -> f64 {
+    use std::time::Instant;
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / once) as usize).clamp(1, 10);
+    let mut best = once;
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Parse a `--sizes N,N,..` flag, with quick/full defaults.
+fn bench_sizes(
+    args: &Args,
+    quick_default: &[usize],
+    full_default: &[usize],
+) -> Result<Vec<usize>> {
+    match args.flag("sizes") {
+        Some(s) => s
+            .split(',')
+            .map(|v| {
+                v.trim().parse().map_err(|_| {
+                    Error::Parse(format!("--sizes: bad integer '{v}'"))
+                })
+            })
+            .collect(),
+        None if args.has("quick") => Ok(quick_default.to_vec()),
+        None => Ok(full_default.to_vec()),
+    }
+}
+
+/// `rskpca bench <gemm|eigen> [...]` — CLI perf suites with
+/// machine-readable artifacts at the repo root.
+pub fn bench(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("gemm");
+    match what {
+        "gemm" => bench_gemm(args),
+        "eigen" => bench_eigen(args),
+        other => Err(Error::Parse(format!(
+            "bench: unknown suite '{other}' (expected 'gemm' or \
+             'eigen')"
+        ))),
+    }
+}
+
 /// `rskpca bench gemm [--quick] [--json] [--sizes N,N,..] [--threads N]`
 /// — effective GFLOP/s for the packed GEMM and the distance-free
 /// symmetric Gram at n ∈ {512, 2048, 8192} (quick: 512 only), so
@@ -402,53 +457,15 @@ pub fn loadgen(args: &Args) -> Result<()> {
 /// exploiting symmetry, so beating the GEMM number here is expected).
 /// `--json` writes `BENCH_GEMM.json` at the repo root (`--out`
 /// overrides the path).
-pub fn bench(args: &Args) -> Result<()> {
+fn bench_gemm(args: &Args) -> Result<()> {
     use crate::ser::Json;
-    use std::time::Instant;
 
-    let what = args
-        .positional
-        .first()
-        .map(|s| s.as_str())
-        .unwrap_or("gemm");
-    if what != "gemm" {
-        return Err(Error::Parse(format!(
-            "bench: unknown suite '{what}' (expected 'gemm')"
-        )));
-    }
     apply_threads(args, 0)?;
     let quick = args.has("quick");
-    let sizes: Vec<usize> = match args.flag("sizes") {
-        Some(s) => s
-            .split(',')
-            .map(|v| {
-                v.trim().parse().map_err(|_| {
-                    Error::Parse(format!("--sizes: bad integer '{v}'"))
-                })
-            })
-            .collect::<Result<Vec<usize>>>()?,
-        None if quick => vec![512],
-        None => vec![512, 2048, 8192],
-    };
+    let sizes = bench_sizes(args, &[512], &[512, 2048, 8192])?;
     let d = 64usize;
     let threads = crate::parallel::resolve_threads(0);
     let target_s = if quick { 0.3 } else { 1.0 };
-
-    // Warmup + calibration, then best-of timing (the roofline-relevant
-    // number is the best achieved rate, not the mean).
-    fn time_best(target_s: f64, f: &mut dyn FnMut()) -> f64 {
-        let t0 = Instant::now();
-        f();
-        let once = t0.elapsed().as_secs_f64().max(1e-9);
-        let iters = ((target_s / once) as usize).clamp(1, 10);
-        let mut best = once;
-        for _ in 0..iters {
-            let t = Instant::now();
-            f();
-            best = best.min(t.elapsed().as_secs_f64());
-        }
-        best
-    }
 
     println!(
         "bench gemm: effective GFLOP/s at {threads} compute thread(s)\n"
@@ -515,6 +532,107 @@ pub fn bench(args: &Args) -> Result<()> {
             |e| Error::Io(format!("write {out}: {e}")),
         )?;
         println!("\nwrote {out}");
+    }
+    Ok(())
+}
+
+/// `rskpca bench eigen [--quick] [--json] [--sizes N,N,..]
+/// [--threads N]` — the symmetric eigensolver suite: blocked [`eigh`]
+/// at 1 vs `--threads` (default 8) compute threads, the retained serial
+/// `eigh_serial` reference, and leading-k `subspace_eigh`, on PSD Gram
+/// inputs at n ∈ {512, 2048} (quick: 256).  Prints the blocked-vs-serial
+/// speedup line; `--json` writes `BENCH_EIGEN.json` at the repo root
+/// (op, n, threads, seconds, ns/op) so the eigensolver's perf trajectory
+/// is tracked across PRs (`--out` overrides the path).
+fn bench_eigen(args: &Args) -> Result<()> {
+    use crate::linalg::{eigh, eigh_serial, subspace_eigh};
+    use crate::ser::Json;
+
+    let quick = args.has("quick");
+    let sizes = bench_sizes(args, &[256], &[512, 2048])?;
+    let tpar = args.flag_usize("threads", 8)?;
+    let target_s = if quick { 0.3 } else { 0.8 };
+    println!(
+        "bench eigen: blocked vs serial vs subspace (parallel rows at \
+         {tpar} threads)\n"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let push = |rows: &mut Vec<Json>,
+                name: String,
+                op: &str,
+                n: usize,
+                threads: usize,
+                secs: f64| {
+        println!("{name:<26} {secs:>9.3}s   ({threads} thread(s))");
+        rows.push(
+            Json::obj()
+                .with("name", Json::Str(name))
+                .with("op", Json::Str(op.into()))
+                .with("n", Json::Num(n as f64))
+                .with("threads", Json::Num(threads as f64))
+                .with("seconds", Json::Num(secs))
+                .with("ns_per_op", Json::Num(secs * 1e9)),
+        );
+    };
+    for &n in &sizes {
+        // PSD Gram-like input (subspace iteration is PSD-only): a
+        // Wishart factor with a decaying spectrum.
+        let b = crate::testutil::random_matrix(n, (n / 2).max(1), 77);
+        let a = b.matmul_transb(&b)?.scale(1.0 / n as f64);
+        crate::parallel::set_threads(1);
+        let serial = time_best(target_s, &mut || {
+            std::hint::black_box(eigh_serial(&a).unwrap().values[0]);
+        });
+        push(&mut rows, format!("eigh_serial/n{n}"), "eigh_serial", n, 1,
+            serial);
+        let blocked_1t = time_best(target_s, &mut || {
+            std::hint::black_box(eigh(&a).unwrap().values[0]);
+        });
+        push(&mut rows, format!("eigh/t1/n{n}"), "eigh_blocked", n, 1,
+            blocked_1t);
+        crate::parallel::set_threads(tpar);
+        let blocked_par = time_best(target_s, &mut || {
+            std::hint::black_box(eigh(&a).unwrap().values[0]);
+        });
+        push(
+            &mut rows,
+            format!("eigh/t{tpar}/n{n}"),
+            "eigh_blocked",
+            n,
+            tpar,
+            blocked_par,
+        );
+        let sub = time_best(target_s, &mut || {
+            std::hint::black_box(
+                subspace_eigh(&a, 8, 200, 1e-10).unwrap().values[0],
+            );
+        });
+        push(
+            &mut rows,
+            format!("subspace_eigh/k8/t{tpar}/n{n}"),
+            "subspace_eigh",
+            n,
+            tpar,
+            sub,
+        );
+        println!(
+            "# eigh n={n}: blocked speedup {:.2}x (1 thread) / {:.2}x \
+             ({tpar} threads) vs serial tred2/tql2\n",
+            serial / blocked_1t,
+            serial / blocked_par
+        );
+    }
+    crate::parallel::set_threads(0);
+    if args.has("json") {
+        let default_out = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../BENCH_EIGEN.json")
+            .to_string_lossy()
+            .into_owned();
+        let out = args.flag_or("out", &default_out);
+        std::fs::write(&out, Json::Arr(rows).to_string()).map_err(
+            |e| Error::Io(format!("write {out}: {e}")),
+        )?;
+        println!("wrote {out}");
     }
     Ok(())
 }

@@ -14,7 +14,9 @@
 //! rskpca loadgen [--target HOST:PORT] [--clients N] [--requests N]
 //!                [--rows-per-request N] [--dim D] [--seed N]
 //!                [--wait-ms MS]
-//! rskpca bench   gemm [--quick] [--json] [--sizes N,N,..] [--threads N]
+//! rskpca bench   gemm  [--quick] [--json] [--sizes N,N,..] [--threads N]
+//!                [--out FILE]
+//! rskpca bench   eigen [--quick] [--json] [--sizes N,N,..] [--threads N]
 //!                [--out FILE]
 //! rskpca gen     --dataset NAME --out FILE [--seed N]
 //! rskpca info    [--artifacts DIR]
@@ -120,6 +122,12 @@ USAGE:
       symmetric Gram at n in {512, 2048, 8192} (quick: 512 only);
       --json writes BENCH_GEMM.json at the repo root for cross-PR
       roofline tracking
+  rskpca bench  eigen [--quick] [--json] [--sizes N,N,..] [--threads N]
+                [--out FILE]
+      symmetric eigensolver suite: blocked eigh (1 vs --threads compute
+      threads) vs the serial tred2/tql2 reference vs leading-k subspace
+      iteration at n in {512, 2048} (quick: 256); --json writes
+      BENCH_EIGEN.json at the repo root
   rskpca gen    --dataset german|pendigits|usps|yale|gmm2d|swiss_roll
                 --out FILE [--seed N]
   rskpca info   [--artifacts DIR]
@@ -224,6 +232,41 @@ mod tests {
         std::fs::remove_file(&out).ok();
         // Unknown suites are rejected.
         assert!(dispatch(&to_vec(&["bench", "qr"])).is_err());
+    }
+
+    #[test]
+    fn bench_eigen_writes_json() {
+        // bench eigen flips the global thread count while it runs.
+        let _g = crate::parallel::TEST_THREAD_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let out = std::env::temp_dir().join("rskpca_bench_eigen.json");
+        dispatch(&to_vec(&[
+            "bench",
+            "eigen",
+            "--quick",
+            "--json",
+            "--sizes",
+            "48",
+            "--threads",
+            "2",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let v = crate::ser::parse(&text).unwrap();
+        let rows = v.as_arr().unwrap();
+        // serial + blocked t1 + blocked t2 + subspace at one size.
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].req_str("op").unwrap(), "eigh_serial");
+        assert_eq!(rows[1].req_str("op").unwrap(), "eigh_blocked");
+        assert_eq!(rows[1].req_usize("threads").unwrap(), 1);
+        assert_eq!(rows[2].req_str("op").unwrap(), "eigh_blocked");
+        assert_eq!(rows[2].req_usize("threads").unwrap(), 2);
+        assert_eq!(rows[3].req_str("op").unwrap(), "subspace_eigh");
+        assert!(rows[0].req_f64("ns_per_op").unwrap() > 0.0);
+        std::fs::remove_file(&out).ok();
     }
 
     #[test]

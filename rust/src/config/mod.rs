@@ -210,9 +210,10 @@ pub struct RunConfig {
     /// 0 = auto (one per available core).  Flows into
     /// `parallel::set_threads` when the CLI loads the config.
     pub threads: usize,
-    /// Eigensolver policy for the fit pipeline: `solver = "exact"`
-    /// (default) or `"subspace"`, the latter tunable via
-    /// `solver_k` (0 = requested rank) and `solver_tol`.
+    /// Eigensolver policy for the fit pipeline: `solver = "auto"`
+    /// (default — residual-gated subspace solve for truncated fits,
+    /// exact fallback), `"exact"`, or `"subspace"`, the latter tunable
+    /// via `solver_k` (0 = requested rank) and `solver_tol`.
     pub solver: EigSolver,
     /// Embedding-service settings.
     pub service: ServiceConfig,
@@ -333,7 +334,7 @@ impl Default for RunConfig {
             backend: "native".into(),
             artifacts_dir: "artifacts".into(),
             threads: 0,
-            solver: EigSolver::Exact,
+            solver: EigSolver::Auto,
             service: ServiceConfig::default(),
             server: ServerConfig::default(),
         }
@@ -358,10 +359,10 @@ impl RunConfig {
         cfg.artifacts_dir =
             doc.get_str("run", "artifacts_dir", &cfg.artifacts_dir);
         cfg.threads = doc.get_usize("run", "threads", cfg.threads);
-        let solver_name = doc.get_str("run", "solver", "exact");
+        let solver_name = doc.get_str("run", "solver", "auto");
         cfg.solver = EigSolver::parse(&solver_name).ok_or_else(|| {
             Error::Config(format!(
-                "solver must be 'exact' or 'subspace[...]', got \
+                "solver must be 'auto', 'exact' or 'subspace[...]', got \
                  '{solver_name}'"
             ))
         })?;
@@ -539,8 +540,15 @@ workers = 2
 
     #[test]
     fn solver_policy_parses_with_knobs() {
+        // Auto is the new default; the explicit names still parse.
         let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.solver, EigSolver::Auto);
+        let cfg =
+            RunConfig::from_toml("[run]\nsolver = \"exact\"").unwrap();
         assert_eq!(cfg.solver, EigSolver::Exact);
+        let cfg =
+            RunConfig::from_toml("[run]\nsolver = \"auto\"").unwrap();
+        assert_eq!(cfg.solver, EigSolver::Auto);
         let cfg = RunConfig::from_toml(
             "[run]\nsolver = \"subspace\"\nsolver_k = 8\n\
              solver_tol = 1e-10",

@@ -7,7 +7,7 @@
 //! O(mn · iters): same per-pass complexity as ShDE but iterative, which is
 //! exactly the training-time disadvantage the paper calls out.
 
-use super::{ReducedSet, RsdeEstimator};
+use super::{nearest_centers, ReducedSet, RsdeEstimator};
 use crate::kernel::Kernel;
 use crate::linalg::{sq_euclidean, Matrix};
 use crate::prng::Pcg64;
@@ -70,21 +70,15 @@ impl RsdeEstimator for KMeansRsde {
         let mut assignment = vec![0usize; n];
 
         for _iter in 0..self.max_iters {
-            // Assign.
+            // Assign: one batched norm-trick pass (`‖x‖² + ‖c‖² −
+            // 2·X·Cᵀ` over row blocks) replaces the n·m scalar distance
+            // loop; ties go to the lowest center index.
             let mut moved = false;
-            for i in 0..n {
-                let row = x.row(i);
-                let mut best = assignment[i];
-                let mut best_d = sq_euclidean(row, centroids.row(best));
-                for c in 0..m {
-                    let dist = sq_euclidean(row, centroids.row(c));
-                    if dist < best_d {
-                        best_d = dist;
-                        best = c;
-                    }
-                }
-                if best != assignment[i] {
-                    assignment[i] = best;
+            for (slot, best) in
+                assignment.iter_mut().zip(nearest_centers(x, &centroids))
+            {
+                if *slot != best {
+                    *slot = best;
                     moved = true;
                 }
             }

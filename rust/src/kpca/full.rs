@@ -14,9 +14,15 @@ use crate::prng::Pcg64;
 /// Embedding: `z_ι(y) = (√n / λ̂_ι) Σ_i k(y, x_i) φ_i^ι` — the Nyström
 /// eigenfunction extension of the empirical eigenvector, normalized in
 /// `L²(p̂_n)` (Bengio et al. 2004).
+///
+/// Solves under the default [`EigSolver::Auto`] policy: truncated fits
+/// (`r ≪ n`) take the residual-gated subspace path and fall back to
+/// exact `eigh` otherwise (within 1e-8 of the exact path at the
+/// embedding level — asserted end-to-end); use
+/// [`fit_kpca_with`]`(…, &EigSolver::Exact)` to force the exact solve.
 pub fn fit_kpca(x: &Matrix, kernel: &Kernel, r: usize)
     -> Result<EmbeddingModel> {
-    fit_kpca_with(x, kernel, r, &EigSolver::Exact)
+    fit_kpca_with(x, kernel, r, &EigSolver::default())
 }
 
 /// [`fit_kpca`] under an explicit eigensolver policy (the

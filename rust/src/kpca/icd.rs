@@ -76,7 +76,7 @@ pub fn icd(x: &Matrix, kernel: &Kernel, m_max: usize, tol: f64)
     if rank == 0 {
         return Err(Error::Numerical("icd: zero-rank kernel".into()));
     }
-    let l = l.select_cols(&(0..rank).collect::<Vec<_>>());
+    let l = l.leading_cols(rank);
     let residual_trace = d.iter().map(|v| v.max(0.0)).sum();
     Ok(IcdFactor { l, pivots, residual_trace })
 }

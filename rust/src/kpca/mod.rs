@@ -32,8 +32,10 @@
 //!
 //! All five constructors run through the unified trainer pipeline
 //! (`trainer.rs`): build the (possibly density-weighted) Gram surrogate,
-//! eigensolve it under an [`EigSolver`] policy (`Exact` | `Subspace`),
-//! and scale eigenvectors into coefficients.  Reduced-set models
+//! eigensolve it under an [`EigSolver`] policy (`Exact` | `Auto` |
+//! `Subspace`; `Auto` — the config default — residual-gates a truncated
+//! subspace solve and falls back to exact), and scale eigenvectors into
+//! coefficients.  Reduced-set models
 //! additionally support [`EmbeddingModel::refresh`] — an incremental
 //! refit from a streaming [`crate::density::ShadowDelta`] that re-solves
 //! only the m×m weighted system (the paper's cheap-update claim) with

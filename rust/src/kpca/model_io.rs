@@ -55,7 +55,14 @@ impl EmbeddingModel {
     pub fn from_json(v: &Json) -> Result<EmbeddingModel> {
         let format = v.req_str("format")?;
         let meta = match format {
-            FORMAT_V1 => ModelMeta::default(),
+            // v1 predates the solver field: those models were produced
+            // (and refreshed) under the then-default exact policy — pin
+            // it, so upgrading the reader never silently reroutes a
+            // legacy model's refresh through the Auto truncated path.
+            FORMAT_V1 => ModelMeta {
+                solver: EigSolver::Exact,
+                ..ModelMeta::default()
+            },
             FORMAT_V2 => {
                 let version = v.req_usize("version")? as u64;
                 let solver_name = v.req_str("solver")?;
@@ -178,9 +185,12 @@ mod tests {
         )
         .unwrap();
         let model = EmbeddingModel::from_json(&doc).unwrap();
-        assert_eq!(model.meta, ModelMeta::default());
         assert_eq!(model.meta.version, 0);
+        // v1 files pin the exact policy (they predate the solver field
+        // and were refreshed under the old Exact default) even though
+        // fresh fits now default to Auto.
         assert_eq!(model.meta.solver, EigSolver::Exact);
+        assert_ne!(model.meta.solver, EigSolver::default());
         assert!(model.meta.rsde.is_none());
         assert_eq!(model.n_retained(), 2);
         // Re-saving upgrades the file to v2.

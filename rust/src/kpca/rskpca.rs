@@ -42,7 +42,11 @@ use crate::kernel::Kernel;
 /// ```
 pub fn fit_rskpca(rs: &ReducedSet, kernel: &Kernel, r: usize)
     -> Result<EmbeddingModel> {
-    fit_rskpca_with(rs, kernel, r, &EigSolver::Exact)
+    // Default policy (`EigSolver::Auto`): reduced sets below the
+    // truncation crossover — the common case, m ≪ n by design — run
+    // the exact solver bitwise; large weighted systems take the
+    // residual-gated truncated path.
+    fit_rskpca_with(rs, kernel, r, &EigSolver::default())
 }
 
 /// [`fit_rskpca`] under an explicit eigensolver policy; the policy is

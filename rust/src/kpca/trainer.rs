@@ -8,9 +8,12 @@
 //! [`TrainPlan`] → weighted Gram → eigensolve → `build_coeffs` pipeline,
 //! which buys three things at once:
 //!
-//! * an [`EigSolver`] **policy** (`Exact` | `Subspace`) threaded through
-//!   every constructor, so `linalg::subspace_eigh` finally reaches the
-//!   fit path (validated against exact `eigh` by property tests);
+//! * an [`EigSolver`] **policy** (`Exact` | `Auto` | `Subspace`)
+//!   threaded through every constructor, so `linalg::subspace_eigh`
+//!   finally reaches the fit path (validated against exact `eigh` by
+//!   property tests); `Auto` — the default — sends truncated fits
+//!   (`r ≪ m`) through the residual-gated subspace solve and falls back
+//!   to exact `eigh` when the acceptance test fails;
 //! * [`EmbeddingModel::refresh`] — the paper's Table 2 asymmetry made
 //!   operational: after streaming deltas
 //!   ([`crate::density::ShadowDelta`]), only the m×m weighted system is
@@ -23,27 +26,53 @@
 use crate::density::ShadowDelta;
 use crate::error::{Error, Result};
 use crate::kernel::Kernel;
-use crate::linalg::{eigh, subspace_eigh, Eigh, Matrix};
+use crate::linalg::{eigh, subspace_eigh, subspace_eigh_resid, Eigh, Matrix};
 
 use super::{build_coeffs, EmbeddingModel, EIG_FLOOR};
 
 /// Sweep cap for the subspace policy (each sweep is one parallel `A·Q`).
 const SUBSPACE_MAX_ITERS: usize = 500;
 
+/// `Auto` policy: smallest surrogate order worth a subspace attempt —
+/// below this the blocked exact solver is already effectively free.
+const AUTO_MIN_DIM: usize = 128;
+/// `Auto` policy: the oversampled block `want + 2` must fit this many
+/// times into the matrix order for the truncated solve to be the win
+/// (`r ≪ m`); otherwise the exact path runs directly.
+const AUTO_BLOCK_DIVISOR: usize = 8;
+/// `Auto` policy: sweep cap before giving up on the truncated solve.
+const AUTO_MAX_ITERS: usize = 300;
+/// `Auto` policy: Ritz-value settlement tolerance.
+const AUTO_VALUE_TOL: f64 = 1e-13;
+/// `Auto` policy: residual acceptance gate — every returned pair must
+/// satisfy `‖A·v − λ·v‖ ≤ AUTO_RESID_TOL · λ_0`, which keeps accepted
+/// truncated fits within ~1e-8 of the exact path at the embedding level
+/// (asserted end-to-end in `tests/end_to_end.rs`).
+const AUTO_RESID_TOL: f64 = 1e-10;
+
 /// Eigensolver policy for the fit pipeline.
 ///
-/// `Exact` runs the full `O(m³)` tridiagonal solver; `Subspace` runs
+/// `Exact` runs the full blocked `O(m³)` solver; `Subspace` runs
 /// blocked subspace iteration for the leading eigenpairs only (`O(m²k)`
 /// per sweep on the parallel matmul engine) — the right choice when the
 /// requested rank r is far below m, which is the common serving regime.
+/// `Auto` (the default) picks per solve: truncated fits (`r ≪ m`, order
+/// above a crossover) go through the **residual-gated** subspace solve
+/// and are accepted only when every returned pair passes
+/// `‖A·v − λ·v‖ ≤ 1e-10 · λ_0`; anything else — small systems,
+/// near-defective/flat spectra that defeat the iteration, or a failed
+/// subspace solve — falls back to exact [`crate::linalg::eigh`].
 /// Subspace iteration is PSD-only by design; every surrogate this crate
 /// eigendecomposes (kernel Gram matrices and their weighted forms) is
 /// PSD by construction.
 #[derive(Clone, Copy, Debug, PartialEq, Default)]
 pub enum EigSolver {
     /// Full symmetric eigendecomposition (`linalg::eigh`).
-    #[default]
     Exact,
+    /// Residual-gated subspace solve for truncated fits, exact
+    /// fallback otherwise (the default).
+    #[default]
+    Auto,
     /// Leading-k subspace iteration (`linalg::subspace_eigh`); `k = 0`
     /// means "use the requested embedding rank".
     Subspace {
@@ -60,6 +89,28 @@ impl EigSolver {
     pub fn solve(&self, a: &Matrix, want: usize) -> Result<Eigh> {
         match *self {
             EigSolver::Exact => eigh(a),
+            EigSolver::Auto => {
+                let n = a.rows();
+                let truncated = want > 0
+                    && n >= AUTO_MIN_DIM
+                    && (want + 2) * AUTO_BLOCK_DIVISOR <= n;
+                if truncated {
+                    // A subspace error (e.g. asymmetry) falls through to
+                    // eigh, which reports it with full context.
+                    if let Ok((eig, rel)) = subspace_eigh_resid(
+                        a,
+                        want,
+                        AUTO_MAX_ITERS,
+                        AUTO_VALUE_TOL,
+                        AUTO_RESID_TOL,
+                    ) {
+                        if rel <= AUTO_RESID_TOL {
+                            return Ok(eig);
+                        }
+                    }
+                }
+                eigh(a)
+            }
             EigSolver::Subspace { k, tol } => {
                 let k_eff = if k == 0 { want } else { k.max(want) };
                 let tol = if tol > 0.0 { tol } else { 1e-12 };
@@ -73,17 +124,21 @@ impl EigSolver {
     pub fn name(&self) -> String {
         match *self {
             EigSolver::Exact => "exact".into(),
+            EigSolver::Auto => "auto".into(),
             EigSolver::Subspace { k, tol } => {
                 format!("subspace:k={k},tol={tol:e}")
             }
         }
     }
 
-    /// Parse a policy name: `exact`, `subspace`, `subspace:k=8`, or
-    /// `subspace:k=8,tol=1e-10`.
+    /// Parse a policy name: `exact`, `auto`, `subspace`,
+    /// `subspace:k=8`, or `subspace:k=8,tol=1e-10`.
     pub fn parse(s: &str) -> Option<EigSolver> {
         if s == "exact" {
             return Some(EigSolver::Exact);
+        }
+        if s == "auto" {
+            return Some(EigSolver::Auto);
         }
         let rest = s.strip_prefix("subspace")?;
         let mut k = 0usize;
@@ -595,6 +650,7 @@ mod tests {
     fn solver_names_round_trip() {
         for solver in [
             EigSolver::Exact,
+            EigSolver::Auto,
             EigSolver::Subspace { k: 0, tol: 1e-12 },
             EigSolver::Subspace { k: 8, tol: 1e-10 },
         ] {
@@ -607,13 +663,98 @@ mod tests {
             Some(EigSolver::Subspace { k: 4, tol: 1e-12 }));
         assert!(EigSolver::parse("qr").is_none());
         assert!(EigSolver::parse("subspace:j=4").is_none());
+        // Auto is the default policy (config `[run] solver = "auto"`).
+        assert_eq!(EigSolver::default(), EigSolver::Auto);
+    }
+
+    #[test]
+    fn auto_accepts_truncated_solve_on_decaying_spectrum() {
+        // A kernel Gram of clustered data has the fast-decaying,
+        // well-separated leading spectrum the truncated path targets:
+        // Auto must take the subspace branch (bitwise equal to the
+        // residual-gated solve) and agree with exact eigh to 1e-9.
+        let ds = gaussian_mixture_2d(200, 3, 0.4, 9);
+        let k = Kernel::gaussian(1.0);
+        let gram = k.gram_sym(&ds.x);
+        let auto = EigSolver::Auto.solve(&gram, 4).unwrap();
+        let (gated, rel) = crate::linalg::subspace_eigh_resid(
+            &gram, 4, 300, 1e-13, 1e-10,
+        )
+        .unwrap();
+        assert!(rel <= 1e-10, "gate did not converge: {rel:e}");
+        assert_eq!(auto.values, gated.values, "Auto did not accept");
+        assert_eq!(auto.vectors.as_slice(), gated.vectors.as_slice());
+        let exact = EigSolver::Exact.solve(&gram, 4).unwrap();
+        for j in 0..4 {
+            assert!(
+                (auto.values[j] - exact.values[j]).abs()
+                    <= 1e-9 * exact.values[0],
+                "value {j}: {} vs {}",
+                auto.values[j],
+                exact.values[j]
+            );
+        }
+    }
+
+    #[test]
+    fn auto_residual_fallback_triggers_on_near_defective_spectrum() {
+        // 2·I + 1e-4·S has a flat spectrum with tiny gaps — the
+        // near-defective regime where subspace iteration stalls inside
+        // its sweep cap with residuals far above the gate.  Auto must
+        // return the exact-path result (bitwise: the same eigh call).
+        let n = 160;
+        let mut rng = crate::prng::Pcg64::new(404);
+        let mut a = Matrix::identity(n).scale(2.0);
+        let jitter = 1e-4 / (n as f64).sqrt();
+        for i in 0..n {
+            for j in i..n {
+                let v = jitter * rng.normal();
+                a.set(i, j, a.get(i, j) + v);
+                if j > i {
+                    a.set(j, i, a.get(j, i) + v);
+                }
+            }
+        }
+        // The gate really does reject this spectrum...
+        let (_, rel) = crate::linalg::subspace_eigh_resid(
+            &a, 4, 300, 1e-13, 1e-10,
+        )
+        .unwrap();
+        assert!(rel > 1e-10, "spectrum unexpectedly converged: {rel:e}");
+        // ...so Auto falls back to the exact solver.
+        let auto = EigSolver::Auto.solve(&a, 4).unwrap();
+        let exact = crate::linalg::eigh(&a).unwrap();
+        assert_eq!(auto.values, exact.values);
+        assert_eq!(auto.vectors.as_slice(), exact.vectors.as_slice());
+    }
+
+    #[test]
+    fn auto_goes_exact_for_small_or_untruncated_systems() {
+        // Below the crossover (or when r is not ≪ m) Auto is exactly
+        // the exact path.
+        let ds = gaussian_mixture_2d(60, 3, 0.4, 3);
+        let k = Kernel::gaussian(1.0);
+        let gram = k.gram_sym(&ds.x);
+        let auto = EigSolver::Auto.solve(&gram, 4).unwrap();
+        let exact = crate::linalg::eigh(&gram).unwrap();
+        assert_eq!(auto.values, exact.values);
+        assert_eq!(auto.vectors.as_slice(), exact.vectors.as_slice());
+        // Wide rank request on a big system: (want+2)*8 > n -> exact.
+        let ds = gaussian_mixture_2d(150, 3, 0.4, 4);
+        let gram = k.gram_sym(&ds.x);
+        let auto = EigSolver::Auto.solve(&gram, 40).unwrap();
+        let exact = crate::linalg::eigh(&gram).unwrap();
+        assert_eq!(auto.values, exact.values);
     }
 
     #[test]
     fn subspace_policy_matches_exact_fit() {
         let ds = gaussian_mixture_2d(200, 3, 0.4, 9);
         let k = Kernel::gaussian(1.0);
-        let exact = fit_kpca(&ds.x, &k, 4).unwrap();
+        // Pin the reference to the genuinely exact path (plain fit_kpca
+        // now defaults to Auto).
+        let exact =
+            fit_kpca_with(&ds.x, &k, 4, &EigSolver::Exact).unwrap();
         let sub = fit_kpca_with(
             &ds.x,
             &k,

@@ -129,6 +129,10 @@ pub(crate) enum BSrc<'a> {
 /// Shared read-only state for one GEMM invocation.
 struct Ctx<'a> {
     a: &'a [f64],
+    /// Row stride of A (`lda >= k`; `== k` for contiguous operands).
+    lda: usize,
+    /// Row stride of C (`ldc >= n`; `== n` for contiguous outputs).
+    ldc: usize,
     m: usize,
     n: usize,
     k: usize,
@@ -160,14 +164,67 @@ pub(crate) fn gemm_into(
     threads: usize,
     scratch: &mut GemmScratch,
 ) {
+    gemm_impl(c, n, m, n, k, a, k, b, upper_only, false, threads, scratch)
+}
+
+/// Generalized GEMM: `C (+)= A * B` with explicit row strides for A
+/// (`lda >= k`) and C (`ldc >= n`), so operands may be column blocks of
+/// a wider row-major buffer (the blocked eigensolver's compact-WY
+/// back-transform reads/writes trailing column blocks of the
+/// eigenvector store in place).  `accumulate` adds into C instead of
+/// overwriting; bytes between `n` and the stride are never touched.
+/// Same packing/micro-kernel/determinism machinery as [`gemm_into`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_strided_into(
+    c: &mut [f64],
+    ldc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    lda: usize,
+    b: BSrc<'_>,
+    accumulate: bool,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    gemm_impl(c, ldc, m, n, k, a, lda, b, false, accumulate, threads, scratch)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_impl(
+    c: &mut [f64],
+    ldc: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    lda: usize,
+    b: BSrc<'_>,
+    upper_only: bool,
+    accumulate: bool,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
     if m == 0 || n == 0 {
         return;
     }
-    debug_assert!(a.len() >= m * k, "gemm: A buffer too small");
-    debug_assert!(c.len() >= m * n, "gemm: C buffer too small");
-    let c = &mut c[..m * n];
+    debug_assert!(lda >= k, "gemm: lda < k");
+    debug_assert!(ldc >= n, "gemm: ldc < n");
+    debug_assert!(
+        a.len() >= (m - 1) * lda + k,
+        "gemm: A buffer too small"
+    );
+    debug_assert!(
+        c.len() >= (m - 1) * ldc + n,
+        "gemm: C buffer too small"
+    );
     if k == 0 {
-        c.fill(0.0);
+        if !accumulate {
+            for r in 0..m {
+                c[r * ldc..r * ldc + n].fill(0.0);
+            }
+        }
         return;
     }
     let m_panels = (m + MR - 1) / MR;
@@ -198,12 +255,12 @@ pub(crate) fn gemm_into(
     } else {
         crate::parallel::even_ranges(m_panels, threads)
     };
-    let ctx = Ctx { a, m, n, k, kc_max, n_panels, upper_only };
+    let ctx = Ctx { a, lda, ldc, m, n, k, kc_max, n_panels, upper_only };
 
     let mut kb = 0usize;
     while kb < k {
         let kc = (k - kb).min(KC);
-        let first = kb == 0;
+        let first = kb == 0 && !accumulate;
         pack_b(pb, b, &ctx, kb, kc);
         if ranges.len() == 1 {
             run_band(&ctx, ranges[0].clone(), c, pa, pb, kb, kc, first);
@@ -215,11 +272,18 @@ pub(crate) fn gemm_into(
             // Reborrow (not move) so the next KC block can split again.
             let mut c_rest: &mut [f64] = &mut *c;
             let mut pa_rest: &mut [f64] = &mut *pa;
-            for r in &ranges {
+            for (bi, r) in ranges.iter().enumerate() {
                 let row_start = r.start * MR;
                 let row_end = (r.end * MR).min(m);
-                let (c_band, c_tail) =
-                    c_rest.split_at_mut((row_end - row_start) * n);
+                // The last band's rows may end short of a full stride
+                // (`(rows - 1) * ldc + n` elements); hand it the whole
+                // remainder instead of a stride-exact split.
+                let take = if bi + 1 == ranges.len() {
+                    c_rest.len()
+                } else {
+                    (row_end - row_start) * ctx.ldc
+                };
+                let (c_band, c_tail) = c_rest.split_at_mut(take);
                 let (pa_band, pa_tail) =
                     pa_rest.split_at_mut(r.len() * MR * kc_max);
                 jobs.push((r.clone(), c_band, pa_band));
@@ -289,11 +353,12 @@ fn pack_b(pb: &mut [f64], b: BSrc<'_>, ctx: &Ctx<'_>, kb: usize, kc: usize) {
 }
 
 /// Pack one A panel (rows `i0 .. i0+rows`, k block `[kb, kb+kc)`) into
-/// k-major MR-wide columns (tail rows zero-padded).
+/// k-major MR-wide columns (tail rows zero-padded).  `lda` is A's row
+/// stride (`== k` for contiguous operands).
 fn pack_a(
     pa: &mut [f64],
     a: &[f64],
-    k: usize,
+    lda: usize,
     i0: usize,
     rows: usize,
     kb: usize,
@@ -301,7 +366,7 @@ fn pack_a(
 ) {
     for r in 0..MR {
         if r < rows {
-            let src = &a[(i0 + r) * k + kb..][..kc];
+            let src = &a[(i0 + r) * lda + kb..][..kc];
             for (kk, &v) in src.iter().enumerate() {
                 pa[kk * MR + r] = v;
             }
@@ -333,7 +398,7 @@ fn run_band(
         let i0 = p * MR;
         let rows = (m - i0).min(MR);
         let pa = &mut pa_band[pi * MR * ctx.kc_max..][..MR * kc];
-        pack_a(pa, ctx.a, ctx.k, i0, rows, kb, kc);
+        pack_a(pa, ctx.a, ctx.lda, i0, rows, kb, kc);
         for jp in 0..ctx.n_panels {
             let j0 = jp * NR;
             if ctx.upper_only && j0 + NR <= i0 {
@@ -347,13 +412,13 @@ fn run_band(
             if !first {
                 for r in 0..rows {
                     let crow =
-                        &c_band[(i0 - row0 + r) * n + j0..][..cols];
+                        &c_band[(i0 - row0 + r) * ctx.ldc + j0..][..cols];
                     acc[r * NR..r * NR + cols].copy_from_slice(crow);
                 }
             }
             micro_kernel(kc, pa, pbp, &mut acc);
             for r in 0..rows {
-                c_band[(i0 - row0 + r) * n + j0..][..cols]
+                c_band[(i0 - row0 + r) * ctx.ldc + j0..][..cols]
                     .copy_from_slice(&acc[r * NR..r * NR + cols]);
             }
         }
@@ -386,6 +451,117 @@ fn micro_kernel(kc: usize, pa: &[f64], pb: &[f64], acc: &mut [f64; MR * NR]) {
     acc[NR..2 * NR].copy_from_slice(&c1);
     acc[2 * NR..3 * NR].copy_from_slice(&c2);
     acc[3 * NR..4 * NR].copy_from_slice(&c3);
+}
+
+/// Symmetric rank-2k update `C -= U·Wᵀ + W·Uᵀ` over an `mm x mm`
+/// (sub)matrix with row stride `ldc` (element `(r, j)` at
+/// `c[r * ldc + j]`); `u` and `w` are `mm x k` row-major.  This is the
+/// `syrk`-style entry point the blocked tridiagonalization drives: one
+/// call applies a whole panel of NB aggregated Householder rank-2
+/// sweeps to the trailing matrix.
+///
+/// * `upper_only` skips the strictly-lower triangle (the caller mirrors
+///   it, e.g. via [`mirror_upper_to_lower`]); the full square costs 2x
+///   the flops but needs no mirror pass.
+/// * Rows fan out over scoped threads through the [`crate::parallel`]
+///   range splits, cost-weighted by the surviving column count when
+///   `upper_only`.  Each output element accumulates its `k` terms in a
+///   fixed order independent of the band split, so results are bitwise
+///   identical at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn syr2k_sub_into(
+    c: &mut [f64],
+    ldc: usize,
+    mm: usize,
+    k: usize,
+    u: &[f64],
+    w: &[f64],
+    upper_only: bool,
+    threads: usize,
+) {
+    if mm == 0 || k == 0 {
+        return;
+    }
+    debug_assert!(ldc >= mm, "syr2k: ldc < mm");
+    debug_assert!(c.len() >= (mm - 1) * ldc + mm, "syr2k: C too small");
+    debug_assert!(u.len() >= mm * k && w.len() >= mm * k);
+    let ranges = if upper_only {
+        crate::parallel::weighted_ranges(mm, threads, |r| (mm - r) as f64)
+    } else {
+        crate::parallel::even_ranges(mm, threads)
+    };
+    let run = |rows: Range<usize>, band: &mut [f64]| {
+        for r in rows.clone() {
+            let crow = &mut band[(r - rows.start) * ldc..];
+            let ur = &u[r * k..r * k + k];
+            let wr = &w[r * k..r * k + k];
+            let j0 = if upper_only { r } else { 0 };
+            for j in j0..mm {
+                let uj = &u[j * k..j * k + k];
+                let wj = &w[j * k..j * k + k];
+                crow[j] -= super::dot4(ur, wj) + super::dot4(wr, uj);
+            }
+        }
+    };
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.first() {
+            run(r.clone(), c);
+        }
+        return;
+    }
+    // Split C into disjoint row bands (last band takes the remainder —
+    // its final row may end short of a full stride).
+    let mut bands: Vec<(Range<usize>, &mut [f64])> =
+        Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f64] = c;
+    for (bi, r) in ranges.iter().enumerate() {
+        let take = if bi + 1 == ranges.len() {
+            rest.len()
+        } else {
+            r.len() * ldc
+        };
+        let (band, tail) = rest.split_at_mut(take);
+        bands.push((r.clone(), band));
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        let run = &run;
+        let mut it = bands.into_iter();
+        let head = it.next().expect("at least two bands");
+        let handles: Vec<_> = it
+            .map(|(r, band)| s.spawn(move || run(r, band)))
+            .collect();
+        run(head.0, head.1);
+        for h in handles {
+            h.join().expect("syr2k worker panicked");
+        }
+    });
+}
+
+/// Copy the upper triangle of an `mm x mm` (sub)matrix with row stride
+/// `ldc` onto its strictly-lower triangle, in cache-local square tiles
+/// (the column-strided writes of a naive mirror would miss on every
+/// element; a tile's target lines stay resident across its rows).
+/// Companion to the `upper_only` forms of [`gemm_into`] /
+/// [`syr2k_sub_into`].
+pub(crate) fn mirror_upper_to_lower(c: &mut [f64], ldc: usize, mm: usize) {
+    const TB: usize = 64;
+    debug_assert!(mm == 0 || c.len() >= (mm - 1) * ldc + mm);
+    let mut i0 = 0;
+    while i0 < mm {
+        let i1 = (i0 + TB).min(mm);
+        let mut j0 = i0;
+        while j0 < mm {
+            let j1 = (j0 + TB).min(mm);
+            for i in i0..i1 {
+                for j in j0.max(i + 1)..j1 {
+                    c[j * ldc + i] = c[i * ldc + j];
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
 }
 
 #[cfg(test)]
@@ -570,6 +746,189 @@ mod tests {
                         v == sentinel || v == full[i * n + j],
                         "lower entry ({i},{j}) corrupted"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_gemm_matches_naive_and_respects_gaps() {
+        let mut s = GemmScratch::new();
+        // m·n·kc clears BLOCK_PAR_MIN_FLOPS so the t=3 case exercises
+        // the multi-band split with strided C (last band takes the
+        // remainder).
+        let (m, n, k) = (64usize, 40usize, 32usize);
+        let (lda, ldc) = (k + 5, n + 4);
+        // A embedded in a wider buffer (stride lda), C likewise.
+        let a_wide = random_matrix(m, lda, 31);
+        let mut a_tight = vec![0.0; m * k];
+        for i in 0..m {
+            a_tight[i * k..(i + 1) * k]
+                .copy_from_slice(&a_wide.as_slice()[i * lda..][..k]);
+        }
+        let b = random_matrix(k, n, 32);
+        let want = naive(m, n, k, &a_tight, BSrc::Normal(b.as_slice()));
+        for threads in [1usize, 3] {
+            let sentinel = -7.125;
+            let mut c = vec![sentinel; (m - 1) * ldc + n];
+            gemm_strided_into(
+                &mut c,
+                ldc,
+                m,
+                n,
+                k,
+                a_wide.as_slice(),
+                lda,
+                BSrc::Normal(b.as_slice()),
+                false,
+                threads,
+                &mut s,
+            );
+            for i in 0..m {
+                for j in 0..n {
+                    assert!(
+                        (c[i * ldc + j] - want[i * n + j]).abs() < 1e-10,
+                        "({i},{j}) t={threads}"
+                    );
+                }
+                // Stride gap bytes stay untouched.
+                if i + 1 < m {
+                    for j in n..ldc {
+                        assert_eq!(c[i * ldc + j], sentinel, "gap ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_adds_onto_existing_c() {
+        let mut s = GemmScratch::new();
+        // KC-crossing k (the accumulate flag must only affect the FIRST
+        // block's load) at a size big enough for multi-band at t=4.
+        let (m, n, k) = (40usize, 40usize, KC + 9);
+        let a = random_matrix(m, k, 41);
+        let b = random_matrix(k, n, 42);
+        let base = random_matrix(m, n, 43);
+        let want = naive(m, n, k, a.as_slice(), BSrc::Normal(b.as_slice()));
+        for threads in [1usize, 4] {
+            let mut c = base.as_slice().to_vec();
+            gemm_strided_into(
+                &mut c,
+                n,
+                m,
+                n,
+                k,
+                a.as_slice(),
+                k,
+                BSrc::Normal(b.as_slice()),
+                true,
+                threads,
+                &mut s,
+            );
+            for i in 0..m * n {
+                assert!(
+                    (c[i] - (base.as_slice()[i] + want[i])).abs() < 1e-10,
+                    "elem {i} t={threads}"
+                );
+            }
+        }
+        // k == 0 accumulate is the identity, not a zero-fill.
+        let mut c = base.as_slice().to_vec();
+        gemm_strided_into(
+            &mut c,
+            n,
+            m,
+            n,
+            0,
+            &[],
+            0,
+            BSrc::Normal(&[]),
+            true,
+            2,
+            &mut s,
+        );
+        assert_eq!(c, base.as_slice());
+    }
+
+    #[test]
+    fn syr2k_matches_naive_in_both_triangle_modes() {
+        let (mm, k, ldc) = (37usize, 5usize, 41usize);
+        let u = random_matrix(mm, k, 51);
+        let w = random_matrix(mm, k, 52);
+        let base = random_matrix(mm, ldc, 53);
+        let mut want = base.as_slice().to_vec();
+        for r in 0..mm {
+            for j in 0..mm {
+                let mut acc = 0.0;
+                for t in 0..k {
+                    acc += u.get(r, t) * w.get(j, t)
+                        + w.get(r, t) * u.get(j, t);
+                }
+                want[r * ldc + j] -= acc;
+            }
+        }
+        for threads in [1usize, 4] {
+            // Full square.
+            let mut c = base.as_slice().to_vec();
+            syr2k_sub_into(
+                &mut c, ldc, mm, k,
+                u.as_slice(), w.as_slice(),
+                false, threads,
+            );
+            for r in 0..mm {
+                for j in 0..mm {
+                    assert!(
+                        (c[r * ldc + j] - want[r * ldc + j]).abs() < 1e-12,
+                        "full ({r},{j}) t={threads}"
+                    );
+                }
+            }
+            // Upper-only + mirror reproduces the full square.
+            let mut c = base.as_slice().to_vec();
+            // Seed the lower triangle symmetric so the mirror output is
+            // well-defined against `want`'s symmetric-update semantics.
+            for r in 0..mm {
+                for j in 0..r {
+                    c[r * ldc + j] = c[j * ldc + r];
+                }
+            }
+            let mut want_sym = want.clone();
+            for r in 0..mm {
+                for j in 0..r {
+                    want_sym[r * ldc + j] = want_sym[j * ldc + r];
+                }
+            }
+            syr2k_sub_into(
+                &mut c, ldc, mm, k,
+                u.as_slice(), w.as_slice(),
+                true, threads,
+            );
+            mirror_upper_to_lower(&mut c, ldc, mm);
+            for r in 0..mm {
+                for j in 0..mm {
+                    assert!(
+                        (c[r * ldc + j] - want_sym[r * ldc + j]).abs()
+                            < 1e-12,
+                        "upper+mirror ({r},{j}) t={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_copies_upper_to_lower_across_tiles() {
+        let (mm, ldc) = (130usize, 133usize);
+        let mut c = random_matrix(mm, ldc, 61).as_slice().to_vec();
+        let before = c.clone();
+        mirror_upper_to_lower(&mut c, ldc, mm);
+        for r in 0..mm {
+            for j in 0..mm {
+                if j >= r {
+                    assert_eq!(c[r * ldc + j], before[r * ldc + j]);
+                } else {
+                    assert_eq!(c[r * ldc + j], before[j * ldc + r]);
                 }
             }
         }

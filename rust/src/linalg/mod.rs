@@ -16,14 +16,22 @@
 //! increasing k order, so results are bitwise identical at any thread
 //! count; the naive `*_serial` triple loops are retained as cross-check
 //! references (property-tested to <= 1e-10 agreement, exact in
-//! practice).  `subspace_eigh` builds on the parallel products for
-//! leading-eigenpair extraction.
+//! practice).  The symmetric eigensolver rides the same engine: `eigh`
+//! is a blocked Householder tridiagonalization (panel reflectors
+//! aggregated into one syr2k trailing update per panel) with a
+//! compact-WY GEMM back-transform, `eigh_serial` the retained serial
+//! tred2/tql2 reference, and `subspace_eigh` /
+//! `subspace_eigh_resid` build on the parallel products for
+//! (residual-gated) leading-eigenpair extraction.
 
 mod eigen;
 pub(crate) mod gemm;
 mod qr;
 
-pub use eigen::{eigh, jacobi_eigh, subspace_eigh, Eigh};
+pub use eigen::{
+    eigh, eigh_serial, jacobi_eigh, subspace_eigh, subspace_eigh_resid,
+    Eigh,
+};
 pub use gemm::GemmScratch;
 pub use qr::{lstsq, solve_upper_triangular, QrFactor};
 
@@ -167,6 +175,23 @@ impl Matrix {
             for (c, &j) in idx.iter().enumerate() {
                 out.set(i, c, self.get(i, j));
             }
+        }
+        out
+    }
+
+    /// The leading `k` columns, as contiguous per-row copies — the
+    /// truncation fast path (`Eigh::truncate`, the Ritz-block slice in
+    /// `subspace_eigh`, ICD rank cuts).  `k >= cols` degenerates to a
+    /// plain buffer clone (one memcpy) instead of an element-by-element
+    /// `select_cols` walk.
+    pub fn leading_cols(&self, k: usize) -> Matrix {
+        if k >= self.cols {
+            return self.clone();
+        }
+        let mut out = Matrix::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.row_mut(i)
+                .copy_from_slice(&self.row(i)[..k]);
         }
         out
     }
@@ -582,6 +607,19 @@ mod tests {
         assert_eq!(r.row(1), &[0., 1., 2.]);
         let c = a.select_cols(&[1]);
         assert_eq!(c.col(0), vec![1., 4., 7.]);
+    }
+
+    #[test]
+    fn leading_cols_matches_select_cols() {
+        let a = Matrix::from_vec(3, 4,
+            (0..12).map(|v| v as f64).collect()).unwrap();
+        let lead = a.leading_cols(2);
+        let sel = a.select_cols(&[0, 1]);
+        assert_eq!(lead, sel);
+        // k >= cols is the clone fast path.
+        assert_eq!(a.leading_cols(4), a);
+        assert_eq!(a.leading_cols(99), a);
+        assert_eq!(a.leading_cols(0).cols(), 0);
     }
 
     #[test]

@@ -51,6 +51,16 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Serializes in-crate unit tests that flip the process-global thread
+/// count (the parallel cargo-test runner would otherwise interleave
+/// their `set_threads` calls); mirrors the lock
+/// `tests/parallel_consistency.rs` keeps for the integration suite.
+/// Lock with `unwrap_or_else(|p| p.into_inner())` so one failing test
+/// doesn't poison the rest.
+#[cfg(test)]
+pub(crate) static TEST_THREAD_LOCK: std::sync::Mutex<()> =
+    std::sync::Mutex::new(());
+
 /// Hard cap on compute threads — far above any sensible single-host
 /// setting; protects against pathological config values.
 pub const MAX_THREADS: usize = 64;

@@ -15,7 +15,10 @@ use rskpca::data::{gaussian_mixture_2d, train_test_split};
 use rskpca::density::{RsdeEstimator, ShadowDensity, StreamingShadow};
 use rskpca::experiments::{self, dataset_by_name, sigma_for, ExperimentCtx};
 use rskpca::kernel::Kernel;
-use rskpca::kpca::{fit_kpca, fit_rskpca, EmbeddingModel, GramCache};
+use rskpca::kpca::{
+    fit_kpca, fit_kpca_with, fit_rskpca, fit_rskpca_with, EigSolver,
+    EmbeddingModel, GramCache,
+};
 use rskpca::linalg::Matrix;
 use rskpca::runtime::{GramBackend, NativeBackend};
 
@@ -198,6 +201,63 @@ fn hot_swap_is_non_blocking_and_versioned() {
     let snap = svc.shutdown();
     assert_eq!(snap.model_swaps, 1);
     assert_eq!(snap.model_version, 2);
+}
+
+#[test]
+fn auto_policy_embeddings_match_exact_within_1e8() {
+    // The default `Auto` solver must produce the same model as the
+    // exact path to 1e-8 at the embedding level whenever its residual
+    // gate accepts the truncated solve.  n = 240 with r = 3 clears the
+    // Auto crossover (truncated regime), and the clustered Gram's
+    // leading spectrum converges the gate comfortably (validated
+    // against the exact-PRNG spectrum: residual ~4e-11 in ~14 sweeps).
+    let ds = gaussian_mixture_2d(240, 3, 0.4, 21);
+    let kernel = Kernel::gaussian(1.0);
+    let exact =
+        fit_kpca_with(&ds.x, &kernel, 3, &EigSolver::Exact).unwrap();
+    let auto =
+        fit_kpca_with(&ds.x, &kernel, 3, &EigSolver::Auto).unwrap();
+    assert_eq!(auto.meta.solver, EigSolver::Auto);
+    assert_eq!(auto.r(), exact.r());
+    for j in 0..exact.r() {
+        let rel = (exact.op_eigenvalues[j] - auto.op_eigenvalues[j])
+            .abs()
+            / exact.op_eigenvalues[j];
+        assert!(rel < 1e-9, "eigenvalue {j} rel {rel}");
+    }
+    // Embeddings agree to 1e-8 up to the per-column sign ambiguity of
+    // eigenvectors.
+    let ze = exact.transform(&ds.x);
+    let za = auto.transform(&ds.x);
+    for j in 0..exact.r() {
+        let sign = if (ze.get(0, j) - za.get(0, j)).abs()
+            < (ze.get(0, j) + za.get(0, j)).abs()
+        {
+            1.0
+        } else {
+            -1.0
+        };
+        for i in 0..ds.x.rows() {
+            let dev = (ze.get(i, j) - sign * za.get(i, j)).abs();
+            assert!(dev < 1e-8, "col {j} row {i}: dev {dev:e}");
+        }
+    }
+
+    // The weighted (RSKPCA) pipeline under Auto: small reduced sets sit
+    // below the crossover, so Auto is exactly the exact path there —
+    // bitwise-equal models.
+    let rs = ShadowDensity::new(4.0).reduce(&ds.x, &kernel);
+    assert!(rs.m() < 128, "reduced set unexpectedly large: {}", rs.m());
+    let r_exact =
+        fit_rskpca_with(&rs, &kernel, 3, &EigSolver::Exact).unwrap();
+    let r_auto =
+        fit_rskpca_with(&rs, &kernel, 3, &EigSolver::Auto).unwrap();
+    assert_eq!(
+        r_auto.coeffs.as_slice(),
+        r_exact.coeffs.as_slice(),
+        "sub-crossover Auto must be the exact path"
+    );
+    assert_eq!(r_auto.op_eigenvalues, r_exact.op_eigenvalues);
 }
 
 #[test]
