@@ -34,6 +34,14 @@ cargo test -q
 if [ "${1:-}" != "quick" ]; then
     step "GEMM/Gram + eigensolver cross-checks under --release"
     cargo test --release -q --test parallel_consistency
+
+    # The fault-injection suite (slow-loris, mid-body disconnects,
+    # never-reading clients, the 1000-idle-connection soak) and the
+    # release-gated saturation tail check (p99 <= 2x p50 under a
+    # 1000-connection closed-loop burst) need release-mode compute to
+    # produce meaningful latency distributions.
+    step "serving fault-injection suite under --release"
+    cargo test --release -q --test server_faults
 fi
 
 step "#[ignore] drift check (tier-1 suites)"
@@ -109,7 +117,14 @@ EOF
     # unless it got 2xx embed responses.
     target/release/rskpca loadgen --target "127.0.0.1:$port" \
         --clients 2 --requests 20
-    # Clean SIGTERM shutdown: acceptor close -> drain -> join -> exit 0.
+    # Short high-concurrency burst: 1000 multiplexed connections
+    # through the event loop, with the machine-readable summary.
+    target/release/rskpca loadgen --target "127.0.0.1:$port" \
+        --concurrency 1000 --requests 2 --rows-per-request 2 \
+        --json "$smoke_dir/loadgen.json"
+    test -s "$smoke_dir/loadgen.json" \
+        || { echo "loadgen --json produced nothing"; exit 1; }
+    # Clean SIGTERM shutdown: stop accepting -> drain -> join -> exit 0.
     kill -TERM "$serve_pid"
     wait "$serve_pid"
     serve_pid=""
@@ -125,11 +140,14 @@ EOF
     # so the existence check asserts THIS run produced them.  The eigen
     # suite runs at full size (n in {512, 2048}) — its headline number
     # is the blocked-vs-serial speedup at n = 2048 on 8 threads.
-    rm -f ../BENCH_MICRO.json ../BENCH_GEMM.json ../BENCH_EIGEN.json
+    rm -f ../BENCH_MICRO.json ../BENCH_GEMM.json ../BENCH_EIGEN.json \
+        ../BENCH_SERVING.json
     RSKPCA_BENCH_QUICK=1 cargo bench --bench bench_micro
+    RSKPCA_BENCH_QUICK=1 cargo bench --bench bench_serving
     target/release/rskpca bench gemm --quick --json
     target/release/rskpca bench eigen --json
     test -f ../BENCH_MICRO.json || { echo "BENCH_MICRO.json missing"; exit 1; }
+    test -f ../BENCH_SERVING.json || { echo "BENCH_SERVING.json missing"; exit 1; }
     test -f ../BENCH_GEMM.json || { echo "BENCH_GEMM.json missing"; exit 1; }
     test -f ../BENCH_EIGEN.json || { echo "BENCH_EIGEN.json missing"; exit 1; }
 fi

@@ -112,6 +112,7 @@ fn main() {
                 dim: 0,
                 seed: 0xBE_EF,
                 warmup_ms: 3000,
+                rate: 0.0,
             })
             .unwrap();
             let label = format!("serving/{name}/w{workers}");

@@ -305,11 +305,12 @@ fn serve_listen(
     // The "listening on" line is load-bearing: with port 0 it is how
     // scripts (ci.sh's smoke step) discover the ephemeral port.
     println!(
-        "listening on http://{} ({} connection workers, \
-         queue_policy={}, max_body={}B)",
+        "listening on http://{} ({} event threads, \
+         queue_policy={}, max_conns={}, max_body={}B)",
         server.local_addr(),
         server_cfg.workers,
         server_cfg.queue_policy.name(),
+        server_cfg.max_conns,
         server_cfg.max_body_bytes
     );
     println!(
@@ -319,7 +320,7 @@ fn serve_listen(
     while !crate::server::shutdown_requested() {
         std::thread::sleep(std::time::Duration::from_millis(100));
     }
-    println!("shutdown: closing acceptor, draining connections");
+    println!("shutdown: draining connections, joining event threads");
     server.shutdown();
     Ok(t.elapsed_s())
 }
@@ -361,28 +362,54 @@ fn serve_selftest(
     Ok(t.elapsed_s())
 }
 
-/// `rskpca loadgen --target HOST:PORT [...]` — closed-loop
-/// multi-threaded client replaying row batches against a running
-/// `rskpca serve` instance; reports throughput and latency percentiles
-/// and exits non-zero when no request succeeds.
+/// `rskpca loadgen --target HOST:PORT [...]` — multiplexed client
+/// replaying row batches against a running `rskpca serve` instance
+/// (closed loop by default, open loop with `--rate`); reports
+/// throughput and latency percentiles and exits non-zero when no
+/// request succeeds.
 pub fn loadgen(args: &Args) -> Result<()> {
+    // `--concurrency` is the primary spelling; `--clients` is kept as
+    // an alias for older scripts.
+    let clients = match args.flag("concurrency") {
+        Some(_) => args.flag_usize("concurrency", 4)?,
+        None => args.flag_usize("clients", 4)?,
+    };
     let cfg = LoadgenConfig {
         target: args.flag_or("target", "127.0.0.1:7878"),
-        clients: args.flag_usize("clients", 4)?,
+        clients,
         requests_per_client: args.flag_usize("requests", 50)?,
         rows_per_request: args.flag_usize("rows-per-request", 8)?,
         dim: args.flag_usize("dim", 0)?,
         seed: args.flag_usize("seed", 0x10AD)? as u64,
         warmup_ms: args.flag_usize("wait-ms", 5000)? as u64,
+        rate: args.flag_f64("rate", 0.0)?,
     };
     println!(
-        "loadgen: target={} clients={} requests/client={} \
-         rows/request={}",
-        cfg.target, cfg.clients, cfg.requests_per_client,
-        cfg.rows_per_request
+        "loadgen: target={} concurrency={} requests/client={} \
+         rows/request={} rate={}",
+        cfg.target,
+        cfg.clients,
+        cfg.requests_per_client,
+        cfg.rows_per_request,
+        if cfg.rate > 0.0 {
+            format!("{} req/s (open loop)", cfg.rate)
+        } else {
+            "closed loop".into()
+        },
     );
     let mut report = crate::server::loadgen::run(&cfg)?;
     println!("{}", report.render());
+    match args.flag("json") {
+        Some("true") => println!("{}", report.to_json()),
+        Some(path) => {
+            std::fs::write(path, report.to_json().to_string())
+                .map_err(|e| {
+                    Error::Io(format!("write {path}: {e}"))
+                })?;
+            println!("loadgen: summary written to {path}");
+        }
+        None => {}
+    }
     if report.requests_ok == 0 {
         return Err(Error::Service(
             "no request succeeded — is the server healthy?".into(),

@@ -11,9 +11,9 @@
 //! rskpca serve   --model FILE [--listen ADDR] [--backend B]
 //!                [--config FILE] [--threads N] [--refresh N] [--ell F]
 //!                [--selftest [--requests N] [--rows-per-request N]]
-//! rskpca loadgen [--target HOST:PORT] [--clients N] [--requests N]
+//! rskpca loadgen [--target HOST:PORT] [--concurrency N] [--requests N]
 //!                [--rows-per-request N] [--dim D] [--seed N]
-//!                [--wait-ms MS]
+//!                [--wait-ms MS] [--rate R] [--json [FILE]]
 //! rskpca bench   gemm  [--quick] [--json] [--sizes N,N,..] [--threads N]
 //!                [--out FILE]
 //! rskpca bench   eigen [--quick] [--json] [--sizes N,N,..] [--threads N]
@@ -112,11 +112,16 @@ USAGE:
       --selftest runs the in-process synthetic loop instead of listening
       --refresh N hot-swaps the served model every N requests from a
       background online-RSKPCA refresher fed by the live traffic
-  rskpca loadgen [--target HOST:PORT] [--clients N] [--requests N]
+  rskpca loadgen [--target HOST:PORT] [--concurrency N] [--requests N]
                 [--rows-per-request N] [--dim D] [--seed N] [--wait-ms MS]
-      closed-loop load generator against a running serve instance;
+                [--rate R] [--json [FILE]]
+      load generator against a running serve instance over multiplexed
+      keep-alive connections (--concurrency 1000 costs ~4 threads;
+      --clients is an alias); closed loop by default, --rate R switches
+      to an open-loop schedule of R req/s with overrun counting;
       reports rows/s and latency p50/p95/p99 (row dim auto-discovered
-      via GET /models unless --dim is given)
+      via GET /models unless --dim is given); --json prints or writes
+      a machine-readable summary
   rskpca bench  gemm [--quick] [--json] [--sizes N,N,..] [--out FILE]
       effective GFLOP/s for the packed GEMM and the distance-free
       symmetric Gram at n in {512, 2048, 8192} (quick: 512 only);

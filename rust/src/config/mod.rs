@@ -283,8 +283,10 @@ pub struct ServerConfig {
     /// Listen address, e.g. "127.0.0.1:7878" (port 0 binds an
     /// ephemeral port, printed at startup).
     pub listen: String,
-    /// Fixed pool of connection-handler threads — also the maximum
-    /// number of concurrently served keep-alive connections.
+    /// Event-loop threads.  Each thread multiplexes the connections
+    /// it accepted with `poll(2)`, so this sizes CPU parallelism for
+    /// parsing/formatting — NOT the connection limit (see
+    /// `max_conns`).
     pub workers: usize,
     /// Largest accepted request body in bytes (413 beyond).
     pub max_body_bytes: usize,
@@ -292,12 +294,15 @@ pub struct ServerConfig {
     pub queue_policy: QueuePolicy,
     /// `Retry-After` hint attached to 429/503 responses, milliseconds.
     pub retry_after_ms: u64,
-    /// Idle keep-alive read timeout before a connection is closed,
-    /// milliseconds (also bounds slow-written requests).
+    /// Idle timeout, milliseconds: a connection that makes no
+    /// *progress* (complete request parsed, or response bytes
+    /// accepted) for this long is closed.  Bounds idle keep-alives,
+    /// slow-loris request drips, and stalled response readers alike.
     pub keep_alive_ms: u64,
-    /// Accepted connections queued for a free worker before the
-    /// acceptor answers 503 directly instead of buffering.
-    pub conn_backlog: usize,
+    /// Maximum concurrently open connections across all event
+    /// threads; over the cap new connections are answered 503 (far
+    /// over it, dropped).
+    pub max_conns: usize,
     /// Allow `POST /models/swap` to load models from a *server-side*
     /// file path (`{"path": ...}`).  Off by default: the route is
     /// unauthenticated, and letting any client point the server at
@@ -316,7 +321,7 @@ impl Default for ServerConfig {
             queue_policy: QueuePolicy::Reject,
             retry_after_ms: 100,
             keep_alive_ms: 5000,
-            conn_backlog: 64,
+            max_conns: 8192,
             allow_path_swap: false,
         }
     }
@@ -418,22 +423,41 @@ impl RunConfig {
         sv.keep_alive_ms =
             doc.get_f64("server", "keep_alive_ms", sv.keep_alive_ms as f64)
                 as u64;
-        sv.conn_backlog =
-            doc.get_usize("server", "conn_backlog", sv.conn_backlog);
+        sv.max_conns =
+            doc.get_usize("server", "max_conns", sv.max_conns);
         sv.allow_path_swap = doc.get_bool(
             "server",
             "allow_path_swap",
             sv.allow_path_swap,
         );
-        if sv.workers == 0 || sv.conn_backlog == 0 || sv.keep_alive_ms == 0 {
+        if sv.workers == 0 || sv.max_conns == 0 || sv.keep_alive_ms == 0 {
             return Err(Error::Config(
-                "server workers / conn_backlog / keep_alive_ms must be \
+                "server workers / max_conns / keep_alive_ms must be \
                  >= 1".into(),
             ));
         }
         if sv.max_body_bytes < 1024 {
             return Err(Error::Config(
                 "server max_body_bytes must be >= 1024".into(),
+            ));
+        }
+        // Batching knobs live in [server] because they tune serving
+        // latency, but they configure the coordinator's batcher:
+        // dispatch when a batch reaches max_batch_rows OR the oldest
+        // queued request has waited max_wait_ms.
+        cfg.service.max_batch = doc.get_usize(
+            "server",
+            "max_batch_rows",
+            cfg.service.max_batch,
+        );
+        cfg.service.max_wait_us = (doc.get_f64(
+            "server",
+            "max_wait_ms",
+            cfg.service.max_wait_us as f64 / 1000.0,
+        ) * 1000.0) as u64;
+        if cfg.service.max_batch == 0 {
+            return Err(Error::Config(
+                "server max_batch_rows must be >= 1".into(),
             ));
         }
         Ok(cfg)
@@ -585,7 +609,9 @@ max_body_bytes = 65536
 queue_policy = "block"
 retry_after_ms = 250
 keep_alive_ms = 2000
-conn_backlog = 16
+max_conns = 16
+max_batch_rows = 96
+max_wait_ms = 1.5
 allow_path_swap = true
 "#,
         )
@@ -597,8 +623,11 @@ allow_path_swap = true
         assert_eq!(sv.queue_policy, QueuePolicy::Block);
         assert_eq!(sv.retry_after_ms, 250);
         assert_eq!(sv.keep_alive_ms, 2000);
-        assert_eq!(sv.conn_backlog, 16);
+        assert_eq!(sv.max_conns, 16);
         assert!(sv.allow_path_swap);
+        // [server] batching knobs configure the coordinator batcher.
+        assert_eq!(cfg.service.max_batch, 96);
+        assert_eq!(cfg.service.max_wait_us, 1500);
         assert!(!ServerConfig::default().allow_path_swap);
         assert!(RunConfig::from_toml(
             "[server]\nqueue_policy = \"explode\""
@@ -610,6 +639,9 @@ allow_path_swap = true
         );
         assert!(
             RunConfig::from_toml("[server]\nkeep_alive_ms = 0").is_err()
+        );
+        assert!(
+            RunConfig::from_toml("[server]\nmax_batch_rows = 0").is_err()
         );
     }
 }

@@ -1,0 +1,395 @@
+//! Deadline-based dynamic batching: the pure decision core of the
+//! coordinator's size-OR-deadline flush, plus the [`Clock`] abstraction
+//! that makes it testable without real time.
+//!
+//! A batch is dispatched when either
+//!
+//! * its row count reaches `max_rows` (**size** flush — throughput is
+//!   maximal at saturation), or
+//! * its *oldest* member has waited `max_wait_us` (**deadline** flush —
+//!   tail latency is bounded at low traffic).
+//!
+//! The deadline is keyed off the enqueue time of the oldest pending
+//! request, not off when the batching worker happened to pick the
+//! request up, so a request's queue wait is bounded by
+//! `max_wait_us` + one dispatch regardless of worker scheduling.
+//!
+//! [`BatchAssembler`] owns no threads and never reads the wall clock:
+//! callers stamp every event with a microsecond timestamp from a
+//! [`Clock`].  Production uses [`SystemClock`] (monotonic, anchored at
+//! construction); the property tests drive the same state machine with
+//! a [`MockClock`] over PRNG-seeded arrival schedules, which is what
+//! makes the flush invariants checkable deterministically.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A monotonic microsecond clock.  The *only* time source the batching
+/// layer consults, so tests can substitute [`MockClock`].
+pub trait Clock: Send + Sync + 'static {
+    /// Microseconds since an arbitrary (per-clock) epoch.  Must never
+    /// decrease.
+    fn now_us(&self) -> u64;
+}
+
+/// The production clock: `Instant`-backed, anchored at construction.
+#[derive(Debug)]
+pub struct SystemClock {
+    epoch: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> SystemClock {
+        SystemClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        SystemClock::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
+/// A manually-advanced clock for deterministic tests.
+#[derive(Debug, Default)]
+pub struct MockClock {
+    t_us: AtomicU64,
+}
+
+impl MockClock {
+    pub fn new() -> MockClock {
+        MockClock::default()
+    }
+
+    /// Advance the clock by `us` microseconds.
+    pub fn advance(&self, us: u64) {
+        self.t_us.fetch_add(us, Ordering::SeqCst);
+    }
+
+    /// Jump the clock to an absolute time (must not move backwards).
+    pub fn set(&self, t_us: u64) {
+        let prev = self.t_us.swap(t_us, Ordering::SeqCst);
+        assert!(prev <= t_us, "MockClock moved backwards");
+    }
+}
+
+impl Clock for MockClock {
+    fn now_us(&self) -> u64 {
+        self.t_us.load(Ordering::SeqCst)
+    }
+}
+
+/// The batching state machine: accumulates items (each carrying a row
+/// count and an arrival timestamp) and answers "flush now?" / "when is
+/// the next deadline?".  The caller supplies every timestamp, so the
+/// assembler itself is pure and deterministic.
+///
+/// Invariants the assembler maintains (asserted by the property tests):
+///
+/// * a batch containing more than one request never exceeds `max_rows`
+///   (a single request larger than `max_rows` is admitted as its own
+///   immediately-full batch — the service never splits a request);
+/// * items are drained in arrival order;
+/// * [`BatchAssembler::deadline_us`] is the oldest member's arrival
+///   time plus `max_wait_us`, so honoring it bounds every member's
+///   wait.
+#[derive(Debug)]
+pub struct BatchAssembler<T> {
+    max_rows: usize,
+    max_wait_us: u64,
+    items: Vec<T>,
+    rows: usize,
+    oldest_us: Option<u64>,
+}
+
+impl<T> BatchAssembler<T> {
+    pub fn new(max_rows: usize, max_wait_us: u64) -> BatchAssembler<T> {
+        BatchAssembler {
+            max_rows: max_rows.max(1),
+            max_wait_us,
+            items: Vec::new(),
+            rows: 0,
+            oldest_us: None,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Rows accumulated so far.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Would adding `rows` more rows overflow a non-empty batch?  The
+    /// caller flushes first when this is true, which is exactly what
+    /// keeps multi-request batches within `max_rows`.
+    pub fn would_overflow(&self, rows: usize) -> bool {
+        !self.items.is_empty() && self.rows + rows > self.max_rows
+    }
+
+    /// Admit one item.  `now_us` stamps the batch deadline when this is
+    /// the first (oldest) member.
+    pub fn push(&mut self, item: T, rows: usize, now_us: u64) {
+        debug_assert!(
+            !self.would_overflow(rows),
+            "push would overflow; caller must flush first"
+        );
+        if self.items.is_empty() {
+            self.oldest_us = Some(now_us);
+        }
+        self.items.push(item);
+        self.rows += rows;
+    }
+
+    /// Size trigger: the batch has reached `max_rows`.
+    pub fn is_full(&self) -> bool {
+        self.rows >= self.max_rows
+    }
+
+    /// Absolute time (clock microseconds) at which the oldest member's
+    /// wait budget is exhausted; `None` while empty.
+    pub fn deadline_us(&self) -> Option<u64> {
+        self.oldest_us.map(|t| t.saturating_add(self.max_wait_us))
+    }
+
+    /// Deadline trigger: the oldest member has waited `max_wait_us`.
+    pub fn due(&self, now_us: u64) -> bool {
+        self.deadline_us().is_some_and(|d| now_us >= d)
+    }
+
+    /// Either flush trigger.
+    pub fn should_flush(&self, now_us: u64) -> bool {
+        !self.is_empty() && (self.is_full() || self.due(now_us))
+    }
+
+    /// Drain the pending batch in arrival order.
+    pub fn take(&mut self) -> Vec<T> {
+        self.rows = 0;
+        self.oldest_us = None;
+        std::mem::take(&mut self.items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    #[test]
+    fn size_trigger_fires_at_max_rows() {
+        let mut asm = BatchAssembler::new(8, 1_000);
+        for i in 0..4 {
+            assert!(!asm.would_overflow(2));
+            asm.push(i, 2, 100 + i as u64);
+        }
+        assert!(asm.is_full());
+        assert!(asm.should_flush(100));
+        assert_eq!(asm.take(), vec![0, 1, 2, 3]);
+        assert!(asm.is_empty());
+        assert_eq!(asm.deadline_us(), None);
+    }
+
+    #[test]
+    fn deadline_is_keyed_off_the_oldest_member() {
+        let mut asm = BatchAssembler::new(100, 500);
+        asm.push("a", 1, 1_000);
+        asm.push("b", 1, 1_400); // later arrival must not extend it
+        assert_eq!(asm.deadline_us(), Some(1_500));
+        assert!(!asm.due(1_499));
+        assert!(asm.due(1_500));
+        assert!(asm.should_flush(1_500));
+    }
+
+    #[test]
+    fn oversized_single_request_is_its_own_batch() {
+        let mut asm = BatchAssembler::new(8, 500);
+        // Empty assembler admits any size; it is immediately full.
+        assert!(!asm.would_overflow(50));
+        asm.push("big", 50, 0);
+        assert!(asm.is_full());
+        // A second push would overflow, so the caller flushes first.
+        assert!(asm.would_overflow(1));
+    }
+
+    #[test]
+    fn mock_clock_is_monotonic_and_advances() {
+        let c = MockClock::new();
+        assert_eq!(c.now_us(), 0);
+        c.advance(250);
+        c.set(1_000);
+        assert_eq!(c.now_us(), 1_000);
+    }
+
+    /// One simulated request in the property driver.
+    struct SimReq {
+        id: usize,
+        arrival_us: u64,
+        rows: usize,
+    }
+
+    /// Drive the assembler exactly like the service worker does —
+    /// arrivals interleaved with deadline expiries on a [`MockClock`]
+    /// — and return the flushed batches as `(flush_time, member ids)`.
+    fn simulate(
+        reqs: &[SimReq],
+        max_rows: usize,
+        max_wait_us: u64,
+    ) -> Vec<(u64, Vec<usize>)> {
+        let clock = MockClock::new();
+        let mut asm: BatchAssembler<usize> =
+            BatchAssembler::new(max_rows, max_wait_us);
+        let mut batches = Vec::new();
+        let mut flush = |asm: &mut BatchAssembler<usize>, now: u64| {
+            if !asm.is_empty() {
+                batches.push((now, asm.take()));
+            }
+        };
+        for req in reqs {
+            // Between the previous event and this arrival, a pending
+            // deadline may expire: flush at exactly that instant, the
+            // way the worker's recv_timeout wakes up.
+            if let Some(d) = asm.deadline_us() {
+                if d <= req.arrival_us {
+                    clock.set(d);
+                    flush(&mut asm, clock.now_us());
+                }
+            }
+            clock.set(req.arrival_us);
+            if asm.would_overflow(req.rows) {
+                flush(&mut asm, clock.now_us());
+            }
+            asm.push(req.id, req.rows, clock.now_us());
+            if asm.is_full() {
+                flush(&mut asm, clock.now_us());
+            }
+        }
+        if let Some(d) = asm.deadline_us() {
+            clock.set(d.max(clock.now_us()));
+        }
+        let now = clock.now_us();
+        flush(&mut asm, now);
+        batches
+    }
+
+    /// Property: over PRNG-seeded random arrival schedules, every
+    /// flushed batch respects the three invariants — multi-request
+    /// batches never exceed `max_rows`, no request waits past
+    /// `max_wait_us` (+ zero dispatch time in the simulation), and the
+    /// concatenation of batches preserves arrival order.
+    #[test]
+    fn prop_flush_invariants_over_random_schedules() {
+        for seed in 0..40u64 {
+            let mut rng = Pcg64::new(0xBA7C + seed);
+            let max_rows = 1 + rng.below(32);
+            let max_wait_us = 50 + rng.below(2_000) as u64;
+            let n = 20 + rng.below(180);
+            let mut t = 0u64;
+            let reqs: Vec<SimReq> = (0..n)
+                .map(|id| {
+                    // Bursty arrivals: mostly dense, occasionally a
+                    // long gap that forces deadline flushes.
+                    t += if rng.below(10) == 0 {
+                        max_wait_us * 2 + rng.below(500) as u64
+                    } else {
+                        rng.below(60) as u64
+                    };
+                    SimReq {
+                        id,
+                        arrival_us: t,
+                        rows: 1 + rng.below(max_rows + 4),
+                    }
+                })
+                .collect();
+            let batches = simulate(&reqs, max_rows, max_wait_us);
+
+            // Re-run: identical schedule => identical batching
+            // (determinism of the state machine itself).
+            let again = simulate(&reqs, max_rows, max_wait_us);
+            assert_eq!(batches, again, "seed {seed}: nondeterministic");
+
+            let mut seen = Vec::new();
+            for (flush_us, ids) in &batches {
+                let rows: usize =
+                    ids.iter().map(|&id| reqs[id].rows).sum();
+                if ids.len() > 1 {
+                    assert!(
+                        rows <= max_rows,
+                        "seed {seed}: batch of {} requests has {rows} \
+                         rows > max {max_rows}",
+                        ids.len()
+                    );
+                }
+                for &id in ids {
+                    let wait = flush_us - reqs[id].arrival_us;
+                    assert!(
+                        wait <= max_wait_us,
+                        "seed {seed}: request {id} waited {wait}us > \
+                         {max_wait_us}us"
+                    );
+                }
+                seen.extend_from_slice(ids);
+            }
+            let expect: Vec<usize> = (0..n).collect();
+            assert_eq!(
+                seen, expect,
+                "seed {seed}: arrival order not preserved"
+            );
+        }
+    }
+
+    /// Property: when each simulated batch is "executed" by stacking
+    /// member payloads and splitting the result by row counts, every
+    /// request gets exactly its own rows back — the routing argument
+    /// for reply fan-out under arbitrary interleavings.
+    #[test]
+    fn prop_split_routing_returns_each_requests_own_rows() {
+        for seed in 0..20u64 {
+            let mut rng = Pcg64::new(0x5EED + seed);
+            let max_rows = 2 + rng.below(16);
+            let n = 10 + rng.below(90);
+            let mut t = 0u64;
+            let reqs: Vec<SimReq> = (0..n)
+                .map(|id| {
+                    t += rng.below(300) as u64;
+                    SimReq {
+                        id,
+                        arrival_us: t,
+                        rows: 1 + rng.below(6),
+                    }
+                })
+                .collect();
+            for (_, ids) in simulate(&reqs, max_rows, 400) {
+                // "Execute" the batch: each row tagged by its owner,
+                // exactly how the worker stacks request matrices.
+                let mut stacked = Vec::new();
+                for &id in &ids {
+                    stacked.resize(stacked.len() + reqs[id].rows, id);
+                }
+                // Split replies by each member's row count, in order.
+                let mut at = 0usize;
+                for &id in &ids {
+                    let part = &stacked[at..at + reqs[id].rows];
+                    at += reqs[id].rows;
+                    assert!(
+                        part.iter().all(|&owner| owner == id),
+                        "seed {seed}: request {id} got rows of another \
+                         request"
+                    );
+                }
+                assert_eq!(at, stacked.len());
+            }
+        }
+    }
+}

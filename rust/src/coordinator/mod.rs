@@ -8,10 +8,13 @@
 //!
 //! * a bounded request queue (`sync_channel`) — **backpressure**: when the
 //!   queue is full, `try_embed` rejects instead of buffering unboundedly;
-//! * a **dynamic batcher** — the worker coalesces queued requests until
-//!   `max_batch` rows or `max_wait_us` elapse, then executes the whole
-//!   batch as one padded PJRT (or native) call, amortizing dispatch and
-//!   bucket padding;
+//! * a **size-OR-deadline dynamic batcher** ([`batch::BatchAssembler`])
+//!   — the worker coalesces queued requests and flushes when the batch
+//!   reaches `max_batch` rows *or* the oldest request has waited
+//!   `max_wait_us` (deadline keyed off enqueue time, behind the
+//!   [`batch::Clock`] trait so tests drive it with a mock clock), then
+//!   executes the whole batch as one padded PJRT (or native) call,
+//!   amortizing dispatch and bucket padding;
 //! * per-request latency / batch-size / throughput **metrics**
 //!   (including hot-swap counts and the serving model version);
 //! * a versioned [`ModelRegistry`] of named `Arc<EmbeddingModel>` slots
@@ -43,9 +46,11 @@
 //! Dynamic batching therefore does double duty: it amortizes dispatch
 //! *and* hands the compute engine row counts big enough to parallelize.
 
+pub mod batch;
 mod registry;
 mod service;
 
+pub use batch::{BatchAssembler, Clock, MockClock, SystemClock};
 pub use registry::{ModelRegistry, DEFAULT_MODEL};
 pub use service::{
     EmbeddingService, ServiceHandle, ServiceStatsSnapshot,

@@ -10,8 +10,9 @@
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
+use super::batch::{BatchAssembler, Clock, SystemClock};
 use super::registry::{ModelRegistry, DEFAULT_MODEL};
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
@@ -20,10 +21,13 @@ use crate::linalg::Matrix;
 use crate::metrics::Histogram;
 use crate::runtime::GramBackend;
 
-/// One queued embedding request.
+/// One queued embedding request.  `enqueued_us` is stamped by the
+/// *handle* at submission time (on the service's [`Clock`]), so the
+/// batcher's deadline is keyed off when the client enqueued — not off
+/// when the worker happened to pick the request up.
 struct EmbedRequest {
     rows: Matrix,
-    enqueued: Instant,
+    enqueued_us: u64,
     reply: mpsc::Sender<Result<Matrix>>,
 }
 
@@ -77,6 +81,7 @@ pub struct ServiceHandle {
     dim: usize,
     registry: Arc<ModelRegistry>,
     model_name: String,
+    clock: Arc<dyn Clock>,
 }
 
 impl ServiceHandle {
@@ -87,7 +92,7 @@ impl ServiceHandle {
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = EmbedRequest {
             rows,
-            enqueued: Instant::now(),
+            enqueued_us: self.clock.now_us(),
             reply: reply_tx,
         };
         self.tx
@@ -103,17 +108,33 @@ impl ServiceHandle {
     /// HTTP layer maps to 429).  Returns the receiver to await.
     pub fn try_embed(&self, rows: Matrix)
         -> Result<mpsc::Receiver<Result<Matrix>>> {
+        self.try_embed_inner(rows, true)
+    }
+
+    /// Like [`ServiceHandle::try_embed`], but a saturated queue does
+    /// not bump the `rejected` counter — used by the HTTP layer's
+    /// block policy, whose parked re-admission attempts are retries of
+    /// one request, not a stream of fresh rejections.
+    pub(crate) fn try_embed_quiet(&self, rows: Matrix)
+        -> Result<mpsc::Receiver<Result<Matrix>>> {
+        self.try_embed_inner(rows, false)
+    }
+
+    fn try_embed_inner(&self, rows: Matrix, count_reject: bool)
+        -> Result<mpsc::Receiver<Result<Matrix>>> {
         self.validate(&rows)?;
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = EmbedRequest {
             rows,
-            enqueued: Instant::now(),
+            enqueued_us: self.clock.now_us(),
             reply: reply_tx,
         };
         match self.tx.try_send(Msg::Embed(req)) {
             Ok(()) => Ok(reply_rx),
             Err(mpsc::TrySendError::Full(_)) => {
-                self.stats.lock().unwrap().rejected += 1;
+                if count_reject {
+                    self.stats.lock().unwrap().rejected += 1;
+                }
                 Err(Error::Saturated(
                     "embed queue full (backpressure)".into(),
                 ))
@@ -213,6 +234,27 @@ impl EmbeddingService {
         factory: crate::runtime::BackendFactory,
         cfg: ServiceConfig,
     ) -> Result<EmbeddingService> {
+        Self::start_with_clock(
+            registry,
+            model_name,
+            factory,
+            cfg,
+            Arc::new(SystemClock::new()),
+        )
+    }
+
+    /// [`EmbeddingService::start_with_registry`] with an explicit time
+    /// source.  Production uses the monotonic
+    /// [`SystemClock`]; tests inject a
+    /// [`super::batch::MockClock`] to drive the size-OR-deadline
+    /// batcher deterministically.
+    pub fn start_with_clock(
+        registry: Arc<ModelRegistry>,
+        model_name: &str,
+        factory: crate::runtime::BackendFactory,
+        cfg: ServiceConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<EmbeddingService> {
         let (model0, version0) =
             registry.get_versioned(model_name).ok_or_else(|| {
                 Error::Service(format!(
@@ -231,6 +273,7 @@ impl EmbeddingService {
             dim: model0.centers.cols(),
             registry: registry.clone(),
             model_name: model_name.to_string(),
+            clock: clock.clone(),
         };
         let name = model_name.to_string();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -259,7 +302,10 @@ impl EmbeddingService {
                 }
                 drop(model0);
                 let _ = ready_tx.send(Ok(()));
-                worker_loop(rx, registry, name, version0, backend, cfg, stats)
+                worker_loop(
+                    rx, registry, name, version0, backend, cfg, stats,
+                    clock,
+                )
             })
             .map_err(|e| Error::Service(format!("spawn worker: {e}")))?;
         ready_rx
@@ -304,8 +350,16 @@ impl Drop for EmbeddingService {
     }
 }
 
-/// The batching worker: collect -> fetch current model -> execute ->
-/// split -> reply.
+/// The batching worker: collect (size-OR-deadline) -> fetch current
+/// model -> execute -> split -> reply.
+///
+/// The flush decision lives in [`BatchAssembler`]; this loop only
+/// shuttles requests from the queue into the assembler and sleeps
+/// until the assembler's deadline.  A request that would overflow a
+/// non-empty batch is *held back* (`carry`), the pending batch is
+/// flushed, and the held request seeds the next one — so a batch with
+/// more than one member never exceeds `max_batch` rows.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rx: Receiver<Msg>,
     registry: Arc<ModelRegistry>,
@@ -314,51 +368,79 @@ fn worker_loop(
     mut backend: Box<dyn GramBackend>,
     cfg: ServiceConfig,
     stats: Arc<Mutex<ServiceStats>>,
+    clock: Arc<dyn Clock>,
 ) {
     let mut last_version = initial_version;
+    let mut asm: BatchAssembler<EmbedRequest> =
+        BatchAssembler::new(cfg.max_batch, cfg.max_wait_us);
+    let mut carry: Option<EmbedRequest> = None;
     loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(Msg::Embed(req)) => req,
-            Ok(Msg::Shutdown) | Err(_) => return,
+        // Fill phase: admit requests until a flush trigger fires.
+        let shutdown = loop {
+            if let Some(req) = carry.take() {
+                let rows = req.rows.rows();
+                if asm.would_overflow(rows) {
+                    carry = Some(req); // flush first, then re-admit
+                    break false;
+                }
+                // Deadline keyed off the request's own enqueue time,
+                // so queue backlog counts against its wait budget.
+                let enqueued_us = req.enqueued_us;
+                asm.push(req, rows, enqueued_us);
+                if asm.is_full() {
+                    break false;
+                }
+                continue;
+            }
+            if asm.is_empty() {
+                // Nothing pending: block until traffic or shutdown.
+                match rx.recv() {
+                    Ok(Msg::Embed(req)) => carry = Some(req),
+                    Ok(Msg::Shutdown) | Err(_) => break true,
+                }
+            } else {
+                let now = clock.now_us();
+                let deadline = asm.deadline_us().unwrap_or(now);
+                if now >= deadline {
+                    break false;
+                }
+                match rx
+                    .recv_timeout(Duration::from_micros(deadline - now))
+                {
+                    Ok(Msg::Embed(req)) => carry = Some(req),
+                    Ok(Msg::Shutdown) => break true,
+                    Err(RecvTimeoutError::Timeout) => break false,
+                    Err(RecvTimeoutError::Disconnected) => break true,
+                }
+            }
         };
-        let mut batch = vec![first];
-        let mut total_rows = batch[0].rows.rows();
-        let deadline =
-            Instant::now() + Duration::from_micros(cfg.max_wait_us);
-        let mut shutdown = false;
-        // Coalesce until the batch is full or the deadline passes.
-        while total_rows < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Embed(req)) => {
-                    total_rows += req.rows.rows();
-                    batch.push(req);
-                }
-                Ok(Msg::Shutdown) => {
-                    shutdown = true;
-                    break;
-                }
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    shutdown = true;
-                    break;
-                }
-            }
-        }
 
-        execute_batch(
-            &mut backend,
-            &registry,
-            &model_name,
-            &batch,
-            &stats,
-            &mut last_version,
-        );
+        if !asm.is_empty() {
+            let batch = asm.take();
+            execute_batch(
+                &mut backend,
+                &registry,
+                &model_name,
+                &batch,
+                &stats,
+                &mut last_version,
+                clock.as_ref(),
+            );
+        }
         if shutdown {
+            // Don't strand a held-back request on shutdown: execute it
+            // as its own final batch so its client gets a reply.
+            if let Some(req) = carry.take() {
+                execute_batch(
+                    &mut backend,
+                    &registry,
+                    &model_name,
+                    &[req],
+                    &stats,
+                    &mut last_version,
+                    clock.as_ref(),
+                );
+            }
             return;
         }
     }
@@ -371,6 +453,7 @@ fn execute_batch(
     batch: &[EmbedRequest],
     stats: &Arc<Mutex<ServiceStats>>,
     last_version: &mut u64,
+    clock: &dyn Clock,
 ) {
     // Fetch the model once per batch: this Arc is what the whole batch
     // executes against, so a concurrent hot swap affects only the *next*
@@ -416,7 +499,7 @@ fn execute_batch(
     // Metrics first (once per batch): a client observing its reply must
     // already see this batch reflected in a stats snapshot.
     {
-        let now = Instant::now();
+        let now_us = clock.now_us();
         let mut s = stats.lock().unwrap();
         s.batches += 1;
         s.requests += batch.len() as u64;
@@ -428,9 +511,8 @@ fn execute_batch(
         }
         s.model_version = version;
         for req in batch {
-            s.latency_us.record(
-                now.duration_since(req.enqueued).as_secs_f64() * 1e6,
-            );
+            s.latency_us
+                .record(now_us.saturating_sub(req.enqueued_us) as f64);
         }
     }
     // Split and reply.
@@ -660,6 +742,43 @@ mod tests {
         );
         assert!(snap.mean_batch_rows > 1.0);
         assert!(snap.max_batch_rows <= 64.0);
+    }
+
+    #[test]
+    fn multi_request_batches_respect_max_rows() {
+        let (model, x) = test_model();
+        let svc = EmbeddingService::start(
+            model,
+            native(),
+            ServiceConfig {
+                max_batch: 8,
+                max_wait_us: 20_000,
+                queue_depth: 256,
+                workers: 1,
+            },
+        )
+        .unwrap();
+        let h = svc.handle();
+        // 12 requests of 3 rows: 9 > 8, so the assembler must hold the
+        // overflowing request back and no batch may exceed 8 rows (the
+        // pre-assembler batcher admitted the overflow and could reach
+        // max_batch + rows - 1).
+        let mut receivers = Vec::new();
+        for i in 0..12usize {
+            let idx: Vec<usize> =
+                (0..3).map(|j| (3 * i + j) % 80).collect();
+            receivers.push(h.try_embed(x.select_rows(&idx)).unwrap());
+        }
+        for rx in receivers {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.rows, 36);
+        assert!(
+            snap.max_batch_rows <= 8.0,
+            "batch exceeded max_batch: {}",
+            snap.max_batch_rows
+        );
     }
 
     #[test]

@@ -2,9 +2,13 @@
 //!
 //! Covers exactly what the serving layer needs: a buffered,
 //! split-read-tolerant request parser ([`RequestReader`]) that preserves
-//! pipelined leftovers across keep-alive requests, a response writer
-//! ([`Response`]), and a tiny keep-alive client ([`ClientConn`]) shared
-//! by the load generator, the CI smoke step and the integration tests.
+//! pipelined leftovers across keep-alive requests and exposes both a
+//! push (`push_bytes`/`try_next`, for the event loop) and a pull
+//! (`next_request`, blocking) interface over the same state machine, a
+//! response writer ([`Response`]), the client-side mirror
+//! ([`ResponseReader`]) for the multiplexed load generator, and a tiny
+//! blocking keep-alive client ([`ClientConn`]) shared by the CI smoke
+//! step and the integration tests.
 //!
 //! Scope limits are deliberate: no chunked transfer encoding (501), no
 //! TLS, no multipart — request bodies are length-delimited JSON.  Every
@@ -108,6 +112,14 @@ impl Request {
 /// reads (a request head or body may arrive one byte at a time) and
 /// preserves bytes read past the current message for the next call, so
 /// pipelined keep-alive requests are never dropped.
+///
+/// Two consumption styles share one parser:
+///
+/// * **push** ([`RequestReader::push_bytes`] + [`RequestReader::try_next`])
+///   — the event loop feeds whatever the socket had and asks for
+///   complete requests; `Ok(None)` means "need more bytes".
+/// * **pull** ([`RequestReader::next_request`]) — the blocking form
+///   used by tests and any synchronous caller: read, push, retry.
 #[derive(Debug, Default)]
 pub struct RequestReader {
     buf: Vec<u8>,
@@ -118,13 +130,48 @@ impl RequestReader {
         RequestReader::default()
     }
 
-    /// Read one full request from `stream`.
-    pub fn next_request(
+    /// Bytes buffered but not yet consumed (a partial message and/or
+    /// pipelined followers).  The event loop uses this both for its
+    /// memory accounting and to decide whether an idle connection is
+    /// mid-request (slow-loris) or between requests.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Append bytes received from the transport.
+    pub fn push_bytes(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Try to parse one complete request out of the buffered bytes.
+    /// `Ok(None)` means the message is still incomplete; protocol
+    /// violations fail eagerly — an oversized head or declared-oversized
+    /// body errors as soon as it is evident, without waiting for the
+    /// rest of the message to arrive.
+    pub fn try_next(
         &mut self,
-        stream: &mut impl Read,
         max_body: usize,
-    ) -> Result<Request, HttpError> {
-        let header_end = fill_until_head_end(stream, &mut self.buf)?;
+    ) -> Result<Option<Request>, HttpError> {
+        let Some(header_end) = find_head_end(&self.buf) else {
+            // No terminator yet: once the buffer is past the limit the
+            // eventual terminator position can only be worse.
+            if self.buf.len() > MAX_HEAD_BYTES + 3 {
+                return Err(HttpError::bad(
+                    431,
+                    "message head exceeds 16 KiB",
+                ));
+            }
+            return Ok(None);
+        };
+        // The limit applies to the head itself, not to how much
+        // happened to arrive in one read (pipelined bytes after the
+        // terminator are legitimate).
+        if header_end > MAX_HEAD_BYTES {
+            return Err(HttpError::bad(
+                431,
+                "message head exceeds 16 KiB",
+            ));
+        }
         // Own the head so the buffer can be drained afterwards.
         let head = match std::str::from_utf8(&self.buf[..header_end]) {
             Ok(s) => s.to_string(),
@@ -174,77 +221,47 @@ impl RequestReader {
         }
         let body_start = header_end + 4;
         let total = body_start + content_length;
-        fill_to(stream, &mut self.buf, total, "truncated request body")?;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
         let body = self.buf[body_start..total].to_vec();
         self.buf.drain(..total);
-        Ok(Request {
+        Ok(Some(Request {
             method: method.to_string(),
             target: target.to_string(),
             version: version.to_string(),
             headers,
             body,
-        })
+        }))
     }
-}
 
-/// Grow `buf` from `stream` until it contains the `\r\n\r\n` head
-/// terminator; returns the terminator's start offset.
-fn fill_until_head_end(
-    stream: &mut impl Read,
-    buf: &mut Vec<u8>,
-) -> Result<usize, HttpError> {
-    loop {
-        if let Some(pos) =
-            buf.windows(4).position(|w| w == b"\r\n\r\n")
-        {
-            // The limit applies to the head itself, not to how much
-            // happened to arrive in one read (pipelined bytes after
-            // the terminator are legitimate).
-            if pos > MAX_HEAD_BYTES {
-                return Err(HttpError::bad(
-                    431,
-                    "message head exceeds 16 KiB",
-                ));
+    /// Read one full request from `stream` (blocking form).
+    pub fn next_request(
+        &mut self,
+        stream: &mut impl Read,
+        max_body: usize,
+    ) -> Result<Request, HttpError> {
+        loop {
+            if let Some(req) = self.try_next(max_body)? {
+                return Ok(req);
             }
-            return Ok(pos);
+            let mut tmp = [0u8; READ_CHUNK];
+            let n = stream.read(&mut tmp).map_err(HttpError::Io)?;
+            if n == 0 {
+                return if self.buf.is_empty() {
+                    Err(HttpError::Closed)
+                } else {
+                    Err(HttpError::bad(400, "truncated message"))
+                };
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
         }
-        // No terminator yet: once the buffer is past the limit the
-        // eventual terminator position can only be worse.
-        if buf.len() > MAX_HEAD_BYTES + 3 {
-            return Err(HttpError::bad(
-                431,
-                "message head exceeds 16 KiB",
-            ));
-        }
-        let mut tmp = [0u8; READ_CHUNK];
-        let n = stream.read(&mut tmp).map_err(HttpError::Io)?;
-        if n == 0 {
-            return if buf.is_empty() {
-                Err(HttpError::Closed)
-            } else {
-                Err(HttpError::bad(400, "truncated message head"))
-            };
-        }
-        buf.extend_from_slice(&tmp[..n]);
     }
 }
 
-/// Grow `buf` from `stream` until it holds at least `total` bytes.
-fn fill_to(
-    stream: &mut impl Read,
-    buf: &mut Vec<u8>,
-    total: usize,
-    on_eof: &str,
-) -> Result<(), HttpError> {
-    while buf.len() < total {
-        let mut tmp = [0u8; READ_CHUNK];
-        let n = stream.read(&mut tmp).map_err(HttpError::Io)?;
-        if n == 0 {
-            return Err(HttpError::bad(400, on_eof));
-        }
-        buf.extend_from_slice(&tmp[..n]);
-    }
-    Ok(())
+/// Offset of the `\r\n\r\n` head terminator, if buffered.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
 /// Parse `name: value` lines; names are lowercased, values trimmed.
@@ -355,13 +372,11 @@ impl Response {
         self
     }
 
-    /// Serialize onto the wire.  `keep_alive` selects the `Connection`
-    /// header; the body is always length-delimited.
-    pub fn write_to(
-        &self,
-        w: &mut impl Write,
-        keep_alive: bool,
-    ) -> std::io::Result<()> {
+    /// Serialize to a byte vector.  `keep_alive` selects the
+    /// `Connection` header; the body is always length-delimited.  The
+    /// event loop queues these bytes on the connection's write buffer
+    /// and drains them as the socket becomes writable.
+    pub fn to_bytes(&self, keep_alive: bool) -> Vec<u8> {
         let mut head = format!(
             "HTTP/1.1 {} {}\r\nserver: rskpca\r\ncontent-type: {}\r\n\
              content-length: {}\r\nconnection: {}\r\n",
@@ -378,8 +393,18 @@ impl Response {
             head.push_str("\r\n");
         }
         head.push_str("\r\n");
-        w.write_all(head.as_bytes())?;
-        w.write_all(&self.body)?;
+        let mut wire = head.into_bytes();
+        wire.extend_from_slice(&self.body);
+        wire
+    }
+
+    /// Serialize onto a blocking writer.
+    pub fn write_to(
+        &self,
+        w: &mut impl Write,
+        keep_alive: bool,
+    ) -> std::io::Result<()> {
+        w.write_all(&self.to_bytes(keep_alive))?;
         w.flush()
     }
 }
@@ -411,49 +436,107 @@ impl ClientResponse {
     }
 }
 
+/// Stateful incremental response parser — the client-side mirror of
+/// [`RequestReader`], used by the multiplexed load generator's
+/// per-connection state machines (and, in pull form, by
+/// [`ClientConn`]).
+#[derive(Debug, Default)]
+pub struct ResponseReader {
+    buf: Vec<u8>,
+}
+
+impl ResponseReader {
+    pub fn new() -> ResponseReader {
+        ResponseReader::default()
+    }
+
+    /// Bytes buffered but not yet consumed.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Append bytes received from the transport.
+    pub fn push_bytes(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Try to parse one complete response out of the buffered bytes;
+    /// `Ok(None)` means the message is still incomplete.
+    pub fn try_next(
+        &mut self,
+    ) -> Result<Option<ClientResponse>, HttpError> {
+        let Some(header_end) = find_head_end(&self.buf) else {
+            if self.buf.len() > MAX_HEAD_BYTES + 3 {
+                return Err(HttpError::bad(
+                    431,
+                    "message head exceeds 16 KiB",
+                ));
+            }
+            return Ok(None);
+        };
+        let head = match std::str::from_utf8(&self.buf[..header_end]) {
+            Ok(s) => s.to_string(),
+            Err(_) => {
+                return Err(HttpError::bad(400, "non-utf8 response head"))
+            }
+        };
+        let mut lines = head.split("\r\n");
+        let status_line = lines
+            .next()
+            .ok_or_else(|| HttpError::bad(400, "empty response head"))?;
+        let mut parts = status_line.splitn(3, ' ');
+        let version = parts
+            .next()
+            .ok_or_else(|| HttpError::bad(400, "bad status line"))?;
+        if !version.starts_with("HTTP/1.") {
+            return Err(HttpError::bad(400, "bad status line"));
+        }
+        let status = parts
+            .next()
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| HttpError::bad(400, "bad status code"))?;
+        let headers = parse_headers(lines)?;
+        let content_length = content_length(&headers)?;
+        let body_start = header_end + 4;
+        let total = body_start + content_length;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let body = self.buf[body_start..total].to_vec();
+        self.buf.drain(..total);
+        Ok(Some(ClientResponse { status, headers, body }))
+    }
+}
+
 /// Read one full response (status line, headers, length-delimited
-/// body) from `stream`, buffering through `buf` across calls.
+/// body) from `stream`, buffering through `reader` across calls
+/// (blocking form).
 pub(crate) fn read_client_response(
     stream: &mut impl Read,
-    buf: &mut Vec<u8>,
+    reader: &mut ResponseReader,
 ) -> Result<ClientResponse, HttpError> {
-    let header_end = fill_until_head_end(stream, buf)?;
-    let head = match std::str::from_utf8(&buf[..header_end]) {
-        Ok(s) => s.to_string(),
-        Err(_) => {
-            return Err(HttpError::bad(400, "non-utf8 response head"))
+    loop {
+        if let Some(resp) = reader.try_next()? {
+            return Ok(resp);
         }
-    };
-    let mut lines = head.split("\r\n");
-    let status_line = lines
-        .next()
-        .ok_or_else(|| HttpError::bad(400, "empty response head"))?;
-    let mut parts = status_line.splitn(3, ' ');
-    let version = parts
-        .next()
-        .ok_or_else(|| HttpError::bad(400, "bad status line"))?;
-    if !version.starts_with("HTTP/1.") {
-        return Err(HttpError::bad(400, "bad status line"));
+        let mut tmp = [0u8; READ_CHUNK];
+        let n = stream.read(&mut tmp).map_err(HttpError::Io)?;
+        if n == 0 {
+            return if reader.buf.is_empty() {
+                Err(HttpError::Closed)
+            } else {
+                Err(HttpError::bad(400, "truncated response"))
+            };
+        }
+        reader.buf.extend_from_slice(&tmp[..n]);
     }
-    let status = parts
-        .next()
-        .and_then(|s| s.parse::<u16>().ok())
-        .ok_or_else(|| HttpError::bad(400, "bad status code"))?;
-    let headers = parse_headers(lines)?;
-    let content_length = content_length(&headers)?;
-    let body_start = header_end + 4;
-    let total = body_start + content_length;
-    fill_to(stream, buf, total, "truncated response body")?;
-    let body = buf[body_start..total].to_vec();
-    buf.drain(..total);
-    Ok(ClientResponse { status, headers, body })
 }
 
 /// A blocking keep-alive HTTP/1.1 client connection.
 #[derive(Debug)]
 pub struct ClientConn {
     stream: TcpStream,
-    buf: Vec<u8>,
+    reader: ResponseReader,
 }
 
 impl ClientConn {
@@ -476,7 +559,7 @@ impl ClientConn {
             })?;
         let _ = stream.set_nodelay(true);
         let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-        Ok(ClientConn { stream, buf: Vec::new() })
+        Ok(ClientConn { stream, reader: ResponseReader::new() })
     }
 
     /// One request/response round trip (closed-loop).  `body` may be
@@ -498,7 +581,7 @@ impl ClientConn {
             .and_then(|()| self.stream.write_all(body))
             .and_then(|()| self.stream.flush())
             .map_err(|e| Error::Io(format!("send {method} {path}: {e}")))?;
-        read_client_response(&mut self.stream, &mut self.buf)
+        read_client_response(&mut self.stream, &mut self.reader)
             .map_err(Error::from)
     }
 }
@@ -550,6 +633,68 @@ mod tests {
             assert_eq!(req.body, b"hello world");
             assert!(req.keep_alive());
         }
+    }
+
+    #[test]
+    fn push_interface_parses_incrementally() {
+        let raw = b"POST /embed HTTP/1.1\r\ncontent-length: 5\r\n\r\nhello";
+        let mut reader = RequestReader::new();
+        // Feed one byte at a time; try_next must report "incomplete"
+        // at every prefix and produce the request exactly once, at the
+        // final byte.
+        for (i, b) in raw.iter().enumerate() {
+            reader.push_bytes(&[*b]);
+            let got = reader.try_next(1024).unwrap();
+            if i + 1 < raw.len() {
+                assert!(got.is_none(), "complete at byte {i}?");
+            } else {
+                let req = got.expect("request at final byte");
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.body, b"hello");
+            }
+        }
+        assert_eq!(reader.buffered(), 0);
+        // Idempotent on an empty buffer.
+        assert!(reader.try_next(1024).unwrap().is_none());
+    }
+
+    #[test]
+    fn push_interface_fails_eagerly_on_declared_oversize() {
+        // 413 must fire as soon as the head is parsed — before any
+        // body bytes arrive — so a client can't hold buffer space with
+        // a huge declared length.
+        let head = b"POST / HTTP/1.1\r\ncontent-length: 999\r\n\r\n";
+        let mut reader = RequestReader::new();
+        reader.push_bytes(head);
+        match reader.try_next(100) {
+            Err(HttpError::Bad { status: 413, .. }) => {}
+            other => panic!("expected 413, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_reader_parses_incrementally() {
+        let resp = Response::json(
+            200,
+            &Json::obj().with("ok", Json::Bool(true)),
+        );
+        let wire = resp.to_bytes(true);
+        let mut reader = ResponseReader::new();
+        for (i, b) in wire.iter().enumerate() {
+            reader.push_bytes(&[*b]);
+            let got = reader.try_next().unwrap();
+            if i + 1 < wire.len() {
+                assert!(got.is_none(), "complete at byte {i}?");
+            } else {
+                let parsed = got.expect("response at final byte");
+                assert_eq!(parsed.status, 200);
+                assert_eq!(
+                    parsed.header("connection"),
+                    Some("keep-alive")
+                );
+            }
+        }
+        assert_eq!(reader.buffered(), 0);
     }
 
     #[test]
@@ -670,9 +815,9 @@ mod tests {
         let mut wire = Vec::new();
         resp.write_to(&mut wire, true).unwrap();
         let mut src = &wire[..];
-        let mut buf = Vec::new();
+        let mut reader = ResponseReader::new();
         let parsed =
-            read_client_response(&mut src, &mut buf).unwrap();
+            read_client_response(&mut src, &mut reader).unwrap();
         assert_eq!(parsed.status, 200);
         assert_eq!(parsed.header("retry-after"), Some("1"));
         assert_eq!(parsed.header("connection"), Some("keep-alive"));
@@ -684,7 +829,8 @@ mod tests {
         err.write_to(&mut wire, false).unwrap();
         let mut src = &wire[..];
         let parsed =
-            read_client_response(&mut src, &mut Vec::new()).unwrap();
+            read_client_response(&mut src, &mut ResponseReader::new())
+                .unwrap();
         assert_eq!(parsed.status, 429);
         assert_eq!(parsed.header("connection"), Some("close"));
         assert_eq!(

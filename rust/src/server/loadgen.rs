@@ -1,42 +1,67 @@
-//! Closed-loop load generator: N client threads, each holding one
-//! keep-alive connection and replaying `POST /embed` batches
-//! back-to-back (a new request is issued only after the previous reply
-//! lands — so offered load adapts to service capacity instead of
-//! overrunning it).  Aggregates per-thread latency histograms into a
-//! throughput / percentile report; 429s are counted separately from
-//! hard errors, making admission control directly observable.
+//! Load generator over multiplexed non-blocking connections: a few
+//! shard threads each drive up to [`CONNS_PER_SHARD`] keep-alive
+//! connections through the same `poll(2)` shim the server uses, so
+//! `--concurrency 1000` costs ~4 threads, not 1000.
+//!
+//! Two offered-load models:
+//!
+//! * **closed-loop** (default): every connection replays `POST /embed`
+//!   back-to-back — a new request is issued only after the previous
+//!   reply lands, so offered load adapts to service capacity.
+//! * **open-loop** (`rate > 0`): requests fire on a fixed global
+//!   schedule regardless of completions; a tick with no idle
+//!   connection is counted as an *overrun* instead of silently
+//!   queueing, which is what makes saturation visible.
+//!
+//! Aggregates per-shard latency histograms into a throughput /
+//! percentile report (machine-readable via
+//! [`LoadgenReport::to_json`]); 429s are counted separately from hard
+//! errors, making admission control directly observable.
 //!
 //! Used by the `rskpca loadgen` CLI subcommand, the CI smoke step, the
 //! loopback integration tests, and `benches/bench_serving.rs`.
 
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
-use super::http::ClientConn;
+use super::event::{poll_fds, stream_fd, PollFd, POLLIN, POLLOUT};
+use super::http::{ClientConn, ResponseReader};
 use crate::error::{Error, Result};
 use crate::metrics::Histogram;
 use crate::prng::Pcg64;
+use crate::ser::Json;
 
 /// Connect timeout for each client connection.
 const CONNECT_TIMEOUT: Duration = Duration::from_millis(2000);
+
+/// Connections per shard thread; `--concurrency 1000` → 4 shards.
+const CONNS_PER_SHARD: usize = 256;
+
+/// Upper bound on shard threads.
+const MAX_SHARDS: usize = 8;
 
 /// Load-generator knobs.
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
     /// Server address: "host:port" (an `http://` prefix is tolerated).
     pub target: String,
-    /// Concurrent closed-loop client threads.
+    /// Concurrent keep-alive connections (multiplexed, not threads).
     pub clients: usize,
-    /// Requests each client issues.
+    /// Requests each connection issues.
     pub requests_per_client: usize,
     /// Rows per `POST /embed` request.
     pub rows_per_request: usize,
     /// Feature dimension of generated rows; 0 = discover from
     /// `GET /models`.
     pub dim: usize,
-    /// PRNG seed (each client derives its own stream).
+    /// PRNG seed (each connection derives its own stream).
     pub seed: u64,
     /// How long to poll `GET /healthz` before giving up.
     pub warmup_ms: u64,
+    /// Open-loop offered rate in requests/s across all connections;
+    /// 0 = closed loop.
+    pub rate: f64,
 }
 
 impl Default for LoadgenConfig {
@@ -49,6 +74,7 @@ impl Default for LoadgenConfig {
             dim: 0,
             seed: 0x10AD,
             warmup_ms: 5000,
+            rate: 0.0,
         }
     }
 }
@@ -62,6 +88,9 @@ pub struct LoadgenReport {
     pub rejected: u64,
     /// Transport failures and non-200/429 statuses.
     pub errors: u64,
+    /// Open-loop ticks that found no idle connection (offered load
+    /// exceeded what the concurrency level could carry).
+    pub overruns: u64,
     pub rows_ok: u64,
     pub wall_s: f64,
     /// End-to-end request latency of successful requests, microseconds.
@@ -79,6 +108,37 @@ impl LoadgenReport {
         self.requests_ok as f64 / self.wall_s.max(1e-9)
     }
 
+    /// Median latency of successful requests, microseconds.
+    pub fn p50_us(&mut self) -> f64 {
+        self.latency_us.percentile(50.0)
+    }
+
+    /// Tail latency of successful requests, microseconds.
+    pub fn p99_us(&mut self) -> f64 {
+        self.latency_us.p99()
+    }
+
+    /// Machine-readable summary (written by `rskpca loadgen --json`).
+    pub fn to_json(&mut self) -> Json {
+        Json::obj()
+            .with("clients", Json::Num(self.clients as f64))
+            .with("requests_ok", Json::Num(self.requests_ok as f64))
+            .with("rejected", Json::Num(self.rejected as f64))
+            .with("errors", Json::Num(self.errors as f64))
+            .with("overruns", Json::Num(self.overruns as f64))
+            .with("rows_ok", Json::Num(self.rows_ok as f64))
+            .with("wall_s", Json::Num(self.wall_s))
+            .with("rows_per_s", Json::Num(self.rows_per_s()))
+            .with("requests_per_s", Json::Num(self.requests_per_s()))
+            .with("latency_mean_us", Json::Num(self.latency_us.mean()))
+            .with("latency_p50_us", Json::Num(self.p50_us()))
+            .with(
+                "latency_p95_us",
+                Json::Num(self.latency_us.percentile(95.0)),
+            )
+            .with("latency_p99_us", Json::Num(self.p99_us()))
+    }
+
     /// Multi-line human-readable report.
     pub fn render(&mut self) -> String {
         let total = self.requests_ok + self.rejected + self.errors;
@@ -87,9 +147,14 @@ impl LoadgenReport {
         } else {
             self.latency_us.max()
         };
+        let overruns = if self.overruns > 0 {
+            format!(", {} overruns", self.overruns)
+        } else {
+            String::new()
+        };
         format!(
             "loadgen: {total} requests from {} clients in {:.3}s — \
-             {} ok, {} rejected (429), {} errors\n\
+             {} ok, {} rejected (429), {} errors{overruns}\n\
              throughput: {:.0} rows/s ({:.1} req/s)\n\
              latency: mean={:.0}us p50={:.0}us p95={:.0}us \
              p99={:.0}us max={:.0}us",
@@ -163,17 +228,54 @@ pub fn discover_dim(target: &str) -> Result<usize> {
     )))
 }
 
-/// Per-client partial tally, merged by [`run`].
+/// Per-shard partial tally, merged by [`run`].
 #[derive(Default)]
-struct ClientTally {
+struct ShardTally {
     requests_ok: u64,
     rejected: u64,
     errors: u64,
+    overruns: u64,
     rows_ok: u64,
     latency_us: Histogram,
 }
 
-/// Run the closed-loop load generation described by `cfg`.
+/// One multiplexed client connection inside a shard.
+struct Slot {
+    stream: Option<TcpStream>,
+    reader: ResponseReader,
+    write_buf: Vec<u8>,
+    write_at: usize,
+    /// A request is written (or being written) and its response has
+    /// not arrived yet.
+    in_flight: bool,
+    t_start: Instant,
+    requests_left: usize,
+    rng: Pcg64,
+}
+
+impl Slot {
+    fn idle(&self) -> bool {
+        !self.in_flight && self.requests_left > 0
+    }
+
+    fn wants_write(&self) -> bool {
+        self.write_at < self.write_buf.len()
+    }
+
+    /// Drop the connection after a transport failure; the slot
+    /// reconnects on its next issued request.
+    fn fail(&mut self, tally: &mut ShardTally) {
+        tally.errors += 1;
+        self.requests_left = self.requests_left.saturating_sub(1);
+        self.stream = None;
+        self.reader = ResponseReader::new();
+        self.write_buf.clear();
+        self.write_at = 0;
+        self.in_flight = false;
+    }
+}
+
+/// Run the load generation described by `cfg`.
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     if cfg.clients == 0 || cfg.requests_per_client == 0 {
         return Err(Error::Config(
@@ -189,13 +291,31 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     wait_healthy(&target, Duration::from_millis(cfg.warmup_ms))?;
     let dim =
         if cfg.dim > 0 { cfg.dim } else { discover_dim(&target)? };
+    let sock = target
+        .to_socket_addrs()
+        .map_err(|e| Error::Io(format!("resolve {target}: {e}")))?
+        .next()
+        .ok_or_else(|| {
+            Error::Io(format!("{target}: no usable address"))
+        })?;
+
+    let shards = cfg
+        .clients
+        .div_ceil(CONNS_PER_SHARD)
+        .clamp(1, MAX_SHARDS);
+    let per_shard = cfg.clients.div_ceil(shards);
     let t0 = Instant::now();
-    let mut threads = Vec::with_capacity(cfg.clients);
-    for client in 0..cfg.clients {
-        let target = target.clone();
+    let mut threads = Vec::with_capacity(shards);
+    for shard in 0..shards {
+        let lo = shard * per_shard;
+        let hi = (lo + per_shard).min(cfg.clients);
+        if lo >= hi {
+            break;
+        }
         let cfg = cfg.clone();
+        let rate = cfg.rate / shards as f64;
         threads.push(std::thread::spawn(move || {
-            client_loop(&target, &cfg, dim, client as u64)
+            shard_loop(&cfg, sock, dim, lo..hi, rate)
         }));
     }
     let mut report = LoadgenReport {
@@ -204,11 +324,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     };
     for t in threads {
         let part = t.join().map_err(|_| {
-            Error::Service("loadgen client panicked".into())
+            Error::Service("loadgen shard panicked".into())
         })?;
         report.requests_ok += part.requests_ok;
         report.rejected += part.rejected;
         report.errors += part.errors;
+        report.overruns += part.overruns;
         report.rows_ok += part.rows_ok;
         report.latency_us.merge(&part.latency_us);
     }
@@ -216,51 +337,223 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     Ok(report)
 }
 
-fn client_loop(
-    target: &str,
+/// Drive one shard's connections to completion.
+fn shard_loop(
     cfg: &LoadgenConfig,
+    sock: std::net::SocketAddr,
     dim: usize,
-    client: u64,
-) -> ClientTally {
-    let mut tally = ClientTally::default();
-    let mut rng = Pcg64::new(
-        cfg.seed ^ client.wrapping_mul(0x9E37_79B9_7F4A_7C15),
-    );
-    let mut conn: Option<ClientConn> = None;
-    for _ in 0..cfg.requests_per_client {
-        let body =
-            random_rows_body(&mut rng, cfg.rows_per_request, dim);
-        if conn.is_none() {
-            conn = ClientConn::connect(target, CONNECT_TIMEOUT).ok();
-            if conn.is_none() {
-                tally.errors += 1;
-                continue;
+    ids: std::ops::Range<usize>,
+    rate: f64,
+) -> ShardTally {
+    let mut tally = ShardTally::default();
+    let mut slots: Vec<Slot> = ids
+        .map(|id| Slot {
+            stream: None,
+            reader: ResponseReader::new(),
+            write_buf: Vec::new(),
+            write_at: 0,
+            in_flight: false,
+            t_start: Instant::now(),
+            requests_left: cfg.requests_per_client,
+            rng: Pcg64::new(
+                cfg.seed
+                    ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ),
+        })
+        .collect();
+
+    // Closed loop: every slot starts a request immediately.  Open
+    // loop: requests fire on the shard's share of the global rate.
+    let open_loop = rate > 0.0;
+    let interval = if open_loop {
+        Duration::from_secs_f64(1.0 / rate)
+    } else {
+        Duration::ZERO
+    };
+    let mut next_fire = Instant::now();
+    let mut fds: Vec<PollFd> = Vec::new();
+    let mut fd_slot: Vec<usize> = Vec::new();
+    loop {
+        if slots.iter().all(|s| s.requests_left == 0) {
+            return tally;
+        }
+        if open_loop {
+            // Fire every due tick; overrun when no slot is free to
+            // carry it.
+            let now = Instant::now();
+            while next_fire <= now {
+                next_fire += interval;
+                match slots.iter_mut().find(|s| s.idle()) {
+                    Some(s) => issue(s, cfg, sock, dim, &mut tally),
+                    None => tally.overruns += 1,
+                }
+            }
+        } else {
+            // Closed loop: every idle slot with work left starts its
+            // next request (covers startup, completions, and
+            // reconnects after a transport failure alike).
+            for s in slots.iter_mut() {
+                if s.idle() {
+                    issue(s, cfg, sock, dim, &mut tally);
+                }
             }
         }
-        let t = Instant::now();
-        let resp = conn
-            .as_mut()
-            .expect("connection established above")
-            .request("POST", "/embed", body.as_bytes());
-        match resp {
-            Ok(r) if r.status == 200 => {
-                tally.requests_ok += 1;
-                tally.rows_ok += cfg.rows_per_request as u64;
-                tally
-                    .latency_us
-                    .record(t.elapsed().as_secs_f64() * 1e6);
+
+        fds.clear();
+        fd_slot.clear();
+        for (i, s) in slots.iter().enumerate() {
+            let Some(stream) = &s.stream else { continue };
+            let mut ev = 0i16;
+            if s.wants_write() {
+                ev |= POLLOUT;
+            } else if s.in_flight {
+                ev |= POLLIN;
             }
-            Ok(r) if r.status == 429 => tally.rejected += 1,
-            Ok(_) => tally.errors += 1,
-            Err(_) => {
-                // Transport failure: drop the connection and let the
-                // next iteration reconnect.
-                tally.errors += 1;
-                conn = None;
+            if ev != 0 {
+                fds.push(PollFd::new(stream_fd(stream), ev));
+                fd_slot.push(i);
+            }
+        }
+        let timeout = if open_loop {
+            let until = next_fire
+                .saturating_duration_since(Instant::now())
+                .as_millis() as i32;
+            until.clamp(0, 10)
+        } else {
+            10
+        };
+        let _ = poll_fds(&mut fds, timeout);
+        for (k, f) in fds.iter().enumerate() {
+            let i = fd_slot[k];
+            if f.writable() && slots[i].wants_write() {
+                advance_write(&mut slots[i], &mut tally);
+            }
+            if f.readable() && slots[i].in_flight {
+                advance_read(&mut slots[i], cfg, &mut tally);
             }
         }
     }
-    tally
+}
+
+/// Start one request on an idle slot (connecting first if needed).
+fn issue(
+    s: &mut Slot,
+    cfg: &LoadgenConfig,
+    sock: std::net::SocketAddr,
+    dim: usize,
+    tally: &mut ShardTally,
+) {
+    if s.stream.is_none() {
+        match TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT) {
+            Ok(stream) => {
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_nonblocking(true);
+                s.stream = Some(stream);
+            }
+            Err(_) => {
+                tally.errors += 1;
+                s.requests_left = s.requests_left.saturating_sub(1);
+                return;
+            }
+        }
+    }
+    let body =
+        random_rows_body(&mut s.rng, cfg.rows_per_request, dim);
+    s.write_buf.clear();
+    s.write_at = 0;
+    use std::fmt::Write as _;
+    let mut head = String::with_capacity(96);
+    let _ = write!(
+        head,
+        "POST /embed HTTP/1.1\r\nhost: rskpca\r\n\
+         content-type: application/json\r\n\
+         content-length: {}\r\n\r\n",
+        body.len()
+    );
+    s.write_buf.extend_from_slice(head.as_bytes());
+    s.write_buf.extend_from_slice(body.as_bytes());
+    s.in_flight = true;
+    s.t_start = Instant::now();
+    advance_write(s, tally);
+}
+
+/// Push buffered request bytes until the socket would block.
+fn advance_write(s: &mut Slot, tally: &mut ShardTally) {
+    let Some(stream) = &mut s.stream else { return };
+    while s.write_at < s.write_buf.len() {
+        match stream.write(&s.write_buf[s.write_at..]) {
+            Ok(0) => return s.fail(tally),
+            Ok(n) => s.write_at += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                return;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(_) => return s.fail(tally),
+        }
+    }
+    s.write_buf.clear();
+    s.write_at = 0;
+}
+
+/// Drain readable response bytes; a complete response is recorded
+/// and frees the slot (the shard loop issues its next request).
+fn advance_read(
+    s: &mut Slot,
+    cfg: &LoadgenConfig,
+    tally: &mut ShardTally,
+) {
+    let mut tmp = [0u8; 4096];
+    loop {
+        let Some(stream) = &mut s.stream else { return };
+        match stream.read(&mut tmp) {
+            Ok(0) => return s.fail(tally),
+            Ok(n) => {
+                s.reader.push_bytes(&tmp[..n]);
+                match s.reader.try_next() {
+                    Ok(Some(resp)) => {
+                        s.in_flight = false;
+                        s.requests_left =
+                            s.requests_left.saturating_sub(1);
+                        match resp.status {
+                            200 => {
+                                tally.requests_ok += 1;
+                                tally.rows_ok +=
+                                    cfg.rows_per_request as u64;
+                                tally.latency_us.record(
+                                    s.t_start
+                                        .elapsed()
+                                        .as_secs_f64()
+                                        * 1e6,
+                                );
+                            }
+                            429 => tally.rejected += 1,
+                            _ => tally.errors += 1,
+                        }
+                        return;
+                    }
+                    Ok(None) => {} // need more bytes
+                    Err(_) => return s.fail(tally),
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                return;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(_) => return s.fail(tally),
+        }
+    }
 }
 
 /// A `{"rows": [[...], ...]}` body of standard-normal rows.
@@ -317,6 +610,17 @@ mod tests {
         let mut r = LoadgenReport::default();
         let text = r.render();
         assert!(text.contains("0 ok"));
+    }
+
+    #[test]
+    fn report_json_has_percentile_fields() {
+        let mut r = LoadgenReport::default();
+        r.latency_us.record(100.0);
+        r.latency_us.record(200.0);
+        let j = r.to_json();
+        assert!(j.get("latency_p50_us").is_some());
+        assert!(j.get("latency_p99_us").is_some());
+        assert!(j.get("overruns").is_some());
     }
 
     #[test]

@@ -1,49 +1,71 @@
 //! The network serving layer: a dependency-free HTTP/1.1 front end
-//! over the coordinator's embedding service.
+//! over the coordinator's embedding service, built on a non-blocking
+//! `poll(2)` event loop.
 //!
 //! ```text
-//! clients ──► acceptor (non-blocking; 503 when the pending-connection
-//!    │        queue overflows — the acceptor itself never blocks)
-//!    │             │ bounded sync_channel(conn_backlog)
+//! clients ──► listener (non-blocking, shared by every event thread)
+//!    │             │ accept; over max_conns → 503 + close
 //!    ▼             ▼
-//!  keep-alive   worker pool (cfg.workers connection handlers;
-//!  connections  parse → route → respond, per-route latency recorded)
-//!                    │
-//!                POST /embed ──► ServiceHandle
-//!                    │            queue_policy = reject: try_embed,
-//!                    │              saturation → 429 + Retry-After
-//!                    │            queue_policy = block: embed (waits)
-//!                    ▼
-//!            coordinator queue → dynamic batcher → backend
+//!  keep-alive   event threads (cfg.workers; each owns the connections
+//!  connections  it accepted and multiplexes them with poll(2))
+//!    │               per-connection state machine:
+//!    │               Reading ──parse──► dispatch
+//!    │                  │                 ├─ Done ─► write buffer
+//!    │                  │                 ├─ Pending ─► AwaitingReply
+//!    │                  │                 └─ Blocked ─► AwaitingAdmission
+//!    │               AwaitingReply ──try_recv──► write buffer ─► Reading
+//!    ▼
+//! POST /embed ──► ServiceHandle (try_embed; never blocks the loop)
+//!                     ▼
+//!        coordinator queue → size-OR-deadline batcher → backend
 //! ```
 //!
+//! **Readiness vs blocking contract.**  Event threads never block on
+//! anything but `poll` itself (bounded timeout): sockets are
+//! non-blocking (`WouldBlock` returns to the loop), embed replies are
+//! polled with `try_recv`, and the `block` queue policy parks the
+//! *connection* in `AwaitingAdmission` rather than the thread.  One
+//! slow, malicious, or silent client therefore costs one connection
+//! slot, never a thread — the failure mode the old fixed worker pool
+//! had (a stalled client pinned a whole worker) is structurally gone.
+//!
 //! **Backpressure contract.**  Saturation surfaces at two levels, and
-//! neither blocks the acceptor: (1) the coordinator's bounded embed
-//! queue — under the default `reject` policy a full queue answers
-//! `429 Too Many Requests` with a `Retry-After` hint, so a closed-loop
-//! client backs off instead of stacking requests; (2) the bounded
-//! pending-connection queue in front of the worker pool — when every
-//! handler is busy and the backlog is full, the acceptor answers
-//! `503 Service Unavailable` directly and closes.  Everything else
-//! (parse errors, bad shapes, oversized bodies) is a per-request 4xx
-//! on a connection that stays usable.
+//! neither blocks the loop: (1) the coordinator's bounded embed queue
+//! — under the default `reject` policy a full queue answers `429 Too
+//! Many Requests` with a `Retry-After` hint; (2) the connection cap
+//! (`[server] max_conns`) — a connection over the cap is accepted,
+//! answered `503 Service Unavailable`, and closed (far over the cap it
+//! is dropped outright).  A client that stops *reading* is absorbed by
+//! the per-connection write buffer plus kernel socket buffers, and
+//! reaped by the idle timer once it stalls the response for
+//! `keep_alive_ms`.
+//!
+//! **Idle reaping.**  `keep_alive_ms` bounds every externally-driven
+//! wait: an idle keep-alive connection, a slow-loris drip feeding
+//! partial request bytes, and a stalled never-reading response writer
+//! are all closed once they make no *progress* (complete request
+//! parsed, or response bytes accepted by the socket) for
+//! `keep_alive_ms`.  Connections waiting on the server's own compute
+//! (`AwaitingReply`) are exempt — that wait is bounded by the batcher's
+//! deadline, not by client behavior.
 //!
 //! The module is std-only, like the rest of the crate: hand-rolled
-//! HTTP in [`http`], route handlers in `routes`, per-route metrics in
-//! `stats`, signal-driven shutdown ([`install_shutdown_handler`] /
-//! [`shutdown_requested`]), and a closed-loop client harness in
-//! [`loadgen`].
+//! HTTP in [`http`], the `poll(2)` shim in `event` (with `signal`, the
+//! crate's entire unsafe inventory), route handlers in `routes`,
+//! per-route metrics in `stats`, signal-driven shutdown
+//! ([`install_shutdown_handler`] / [`shutdown_requested`]), and a
+//! multiplexed open/closed-loop client harness in [`loadgen`].
 //!
-//! **Hot-loop allocation contract.**  Connection workers only parse,
+//! **Hot-loop allocation contract.**  Event threads only parse,
 //! enqueue, and format — the Gram/projection compute for `POST /embed`
 //! runs on the coordinator's batch worker, whose `NativeBackend` owns a
 //! reusable `kernel::Scratch` (norms, packed GEMM panels, Gram tiles).
 //! Once warmed at the serving shapes, every compute buffer is reused
-//! without growth (asserted via `Scratch::grow_events` in the test
-//! suite); per-batch heap traffic is limited to the response buffers
-//! plus O(compute-threads) fork/join bookkeeping — nothing scales with
-//! the row count, and the batch Gram is never materialized.
+//! without growth; per-connection buffers (read, write) shrink back to
+//! empty after each message, so a long-lived idle connection holds only
+//! the `Conn` bookkeeping itself.
 
+mod event;
 pub mod http;
 pub mod loadgen;
 mod routes;
@@ -54,9 +76,10 @@ pub use signal::{
     install_shutdown_handler, request_shutdown, shutdown_requested,
 };
 
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::mpsc::SyncSender;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -66,17 +89,40 @@ use crate::coordinator::ServiceHandle;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 
+use self::event::{
+    listener_fd, poll_fds, stream_fd, PollFd, POLLIN, POLLOUT,
+};
 use self::http::{HttpError, RequestReader, Response};
+use self::routes::Handled;
 use self::stats::RouteStats;
 
-/// Cap on concurrent 503-drain helper threads spawned by the acceptor
-/// (beyond it, rejected sockets are dropped outright).
-const MAX_DRAIN_THREADS: u64 = 32;
+/// Read granularity of the event loop.
+const READ_CHUNK: usize = 16 * 1024;
 
-/// Total wall-clock budget for draining unread bytes before a close.
-const DRAIN_BUDGET: Duration = Duration::from_millis(500);
+/// Poll timeout when some connection awaits an embed reply or queue
+/// admission: short, so replies are picked up promptly without a
+/// wakeup channel.
+const BUSY_POLL_MS: i32 = 1;
 
-/// Shared state every connection handler sees.
+/// Poll timeout when fully idle; also the reap-check granularity.
+const IDLE_POLL_MS: i32 = 25;
+
+/// Accepts per thread per cycle — a connect flood cannot starve the
+/// connections a thread already owns.
+const ACCEPT_BURST: usize = 128;
+
+/// Connections admitted past `max_conns` solely to be told "503":
+/// beyond this slack the socket is dropped without a response.
+const OVER_CAP_SLACK: u64 = 64;
+
+/// How long a connection closed mid-protocol keeps draining unread
+/// input so the final response isn't destroyed by a TCP reset.
+const CLOSE_DRAIN: Duration = Duration::from_millis(250);
+
+/// Grace period for in-flight requests at shutdown.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
+/// Shared state every event thread sees.
 struct ServerState {
     handle: ServiceHandle,
     cfg: ServerConfig,
@@ -85,8 +131,9 @@ struct ServerState {
     shutdown: Arc<AtomicBool>,
     conns_accepted: AtomicU64,
     conns_rejected: AtomicU64,
-    /// Live 503-drain helper threads (bounded; see `accept_loop`).
-    drain_threads: AtomicU64,
+    /// Live connections across all event threads (the `max_conns`
+    /// admission gate).
+    conns_open: AtomicU64,
     /// Lossy tap feeding request rows to a background refresher
     /// (`serve --refresh N`); `None` when no refresher runs.
     refresh_feed: Option<Mutex<SyncSender<Matrix>>>,
@@ -100,19 +147,115 @@ impl ServerState {
     fn conns_rejected(&self) -> u64 {
         self.conns_rejected.load(Ordering::Relaxed)
     }
+
+    fn conns_open(&self) -> u64 {
+        self.conns_open.load(Ordering::Relaxed)
+    }
 }
 
-/// The running HTTP front end: one non-blocking acceptor thread plus a
-/// fixed pool of connection-handler threads, all serving through a
-/// [`ServiceHandle`].  Dropping (or calling [`HttpServer::shutdown`])
-/// runs the orderly teardown: acceptor close → pending-connection
-/// drain → worker join.  The embedding service itself is owned by the
-/// caller and outlives the front end.
+/// What a connection is currently waiting on.
+enum ConnPhase {
+    /// Reading request bytes (or idle between keep-alive requests).
+    Reading,
+    /// Embed admitted to the coordinator; awaiting the reply receiver.
+    /// The `bool` is the request's keep-alive decision.
+    AwaitingReply(routes::PendingEmbed, bool),
+    /// Parked on a saturated queue under the block policy.
+    AwaitingAdmission(routes::BlockedEmbed, bool),
+}
+
+/// One multiplexed connection: socket, parser state, buffered partial
+/// writes, and the timestamps the reaper keys off.
+struct Conn {
+    stream: TcpStream,
+    reader: RequestReader,
+    phase: ConnPhase,
+    write_buf: Vec<u8>,
+    write_at: usize,
+    /// Last *progress*: accept, a complete request parsed, or response
+    /// bytes accepted by the socket.  Deliberately NOT refreshed by
+    /// partial request reads — that is what bounds a slow-loris drip
+    /// to `keep_alive_ms` total, instead of per-byte.
+    last_progress: Instant,
+    /// Close once the write buffer drains.
+    close_after_write: bool,
+    /// Framing is no longer trusted (protocol error / over-cap 503):
+    /// read and discard input instead of parsing, so the final
+    /// response isn't RST-destroyed by unread bytes at close.
+    discard_input: bool,
+    /// Deadline for the post-response drain of a `discard_input`
+    /// connection.
+    drain_until: Option<Instant>,
+    /// Peer sent EOF; serve out what's in flight, accept nothing new.
+    read_closed: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            reader: RequestReader::new(),
+            phase: ConnPhase::Reading,
+            write_buf: Vec::new(),
+            write_at: 0,
+            last_progress: Instant::now(),
+            close_after_write: false,
+            discard_input: false,
+            drain_until: None,
+            read_closed: false,
+        }
+    }
+
+    fn wants_write(&self) -> bool {
+        self.write_at < self.write_buf.len()
+    }
+
+    /// Read interest: normal parsing only while in `Reading` with an
+    /// empty write buffer (responses apply backpressure to pipelining);
+    /// `discard_input` connections always read (to drain).
+    fn wants_read(&self) -> bool {
+        if self.read_closed {
+            return false;
+        }
+        if self.discard_input {
+            return true;
+        }
+        matches!(self.phase, ConnPhase::Reading) && !self.wants_write()
+    }
+
+    fn awaiting_service(&self) -> bool {
+        matches!(
+            self.phase,
+            ConnPhase::AwaitingReply(..)
+                | ConnPhase::AwaitingAdmission(..)
+        )
+    }
+
+    /// Queue a response for writing.
+    fn enqueue_response(&mut self, resp: &Response, keep_alive: bool) {
+        if self.write_at > 0 {
+            self.write_buf.drain(..self.write_at);
+            self.write_at = 0;
+        }
+        self.write_buf
+            .extend_from_slice(&resp.to_bytes(keep_alive));
+        if !keep_alive {
+            self.close_after_write = true;
+        }
+    }
+}
+
+/// The running HTTP front end: `cfg.workers` event threads, each
+/// multiplexing the connections it accepted over `poll(2)`, all
+/// serving through a [`ServiceHandle`].  Dropping (or calling
+/// [`HttpServer::shutdown`]) runs the orderly teardown: stop
+/// accepting → drain in-flight requests (bounded grace) → join.  The
+/// embedding service itself is owned by the caller and outlives the
+/// front end.
 pub struct HttpServer {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    acceptor: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
+    threads: Vec<JoinHandle<()>>,
 }
 
 impl HttpServer {
@@ -139,11 +282,10 @@ impl HttpServer {
         let addr = listener
             .local_addr()
             .map_err(|e| Error::Io(format!("local_addr: {e}")))?;
-        // Non-blocking accept so the acceptor can poll the shutdown
-        // flag; accepted streams are switched back to blocking.
         listener.set_nonblocking(true).map_err(|e| {
             Error::Io(format!("set_nonblocking: {e}"))
         })?;
+        let listener = Arc::new(listener);
         let shutdown = Arc::new(AtomicBool::new(false));
         let state = Arc::new(ServerState {
             handle,
@@ -153,38 +295,25 @@ impl HttpServer {
             shutdown: shutdown.clone(),
             conns_accepted: AtomicU64::new(0),
             conns_rejected: AtomicU64::new(0),
-            drain_threads: AtomicU64::new(0),
+            conns_open: AtomicU64::new(0),
             refresh_feed: feed.map(Mutex::new),
         });
-        let (conn_tx, conn_rx) =
-            mpsc::sync_channel::<TcpStream>(cfg.conn_backlog);
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let mut workers = Vec::with_capacity(cfg.workers);
+        let mut threads = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
-            let rx = conn_rx.clone();
+            let l = listener.clone();
             let st = state.clone();
-            workers.push(
+            threads.push(
                 std::thread::Builder::new()
                     .name(format!("rskpca-http-{i}"))
-                    .spawn(move || worker_loop(&rx, &st))
+                    .spawn(move || event_loop(&l, &st))
                     .map_err(|e| {
-                        Error::Service(format!("spawn http worker: {e}"))
+                        Error::Service(format!(
+                            "spawn event thread: {e}"
+                        ))
                     })?,
             );
         }
-        let st = state.clone();
-        let acceptor = std::thread::Builder::new()
-            .name("rskpca-http-accept".into())
-            .spawn(move || accept_loop(&listener, conn_tx, &st))
-            .map_err(|e| {
-                Error::Service(format!("spawn acceptor: {e}"))
-            })?;
-        Ok(HttpServer {
-            addr,
-            shutdown,
-            acceptor: Some(acceptor),
-            workers,
-        })
+        Ok(HttpServer { addr, shutdown, threads })
     }
 
     /// The bound address (resolves port 0 to the ephemeral port).
@@ -192,19 +321,16 @@ impl HttpServer {
         self.addr
     }
 
-    /// Orderly teardown: stop accepting, drain pending connections,
-    /// join every handler thread.
+    /// Orderly teardown: stop accepting, drain in-flight requests
+    /// (bounded grace), join every event thread.
     pub fn shutdown(mut self) {
         self.stop();
     }
 
     fn stop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
         }
     }
 }
@@ -215,180 +341,428 @@ impl Drop for HttpServer {
     }
 }
 
-/// Accept until shutdown.  Never blocks on downstream capacity: a full
-/// pending-connection queue is answered with an immediate 503.
-fn accept_loop(
-    listener: &TcpListener,
-    conn_tx: SyncSender<TcpStream>,
-    state: &Arc<ServerState>,
-) {
-    while !state.shutdown.load(Ordering::SeqCst) {
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let _ = stream.set_nonblocking(false);
-                state
-                    .conns_accepted
-                    .fetch_add(1, Ordering::Relaxed);
-                match conn_tx.try_send(stream) {
-                    Ok(()) => {}
-                    Err(mpsc::TrySendError::Full(stream)) => {
-                        state
-                            .conns_rejected
-                            .fetch_add(1, Ordering::Relaxed);
-                        let retry_s = ((state.cfg.retry_after_ms
-                            + 999)
-                            / 1000)
-                            .max(1);
-                        let resp = Response::error(
-                            503,
-                            "all connection handlers busy",
-                        )
-                        .with_header(
-                            "retry-after",
-                            &retry_s.to_string(),
-                        );
-                        // The client has usually already written its
-                        // request; closing with those bytes unread
-                        // would RST the 503 away (see
-                        // `respond_and_close`).  Drain on a short
-                        // throwaway thread so the acceptor itself
-                        // never blocks — but bound the helpers and
-                        // tolerate spawn failure: under a genuine
-                        // connection flood, dropping the socket (an
-                        // RST instead of a readable 503) beats
-                        // unbounded threads or a dead acceptor.
-                        let live = state
-                            .drain_threads
-                            .load(Ordering::Relaxed);
-                        if live < MAX_DRAIN_THREADS {
-                            state
-                                .drain_threads
-                                .fetch_add(1, Ordering::Relaxed);
-                            let st = state.clone();
-                            let spawned =
-                                std::thread::Builder::new()
-                                    .name("rskpca-http-503".into())
-                                    .spawn(move || {
-                                        respond_and_close(
-                                            stream, &resp,
-                                        );
-                                        st.drain_threads.fetch_sub(
-                                            1,
-                                            Ordering::Relaxed,
-                                        );
-                                    });
-                            if spawned.is_err() {
-                                state.drain_threads.fetch_sub(
-                                    1,
-                                    Ordering::Relaxed,
-                                );
-                            }
-                        }
-                    }
-                    Err(mpsc::TrySendError::Disconnected(_)) => return,
-                }
+/// One event thread: poll the shared listener plus every connection
+/// this thread owns, never blocking anywhere else.
+fn event_loop(listener: &Arc<TcpListener>, state: &Arc<ServerState>) {
+    let lfd = listener_fd(listener);
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut fds: Vec<PollFd> = Vec::new();
+    let mut fd_conn: Vec<usize> = Vec::new();
+    let mut shutdown_since: Option<Instant> = None;
+
+    loop {
+        let shutting = state.shutdown.load(Ordering::SeqCst);
+        if shutting && shutdown_since.is_none() {
+            shutdown_since = Some(Instant::now());
+        }
+
+        // 1. Build the interest set.  `usize::MAX` marks the listener.
+        fds.clear();
+        fd_conn.clear();
+        if !shutting {
+            fds.push(PollFd::new(lfd, POLLIN));
+            fd_conn.push(usize::MAX);
+        }
+        let mut busy = shutting;
+        for (i, c) in conns.iter().enumerate() {
+            let mut ev = 0i16;
+            if c.wants_read() {
+                ev |= POLLIN;
             }
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            if c.wants_write() {
+                ev |= POLLOUT;
+            }
+            busy |= c.awaiting_service();
+            if ev != 0 {
+                fds.push(PollFd::new(stream_fd(&c.stream), ev));
+                fd_conn.push(i);
+            }
+        }
+        let timeout = if busy { BUSY_POLL_MS } else { IDLE_POLL_MS };
+        let _ = poll_fds(&mut fds, timeout);
+
+        // 2. Accept a bounded burst.  All threads poll the listener;
+        // accept() races are resolved by the kernel (losers see
+        // WouldBlock).  New connections get an immediate read attempt
+        // below via their recorded index.
+        let first_new = conns.len();
+        if !shutting {
+            accept_burst(listener, state, &mut conns);
+        }
+
+        // 3. I/O on ready connections (and fresh accepts).
+        let mut dead = vec![false; conns.len()];
+        for (k, f) in fds.iter().enumerate() {
+            let i = fd_conn[k];
+            if i == usize::MAX {
+                continue;
+            }
+            if f.writable()
+                && conns[i].wants_write()
+                && !flush_conn(&mut conns[i])
             {
-                std::thread::sleep(Duration::from_millis(5));
+                dead[i] = true;
+                continue;
             }
-            Err(_) => {
-                // Transient accept failure (e.g. EMFILE): back off
-                // briefly instead of spinning.
-                std::thread::sleep(Duration::from_millis(20));
+            if f.readable()
+                && conns[i].wants_read()
+                && !read_conn(&mut conns[i], state)
+            {
+                dead[i] = true;
             }
         }
-    }
-    // Dropping conn_tx ends the workers' recv loop once the pending
-    // backlog drains.
-}
-
-/// Pull connections off the shared queue until the acceptor hangs up.
-fn worker_loop(
-    rx: &Arc<Mutex<Receiver<TcpStream>>>,
-    state: &Arc<ServerState>,
-) {
-    loop {
-        let conn = {
-            let guard = match rx.lock() {
-                Ok(g) => g,
-                Err(_) => return,
-            };
-            guard.recv()
-        };
-        match conn {
-            Ok(stream) => handle_connection(stream, state),
-            Err(_) => return,
+        for i in first_new..conns.len() {
+            if !dead[i]
+                && conns[i].wants_read()
+                && !read_conn(&mut conns[i], state)
+            {
+                dead[i] = true;
+            }
         }
-    }
-}
 
-/// Serve one keep-alive connection until it closes, errors, times out
-/// idle, or the server shuts down (then the final response carries
-/// `Connection: close`).
-fn handle_connection(mut stream: TcpStream, state: &Arc<ServerState>) {
-    let _ = stream.set_nodelay(true);
-    // One timeout doubles as the idle keep-alive limit and a
-    // slow-request bound, so a stalled client can't pin a worker.
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(
-        state.cfg.keep_alive_ms.max(1),
-    )));
-    let mut reader = RequestReader::new();
-    loop {
-        match reader
-            .next_request(&mut stream, state.cfg.max_body_bytes)
-        {
-            Ok(req) => {
-                let resp = routes::dispatch(state, &req);
-                let close = !req.keep_alive()
-                    || state.shutdown.load(Ordering::SeqCst);
-                if resp.write_to(&mut stream, !close).is_err() {
-                    return;
+        // 4. Service sweep: embed replies, parked admissions, and —
+        // once a response has drained — any next request the reader
+        // already buffered (HTTP pipelining).  Poll can't signal the
+        // latter (those bytes arrived with an earlier read), so the
+        // loop sweeps for it.
+        for (i, c) in conns.iter_mut().enumerate() {
+            if dead[i] {
+                continue;
+            }
+            if c.awaiting_service() && !service_sweep(c, state) {
+                dead[i] = true;
+                continue;
+            }
+            if !advance_buffered(c, state) {
+                dead[i] = true;
+            }
+        }
+
+        // 5. Reap sweep.
+        let keep_alive = Duration::from_millis(
+            state.cfg.keep_alive_ms.max(1),
+        );
+        let now = Instant::now();
+        for (i, c) in conns.iter_mut().enumerate() {
+            if dead[i] {
+                continue;
+            }
+            // Finished drain window after an error/close response.
+            if c.drain_until.is_some_and(|t| now >= t) {
+                dead[i] = true;
+                continue;
+            }
+            // Clean close: nothing buffered, peer gone or close
+            // requested with the response fully written.
+            if !c.wants_write() {
+                if c.close_after_write && c.drain_until.is_none() {
+                    dead[i] = true;
+                    continue;
                 }
-                if close {
-                    return;
+                if c.read_closed
+                    && matches!(c.phase, ConnPhase::Reading)
+                {
+                    dead[i] = true;
+                    continue;
+                }
+                if shutting
+                    && matches!(c.phase, ConnPhase::Reading)
+                    && c.reader.buffered() == 0
+                {
+                    dead[i] = true;
+                    continue;
                 }
             }
-            Err(HttpError::Closed) => return,
-            Err(HttpError::Io(_)) => return,
-            Err(HttpError::Bad { status, msg }) => {
-                // Protocol-level violation: answer and close — the
-                // byte stream can no longer be trusted to be framed.
-                respond_and_close(
-                    stream,
-                    &Response::error(status, &msg),
-                );
+            // Idle / stalled reap: applies to idle keep-alives, a
+            // slow-loris mid-request drip, and a stalled response
+            // write alike; connections waiting on the service are
+            // exempt (that wait is the server's own, and bounded by
+            // the batcher deadline).
+            if !c.awaiting_service()
+                && now.duration_since(c.last_progress) > keep_alive
+            {
+                dead[i] = true;
+            }
+        }
+
+        // 6. Remove the dead.
+        if dead.iter().any(|&d| d) {
+            let mut kept = Vec::with_capacity(conns.len());
+            for (i, c) in conns.drain(..).enumerate() {
+                if dead[i] {
+                    state.conns_open.fetch_sub(1, Ordering::Relaxed);
+                } else {
+                    kept.push(c);
+                }
+            }
+            conns = kept;
+        }
+
+        if shutting {
+            let grace_over = shutdown_since
+                .map(|t| t.elapsed() >= SHUTDOWN_GRACE)
+                .unwrap_or(true);
+            if conns.is_empty() || grace_over {
+                state
+                    .conns_open
+                    .fetch_sub(conns.len() as u64, Ordering::Relaxed);
                 return;
             }
         }
     }
 }
 
-/// Write a final response, then half-close and briefly drain unread
-/// request bytes before dropping the socket.  Closing with unread
-/// receive data makes the kernel RST the connection, which can destroy
-/// an in-flight error response (e.g. a 413 sent before the body was
-/// consumed); draining first lets the client actually read it.
-fn respond_and_close(mut stream: TcpStream, resp: &Response) {
-    use std::io::Read as _;
-    if resp.write_to(&mut stream, false).is_err() {
-        return;
-    }
-    let _ = stream.shutdown(std::net::Shutdown::Write);
-    let _ = stream
-        .set_read_timeout(Some(Duration::from_millis(200)));
-    let deadline = Instant::now() + DRAIN_BUDGET;
-    let mut scratch = [0u8; 4096];
-    // Bounded drain — by bytes (256 KiB) *and* wall clock, so neither
-    // a firehose nor a trickling client can pin the draining thread.
-    for _ in 0..64 {
-        if Instant::now() >= deadline {
-            break;
+/// Accept up to [`ACCEPT_BURST`] pending connections; over the
+/// `max_conns` cap they are admitted only to be answered 503 (and far
+/// over it, dropped).
+fn accept_burst(
+    listener: &TcpListener,
+    state: &Arc<ServerState>,
+    conns: &mut Vec<Conn>,
+) {
+    for _ in 0..ACCEPT_BURST {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                state.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let open = state.conns_open.load(Ordering::Relaxed);
+                let cap = state.cfg.max_conns as u64;
+                if open >= cap + OVER_CAP_SLACK {
+                    // Flood regime: an RST beats holding any state.
+                    state
+                        .conns_rejected
+                        .fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                state.conns_open.fetch_add(1, Ordering::Relaxed);
+                let mut c = Conn::new(stream);
+                if open >= cap {
+                    state
+                        .conns_rejected
+                        .fetch_add(1, Ordering::Relaxed);
+                    let retry_s = ((state.cfg.retry_after_ms + 999)
+                        / 1000)
+                        .max(1);
+                    let resp = Response::error(
+                        503,
+                        "connection limit reached",
+                    )
+                    .with_header("retry-after", &retry_s.to_string());
+                    // The client may already be mid-request: discard
+                    // its input so the 503 survives the close.
+                    c.discard_input = true;
+                    c.enqueue_response(&resp, false);
+                }
+                conns.push(c);
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                return;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            // Transient accept failure (e.g. EMFILE): retry next
+            // cycle instead of spinning.
+            Err(_) => return,
         }
-        match stream.read(&mut scratch) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
+    }
+}
+
+/// Drain readable bytes.  Returns `false` when the connection is dead.
+/// Stops reading as soon as one complete request is parsed — the next
+/// pipelined request waits until this one's response is written, which
+/// is the loop's flow control.
+fn read_conn(c: &mut Conn, state: &Arc<ServerState>) -> bool {
+    let mut tmp = [0u8; READ_CHUNK];
+    let mut discarded = 0usize;
+    loop {
+        match c.stream.read(&mut tmp) {
+            Ok(0) => {
+                c.read_closed = true;
+                // A half-closed peer may still be reading its
+                // response; the reap sweep drops the connection once
+                // nothing is in flight.
+                return true;
+            }
+            Ok(n) => {
+                if c.discard_input {
+                    // Bounded drain: a peer streaming garbage at full
+                    // rate yields the thread back to the loop after a
+                    // few chunks instead of pinning it here.
+                    discarded += n;
+                    if discarded >= 8 * READ_CHUNK {
+                        return true;
+                    }
+                    continue;
+                }
+                c.reader.push_bytes(&tmp[..n]);
+                match c.reader.try_next(state.cfg.max_body_bytes) {
+                    Ok(Some(req)) => {
+                        handle_request(c, state, &req);
+                        return true;
+                    }
+                    Ok(None) => {} // need more bytes
+                    Err(HttpError::Bad { status, msg }) => {
+                        protocol_error(c, status, &msg);
+                        return true;
+                    }
+                    // try_next never produces Closed/Io, but the
+                    // conservative response to either is a close.
+                    Err(_) => return false,
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                return true;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(_) => return false,
         }
     }
+}
+
+/// Route one parsed request and transition the connection.
+fn handle_request(
+    c: &mut Conn,
+    state: &Arc<ServerState>,
+    req: &http::Request,
+) {
+    c.last_progress = Instant::now();
+    let keep = req.keep_alive()
+        && !state.shutdown.load(Ordering::SeqCst);
+    match routes::dispatch(state, req) {
+        Handled::Done(resp) => {
+            c.enqueue_response(&resp, keep);
+            let _ = flush_conn(c);
+        }
+        Handled::Pending(p) => {
+            c.phase = ConnPhase::AwaitingReply(p, keep);
+        }
+        Handled::Blocked(b) => {
+            c.phase = ConnPhase::AwaitingAdmission(b, keep);
+        }
+    }
+}
+
+/// Parse a request the reader buffered behind an earlier one (HTTP
+/// pipelining) once the connection is back in `Reading` with its write
+/// buffer drained.  Returns `false` when the connection is dead.
+fn advance_buffered(c: &mut Conn, state: &Arc<ServerState>) -> bool {
+    if c.discard_input
+        || c.close_after_write
+        || c.wants_write()
+        || !matches!(c.phase, ConnPhase::Reading)
+        || c.reader.buffered() == 0
+    {
+        return true;
+    }
+    match c.reader.try_next(state.cfg.max_body_bytes) {
+        Ok(Some(req)) => {
+            handle_request(c, state, &req);
+            true
+        }
+        Ok(None) => true, // incomplete; wait for more bytes
+        Err(HttpError::Bad { status, msg }) => {
+            protocol_error(c, status, &msg);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// Queue a final error response and switch to drain-then-close: the
+/// byte stream can no longer be trusted to be framed.
+fn protocol_error(c: &mut Conn, status: u16, msg: &str) {
+    let resp = Response::error(status, msg);
+    c.discard_input = true;
+    c.enqueue_response(&resp, false);
+    let _ = flush_conn(c);
+}
+
+/// Advance a connection waiting on the coordinator.  Returns `false`
+/// when the connection is dead.
+fn service_sweep(c: &mut Conn, state: &Arc<ServerState>) -> bool {
+    match std::mem::replace(&mut c.phase, ConnPhase::Reading) {
+        ConnPhase::AwaitingReply(p, keep) => {
+            match routes::poll_pending(state, &p) {
+                Some(resp) => {
+                    c.last_progress = Instant::now();
+                    c.enqueue_response(&resp, keep);
+                    flush_conn(c)
+                }
+                None => {
+                    c.phase = ConnPhase::AwaitingReply(p, keep);
+                    true
+                }
+            }
+        }
+        ConnPhase::AwaitingAdmission(b, keep) => {
+            match routes::retry_blocked(state, b) {
+                Handled::Done(resp) => {
+                    c.last_progress = Instant::now();
+                    c.enqueue_response(&resp, keep);
+                    flush_conn(c)
+                }
+                Handled::Pending(p) => {
+                    c.phase = ConnPhase::AwaitingReply(p, keep);
+                    true
+                }
+                Handled::Blocked(b) => {
+                    c.phase = ConnPhase::AwaitingAdmission(b, keep);
+                    true
+                }
+            }
+        }
+        ConnPhase::Reading => true,
+    }
+}
+
+/// Write as much buffered response as the socket accepts.  Returns
+/// `false` when the connection is dead.  On full drain of a closing
+/// connection: clean closes die immediately; `discard_input` closes
+/// (protocol errors, over-cap 503s) half-close and linger briefly so
+/// unread request bytes can't RST the response away.
+fn flush_conn(c: &mut Conn) -> bool {
+    while c.write_at < c.write_buf.len() {
+        match c.stream.write(&c.write_buf[c.write_at..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                c.write_at += n;
+                c.last_progress = Instant::now();
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                return true;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(_) => return false,
+        }
+    }
+    if !c.write_buf.is_empty() {
+        c.write_buf = Vec::new();
+        c.write_at = 0;
+    }
+    if c.close_after_write && c.discard_input && c.drain_until.is_none()
+    {
+        let _ = c.stream.shutdown(std::net::Shutdown::Write);
+        c.drain_until = Some(Instant::now() + CLOSE_DRAIN);
+    }
+    true
 }

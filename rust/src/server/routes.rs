@@ -14,25 +14,64 @@
 //! queue saturation → 429 + `Retry-After`, backend failure → 500.
 
 use std::path::Path;
+use std::sync::mpsc;
 use std::time::Instant;
 
 use super::http::{Request, Response};
 use super::ServerState;
+use crate::config::QueuePolicy;
 use crate::error::Error;
 use crate::kpca::EmbeddingModel;
 use crate::linalg::Matrix;
 use crate::ser::Json;
 
-/// Dispatch one request, recording per-route latency and errors.
-pub(super) fn dispatch(state: &ServerState, req: &Request) -> Response {
+/// An embed request that has been admitted to the coordinator queue;
+/// the event loop holds this and polls [`poll_pending`] until the
+/// reply arrives.  Route stats are recorded at completion, so the
+/// latency covers queue wait + batch execution, exactly like the old
+/// blocking dispatch did.
+pub(super) struct PendingEmbed {
+    rx: mpsc::Receiver<crate::error::Result<Matrix>>,
+    version_before: u64,
+    t_start: Instant,
+}
+
+/// An embed request refused by a saturated queue under
+/// `queue_policy = "block"`: the connection parks (no thread blocks)
+/// and the event loop re-attempts admission each cycle via
+/// [`retry_blocked`].
+pub(super) struct BlockedEmbed {
+    rows: Matrix,
+    version_before: u64,
+    t_start: Instant,
+}
+
+/// The three ways a request leaves the router.
+pub(super) enum Handled {
+    /// Response is ready now (every non-embed route, and embed-level
+    /// errors such as bad JSON or immediate 429s).
+    Done(Response),
+    /// Embed admitted; await the reply receiver.
+    Pending(PendingEmbed),
+    /// Embed parked on a saturated queue (block policy).
+    Blocked(BlockedEmbed),
+}
+
+/// Dispatch one request.  Non-embed routes are synchronous and cheap
+/// (registry/stat reads), so they complete inline — only `POST /embed`
+/// can return `Pending`/`Blocked`.
+pub(super) fn dispatch(state: &ServerState, req: &Request) -> Handled {
     let t = Instant::now();
+    if req.method == "POST" && req.path() == "/embed" {
+        return embed_submit(state, req, t);
+    }
     let (label, resp) = route(state, req);
     state.routes.record(
         label,
         t.elapsed().as_secs_f64() * 1e6,
         resp.status >= 400,
     );
-    resp
+    Handled::Done(resp)
 }
 
 fn route(
@@ -46,7 +85,6 @@ fn route(
         ("POST", "/models/swap") => {
             ("POST /models/swap", swap(state, req))
         }
-        ("POST", "/embed") => ("POST /embed", embed(state, req)),
         (_, "/healthz" | "/stats" | "/models" | "/models/swap"
             | "/embed") => (
             "other",
@@ -94,7 +132,8 @@ fn stats(state: &ServerState) -> Response {
         .with(
             "conns_rejected",
             Json::Num(state.conns_rejected() as f64),
-        );
+        )
+        .with("conns_open", Json::Num(state.conns_open() as f64));
     Response::json(
         200,
         &Json::obj()
@@ -224,14 +263,22 @@ fn swap(state: &ServerState, req: &Request) -> Response {
     )
 }
 
-fn embed(state: &ServerState, req: &Request) -> Response {
+/// Parse, tap, and submit a `POST /embed` body — without ever blocking
+/// the calling (event-loop) thread.
+fn embed_submit(
+    state: &ServerState,
+    req: &Request,
+    t_start: Instant,
+) -> Handled {
     let v = match parse_json_body(&req.body) {
         Ok(v) => v,
-        Err(resp) => return resp,
+        Err(resp) => return done_embed(state, resp, t_start),
     };
     let rows = match rows_from_json(&v) {
         Ok(m) => m,
-        Err(msg) => return Response::error(400, &msg),
+        Err(msg) => {
+            return done_embed(state, Response::error(400, &msg), t_start)
+        }
     };
     // Lossy tap for the background refresher (`serve --refresh N`):
     // never blocks the request path — when the refresher is mid-refit
@@ -244,30 +291,98 @@ fn embed(state: &ServerState, req: &Request) -> Response {
     // Registry version before submission: versions only ever
     // increment, so if it is unchanged after the reply, no swap
     // happened in between and the batch provably served this version.
-    let registry = state.handle.registry();
-    let version_before = registry
+    let version_before = state
+        .handle
+        .registry()
         .version(state.handle.model_name())
         .unwrap_or(0);
-    let result = if state.cfg.queue_policy
-        == crate::config::QueuePolicy::Block
-    {
-        state.handle.embed(rows)
+    if state.cfg.queue_policy == QueuePolicy::Block {
+        // Block policy, event-loop style: a saturated queue parks the
+        // *connection*, not a thread — admission is retried each
+        // cycle (and the parked attempts never count as rejections,
+        // matching the old blocking-send semantics).
+        match state.handle.try_embed_quiet(rows.clone()) {
+            Ok(rx) => Handled::Pending(PendingEmbed {
+                rx,
+                version_before,
+                t_start,
+            }),
+            Err(Error::Saturated(_)) => Handled::Blocked(BlockedEmbed {
+                rows,
+                version_before,
+                t_start,
+            }),
+            Err(e) => {
+                done_embed(state, embed_error(state, e), t_start)
+            }
+        }
     } else {
         match state.handle.try_embed(rows) {
-            Ok(rx) => rx.recv().unwrap_or_else(|_| {
-                Err(Error::Service("reply dropped".into()))
+            Ok(rx) => Handled::Pending(PendingEmbed {
+                rx,
+                version_before,
+                t_start,
             }),
-            Err(e) => Err(e),
+            Err(e) => {
+                done_embed(state, embed_error(state, e), t_start)
+            }
         }
-    };
-    match result {
+    }
+}
+
+/// Check a pending embed for its reply; `None` means still in flight.
+pub(super) fn poll_pending(
+    state: &ServerState,
+    p: &PendingEmbed,
+) -> Option<Response> {
+    match p.rx.try_recv() {
+        Ok(result) => Some(finish_embed(state, result, p)),
+        Err(mpsc::TryRecvError::Empty) => None,
+        Err(mpsc::TryRecvError::Disconnected) => {
+            let resp = Response::error(500, "service dropped reply");
+            record_embed(state, &resp, p.t_start);
+            Some(resp)
+        }
+    }
+}
+
+/// Re-attempt admission for a parked (block-policy) embed.
+pub(super) fn retry_blocked(
+    state: &ServerState,
+    b: BlockedEmbed,
+) -> Handled {
+    match state.handle.try_embed_quiet(b.rows.clone()) {
+        Ok(rx) => Handled::Pending(PendingEmbed {
+            rx,
+            version_before: b.version_before,
+            t_start: b.t_start,
+        }),
+        Err(Error::Saturated(_)) => Handled::Blocked(b),
+        Err(e) => {
+            let resp = embed_error(state, e);
+            record_embed(state, &resp, b.t_start);
+            Handled::Done(resp)
+        }
+    }
+}
+
+/// Build the final embed response from the service reply and record
+/// the route stats.
+fn finish_embed(
+    state: &ServerState,
+    result: crate::error::Result<Matrix>,
+    p: &PendingEmbed,
+) -> Response {
+    let resp = match result {
         Ok(z) => {
-            let version_after = registry
+            let version_after = state
+                .handle
+                .registry()
                 .version(state.handle.model_name())
                 .unwrap_or(0);
             // Null during a swap window: the batch ran against one of
             // the two versions and the handler cannot know which.
-            let version = if version_before == version_after {
+            let version = if p.version_before == version_after {
                 Json::Num(version_after as f64)
             } else {
                 Json::Null
@@ -281,10 +396,19 @@ fn embed(state: &ServerState, req: &Request) -> Response {
                     .with("embedding", matrix_to_json(&z)),
             )
         }
-        Err(Error::Saturated(m)) => {
+        Err(e) => embed_error(state, e),
+    };
+    record_embed(state, &resp, p.t_start);
+    resp
+}
+
+/// Map an embed-path error to its response.
+fn embed_error(state: &ServerState, e: Error) -> Response {
+    match e {
+        Error::Saturated(m) => {
             // Admission control: saturation is transient, so answer
             // 429 with a Retry-After hint instead of queueing the
-            // connection worker behind the embed queue.
+            // connection behind the embed queue.
             let retry_ms = state.cfg.retry_after_ms;
             let retry_s = ((retry_ms + 999) / 1000).max(1);
             Response::json(
@@ -299,9 +423,28 @@ fn embed(state: &ServerState, req: &Request) -> Response {
             )
             .with_header("retry-after", &retry_s.to_string())
         }
-        Err(Error::Shape(m)) => Response::error(400, &m),
-        Err(e) => Response::error(500, &e.to_string()),
+        Error::Shape(m) => Response::error(400, &m),
+        e => Response::error(500, &e.to_string()),
     }
+}
+
+/// Record embed route stats at completion time and pass the response
+/// through (used for the immediate-error paths).
+fn done_embed(
+    state: &ServerState,
+    resp: Response,
+    t_start: Instant,
+) -> Handled {
+    record_embed(state, &resp, t_start);
+    Handled::Done(resp)
+}
+
+fn record_embed(state: &ServerState, resp: &Response, t_start: Instant) {
+    state.routes.record(
+        "POST /embed",
+        t_start.elapsed().as_secs_f64() * 1e6,
+        resp.status >= 400,
+    );
 }
 
 /// Parse a request body as JSON (400 on non-UTF-8 or bad JSON).

@@ -521,6 +521,7 @@ fn loadgen_round_trip_reports_throughput() {
         dim: 0, // exercises GET /models discovery
         seed: 9,
         warmup_ms: 3000,
+        rate: 0.0,
     })
     .unwrap();
     assert_eq!(report.requests_ok, 30);
