@@ -150,6 +150,29 @@ EOF
     test -f ../BENCH_SERVING.json || { echo "BENCH_SERVING.json missing"; exit 1; }
     test -f ../BENCH_GEMM.json || { echo "BENCH_GEMM.json missing"; exit 1; }
     test -f ../BENCH_EIGEN.json || { echo "BENCH_EIGEN.json missing"; exit 1; }
+
+    step "perf-regression gate (bench/history ledger)"
+    # Diff this run's bench artifacts against the committed ledger:
+    # any row whose primary metric (GFLOP/s, rows/s, time) regressed
+    # more than 15% is flagged.  Warn-only by default — quick-mode
+    # numbers on a shared machine are noisy; set CI_PERF_FAIL=1 to make
+    # regressions fail the gate (pinned perf machines).  A missing
+    # ledger self-seeds from this run (see bench/history/README.md).
+    hist=../bench/history
+    mkdir -p "$hist"
+    fail_flag=""
+    [ "${CI_PERF_FAIL:-0}" = "1" ] && fail_flag="--fail"
+    for artifact in BENCH_GEMM BENCH_EIGEN BENCH_SERVING; do
+        ledger="$hist/$artifact.json"
+        if [ -f "$ledger" ]; then
+            target/release/rskpca bench check \
+                --current "../$artifact.json" --baseline "$ledger" \
+                --tolerance 0.15 $fail_flag
+        else
+            cp "../$artifact.json" "$ledger"
+            echo "seeded $ledger from this run"
+        fi
+    done
 fi
 
 step "cargo doc --no-deps (warnings denied)"

@@ -67,13 +67,29 @@ fn main() {
     let full = fit_kpca(&ds.x, &kernel, rank).unwrap();
 
     // RSKPCA at pinned reduced-set sizes m ∈ {100, 400}.
-    let mut models: Vec<(String, EmbeddingModel)> =
+    let mut base_models: Vec<(String, EmbeddingModel)> =
         vec![(format!("full_n{n_full}"), full)];
     for m in [100usize, 400] {
         let x = grid_points(m, 4 * m, 29 + m as u64);
         let rs = ShadowDensity::new(4.0).fit(&x, &kernel);
         let model = fit_rskpca(&rs, &kernel, rank).unwrap();
-        models.push((format!("rskpca_m{}", model.n_retained()), model));
+        base_models
+            .push((format!("rskpca_m{}", model.n_retained()), model));
+    }
+    // Each model also runs as its f32-published twin: same operands,
+    // quantized at publish time and served through the f32 micro-kernel
+    // path — the mixed-precision serving speedup measured end to end.
+    let mut models: Vec<(String, EmbeddingModel)> = Vec::new();
+    for (name, model) in base_models {
+        let mut f32_twin = model.clone();
+        let qerr = f32_twin.quantize_for_serving().unwrap();
+        println!(
+            "{name}: f32 probe quantization error max_rel={:.3e} \
+             mean_rel={:.3e}",
+            qerr.max_rel, qerr.mean_rel
+        );
+        models.push((name.clone(), model));
+        models.push((format!("{name}_f32"), f32_twin));
     }
 
     println!(
@@ -146,6 +162,10 @@ fn main() {
                     .with("op", Json::Str("serving".into()))
                     .with("model", Json::Str(name.clone()))
                     .with(
+                        "precision",
+                        Json::Str(model.precision().name().into()),
+                    )
+                    .with(
                         "n",
                         Json::Num(
                             (clients * requests_per_client
@@ -191,12 +211,28 @@ fn main() {
     };
     let full_name = format!("full_n{n_full}");
     println!();
-    for (name, _) in models.iter().skip(1) {
+    for (name, _) in &models {
+        if name == &full_name || name.ends_with("_f32") {
+            continue;
+        }
         let base = rate(&full_name, 4).max(1e-9);
         println!(
             "reduced-set serving speedup {name} vs {full_name} \
              (4 http workers): {:.2}x",
             rate(name, 4) / base
+        );
+    }
+    // The mixed-precision serving claim: f32-published twin vs its f64
+    // original at equal traffic.
+    for (name, _) in &models {
+        let Some(base) = name.strip_suffix("_f32") else {
+            continue;
+        };
+        let f64_rate = rate(base, 4).max(1e-9);
+        println!(
+            "f32 serving speedup {name} vs {base} (4 http workers): \
+             {:.2}x",
+            rate(name, 4) / f64_rate
         );
     }
     std::fs::write("bench_serving.csv", csv)

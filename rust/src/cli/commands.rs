@@ -13,7 +13,9 @@ use crate::density::ShadowDensity;
 use crate::error::{Error, Result};
 use crate::experiments::{self, ExperimentCtx};
 use crate::kernel::Kernel;
-use crate::kpca::{fit_rskpca_with, EmbeddingModel, OnlineRskpca};
+use crate::kpca::{
+    fit_rskpca_with, EmbeddingModel, OnlineRskpca, Precision,
+};
 use crate::linalg::Matrix;
 use crate::metrics::Timer;
 use crate::prng::Pcg64;
@@ -172,7 +174,8 @@ pub fn embed(args: &Args) -> Result<()> {
 /// streaming deltas → incremental refit → publish, with the batcher
 /// never draining.
 pub fn serve(args: &Args) -> Result<()> {
-    let model = EmbeddingModel::load(Path::new(&req_flag(args, "model")?))?;
+    let mut model =
+        EmbeddingModel::load(Path::new(&req_flag(args, "model")?))?;
     let backend_name = args.flag_or("backend", "native");
     let artifacts = PathBuf::from(args.flag_or("artifacts", "artifacts"));
     let selftest = args.has("selftest");
@@ -198,6 +201,18 @@ pub fn serve(args: &Args) -> Result<()> {
     if let Some(listen) = args.flag("listen") {
         server_cfg.listen = listen.to_string();
     }
+    // Publish-time quantization: `[server] precision = "f32"` rounds
+    // the serving operands once here (training stays f64) and reports
+    // the probe-block error; the registry keeps quantizing hot-swapped
+    // and refreshed models.
+    if server_cfg.precision == Precision::F32 && model.quant.is_none() {
+        let qerr = model.quantize_for_serving()?;
+        println!(
+            "serving precision f32: probe quantization error \
+             max_rel={:.3e} mean_rel={:.3e}",
+            qerr.max_rel, qerr.mean_rel
+        );
+    }
     let dim = model.centers.cols();
     let rank = model.r().max(1);
     let kernel = model.kernel;
@@ -221,6 +236,9 @@ pub fn serve(args: &Args) -> Result<()> {
         factory_from_name(&backend_name, &artifacts),
         cfg,
     )?;
+    // Future publishes (refresher hot swaps, POST /models/swap) are
+    // quantized by the registry to match the configured precision.
+    svc.registry().set_serving_precision(server_cfg.precision);
 
     // Background refresher: observes the served traffic and
     // periodically publishes a refreshed model into the serving slot
@@ -466,25 +484,30 @@ pub fn bench(args: &Args) -> Result<()> {
     match what {
         "gemm" => bench_gemm(args),
         "eigen" => bench_eigen(args),
+        "check" => bench_check(args),
         other => Err(Error::Parse(format!(
-            "bench: unknown suite '{other}' (expected 'gemm' or \
-             'eigen')"
+            "bench: unknown suite '{other}' (expected 'gemm', 'eigen' \
+             or 'check')"
         ))),
     }
 }
 
 /// `rskpca bench gemm [--quick] [--json] [--sizes N,N,..] [--threads N]`
-/// — effective GFLOP/s for the packed GEMM and the distance-free
-/// symmetric Gram at n ∈ {512, 2048, 8192} (quick: 512 only), so
-/// hardware-roofline regressions are visible straight from the CLI.
+/// — effective GFLOP/s for the packed GEMM (f64 and the f32
+/// micro-kernel the mixed-precision serving path rides on) and the
+/// distance-free symmetric Gram at n ∈ {512, 2048, 8192} (quick: 512
+/// only), so hardware-roofline regressions are visible straight from
+/// the CLI.
 ///
-/// Conventions: GEMM is square (`C = A·B`, 2n³ flops); Gram is
-/// `gram_sym` on `n x 64` data counted at the full-cross-product cost
-/// `2n²d` ("effective" — the engine computes roughly half of that by
+/// Conventions: GEMM is square (`C = A·B`, 2n³ flops); the f32 row
+/// reports its speedup over f64 at the same n; Gram is `gram_sym` on
+/// `n x 64` data counted at the full-cross-product cost `2n²d`
+/// ("effective" — the engine computes roughly half of that by
 /// exploiting symmetry, so beating the GEMM number here is expected).
 /// `--json` writes `BENCH_GEMM.json` at the repo root (`--out`
 /// overrides the path).
 fn bench_gemm(args: &Args) -> Result<()> {
+    use crate::linalg::gemm::{self, BSrc};
     use crate::ser::Json;
 
     apply_threads(args, 0)?;
@@ -523,7 +546,51 @@ fn bench_gemm(args: &Args) -> Result<()> {
                 .with("seconds", Json::Num(secs))
                 .with("gflops", Json::Num(gflops)),
         );
-        drop((a, b));
+
+        // Same shape through the f32 micro-kernel (8x8 tile, deeper
+        // KC): the compute core the quantized serving path dispatches
+        // to.  Halved element size doubles panel reuse per cache line,
+        // so the target is >= 1.5x the f64 rate.
+        let a32: Vec<f32> =
+            a.as_slice().iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> =
+            b.as_slice().iter().map(|&v| v as f32).collect();
+        let mut c32 = vec![0f32; n * n];
+        let mut scratch32 = crate::linalg::GemmScratch::<f32>::new();
+        let secs32 = time_best(target_s, &mut || {
+            gemm::gemm_into(
+                &mut c32,
+                n,
+                n,
+                n,
+                &a32,
+                BSrc::Normal(&b32),
+                false,
+                threads,
+                &mut scratch32,
+            );
+            std::hint::black_box(c32[0]);
+        });
+        let gflops32 = 2.0 * (n as f64).powi(3) / secs32 / 1e9;
+        let speedup = gflops32 / gflops.max(1e-9);
+        println!(
+            "{:<18} {secs32:>9.3}s   {gflops32:>8.2} GFLOP/s \
+             ({speedup:.2}x vs f64)",
+            format!("gemm_f32/n{n}")
+        );
+        rows.push(
+            Json::obj()
+                .with("name", Json::Str(format!("gemm_f32/n{n}")))
+                .with("op", Json::Str("gemm_f32".into()))
+                .with("n", Json::Num(n as f64))
+                .with("m", Json::Num(n as f64))
+                .with("d", Json::Num(n as f64))
+                .with("threads", Json::Num(threads as f64))
+                .with("seconds", Json::Num(secs32))
+                .with("gflops", Json::Num(gflops32))
+                .with("speedup_vs_f64", Json::Num(speedup)),
+        );
+        drop((a, b, a32, b32, c32, scratch32));
 
         // Distance-free symmetric Gram on n x 64 data, counted at the
         // full-cross-product cost 2n²d.
@@ -660,6 +727,120 @@ fn bench_eigen(args: &Args) -> Result<()> {
             |e| Error::Io(format!("write {out}: {e}")),
         )?;
         println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// One comparable metric extracted from a bench JSON row: label,
+/// value, and whether larger is better.
+fn bench_metric(row: &crate::ser::Json) -> Option<(&'static str, f64, bool)> {
+    for (key, higher_better) in [
+        ("gflops", true),
+        ("rows_per_s", true),
+        ("ns_per_op", false),
+        ("seconds", false),
+    ] {
+        if let Some(v) = row.get(key).and_then(|v| v.as_f64()) {
+            return Some((key, v, higher_better));
+        }
+    }
+    None
+}
+
+/// `rskpca bench check --current FILE --baseline FILE
+/// [--tolerance 0.15] [--fail]` — the perf-regression gate: compare a
+/// fresh bench JSON (any of the `BENCH_*.json` artifacts) against a
+/// ledger baseline by row name, on each row's primary metric (GFLOP/s
+/// or rows/s where present, else time).  Rows regressing past the
+/// tolerance are listed with a warning; with `--fail` they make the
+/// command exit non-zero (what ci.sh wires into the pipeline).  Rows
+/// missing from the baseline (new benches) are reported, never failed —
+/// the ledger self-seeds on the first run.
+fn bench_check(args: &Args) -> Result<()> {
+    use crate::ser::Json;
+
+    let current_path = req_flag(args, "current")?;
+    let baseline_path = req_flag(args, "baseline")?;
+    let tol = args.flag_f64("tolerance", 0.15)?;
+    let fail = args.has("fail");
+    if !(0.0..1.0).contains(&tol) {
+        return Err(Error::Config(
+            "--tolerance must be in [0, 1)".into(),
+        ));
+    }
+    let load = |path: &str| -> Result<Vec<Json>> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        match crate::ser::parse(&text)? {
+            Json::Arr(items) => Ok(items),
+            _ => Err(Error::Parse(format!(
+                "{path}: expected a JSON array of bench rows"
+            ))),
+        }
+    };
+    let current = load(&current_path)?;
+    let baseline = load(&baseline_path)?;
+    let base_by_name = |name: &str| -> Option<&Json> {
+        baseline.iter().find(|r| {
+            r.get("name").and_then(|v| v.as_str()) == Some(name)
+        })
+    };
+
+    println!(
+        "bench check: {current_path} vs {baseline_path} \
+         (tolerance {:.0}%)\n",
+        tol * 100.0
+    );
+    let mut regressions = 0usize;
+    let mut compared = 0usize;
+    let mut fresh = 0usize;
+    for row in &current {
+        let Some(name) = row.get("name").and_then(|v| v.as_str())
+        else {
+            continue;
+        };
+        let Some((key, cur, higher_better)) = bench_metric(row) else {
+            continue;
+        };
+        let Some((_, base, _)) =
+            base_by_name(name).and_then(bench_metric)
+        else {
+            fresh += 1;
+            println!("{name:<34} NEW ({key} {cur:.2}; no baseline)");
+            continue;
+        };
+        compared += 1;
+        // Signed change, oriented so negative always means "worse".
+        let change = if higher_better {
+            (cur - base) / base.max(1e-12)
+        } else {
+            (base - cur) / base.max(1e-12)
+        };
+        let verdict = if change < -tol {
+            regressions += 1;
+            "REGRESSION"
+        } else if change > tol {
+            "improved"
+        } else {
+            "ok"
+        };
+        println!(
+            "{name:<34} {key} {base:>10.2} -> {cur:>10.2}  \
+             ({:+.1}%)  {verdict}",
+            change * 100.0
+        );
+    }
+    println!(
+        "\n{compared} compared, {fresh} new, {regressions} regression(s) \
+         past {:.0}%",
+        tol * 100.0
+    );
+    if regressions > 0 && fail {
+        return Err(Error::Service(format!(
+            "bench check failed: {regressions} row(s) regressed more \
+             than {:.0}% vs {baseline_path}",
+            tol * 100.0
+        )));
     }
     Ok(())
 }

@@ -18,6 +18,8 @@
 //!                [--out FILE]
 //! rskpca bench   eigen [--quick] [--json] [--sizes N,N,..] [--threads N]
 //!                [--out FILE]
+//! rskpca bench   check --current FILE --baseline FILE
+//!                [--tolerance F] [--fail]
 //! rskpca gen     --dataset NAME --out FILE [--seed N]
 //! rskpca info    [--artifacts DIR]
 //! ```
@@ -123,7 +125,8 @@ USAGE:
       via GET /models unless --dim is given); --json prints or writes
       a machine-readable summary
   rskpca bench  gemm [--quick] [--json] [--sizes N,N,..] [--out FILE]
-      effective GFLOP/s for the packed GEMM and the distance-free
+      effective GFLOP/s for the packed GEMM (f64 and the f32 serving
+      micro-kernel, with the f32-vs-f64 speedup) and the distance-free
       symmetric Gram at n in {512, 2048, 8192} (quick: 512 only);
       --json writes BENCH_GEMM.json at the repo root for cross-PR
       roofline tracking
@@ -133,6 +136,12 @@ USAGE:
       threads) vs the serial tred2/tql2 reference vs leading-k subspace
       iteration at n in {512, 2048} (quick: 256); --json writes
       BENCH_EIGEN.json at the repo root
+  rskpca bench  check --current FILE --baseline FILE [--tolerance F]
+                [--fail]
+      perf-regression gate: compare a fresh BENCH_*.json against a
+      ledger baseline by row name (GFLOP/s, rows/s or time); rows
+      regressing past the tolerance (default 0.15) warn, and fail the
+      command under --fail (ci.sh wires this against bench/history/)
   rskpca gen    --dataset german|pendigits|usps|yale|gmm2d|swiss_roll
                 --out FILE [--seed N]
   rskpca info   [--artifacts DIR]
@@ -230,13 +239,66 @@ mod tests {
         let text = std::fs::read_to_string(&out).unwrap();
         let v = crate::ser::parse(&text).unwrap();
         let rows = v.as_arr().unwrap();
-        assert_eq!(rows.len(), 2); // gemm + gram_sym at one size
+        // gemm + gemm_f32 + gram_sym at one size.
+        assert_eq!(rows.len(), 3);
         assert_eq!(rows[0].req_str("op").unwrap(), "gemm");
         assert!(rows[0].req_f64("gflops").unwrap() > 0.0);
-        assert_eq!(rows[1].req_str("op").unwrap(), "gram_sym");
+        assert_eq!(rows[1].req_str("op").unwrap(), "gemm_f32");
+        assert!(rows[1].req_f64("gflops").unwrap() > 0.0);
+        assert!(rows[1].req_f64("speedup_vs_f64").unwrap() > 0.0);
+        assert_eq!(rows[2].req_str("op").unwrap(), "gram_sym");
         std::fs::remove_file(&out).ok();
         // Unknown suites are rejected.
         assert!(dispatch(&to_vec(&["bench", "qr"])).is_err());
+    }
+
+    #[test]
+    fn bench_check_gates_on_regression() {
+        let dir = std::env::temp_dir();
+        let base = dir.join("rskpca_bench_base.json");
+        let cur = dir.join("rskpca_bench_cur.json");
+        std::fs::write(
+            &base,
+            r#"[{"name": "gemm/n64", "gflops": 10.0},
+               {"name": "serving/full/w4", "rows_per_s": 1000.0}]"#,
+        )
+        .unwrap();
+        // Within tolerance + a brand-new row: passes even with --fail.
+        std::fs::write(
+            &cur,
+            r#"[{"name": "gemm/n64", "gflops": 9.0},
+               {"name": "serving/full/w4", "rows_per_s": 1100.0},
+               {"name": "gemm_f32/n64", "gflops": 20.0}]"#,
+        )
+        .unwrap();
+        let check = |extra: &[&str]| {
+            let mut argv = vec![
+                "bench",
+                "check",
+                "--current",
+                cur.to_str().unwrap(),
+                "--baseline",
+                base.to_str().unwrap(),
+            ];
+            argv.extend_from_slice(extra);
+            dispatch(&to_vec(&argv))
+        };
+        check(&["--fail"]).unwrap();
+        // Past tolerance: warns by default, fails with --fail.
+        std::fs::write(
+            &cur,
+            r#"[{"name": "gemm/n64", "gflops": 5.0}]"#,
+        )
+        .unwrap();
+        check(&[]).unwrap();
+        assert!(check(&["--fail"]).is_err());
+        // Tightened/widened tolerance is respected.
+        assert!(check(&["--fail", "--tolerance", "0.6"]).is_ok());
+        assert!(check(&["--fail", "--tolerance", "0.05"]).is_err());
+        // Out-of-range tolerance is rejected outright.
+        assert!(check(&["--tolerance", "1.5"]).is_err());
+        std::fs::remove_file(&base).ok();
+        std::fs::remove_file(&cur).ok();
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::kernel::KernelKind;
-use crate::kpca::EigSolver;
+use crate::kpca::{EigSolver, Precision};
 
 /// A parsed TOML-subset document: section -> key -> value.
 #[derive(Clone, Debug, Default)]
@@ -310,6 +310,11 @@ pub struct ServerConfig {
     /// replacement hazard.  Inline `{"model": ...}` swaps are always
     /// allowed.
     pub allow_path_swap: bool,
+    /// Serving precision applied at publish time: `"f64"` (default —
+    /// exact serving) or `"f32"` (models are quantized when published,
+    /// recording a probe-block embedding-error diagnostic; training
+    /// always stays f64).
+    pub precision: Precision,
 }
 
 impl Default for ServerConfig {
@@ -323,6 +328,7 @@ impl Default for ServerConfig {
             keep_alive_ms: 5000,
             max_conns: 8192,
             allow_path_swap: false,
+            precision: Precision::F64,
         }
     }
 }
@@ -430,6 +436,13 @@ impl RunConfig {
             "allow_path_swap",
             sv.allow_path_swap,
         );
+        let prec =
+            doc.get_str("server", "precision", sv.precision.name());
+        sv.precision = Precision::parse(&prec).ok_or_else(|| {
+            Error::Config(format!(
+                "precision must be 'f32' or 'f64', got '{prec}'"
+            ))
+        })?;
         if sv.workers == 0 || sv.max_conns == 0 || sv.keep_alive_ms == 0 {
             return Err(Error::Config(
                 "server workers / max_conns / keep_alive_ms must be \
@@ -642,6 +655,21 @@ allow_path_swap = true
         );
         assert!(
             RunConfig::from_toml("[server]\nmax_batch_rows = 0").is_err()
+        );
+    }
+
+    #[test]
+    fn serving_precision_parses_and_validates() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.server.precision, Precision::F64);
+        let cfg =
+            RunConfig::from_toml("[server]\nprecision = \"f32\"").unwrap();
+        assert_eq!(cfg.server.precision, Precision::F32);
+        let cfg =
+            RunConfig::from_toml("[server]\nprecision = \"f64\"").unwrap();
+        assert_eq!(cfg.server.precision, Precision::F64);
+        assert!(
+            RunConfig::from_toml("[server]\nprecision = \"bf16\"").is_err()
         );
     }
 }

@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use crate::kpca::EmbeddingModel;
+use crate::kpca::{EmbeddingModel, Precision};
 
 /// Slot name used by the single-model convenience constructors
 /// (`EmbeddingService::start`, `coordinator::serve`).
@@ -30,6 +30,10 @@ struct Slot {
 pub struct ModelRegistry {
     slots: RwLock<BTreeMap<String, Slot>>,
     swaps: AtomicU64,
+    /// Serving precision applied to models at publish time (`[server]
+    /// precision` in the config).  Defaults to f64: exact serving, no
+    /// quantization.
+    precision: RwLock<Precision>,
 }
 
 impl ModelRegistry {
@@ -38,10 +42,33 @@ impl ModelRegistry {
         ModelRegistry::default()
     }
 
+    /// Set the serving precision applied to future publishes.  Models
+    /// already in slots are untouched; republish (or let the refresher
+    /// republish) to requantize.
+    pub fn set_serving_precision(&self, precision: Precision) {
+        *self.precision.write().unwrap() = precision;
+    }
+
+    /// Serving precision applied at publish time.
+    pub fn serving_precision(&self) -> Precision {
+        *self.precision.read().unwrap()
+    }
+
     /// Publish a model under `name`, returning its version (1 for a new
     /// slot; replacing an existing slot bumps its version and the global
     /// swap count).  Readers holding the previous `Arc` are unaffected.
-    pub fn publish(&self, name: &str, model: EmbeddingModel) -> u64 {
+    ///
+    /// When the registry's serving precision is f32 and the model has no
+    /// quantized payload yet, the centers/coefficients are quantized here
+    /// (recording the probe-block error in the model).  Quantization
+    /// failure is not fatal: the model is published serving f64.
+    pub fn publish(&self, name: &str, mut model: EmbeddingModel) -> u64 {
+        if self.serving_precision() == Precision::F32
+            && model.quant.is_none()
+            && model.quantize_for_serving().is_err()
+        {
+            model.clear_quantization();
+        }
         let mut slots = self.slots.write().unwrap();
         match slots.get_mut(name) {
             Some(slot) => {
@@ -174,5 +201,39 @@ mod tests {
         }
         assert_eq!(reg.swap_count(), 20);
         assert_eq!(reg.version(DEFAULT_MODEL), Some(21));
+    }
+
+    #[test]
+    fn f32_precision_quantizes_at_publish_time() {
+        let reg = ModelRegistry::new();
+        assert_eq!(reg.serving_precision(), Precision::F64);
+        reg.publish("plain", model(11));
+        assert_eq!(reg.get("plain").unwrap().precision(), Precision::F64);
+
+        reg.set_serving_precision(Precision::F32);
+        assert_eq!(reg.serving_precision(), Precision::F32);
+        reg.publish("quantized", model(12));
+        let got = reg.get("quantized").unwrap();
+        assert_eq!(got.precision(), Precision::F32);
+        let err = got.quant_error().expect("publish records probe error");
+        assert!(err.max_rel.is_finite() && err.max_rel >= 0.0);
+        assert!(err.mean_rel <= err.max_rel);
+
+        // A model quantized before publish keeps its recorded error.
+        let mut pre = model(13);
+        let pre_err = pre.quantize_for_serving().unwrap();
+        reg.publish("prequantized", pre);
+        let got = reg.get("prequantized").unwrap();
+        assert_eq!(got.quant_error(), Some(pre_err));
+
+        // Switching back to f64 leaves published slots untouched but
+        // stops quantizing new publishes.
+        reg.set_serving_precision(Precision::F64);
+        reg.publish("later", model(14));
+        assert_eq!(reg.get("later").unwrap().precision(), Precision::F64);
+        assert_eq!(
+            reg.get("quantized").unwrap().precision(),
+            Precision::F32
+        );
     }
 }

@@ -16,7 +16,7 @@ use super::batch::{BatchAssembler, Clock, SystemClock};
 use super::registry::{ModelRegistry, DEFAULT_MODEL};
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
-use crate::kpca::EmbeddingModel;
+use crate::kpca::{EmbeddingModel, Precision, QuantError};
 use crate::linalg::Matrix;
 use crate::metrics::Histogram;
 use crate::runtime::GramBackend;
@@ -51,6 +51,11 @@ struct ServiceStats {
     model_swaps: u64,
     /// Version of the model the worker most recently served.
     model_version: u64,
+    /// Serving precision of the model the worker most recently served.
+    model_precision: Precision,
+    /// Publish-time quantization error of the most recently served
+    /// model (`None` when serving f64).
+    model_quant: Option<QuantError>,
 }
 
 /// A point-in-time copy of the service metrics.
@@ -70,6 +75,11 @@ pub struct ServiceStatsSnapshot {
     /// Model version the worker most recently served (the registry may
     /// already hold a newer one that no batch has picked up yet).
     pub model_version: u64,
+    /// Serving precision of the most recently served model.
+    pub model_precision: Precision,
+    /// Publish-time probe-block quantization error of the most recently
+    /// served model (`None` for f64 serving).
+    pub model_quant: Option<QuantError>,
 }
 
 /// Cloneable client handle.
@@ -195,6 +205,8 @@ impl ServiceHandle {
             },
             model_swaps: s.model_swaps,
             model_version: s.model_version,
+            model_precision: s.model_precision,
+            model_quant: s.model_quant,
         }
     }
 }
@@ -264,6 +276,8 @@ impl EmbeddingService {
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
         let stats = Arc::new(Mutex::new(ServiceStats {
             model_version: version0,
+            model_precision: model0.precision(),
+            model_quant: model0.quant_error(),
             ..Default::default()
         }));
         let handle = ServiceHandle {
@@ -486,15 +500,11 @@ fn execute_batch(
             }
         }
         // One backend call for the whole batch.  For the native backend
-        // this is the fused parallel projection (`Kernel::embed_rows`):
-        // the stacked rows fan out across the `crate::parallel` compute
+        // this is the fused parallel projection (`Kernel::embed_rows`,
+        // or its f32 twin when the model was published quantized): the
+        // stacked rows fan out across the `crate::parallel` compute
         // threads, so coalescing directly buys multi-core utilization.
-        backend.embed(
-            &stacked,
-            &model.centers,
-            &model.coeffs,
-            &model.kernel,
-        )
+        backend.embed_model(&stacked, &model)
     };
     // Metrics first (once per batch): a client observing its reply must
     // already see this batch reflected in a stats snapshot.
@@ -510,6 +520,8 @@ fn execute_batch(
             *last_version = version;
         }
         s.model_version = version;
+        s.model_precision = model.precision();
+        s.model_quant = model.quant_error();
         for req in batch {
             s.latency_us
                 .record(now_us.saturating_sub(req.enqueued_us) as f64);
@@ -809,6 +821,54 @@ mod tests {
         assert_eq!(snap.model_swaps, 1);
         assert_eq!(snap.model_version, 2);
         assert_eq!(registry.swap_count(), 1);
+    }
+
+    #[test]
+    fn f32_published_model_serves_within_probe_bound() {
+        let (model, x) = test_model();
+        let expect = model.transform(&x);
+        let registry = Arc::new(ModelRegistry::new());
+        registry.set_serving_precision(Precision::F32);
+        registry.publish(DEFAULT_MODEL, model);
+        let svc = EmbeddingService::start_with_registry(
+            registry.clone(),
+            DEFAULT_MODEL,
+            native(),
+            ServiceConfig::default(),
+        )
+        .unwrap();
+        let h = svc.handle();
+        let got = h.embed(x.clone()).unwrap();
+        let err = registry
+            .get(DEFAULT_MODEL)
+            .unwrap()
+            .quant_error()
+            .expect("f32 publish records probe error");
+        for i in 0..x.rows() {
+            let (zr, ar) = (expect.row(i), got.row(i));
+            let num = zr
+                .iter()
+                .zip(ar)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            let den = zr
+                .iter()
+                .map(|v| v * v)
+                .sum::<f64>()
+                .sqrt()
+                .max(1e-30);
+            assert!(
+                num / den <= (err.max_rel * 10.0).max(1e-6),
+                "row {i}: rel err {:.3e} vs bound {:.3e}",
+                num / den,
+                err.max_rel
+            );
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.model_precision, Precision::F32);
+        let snap_err = snap.model_quant.expect("snapshot carries error");
+        assert_eq!(snap_err, err);
     }
 
     #[test]

@@ -47,8 +47,8 @@ use std::cell::RefCell;
 use std::ops::Range;
 
 use crate::error::{Error, Result};
-use crate::linalg::gemm::{self, BSrc};
-use crate::linalg::{dot4, sq_euclidean, Matrix};
+use crate::linalg::gemm::{self, BSrc, Element};
+use crate::linalg::{dot4, sq_euclidean, Matrix, MatrixF32};
 use crate::parallel;
 
 /// Minimum output elements before the Gram paths fan out to threads;
@@ -71,10 +71,12 @@ const EMBED_TILE_ROWS: usize = 64;
 const MIRROR_TILE: usize = 64;
 
 /// Grow `buf` to at least `len`, counting the growth event (the
-/// zero-allocation contract is "no growth after warmup").
-fn ensure(buf: &mut Vec<f64>, len: usize, grows: &mut u64) {
+/// zero-allocation contract is "no growth after warmup").  Generic over
+/// the GEMM element width so the f32 serving scratch shares the same
+/// high-water-mark discipline.
+fn ensure<E: Element>(buf: &mut Vec<E>, len: usize, grows: &mut u64) {
     if buf.len() < len {
-        buf.resize(len, 0.0);
+        buf.resize(len, E::ZERO);
         *grows += 1;
     }
 }
@@ -157,6 +159,25 @@ fn profile_from_cross(
     ny: f64,
     g: f64,
 ) -> f64 {
+    let d2 = (nx + ny - 2.0 * g).max(0.0);
+    match kind {
+        KernelKind::Gaussian => (-gamma * d2).exp(),
+        KernelKind::Laplacian => (-gamma * d2.sqrt()).exp(),
+        KernelKind::Cauchy => 1.0 / (1.0 + gamma * d2),
+    }
+}
+
+/// f32 twin of [`profile_from_cross`] for the quantized serving path:
+/// the same clamp and profile arithmetic, evaluated in f32 (transcendals
+/// through the f32 `exp`/`sqrt` intrinsics).
+#[inline]
+fn profile_from_cross_f32(
+    kind: KernelKind,
+    gamma: f32,
+    nx: f32,
+    ny: f32,
+    g: f32,
+) -> f32 {
     let d2 = (nx + ny - 2.0 * g).max(0.0);
     match kind {
         KernelKind::Gaussian => (-gamma * d2).exp(),
@@ -607,6 +628,111 @@ impl Kernel {
         }
         Ok(out)
     }
+
+    /// Mixed-precision twin of [`Kernel::embed_rows_with`]: the Gram
+    /// tile runs through the f32 micro-kernel GEMM against quantized
+    /// [`F32Operands`] (centers, coefficients, center norms all rounded
+    /// once at publish time), the profile epilogue is evaluated in f32,
+    /// and the coefficient fold accumulates per
+    /// [`F32Operands::accum`] — in f64 by default (the tile is widened
+    /// once; the m-term coefficient sums with mixed signs are where f32
+    /// cancellation would bite), or natively in f32 for the maximum
+    /// bandwidth win.  Query rows are rounded to f32 once per call;
+    /// output is always f64.  Same band fan-out, block structure, and
+    /// bitwise thread-count invariance as the f64 path; the accuracy
+    /// delta vs f64 is measured at publish time and recorded in the
+    /// model's quantization diagnostic.
+    pub fn embed_rows_f32_with(
+        &self,
+        s: &mut ScratchF32,
+        x: &Matrix,
+        ops: &F32Operands,
+    ) -> Result<Matrix> {
+        if x.cols() != ops.centers.cols() {
+            return Err(Error::Shape(format!(
+                "embed_rows_f32: x dim {} != centers dim {}",
+                x.cols(),
+                ops.centers.cols()
+            )));
+        }
+        let (n, m, r, d) =
+            (x.rows(), ops.centers.rows(), ops.coeffs32.cols(), x.cols());
+        let mut out = Matrix::zeros(n, r);
+        if n == 0 || r == 0 || m == 0 {
+            return Ok(out);
+        }
+        // Round the query block once; norms accumulate in f64 over the
+        // rounded values (so nx matches the products the f32 GEMM forms)
+        // and round once at the end.
+        ensure(&mut s.x32, n * d, &mut s.grows);
+        for (dst, &v) in s.x32[..n * d].iter_mut().zip(x.as_slice()) {
+            *dst = v as f32;
+        }
+        ensure(&mut s.x_norms, n, &mut s.grows);
+        for i in 0..n {
+            let row = &s.x32[i * d..(i + 1) * d];
+            let mut acc = 0.0f64;
+            for &v in row {
+                acc += v as f64 * v as f64;
+            }
+            s.x_norms[i] = acc as f32;
+        }
+        let work = n.saturating_mul(m).saturating_mul(d.max(1));
+        let threads =
+            parallel::threads_for_work(work, EMBED_PAR_MIN_FLOPS);
+        if s.bands.len() < threads {
+            s.bands.resize_with(threads, BandScratchF32::default);
+            s.grows += 1;
+        }
+        let ctx = EmbedCtxF32 {
+            x32: &s.x32[..n * d],
+            ops,
+            xn: &s.x_norms[..n],
+            kind: self.kind,
+            gamma: self.gamma() as f32,
+            m,
+            r,
+            d,
+        };
+        let ranges = parallel::even_ranges(n, threads);
+        if ranges.len() == 1 {
+            embed_band_f32(&ctx, 0..n, out.as_mut_slice(), &mut s.bands[0]);
+        } else {
+            let mut jobs: Vec<(
+                Range<usize>,
+                &mut [f64],
+                &mut BandScratchF32,
+            )> = Vec::with_capacity(ranges.len());
+            let mut out_rest: &mut [f64] = out.as_mut_slice();
+            let mut bands_rest: &mut [BandScratchF32] =
+                &mut s.bands[..ranges.len()];
+            for range in &ranges {
+                let (band_out, out_tail) =
+                    out_rest.split_at_mut(range.len() * r);
+                let (bs, bs_tail) = bands_rest.split_at_mut(1);
+                jobs.push((range.clone(), band_out, &mut bs[0]));
+                out_rest = out_tail;
+                bands_rest = bs_tail;
+            }
+            std::thread::scope(|scope| {
+                let ctx = &ctx;
+                let mut it = jobs.into_iter();
+                let head = it.next().expect("at least two bands");
+                let handles: Vec<_> = it
+                    .map(|(range, band_out, bs)| {
+                        scope.spawn(move || {
+                            embed_band_f32(ctx, range, band_out, bs)
+                        })
+                    })
+                    .collect();
+                embed_band_f32(ctx, head.0, head.1, head.2);
+                for h in handles {
+                    h.join().expect("embed_f32 worker panicked");
+                }
+            });
+        }
+        Ok(out)
+    }
 }
 
 /// Shared read-only state for one fused-projection call.
@@ -670,6 +796,223 @@ fn embed_band(
             1,
             gs,
         );
+        i0 += bl;
+    }
+}
+
+/// Accumulation policy for the f32 coefficient fold of
+/// [`Kernel::embed_rows_f32_with`].  The Gram tile is always computed
+/// in f32 (that is where the bandwidth win lives — the `n x m x d`
+/// cross-product); the policy only governs the `m`-term coefficient
+/// sums, whose mixed signs make them the cancellation-sensitive half.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Accum {
+    /// Fold the profiled tile into the coefficients entirely in f32
+    /// (widest win, loosest error).
+    Native,
+    /// Widen the profiled f32 tile to f64 once per block and run the
+    /// coefficient GEMM in f64 against the pre-widened (f32-rounded)
+    /// coefficients — the serving default: the error stays at the
+    /// quantization floor instead of growing with `m`.
+    #[default]
+    F64,
+}
+
+/// The quantized serving payload: model operands rounded to f32 once at
+/// publish time.  Center norms are accumulated in f64 over the *rounded*
+/// centers (so they match the products the f32 GEMM forms) and rounded
+/// last; `coeffs64` holds the f32-rounded coefficients widened back to
+/// f64 for the [`Accum::F64`] fold, so both policies see identical
+/// operand values and differ only in accumulation width.
+#[derive(Clone, Debug)]
+pub struct F32Operands {
+    centers: MatrixF32,
+    coeffs32: MatrixF32,
+    coeffs64: Matrix,
+    center_norms: Vec<f32>,
+    accum: Accum,
+}
+
+impl F32Operands {
+    /// Quantize f64 model operands (centers `m x d`, coefficients
+    /// `m x r`) into the f32 serving payload.
+    pub fn quantize(centers: &Matrix, coeffs: &Matrix, accum: Accum) -> Self {
+        assert_eq!(
+            coeffs.rows(),
+            centers.rows(),
+            "quantize: coeffs rows != centers rows"
+        );
+        let c32 = MatrixF32::from_f64(centers);
+        let (m, d) = (c32.rows(), c32.cols());
+        let mut center_norms = vec![0.0f32; m];
+        for (i, slot) in center_norms.iter_mut().enumerate() {
+            let row = &c32.as_slice()[i * d..(i + 1) * d];
+            let mut acc = 0.0f64;
+            for &v in row {
+                acc += v as f64 * v as f64;
+            }
+            *slot = acc as f32;
+        }
+        let coeffs32 = MatrixF32::from_f64(coeffs);
+        let coeffs64 = coeffs32.to_f64();
+        F32Operands { centers: c32, coeffs32, coeffs64, center_norms, accum }
+    }
+
+    /// The quantized center set (`m x d`).
+    pub fn centers(&self) -> &MatrixF32 {
+        &self.centers
+    }
+
+    /// The accumulation policy of the coefficient fold.
+    pub fn accum(&self) -> Accum {
+        self.accum
+    }
+
+    /// f32 floats held by the payload (the serving-footprint headline:
+    /// half the bytes of the f64 operands it shadows).
+    pub fn storage_floats(&self) -> usize {
+        self.centers.rows() * self.centers.cols()
+            + self.coeffs32.rows() * self.coeffs32.cols()
+            + self.center_norms.len()
+    }
+}
+
+/// Reusable workspace for [`Kernel::embed_rows_f32_with`] — the f32
+/// twin of [`Scratch`], owned by long-lived serving threads (the native
+/// backend holds one next to its f64 scratch).  Same high-water-mark
+/// growth discipline; [`ScratchF32::grow_events`] must stay constant
+/// across steady-state serving calls.
+#[derive(Default, Debug)]
+pub struct ScratchF32 {
+    x32: Vec<f32>,
+    x_norms: Vec<f32>,
+    bands: Vec<BandScratchF32>,
+    grows: u64,
+}
+
+/// Per-compute-thread slice of the f32 workspace: an f32 Gram tile, a
+/// widened f64 twin (the [`Accum::F64`] fold), an f32 output staging
+/// block (the [`Accum::Native`] fold), and packing buffers for both
+/// element widths.
+#[derive(Default, Debug)]
+struct BandScratchF32 {
+    tile: Vec<f32>,
+    tile64: Vec<f64>,
+    out32: Vec<f32>,
+    gemm32: gemm::GemmScratch<f32>,
+    gemm64: gemm::GemmScratch,
+    grows: u64,
+}
+
+impl ScratchF32 {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total buffer-growth events across every sub-buffer (the
+    /// zero-allocation hot-loop contract, as [`Scratch::grow_events`]).
+    pub fn grow_events(&self) -> u64 {
+        self.grows
+            + self
+                .bands
+                .iter()
+                .map(|b| {
+                    b.grows
+                        + b.gemm32.grow_events()
+                        + b.gemm64.grow_events()
+                })
+                .sum::<u64>()
+    }
+}
+
+/// Shared read-only state for one mixed-precision projection call.
+struct EmbedCtxF32<'a> {
+    x32: &'a [f32],
+    ops: &'a F32Operands,
+    xn: &'a [f32],
+    kind: KernelKind,
+    gamma: f32,
+    m: usize,
+    r: usize,
+    d: usize,
+}
+
+/// One band of the mixed-precision projection: per block, (1) f32 Gram
+/// tile via the norm trick (f32 cross-product GEMM + f32 profile
+/// epilogue), (2) coefficient fold at the payload's accumulation width,
+/// landing in the f64 output band.  Serial GEMMs — the parallelism
+/// lives at the band level, exactly as the f64 path.
+fn embed_band_f32(
+    ctx: &EmbedCtxF32<'_>,
+    rows: Range<usize>,
+    out_band: &mut [f64],
+    bs: &mut BandScratchF32,
+) {
+    let BandScratchF32 { tile, tile64, out32, gemm32, gemm64, grows } = bs;
+    ensure(tile, EMBED_TILE_ROWS * ctx.m, grows);
+    let cn = &ctx.ops.center_norms;
+    let mut i0 = rows.start;
+    while i0 < rows.end {
+        let bl = (rows.end - i0).min(EMBED_TILE_ROWS);
+        let xa = &ctx.x32[i0 * ctx.d..(i0 + bl) * ctx.d];
+        let t = &mut tile[..bl * ctx.m];
+        gemm::gemm_into(
+            t,
+            bl,
+            ctx.m,
+            ctx.d,
+            xa,
+            BSrc::Trans(ctx.ops.centers.as_slice()),
+            false,
+            1,
+            gemm32,
+        );
+        for (k, row) in t.chunks_mut(ctx.m).enumerate() {
+            let nx = ctx.xn[i0 + k];
+            for (v, &nc) in row.iter_mut().zip(cn) {
+                *v = profile_from_cross_f32(ctx.kind, ctx.gamma, nx, nc, *v);
+            }
+        }
+        let ob = &mut out_band
+            [(i0 - rows.start) * ctx.r..(i0 - rows.start + bl) * ctx.r];
+        match ctx.ops.accum {
+            Accum::F64 => {
+                ensure(tile64, EMBED_TILE_ROWS * ctx.m, grows);
+                let t64 = &mut tile64[..bl * ctx.m];
+                for (w, &v) in t64.iter_mut().zip(t.iter()) {
+                    *w = v as f64;
+                }
+                gemm::gemm_into(
+                    ob,
+                    bl,
+                    ctx.r,
+                    ctx.m,
+                    t64,
+                    BSrc::Normal(ctx.ops.coeffs64.as_slice()),
+                    false,
+                    1,
+                    gemm64,
+                );
+            }
+            Accum::Native => {
+                ensure(out32, EMBED_TILE_ROWS * ctx.r, grows);
+                let o32 = &mut out32[..bl * ctx.r];
+                gemm::gemm_into(
+                    o32,
+                    bl,
+                    ctx.r,
+                    ctx.m,
+                    t,
+                    BSrc::Normal(ctx.ops.coeffs32.as_slice()),
+                    false,
+                    1,
+                    gemm32,
+                );
+                for (w, &v) in ob.iter_mut().zip(o32.iter()) {
+                    *w = v as f64;
+                }
+            }
+        }
         i0 += bl;
     }
 }
@@ -953,6 +1296,114 @@ mod tests {
         assert!(k.embed_rows(&bad_dim, &c, &a).is_err());
         let bad_coeffs = random_matrix(4, 2, 5);
         assert!(k.embed_rows(&x, &c, &bad_coeffs).is_err());
+    }
+
+    /// Max per-row relative L2 error of `got` vs the f64 reference —
+    /// the same statistic the publish-time quantization diagnostic
+    /// records.
+    fn max_row_rel_err(got: &Matrix, want: &Matrix) -> f64 {
+        let mut worst = 0.0f64;
+        for i in 0..want.rows() {
+            let (mut num, mut den) = (0.0f64, 0.0f64);
+            for (a, b) in got.row(i).iter().zip(want.row(i)) {
+                num += (a - b) * (a - b);
+                den += b * b;
+            }
+            worst = worst.max(num.sqrt() / den.sqrt().max(1e-30));
+        }
+        worst
+    }
+
+    #[test]
+    fn embed_rows_f32_matches_f64_within_quantization_bound() {
+        let x = random_matrix(60, 8, 13);
+        let c = random_matrix(40, 8, 14);
+        let a = random_matrix(40, 6, 15).scale(0.3);
+        for k in [Kernel::gaussian(1.2), Kernel::laplacian(1.0),
+                  Kernel::cauchy(1.5)] {
+            let want = k.embed_rows(&x, &c, &a).unwrap();
+            // The f64-accumulated fold stays at the quantization floor;
+            // the native fold additionally pays f32 accumulation over
+            // the m coefficient terms.
+            for (accum, bound) in
+                [(Accum::F64, 1e-5), (Accum::Native, 1e-4)]
+            {
+                let ops = F32Operands::quantize(&c, &a, accum);
+                let mut s = ScratchF32::new();
+                let got = k.embed_rows_f32_with(&mut s, &x, &ops).unwrap();
+                let err = max_row_rel_err(&got, &want);
+                assert!(
+                    err <= bound,
+                    "{:?} {accum:?}: rel err {err:e} > {bound:e}",
+                    k.kind
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn embed_rows_f32_batch_equals_per_row() {
+        // Band/block boundaries must never change a row's arithmetic:
+        // serving one row at a time is bitwise identical to the batch
+        // (the f32 twin of the f64 path's batching invariance).  The
+        // shape clears EMBED_PAR_MIN_FLOPS so the batch fans out when
+        // cores allow.
+        let x = random_matrix(130, 8, 23);
+        let c = random_matrix(64, 8, 24);
+        let a = random_matrix(64, 5, 25).scale(0.2);
+        let k = Kernel::gaussian(0.9);
+        for accum in [Accum::F64, Accum::Native] {
+            let ops = F32Operands::quantize(&c, &a, accum);
+            let mut s = ScratchF32::new();
+            let batch = k.embed_rows_f32_with(&mut s, &x, &ops).unwrap();
+            for i in 0..x.rows() {
+                let one = Matrix::from_rows(&[x.row(i)]).unwrap();
+                let row = k.embed_rows_f32_with(&mut s, &one, &ops).unwrap();
+                assert_eq!(
+                    row.row(0),
+                    batch.row(i),
+                    "{accum:?} row {i} differs from batch"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_f32_growth_stops_after_warmup() {
+        let x = random_matrix(70, 6, 33);
+        let c = random_matrix(30, 6, 34);
+        let a = random_matrix(30, 4, 35).scale(0.4);
+        let k = Kernel::gaussian(1.0);
+        for accum in [Accum::F64, Accum::Native] {
+            let ops = F32Operands::quantize(&c, &a, accum);
+            let mut s = ScratchF32::new();
+            let g0 = k.embed_rows_f32_with(&mut s, &x, &ops).unwrap();
+            let warm = s.grow_events();
+            for _ in 0..4 {
+                let g = k.embed_rows_f32_with(&mut s, &x, &ops).unwrap();
+                assert_eq!(g, g0, "{accum:?} result drifted across reuse");
+            }
+            assert_eq!(
+                s.grow_events(),
+                warm,
+                "{accum:?} scratch grew after warmup"
+            );
+        }
+    }
+
+    #[test]
+    fn embed_rows_f32_validates_shapes() {
+        let k = Kernel::gaussian(1.0);
+        let c = random_matrix(5, 4, 2);
+        let a = random_matrix(5, 2, 3);
+        let ops = F32Operands::quantize(&c, &a, Accum::F64);
+        let mut s = ScratchF32::new();
+        let x = random_matrix(3, 4, 1);
+        assert!(k.embed_rows_f32_with(&mut s, &x, &ops).is_ok());
+        let bad_dim = random_matrix(3, 2, 4);
+        assert!(k.embed_rows_f32_with(&mut s, &bad_dim, &ops).is_err());
+        // Quantized payload tracks the operand sizes.
+        assert_eq!(ops.storage_floats(), 5 * 4 + 5 * 2 + 5);
     }
 
     #[test]

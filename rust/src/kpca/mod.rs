@@ -56,13 +56,81 @@ pub use nystrom::{fit_nystrom, fit_weighted_nystrom};
 pub use rskpca::{fit_rskpca, fit_rskpca_with, RskpcaModel};
 pub use trainer::{EigSolver, GramCache, ModelMeta, OnlineRskpca};
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
-use crate::kernel::Kernel;
+use crate::kernel::{Accum, F32Operands, Kernel};
 use crate::linalg::Matrix;
 
 /// Numerical floor below which an eigenvalue is considered zero and its
 /// component dropped.
 pub(crate) const EIG_FLOOR: f64 = 1e-10;
+
+/// Rows of the held-back probe block the quantization diagnostic is
+/// measured on: the leading `min(m, 256)` center rows — always
+/// available at publish time and in-distribution by construction.
+pub(crate) const QUANT_PROBE_ROWS: usize = 256;
+
+/// Serving element width of a published model.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f64 serving (the training precision) — the default.
+    #[default]
+    F64,
+    /// Quantized f32 serving payload (centers / coefficients / norms
+    /// rounded once at publish time, f64-accumulated coefficient fold).
+    F32,
+}
+
+impl Precision {
+    /// Name as used in configs and the model format.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    /// Parse from a config / model-format string.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+}
+
+/// The f64↔f32 embedding error measured on the probe block when a model
+/// was quantized: per-row relative L2 error
+/// `||z32 - z64|| / max(||z64||, 1e-30)`, reduced to its max and mean.
+/// Recorded in model metadata (format v3) and surfaced by `/stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantError {
+    pub max_rel: f64,
+    pub mean_rel: f64,
+}
+
+/// A model's quantized serving payload plus its measured error — built
+/// once at publish time, shared immutably (behind an `Arc`) with every
+/// serving thread.
+#[derive(Clone, Debug)]
+pub struct QuantizedServing {
+    ops: F32Operands,
+    error: QuantError,
+}
+
+impl QuantizedServing {
+    /// The quantized f32 operands.
+    pub fn ops(&self) -> &F32Operands {
+        &self.ops
+    }
+
+    /// The probe-block embedding error recorded at quantization time.
+    pub fn error(&self) -> QuantError {
+        self.error
+    }
+}
 
 /// A fitted kernel-embedding model (any KPCA variant).
 #[derive(Clone, Debug)]
@@ -82,6 +150,11 @@ pub struct EmbeddingModel {
     /// Lifecycle metadata: refresh version counter, eigensolver policy,
     /// and source RSDE kind (persisted by the v2 model format).
     pub meta: ModelMeta,
+    /// Quantized f32 serving payload + its measured embedding error —
+    /// `None` for f64 serving (training always stays f64).  Built by
+    /// [`EmbeddingModel::quantize_for_serving`] at publish time; cleared
+    /// by refresh (a refreshed model is re-quantized when re-published).
+    pub quant: Option<Arc<QuantizedServing>>,
 }
 
 impl EmbeddingModel {
@@ -163,6 +236,88 @@ impl EmbeddingModel {
         }
     }
 
+    /// Quantize the model's serving operands to f32 and record the
+    /// f64↔f32 embedding error on a held-back probe block (the leading
+    /// `min(m, 256)` center rows).  Idempotent: re-quantizing replaces
+    /// the payload.  The coefficient fold uses the [`Accum::F64`]
+    /// policy, so the recorded error sits at the quantization floor
+    /// rather than growing with the center count.  Returns the
+    /// diagnostic it recorded.
+    pub fn quantize_for_serving(&mut self) -> Result<QuantError> {
+        let ops =
+            F32Operands::quantize(&self.centers, &self.coeffs, Accum::F64);
+        let p = self.centers.rows().min(QUANT_PROBE_ROWS);
+        let d = self.centers.cols();
+        let probe = Matrix::from_vec(
+            p,
+            d,
+            self.centers.as_slice()[..p * d].to_vec(),
+        )?;
+        let z64 =
+            self.kernel.embed_rows(&probe, &self.centers, &self.coeffs)?;
+        let mut s32 = crate::kernel::ScratchF32::new();
+        let z32 = self.kernel.embed_rows_f32_with(&mut s32, &probe, &ops)?;
+        let (mut max_rel, mut sum_rel) = (0.0f64, 0.0f64);
+        for i in 0..p {
+            let (mut num, mut den) = (0.0f64, 0.0f64);
+            for (a, b) in z32.row(i).iter().zip(z64.row(i)) {
+                num += (a - b) * (a - b);
+                den += b * b;
+            }
+            let rel = num.sqrt() / den.sqrt().max(1e-30);
+            max_rel = max_rel.max(rel);
+            sum_rel += rel;
+        }
+        let error = QuantError {
+            max_rel,
+            mean_rel: if p > 0 { sum_rel / p as f64 } else { 0.0 },
+        };
+        self.quant = Some(Arc::new(QuantizedServing { ops, error }));
+        Ok(error)
+    }
+
+    /// Drop the quantized serving payload (back to pure f64 serving).
+    pub fn clear_quantization(&mut self) {
+        self.quant = None;
+    }
+
+    /// The serving precision this model is published at.
+    pub fn precision(&self) -> Precision {
+        if self.quant.is_some() {
+            Precision::F32
+        } else {
+            Precision::F64
+        }
+    }
+
+    /// The quantization diagnostic, when the model carries an f32
+    /// payload.
+    pub fn quant_error(&self) -> Option<QuantError> {
+        self.quant.as_ref().map(|q| q.error())
+    }
+
+    /// Mixed-precision twin of [`EmbeddingModel::transform_batch_with`]:
+    /// projects through the quantized f32 payload via
+    /// [`crate::kernel::Kernel::embed_rows_f32_with`] (f32 Gram tile,
+    /// f64-accumulated coefficient fold, f64 output).  The model must
+    /// carry a payload (see
+    /// [`EmbeddingModel::quantize_for_serving`]); serving dispatch
+    /// checks [`EmbeddingModel::precision`] first.
+    pub fn transform_batch_f32_with(
+        &self,
+        scratch: &mut crate::kernel::ScratchF32,
+        x: &Matrix,
+    ) -> Matrix {
+        let q = self
+            .quant
+            .as_ref()
+            .expect("transform_batch_f32: model has no f32 payload");
+        match self.kernel.embed_rows_f32_with(scratch, x, q.ops()) {
+            Ok(z) => z,
+            Err(e) => panic!("transform_batch_f32: {e}"),
+        }
+    }
+
     /// Project a single point.
     pub fn transform_point(&self, x: &[f64]) -> Vec<f64> {
         let krow = self.kernel.kernel_row(x, &self.centers);
@@ -229,6 +384,45 @@ mod tests {
                 assert!((zp[j] - z.get(i, j)).abs() < 1e-10);
             }
         }
+    }
+
+    #[test]
+    fn quantize_for_serving_records_probe_error() {
+        let ds = gaussian_mixture_2d(80, 3, 0.4, 5);
+        let k = Kernel::gaussian(1.0);
+        let mut model = fit_kpca(&ds.x, &k, 4).unwrap();
+        assert_eq!(model.precision(), Precision::F64);
+        assert!(model.quant_error().is_none());
+        let err = model.quantize_for_serving().unwrap();
+        assert_eq!(model.precision(), Precision::F32);
+        assert_eq!(model.quant_error(), Some(err));
+        assert!(err.max_rel >= err.mean_rel);
+        assert!(
+            err.max_rel <= 1e-5,
+            "probe-block quantization error {:e}",
+            err.max_rel
+        );
+        // f32 serving tracks f64 on fresh query rows too, within a
+        // small multiple of the probe-block diagnostic.
+        let z64 = model.transform_batch(&ds.x);
+        let mut s32 = crate::kernel::ScratchF32::new();
+        let z32 = model.transform_batch_f32_with(&mut s32, &ds.x);
+        for i in 0..z64.rows() {
+            let (mut num, mut den) = (0.0f64, 0.0f64);
+            for (a, b) in z32.row(i).iter().zip(z64.row(i)) {
+                num += (a - b) * (a - b);
+                den += b * b;
+            }
+            let rel = num.sqrt() / den.sqrt().max(1e-30);
+            assert!(
+                rel <= (err.max_rel * 10.0).max(1e-6),
+                "row {i}: rel {rel:e} vs diagnostic {:e}",
+                err.max_rel
+            );
+        }
+        model.clear_quantization();
+        assert_eq!(model.precision(), Precision::F64);
+        assert!(model.quant_error().is_none());
     }
 
     #[test]

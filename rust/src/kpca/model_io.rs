@@ -3,29 +3,40 @@
 //! process invocations (fit once, serve forever — the RSKPCA deployment
 //! story).
 //!
-//! Format versioning: the `format` field is the version byte.  v2
-//! (`rskpca-model-v2`, current) adds the lifecycle metadata — refresh
-//! `version` counter, eigensolver policy, and source RSDE kind.  v1
-//! files (`rskpca-model-v1`) still load, with default metadata.
+//! Format versioning: the `format` field is the version byte.  v3
+//! (`rskpca-model-v3`, current) adds the serving `precision` and the
+//! quantization-error diagnostic (`quant_max_rel` / `quant_mean_rel`)
+//! recorded at publish time.  The f32 payload itself is **not** stored:
+//! quantization is a deterministic function of the f64 operands, so an
+//! f32-precision file re-quantizes on load — the file stays half the
+//! size it would be and the f64 numerics are the single source of
+//! truth.  v2 (`rskpca-model-v2`) added the lifecycle metadata —
+//! refresh `version` counter, eigensolver policy, and source RSDE kind.
+//! v1/v2 files still load (as f64-serving models with default / their
+//! recorded metadata); refresh numerics are unchanged by the upgrade.
 
 use std::path::Path;
 
-use super::{EigSolver, EmbeddingModel, ModelMeta};
+use super::{EigSolver, EmbeddingModel, ModelMeta, Precision};
 use crate::error::{Error, Result};
 use crate::kernel::{Kernel, KernelKind};
 use crate::linalg::Matrix;
 use crate::ser::{parse, Json};
 
 /// Current on-disk format tag.
+const FORMAT_V3: &str = "rskpca-model-v3";
+/// Legacy format tags (read-only compatibility).
 const FORMAT_V2: &str = "rskpca-model-v2";
-/// Legacy format tag (read-only compatibility).
 const FORMAT_V1: &str = "rskpca-model-v1";
 
 impl EmbeddingModel {
-    /// Serialize to JSON (always writes the current v2 format).
+    /// Serialize to JSON (always writes the current v3 format).  The
+    /// serving `precision` is persisted; for f32-published models the
+    /// recorded probe-block error rides along as a diagnostic (the f32
+    /// payload itself is recomputed deterministically on load).
     pub fn to_json(&self) -> Json {
-        Json::obj()
-            .with("format", Json::Str(FORMAT_V2.into()))
+        let mut doc = Json::obj()
+            .with("format", Json::Str(FORMAT_V3.into()))
             .with("version", Json::Num(self.meta.version as f64))
             .with("solver", Json::Str(self.meta.solver.name()))
             .with(
@@ -35,6 +46,7 @@ impl EmbeddingModel {
                     None => Json::Null,
                 },
             )
+            .with("precision", Json::Str(self.precision().name().into()))
             .with("method", Json::Str(self.method.clone()))
             .with("kernel", Json::Str(self.kernel.kind.name().into()))
             .with("sigma", Json::Num(self.kernel.sigma))
@@ -46,24 +58,35 @@ impl EmbeddingModel {
             .with(
                 "op_eigenvalues",
                 Json::from_f64_slice(&self.op_eigenvalues),
-            )
+            );
+        if let Some(err) = self.quant_error() {
+            doc = doc
+                .with("quant_max_rel", Json::Num(err.max_rel))
+                .with("quant_mean_rel", Json::Num(err.mean_rel));
+        }
+        doc
     }
 
-    /// Deserialize from JSON (validating shapes); accepts both the
-    /// current v2 format and legacy v1 files (which load with default
-    /// metadata).
+    /// Deserialize from JSON (validating shapes); accepts the current
+    /// v3 format and legacy v2/v1 files (which load as f64-serving
+    /// models, v1 additionally with default metadata).  A v3 file
+    /// published at f32 precision is re-quantized on load (a
+    /// deterministic function of the stored f64 operands).
     pub fn from_json(v: &Json) -> Result<EmbeddingModel> {
         let format = v.req_str("format")?;
-        let meta = match format {
+        let (meta, precision) = match format {
             // v1 predates the solver field: those models were produced
             // (and refreshed) under the then-default exact policy — pin
             // it, so upgrading the reader never silently reroutes a
             // legacy model's refresh through the Auto truncated path.
-            FORMAT_V1 => ModelMeta {
-                solver: EigSolver::Exact,
-                ..ModelMeta::default()
-            },
-            FORMAT_V2 => {
+            FORMAT_V1 => (
+                ModelMeta {
+                    solver: EigSolver::Exact,
+                    ..ModelMeta::default()
+                },
+                Precision::F64,
+            ),
+            FORMAT_V2 | FORMAT_V3 => {
                 let version = v.req_usize("version")? as u64;
                 let solver_name = v.req_str("solver")?;
                 let solver = EigSolver::parse(solver_name)
@@ -81,7 +104,18 @@ impl EmbeddingModel {
                         ))
                     }
                 };
-                ModelMeta { version, solver, rsde }
+                // v2 predates the precision field: always f64 serving.
+                let precision = if format == FORMAT_V3 {
+                    let p = v.req_str("precision")?;
+                    Precision::parse(p).ok_or_else(|| {
+                        Error::Parse(format!(
+                            "unknown serving precision '{p}'"
+                        ))
+                    })?
+                } else {
+                    Precision::F64
+                };
+                (ModelMeta { version, solver, rsde }, precision)
             }
             other => {
                 return Err(Error::Parse(format!(
@@ -110,14 +144,19 @@ impl EmbeddingModel {
                 "eigenvalue count != coeff columns".into(),
             ));
         }
-        Ok(EmbeddingModel {
+        let mut model = EmbeddingModel {
             kernel: Kernel::new(kind, sigma),
             centers,
             coeffs,
             op_eigenvalues,
             method: v.req_str("method")?.to_string(),
             meta,
-        })
+            quant: None,
+        };
+        if precision == Precision::F32 {
+            model.quantize_for_serving()?;
+        }
+        Ok(model)
     }
 
     /// Save to a file.
@@ -193,9 +232,93 @@ mod tests {
         assert_ne!(model.meta.solver, EigSolver::default());
         assert!(model.meta.rsde.is_none());
         assert_eq!(model.n_retained(), 2);
-        // Re-saving upgrades the file to v2.
+        // Legacy files load as f64-serving models ...
+        assert_eq!(model.precision(), crate::kpca::Precision::F64);
+        // ... and re-saving upgrades the file to the current format.
         let upgraded = model.to_json();
-        assert_eq!(upgraded.req_str("format").unwrap(), "rskpca-model-v2");
+        assert_eq!(upgraded.req_str("format").unwrap(), "rskpca-model-v3");
+        assert_eq!(upgraded.req_str("precision").unwrap(), "f64");
+    }
+
+    #[test]
+    fn all_three_format_versions_roundtrip() {
+        let ds = gaussian_mixture_2d(60, 3, 0.4, 9);
+        let k = Kernel::gaussian(1.0);
+        let mut model = fit_kpca(&ds.x, &k, 3).unwrap();
+        model.quantize_for_serving().unwrap();
+        let z_ref = model.transform(&ds.x);
+
+        // v3 (current): precision + diagnostic round-trip; the f32
+        // payload is rebuilt deterministically on load.
+        let doc = model.to_json();
+        assert_eq!(doc.req_str("format").unwrap(), "rskpca-model-v3");
+        assert_eq!(doc.req_str("precision").unwrap(), "f32");
+        let err = model.quant_error().unwrap();
+        assert_eq!(doc.req_f64("quant_max_rel").unwrap(), err.max_rel);
+        assert_eq!(doc.req_f64("quant_mean_rel").unwrap(), err.mean_rel);
+        let back = EmbeddingModel::from_json(&doc).unwrap();
+        assert_eq!(back.precision(), crate::kpca::Precision::F32);
+        // Re-quantization on load reproduces the recorded diagnostic
+        // exactly (it is a deterministic function of the f64 operands).
+        assert_eq!(back.quant_error(), Some(err));
+        assert!(
+            z_ref.sub(&back.transform(&ds.x)).unwrap().max_abs() < 1e-12
+        );
+
+        // v2 (legacy): same document minus the v3 fields — loads as an
+        // f64-serving model with its recorded metadata.
+        let v2_doc = match doc.clone() {
+            Json::Obj(fields) => Json::Obj(
+                fields
+                    .into_iter()
+                    .map(|(key, val)| {
+                        if key == "format" {
+                            (key, Json::Str(FORMAT_V2.into()))
+                        } else {
+                            (key, val)
+                        }
+                    })
+                    .filter(|(key, _)| {
+                        key != "precision"
+                            && key != "quant_max_rel"
+                            && key != "quant_mean_rel"
+                    })
+                    .collect(),
+            ),
+            _ => unreachable!(),
+        };
+        let v2_back = EmbeddingModel::from_json(&v2_doc).unwrap();
+        assert_eq!(v2_back.precision(), crate::kpca::Precision::F64);
+        assert_eq!(v2_back.meta, model.meta);
+        assert!(
+            z_ref.sub(&v2_back.transform(&ds.x)).unwrap().max_abs() < 1e-12
+        );
+
+        // v1 (legacy): additionally drop the metadata fields.
+        let v1_doc = match v2_doc {
+            Json::Obj(fields) => Json::Obj(
+                fields
+                    .into_iter()
+                    .map(|(key, val)| {
+                        if key == "format" {
+                            (key, Json::Str(FORMAT_V1.into()))
+                        } else {
+                            (key, val)
+                        }
+                    })
+                    .filter(|(key, _)| {
+                        key != "version" && key != "solver" && key != "rsde"
+                    })
+                    .collect(),
+            ),
+            _ => unreachable!(),
+        };
+        let v1_back = EmbeddingModel::from_json(&v1_doc).unwrap();
+        assert_eq!(v1_back.precision(), crate::kpca::Precision::F64);
+        assert_eq!(v1_back.meta.solver, EigSolver::Exact);
+        assert!(
+            z_ref.sub(&v1_back.transform(&ds.x)).unwrap().max_abs() < 1e-12
+        );
     }
 
     #[test]

@@ -261,6 +261,7 @@ pub(crate) fn fit_plan_with_gram(
             solver: *solver,
             rsde: plan.rsde.clone(),
         },
+        quant: None,
     })
 }
 
@@ -320,6 +321,7 @@ pub(crate) fn extend_spectrum(
         op_eigenvalues,
         method: method.into(),
         meta: ModelMeta::default(),
+        quant: None,
     })
 }
 

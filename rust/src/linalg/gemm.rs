@@ -17,8 +17,8 @@
 //!             └──────────────┘
 //! ```
 //!
-//! * **K cache-blocking** ([`KC`]): the k dimension is processed in
-//!   blocks so one packed B panel (`KC x NR` = 16 KiB) stays L1/L2
+//! * **K cache-blocking** (`Element::KC`): the k dimension is processed
+//!   in blocks so one packed B panel (`KC x NR` = 16 KiB) stays L1/L2
 //!   resident while a band of A panels streams past.
 //! * **Packing**: for each KC block, B is repacked k-major into NR-wide
 //!   panels and each A panel k-major into MR-wide columns, so the micro
@@ -28,6 +28,20 @@
 //!   threads (via [`crate::parallel::even_ranges`] splits); packed B is
 //!   shared read-only.  There is no work stealing and no atomics.
 //!
+//! ## Element abstraction
+//!
+//! The packing/blocking machinery is generic over a sealed [`Element`]
+//! trait (`f64`, `f32`).  Each element type owns its micro-kernel and
+//! tile geometry as associated constants, so the compiler monomorphizes
+//! one fully-concrete kernel per width — no dynamic dispatch, no shared
+//! tile size.  `f64` keeps the original `MR=4 x NR=8` tile and `KC=256`
+//! block; `f32` uses an `MR=8 x NR=8` tile (double the lanes per cache
+//! line at half the element width, same 256-byte register-tile
+//! footprint) with `KC=512` (same 16 KiB packed-B byte budget).  All
+//! default type parameters are `f64`, so existing call sites compile
+//! unchanged and the f64 path is instruction-for-instruction the code
+//! that shipped before the refactor.
+//!
 //! ## Determinism contract
 //!
 //! Each output element is accumulated in **strictly increasing k
@@ -36,10 +50,11 @@
 //! which rounds exactly like keeping the accumulator live.  Band and
 //! tile boundaries only change *which lanes ride along*, never the
 //! per-element operation sequence, so results are **bitwise identical at
-//! any thread count** — the same guarantee the rest of the
-//! [`crate::parallel`] engine gives.  Against the naive `*_serial`
-//! references the agreement is to rounding (the references use the same
-//! k order, so in practice it is exact as well; tests enforce <= 1e-10).
+//! any thread count** — for every element type — the same guarantee the
+//! rest of the [`crate::parallel`] engine gives.  Against the naive
+//! `*_serial` references the agreement is to rounding (the references
+//! use the same k order, so in practice it is exact as well; tests
+//! enforce <= 1e-10 for f64 and a k-scaled f32-epsilon bound for f32).
 //!
 //! Tail tiles (m % MR, n % NR) are computed through a zero-padded stack
 //! tile: padded lanes contribute `+0.0` terms that cannot perturb the
@@ -48,31 +63,196 @@
 use std::cell::RefCell;
 use std::ops::Range;
 
-/// Micro-tile rows (A panel width).
+/// f64 micro-tile rows (A panel width).
 pub const MR: usize = 4;
-/// Micro-tile columns (B panel width).
+/// f64 micro-tile columns (B panel width).
 pub const NR: usize = 8;
-/// K-dimension cache block: one packed B panel is `KC x NR` f64
+/// f64 k-dimension cache block: one packed B panel is `KC x NR` f64
 /// (16 KiB), comfortably L1/L2 resident.
 pub(crate) const KC: usize = 256;
+
+/// f32 micro-tile rows — twice the f64 rows at half the width keeps the
+/// register-tile byte footprint identical (8x8x4 = 4x8x8 = 256 bytes).
+pub const MR32: usize = 8;
+/// f32 micro-tile columns.
+pub const NR32: usize = 8;
+/// f32 k-dimension cache block: `KC32 x NR32` f32 is the same 16 KiB
+/// packed-B budget as the f64 panel.
+pub(crate) const KC32: usize = 512;
+
+/// Upper bound on `Element::MR * Element::NR` across all impls, so the
+/// stack tile can be a fixed-size array (generic-const tile sizes are
+/// not expressible on stable Rust).
+const MAX_TILE: usize = 64;
 
 /// Minimum per-KC-block scalar-op estimate before a product fans out
 /// to threads; below this, the per-block spawn/join latency beats the
 /// parallel win (bands are re-spawned once per KC block).
 const BLOCK_PAR_MIN_FLOPS: usize = 1 << 16;
 
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// A GEMM element type: the sealed set of scalar widths the packed
+/// compute core is monomorphized over.  Each impl carries its own tile
+/// geometry and register micro-kernel; everything else (packing,
+/// KC blocking, band fan-out, determinism contract) is shared generic
+/// code.
+pub trait Element:
+    sealed::Sealed
+    + Copy
+    + Send
+    + Sync
+    + Default
+    + PartialEq
+    + std::fmt::Debug
+    + 'static
+{
+    /// Additive identity (tile padding, empty-product fill).
+    const ZERO: Self;
+    /// Micro-tile rows (A panel width).
+    const MR: usize;
+    /// Micro-tile columns (B panel width).
+    const NR: usize;
+    /// K-dimension cache block (packed B panel depth).
+    const KC: usize;
+
+    /// Round an f64 into this element type.
+    fn from_f64(v: f64) -> Self;
+    /// Widen back to f64 (exact for both impls).
+    fn to_f64(self) -> f64;
+
+    /// The register micro-tile: `acc[r * NR + t] += a[r] * b[t]` for
+    /// one KC block, accumulators held in locals.  `pa` is k-major
+    /// MR-wide, `pb` k-major NR-wide; both zero-padded, so no bounds
+    /// logic survives into the loop body.  `acc` has `MR * NR` valid
+    /// elements.
+    fn micro_kernel(kc: usize, pa: &[Self], pb: &[Self], acc: &mut [Self]);
+}
+
+impl Element for f64 {
+    const ZERO: Self = 0.0;
+    const MR: usize = MR;
+    const NR: usize = NR;
+    const KC: usize = KC;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    /// The 4x8 register tile: 32 f64 accumulators in locals, one
+    /// multiply-add lane per (row, col) pair per k step.
+    #[inline(always)]
+    fn micro_kernel(kc: usize, pa: &[f64], pb: &[f64], acc: &mut [f64]) {
+        let mut c0: [f64; NR] = acc[..NR].try_into().unwrap();
+        let mut c1: [f64; NR] = acc[NR..2 * NR].try_into().unwrap();
+        let mut c2: [f64; NR] = acc[2 * NR..3 * NR].try_into().unwrap();
+        let mut c3: [f64; NR] = acc[3 * NR..4 * NR].try_into().unwrap();
+        for kk in 0..kc {
+            let a: &[f64; MR] =
+                pa[kk * MR..kk * MR + MR].try_into().unwrap();
+            let b: &[f64; NR] =
+                pb[kk * NR..kk * NR + NR].try_into().unwrap();
+            for t in 0..NR {
+                c0[t] += a[0] * b[t];
+                c1[t] += a[1] * b[t];
+                c2[t] += a[2] * b[t];
+                c3[t] += a[3] * b[t];
+            }
+        }
+        acc[..NR].copy_from_slice(&c0);
+        acc[NR..2 * NR].copy_from_slice(&c1);
+        acc[2 * NR..3 * NR].copy_from_slice(&c2);
+        acc[3 * NR..4 * NR].copy_from_slice(&c3);
+    }
+}
+
+impl Element for f32 {
+    const ZERO: Self = 0.0;
+    const MR: usize = MR32;
+    const NR: usize = NR32;
+    const KC: usize = KC32;
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    /// The 8x8 register tile: 64 f32 accumulators in locals — the same
+    /// 256-byte register footprint as the f64 4x8 tile, twice the lanes
+    /// per loaded cache line.
+    #[inline(always)]
+    fn micro_kernel(kc: usize, pa: &[f32], pb: &[f32], acc: &mut [f32]) {
+        let mut c0: [f32; NR32] = acc[..NR32].try_into().unwrap();
+        let mut c1: [f32; NR32] =
+            acc[NR32..2 * NR32].try_into().unwrap();
+        let mut c2: [f32; NR32] =
+            acc[2 * NR32..3 * NR32].try_into().unwrap();
+        let mut c3: [f32; NR32] =
+            acc[3 * NR32..4 * NR32].try_into().unwrap();
+        let mut c4: [f32; NR32] =
+            acc[4 * NR32..5 * NR32].try_into().unwrap();
+        let mut c5: [f32; NR32] =
+            acc[5 * NR32..6 * NR32].try_into().unwrap();
+        let mut c6: [f32; NR32] =
+            acc[6 * NR32..7 * NR32].try_into().unwrap();
+        let mut c7: [f32; NR32] =
+            acc[7 * NR32..8 * NR32].try_into().unwrap();
+        for kk in 0..kc {
+            let a: &[f32; MR32] =
+                pa[kk * MR32..kk * MR32 + MR32].try_into().unwrap();
+            let b: &[f32; NR32] =
+                pb[kk * NR32..kk * NR32 + NR32].try_into().unwrap();
+            for t in 0..NR32 {
+                c0[t] += a[0] * b[t];
+                c1[t] += a[1] * b[t];
+                c2[t] += a[2] * b[t];
+                c3[t] += a[3] * b[t];
+                c4[t] += a[4] * b[t];
+                c5[t] += a[5] * b[t];
+                c6[t] += a[6] * b[t];
+                c7[t] += a[7] * b[t];
+            }
+        }
+        acc[..NR32].copy_from_slice(&c0);
+        acc[NR32..2 * NR32].copy_from_slice(&c1);
+        acc[2 * NR32..3 * NR32].copy_from_slice(&c2);
+        acc[3 * NR32..4 * NR32].copy_from_slice(&c3);
+        acc[4 * NR32..5 * NR32].copy_from_slice(&c4);
+        acc[5 * NR32..6 * NR32].copy_from_slice(&c5);
+        acc[6 * NR32..7 * NR32].copy_from_slice(&c6);
+        acc[7 * NR32..8 * NR32].copy_from_slice(&c7);
+    }
+}
+
 /// Reusable packing buffers for the GEMM entry point (`gemm_into`).
 /// Grown to the high-water mark on first use and reused without
 /// further growth afterwards — the building block of the serving
-/// layer's allocation-free buffer reuse contract.
+/// layer's allocation-free buffer reuse contract.  Generic over the
+/// element width; the default keeps every existing f64 call site
+/// compiling unchanged.
 #[derive(Default, Debug)]
-pub struct GemmScratch {
-    packed_a: Vec<f64>,
-    packed_b: Vec<f64>,
+pub struct GemmScratch<E: Element = f64> {
+    packed_a: Vec<E>,
+    packed_b: Vec<E>,
     grows: u64,
 }
 
-impl GemmScratch {
+impl<E: Element> GemmScratch<E> {
     pub fn new() -> Self {
         Self::default()
     }
@@ -90,13 +270,13 @@ impl GemmScratch {
         &mut self,
         a_len: usize,
         b_len: usize,
-    ) -> (&mut [f64], &mut [f64]) {
+    ) -> (&mut [E], &mut [E]) {
         if self.packed_a.len() < a_len {
-            self.packed_a.resize(a_len, 0.0);
+            self.packed_a.resize(a_len, E::ZERO);
             self.grows += 1;
         }
         if self.packed_b.len() < b_len {
-            self.packed_b.resize(b_len, 0.0);
+            self.packed_b.resize(b_len, E::ZERO);
             self.grows += 1;
         }
         (&mut self.packed_a[..a_len], &mut self.packed_b[..b_len])
@@ -119,16 +299,16 @@ pub(crate) fn with_thread_scratch<R>(
 
 /// How the B operand is laid out.
 #[derive(Clone, Copy)]
-pub(crate) enum BSrc<'a> {
+pub(crate) enum BSrc<'a, E: Element = f64> {
     /// `k x n` row-major: `C = A * B`.
-    Normal(&'a [f64]),
+    Normal(&'a [E]),
     /// `n x k` row-major: `C = A * B^T` (the Gram cross-product form).
-    Trans(&'a [f64]),
+    Trans(&'a [E]),
 }
 
 /// Shared read-only state for one GEMM invocation.
-struct Ctx<'a> {
-    a: &'a [f64],
+struct Ctx<'a, E: Element> {
+    a: &'a [E],
     /// Row stride of A (`lda >= k`; `== k` for contiguous operands).
     lda: usize,
     /// Row stride of C (`ldc >= n`; `== n` for contiguous outputs).
@@ -153,16 +333,16 @@ struct Ctx<'a> {
 ///
 /// `k == 0` zero-fills the output (the empty product).
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_into(
-    c: &mut [f64],
+pub(crate) fn gemm_into<E: Element>(
+    c: &mut [E],
     m: usize,
     n: usize,
     k: usize,
-    a: &[f64],
-    b: BSrc<'_>,
+    a: &[E],
+    b: BSrc<'_, E>,
     upper_only: bool,
     threads: usize,
-    scratch: &mut GemmScratch,
+    scratch: &mut GemmScratch<E>,
 ) {
     gemm_impl(c, n, m, n, k, a, k, b, upper_only, false, threads, scratch)
 }
@@ -175,36 +355,36 @@ pub(crate) fn gemm_into(
 /// overwriting; bytes between `n` and the stride are never touched.
 /// Same packing/micro-kernel/determinism machinery as [`gemm_into`].
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn gemm_strided_into(
-    c: &mut [f64],
+pub(crate) fn gemm_strided_into<E: Element>(
+    c: &mut [E],
     ldc: usize,
     m: usize,
     n: usize,
     k: usize,
-    a: &[f64],
+    a: &[E],
     lda: usize,
-    b: BSrc<'_>,
+    b: BSrc<'_, E>,
     accumulate: bool,
     threads: usize,
-    scratch: &mut GemmScratch,
+    scratch: &mut GemmScratch<E>,
 ) {
     gemm_impl(c, ldc, m, n, k, a, lda, b, false, accumulate, threads, scratch)
 }
 
 #[allow(clippy::too_many_arguments)]
-fn gemm_impl(
-    c: &mut [f64],
+fn gemm_impl<E: Element>(
+    c: &mut [E],
     ldc: usize,
     m: usize,
     n: usize,
     k: usize,
-    a: &[f64],
+    a: &[E],
     lda: usize,
-    b: BSrc<'_>,
+    b: BSrc<'_, E>,
     upper_only: bool,
     accumulate: bool,
     threads: usize,
-    scratch: &mut GemmScratch,
+    scratch: &mut GemmScratch<E>,
 ) {
     if m == 0 || n == 0 {
         return;
@@ -222,16 +402,17 @@ fn gemm_impl(
     if k == 0 {
         if !accumulate {
             for r in 0..m {
-                c[r * ldc..r * ldc + n].fill(0.0);
+                c[r * ldc..r * ldc + n].fill(E::ZERO);
             }
         }
         return;
     }
-    let m_panels = (m + MR - 1) / MR;
-    let n_panels = (n + NR - 1) / NR;
-    let kc_max = k.min(KC);
+    let (mr, nr) = (E::MR, E::NR);
+    let m_panels = (m + mr - 1) / mr;
+    let n_panels = (n + nr - 1) / nr;
+    let kc_max = k.min(E::KC);
     let (pa, pb) =
-        scratch.buffers(m_panels * MR * kc_max, n_panels * NR * kc_max);
+        scratch.buffers(m_panels * mr * kc_max, n_panels * nr * kc_max);
     // Threads are re-spawned per KC block (packed B is shared, so the
     // scope cannot be hoisted without a barrier); guard against shapes
     // where the per-block work would be dominated by spawn latency
@@ -250,7 +431,7 @@ fn gemm_impl(
     // surviving tile count instead of splitting evenly.
     let ranges = if upper_only {
         crate::parallel::weighted_ranges(m_panels, threads, |p| {
-            (n_panels - (p * MR / NR).min(n_panels - 1)) as f64
+            (n_panels - (p * mr / nr).min(n_panels - 1)) as f64
         })
     } else {
         crate::parallel::even_ranges(m_panels, threads)
@@ -259,7 +440,7 @@ fn gemm_impl(
 
     let mut kb = 0usize;
     while kb < k {
-        let kc = (k - kb).min(KC);
+        let kc = (k - kb).min(E::KC);
         let first = kb == 0 && !accumulate;
         pack_b(pb, b, &ctx, kb, kc);
         if ranges.len() == 1 {
@@ -267,14 +448,14 @@ fn gemm_impl(
         } else {
             // Split C and packed-A into disjoint per-band regions before
             // any thread starts (no unsafe, no overlap by construction).
-            let mut jobs: Vec<(Range<usize>, &mut [f64], &mut [f64])> =
+            let mut jobs: Vec<(Range<usize>, &mut [E], &mut [E])> =
                 Vec::with_capacity(ranges.len());
             // Reborrow (not move) so the next KC block can split again.
-            let mut c_rest: &mut [f64] = &mut *c;
-            let mut pa_rest: &mut [f64] = &mut *pa;
+            let mut c_rest: &mut [E] = &mut *c;
+            let mut pa_rest: &mut [E] = &mut *pa;
             for (bi, r) in ranges.iter().enumerate() {
-                let row_start = r.start * MR;
-                let row_end = (r.end * MR).min(m);
+                let row_start = r.start * mr;
+                let row_end = (r.end * mr).min(m);
                 // The last band's rows may end short of a full stride
                 // (`(rows - 1) * ldc + n` elements); hand it the whole
                 // remainder instead of a stride-exact split.
@@ -285,12 +466,12 @@ fn gemm_impl(
                 };
                 let (c_band, c_tail) = c_rest.split_at_mut(take);
                 let (pa_band, pa_tail) =
-                    pa_rest.split_at_mut(r.len() * MR * kc_max);
+                    pa_rest.split_at_mut(r.len() * mr * kc_max);
                 jobs.push((r.clone(), c_band, pa_band));
                 c_rest = c_tail;
                 pa_rest = pa_tail;
             }
-            let pb_shared: &[f64] = pb;
+            let pb_shared: &[E] = pb;
             std::thread::scope(|s| {
                 let ctx = &ctx;
                 let mut it = jobs.into_iter();
@@ -318,32 +499,39 @@ fn gemm_impl(
 /// Pack the KC block `[kb, kb+kc)` of B into k-major NR-wide panels
 /// (tail columns zero-padded).  Panel `jp` lives at
 /// `pb[jp * NR * kc_max ..]` with stride `NR` per k step.
-fn pack_b(pb: &mut [f64], b: BSrc<'_>, ctx: &Ctx<'_>, kb: usize, kc: usize) {
+fn pack_b<E: Element>(
+    pb: &mut [E],
+    b: BSrc<'_, E>,
+    ctx: &Ctx<'_, E>,
+    kb: usize,
+    kc: usize,
+) {
     let (n, k) = (ctx.n, ctx.k);
+    let nr = E::NR;
     for jp in 0..ctx.n_panels {
-        let j0 = jp * NR;
-        let cols = (n - j0).min(NR);
-        let panel = &mut pb[jp * NR * ctx.kc_max..][..NR * kc];
+        let j0 = jp * nr;
+        let cols = (n - j0).min(nr);
+        let panel = &mut pb[jp * nr * ctx.kc_max..][..nr * kc];
         match b {
             BSrc::Normal(bd) => {
                 for kk in 0..kc {
                     let src = &bd[(kb + kk) * n + j0..];
-                    let dst = &mut panel[kk * NR..kk * NR + NR];
+                    let dst = &mut panel[kk * nr..kk * nr + nr];
                     for (t, slot) in dst.iter_mut().enumerate() {
-                        *slot = if t < cols { src[t] } else { 0.0 };
+                        *slot = if t < cols { src[t] } else { E::ZERO };
                     }
                 }
             }
             BSrc::Trans(bd) => {
-                for t in 0..NR {
+                for t in 0..nr {
                     if t < cols {
                         let src = &bd[(j0 + t) * k + kb..][..kc];
                         for (kk, &v) in src.iter().enumerate() {
-                            panel[kk * NR + t] = v;
+                            panel[kk * nr + t] = v;
                         }
                     } else {
                         for kk in 0..kc {
-                            panel[kk * NR + t] = 0.0;
+                            panel[kk * nr + t] = E::ZERO;
                         }
                     }
                 }
@@ -355,24 +543,25 @@ fn pack_b(pb: &mut [f64], b: BSrc<'_>, ctx: &Ctx<'_>, kb: usize, kc: usize) {
 /// Pack one A panel (rows `i0 .. i0+rows`, k block `[kb, kb+kc)`) into
 /// k-major MR-wide columns (tail rows zero-padded).  `lda` is A's row
 /// stride (`== k` for contiguous operands).
-fn pack_a(
-    pa: &mut [f64],
-    a: &[f64],
+fn pack_a<E: Element>(
+    pa: &mut [E],
+    a: &[E],
     lda: usize,
     i0: usize,
     rows: usize,
     kb: usize,
     kc: usize,
 ) {
-    for r in 0..MR {
+    let mr = E::MR;
+    for r in 0..mr {
         if r < rows {
             let src = &a[(i0 + r) * lda + kb..][..kc];
             for (kk, &v) in src.iter().enumerate() {
-                pa[kk * MR + r] = v;
+                pa[kk * mr + r] = v;
             }
         } else {
             for kk in 0..kc {
-                pa[kk * MR + r] = 0.0;
+                pa[kk * mr + r] = E::ZERO;
             }
         }
     }
@@ -382,75 +571,51 @@ fn pack_a(
 /// panel, then sweep it against every packed B panel through the
 /// register micro-kernel.
 #[allow(clippy::too_many_arguments)]
-fn run_band(
-    ctx: &Ctx<'_>,
+fn run_band<E: Element>(
+    ctx: &Ctx<'_, E>,
     panels: Range<usize>,
-    c_band: &mut [f64],
-    pa_band: &mut [f64],
-    pb: &[f64],
+    c_band: &mut [E],
+    pa_band: &mut [E],
+    pb: &[E],
     kb: usize,
     kc: usize,
     first: bool,
 ) {
-    let row0 = panels.start * MR;
+    let (mr, nr) = (E::MR, E::NR);
+    let row0 = panels.start * mr;
     let (m, n) = (ctx.m, ctx.n);
     for (pi, p) in panels.enumerate() {
-        let i0 = p * MR;
-        let rows = (m - i0).min(MR);
-        let pa = &mut pa_band[pi * MR * ctx.kc_max..][..MR * kc];
+        let i0 = p * mr;
+        let rows = (m - i0).min(mr);
+        let pa = &mut pa_band[pi * mr * ctx.kc_max..][..mr * kc];
         pack_a(pa, ctx.a, ctx.lda, i0, rows, kb, kc);
         for jp in 0..ctx.n_panels {
-            let j0 = jp * NR;
-            if ctx.upper_only && j0 + NR <= i0 {
+            let j0 = jp * nr;
+            if ctx.upper_only && j0 + nr <= i0 {
                 continue;
             }
-            let cols = (n - j0).min(NR);
-            let pbp = &pb[jp * NR * ctx.kc_max..][..NR * kc];
+            let cols = (n - j0).min(nr);
+            let pbp = &pb[jp * nr * ctx.kc_max..][..nr * kc];
             // Load the C micro-tile (zeros on the first KC block and in
             // padded lanes), accumulate the block, store the valid part.
-            let mut acc = [0.0f64; MR * NR];
+            // The stack tile is MAX_TILE wide (stable Rust cannot size
+            // it `E::MR * E::NR`); only the leading tile is used.
+            let mut acc = [E::ZERO; MAX_TILE];
+            let acc = &mut acc[..mr * nr];
             if !first {
                 for r in 0..rows {
                     let crow =
                         &c_band[(i0 - row0 + r) * ctx.ldc + j0..][..cols];
-                    acc[r * NR..r * NR + cols].copy_from_slice(crow);
+                    acc[r * nr..r * nr + cols].copy_from_slice(crow);
                 }
             }
-            micro_kernel(kc, pa, pbp, &mut acc);
+            E::micro_kernel(kc, pa, pbp, acc);
             for r in 0..rows {
                 c_band[(i0 - row0 + r) * ctx.ldc + j0..][..cols]
-                    .copy_from_slice(&acc[r * NR..r * NR + cols]);
+                    .copy_from_slice(&acc[r * nr..r * nr + cols]);
             }
         }
     }
-}
-
-/// The 4x8 register tile: 32 f64 accumulators in locals, one
-/// multiply-add lane per (row, col) pair per k step.  `pa` is k-major
-/// MR-wide, `pb` k-major NR-wide; both zero-padded, so no bounds logic
-/// survives into the loop body.
-#[inline(always)]
-fn micro_kernel(kc: usize, pa: &[f64], pb: &[f64], acc: &mut [f64; MR * NR]) {
-    let mut c0: [f64; NR] = acc[..NR].try_into().unwrap();
-    let mut c1: [f64; NR] = acc[NR..2 * NR].try_into().unwrap();
-    let mut c2: [f64; NR] = acc[2 * NR..3 * NR].try_into().unwrap();
-    let mut c3: [f64; NR] = acc[3 * NR..4 * NR].try_into().unwrap();
-    for kk in 0..kc {
-        let a: &[f64; MR] =
-            pa[kk * MR..kk * MR + MR].try_into().unwrap();
-        let b: &[f64; NR] =
-            pb[kk * NR..kk * NR + NR].try_into().unwrap();
-        for t in 0..NR {
-            c0[t] += a[0] * b[t];
-            c1[t] += a[1] * b[t];
-            c2[t] += a[2] * b[t];
-            c3[t] += a[3] * b[t];
-        }
-    }
-    acc[..NR].copy_from_slice(&c0);
-    acc[NR..2 * NR].copy_from_slice(&c1);
-    acc[2 * NR..3 * NR].copy_from_slice(&c2);
-    acc[3 * NR..4 * NR].copy_from_slice(&c3);
 }
 
 /// Symmetric rank-2k update `C -= U·Wᵀ + W·Uᵀ` over an `mm x mm`
@@ -966,5 +1131,171 @@ mod tests {
             );
         }
         assert_eq!(s.grow_events(), warm, "scratch grew after warmup");
+    }
+
+    // ---- f32 path ----
+
+    /// f64 reference product over f32-rounded operands (the inputs the
+    /// f32 kernel actually sees), accumulated in f64 — the "true"
+    /// answer the f32 path approximates.
+    fn naive_f32_ref(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        b: BSrc<'_, f32>,
+    ) -> Vec<f64> {
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for t in 0..k {
+                    let bv = match b {
+                        BSrc::Normal(bd) => bd[t * n + j],
+                        BSrc::Trans(bd) => bd[j * k + t],
+                    };
+                    acc += a[i * k + t] as f64 * bv as f64;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn to_f32_vec(m: &crate::linalg::Matrix) -> Vec<f32> {
+        m.as_slice().iter().map(|&v| v as f32).collect()
+    }
+
+    #[test]
+    fn f32_gemm_matches_f64_reference_across_shapes() {
+        let mut s: GemmScratch<f32> = GemmScratch::new();
+        // Tile-exact (8x8), tails, 1x1, tall, wide, and shapes crossing
+        // the f32 KC=512 block boundary.
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (8, 8, 16),
+            (9, 7, 5),
+            (37, 23, 19),
+            (200, 3, 5),
+            (3, 200, 5),
+            (6, 6, KC32 + 13),
+            (17, 9, KC32 + 44),
+        ] {
+            let a = to_f32_vec(&random_matrix(m, k, (m * 13 + n) as u64));
+            let bn = to_f32_vec(&random_matrix(k, n, (n * 7 + k) as u64));
+            let bt = to_f32_vec(&random_matrix(n, k, (m + 3 * k) as u64));
+            // Accumulating k f32 products loses at most ~k half-ulps
+            // relative to the f64 reference; scale the bound by k and
+            // by the magnitude the partial sums can reach.
+            let tol = (k as f64) * (f32::EPSILON as f64) * 8.0;
+            for threads in [1usize, 2, 8] {
+                for (tag, b) in [
+                    ("normal", BSrc::Normal(bn.as_slice())),
+                    ("trans", BSrc::Trans(bt.as_slice())),
+                ] {
+                    let mut c = vec![f32::NAN; m * n];
+                    gemm_into(&mut c, m, n, k, &a, b, false, threads, &mut s);
+                    let want = naive_f32_ref(m, n, k, &a, b);
+                    for i in 0..m * n {
+                        let dev = (c[i] as f64 - want[i]).abs();
+                        let bound =
+                            tol * want[i].abs().max(1.0);
+                        assert!(
+                            dev <= bound,
+                            "{tag} {m}x{n}x{k} t={threads} elem {i}: \
+                             got {} want {} dev {dev:e} bound {bound:e}",
+                            c[i],
+                            want[i],
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_gemm_bitwise_thread_invariant() {
+        let mut s: GemmScratch<f32> = GemmScratch::new();
+        // Crosses the f32 KC boundary so the store/reload between KC
+        // blocks is exercised under every fan-out.
+        let (m, n, k) = (53usize, 29usize, KC32 + 44);
+        let a = to_f32_vec(&random_matrix(m, k, 71));
+        let b = to_f32_vec(&random_matrix(k, n, 72));
+        let mut c1 = vec![0.0f32; m * n];
+        gemm_into(&mut c1, m, n, k, &a, BSrc::Normal(&b), false, 1, &mut s);
+        for threads in [2usize, 5, 8] {
+            let mut ct = vec![0.0f32; m * n];
+            gemm_into(
+                &mut ct,
+                m,
+                n,
+                k,
+                &a,
+                BSrc::Normal(&b),
+                false,
+                threads,
+                &mut s,
+            );
+            assert_eq!(c1, ct, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn f32_strided_accumulate_matches_reference() {
+        let mut s: GemmScratch<f32> = GemmScratch::new();
+        let (m, n, k) = (40usize, 40usize, KC32 + 9);
+        let a = to_f32_vec(&random_matrix(m, k, 81));
+        let b = to_f32_vec(&random_matrix(k, n, 82));
+        let base = to_f32_vec(&random_matrix(m, n, 83));
+        let want = naive_f32_ref(m, n, k, &a, BSrc::Normal(&b));
+        let tol = (k as f64) * (f32::EPSILON as f64) * 8.0;
+        for threads in [1usize, 4] {
+            let mut c = base.clone();
+            gemm_strided_into(
+                &mut c,
+                n,
+                m,
+                n,
+                k,
+                &a,
+                k,
+                BSrc::Normal(&b),
+                true,
+                threads,
+                &mut s,
+            );
+            for i in 0..m * n {
+                let ref_v = base[i] as f64 + want[i];
+                assert!(
+                    (c[i] as f64 - ref_v).abs()
+                        <= tol * ref_v.abs().max(1.0),
+                    "elem {i} t={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_scratch_growth_stops_after_warmup() {
+        let mut s: GemmScratch<f32> = GemmScratch::new();
+        let a = to_f32_vec(&random_matrix(40, 32, 3));
+        let b = to_f32_vec(&random_matrix(32, 24, 4));
+        let mut c = vec![0.0f32; 40 * 24];
+        gemm_into(&mut c, 40, 24, 32, &a, BSrc::Normal(&b), false, 2, &mut s);
+        let warm = s.grow_events();
+        for _ in 0..5 {
+            gemm_into(
+                &mut c,
+                40,
+                24,
+                32,
+                &a,
+                BSrc::Normal(&b),
+                false,
+                2,
+                &mut s,
+            );
+        }
+        assert_eq!(s.grow_events(), warm, "f32 scratch grew after warmup");
     }
 }

@@ -32,7 +32,7 @@ pub use eigen::{
     eigh, eigh_serial, jacobi_eigh, subspace_eigh, subspace_eigh_resid,
     Eigh,
 };
-pub use gemm::GemmScratch;
+pub use gemm::{Element, GemmScratch};
 pub use qr::{lstsq, solve_upper_triangular, QrFactor};
 
 use crate::error::{Error, Result};
@@ -477,6 +477,65 @@ impl Matrix {
     }
 }
 
+/// Dense row-major `f32` matrix — the storage side of the mixed-
+/// precision serving path.  Deliberately minimal: it exists to hold
+/// quantized model operands (centers, coefficients) contiguously for
+/// the f32 GEMM core, not to replicate the `Matrix` API.  All training
+/// and reference numerics stay in [`Matrix`] (f64).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl MatrixF32 {
+    /// rows x cols of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatrixF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Round an f64 matrix to f32 storage (round-to-nearest-even per
+    /// element — the quantization step of the f32 serving payload).
+    pub fn from_f64(m: &Matrix) -> Self {
+        MatrixF32 {
+            rows: m.rows(),
+            cols: m.cols(),
+            data: m.as_slice().iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Immutable view of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// The flat row-major buffer.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Widen back to an f64 [`Matrix`] (exact per element).
+    pub fn to_f64(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+}
+
 /// Euclidean distance between two equal-length slices.
 #[inline]
 pub fn euclidean(a: &[f64], b: &[f64]) -> f64 {
@@ -657,6 +716,19 @@ mod tests {
         let a = Matrix::from_vec(2, 2, vec![1.5, -2.25, 0.125, 3.0]).unwrap();
         let b = Matrix::from_f32(2, 2, &a.to_f32()).unwrap();
         assert!(a.sub(&b).unwrap().max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn matrix_f32_quantize_roundtrip() {
+        let a = Matrix::from_vec(2, 3, vec![1.5, -2.25, 0.125, 3.0, -0.5, 7.0])
+            .unwrap();
+        let q = MatrixF32::from_f64(&a);
+        assert_eq!(q.rows(), 2);
+        assert_eq!(q.cols(), 3);
+        assert_eq!(q.row(1), &[3.0f32, -0.5, 7.0]);
+        // Dyadic values round-trip exactly through f32.
+        assert_eq!(q.to_f64(), a);
+        assert_eq!(MatrixF32::zeros(2, 2).as_slice(), &[0.0f32; 4]);
     }
 
     #[test]

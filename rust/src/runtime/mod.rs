@@ -41,6 +41,7 @@ pub use pjrt::PjrtBackend;
 
 use crate::error::Result;
 use crate::kernel::Kernel;
+use crate::kpca::EmbeddingModel;
 use crate::linalg::Matrix;
 
 /// A compute backend for the two artifact operations.
@@ -67,6 +68,18 @@ pub trait GramBackend {
         k.matmul(coeffs)
     }
 
+    /// Model-aware projection: the serve-path entry point.  The default
+    /// ignores the model's serving precision and embeds in f64; backends
+    /// that carry an f32 path (the native one) override this to dispatch
+    /// on the model's published quantization payload.
+    fn embed_model(
+        &mut self,
+        x: &Matrix,
+        model: &EmbeddingModel,
+    ) -> Result<Matrix> {
+        self.embed(x, &model.centers, &model.coeffs, &model.kernel)
+    }
+
     /// Backend name for logs/metrics.
     fn name(&self) -> &'static str;
 }
@@ -81,6 +94,10 @@ pub trait GramBackend {
 #[derive(Default)]
 pub struct NativeBackend {
     scratch: crate::kernel::Scratch,
+    /// f32 serving workspace (rounded query rows, f32 Gram tiles,
+    /// widening buffers) — only grows when an f32-published model is
+    /// actually served, so f64-only deployments pay nothing.
+    scratch_f32: crate::kernel::ScratchF32,
 }
 
 impl NativeBackend {
@@ -108,6 +125,30 @@ impl GramBackend for NativeBackend {
         kernel: &Kernel,
     ) -> Result<Matrix> {
         kernel.embed_rows_with(&mut self.scratch, x, centers, coeffs)
+    }
+
+    /// Precision dispatch: a model published with a quantized payload is
+    /// served through the f32 Gram micro-kernel (widening back to f64 per
+    /// the model's accumulation policy); everything else takes the exact
+    /// f64 fused path.  Both reuse their backend-owned scratch across
+    /// batches.
+    fn embed_model(
+        &mut self,
+        x: &Matrix,
+        model: &EmbeddingModel,
+    ) -> Result<Matrix> {
+        if model.quant.is_some() {
+            Ok(model.transform_batch_f32_with(&mut self.scratch_f32, x))
+        } else {
+            model
+                .kernel
+                .embed_rows_with(
+                    &mut self.scratch,
+                    x,
+                    &model.centers,
+                    &model.coeffs,
+                )
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -171,6 +212,49 @@ mod tests {
         let expect =
             k.gram(&ds.x, &centers).matmul(&coeffs).unwrap();
         assert!(e.sub(&expect).unwrap().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn embed_model_dispatches_on_published_precision() {
+        let ds = gaussian_mixture_2d(40, 2, 0.5, 3);
+        let mut model =
+            crate::kpca::fit_kpca(&ds.x, &Kernel::gaussian(1.0), 3)
+                .unwrap();
+        let mut b = NativeBackend::new();
+
+        // f64 model: embed_model is exactly the fused f64 path.
+        let exact = b.embed_model(&ds.x, &model).unwrap();
+        let expect = model.transform_batch(&ds.x);
+        assert!(exact.sub(&expect).unwrap().max_abs() == 0.0);
+
+        // Quantized model: dispatches to f32, error within the recorded
+        // probe bound's order of magnitude.
+        let err = model.quantize_for_serving().unwrap();
+        let approx = b.embed_model(&ds.x, &model).unwrap();
+        assert_eq!(approx.rows(), exact.rows());
+        assert_eq!(approx.cols(), exact.cols());
+        let mut worst = 0.0f64;
+        for i in 0..exact.rows() {
+            let (zr, ar) = (exact.row(i), approx.row(i));
+            let num: f64 = zr
+                .iter()
+                .zip(ar)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            let den = zr
+                .iter()
+                .map(|v| v * v)
+                .sum::<f64>()
+                .sqrt()
+                .max(1e-30);
+            worst = worst.max(num / den);
+        }
+        assert!(
+            worst <= (err.max_rel * 10.0).max(1e-6),
+            "f32 dispatch error {worst:.3e} vs probe bound {:.3e}",
+            err.max_rel
+        );
     }
 
     #[test]

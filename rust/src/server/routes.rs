@@ -123,7 +123,19 @@ fn stats(state: &ServerState) -> Response {
         .with("mean_batch_rows", Json::Num(s.mean_batch_rows))
         .with("max_batch_rows", Json::Num(s.max_batch_rows))
         .with("model_swaps", Json::Num(s.model_swaps as f64))
-        .with("model_version", Json::Num(s.model_version as f64));
+        .with("model_version", Json::Num(s.model_version as f64))
+        .with(
+            "model_precision",
+            Json::Str(s.model_precision.name().into()),
+        );
+    let service = match s.model_quant {
+        // Publish-time quantization diagnostic: f64-vs-f32 relative
+        // embedding error measured on the probe block.
+        Some(q) => service
+            .with("quant_max_rel", Json::Num(q.max_rel))
+            .with("quant_mean_rel", Json::Num(q.mean_rel)),
+        None => service,
+    };
     let http = Json::obj()
         .with(
             "conns_accepted",
@@ -153,25 +165,33 @@ fn models(state: &ServerState) -> Response {
     let mut entries = Vec::new();
     for name in registry.names() {
         if let Some((model, version)) = registry.get_versioned(&name) {
-            entries.push(
-                Json::obj()
-                    .with("name", Json::Str(name.clone()))
-                    .with("version", Json::Num(version as f64))
-                    .with(
-                        "method",
-                        Json::Str(model.method.clone()),
-                    )
-                    .with(
-                        "centers",
-                        Json::Num(model.n_retained() as f64),
-                    )
-                    .with("rank", Json::Num(model.r() as f64))
-                    .with(
-                        "dim",
-                        Json::Num(model.centers.cols() as f64),
-                    )
-                    .with("serving", Json::Bool(name == serving)),
-            );
+            let mut entry = Json::obj()
+                .with("name", Json::Str(name.clone()))
+                .with("version", Json::Num(version as f64))
+                .with(
+                    "method",
+                    Json::Str(model.method.clone()),
+                )
+                .with(
+                    "centers",
+                    Json::Num(model.n_retained() as f64),
+                )
+                .with("rank", Json::Num(model.r() as f64))
+                .with(
+                    "dim",
+                    Json::Num(model.centers.cols() as f64),
+                )
+                .with("serving", Json::Bool(name == serving))
+                .with(
+                    "precision",
+                    Json::Str(model.precision().name().into()),
+                );
+            if let Some(q) = model.quant_error() {
+                entry = entry
+                    .with("quant_max_rel", Json::Num(q.max_rel))
+                    .with("quant_mean_rel", Json::Num(q.mean_rel));
+            }
+            entries.push(entry);
         }
     }
     Response::json(

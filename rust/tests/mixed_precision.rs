@@ -1,0 +1,158 @@
+//! End-to-end mixed-precision serving contract, exercised strictly
+//! through the public API:
+//!
+//! * a model published at f32 precision serves embeddings whose
+//!   relative error against the exact f64 path stays within the bound
+//!   the publish-time probe reported (and that bound itself is tiny
+//!   for a Gaussian kernel with the default accumulate-in-f64 policy);
+//! * the f32 serving scratch is allocation-free at steady state;
+//! * quantization is deterministic across save/load, so a model file
+//!   round-trip reproduces the recorded diagnostic bit for bit;
+//! * the f32 path is bitwise invariant to the compute-thread count.
+
+use rskpca::config::ServiceConfig;
+use rskpca::coordinator::{
+    EmbeddingService, ModelRegistry, DEFAULT_MODEL,
+};
+use rskpca::data::gaussian_mixture_2d;
+use rskpca::kernel::{Accum, F32Operands, Kernel, ScratchF32};
+use rskpca::kpca::{fit_kpca, EmbeddingModel, Precision};
+use rskpca::linalg::Matrix;
+use rskpca::runtime::{BackendFactory, NativeBackend};
+use std::sync::{Arc, Mutex};
+
+/// Serializes the test that flips the process-global thread count
+/// (mirrors the lock `tests/parallel_consistency.rs` keeps).
+static THREAD_LOCK: Mutex<()> = Mutex::new(());
+
+fn fitted_model() -> (EmbeddingModel, Matrix) {
+    let ds = gaussian_mixture_2d(120, 3, 0.45, 7);
+    let model = fit_kpca(&ds.x, &Kernel::gaussian(1.0), 5).unwrap();
+    (model, ds.x)
+}
+
+fn native() -> BackendFactory {
+    Box::new(|| Ok(Box::new(NativeBackend::new())))
+}
+
+/// Max per-row relative L2 error of `got` against `want`.
+fn max_rel_err(want: &Matrix, got: &Matrix) -> f64 {
+    assert_eq!((want.rows(), want.cols()), (got.rows(), got.cols()));
+    let mut worst = 0.0f64;
+    for i in 0..want.rows() {
+        let (w, g) = (want.row(i), got.row(i));
+        let num = w
+            .iter()
+            .zip(g)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        let den =
+            w.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-30);
+        worst = worst.max(num / den);
+    }
+    worst
+}
+
+#[test]
+fn f32_publish_serves_within_the_reported_bound() {
+    let (model, x) = fitted_model();
+    let exact = model.transform(&x);
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.set_serving_precision(Precision::F32);
+    registry.publish(DEFAULT_MODEL, model);
+    let published = registry.get(DEFAULT_MODEL).unwrap();
+    assert_eq!(published.precision(), Precision::F32);
+    let err = published.quant_error().expect("probe error recorded");
+    // Acceptance bound: Gaussian kernel + accumulate-in-f64 keeps the
+    // probe-block error at the f32 quantization floor.
+    assert!(
+        err.max_rel <= 1e-5,
+        "probe max_rel {:.3e} above 1e-5",
+        err.max_rel
+    );
+    assert!(err.mean_rel <= err.max_rel);
+
+    let svc = EmbeddingService::start_with_registry(
+        registry,
+        DEFAULT_MODEL,
+        native(),
+        ServiceConfig::default(),
+    )
+    .unwrap();
+    let got = svc.handle().embed(x.clone()).unwrap();
+    // Served rows are fresh (not the probe block): allow an order of
+    // magnitude of slack over the reported bound.
+    let worst = max_rel_err(&exact, &got);
+    assert!(
+        worst <= (err.max_rel * 10.0).max(1e-6),
+        "served rel err {worst:.3e} vs reported bound {:.3e}",
+        err.max_rel
+    );
+    let snap = svc.shutdown();
+    assert_eq!(snap.model_precision, Precision::F32);
+    assert_eq!(snap.model_quant, Some(err));
+}
+
+#[test]
+fn f32_scratch_is_allocation_free_at_steady_state() {
+    let (model, x) = fitted_model();
+    let kernel = model.kernel;
+    let ops = F32Operands::quantize(
+        &model.centers,
+        &model.coeffs,
+        Accum::F64,
+    );
+    let mut scratch = ScratchF32::new();
+    let first = kernel.embed_rows_f32_with(&mut scratch, &x, &ops).unwrap();
+    let warm = scratch.grow_events();
+    assert!(warm > 0, "warmup must have grown the buffers");
+    for _ in 0..5 {
+        let again =
+            kernel.embed_rows_f32_with(&mut scratch, &x, &ops).unwrap();
+        // Steady state: bitwise-stable output, zero further growth.
+        assert_eq!(again, first);
+        assert_eq!(scratch.grow_events(), warm);
+    }
+    // A smaller batch fits the warmed buffers too.
+    let idx: Vec<usize> = (0..10).collect();
+    let small = x.select_rows(&idx);
+    let _ = kernel.embed_rows_f32_with(&mut scratch, &small, &ops).unwrap();
+    assert_eq!(scratch.grow_events(), warm);
+}
+
+#[test]
+fn quantization_is_deterministic_across_model_file_roundtrip() {
+    let (mut model, x) = fitted_model();
+    let err = model.quantize_for_serving().unwrap();
+    let path = std::env::temp_dir().join("rskpca_mixed_precision.json");
+    model.save(&path).unwrap();
+    let loaded = EmbeddingModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    // The file stores only f64 operands + the precision tag; loading
+    // re-quantizes deterministically, reproducing the exact diagnostic.
+    assert_eq!(loaded.precision(), Precision::F32);
+    assert_eq!(loaded.quant_error(), Some(err));
+    let mut scratch = ScratchF32::new();
+    let a = model.transform_batch_f32_with(&mut scratch, &x);
+    let b = loaded.transform_batch_f32_with(&mut scratch, &x);
+    assert_eq!(a, b, "re-quantized serving must be bitwise identical");
+}
+
+#[test]
+fn f32_embedding_is_bitwise_thread_invariant() {
+    let _g = THREAD_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let (mut model, x) = fitted_model();
+    model.quantize_for_serving().unwrap();
+    rskpca::parallel::set_threads(1);
+    let mut s1 = ScratchF32::new();
+    let z1 = model.transform_batch_f32_with(&mut s1, &x);
+    for t in [2usize, 4, 8] {
+        rskpca::parallel::set_threads(t);
+        let mut st = ScratchF32::new();
+        let zt = model.transform_batch_f32_with(&mut st, &x);
+        assert_eq!(z1, zt, "thread count {t} changed the f32 embedding");
+    }
+    rskpca::parallel::set_threads(0);
+}
