@@ -118,12 +118,18 @@ EOF
     target/release/rskpca loadgen --target "127.0.0.1:$port" \
         --clients 2 --requests 20
     # Short high-concurrency burst: 1000 multiplexed connections
-    # through the event loop, with the machine-readable summary.
+    # through the event loop, with the machine-readable summary and
+    # the in-band Prometheus poller scraping /metrics mid-run.
     target/release/rskpca loadgen --target "127.0.0.1:$port" \
         --concurrency 1000 --requests 2 --rows-per-request 2 \
-        --json "$smoke_dir/loadgen.json"
+        --metrics-poll 1 --json "$smoke_dir/loadgen.json"
     test -s "$smoke_dir/loadgen.json" \
         || { echo "loadgen --json produced nothing"; exit 1; }
+    # The poller strictly parses each exposition; a run that captured
+    # no samples (or an unparsable /metrics) fails the gate.
+    grep -q '"metrics_samples": *\[ *{' "$smoke_dir/loadgen.json" \
+        || { echo "loadgen captured no /metrics samples"; \
+             cat "$smoke_dir/loadgen.json"; exit 1; }
     # Clean SIGTERM shutdown: stop accepting -> drain -> join -> exit 0.
     kill -TERM "$serve_pid"
     wait "$serve_pid"

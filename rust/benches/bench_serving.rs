@@ -129,6 +129,7 @@ fn main() {
                 seed: 0xBE_EF,
                 warmup_ms: 3000,
                 rate: 0.0,
+                metrics_poll_s: 0,
             })
             .unwrap();
             let label = format!("serving/{name}/w{workers}");

@@ -1,10 +1,11 @@
 //! CLI subcommand implementations.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use super::Args;
-use crate::config::{RunConfig, ServerConfig};
-use crate::coordinator::EmbeddingService;
+use crate::config::{ObsConfig, RunConfig, ServerConfig};
+use crate::coordinator::{EmbeddingService, ModelRegistry, DEFAULT_MODEL};
 use crate::data::{
     gaussian_mixture_2d, load_dataset_csv, save_dataset_csv, swiss_roll,
     Dataset,
@@ -183,24 +184,32 @@ pub fn serve(args: &Args) -> Result<()> {
     let rows_per = args.flag_usize("rows-per-request", 8)?;
     let refresh_every = args.flag_usize("refresh", 0)?;
     let ell = args.flag_f64("ell", 4.0)?;
-    let (cfg, mut server_cfg, solver) = match args.flag("config") {
-        Some(path) => {
-            let rc = RunConfig::from_file(Path::new(path))?;
-            apply_threads(args, rc.threads)?;
-            (rc.service, rc.server, rc.solver)
-        }
-        None => {
-            apply_threads(args, 0)?;
-            (
-                Default::default(),
-                ServerConfig::default(),
-                Default::default(),
-            )
-        }
-    };
+    let (cfg, mut server_cfg, solver, mut obs_cfg) =
+        match args.flag("config") {
+            Some(path) => {
+                let rc = RunConfig::from_file(Path::new(path))?;
+                apply_threads(args, rc.threads)?;
+                (rc.service, rc.server, rc.solver, rc.obs)
+            }
+            None => {
+                apply_threads(args, 0)?;
+                (
+                    Default::default(),
+                    ServerConfig::default(),
+                    Default::default(),
+                    ObsConfig::default(),
+                )
+            }
+        };
     if let Some(listen) = args.flag("listen") {
         server_cfg.listen = listen.to_string();
     }
+    // `--log-json FILE` overrides the `[obs] log_json` config knob:
+    // every structured event is appended to FILE as one JSON line.
+    if let Some(path) = args.flag("log-json") {
+        obs_cfg.log_json = Some(path.to_string());
+    }
+    let obs = Arc::new(crate::obs::Obs::new(&obs_cfg)?);
     // Publish-time quantization: `[server] precision = "f32"` rounds
     // the serving operands once here (training stays f64) and reports
     // the probe-block error; the registry keeps quantizing hot-swapped
@@ -231,10 +240,14 @@ pub fn serve(args: &Args) -> Result<()> {
             "off".into()
         }
     );
-    let svc = crate::coordinator::serve(
-        model,
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish(DEFAULT_MODEL, model);
+    let svc = crate::coordinator::serve_registry_obs(
+        registry,
+        DEFAULT_MODEL,
         factory_from_name(&backend_name, &artifacts),
         cfg,
+        obs,
     )?;
     // Future publishes (refresher hot swaps, POST /models/swap) are
     // quantized by the registry to match the configured precision.
@@ -332,8 +345,8 @@ fn serve_listen(
         server_cfg.max_body_bytes
     );
     println!(
-        "routes: POST /embed | GET /stats | GET /healthz | GET /models \
-         | POST /models/swap   (Ctrl-C / SIGTERM to stop)"
+        "routes: POST /embed | GET /stats | GET /metrics | GET /healthz \
+         | GET /models | POST /models/swap   (Ctrl-C / SIGTERM to stop)"
     );
     while !crate::server::shutdown_requested() {
         std::thread::sleep(std::time::Duration::from_millis(100));
@@ -401,6 +414,7 @@ pub fn loadgen(args: &Args) -> Result<()> {
         seed: args.flag_usize("seed", 0x10AD)? as u64,
         warmup_ms: args.flag_usize("wait-ms", 5000)? as u64,
         rate: args.flag_f64("rate", 0.0)?,
+        metrics_poll_s: args.flag_usize("metrics-poll", 0)? as u64,
     };
     println!(
         "loadgen: target={} concurrency={} requests/client={} \
@@ -417,8 +431,15 @@ pub fn loadgen(args: &Args) -> Result<()> {
     );
     let mut report = crate::server::loadgen::run(&cfg)?;
     println!("{}", report.render());
+    if cfg.metrics_poll_s > 0 {
+        println!(
+            "metrics poll: {} scrape(s) captured, {} failed",
+            report.metrics_samples.len(),
+            report.metrics_errors
+        );
+    }
     match args.flag("json") {
-        Some("true") => println!("{}", report.to_json()),
+        Some("true") => println!("{}", report.to_json().to_string()),
         Some(path) => {
             std::fs::write(path, report.to_json().to_string())
                 .map_err(|e| {

@@ -10,10 +10,12 @@
 //!                [--threads N]
 //! rskpca serve   --model FILE [--listen ADDR] [--backend B]
 //!                [--config FILE] [--threads N] [--refresh N] [--ell F]
+//!                [--log-json FILE]
 //!                [--selftest [--requests N] [--rows-per-request N]]
 //! rskpca loadgen [--target HOST:PORT] [--concurrency N] [--requests N]
 //!                [--rows-per-request N] [--dim D] [--seed N]
 //!                [--wait-ms MS] [--rate R] [--json [FILE]]
+//!                [--metrics-poll S]
 //! rskpca bench   gemm  [--quick] [--json] [--sizes N,N,..] [--threads N]
 //!                [--out FILE]
 //! rskpca bench   eigen [--quick] [--json] [--sizes N,N,..] [--threads N]
@@ -107,23 +109,27 @@ USAGE:
                 [--artifacts DIR]
   rskpca serve  --model FILE [--listen HOST:PORT] [--backend native|pjrt]
                 [--artifacts DIR] [--config FILE] [--refresh N] [--ell F]
+                [--log-json FILE]
                 [--selftest [--requests N] [--rows-per-request N]]
-      serves HTTP (POST /embed, GET /stats, GET /healthz, GET /models,
-      POST /models/swap) until Ctrl-C / SIGTERM; --listen overrides the
-      [server] config section (port 0 = ephemeral, printed at startup);
+      serves HTTP (POST /embed, GET /stats, GET /metrics, GET /healthz,
+      GET /models, POST /models/swap) until Ctrl-C / SIGTERM; --listen
+      overrides the [server] config section (port 0 = ephemeral, printed
+      at startup); --log-json FILE appends every structured
+      observability event as one JSON line (overrides [obs] log_json);
       --selftest runs the in-process synthetic loop instead of listening
       --refresh N hot-swaps the served model every N requests from a
       background online-RSKPCA refresher fed by the live traffic
   rskpca loadgen [--target HOST:PORT] [--concurrency N] [--requests N]
                 [--rows-per-request N] [--dim D] [--seed N] [--wait-ms MS]
-                [--rate R] [--json [FILE]]
+                [--rate R] [--json [FILE]] [--metrics-poll S]
       load generator against a running serve instance over multiplexed
       keep-alive connections (--concurrency 1000 costs ~4 threads;
       --clients is an alias); closed loop by default, --rate R switches
       to an open-loop schedule of R req/s with overrun counting;
       reports rows/s and latency p50/p95/p99 (row dim auto-discovered
       via GET /models unless --dim is given); --json prints or writes
-      a machine-readable summary
+      a machine-readable summary; --metrics-poll S scrapes GET /metrics
+      every S seconds mid-run (strictly parsed) into the report
   rskpca bench  gemm [--quick] [--json] [--sizes N,N,..] [--out FILE]
       effective GFLOP/s for the packed GEMM (f64 and the f32 serving
       micro-kernel, with the f32-vs-f64 speedup) and the distance-free

@@ -219,6 +219,8 @@ pub struct RunConfig {
     pub service: ServiceConfig,
     /// HTTP front-end settings.
     pub server: ServerConfig,
+    /// Observability settings.
+    pub obs: ObsConfig,
 }
 
 /// Dynamic-batcher / service settings (coordinator layer).
@@ -333,6 +335,28 @@ impl Default for ServerConfig {
     }
 }
 
+/// Observability settings (`[obs]` section; consumed by
+/// [`crate::obs::Obs`]).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Capacity of the in-memory structured-event ring buffer, in
+    /// events (0 disables event storage; emits are then counted as
+    /// drops).  Memory is bounded at roughly 200 bytes per slot.
+    pub ring_size: usize,
+    /// Optional NDJSON event-log path (`serve --log-json FILE`
+    /// overrides).  Every emitted event is appended as one JSON line.
+    pub log_json: Option<String>,
+    /// Serve `GET /metrics` (Prometheus text exposition).  Recording
+    /// stays on either way — this only gates the endpoint.
+    pub metrics: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { ring_size: 4096, log_json: None, metrics: true }
+    }
+}
+
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
@@ -348,6 +372,7 @@ impl Default for RunConfig {
             solver: EigSolver::Auto,
             service: ServiceConfig::default(),
             server: ServerConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -471,6 +496,20 @@ impl RunConfig {
         if cfg.service.max_batch == 0 {
             return Err(Error::Config(
                 "server max_batch_rows must be >= 1".into(),
+            ));
+        }
+        let ob = &mut cfg.obs;
+        ob.ring_size = doc.get_usize("obs", "ring_size", ob.ring_size);
+        if let Some(v) = doc.get("obs", "log_json") {
+            let path = v.as_str().ok_or_else(|| {
+                Error::Config("obs log_json must be a string".into())
+            })?;
+            ob.log_json = Some(path.to_string());
+        }
+        ob.metrics = doc.get_bool("obs", "metrics", ob.metrics);
+        if ob.ring_size > 1 << 24 {
+            return Err(Error::Config(
+                "obs ring_size must be <= 16777216 events".into(),
             ));
         }
         Ok(cfg)
@@ -656,6 +695,41 @@ allow_path_swap = true
         assert!(
             RunConfig::from_toml("[server]\nmax_batch_rows = 0").is_err()
         );
+    }
+
+    #[test]
+    fn obs_section_parses_and_validates() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.obs.ring_size, 4096);
+        assert_eq!(cfg.obs.log_json, None);
+        assert!(cfg.obs.metrics);
+        let cfg = RunConfig::from_toml(
+            r#"
+[obs]
+ring_size = 128
+log_json = "/tmp/events.ndjson"
+metrics = false
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.obs.ring_size, 128);
+        assert_eq!(
+            cfg.obs.log_json.as_deref(),
+            Some("/tmp/events.ndjson")
+        );
+        assert!(!cfg.obs.metrics);
+        // ring_size = 0 is legal (storage off), silly sizes are not.
+        assert_eq!(
+            RunConfig::from_toml("[obs]\nring_size = 0")
+                .unwrap()
+                .obs
+                .ring_size,
+            0
+        );
+        assert!(
+            RunConfig::from_toml("[obs]\nring_size = 100000000").is_err()
+        );
+        assert!(RunConfig::from_toml("[obs]\nlog_json = 3").is_err());
     }
 
     #[test]

@@ -85,6 +85,31 @@ impl Clock for MockClock {
     }
 }
 
+/// Why a batch left the assembler — stamped on every `batch.flush`
+/// observability event so traffic shape (saturation vs. deadline-bound)
+/// is readable straight off the event stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The size trigger fired: rows reached `max_rows`.
+    Full,
+    /// The deadline trigger fired: the oldest member's wait budget ran
+    /// out.
+    Deadline,
+    /// The service is draining at shutdown.
+    Shutdown,
+}
+
+impl FlushReason {
+    /// Static label for event properties / metrics.
+    pub fn name(self) -> &'static str {
+        match self {
+            FlushReason::Full => "full",
+            FlushReason::Deadline => "deadline",
+            FlushReason::Shutdown => "shutdown",
+        }
+    }
+}
+
 /// The batching state machine: accumulates items (each carrying a row
 /// count and an arrival timestamp) and answers "flush now?" / "when is
 /// the next deadline?".  The caller supplies every timestamp, so the
@@ -174,6 +199,20 @@ impl<T> BatchAssembler<T> {
         !self.is_empty() && (self.is_full() || self.due(now_us))
     }
 
+    /// Which trigger applies at `now_us` — [`FlushReason::Full`] wins
+    /// when both hold.  Only meaningful when
+    /// [`BatchAssembler::should_flush`] is true; shutdown drains pass
+    /// [`FlushReason::Shutdown`] explicitly instead of calling this.
+    pub fn flush_reason(&self, now_us: u64) -> FlushReason {
+        if self.is_full() {
+            FlushReason::Full
+        } else if self.due(now_us) {
+            FlushReason::Deadline
+        } else {
+            FlushReason::Shutdown
+        }
+    }
+
     /// Drain the pending batch in arrival order.
     pub fn take(&mut self) -> Vec<T> {
         self.rows = 0;
@@ -221,6 +260,18 @@ mod tests {
         assert!(asm.is_full());
         // A second push would overflow, so the caller flushes first.
         assert!(asm.would_overflow(1));
+    }
+
+    #[test]
+    fn flush_reason_prefers_full_over_deadline() {
+        let mut asm = BatchAssembler::new(2, 100);
+        asm.push("a", 1, 0);
+        assert_eq!(asm.flush_reason(100), FlushReason::Deadline);
+        asm.push("b", 1, 10);
+        assert_eq!(asm.flush_reason(100), FlushReason::Full);
+        assert_eq!(FlushReason::Full.name(), "full");
+        assert_eq!(FlushReason::Deadline.name(), "deadline");
+        assert_eq!(FlushReason::Shutdown.name(), "shutdown");
     }
 
     #[test]

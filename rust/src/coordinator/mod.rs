@@ -50,7 +50,9 @@ pub mod batch;
 mod registry;
 mod service;
 
-pub use batch::{BatchAssembler, Clock, MockClock, SystemClock};
+pub use batch::{
+    BatchAssembler, Clock, FlushReason, MockClock, SystemClock,
+};
 pub use registry::{ModelRegistry, DEFAULT_MODEL};
 pub use service::{
     EmbeddingService, ServiceHandle, ServiceStatsSnapshot,
@@ -85,4 +87,25 @@ pub fn serve_registry(
     cfg: ServiceConfig,
 ) -> Result<EmbeddingService> {
     EmbeddingService::start_with_registry(registry, model_name, factory, cfg)
+}
+
+/// [`serve_registry`] with an explicit observability handle: the CLI's
+/// entry point, so the HTTP server, the batching worker, and the model
+/// registry all share the one [`crate::obs::Obs`] built from `[obs]`
+/// config.
+pub fn serve_registry_obs(
+    registry: Arc<ModelRegistry>,
+    model_name: &str,
+    factory: BackendFactory,
+    cfg: ServiceConfig,
+    obs: Arc<crate::obs::Obs>,
+) -> Result<EmbeddingService> {
+    EmbeddingService::start_full(
+        registry,
+        model_name,
+        factory,
+        cfg,
+        Arc::new(SystemClock::new()),
+        obs,
+    )
 }

@@ -14,6 +14,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::kpca::{EmbeddingModel, Precision};
+use crate::obs::{Event, Obs};
 
 /// Slot name used by the single-model convenience constructors
 /// (`EmbeddingService::start`, `coordinator::serve`).
@@ -34,6 +35,9 @@ pub struct ModelRegistry {
     /// precision` in the config).  Defaults to f64: exact serving, no
     /// quantization.
     precision: RwLock<Precision>,
+    /// Observability handle, attached by the service that serves from
+    /// this registry; publishes emit `model.publish` events through it.
+    obs: RwLock<Option<Arc<Obs>>>,
 }
 
 impl ModelRegistry {
@@ -54,6 +58,14 @@ impl ModelRegistry {
         *self.precision.read().unwrap()
     }
 
+    /// Attach an observability handle: subsequent publishes emit
+    /// `model.publish` events through it.  Called by
+    /// `EmbeddingService::start_full`, so a registry shared by several
+    /// services reports through whichever service attached last.
+    pub fn set_obs(&self, obs: Arc<Obs>) {
+        *self.obs.write().unwrap() = Some(obs);
+    }
+
     /// Publish a model under `name`, returning its version (1 for a new
     /// slot; replacing an existing slot bumps its version and the global
     /// swap count).  Readers holding the previous `Arc` are unaffected.
@@ -70,21 +82,30 @@ impl ModelRegistry {
             model.clear_quantization();
         }
         let mut slots = self.slots.write().unwrap();
-        match slots.get_mut(name) {
+        let (version, swapped) = match slots.get_mut(name) {
             Some(slot) => {
                 slot.model = Arc::new(model);
                 slot.version += 1;
                 self.swaps.fetch_add(1, Ordering::Relaxed);
-                slot.version
+                (slot.version, true)
             }
             None => {
                 slots.insert(
                     name.to_string(),
                     Slot { model: Arc::new(model), version: 1 },
                 );
-                1
+                (1, false)
             }
+        };
+        drop(slots);
+        if let Some(obs) = self.obs.read().unwrap().as_ref() {
+            obs.emit(
+                Event::new("model.publish")
+                    .with("version", version)
+                    .with("swapped", u64::from(swapped)),
+            );
         }
+        version
     }
 
     /// Current model under `name`.
@@ -201,6 +222,32 @@ mod tests {
         }
         assert_eq!(reg.swap_count(), 20);
         assert_eq!(reg.version(DEFAULT_MODEL), Some(21));
+    }
+
+    #[test]
+    fn publish_emits_events_once_obs_is_attached() {
+        let reg = ModelRegistry::new();
+        reg.publish("a", model(21)); // before attach: no event, no panic
+        let obs = Arc::new(Obs::default());
+        reg.set_obs(obs.clone());
+        reg.publish("a", model(22));
+        reg.publish("b", model(23));
+        let events = obs.events_named("model.publish");
+        assert_eq!(events.len(), 2);
+        // The republish of "a" (version 2) is a swap; the fresh slot
+        // "b" (version 1) is not.
+        let swapped_of = |version: u64| {
+            events
+                .iter()
+                .find(|e| {
+                    e.prop("version").and_then(|v| v.as_u64())
+                        == Some(version)
+                })
+                .and_then(|e| e.prop("swapped"))
+                .and_then(|v| v.as_u64())
+        };
+        assert_eq!(swapped_of(2), Some(1));
+        assert_eq!(swapped_of(1), Some(0));
     }
 
     #[test]

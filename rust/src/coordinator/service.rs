@@ -12,13 +12,14 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::batch::{BatchAssembler, Clock, SystemClock};
+use super::batch::{BatchAssembler, Clock, FlushReason, SystemClock};
 use super::registry::{ModelRegistry, DEFAULT_MODEL};
 use crate::config::ServiceConfig;
 use crate::error::{Error, Result};
 use crate::kpca::{EmbeddingModel, Precision, QuantError};
 use crate::linalg::Matrix;
 use crate::metrics::Histogram;
+use crate::obs::{Event, Obs};
 use crate::runtime::GramBackend;
 
 /// One queued embedding request.  `enqueued_us` is stamped by the
@@ -28,6 +29,13 @@ use crate::runtime::GramBackend;
 struct EmbedRequest {
     rows: Matrix,
     enqueued_us: u64,
+    /// Stamped by the worker the moment it pops the request off the
+    /// queue: queue wait = `popped - enqueued`, batch-assembly wait =
+    /// `exec_start - popped`.
+    popped_us: u64,
+    /// Request-scoped trace id — minted at HTTP accept time (or by the
+    /// handle for direct callers) and carried into `span.embed` events.
+    trace_id: u64,
     reply: mpsc::Sender<Result<Matrix>>,
 }
 
@@ -92,6 +100,7 @@ pub struct ServiceHandle {
     registry: Arc<ModelRegistry>,
     model_name: String,
     clock: Arc<dyn Clock>,
+    obs: Arc<Obs>,
 }
 
 impl ServiceHandle {
@@ -103,6 +112,8 @@ impl ServiceHandle {
         let req = EmbedRequest {
             rows,
             enqueued_us: self.clock.now_us(),
+            popped_us: 0,
+            trace_id: self.obs.next_trace_id(),
             reply: reply_tx,
         };
         self.tx
@@ -118,25 +129,41 @@ impl ServiceHandle {
     /// HTTP layer maps to 429).  Returns the receiver to await.
     pub fn try_embed(&self, rows: Matrix)
         -> Result<mpsc::Receiver<Result<Matrix>>> {
-        self.try_embed_inner(rows, true)
+        let trace_id = self.obs.next_trace_id();
+        self.try_embed_inner(rows, trace_id, true)
     }
 
-    /// Like [`ServiceHandle::try_embed`], but a saturated queue does
-    /// not bump the `rejected` counter — used by the HTTP layer's
-    /// block policy, whose parked re-admission attempts are retries of
-    /// one request, not a stream of fresh rejections.
-    pub(crate) fn try_embed_quiet(&self, rows: Matrix)
+    /// Like [`ServiceHandle::try_embed`], but carries the caller's
+    /// trace id and a saturated queue does not bump the `rejected`
+    /// counter — used by the HTTP layer's block policy, whose parked
+    /// re-admission attempts are retries of one request, not a stream
+    /// of fresh rejections.
+    pub(crate) fn try_embed_quiet(&self, rows: Matrix, trace_id: u64)
         -> Result<mpsc::Receiver<Result<Matrix>>> {
-        self.try_embed_inner(rows, false)
+        self.try_embed_inner(rows, trace_id, false)
     }
 
-    fn try_embed_inner(&self, rows: Matrix, count_reject: bool)
+    /// Like [`ServiceHandle::try_embed`], but carries the caller's
+    /// trace id (minted at accept time by the HTTP layer) — a full
+    /// queue still counts as a rejection.
+    pub(crate) fn try_embed_traced(&self, rows: Matrix, trace_id: u64)
         -> Result<mpsc::Receiver<Result<Matrix>>> {
+        self.try_embed_inner(rows, trace_id, true)
+    }
+
+    fn try_embed_inner(
+        &self,
+        rows: Matrix,
+        trace_id: u64,
+        count_reject: bool,
+    ) -> Result<mpsc::Receiver<Result<Matrix>>> {
         self.validate(&rows)?;
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = EmbedRequest {
             rows,
             enqueued_us: self.clock.now_us(),
+            popped_us: 0,
+            trace_id,
             reply: reply_tx,
         };
         match self.tx.try_send(Msg::Embed(req)) {
@@ -144,6 +171,11 @@ impl ServiceHandle {
             Err(mpsc::TrySendError::Full(_)) => {
                 if count_reject {
                     self.stats.lock().unwrap().rejected += 1;
+                    self.obs.emit(
+                        Event::new("req.rejected")
+                            .trace(trace_id)
+                            .with("reason", "queue_full"),
+                    );
                 }
                 Err(Error::Saturated(
                     "embed queue full (backpressure)".into(),
@@ -184,6 +216,13 @@ impl ServiceHandle {
     /// Registry slot this service serves from.
     pub fn model_name(&self) -> &str {
         &self.model_name
+    }
+
+    /// The observability handle every layer of this service shares:
+    /// the HTTP front end reads it off the handle so server, batcher,
+    /// and backend all record into one event ring / metrics hub.
+    pub fn obs(&self) -> Arc<Obs> {
+        self.obs.clone()
     }
 
     /// Metrics snapshot.
@@ -267,12 +306,36 @@ impl EmbeddingService {
         cfg: ServiceConfig,
         clock: Arc<dyn Clock>,
     ) -> Result<EmbeddingService> {
+        Self::start_full(
+            registry,
+            model_name,
+            factory,
+            cfg,
+            clock,
+            Arc::new(Obs::default()),
+        )
+    }
+
+    /// The full-parameter entry point: everything
+    /// [`EmbeddingService::start_with_clock`] takes plus an explicit
+    /// observability handle, so the CLI can share one [`Obs`] (event
+    /// ring, NDJSON sink, metrics hub) across the HTTP server, the
+    /// batching worker, and the model registry.
+    pub fn start_full(
+        registry: Arc<ModelRegistry>,
+        model_name: &str,
+        factory: crate::runtime::BackendFactory,
+        cfg: ServiceConfig,
+        clock: Arc<dyn Clock>,
+        obs: Arc<Obs>,
+    ) -> Result<EmbeddingService> {
         let (model0, version0) =
             registry.get_versioned(model_name).ok_or_else(|| {
                 Error::Service(format!(
                     "no model named '{model_name}' in the registry"
                 ))
             })?;
+        registry.set_obs(obs.clone());
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
         let stats = Arc::new(Mutex::new(ServiceStats {
             model_version: version0,
@@ -288,6 +351,7 @@ impl EmbeddingService {
             registry: registry.clone(),
             model_name: model_name.to_string(),
             clock: clock.clone(),
+            obs: obs.clone(),
         };
         let name = model_name.to_string();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -317,8 +381,17 @@ impl EmbeddingService {
                 drop(model0);
                 let _ = ready_tx.send(Ok(()));
                 worker_loop(
-                    rx, registry, name, version0, backend, cfg, stats,
-                    clock,
+                    rx,
+                    backend,
+                    version0,
+                    WorkerCtx {
+                        registry,
+                        model_name: name,
+                        cfg,
+                        stats,
+                        clock,
+                        obs,
+                    },
                 )
             })
             .map_err(|e| Error::Service(format!("spawn worker: {e}")))?;
@@ -364,6 +437,18 @@ impl Drop for EmbeddingService {
     }
 }
 
+/// Everything the batching worker needs besides the queue and the
+/// backend, bundled so [`worker_loop`]/[`execute_batch`] keep small
+/// signatures as the observability surface grows.
+struct WorkerCtx {
+    registry: Arc<ModelRegistry>,
+    model_name: String,
+    cfg: ServiceConfig,
+    stats: Arc<Mutex<ServiceStats>>,
+    clock: Arc<dyn Clock>,
+    obs: Arc<Obs>,
+}
+
 /// The batching worker: collect (size-OR-deadline) -> fetch current
 /// model -> execute -> split -> reply.
 ///
@@ -373,20 +458,15 @@ impl Drop for EmbeddingService {
 /// non-empty batch is *held back* (`carry`), the pending batch is
 /// flushed, and the held request seeds the next one — so a batch with
 /// more than one member never exceeds `max_batch` rows.
-#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rx: Receiver<Msg>,
-    registry: Arc<ModelRegistry>,
-    model_name: String,
-    initial_version: u64,
     mut backend: Box<dyn GramBackend>,
-    cfg: ServiceConfig,
-    stats: Arc<Mutex<ServiceStats>>,
-    clock: Arc<dyn Clock>,
+    initial_version: u64,
+    ctx: WorkerCtx,
 ) {
     let mut last_version = initial_version;
     let mut asm: BatchAssembler<EmbedRequest> =
-        BatchAssembler::new(cfg.max_batch, cfg.max_wait_us);
+        BatchAssembler::new(ctx.cfg.max_batch, ctx.cfg.max_wait_us);
     let mut carry: Option<EmbedRequest> = None;
     loop {
         // Fill phase: admit requests until a flush trigger fires.
@@ -409,11 +489,14 @@ fn worker_loop(
             if asm.is_empty() {
                 // Nothing pending: block until traffic or shutdown.
                 match rx.recv() {
-                    Ok(Msg::Embed(req)) => carry = Some(req),
+                    Ok(Msg::Embed(mut req)) => {
+                        req.popped_us = ctx.clock.now_us();
+                        carry = Some(req);
+                    }
                     Ok(Msg::Shutdown) | Err(_) => break true,
                 }
             } else {
-                let now = clock.now_us();
+                let now = ctx.clock.now_us();
                 let deadline = asm.deadline_us().unwrap_or(now);
                 if now >= deadline {
                     break false;
@@ -421,7 +504,10 @@ fn worker_loop(
                 match rx
                     .recv_timeout(Duration::from_micros(deadline - now))
                 {
-                    Ok(Msg::Embed(req)) => carry = Some(req),
+                    Ok(Msg::Embed(mut req)) => {
+                        req.popped_us = ctx.clock.now_us();
+                        carry = Some(req);
+                    }
                     Ok(Msg::Shutdown) => break true,
                     Err(RecvTimeoutError::Timeout) => break false,
                     Err(RecvTimeoutError::Disconnected) => break true,
@@ -430,15 +516,22 @@ fn worker_loop(
         };
 
         if !asm.is_empty() {
+            // Label the flush before draining the assembler: a
+            // held-back overflow request counts as a size flush.
+            let reason = if shutdown {
+                FlushReason::Shutdown
+            } else if asm.is_full() || carry.is_some() {
+                FlushReason::Full
+            } else {
+                FlushReason::Deadline
+            };
             let batch = asm.take();
             execute_batch(
                 &mut backend,
-                &registry,
-                &model_name,
+                &ctx,
                 &batch,
-                &stats,
                 &mut last_version,
-                clock.as_ref(),
+                reason,
             );
         }
         if shutdown {
@@ -447,12 +540,10 @@ fn worker_loop(
             if let Some(req) = carry.take() {
                 execute_batch(
                     &mut backend,
-                    &registry,
-                    &model_name,
+                    &ctx,
                     &[req],
-                    &stats,
                     &mut last_version,
-                    clock.as_ref(),
+                    FlushReason::Shutdown,
                 );
             }
             return;
@@ -462,27 +553,29 @@ fn worker_loop(
 
 fn execute_batch(
     backend: &mut Box<dyn GramBackend>,
-    registry: &ModelRegistry,
-    model_name: &str,
+    ctx: &WorkerCtx,
     batch: &[EmbedRequest],
-    stats: &Arc<Mutex<ServiceStats>>,
     last_version: &mut u64,
-    clock: &dyn Clock,
+    reason: FlushReason,
 ) {
     // Fetch the model once per batch: this Arc is what the whole batch
     // executes against, so a concurrent hot swap affects only the *next*
     // batch and never blocks this one.
-    let Some((model, version)) = registry.get_versioned(model_name)
+    let Some((model, version)) =
+        ctx.registry.get_versioned(&ctx.model_name)
     else {
         for req in batch {
             let _ = req.reply.send(Err(Error::Service(format!(
-                "model '{model_name}' was removed from the registry"
+                "model '{}' was removed from the registry",
+                ctx.model_name
             ))));
         }
         return;
     };
     let total_rows: usize = batch.iter().map(|r| r.rows.rows()).sum();
     let dim = model.centers.cols();
+    let exec_us = ctx.clock.now_us();
+    let mut embed_us = 0u64;
     let result = if batch.iter().any(|r| r.rows.cols() != dim) {
         // Only reachable if a hot swap changed the feature dimension the
         // handles validated against — refuse the batch, keep serving.
@@ -504,18 +597,23 @@ fn execute_batch(
         // or its f32 twin when the model was published quantized): the
         // stacked rows fan out across the `crate::parallel` compute
         // threads, so coalescing directly buys multi-core utilization.
-        backend.embed_model(&stacked, &model)
+        let t0 = ctx.clock.now_us();
+        let r = backend.embed_model(&stacked, &model);
+        embed_us = ctx.clock.now_us().saturating_sub(t0);
+        r
     };
+    let prev_version = *last_version;
+    let swapped = version != prev_version;
     // Metrics first (once per batch): a client observing its reply must
     // already see this batch reflected in a stats snapshot.
     {
-        let now_us = clock.now_us();
-        let mut s = stats.lock().unwrap();
+        let now_us = ctx.clock.now_us();
+        let mut s = ctx.stats.lock().unwrap();
         s.batches += 1;
         s.requests += batch.len() as u64;
         s.rows += total_rows as u64;
         s.batch_rows.record(total_rows as f64);
-        if version != *last_version {
+        if swapped {
             s.model_swaps += 1;
             *last_version = version;
         }
@@ -527,6 +625,62 @@ fn execute_batch(
                 .record(now_us.saturating_sub(req.enqueued_us) as f64);
         }
     }
+    // Observability (outside the stats lock, all atomic or bounded):
+    // per-stage histograms feed `/metrics`, span/flush events feed the
+    // ring buffer and the optional NDJSON sink.
+    let obs = &ctx.obs;
+    if obs.metrics_enabled() {
+        let hub = &obs.hub;
+        hub.requests_1m.incr(obs.now_s(), batch.len() as u64);
+        hub.batch_rows.record(total_rows as f64);
+        hub.embed_us.record(embed_us as f64);
+        if let Some(t) = backend.last_stage_times() {
+            hub.gemm_us.record(t.gemm_ns as f64 / 1_000.0);
+            hub.profile_us.record(t.profile_ns as f64 / 1_000.0);
+            hub.coeff_us.record(t.coeff_ns as f64 / 1_000.0);
+        }
+        for req in batch {
+            hub.queue_wait_us.record(
+                req.popped_us.saturating_sub(req.enqueued_us) as f64,
+            );
+            hub.assembly_us.record(
+                exec_us.saturating_sub(req.popped_us) as f64,
+            );
+        }
+    }
+    if swapped {
+        obs.emit(
+            Event::new("model.swap")
+                .with("from", prev_version)
+                .with("to", version),
+        );
+    }
+    for req in batch {
+        obs.emit(
+            Event::new("span.embed")
+                .trace(req.trace_id)
+                .with("rows", req.rows.rows())
+                .with(
+                    "queue_us",
+                    req.popped_us.saturating_sub(req.enqueued_us),
+                )
+                .with(
+                    "asm_us",
+                    exec_us.saturating_sub(req.popped_us),
+                )
+                .with("embed_us", embed_us)
+                .with("version", version),
+        );
+    }
+    obs.emit(
+        Event::new("batch.flush")
+            .trace(batch.first().map_or(0, |r| r.trace_id))
+            .with("reason", reason.name())
+            .with("requests", batch.len())
+            .with("rows", total_rows)
+            .with("embed_us", embed_us)
+            .with("ok", u64::from(result.is_ok())),
+    );
     // Split and reply.
     match result {
         Ok(embedded) => {
@@ -720,6 +874,59 @@ mod tests {
         }
         let snap = svc.shutdown();
         assert_eq!(snap.rejected, rejected as u64);
+        // Every counted rejection also left a structured event.
+        assert_eq!(
+            h.obs().events_named("req.rejected").len(),
+            rejected as usize
+        );
+    }
+
+    #[test]
+    fn spans_and_flush_events_reach_the_obs_ring() {
+        let (model, x) = test_model();
+        let svc = EmbeddingService::start(
+            model,
+            native(),
+            ServiceConfig {
+                max_batch: 16,
+                max_wait_us: 1_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = svc.handle();
+        let mut receivers = Vec::new();
+        for i in 0..10 {
+            receivers.push(h.try_embed(x.select_rows(&[i])).unwrap());
+        }
+        for rx in receivers {
+            rx.recv().unwrap().unwrap();
+        }
+        let obs = h.obs();
+        let spans = obs.events_named("span.embed");
+        assert_eq!(spans.len(), 10);
+        let mut ids: Vec<u64> =
+            spans.iter().map(|e| e.trace_id()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10, "trace ids must be unique");
+        let flushes = obs.events_named("batch.flush");
+        assert!(!flushes.is_empty());
+        for f in &flushes {
+            let reason =
+                f.prop("reason").and_then(|v| v.as_str()).unwrap();
+            assert!(
+                ["full", "deadline", "shutdown"].contains(&reason),
+                "unexpected flush reason {reason}"
+            );
+        }
+        // The metrics hub saw the same traffic: one queue-wait sample
+        // per request, at least one batch-occupancy sample.
+        assert_eq!(obs.hub.queue_wait_us.snapshot().count, 10);
+        assert_eq!(obs.hub.assembly_us.snapshot().count, 10);
+        assert!(obs.hub.batch_rows.snapshot().count >= 1);
+        assert!(obs.hub.embed_us.snapshot().count >= 1);
+        svc.shutdown();
     }
 
     #[test]

@@ -45,6 +45,7 @@
 
 use std::cell::RefCell;
 use std::ops::Range;
+use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::linalg::gemm::{self, BSrc, Element};
@@ -98,6 +99,7 @@ pub struct Scratch {
     gemm: gemm::GemmScratch,
     bands: Vec<BandScratch>,
     grows: u64,
+    stages: EmbedStageTimes,
 }
 
 /// Per-compute-thread slice of the workspace used by the fused
@@ -108,6 +110,34 @@ struct BandScratch {
     tile: Vec<f64>,
     gemm: gemm::GemmScratch,
     grows: u64,
+    stages: EmbedStageTimes,
+}
+
+/// Per-stage compute time of the most recent fused-projection call,
+/// split at the three phases of every row block: the Gram
+/// cross-product GEMM, the radial-profile epilogue, and the
+/// coefficient fold.  Summed across row bands, so on a fanned-out call
+/// this is aggregate CPU time, not wall clock.  The observability
+/// layer surfaces these as the `rskpca_{gemm,profile,coeff}_us`
+/// histograms — the scratch-level answer to "was the batch slow in the
+/// GEMM or in the epilogue?".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EmbedStageTimes {
+    /// Cross-product GEMM (norm-trick Gram tile) nanoseconds.
+    pub gemm_ns: u64,
+    /// Profile epilogue nanoseconds.
+    pub profile_ns: u64,
+    /// Coefficient-fold GEMM nanoseconds (for the mixed-precision
+    /// path this includes the widen/round staging copies).
+    pub coeff_ns: u64,
+}
+
+impl EmbedStageTimes {
+    fn accumulate(&mut self, other: &EmbedStageTimes) {
+        self.gemm_ns += other.gemm_ns;
+        self.profile_ns += other.profile_ns;
+        self.coeff_ns += other.coeff_ns;
+    }
 }
 
 impl Scratch {
@@ -126,6 +156,12 @@ impl Scratch {
                 .iter()
                 .map(|b| b.grows + b.gemm.grow_events())
                 .sum::<u64>()
+    }
+
+    /// Per-stage times of the most recent [`Kernel::embed_rows_with`]
+    /// call through this scratch.
+    pub fn stage_times(&self) -> EmbedStageTimes {
+        self.stages
     }
 }
 
@@ -626,6 +662,10 @@ impl Kernel {
                 }
             });
         }
+        s.stages = EmbedStageTimes::default();
+        for band in &s.bands[..ranges.len()] {
+            s.stages.accumulate(&band.stages);
+        }
         Ok(out)
     }
 
@@ -731,6 +771,10 @@ impl Kernel {
                 }
             });
         }
+        s.stages = EmbedStageTimes::default();
+        for band in &s.bands[..ranges.len()] {
+            s.stages.accumulate(&band.stages);
+        }
         Ok(out)
     }
 }
@@ -759,13 +803,17 @@ fn embed_band(
     out_band: &mut [f64],
     bs: &mut BandScratch,
 ) {
-    let BandScratch { tile, gemm: gs, grows } = bs;
+    let BandScratch { tile, gemm: gs, grows, stages } = bs;
+    *stages = EmbedStageTimes::default();
     ensure(tile, EMBED_TILE_ROWS * ctx.m, grows);
     let mut i0 = rows.start;
     while i0 < rows.end {
         let bl = (rows.end - i0).min(EMBED_TILE_ROWS);
         let xa = &ctx.x.as_slice()[i0 * ctx.d..(i0 + bl) * ctx.d];
         let t = &mut tile[..bl * ctx.m];
+        // Stage timestamps: four monotonic reads per 64-row block,
+        // noise against the O(block·m·d) GEMM between them.
+        let t0 = Instant::now();
         gemm::gemm_into(
             t,
             bl,
@@ -777,12 +825,14 @@ fn embed_band(
             1,
             gs,
         );
+        let t1 = Instant::now();
         for (k, row) in t.chunks_mut(ctx.m).enumerate() {
             let nx = ctx.xn[i0 + k];
             for (v, &nc) in row.iter_mut().zip(ctx.cn) {
                 *v = profile_from_cross(ctx.kind, ctx.gamma, nx, nc, *v);
             }
         }
+        let t2 = Instant::now();
         let ob = &mut out_band
             [(i0 - rows.start) * ctx.r..(i0 - rows.start + bl) * ctx.r];
         gemm::gemm_into(
@@ -796,6 +846,10 @@ fn embed_band(
             1,
             gs,
         );
+        let t3 = Instant::now();
+        stages.gemm_ns += (t1 - t0).as_nanos() as u64;
+        stages.profile_ns += (t2 - t1).as_nanos() as u64;
+        stages.coeff_ns += (t3 - t2).as_nanos() as u64;
         i0 += bl;
     }
 }
@@ -888,6 +942,7 @@ pub struct ScratchF32 {
     x_norms: Vec<f32>,
     bands: Vec<BandScratchF32>,
     grows: u64,
+    stages: EmbedStageTimes,
 }
 
 /// Per-compute-thread slice of the f32 workspace: an f32 Gram tile, a
@@ -902,6 +957,7 @@ struct BandScratchF32 {
     gemm32: gemm::GemmScratch<f32>,
     gemm64: gemm::GemmScratch,
     grows: u64,
+    stages: EmbedStageTimes,
 }
 
 impl ScratchF32 {
@@ -922,6 +978,12 @@ impl ScratchF32 {
                         + b.gemm64.grow_events()
                 })
                 .sum::<u64>()
+    }
+
+    /// Per-stage times of the most recent
+    /// [`Kernel::embed_rows_f32_with`] call through this scratch.
+    pub fn stage_times(&self) -> EmbedStageTimes {
+        self.stages
     }
 }
 
@@ -948,7 +1010,16 @@ fn embed_band_f32(
     out_band: &mut [f64],
     bs: &mut BandScratchF32,
 ) {
-    let BandScratchF32 { tile, tile64, out32, gemm32, gemm64, grows } = bs;
+    let BandScratchF32 {
+        tile,
+        tile64,
+        out32,
+        gemm32,
+        gemm64,
+        grows,
+        stages,
+    } = bs;
+    *stages = EmbedStageTimes::default();
     ensure(tile, EMBED_TILE_ROWS * ctx.m, grows);
     let cn = &ctx.ops.center_norms;
     let mut i0 = rows.start;
@@ -956,6 +1027,7 @@ fn embed_band_f32(
         let bl = (rows.end - i0).min(EMBED_TILE_ROWS);
         let xa = &ctx.x32[i0 * ctx.d..(i0 + bl) * ctx.d];
         let t = &mut tile[..bl * ctx.m];
+        let t0 = Instant::now();
         gemm::gemm_into(
             t,
             bl,
@@ -967,12 +1039,16 @@ fn embed_band_f32(
             1,
             gemm32,
         );
+        let t1 = Instant::now();
         for (k, row) in t.chunks_mut(ctx.m).enumerate() {
             let nx = ctx.xn[i0 + k];
             for (v, &nc) in row.iter_mut().zip(cn) {
                 *v = profile_from_cross_f32(ctx.kind, ctx.gamma, nx, nc, *v);
             }
         }
+        let t2 = Instant::now();
+        stages.gemm_ns += (t1 - t0).as_nanos() as u64;
+        stages.profile_ns += (t2 - t1).as_nanos() as u64;
         let ob = &mut out_band
             [(i0 - rows.start) * ctx.r..(i0 - rows.start + bl) * ctx.r];
         match ctx.ops.accum {
@@ -1013,6 +1089,7 @@ fn embed_band_f32(
                 }
             }
         }
+        stages.coeff_ns += t2.elapsed().as_nanos() as u64;
         i0 += bl;
     }
 }
@@ -1296,6 +1373,38 @@ mod tests {
         assert!(k.embed_rows(&bad_dim, &c, &a).is_err());
         let bad_coeffs = random_matrix(4, 2, 5);
         assert!(k.embed_rows(&x, &c, &bad_coeffs).is_err());
+    }
+
+    #[test]
+    fn embed_rows_records_per_stage_times() {
+        // Big enough to cross the parallel threshold, so band stage
+        // times must aggregate across workers too.
+        let x = random_matrix(300, 16, 6);
+        let c = random_matrix(120, 16, 7);
+        let a = random_matrix(120, 8, 8).scale(0.2);
+        let k = Kernel::gaussian(1.0);
+        let mut s = Scratch::new();
+        assert_eq!(s.stage_times(), EmbedStageTimes::default());
+        k.embed_rows_with(&mut s, &x, &c, &a).unwrap();
+        let t = s.stage_times();
+        assert!(
+            t.gemm_ns > 0 && t.profile_ns > 0 && t.coeff_ns > 0,
+            "stage times not populated: {t:?}"
+        );
+        // Stage times are per-call, not cumulative: a tiny follow-up
+        // call overwrites the big one's totals.
+        let x1 = random_matrix(1, 16, 9);
+        k.embed_rows_with(&mut s, &x1, &c, &a).unwrap();
+        let t1 = s.stage_times();
+        assert!(
+            t1.gemm_ns + t1.profile_ns + t1.coeff_ns
+                < t.gemm_ns + t.profile_ns + t.coeff_ns,
+            "stage times look cumulative: {t:?} then {t1:?}"
+        );
+        // Instrumentation must not break the grow-once contract.
+        let warm = s.grow_events();
+        k.embed_rows_with(&mut s, &x, &c, &a).unwrap();
+        assert_eq!(s.grow_events(), warm);
     }
 
     /// Max per-row relative L2 error of `got` vs the f64 reference —

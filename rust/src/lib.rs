@@ -61,6 +61,7 @@ pub mod kpca;
 pub mod linalg;
 pub mod metrics;
 pub mod mmd;
+pub mod obs;
 pub mod parallel;
 pub mod prng;
 pub mod runtime;

@@ -1,8 +1,19 @@
-//! Lightweight measurement utilities: wall-clock timers, counters, and a
-//! latency histogram with percentiles.  Used by the bench harness, the
-//! experiment drivers (speedup columns) and the embedding service's
-//! metrics endpoint.
+//! Lightweight measurement utilities: wall-clock timers, counters, and
+//! two histogram flavors.  Used by the bench harness, the experiment
+//! drivers (speedup columns) and the embedding service's metrics
+//! endpoints.
+//!
+//! * [`Histogram`] — a raw-sample reservoir with exact percentiles
+//!   (single-writer, `&mut self`): the bench/loadgen/service-stats
+//!   workhorse.
+//! * [`StageHistogram`] — fixed boundaries, atomic buckets, shared-`&self`
+//!   recording: the Prometheus-exposition histogram.  The reservoir
+//!   cannot produce monotone cumulative `le` buckets (its eviction
+//!   permutes samples), so the `/metrics` surface records into this one.
+//! * [`WindowedCounter`] — per-second slot ring for "events in the last
+//!   N seconds" gauges.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Wall-clock stopwatch.
@@ -147,11 +158,21 @@ impl Histogram {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Largest sample; 0.0 when empty (an empty histogram must not
+    /// leak `-inf` into summaries or JSON reports).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// Smallest sample; 0.0 when empty (the `+inf` the fold would
+    /// otherwise return is not a valid JSON value).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
@@ -167,6 +188,207 @@ impl Histogram {
             self.max(),
             u = unit,
         )
+    }
+}
+
+/// Default `le` boundaries for microsecond-latency stage histograms:
+/// roughly logarithmic from 50us to 10s, matching the spread between a
+/// cache-warm parse and a saturated queue wait.
+pub const US_BOUNDS: &[f64] = &[
+    50.0,
+    100.0,
+    250.0,
+    500.0,
+    1_000.0,
+    2_500.0,
+    5_000.0,
+    10_000.0,
+    25_000.0,
+    50_000.0,
+    100_000.0,
+    250_000.0,
+    500_000.0,
+    1_000_000.0,
+    2_500_000.0,
+    10_000_000.0,
+];
+
+/// Default boundaries for the batch-occupancy (rows per flushed batch)
+/// distribution: powers of two up to the service's typical `max_batch`.
+pub const ROWS_BOUNDS: &[f64] = &[
+    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0,
+];
+
+/// A fixed-boundary histogram with atomic buckets — the
+/// Prometheus-exposition flavor.  `record` is `&self`, lock-free, and
+/// allocation-free (one binary search + three relaxed `fetch_add`s), so
+/// hot paths can share one instance across threads.  Buckets are
+/// *non*-cumulative internally; [`StageHistogram::snapshot`] produces
+/// the monotone cumulative `le` view the text format requires.
+///
+/// The observed-value sum is kept in fixed point (thousandths) so it
+/// fits an `AtomicU64`; negative observations clamp to zero.
+#[derive(Debug)]
+pub struct StageHistogram {
+    bounds: &'static [f64],
+    /// `bounds.len() + 1` slots; the last is the `+Inf` bucket.
+    buckets: Vec<AtomicU64>,
+    /// Sum of observed values, in thousandths.
+    sum_milli: AtomicU64,
+}
+
+/// Point-in-time cumulative view of a [`StageHistogram`].
+#[derive(Clone, Debug)]
+pub struct StageSnapshot {
+    pub bounds: &'static [f64],
+    /// Cumulative counts per bound, plus the `+Inf` total as the last
+    /// entry — monotone by construction.
+    pub cumulative: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl StageHistogram {
+    /// A histogram over `bounds` (must be strictly increasing and
+    /// finite; the `+Inf` bucket is implicit).
+    pub fn new(bounds: &'static [f64]) -> StageHistogram {
+        assert!(!bounds.is_empty(), "StageHistogram needs bounds");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1])
+                && bounds.iter().all(|b| b.is_finite()),
+            "StageHistogram bounds must be finite and increasing"
+        );
+        StageHistogram {
+            bounds,
+            buckets: (0..bounds.len() + 1)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            sum_milli: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (lock-free, `&self`).
+    pub fn record(&self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        let idx = self
+            .bounds
+            .partition_point(|&b| b < v)
+            .min(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_milli
+            .fetch_add((v * 1_000.0).round() as u64, Ordering::Relaxed);
+    }
+
+    /// Cumulative view.  Count is derived from the bucket reads (not a
+    /// separate counter), so `le="+Inf"` always equals `_count` even
+    /// under concurrent recording.
+    pub fn snapshot(&self) -> StageSnapshot {
+        let mut cumulative = Vec::with_capacity(self.buckets.len());
+        let mut acc = 0u64;
+        for b in &self.buckets {
+            acc += b.load(Ordering::Relaxed);
+            cumulative.push(acc);
+        }
+        StageSnapshot {
+            bounds: self.bounds,
+            count: acc,
+            sum: self.sum_milli.load(Ordering::Relaxed) as f64 / 1_000.0,
+            cumulative,
+        }
+    }
+}
+
+impl StageSnapshot {
+    /// Bucket-interpolated quantile estimate (q in [0, 100]), the
+    /// `histogram_quantile` method: find the bucket holding the target
+    /// rank, interpolate linearly inside it.  Observations in the
+    /// `+Inf` bucket report the largest finite bound.  0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q / 100.0) * self.count as f64;
+        let n = self.bounds.len();
+        for i in 0..self.cumulative.len() {
+            if (self.cumulative[i] as f64) >= rank {
+                if i >= n {
+                    return self.bounds[n - 1];
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let below =
+                    if i == 0 { 0 } else { self.cumulative[i - 1] };
+                let in_bucket = self.cumulative[i] - below;
+                if in_bucket == 0 {
+                    return hi;
+                }
+                let frac = (rank - below as f64) / in_bucket as f64;
+                return lo + (hi - lo) * frac.clamp(0.0, 1.0);
+            }
+        }
+        self.bounds[n - 1]
+    }
+
+    /// Mean of observed values (exact, from `_sum`/`_count`).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Sliding-window event counter: a ring of per-second slots, each
+/// stamped with the second it counts.  `incr` is lock-free; `sum`
+/// reports events over the last `window` seconds.  The slot handoff at
+/// a second boundary is racy by design (a concurrent increment landing
+/// exactly at the reset may be lost) — the gauge is approximate, the
+/// totals it feeds are not derived from it.
+#[derive(Debug)]
+pub struct WindowedCounter {
+    /// (stamp_s, count) per slot.
+    slots: Vec<(AtomicU64, AtomicU64)>,
+}
+
+impl WindowedCounter {
+    pub fn new(window_s: usize) -> WindowedCounter {
+        WindowedCounter {
+            slots: (0..window_s.max(1))
+                .map(|_| (AtomicU64::new(u64::MAX), AtomicU64::new(0)))
+                .collect(),
+        }
+    }
+
+    /// Window width in seconds.
+    pub fn window_s(&self) -> u64 {
+        self.slots.len() as u64
+    }
+
+    /// Count `n` events at `now_s` (seconds since the caller's epoch).
+    pub fn incr(&self, now_s: u64, n: u64) {
+        let (stamp, count) = &self.slots[now_s as usize % self.slots.len()];
+        if stamp.load(Ordering::Relaxed) != now_s
+            && stamp.swap(now_s, Ordering::Relaxed) != now_s
+        {
+            // First writer of this second resets the recycled slot.
+            count.store(0, Ordering::Relaxed);
+        }
+        count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Events counted in the window ending at `now_s` (inclusive).
+    pub fn sum(&self, now_s: u64) -> u64 {
+        let oldest = now_s.saturating_sub(self.window_s() - 1);
+        self.slots
+            .iter()
+            .filter(|(stamp, _)| {
+                let s = stamp.load(Ordering::Relaxed);
+                s >= oldest && s <= now_s
+            })
+            .map(|(_, count)| count.load(Ordering::Relaxed))
+            .sum()
     }
 }
 
@@ -296,5 +518,133 @@ mod tests {
         // Both sources survive in equal proportion (truncation would
         // leave mean = 1.0).
         assert!((a.mean() - 2.0).abs() < 0.01, "mean {}", a.mean());
+    }
+
+    #[test]
+    fn empty_histogram_extremes_are_finite() {
+        // max()/min() on an empty reservoir used to return -inf/+inf,
+        // which leaked into summary() strings and JSON reports.  Pin
+        // the fixed behavior: zeros, and a finite summary.
+        let mut h = Histogram::new();
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        let s = h.summary("us");
+        assert!(!s.contains("inf"), "summary leaked infinity: {s}");
+        assert!(s.contains("n=0"));
+    }
+
+    #[test]
+    fn merge_of_two_at_cap_reservoirs_stays_unbiased_and_finite() {
+        // Harder boundary than the equal-size case: one at-cap source,
+        // one small source, after the big one has been sort-permuted by
+        // a percentile query.  The decimated result must keep every
+        // value finite, stay within the cap, and represent the small
+        // source proportionally (within rounding of the stride).
+        let mut a = Histogram::new();
+        for i in 0..MAX_SAMPLES {
+            a.record((i % 97) as f64);
+        }
+        let _ = a.percentile(50.0); // sort-permute the reservoir
+        let mut b = Histogram::new();
+        for _ in 0..1_000 {
+            b.record(1e6);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), MAX_SAMPLES);
+        assert!(a.max().is_finite() && a.min().is_finite());
+        let big = a.samples.iter().filter(|&&v| v == 1e6).count();
+        // b contributed 1000/66536 of the merged stream; the even
+        // stride keeps its share within one slot of exact.
+        let expect = 1_000 * MAX_SAMPLES / (MAX_SAMPLES + 1_000);
+        assert!(
+            (big as i64 - expect as i64).unsigned_abs() <= 1,
+            "small source kept {big} of ~{expect} slots"
+        );
+        // Percentiles over the merged reservoir remain well-defined.
+        let p99 = a.percentile(99.0);
+        assert!(p99.is_finite());
+        // A further merge at the cap still cannot overflow the bound.
+        let snapshot = a.clone();
+        a.merge(&snapshot);
+        assert_eq!(a.len(), MAX_SAMPLES);
+    }
+
+    #[test]
+    fn stage_histogram_buckets_are_cumulative_and_monotone() {
+        let h = StageHistogram::new(US_BOUNDS);
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.quantile(99.0), 0.0);
+        assert_eq!(s.mean(), 0.0);
+
+        h.record(75.0); // -> le=100 bucket
+        h.record(75.0);
+        h.record(300.0); // -> le=500
+        h.record(1e9); // beyond the largest bound -> +Inf only
+        h.record(-5.0); // clamps to 0 -> first bucket
+        h.record(f64::NAN); // treated as 0, must not poison sums
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.cumulative.len(), US_BOUNDS.len() + 1);
+        for w in s.cumulative.windows(2) {
+            assert!(w[0] <= w[1], "cumulative counts not monotone");
+        }
+        assert_eq!(*s.cumulative.last().unwrap(), s.count);
+        // le=50 holds the two clamped zeros; le=100 adds the 75s.
+        assert_eq!(s.cumulative[0], 2);
+        assert_eq!(s.cumulative[1], 4);
+        assert!((s.sum - (75.0 + 75.0 + 300.0 + 1e9)).abs() < 1.0);
+        assert!(s.quantile(50.0).is_finite());
+        // The +Inf observation reports the largest finite bound.
+        assert_eq!(s.quantile(100.0), *US_BOUNDS.last().unwrap());
+    }
+
+    #[test]
+    fn stage_histogram_quantile_interpolates_within_buckets() {
+        let h = StageHistogram::new(ROWS_BOUNDS);
+        for _ in 0..100 {
+            h.record(3.0); // le=4 bucket (2 < v <= 4)
+        }
+        let s = h.snapshot();
+        // All mass in (2, 4]: the median estimate interpolates to the
+        // middle of that bucket.
+        let q50 = s.quantile(50.0);
+        assert!((2.0..=4.0).contains(&q50), "q50={q50}");
+        assert!((s.mean() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_histogram_is_shareable_across_threads() {
+        let h = std::sync::Arc::new(StageHistogram::new(US_BOUNDS));
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..1_000 {
+                    h.record(i as f64);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4_000);
+        assert_eq!(*s.cumulative.last().unwrap(), 4_000);
+    }
+
+    #[test]
+    fn windowed_counter_expires_old_slots() {
+        let w = WindowedCounter::new(3);
+        w.incr(10, 5);
+        w.incr(11, 2);
+        assert_eq!(w.sum(11), 7);
+        // The window slides: second 10 ages out at now=13.
+        assert_eq!(w.sum(13), 2);
+        assert_eq!(w.sum(20), 0);
+        // Recycling a slot (13 maps onto 10's slot) resets its count.
+        w.incr(13, 1);
+        assert_eq!(w.sum(13), 3);
+        assert_eq!(w.sum(14), 1);
     }
 }

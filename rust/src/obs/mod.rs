@@ -1,0 +1,606 @@
+//! Structured observability: typed events, per-request trace ids, and
+//! the metrics hub behind `GET /metrics`.
+//!
+//! The serving stack (PRs 6–7) could tell you *that* a request was slow
+//! — one latency histogram in `/stats` — but not *where* the time went.
+//! This module is the attribution layer:
+//!
+//! * [`Event`] — a lightweight structured record: a `&'static str`
+//!   name, a monotonic timestamp, an optional trace id, and a small
+//!   inline array of typed properties.  Building and emitting one is
+//!   allocation-free (`Event` is `Copy`); every request, batch flush,
+//!   hot swap, refresh and admission rejection becomes one.
+//! * [`Emitter`] — the pluggable sink contract.  Two implementations
+//!   ship: a lock-sharded bounded ring buffer ([`RingEmitter`], always
+//!   on, drop-counting) and an opt-in NDJSON file sink
+//!   (`rskpca serve --log-json FILE`).
+//! * [`Obs`] — the shared handle threaded through the stack
+//!   (`server` → `coordinator` → `kernel` stage times): trace-id
+//!   allocation, the monotonic clock, both sinks, and the
+//!   [`MetricsHub`] of fixed-bucket stage histograms the Prometheus
+//!   endpoint renders.
+//!
+//! **Hot-path cost budget.** Recording a stage sample is one binary
+//! search plus three relaxed atomic adds; emitting an event is a
+//! `try_lock` on one ring shard plus a ~150-byte memcpy.  Nothing on
+//! the request path blocks on observability: a contended shard falls
+//! through to the next, and when every shard is busy the event is
+//! counted in [`Obs::events_dropped`] and discarded.  The ring
+//! likewise *overwrites* its oldest entry when full (also counted as a
+//! drop), so memory is bounded by `[obs] ring_size` regardless of
+//! uptime.  The NDJSON sink is the one exception — it takes a real
+//! lock and does real I/O — which is why it is opt-in.
+
+pub mod prom;
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::ObsConfig;
+use crate::error::{Error, Result};
+use crate::metrics::{
+    StageHistogram, WindowedCounter, ROWS_BOUNDS, US_BOUNDS,
+};
+use crate::ser::Json;
+
+/// Inline property capacity of an [`Event`].  Chosen so the whole
+/// event stays under ~200 bytes and `Copy`; extra `with` calls beyond
+/// the cap are silently ignored (debug-asserted).
+pub const MAX_PROPS: usize = 6;
+
+/// A typed event property value.  `Copy`, so events never allocate;
+/// dynamic strings are deliberately unrepresentable (interning them
+/// would put allocation back on the hot path).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Value {
+    U64(u64),
+    F64(f64),
+    Str(&'static str),
+}
+
+impl Value {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::U64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&'static str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            Value::U64(v) => Json::Num(v as f64),
+            Value::F64(v) => Json::Num(v),
+            Value::Str(s) => Json::Str(s.to_string()),
+        }
+    }
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::U64(v)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::U64(v as u64)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::F64(v)
+    }
+}
+
+impl From<&'static str> for Value {
+    fn from(v: &'static str) -> Value {
+        Value::Str(v)
+    }
+}
+
+/// One structured record: static name, monotonic timestamp (stamped by
+/// [`Obs::emit`] from the obs epoch), optional trace id, and up to
+/// [`MAX_PROPS`] typed properties.  Built with a no-alloc fluent API:
+///
+/// ```ignore
+/// obs.emit(Event::new("req.rejected").trace(id).with("rows", rows));
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    name: &'static str,
+    t_us: u64,
+    trace_id: u64,
+    n_props: u8,
+    props: [(&'static str, Value); MAX_PROPS],
+}
+
+impl Event {
+    pub fn new(name: &'static str) -> Event {
+        Event {
+            name,
+            t_us: 0,
+            trace_id: 0,
+            n_props: 0,
+            props: [("", Value::U64(0)); MAX_PROPS],
+        }
+    }
+
+    /// Attach the request's trace id (0 = no trace).
+    pub fn trace(mut self, trace_id: u64) -> Event {
+        self.trace_id = trace_id;
+        self
+    }
+
+    /// Append one typed property.  Beyond [`MAX_PROPS`] the property
+    /// is dropped (never a panic on the hot path).
+    pub fn with(
+        mut self,
+        key: &'static str,
+        value: impl Into<Value>,
+    ) -> Event {
+        let n = self.n_props as usize;
+        if n < MAX_PROPS {
+            self.props[n] = (key, value.into());
+            self.n_props += 1;
+        } else {
+            debug_assert!(false, "event '{}' overflows MAX_PROPS", self.name);
+        }
+        self
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Microseconds since the emitting [`Obs`]'s epoch.
+    pub fn t_us(&self) -> u64 {
+        self.t_us
+    }
+
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
+    pub fn props(&self) -> &[(&'static str, Value)] {
+        &self.props[..self.n_props as usize]
+    }
+
+    /// Property lookup by key.
+    pub fn prop(&self, key: &str) -> Option<Value> {
+        self.props().iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+    }
+
+    /// One NDJSON line (no trailing newline).  Cold path only — the
+    /// file sink and tests; ring storage keeps the binary form.
+    pub fn to_ndjson(&self) -> String {
+        let mut props = Json::obj();
+        for (k, v) in self.props() {
+            props = props.with(k, v.to_json());
+        }
+        Json::obj()
+            .with("t_us", Json::Num(self.t_us as f64))
+            .with("name", Json::Str(self.name.to_string()))
+            .with("trace_id", Json::Num(self.trace_id as f64))
+            .with("props", props)
+            .to_string()
+    }
+}
+
+/// A pluggable event sink.  Implementations must be cheap and
+/// non-blocking when called from the request path (drop, don't wait).
+pub trait Emitter: Send + Sync {
+    fn emit(&self, event: &Event);
+}
+
+/// Shard count of the in-memory ring.  A power of two comfortably
+/// above the server's event-thread count, so concurrent emitters
+/// rarely contend on the same shard.
+const RING_SHARDS: usize = 8;
+
+/// One ring shard: a bounded buffer overwritten oldest-first.
+#[derive(Debug, Default)]
+struct RingShard {
+    buf: Vec<Event>,
+    /// Next slot to overwrite once `buf` reached capacity.
+    head: usize,
+}
+
+/// Lock-sharded bounded event ring: the always-on, in-process event
+/// store behind the fault-injection assertions and post-hoc debugging.
+/// Emission never blocks — a contended shard falls through to the next
+/// and a fully-contended emit is dropped (counted).  When a shard is
+/// full the oldest event is overwritten, also counted as a drop, so
+/// the ring holds at most `capacity` events total.
+#[derive(Debug)]
+pub struct RingEmitter {
+    shards: Vec<Mutex<RingShard>>,
+    /// Per-shard capacity.
+    shard_cap: usize,
+    dropped: AtomicU64,
+}
+
+impl RingEmitter {
+    /// A ring holding up to `capacity` events (0 disables storage;
+    /// every emit then counts as a drop).
+    pub fn new(capacity: usize) -> RingEmitter {
+        RingEmitter {
+            shards: (0..RING_SHARDS)
+                .map(|_| Mutex::new(RingShard::default()))
+                .collect(),
+            shard_cap: capacity.div_ceil(RING_SHARDS),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Events dropped (lock contention or overwritten by wraparound).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// All buffered events, oldest first (by emit timestamp).  Cold
+    /// path: takes each shard lock in turn.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let guard = shard.lock().unwrap();
+            // Oldest-first within the shard: head..end then 0..head.
+            if guard.buf.len() == self.shard_cap {
+                out.extend_from_slice(&guard.buf[guard.head..]);
+                out.extend_from_slice(&guard.buf[..guard.head]);
+            } else {
+                out.extend_from_slice(&guard.buf);
+            }
+        }
+        out.sort_by_key(|e| e.t_us);
+        out
+    }
+}
+
+impl Emitter for RingEmitter {
+    fn emit(&self, event: &Event) {
+        if self.shard_cap == 0 {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // Prefer the trace-id shard (keeps a request's events
+        // together); fall through contended shards rather than block.
+        let start = if event.trace_id != 0 {
+            event.trace_id as usize
+        } else {
+            event.t_us as usize
+        } % RING_SHARDS;
+        for i in 0..RING_SHARDS {
+            let shard = &self.shards[(start + i) % RING_SHARDS];
+            if let Ok(mut guard) = shard.try_lock() {
+                if guard.buf.len() < self.shard_cap {
+                    guard.buf.push(*event);
+                } else {
+                    let head = guard.head;
+                    guard.buf[head] = *event;
+                    guard.head = (head + 1) % self.shard_cap;
+                    // Overwrote the oldest event: that's a drop too.
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+        }
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The opt-in NDJSON file sink (`serve --log-json FILE`): one JSON
+/// object per line, flushed per event so `tail -f` works.  Takes a
+/// real lock and does real I/O — only wired up when asked for.
+#[derive(Debug)]
+struct NdjsonSink {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl Emitter for NdjsonSink {
+    fn emit(&self, event: &Event) {
+        let line = event.to_ndjson();
+        if let Ok(mut w) = self.w.lock() {
+            // I/O errors are swallowed: losing log lines must never
+            // fail a request.
+            let _ = writeln!(w, "{line}");
+            let _ = w.flush();
+        }
+    }
+}
+
+/// The fixed-bucket stage histograms and windowed counters behind
+/// `GET /metrics` and the `/stats` "stages" block.  All recording is
+/// atomic `&self`; the struct is shared via the [`Obs`] handle.
+#[derive(Debug)]
+pub struct MetricsHub {
+    /// HTTP request head+body parse time (the final successful parse
+    /// pass over the buffered bytes).
+    pub parse_us: StageHistogram,
+    /// Channel wait: request enqueue to batch-worker pickup.
+    pub queue_wait_us: StageHistogram,
+    /// Batch assembly wait: worker pickup to batch execution start.
+    pub assembly_us: StageHistogram,
+    /// Backend embed call (whole batch).
+    pub embed_us: StageHistogram,
+    /// Gram cross-product GEMM inside the embed (scratch-level hook).
+    pub gemm_us: StageHistogram,
+    /// Profile epilogue inside the embed (scratch-level hook).
+    pub profile_us: StageHistogram,
+    /// Coefficient fold inside the embed (scratch-level hook).
+    pub coeff_us: StageHistogram,
+    /// Response write: enqueue to socket-drained.
+    pub write_us: StageHistogram,
+    /// Batch occupancy: rows per flushed batch.
+    pub batch_rows: StageHistogram,
+    /// Requests completed over the trailing window (rate gauge).
+    pub requests_1m: WindowedCounter,
+}
+
+impl Default for MetricsHub {
+    fn default() -> MetricsHub {
+        MetricsHub {
+            parse_us: StageHistogram::new(US_BOUNDS),
+            queue_wait_us: StageHistogram::new(US_BOUNDS),
+            assembly_us: StageHistogram::new(US_BOUNDS),
+            embed_us: StageHistogram::new(US_BOUNDS),
+            gemm_us: StageHistogram::new(US_BOUNDS),
+            profile_us: StageHistogram::new(US_BOUNDS),
+            coeff_us: StageHistogram::new(US_BOUNDS),
+            write_us: StageHistogram::new(US_BOUNDS),
+            batch_rows: StageHistogram::new(ROWS_BOUNDS),
+            requests_1m: WindowedCounter::new(60),
+        }
+    }
+}
+
+/// The shared observability handle, one per service: trace-id source,
+/// monotonic clock, both event sinks, and the metrics hub.  Cloned as
+/// an `Arc` into the HTTP server state, the coordinator worker, and
+/// the model registry.
+#[derive(Debug)]
+pub struct Obs {
+    metrics_enabled: bool,
+    epoch: Instant,
+    next_trace: AtomicU64,
+    ring: RingEmitter,
+    sink: Option<NdjsonSink>,
+    /// The `/metrics` stage histograms (atomic recording, `&self`).
+    pub hub: MetricsHub,
+}
+
+impl Default for Obs {
+    fn default() -> Obs {
+        Obs::new(&ObsConfig::default())
+            .expect("default ObsConfig has no file sink")
+    }
+}
+
+impl Obs {
+    /// Build from the `[obs]` config section.  Fails only when the
+    /// NDJSON sink path cannot be created.
+    pub fn new(cfg: &ObsConfig) -> Result<Obs> {
+        let sink = match &cfg.log_json {
+            Some(path) => {
+                let file = File::create(path).map_err(|e| {
+                    Error::Config(format!(
+                        "obs: cannot create log-json file '{path}': {e}"
+                    ))
+                })?;
+                Some(NdjsonSink { w: Mutex::new(BufWriter::new(file)) })
+            }
+            None => None,
+        };
+        Ok(Obs {
+            metrics_enabled: cfg.metrics,
+            epoch: Instant::now(),
+            next_trace: AtomicU64::new(1),
+            ring: RingEmitter::new(cfg.ring_size),
+            sink,
+            hub: MetricsHub::default(),
+        })
+    }
+
+    /// An observability handle with storage disabled (ring size 0,
+    /// `/metrics` off).  Stage recording still works — the overhead
+    /// baseline the obs-cost test compares against.
+    pub fn disabled() -> Obs {
+        Obs::new(&ObsConfig {
+            ring_size: 0,
+            log_json: None,
+            metrics: false,
+        })
+        .expect("disabled ObsConfig has no file sink")
+    }
+
+    /// Is the `GET /metrics` endpoint enabled (`[obs] metrics`)?
+    pub fn metrics_enabled(&self) -> bool {
+        self.metrics_enabled
+    }
+
+    /// Microseconds since this handle's epoch (the timestamp domain of
+    /// every event this handle emits).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Whole seconds since the epoch (windowed-counter slot key).
+    pub fn now_s(&self) -> u64 {
+        self.epoch.elapsed().as_secs()
+    }
+
+    /// Allocate a fresh trace id (monotone, starts at 1; 0 means "no
+    /// trace" everywhere).
+    pub fn next_trace_id(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Stamp and fan `event` out to the ring and, when configured, the
+    /// NDJSON sink.
+    pub fn emit(&self, mut event: Event) {
+        event.t_us = self.now_us();
+        self.ring.emit(&event);
+        if let Some(sink) = &self.sink {
+            sink.emit(&event);
+        }
+    }
+
+    /// Buffered events, oldest first (cold path; for tests, debugging
+    /// and drains).
+    pub fn events(&self) -> Vec<Event> {
+        self.ring.snapshot()
+    }
+
+    /// Buffered events with the given name.
+    pub fn events_named(&self, name: &str) -> Vec<Event> {
+        self.events().into_iter().filter(|e| e.name == name).collect()
+    }
+
+    /// Events dropped by the ring (contention or wraparound).
+    pub fn events_dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn event_builder_is_inline_and_typed() {
+        let e = Event::new("test.event")
+            .trace(7)
+            .with("rows", 32usize)
+            .with("reason", "deadline")
+            .with("ratio", 0.5);
+        assert_eq!(e.name(), "test.event");
+        assert_eq!(e.trace_id(), 7);
+        assert_eq!(e.props().len(), 3);
+        assert_eq!(e.prop("rows"), Some(Value::U64(32)));
+        assert_eq!(e.prop("reason").unwrap().as_str(), Some("deadline"));
+        assert_eq!(e.prop("ratio"), Some(Value::F64(0.5)));
+        assert_eq!(e.prop("missing"), None);
+    }
+
+    #[test]
+    fn event_ndjson_escapes_and_round_trips() {
+        let e = Event::new("x").with("msg", "quote \" backslash \\");
+        let line = e.to_ndjson();
+        let parsed = crate::ser::parse(&line).expect("valid JSON");
+        assert_eq!(parsed.req_str("name").unwrap(), "x");
+        assert_eq!(
+            parsed.get("props").unwrap().req_str("msg").unwrap(),
+            "quote \" backslash \\"
+        );
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let obs = Obs::new(&ObsConfig {
+            ring_size: 16,
+            log_json: None,
+            metrics: true,
+        })
+        .unwrap();
+        for i in 0..100u64 {
+            obs.emit(Event::new("tick").trace(i + 1).with("i", i));
+        }
+        let events = obs.events();
+        assert!(events.len() <= 16, "ring exceeded capacity");
+        assert!(!events.is_empty());
+        // Every event beyond capacity displaced an older one.
+        assert_eq!(obs.events_dropped(), 100 - events.len() as u64);
+        // Snapshot is oldest-first.
+        for w in events.windows(2) {
+            assert!(w[0].t_us() <= w[1].t_us());
+        }
+    }
+
+    #[test]
+    fn zero_capacity_ring_drops_everything() {
+        let obs = Obs::disabled();
+        obs.emit(Event::new("tick"));
+        obs.emit(Event::new("tick"));
+        assert!(obs.events().is_empty());
+        assert_eq!(obs.events_dropped(), 2);
+        assert!(!obs.metrics_enabled());
+    }
+
+    #[test]
+    fn concurrent_emitters_never_block_or_lose_count() {
+        let obs = Arc::new(
+            Obs::new(&ObsConfig {
+                ring_size: 64,
+                log_json: None,
+                metrics: true,
+            })
+            .unwrap(),
+        );
+        let mut joins = Vec::new();
+        for t in 0..8u64 {
+            let obs = obs.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    let id = obs.next_trace_id();
+                    obs.emit(Event::new("load").trace(id).with("t", t));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // stored + dropped accounts for every emit.
+        let stored = obs.events().len() as u64;
+        assert_eq!(stored + obs.events_dropped(), 8 * 500);
+        assert!(stored <= 64);
+        // Trace ids are unique and dense.
+        assert_eq!(obs.next_trace_id(), 8 * 500 + 1);
+    }
+
+    #[test]
+    fn ndjson_sink_writes_one_line_per_event() {
+        let dir = std::env::temp_dir()
+            .join(format!("rskpca_obs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.ndjson");
+        let cfg = ObsConfig {
+            ring_size: 8,
+            log_json: Some(path.to_str().unwrap().to_string()),
+            metrics: true,
+        };
+        let obs = Obs::new(&cfg).unwrap();
+        obs.emit(Event::new("a").with("k", 1u64));
+        obs.emit(Event::new("b").trace(9));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.is_empty()).collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            crate::ser::parse(line).expect("each line is valid JSON");
+        }
+        assert!(lines[0].contains("\"name\":\"a\""));
+        assert!(lines[1].contains("\"trace_id\":9"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_log_json_path_is_a_config_error() {
+        let cfg = ObsConfig {
+            ring_size: 8,
+            log_json: Some("/definitely/not/a/dir/x.ndjson".into()),
+            metrics: true,
+        };
+        assert!(Obs::new(&cfg).is_err());
+    }
+}

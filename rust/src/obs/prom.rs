@@ -1,0 +1,621 @@
+//! Prometheus text exposition (format 0.0.4): a renderer for the
+//! `GET /metrics` endpoint and a strict parser used by the format
+//! tests and the loadgen `--metrics-poll` scraper.
+//!
+//! The renderer is append-only and deterministic: each metric family
+//! gets exactly one `# HELP`/`# TYPE` pair, histogram families render
+//! monotone cumulative `_bucket{le=...}` series closed by `le="+Inf"`,
+//! `_sum` and `_count`, and label values are escaped per the spec
+//! (`\\`, `\"`, `\n`).  The parser re-checks all of that — duplicate
+//! series, samples without a preceding `# TYPE`, non-monotone buckets,
+//! `_count` != `le="+Inf"` — so a scrape that renders wrong fails
+//! loudly in CI instead of silently in a dashboard.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+
+use crate::metrics::StageSnapshot;
+
+/// Content-Type of the text exposition format.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Render a float the way Prometheus expects: integral values without
+/// a fractional part, `+Inf` for the open bucket bound.
+fn fmt_value(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 {
+            "+Inf".into()
+        } else {
+            "-Inf".into()
+        }
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value: backslash, double quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Append-only builder for one exposition document.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+    seen: BTreeSet<&'static str>,
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    fn header(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        kind: &str,
+    ) {
+        let fresh = self.seen.insert(name);
+        debug_assert!(fresh, "metric family '{name}' rendered twice");
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    /// One unlabeled counter sample.
+    pub fn counter(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        value: f64,
+    ) {
+        self.header(name, help, "counter");
+        let _ = writeln!(self.out, "{name} {}", fmt_value(value));
+    }
+
+    /// One unlabeled gauge sample.
+    pub fn gauge(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        value: f64,
+    ) {
+        self.header(name, help, "gauge");
+        let _ = writeln!(self.out, "{name} {}", fmt_value(value));
+    }
+
+    /// A counter family with one label dimension.
+    pub fn counter_vec(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        label: &'static str,
+        samples: &[(&str, f64)],
+    ) {
+        self.header(name, help, "counter");
+        for (value, v) in samples {
+            let _ = writeln!(
+                self.out,
+                "{name}{{{label}=\"{}\"}} {}",
+                escape_label(value),
+                fmt_value(*v)
+            );
+        }
+    }
+
+    /// A full histogram family from a [`StageSnapshot`]: cumulative
+    /// `_bucket` series (closed by `le="+Inf"`), `_sum`, `_count`.
+    pub fn histogram(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        snap: &StageSnapshot,
+    ) {
+        self.header(name, help, "histogram");
+        for (i, &bound) in snap.bounds.iter().enumerate() {
+            let _ = writeln!(
+                self.out,
+                "{name}_bucket{{le=\"{}\"}} {}",
+                fmt_value(bound),
+                snap.cumulative[i]
+            );
+        }
+        let _ = writeln!(
+            self.out,
+            "{name}_bucket{{le=\"+Inf\"}} {}",
+            snap.count
+        );
+        let _ =
+            writeln!(self.out, "{name}_sum {}", fmt_value(snap.sum));
+        let _ = writeln!(self.out, "{name}_count {}", snap.count);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// One parsed sample line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParsedSample {
+    pub name: String,
+    /// Label pairs in declaration order.
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl ParsedSample {
+    /// The label value for `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A parsed (and validated) exposition document.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedMetrics {
+    pub samples: Vec<ParsedSample>,
+    /// Declared metric family types (`name` -> `counter|gauge|...`).
+    pub types: BTreeMap<String, String>,
+}
+
+impl ParsedMetrics {
+    /// The value of the unlabeled sample `name`, if present.
+    pub fn value(&self, name: &str) -> Option<f64> {
+        self.samples
+            .iter()
+            .find(|s| s.name == name && s.labels.is_empty())
+            .map(|s| s.value)
+    }
+
+    /// Samples of the family `name` (exact name match).
+    pub fn family(&self, name: &str) -> Vec<&ParsedSample> {
+        self.samples.iter().filter(|s| s.name == name).collect()
+    }
+}
+
+/// Unescape a label value; rejects invalid escapes.
+fn unescape_label(v: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(v.len());
+    let mut chars = v.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('\\') => out.push('\\'),
+            Some('"') => out.push('"'),
+            Some('n') => out.push('\n'),
+            other => {
+                return Err(format!(
+                    "invalid label escape '\\{}'",
+                    other.map(String::from).unwrap_or_default()
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Parse one `{k="v",...}` label block (input excludes the braces).
+fn parse_labels(block: &str) -> Result<Vec<(String, String)>, String> {
+    let mut labels = Vec::new();
+    let mut rest = block.trim();
+    while !rest.is_empty() {
+        let eq = rest
+            .find('=')
+            .ok_or_else(|| format!("label without '=': '{rest}'"))?;
+        let key = rest[..eq].trim().to_string();
+        if !valid_metric_name(&key) {
+            return Err(format!("invalid label name '{key}'"));
+        }
+        rest = rest[eq + 1..].trim_start();
+        if !rest.starts_with('"') {
+            return Err(format!("unquoted label value near '{rest}'"));
+        }
+        // Find the closing quote, honoring backslash escapes.
+        let bytes = rest.as_bytes();
+        let mut close = None;
+        let mut i = 1;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'\\' => i += 2,
+                b'"' => {
+                    close = Some(i);
+                    break;
+                }
+                _ => i += 1,
+            }
+        }
+        let close =
+            close.ok_or_else(|| "unterminated label value".to_string())?;
+        let raw = &rest[1..close];
+        labels.push((key, unescape_label(raw)?));
+        rest = rest[close + 1..].trim_start();
+        if let Some(stripped) = rest.strip_prefix(',') {
+            rest = stripped.trim_start();
+        } else if !rest.is_empty() {
+            return Err(format!("expected ',' between labels: '{rest}'"));
+        }
+    }
+    Ok(labels)
+}
+
+/// Strictly parse and validate a text exposition document.  Beyond
+/// syntax, enforces: samples declared by a preceding `# TYPE`;
+/// no duplicate series (same name + label set); finite sample values;
+/// and for every `histogram` family, monotone cumulative buckets
+/// closed by `le="+Inf"`, with `_count` equal to the `+Inf` bucket and
+/// a finite `_sum`.
+pub fn parse(text: &str) -> Result<ParsedMetrics, String> {
+    let mut parsed = ParsedMetrics::default();
+    let mut seen_series = BTreeSet::new();
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            let comment = comment.trim_start();
+            if let Some(rest) = comment.strip_prefix("TYPE ") {
+                let mut it = rest.splitn(2, ' ');
+                let name = it.next().unwrap_or_default().to_string();
+                let kind = it
+                    .next()
+                    .ok_or_else(|| {
+                        format!("line {ln}: TYPE without a kind")
+                    })?
+                    .trim()
+                    .to_string();
+                if !valid_metric_name(&name) {
+                    return Err(format!(
+                        "line {ln}: invalid metric name '{name}'"
+                    ));
+                }
+                if !matches!(
+                    kind.as_str(),
+                    "counter" | "gauge" | "histogram" | "summary"
+                        | "untyped"
+                ) {
+                    return Err(format!(
+                        "line {ln}: unknown metric type '{kind}'"
+                    ));
+                }
+                if parsed.types.insert(name.clone(), kind).is_some() {
+                    return Err(format!(
+                        "line {ln}: duplicate TYPE for '{name}'"
+                    ));
+                }
+            }
+            // HELP and other comments: no structural content.
+            continue;
+        }
+        // Sample line: name[{labels}] value
+        let (series, value_str) = match line.find('{') {
+            Some(open) => {
+                let close = line.rfind('}').ok_or_else(|| {
+                    format!("line {ln}: unterminated label block")
+                })?;
+                if close < open {
+                    return Err(format!(
+                        "line {ln}: malformed label block"
+                    ));
+                }
+                (
+                    (&line[..open], &line[open + 1..close]),
+                    line[close + 1..].trim(),
+                )
+            }
+            None => {
+                let sp = line.find(' ').ok_or_else(|| {
+                    format!("line {ln}: sample without a value")
+                })?;
+                ((&line[..sp], ""), line[sp + 1..].trim())
+            }
+        };
+        let (name, label_block) = series;
+        let name = name.trim().to_string();
+        if !valid_metric_name(&name) {
+            return Err(format!(
+                "line {ln}: invalid metric name '{name}'"
+            ));
+        }
+        let labels = parse_labels(label_block)
+            .map_err(|e| format!("line {ln}: {e}"))?;
+        let value: f64 = match value_str {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            v => v.parse().map_err(|_| {
+                format!("line {ln}: invalid sample value '{v}'")
+            })?,
+        };
+        if value.is_nan() {
+            return Err(format!("line {ln}: NaN sample value"));
+        }
+        // The family a sample belongs to: its own name, or the base
+        // name for histogram component suffixes.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .filter_map(|sfx| name.strip_suffix(sfx))
+            .find(|base| {
+                parsed.types.get(*base).map(String::as_str)
+                    == Some("histogram")
+            })
+            .unwrap_or(&name)
+            .to_string();
+        if !parsed.types.contains_key(&family) {
+            return Err(format!(
+                "line {ln}: sample '{name}' has no preceding # TYPE"
+            ));
+        }
+        let mut key_labels: Vec<String> = labels
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        key_labels.sort();
+        let series_key = format!("{name}|{}", key_labels.join(","));
+        if !seen_series.insert(series_key) {
+            return Err(format!(
+                "line {ln}: duplicate series '{name}' {labels:?}"
+            ));
+        }
+        parsed.samples.push(ParsedSample { name, labels, value });
+    }
+    validate_histograms(&parsed)?;
+    Ok(parsed)
+}
+
+/// Histogram-family consistency checks over a parsed document.
+fn validate_histograms(parsed: &ParsedMetrics) -> Result<(), String> {
+    for (family, kind) in &parsed.types {
+        if kind != "histogram" {
+            continue;
+        }
+        let buckets: Vec<&ParsedSample> =
+            parsed.family(&format!("{family}_bucket"));
+        if buckets.is_empty() {
+            return Err(format!(
+                "histogram '{family}' has no _bucket series"
+            ));
+        }
+        let mut last_le = f64::NEG_INFINITY;
+        let mut last_count = 0.0;
+        let mut saw_inf = false;
+        for b in &buckets {
+            let le = b.label("le").ok_or_else(|| {
+                format!("histogram '{family}': bucket without le label")
+            })?;
+            let le_v = match le {
+                "+Inf" => {
+                    saw_inf = true;
+                    f64::INFINITY
+                }
+                v => v.parse::<f64>().map_err(|_| {
+                    format!("histogram '{family}': bad le '{v}'")
+                })?,
+            };
+            if le_v <= last_le {
+                return Err(format!(
+                    "histogram '{family}': le bounds not increasing"
+                ));
+            }
+            if b.value < last_count {
+                return Err(format!(
+                    "histogram '{family}': cumulative buckets not \
+                     monotone ({} after {})",
+                    b.value, last_count
+                ));
+            }
+            last_le = le_v;
+            last_count = b.value;
+        }
+        if !saw_inf {
+            return Err(format!(
+                "histogram '{family}': missing le=\"+Inf\" bucket"
+            ));
+        }
+        let count = parsed
+            .value(&format!("{family}_count"))
+            .ok_or_else(|| {
+                format!("histogram '{family}': missing _count")
+            })?;
+        let sum =
+            parsed.value(&format!("{family}_sum")).ok_or_else(|| {
+                format!("histogram '{family}': missing _sum")
+            })?;
+        if count != last_count {
+            return Err(format!(
+                "histogram '{family}': _count {count} != +Inf bucket \
+                 {last_count}"
+            ));
+        }
+        if !sum.is_finite() {
+            return Err(format!(
+                "histogram '{family}': non-finite _sum"
+            ));
+        }
+        if count == 0.0 && sum != 0.0 {
+            return Err(format!(
+                "histogram '{family}': empty but _sum = {sum}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{StageHistogram, US_BOUNDS};
+
+    fn render_sample_doc() -> String {
+        let h = StageHistogram::new(US_BOUNDS);
+        h.record(75.0);
+        h.record(300.0);
+        h.record(1e9);
+        let mut p = PromText::new();
+        p.counter(
+            "rskpca_requests_total",
+            "Requests completed.",
+            42.0,
+        );
+        p.gauge("rskpca_conns_open", "Open connections.", 3.0);
+        p.counter_vec(
+            "rskpca_route_hits_total",
+            "Per-route hits.",
+            "route",
+            &[("GET /stats", 5.0), ("POST /embed", 37.0)],
+        );
+        p.histogram(
+            "rskpca_queue_wait_us",
+            "Queue wait (us).",
+            &h.snapshot(),
+        );
+        p.finish()
+    }
+
+    #[test]
+    fn rendered_document_passes_the_strict_parser() {
+        let doc = render_sample_doc();
+        let parsed = parse(&doc).expect("renderer output must parse");
+        assert_eq!(parsed.value("rskpca_requests_total"), Some(42.0));
+        assert_eq!(parsed.value("rskpca_conns_open"), Some(3.0));
+        assert_eq!(
+            parsed.types.get("rskpca_queue_wait_us").map(String::as_str),
+            Some("histogram")
+        );
+        let hits = parsed.family("rskpca_route_hits_total");
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[1].label("route"), Some("POST /embed"));
+        // Bucket count: every bound plus +Inf.
+        let buckets = parsed.family("rskpca_queue_wait_us_bucket");
+        assert_eq!(buckets.len(), US_BOUNDS.len() + 1);
+        assert_eq!(
+            parsed.value("rskpca_queue_wait_us_count"),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn label_escaping_round_trips() {
+        let mut p = PromText::new();
+        p.counter_vec(
+            "weird_total",
+            "Labels with escapes.",
+            "route",
+            &[("a\"b\\c\nd", 1.0)],
+        );
+        let doc = p.finish();
+        assert!(doc.contains("a\\\"b\\\\c\\nd"));
+        let parsed = parse(&doc).unwrap();
+        assert_eq!(
+            parsed.family("weird_total")[0].label("route"),
+            Some("a\"b\\c\nd")
+        );
+    }
+
+    #[test]
+    fn parser_rejects_duplicate_series() {
+        let doc = "# TYPE x counter\nx 1\nx 2\n";
+        let err = parse(doc).unwrap_err();
+        assert!(err.contains("duplicate series"), "{err}");
+        let doc = "# TYPE x counter\nx{a=\"1\"} 1\nx{a=\"1\"} 2\n";
+        assert!(parse(doc).is_err());
+        // Same name, different labels: fine.
+        let doc = "# TYPE x counter\nx{a=\"1\"} 1\nx{a=\"2\"} 2\n";
+        assert!(parse(doc).is_ok());
+    }
+
+    #[test]
+    fn parser_rejects_untyped_samples() {
+        let err = parse("lonely 3\n").unwrap_err();
+        assert!(err.contains("no preceding # TYPE"), "{err}");
+    }
+
+    #[test]
+    fn parser_rejects_non_monotone_histograms() {
+        let doc = "\
+# TYPE h histogram
+h_bucket{le=\"1\"} 5
+h_bucket{le=\"2\"} 3
+h_bucket{le=\"+Inf\"} 5
+h_sum 9
+h_count 5
+";
+        let err = parse(doc).unwrap_err();
+        assert!(err.contains("not monotone"), "{err}");
+    }
+
+    #[test]
+    fn parser_rejects_count_inf_bucket_mismatch() {
+        let doc = "\
+# TYPE h histogram
+h_bucket{le=\"1\"} 2
+h_bucket{le=\"+Inf\"} 5
+h_sum 9
+h_count 4
+";
+        let err = parse(doc).unwrap_err();
+        assert!(err.contains("_count"), "{err}");
+    }
+
+    #[test]
+    fn parser_rejects_histogram_without_inf_bucket() {
+        let doc = "\
+# TYPE h histogram
+h_bucket{le=\"1\"} 2
+h_sum 2
+h_count 2
+";
+        let err = parse(doc).unwrap_err();
+        assert!(err.contains("+Inf"), "{err}");
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse("# TYPE x counter\nx{a=1} 2\n").is_err());
+        assert!(parse("# TYPE x counter\nx{a=\"1\" 2\n").is_err());
+        assert!(parse("# TYPE x counter\nx nope\n").is_err());
+        assert!(parse("# TYPE x counter\nx NaN\n").is_err());
+        assert!(parse("# TYPE 9bad counter\n").is_err());
+        assert!(parse("# TYPE x wat\nx 1\n").is_err());
+        assert!(
+            parse("# TYPE x counter\n# TYPE x counter\nx 1\n").is_err()
+        );
+    }
+
+    #[test]
+    fn empty_histogram_renders_and_validates() {
+        let h = StageHistogram::new(US_BOUNDS);
+        let mut p = PromText::new();
+        p.histogram("empty_us", "Nothing yet.", &h.snapshot());
+        let parsed = parse(&p.finish()).unwrap();
+        assert_eq!(parsed.value("empty_us_count"), Some(0.0));
+        assert_eq!(parsed.value("empty_us_sum"), Some(0.0));
+    }
+}

@@ -82,6 +82,15 @@ pub trait GramBackend {
 
     /// Backend name for logs/metrics.
     fn name(&self) -> &'static str;
+
+    /// Per-stage wall times (GEMM / kernel profile / coefficient GEMM)
+    /// of the **most recent** `embed`/`embed_model` call, when the
+    /// backend can attribute them.  The default reports `None`; the
+    /// native backend reads its scratch instrumentation.  Observability
+    /// only — callers must not branch on it for correctness.
+    fn last_stage_times(&self) -> Option<crate::kernel::EmbedStageTimes> {
+        None
+    }
 }
 
 /// Pure-rust backend.  Owns a reusable [`crate::kernel::Scratch`]
@@ -98,6 +107,9 @@ pub struct NativeBackend {
     /// widening buffers) — only grows when an f32-published model is
     /// actually served, so f64-only deployments pay nothing.
     scratch_f32: crate::kernel::ScratchF32,
+    /// Which scratch the last embed ran through, so
+    /// [`GramBackend::last_stage_times`] reads the right instrumentation.
+    last_embed_f32: bool,
 }
 
 impl NativeBackend {
@@ -124,6 +136,7 @@ impl GramBackend for NativeBackend {
         coeffs: &Matrix,
         kernel: &Kernel,
     ) -> Result<Matrix> {
+        self.last_embed_f32 = false;
         kernel.embed_rows_with(&mut self.scratch, x, centers, coeffs)
     }
 
@@ -138,8 +151,10 @@ impl GramBackend for NativeBackend {
         model: &EmbeddingModel,
     ) -> Result<Matrix> {
         if model.quant.is_some() {
+            self.last_embed_f32 = true;
             Ok(model.transform_batch_f32_with(&mut self.scratch_f32, x))
         } else {
+            self.last_embed_f32 = false;
             model
                 .kernel
                 .embed_rows_with(
@@ -153,6 +168,14 @@ impl GramBackend for NativeBackend {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn last_stage_times(&self) -> Option<crate::kernel::EmbedStageTimes> {
+        if self.last_embed_f32 {
+            Some(self.scratch_f32.stage_times())
+        } else {
+            Some(self.scratch.stage_times())
+        }
     }
 }
 
@@ -262,5 +285,21 @@ mod tests {
         let dir = std::path::Path::new("artifacts");
         assert!(backend_from_name("native", dir).is_ok());
         assert!(backend_from_name("quantum", dir).is_err());
+    }
+
+    #[test]
+    fn native_backend_reports_stage_times_for_both_precisions() {
+        let ds = gaussian_mixture_2d(60, 2, 0.5, 4);
+        let mut model =
+            crate::kpca::fit_kpca(&ds.x, &Kernel::gaussian(1.0), 3)
+                .unwrap();
+        let mut b = NativeBackend::new();
+        b.embed_model(&ds.x, &model).unwrap();
+        let t = b.last_stage_times().expect("native attributes stages");
+        assert!(t.gemm_ns > 0 && t.coeff_ns > 0, "f64 stages: {t:?}");
+        model.quantize_for_serving().unwrap();
+        b.embed_model(&ds.x, &model).unwrap();
+        let t32 = b.last_stage_times().expect("f32 path too");
+        assert!(t32.gemm_ns > 0, "f32 stages: {t32:?}");
     }
 }

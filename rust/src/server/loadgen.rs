@@ -23,12 +23,15 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::event::{poll_fds, stream_fd, PollFd, POLLIN, POLLOUT};
 use super::http::{ClientConn, ResponseReader};
 use crate::error::{Error, Result};
 use crate::metrics::Histogram;
+use crate::obs::prom;
 use crate::prng::Pcg64;
 use crate::ser::Json;
 
@@ -62,6 +65,10 @@ pub struct LoadgenConfig {
     /// Open-loop offered rate in requests/s across all connections;
     /// 0 = closed loop.
     pub rate: f64,
+    /// Scrape `GET /metrics` every N seconds while the run is in
+    /// flight (strictly parsed; samples land in the report);
+    /// 0 = no polling.
+    pub metrics_poll_s: u64,
 }
 
 impl Default for LoadgenConfig {
@@ -75,7 +82,37 @@ impl Default for LoadgenConfig {
             seed: 0x10AD,
             warmup_ms: 5000,
             rate: 0.0,
+            metrics_poll_s: 0,
         }
+    }
+}
+
+/// One mid-run `GET /metrics` scrape captured by `--metrics-poll`.
+/// Each scrape is validated by the strict [`prom::parse`] checker, so
+/// a malformed exposition fails the run's report instead of passing
+/// silently.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSample {
+    /// Seconds since the load run started.
+    pub t_s: f64,
+    /// `rskpca_requests_total` at scrape time.
+    pub requests_total: f64,
+    /// `rskpca_http_conns_open` at scrape time.
+    pub conns_open: f64,
+    /// `rskpca_requests_1m` at scrape time.
+    pub requests_1m: f64,
+    /// Parsed sample lines in the document (exposition-size signal).
+    pub series: usize,
+}
+
+impl MetricsSample {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .with("t_s", Json::Num(self.t_s))
+            .with("requests_total", Json::Num(self.requests_total))
+            .with("conns_open", Json::Num(self.conns_open))
+            .with("requests_1m", Json::Num(self.requests_1m))
+            .with("series", Json::Num(self.series as f64))
     }
 }
 
@@ -95,6 +132,11 @@ pub struct LoadgenReport {
     pub wall_s: f64,
     /// End-to-end request latency of successful requests, microseconds.
     pub latency_us: Histogram,
+    /// Mid-run `GET /metrics` scrapes (empty unless `--metrics-poll`).
+    pub metrics_samples: Vec<MetricsSample>,
+    /// Scrapes that failed (connect error, non-200, or a document the
+    /// strict parser rejected).
+    pub metrics_errors: u64,
 }
 
 impl LoadgenReport {
@@ -137,6 +179,19 @@ impl LoadgenReport {
                 Json::Num(self.latency_us.percentile(95.0)),
             )
             .with("latency_p99_us", Json::Num(self.p99_us()))
+            .with(
+                "metrics_samples",
+                Json::Arr(
+                    self.metrics_samples
+                        .iter()
+                        .map(MetricsSample::to_json)
+                        .collect(),
+                ),
+            )
+            .with(
+                "metrics_errors",
+                Json::Num(self.metrics_errors as f64),
+            )
     }
 
     /// Multi-line human-readable report.
@@ -305,6 +360,17 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         .clamp(1, MAX_SHARDS);
     let per_shard = cfg.clients.div_ceil(shards);
     let t0 = Instant::now();
+    let stop = Arc::new(AtomicBool::new(false));
+    let poller = if cfg.metrics_poll_s > 0 {
+        let target = target.clone();
+        let period = Duration::from_secs(cfg.metrics_poll_s);
+        let stop = stop.clone();
+        Some(std::thread::spawn(move || {
+            metrics_poll_loop(&target, period, t0, &stop)
+        }))
+    } else {
+        None
+    };
     let mut threads = Vec::with_capacity(shards);
     for shard in 0..shards {
         let lo = shard * per_shard;
@@ -333,8 +399,71 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         report.rows_ok += part.rows_ok;
         report.latency_us.merge(&part.latency_us);
     }
+    stop.store(true, Ordering::Relaxed);
+    if let Some(p) = poller {
+        let (samples, errors) = p.join().map_err(|_| {
+            Error::Service("metrics poller panicked".into())
+        })?;
+        report.metrics_samples = samples;
+        report.metrics_errors = errors;
+    }
     report.wall_s = t0.elapsed().as_secs_f64();
     Ok(report)
+}
+
+/// Scrape `GET /metrics` every `period` until `stop`; always takes one
+/// final scrape on the way out so even a short run yields a sample.
+/// Returns the captured samples and the failed-scrape count.
+fn metrics_poll_loop(
+    target: &str,
+    period: Duration,
+    t0: Instant,
+    stop: &AtomicBool,
+) -> (Vec<MetricsSample>, u64) {
+    let mut samples = Vec::new();
+    let mut errors = 0u64;
+    let mut next = Instant::now();
+    loop {
+        let stopping = stop.load(Ordering::Relaxed);
+        if stopping || Instant::now() >= next {
+            match scrape_metrics(target, t0) {
+                Ok(s) => samples.push(s),
+                Err(_) => errors += 1,
+            }
+            next += period;
+        }
+        if stopping {
+            return (samples, errors);
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// One strict scrape: fetch, require 200, run the full-format parser,
+/// pull out the headline series.
+fn scrape_metrics(
+    target: &str,
+    t0: Instant,
+) -> Result<MetricsSample> {
+    let mut conn = ClientConn::connect(target, CONNECT_TIMEOUT)?;
+    let resp = conn.request("GET", "/metrics", b"")?;
+    if resp.status != 200 {
+        return Err(Error::Service(format!(
+            "GET /metrics answered {}",
+            resp.status
+        )));
+    }
+    let text = std::str::from_utf8(&resp.body)
+        .map_err(|_| Error::Parse("non-utf8 /metrics body".into()))?;
+    let parsed = prom::parse(text).map_err(Error::Parse)?;
+    let value = |name: &str| parsed.value(name).unwrap_or(0.0);
+    Ok(MetricsSample {
+        t_s: t0.elapsed().as_secs_f64(),
+        requests_total: value("rskpca_requests_total"),
+        conns_open: value("rskpca_http_conns_open"),
+        requests_1m: value("rskpca_requests_1m"),
+        series: parsed.samples.len(),
+    })
 }
 
 /// Drive one shard's connections to completion.

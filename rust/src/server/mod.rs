@@ -88,6 +88,7 @@ use crate::config::ServerConfig;
 use crate::coordinator::ServiceHandle;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
+use crate::obs::{Event, Obs};
 
 use self::event::{
     listener_fd, poll_fds, stream_fd, PollFd, POLLIN, POLLOUT,
@@ -134,6 +135,11 @@ struct ServerState {
     /// Live connections across all event threads (the `max_conns`
     /// admission gate).
     conns_open: AtomicU64,
+    /// Connection-id source for `http.conn.*` events.
+    next_conn: AtomicU64,
+    /// Observability handle shared with the coordinator (taken off the
+    /// [`ServiceHandle`] so all layers record into one hub/ring).
+    obs: Arc<Obs>,
     /// Lossy tap feeding request rows to a background refresher
     /// (`serve --refresh N`); `None` when no refresher runs.
     refresh_feed: Option<Mutex<SyncSender<Matrix>>>,
@@ -172,6 +178,11 @@ struct Conn {
     phase: ConnPhase,
     write_buf: Vec<u8>,
     write_at: usize,
+    /// Server-wide connection id, carried by `http.conn.*` events.
+    conn_id: u64,
+    /// Start of the in-flight response write (enqueue time); taken on
+    /// full drain to record the `write_us` stage histogram.
+    resp_t0: Option<Instant>,
     /// Last *progress*: accept, a complete request parsed, or response
     /// bytes accepted by the socket.  Deliberately NOT refreshed by
     /// partial request reads — that is what bounds a slow-loris drip
@@ -191,13 +202,15 @@ struct Conn {
 }
 
 impl Conn {
-    fn new(stream: TcpStream) -> Conn {
+    fn new(stream: TcpStream, conn_id: u64) -> Conn {
         Conn {
             stream,
             reader: RequestReader::new(),
             phase: ConnPhase::Reading,
             write_buf: Vec::new(),
             write_at: 0,
+            conn_id,
+            resp_t0: None,
             last_progress: Instant::now(),
             close_after_write: false,
             discard_input: false,
@@ -231,7 +244,8 @@ impl Conn {
         )
     }
 
-    /// Queue a response for writing.
+    /// Queue a response for writing; stamps the write-stage clock the
+    /// `write_us` histogram is fed from at full drain.
     fn enqueue_response(&mut self, resp: &Response, keep_alive: bool) {
         if self.write_at > 0 {
             self.write_buf.drain(..self.write_at);
@@ -239,6 +253,7 @@ impl Conn {
         }
         self.write_buf
             .extend_from_slice(&resp.to_bytes(keep_alive));
+        self.resp_t0 = Some(Instant::now());
         if !keep_alive {
             self.close_after_write = true;
         }
@@ -287,6 +302,7 @@ impl HttpServer {
         })?;
         let listener = Arc::new(listener);
         let shutdown = Arc::new(AtomicBool::new(false));
+        let obs = handle.obs();
         let state = Arc::new(ServerState {
             handle,
             cfg: cfg.clone(),
@@ -296,6 +312,8 @@ impl HttpServer {
             conns_accepted: AtomicU64::new(0),
             conns_rejected: AtomicU64::new(0),
             conns_open: AtomicU64::new(0),
+            next_conn: AtomicU64::new(1),
+            obs,
             refresh_feed: feed.map(Mutex::new),
         });
         let mut threads = Vec::with_capacity(cfg.workers);
@@ -399,7 +417,7 @@ fn event_loop(listener: &Arc<TcpListener>, state: &Arc<ServerState>) {
             }
             if f.writable()
                 && conns[i].wants_write()
-                && !flush_conn(&mut conns[i])
+                && !flush_conn(&mut conns[i], state)
             {
                 dead[i] = true;
                 continue;
@@ -481,6 +499,16 @@ fn event_loop(listener: &Arc<TcpListener>, state: &Arc<ServerState>) {
             if !c.awaiting_service()
                 && now.duration_since(c.last_progress) > keep_alive
             {
+                state.obs.emit(
+                    Event::new("http.conn.reaped")
+                        .with("conn", c.conn_id)
+                        .with(
+                            "idle_ms",
+                            now.duration_since(c.last_progress)
+                                .as_millis()
+                                as u64,
+                        ),
+                );
                 dead[i] = true;
             }
         }
@@ -530,19 +558,31 @@ fn accept_burst(
                 let _ = stream.set_nodelay(true);
                 let open = state.conns_open.load(Ordering::Relaxed);
                 let cap = state.cfg.max_conns as u64;
+                let conn_id =
+                    state.next_conn.fetch_add(1, Ordering::Relaxed);
                 if open >= cap + OVER_CAP_SLACK {
                     // Flood regime: an RST beats holding any state.
                     state
                         .conns_rejected
                         .fetch_add(1, Ordering::Relaxed);
+                    state.obs.emit(
+                        Event::new("http.conn.overcap")
+                            .with("conn", conn_id)
+                            .with("action", "drop"),
+                    );
                     continue;
                 }
                 state.conns_open.fetch_add(1, Ordering::Relaxed);
-                let mut c = Conn::new(stream);
+                let mut c = Conn::new(stream, conn_id);
                 if open >= cap {
                     state
                         .conns_rejected
                         .fetch_add(1, Ordering::Relaxed);
+                    state.obs.emit(
+                        Event::new("http.conn.overcap")
+                            .with("conn", conn_id)
+                            .with("action", "503"),
+                    );
                     let retry_s = ((state.cfg.retry_after_ms + 999)
                         / 1000)
                         .max(1);
@@ -555,6 +595,11 @@ fn accept_burst(
                     // its input so the 503 survives the close.
                     c.discard_input = true;
                     c.enqueue_response(&resp, false);
+                } else {
+                    state.obs.emit(
+                        Event::new("http.conn.open")
+                            .with("conn", conn_id),
+                    );
                 }
                 conns.push(c);
             }
@@ -586,6 +631,10 @@ fn read_conn(c: &mut Conn, state: &Arc<ServerState>) -> bool {
         match c.stream.read(&mut tmp) {
             Ok(0) => {
                 c.read_closed = true;
+                state.obs.emit(
+                    Event::new("http.conn.eof")
+                        .with("conn", c.conn_id),
+                );
                 // A half-closed peer may still be reading its
                 // response; the reap sweep drops the connection once
                 // nothing is in flight.
@@ -603,14 +652,16 @@ fn read_conn(c: &mut Conn, state: &Arc<ServerState>) -> bool {
                     continue;
                 }
                 c.reader.push_bytes(&tmp[..n]);
+                let t0 = Instant::now();
                 match c.reader.try_next(state.cfg.max_body_bytes) {
                     Ok(Some(req)) => {
+                        record_parse(state, t0);
                         handle_request(c, state, &req);
                         return true;
                     }
                     Ok(None) => {} // need more bytes
                     Err(HttpError::Bad { status, msg }) => {
-                        protocol_error(c, status, &msg);
+                        protocol_error(c, state, status, &msg);
                         return true;
                     }
                     // try_next never produces Closed/Io, but the
@@ -633,6 +684,18 @@ fn read_conn(c: &mut Conn, state: &Arc<ServerState>) -> bool {
     }
 }
 
+/// Record the cost of a successful parse into the `parse_us` stage
+/// histogram (no-op when metrics are disabled).
+fn record_parse(state: &Arc<ServerState>, t0: Instant) {
+    if state.obs.metrics_enabled() {
+        state
+            .obs
+            .hub
+            .parse_us
+            .record(t0.elapsed().as_secs_f64() * 1e6);
+    }
+}
+
 /// Route one parsed request and transition the connection.
 fn handle_request(
     c: &mut Conn,
@@ -642,10 +705,11 @@ fn handle_request(
     c.last_progress = Instant::now();
     let keep = req.keep_alive()
         && !state.shutdown.load(Ordering::SeqCst);
-    match routes::dispatch(state, req) {
+    let trace_id = state.obs.next_trace_id();
+    match routes::dispatch(state, req, trace_id) {
         Handled::Done(resp) => {
             c.enqueue_response(&resp, keep);
-            let _ = flush_conn(c);
+            let _ = flush_conn(c, state);
         }
         Handled::Pending(p) => {
             c.phase = ConnPhase::AwaitingReply(p, keep);
@@ -668,14 +732,16 @@ fn advance_buffered(c: &mut Conn, state: &Arc<ServerState>) -> bool {
     {
         return true;
     }
+    let t0 = Instant::now();
     match c.reader.try_next(state.cfg.max_body_bytes) {
         Ok(Some(req)) => {
+            record_parse(state, t0);
             handle_request(c, state, &req);
             true
         }
         Ok(None) => true, // incomplete; wait for more bytes
         Err(HttpError::Bad { status, msg }) => {
-            protocol_error(c, status, &msg);
+            protocol_error(c, state, status, &msg);
             true
         }
         Err(_) => false,
@@ -684,11 +750,16 @@ fn advance_buffered(c: &mut Conn, state: &Arc<ServerState>) -> bool {
 
 /// Queue a final error response and switch to drain-then-close: the
 /// byte stream can no longer be trusted to be framed.
-fn protocol_error(c: &mut Conn, status: u16, msg: &str) {
+fn protocol_error(
+    c: &mut Conn,
+    state: &Arc<ServerState>,
+    status: u16,
+    msg: &str,
+) {
     let resp = Response::error(status, msg);
     c.discard_input = true;
     c.enqueue_response(&resp, false);
-    let _ = flush_conn(c);
+    let _ = flush_conn(c, state);
 }
 
 /// Advance a connection waiting on the coordinator.  Returns `false`
@@ -700,7 +771,7 @@ fn service_sweep(c: &mut Conn, state: &Arc<ServerState>) -> bool {
                 Some(resp) => {
                     c.last_progress = Instant::now();
                     c.enqueue_response(&resp, keep);
-                    flush_conn(c)
+                    flush_conn(c, state)
                 }
                 None => {
                     c.phase = ConnPhase::AwaitingReply(p, keep);
@@ -713,7 +784,7 @@ fn service_sweep(c: &mut Conn, state: &Arc<ServerState>) -> bool {
                 Handled::Done(resp) => {
                     c.last_progress = Instant::now();
                     c.enqueue_response(&resp, keep);
-                    flush_conn(c)
+                    flush_conn(c, state)
                 }
                 Handled::Pending(p) => {
                     c.phase = ConnPhase::AwaitingReply(p, keep);
@@ -733,8 +804,9 @@ fn service_sweep(c: &mut Conn, state: &Arc<ServerState>) -> bool {
 /// `false` when the connection is dead.  On full drain of a closing
 /// connection: clean closes die immediately; `discard_input` closes
 /// (protocol errors, over-cap 503s) half-close and linger briefly so
-/// unread request bytes can't RST the response away.
-fn flush_conn(c: &mut Conn) -> bool {
+/// unread request bytes can't RST the response away.  Full drain also
+/// closes out the `write_us` stage clock stamped at enqueue time.
+fn flush_conn(c: &mut Conn, state: &Arc<ServerState>) -> bool {
     while c.write_at < c.write_buf.len() {
         match c.stream.write(&c.write_buf[c.write_at..]) {
             Ok(0) => return false,
@@ -758,6 +830,15 @@ fn flush_conn(c: &mut Conn) -> bool {
     if !c.write_buf.is_empty() {
         c.write_buf = Vec::new();
         c.write_at = 0;
+        if let Some(t0) = c.resp_t0.take() {
+            if state.obs.metrics_enabled() {
+                state
+                    .obs
+                    .hub
+                    .write_us
+                    .record(t0.elapsed().as_secs_f64() * 1e6);
+            }
+        }
     }
     if c.close_after_write && c.discard_input && c.drain_until.is_none()
     {

@@ -5,6 +5,7 @@
 //! |--------------------|------------------------------------------------|
 //! | `POST /embed`      | rows in, embeddings out (batched, admission-controlled) |
 //! | `GET /stats`       | service snapshot + per-route latency histograms |
+//! | `GET /metrics`     | Prometheus text exposition (format 0.0.4)      |
 //! | `GET /healthz`     | liveness                                       |
 //! | `GET /models`      | registry listing (names, versions, shapes)     |
 //! | `POST /models/swap`| publish a model into the registry (hot swap)   |
@@ -12,17 +13,24 @@
 //! Error mapping: invalid JSON / shapes → 400, gated path-swap → 403,
 //! unknown route → 404, wrong method → 405, swap dim conflict → 409,
 //! queue saturation → 429 + `Retry-After`, backend failure → 500.
+//!
+//! Every completed request also leaves an `http.request` event
+//! (trace id, route, status, latency) in the observability ring.
 
 use std::path::Path;
 use std::sync::mpsc;
 use std::time::Instant;
 
 use super::http::{Request, Response};
+use super::stats::ROUTES;
 use super::ServerState;
 use crate::config::QueuePolicy;
 use crate::error::Error;
 use crate::kpca::EmbeddingModel;
 use crate::linalg::Matrix;
+use crate::metrics::StageSnapshot;
+use crate::obs::prom::{self, PromText};
+use crate::obs::Event;
 use crate::ser::Json;
 
 /// An embed request that has been admitted to the coordinator queue;
@@ -34,6 +42,9 @@ pub(super) struct PendingEmbed {
     rx: mpsc::Receiver<crate::error::Result<Matrix>>,
     version_before: u64,
     t_start: Instant,
+    /// Trace id minted at accept time; ties the `http.request` event
+    /// to the coordinator's `span.embed` for the same request.
+    trace_id: u64,
 }
 
 /// An embed request refused by a saturated queue under
@@ -44,6 +55,7 @@ pub(super) struct BlockedEmbed {
     rows: Matrix,
     version_before: u64,
     t_start: Instant,
+    trace_id: u64,
 }
 
 /// The three ways a request leaves the router.
@@ -60,17 +72,19 @@ pub(super) enum Handled {
 /// Dispatch one request.  Non-embed routes are synchronous and cheap
 /// (registry/stat reads), so they complete inline — only `POST /embed`
 /// can return `Pending`/`Blocked`.
-pub(super) fn dispatch(state: &ServerState, req: &Request) -> Handled {
+pub(super) fn dispatch(
+    state: &ServerState,
+    req: &Request,
+    trace_id: u64,
+) -> Handled {
     let t = Instant::now();
     if req.method == "POST" && req.path() == "/embed" {
-        return embed_submit(state, req, t);
+        return embed_submit(state, req, t, trace_id);
     }
     let (label, resp) = route(state, req);
-    state.routes.record(
-        label,
-        t.elapsed().as_secs_f64() * 1e6,
-        resp.status >= 400,
-    );
+    let us = t.elapsed().as_secs_f64() * 1e6;
+    state.routes.record(label, us, resp.status >= 400);
+    emit_request(state, trace_id, label, resp.status, us);
     Handled::Done(resp)
 }
 
@@ -81,17 +95,36 @@ fn route(
     match (req.method.as_str(), req.path()) {
         ("GET", "/healthz") => ("GET /healthz", healthz(state)),
         ("GET", "/stats") => ("GET /stats", stats(state)),
+        ("GET", "/metrics") => ("GET /metrics", metrics(state)),
         ("GET", "/models") => ("GET /models", models(state)),
         ("POST", "/models/swap") => {
             ("POST /models/swap", swap(state, req))
         }
-        (_, "/healthz" | "/stats" | "/models" | "/models/swap"
-            | "/embed") => (
+        (_, "/healthz" | "/stats" | "/metrics" | "/models"
+            | "/models/swap" | "/embed") => (
             "other",
             Response::error(405, "method not allowed for this route"),
         ),
         _ => ("other", Response::error(404, "no such route")),
     }
+}
+
+/// Leave the per-request `http.request` event in the ring: the span
+/// root every stage event shares a trace id with.
+fn emit_request(
+    state: &ServerState,
+    trace_id: u64,
+    route: &'static str,
+    status: u16,
+    us: f64,
+) {
+    state.obs.emit(
+        Event::new("http.request")
+            .trace(trace_id)
+            .with("route", route)
+            .with("status", u64::from(status))
+            .with("us", us),
+    );
 }
 
 fn healthz(state: &ServerState) -> Response {
@@ -146,17 +179,211 @@ fn stats(state: &ServerState) -> Response {
             Json::Num(state.conns_rejected() as f64),
         )
         .with("conns_open", Json::Num(state.conns_open() as f64));
+    let hub = &state.obs.hub;
+    let mut stages = Json::obj();
+    for (name, snap) in [
+        ("parse_us", hub.parse_us.snapshot()),
+        ("queue_wait_us", hub.queue_wait_us.snapshot()),
+        ("assembly_us", hub.assembly_us.snapshot()),
+        ("embed_us", hub.embed_us.snapshot()),
+        ("gemm_us", hub.gemm_us.snapshot()),
+        ("profile_us", hub.profile_us.snapshot()),
+        ("coeff_us", hub.coeff_us.snapshot()),
+        ("write_us", hub.write_us.snapshot()),
+    ] {
+        stages = stages.with(name, stage_json(&snap));
+    }
+    let occupancy = hub.batch_rows.snapshot();
+    let obs = Json::obj()
+        .with(
+            "events_dropped",
+            Json::Num(state.obs.events_dropped() as f64),
+        )
+        .with(
+            "requests_1m",
+            Json::Num(
+                hub.requests_1m.sum(state.obs.now_s()) as f64,
+            ),
+        );
     Response::json(
         200,
         &Json::obj()
             .with("service", service)
             .with("routes", state.routes.to_json())
             .with("http", http)
+            .with("stages", stages)
+            .with(
+                "batch_occupancy",
+                Json::obj()
+                    .with("batches", Json::Num(occupancy.count as f64))
+                    .with("mean_rows", Json::Num(occupancy.mean()))
+                    .with(
+                        "p99_rows",
+                        Json::Num(occupancy.quantile(99.0)),
+                    ),
+            )
+            .with("obs", obs)
             .with(
                 "uptime_s",
                 Json::Num(state.started.elapsed().as_secs_f64()),
             ),
     )
+}
+
+/// Compact JSON summary of one stage histogram snapshot.
+fn stage_json(snap: &StageSnapshot) -> Json {
+    Json::obj()
+        .with("count", Json::Num(snap.count as f64))
+        .with("mean", Json::Num(snap.mean()))
+        .with("p50", Json::Num(snap.quantile(50.0)))
+        .with("p99", Json::Num(snap.quantile(99.0)))
+}
+
+/// Render the full Prometheus exposition document.  Counters come from
+/// the coordinator snapshot and the server's atomics; histograms from
+/// the lock-free stage hub — the handler only reads, so a scrape never
+/// blocks the request path.
+fn metrics(state: &ServerState) -> Response {
+    if !state.obs.metrics_enabled() {
+        return Response::error(
+            404,
+            "metrics disabled ([obs] metrics = false)",
+        );
+    }
+    let s = state.handle.stats();
+    let hub = &state.obs.hub;
+    let mut p = PromText::new();
+    p.counter(
+        "rskpca_requests_total",
+        "Embed requests completed by the batch worker.",
+        s.requests as f64,
+    );
+    p.counter(
+        "rskpca_rejected_total",
+        "Embed requests rejected by queue admission control.",
+        s.rejected as f64,
+    );
+    p.counter(
+        "rskpca_rows_total",
+        "Embedding rows computed.",
+        s.rows as f64,
+    );
+    p.counter(
+        "rskpca_batches_total",
+        "Batches flushed by the size-OR-deadline batcher.",
+        s.batches as f64,
+    );
+    p.counter(
+        "rskpca_model_swaps_total",
+        "Model hot swaps observed by the batch worker.",
+        s.model_swaps as f64,
+    );
+    p.gauge(
+        "rskpca_model_version",
+        "Version of the currently served model.",
+        s.model_version as f64,
+    );
+    p.counter(
+        "rskpca_http_conns_accepted_total",
+        "TCP connections accepted.",
+        state.conns_accepted() as f64,
+    );
+    p.counter(
+        "rskpca_http_conns_rejected_total",
+        "Connections refused over the max_conns cap.",
+        state.conns_rejected() as f64,
+    );
+    p.gauge(
+        "rskpca_http_conns_open",
+        "Currently open connections.",
+        state.conns_open() as f64,
+    );
+    p.gauge(
+        "rskpca_requests_1m",
+        "Embed requests completed over the trailing minute.",
+        hub.requests_1m.sum(state.obs.now_s()) as f64,
+    );
+    p.gauge(
+        "rskpca_uptime_seconds",
+        "Seconds since the server started.",
+        state.started.elapsed().as_secs_f64(),
+    );
+    p.counter(
+        "rskpca_obs_events_dropped_total",
+        "Observability events dropped by the bounded ring.",
+        state.obs.events_dropped() as f64,
+    );
+    let hits: Vec<(&str, f64)> = ROUTES
+        .iter()
+        .map(|r| (*r, state.routes.hits(r) as f64))
+        .collect();
+    p.counter_vec(
+        "rskpca_route_hits_total",
+        "HTTP requests handled, per route.",
+        "route",
+        &hits,
+    );
+    let errors: Vec<(&str, f64)> = ROUTES
+        .iter()
+        .map(|r| (*r, state.routes.errors(r) as f64))
+        .collect();
+    p.counter_vec(
+        "rskpca_route_errors_total",
+        "HTTP error responses (status >= 400), per route.",
+        "route",
+        &errors,
+    );
+    p.histogram(
+        "rskpca_parse_us",
+        "HTTP request parse time (us).",
+        &hub.parse_us.snapshot(),
+    );
+    p.histogram(
+        "rskpca_queue_wait_us",
+        "Queue wait: enqueue to worker pickup (us).",
+        &hub.queue_wait_us.snapshot(),
+    );
+    p.histogram(
+        "rskpca_assembly_us",
+        "Batch assembly wait: pickup to execution (us).",
+        &hub.assembly_us.snapshot(),
+    );
+    p.histogram(
+        "rskpca_embed_us",
+        "Backend embed call per batch (us).",
+        &hub.embed_us.snapshot(),
+    );
+    p.histogram(
+        "rskpca_gemm_us",
+        "Gram GEMM inside the embed (us).",
+        &hub.gemm_us.snapshot(),
+    );
+    p.histogram(
+        "rskpca_profile_us",
+        "Kernel profile epilogue inside the embed (us).",
+        &hub.profile_us.snapshot(),
+    );
+    p.histogram(
+        "rskpca_coeff_us",
+        "Coefficient fold inside the embed (us).",
+        &hub.coeff_us.snapshot(),
+    );
+    p.histogram(
+        "rskpca_write_us",
+        "Response write: enqueue to socket drain (us).",
+        &hub.write_us.snapshot(),
+    );
+    p.histogram(
+        "rskpca_batch_rows",
+        "Batch occupancy: rows per flushed batch.",
+        &hub.batch_rows.snapshot(),
+    );
+    Response {
+        status: 200,
+        content_type: prom::CONTENT_TYPE,
+        body: p.finish().into_bytes(),
+        extra_headers: Vec::new(),
+    }
 }
 
 fn models(state: &ServerState) -> Response {
@@ -289,15 +516,23 @@ fn embed_submit(
     state: &ServerState,
     req: &Request,
     t_start: Instant,
+    trace_id: u64,
 ) -> Handled {
     let v = match parse_json_body(&req.body) {
         Ok(v) => v,
-        Err(resp) => return done_embed(state, resp, t_start),
+        Err(resp) => {
+            return done_embed(state, resp, t_start, trace_id)
+        }
     };
     let rows = match rows_from_json(&v) {
         Ok(m) => m,
         Err(msg) => {
-            return done_embed(state, Response::error(400, &msg), t_start)
+            return done_embed(
+                state,
+                Response::error(400, &msg),
+                t_start,
+                trace_id,
+            )
         }
     };
     // Lossy tap for the background refresher (`serve --refresh N`):
@@ -321,31 +556,40 @@ fn embed_submit(
         // *connection*, not a thread — admission is retried each
         // cycle (and the parked attempts never count as rejections,
         // matching the old blocking-send semantics).
-        match state.handle.try_embed_quiet(rows.clone()) {
+        match state.handle.try_embed_quiet(rows.clone(), trace_id) {
             Ok(rx) => Handled::Pending(PendingEmbed {
                 rx,
                 version_before,
                 t_start,
+                trace_id,
             }),
             Err(Error::Saturated(_)) => Handled::Blocked(BlockedEmbed {
                 rows,
                 version_before,
                 t_start,
+                trace_id,
             }),
-            Err(e) => {
-                done_embed(state, embed_error(state, e), t_start)
-            }
+            Err(e) => done_embed(
+                state,
+                embed_error(state, e),
+                t_start,
+                trace_id,
+            ),
         }
     } else {
-        match state.handle.try_embed(rows) {
+        match state.handle.try_embed_traced(rows, trace_id) {
             Ok(rx) => Handled::Pending(PendingEmbed {
                 rx,
                 version_before,
                 t_start,
+                trace_id,
             }),
-            Err(e) => {
-                done_embed(state, embed_error(state, e), t_start)
-            }
+            Err(e) => done_embed(
+                state,
+                embed_error(state, e),
+                t_start,
+                trace_id,
+            ),
         }
     }
 }
@@ -360,7 +604,7 @@ pub(super) fn poll_pending(
         Err(mpsc::TryRecvError::Empty) => None,
         Err(mpsc::TryRecvError::Disconnected) => {
             let resp = Response::error(500, "service dropped reply");
-            record_embed(state, &resp, p.t_start);
+            record_embed(state, &resp, p.t_start, p.trace_id);
             Some(resp)
         }
     }
@@ -371,16 +615,17 @@ pub(super) fn retry_blocked(
     state: &ServerState,
     b: BlockedEmbed,
 ) -> Handled {
-    match state.handle.try_embed_quiet(b.rows.clone()) {
+    match state.handle.try_embed_quiet(b.rows.clone(), b.trace_id) {
         Ok(rx) => Handled::Pending(PendingEmbed {
             rx,
             version_before: b.version_before,
             t_start: b.t_start,
+            trace_id: b.trace_id,
         }),
         Err(Error::Saturated(_)) => Handled::Blocked(b),
         Err(e) => {
             let resp = embed_error(state, e);
-            record_embed(state, &resp, b.t_start);
+            record_embed(state, &resp, b.t_start, b.trace_id);
             Handled::Done(resp)
         }
     }
@@ -418,7 +663,7 @@ fn finish_embed(
         }
         Err(e) => embed_error(state, e),
     };
-    record_embed(state, &resp, p.t_start);
+    record_embed(state, &resp, p.t_start, p.trace_id);
     resp
 }
 
@@ -454,17 +699,21 @@ fn done_embed(
     state: &ServerState,
     resp: Response,
     t_start: Instant,
+    trace_id: u64,
 ) -> Handled {
-    record_embed(state, &resp, t_start);
+    record_embed(state, &resp, t_start, trace_id);
     Handled::Done(resp)
 }
 
-fn record_embed(state: &ServerState, resp: &Response, t_start: Instant) {
-    state.routes.record(
-        "POST /embed",
-        t_start.elapsed().as_secs_f64() * 1e6,
-        resp.status >= 400,
-    );
+fn record_embed(
+    state: &ServerState,
+    resp: &Response,
+    t_start: Instant,
+    trace_id: u64,
+) {
+    let us = t_start.elapsed().as_secs_f64() * 1e6;
+    state.routes.record("POST /embed", us, resp.status >= 400);
+    emit_request(state, trace_id, "POST /embed", resp.status, us);
 }
 
 /// Parse a request body as JSON (400 on non-UTF-8 or bad JSON).

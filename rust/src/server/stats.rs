@@ -1,31 +1,66 @@
 //! Per-route HTTP metrics: hit/error counters and latency histograms,
-//! surfaced by `GET /stats` next to the coordinator's
-//! [`crate::coordinator::ServiceStatsSnapshot`].
+//! surfaced by `GET /stats` and `GET /metrics` next to the
+//! coordinator's [`crate::coordinator::ServiceStatsSnapshot`].
+//!
+//! Routes are pre-registered in [`ROUTES`], so the hit/error path is a
+//! pair of relaxed atomic adds with no lock and no map lookup; only
+//! the latency histogram takes a (per-route) mutex.  Snapshots clone
+//! the histogram under that short lock and do all percentile work on
+//! the clone — recording never waits on a `/stats` render.
 
-use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::metrics::Histogram;
 use crate::ser::Json;
 
+/// Every route label the server records, fixed at compile time.  The
+/// last entry is the catch-all for 404/405 traffic.
+pub const ROUTES: &[&str] = &[
+    "POST /embed",
+    "GET /healthz",
+    "GET /stats",
+    "GET /metrics",
+    "GET /models",
+    "POST /models/swap",
+    "other",
+];
+
 #[derive(Default)]
 struct RouteEntry {
-    hits: u64,
-    errors: u64,
-    latency_us: Histogram,
+    hits: AtomicU64,
+    errors: AtomicU64,
+    latency_us: Mutex<Histogram>,
 }
 
-/// Mutex-guarded per-route counters.  Recording happens once per
-/// request after the response is built — off the embed hot path, which
-/// is dominated by the batch execution anyway.
-#[derive(Default)]
+/// Pre-registered per-route counters: atomic hits/errors, a mutex only
+/// around each route's latency histogram.
 pub struct RouteStats {
-    inner: Mutex<BTreeMap<&'static str, RouteEntry>>,
+    entries: Vec<RouteEntry>,
+}
+
+impl Default for RouteStats {
+    fn default() -> RouteStats {
+        RouteStats::new()
+    }
 }
 
 impl RouteStats {
     pub fn new() -> RouteStats {
-        RouteStats::default()
+        RouteStats {
+            entries: ROUTES
+                .iter()
+                .map(|_| RouteEntry::default())
+                .collect(),
+        }
+    }
+
+    /// Index of a route label; unknown labels fold into "other".
+    fn idx(route: &str) -> usize {
+        ROUTES
+            .iter()
+            .position(|r| *r == route)
+            .unwrap_or(ROUTES.len() - 1)
     }
 
     /// Record one handled request under a static route label.
@@ -35,51 +70,55 @@ impl RouteStats {
         latency_us: f64,
         error: bool,
     ) {
-        let mut guard = self.inner.lock().unwrap();
-        let entry = guard.entry(route).or_default();
-        entry.hits += 1;
+        let e = &self.entries[Self::idx(route)];
+        e.hits.fetch_add(1, Ordering::Relaxed);
         if error {
-            entry.errors += 1;
+            e.errors.fetch_add(1, Ordering::Relaxed);
         }
-        entry.latency_us.record(latency_us);
+        e.latency_us.lock().unwrap().record(latency_us);
     }
 
-    /// Hit count for a route label (testing / introspection).
+    /// Hit count for a route label (lock-free).
     pub fn hits(&self, route: &str) -> u64 {
-        self.inner
-            .lock()
-            .unwrap()
-            .get(route)
-            .map(|e| e.hits)
-            .unwrap_or(0)
+        self.entries[Self::idx(route)].hits.load(Ordering::Relaxed)
     }
 
-    /// Snapshot as a JSON object keyed by route label.
+    /// Error count for a route label (lock-free).
+    pub fn errors(&self, route: &str) -> u64 {
+        self.entries[Self::idx(route)].errors.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot as a JSON object keyed by route label; routes that
+    /// never recorded a hit are omitted.  Percentiles are computed on a
+    /// clone, so the per-route lock is held only for the copy.
     pub fn to_json(&self) -> Json {
-        let mut guard = self.inner.lock().unwrap();
         let mut obj = Json::obj();
-        for (route, e) in guard.iter_mut() {
+        for (route, e) in ROUTES.iter().zip(&self.entries) {
+            let hits = e.hits.load(Ordering::Relaxed);
+            if hits == 0 {
+                continue;
+            }
+            let lat = e.latency_us.lock().unwrap().clone();
             obj = obj.with(
                 route,
                 Json::obj()
-                    .with("hits", Json::Num(e.hits as f64))
-                    .with("errors", Json::Num(e.errors as f64))
+                    .with("hits", Json::Num(hits as f64))
                     .with(
-                        "latency_mean_us",
-                        Json::Num(e.latency_us.mean()),
+                        "errors",
+                        Json::Num(
+                            e.errors.load(Ordering::Relaxed) as f64
+                        ),
                     )
+                    .with("latency_mean_us", Json::Num(lat.mean()))
                     .with(
                         "latency_p50_us",
-                        Json::Num(e.latency_us.percentile(50.0)),
+                        Json::Num(lat.percentile(50.0)),
                     )
                     .with(
                         "latency_p95_us",
-                        Json::Num(e.latency_us.percentile(95.0)),
+                        Json::Num(lat.percentile(95.0)),
                     )
-                    .with(
-                        "latency_p99_us",
-                        Json::Num(e.latency_us.p99()),
-                    ),
+                    .with("latency_p99_us", Json::Num(lat.p99())),
             );
         }
         obj
@@ -100,7 +139,9 @@ mod tests {
         stats.record("other", 1.0, true);
         assert_eq!(stats.hits("POST /embed"), 10);
         assert_eq!(stats.hits("GET /stats"), 1);
-        assert_eq!(stats.hits("GET /missing"), 0);
+        // Unknown labels read the catch-all slot.
+        assert_eq!(stats.hits("GET /missing"), stats.hits("other"));
+        assert_eq!(stats.errors("other"), 1);
         let v = stats.to_json();
         let embed = v.get("POST /embed").unwrap();
         assert_eq!(embed.req_f64("hits").unwrap(), 10.0);
@@ -108,5 +149,32 @@ mod tests {
         assert!(embed.req_f64("latency_p99_us").unwrap() >= 100.0);
         let other = v.get("other").unwrap();
         assert_eq!(other.req_f64("errors").unwrap(), 1.0);
+        // Untouched routes are omitted from the snapshot.
+        assert!(v.get("GET /healthz").is_none());
+    }
+
+    #[test]
+    fn unknown_labels_fold_into_other_and_counts_are_atomic() {
+        let stats = std::sync::Arc::new(RouteStats::new());
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let stats = stats.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..250 {
+                    stats.record(
+                        "POST /embed",
+                        i as f64,
+                        i % 10 == 0,
+                    );
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(stats.hits("POST /embed"), 1000);
+        assert_eq!(stats.errors("POST /embed"), 100);
+        // hits("GET /missing") reads the catch-all slot.
+        assert_eq!(stats.hits("GET /missing"), stats.hits("other"));
     }
 }

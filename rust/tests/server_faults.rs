@@ -136,6 +136,15 @@ fn slow_loris_drip_is_contained_and_reaped() {
             "slow-loris connection survived the idle timeout \
              (workers={workers})"
         );
+        // The reap is observable: the idle sweep left a structured
+        // `http.conn.reaped` event in the service's event ring.
+        let reaped = svc.handle().obs().events_named("http.conn.reaped");
+        assert!(
+            !reaped.is_empty(),
+            "no http.conn.reaped event for the loris \
+             (workers={workers})"
+        );
+        assert!(reaped.iter().all(|e| e.prop("idle_ms").is_some()));
         server.shutdown();
         svc.shutdown();
     }
@@ -173,6 +182,12 @@ fn mid_body_disconnect_leaves_server_healthy() {
             );
             std::thread::sleep(Duration::from_millis(50));
         }
+        // Each vanished client surfaced as an `http.conn.eof` event.
+        assert!(
+            !svc.handle().obs().events_named("http.conn.eof").is_empty(),
+            "no http.conn.eof events after mid-body disconnects \
+             (workers={workers})"
+        );
         server.shutdown();
         svc.shutdown();
     }
@@ -342,6 +357,7 @@ fn saturation_tail_latency_release_gate() {
         seed: 0xFA57,
         warmup_ms: 5000,
         rate: 0.0,
+        metrics_poll_s: 0,
     })
     .unwrap();
     assert_eq!(

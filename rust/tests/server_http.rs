@@ -522,11 +522,17 @@ fn loadgen_round_trip_reports_throughput() {
         seed: 9,
         warmup_ms: 3000,
         rate: 0.0,
+        metrics_poll_s: 1,
     })
     .unwrap();
     assert_eq!(report.requests_ok, 30);
     assert_eq!(report.rows_ok, 120);
     assert_eq!(report.errors, 0);
+    // The metrics poller always lands a final scrape on shutdown, so
+    // even a sub-second run captures at least one parsed sample.
+    assert_eq!(report.metrics_errors, 0);
+    assert!(!report.metrics_samples.is_empty());
+    assert!(report.metrics_samples.last().unwrap().requests_total >= 30.0);
     assert!(report.rows_per_s() > 0.0);
     assert!(report.latency_us.p99() > 0.0);
     let text = report.render();

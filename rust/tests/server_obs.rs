@@ -1,0 +1,320 @@
+//! Loopback integration tests for the observability layer: the
+//! Prometheus `/metrics` exposition is scraped over real TCP, strictly
+//! parsed, and cross-checked against the JSON `/stats` snapshot; the
+//! trace ids minted at accept time are verified to tie each
+//! `http.request` event to its coordinator `span.embed`; and a
+//! release-gated bound keeps the hot-path recording cost honest.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rskpca::config::{ObsConfig, ServerConfig, ServiceConfig};
+use rskpca::coordinator::{
+    serve_registry_obs, EmbeddingService, ModelRegistry, DEFAULT_MODEL,
+};
+use rskpca::data::gaussian_mixture_2d;
+use rskpca::kernel::Kernel;
+use rskpca::kpca::{fit_kpca, EmbeddingModel};
+use rskpca::obs::prom;
+use rskpca::obs::{Event, Obs};
+use rskpca::runtime::{BackendFactory, NativeBackend};
+use rskpca::server::http::ClientConn;
+use rskpca::server::HttpServer;
+
+const CONNECT: Duration = Duration::from_millis(2000);
+
+fn test_model() -> EmbeddingModel {
+    let ds = gaussian_mixture_2d(80, 3, 0.4, 1);
+    fit_kpca(&ds.x, &Kernel::gaussian(1.0), 4).unwrap()
+}
+
+fn native() -> BackendFactory {
+    Box::new(|| Ok(Box::new(NativeBackend::new())))
+}
+
+fn start() -> (EmbeddingService, HttpServer, String) {
+    let svc = EmbeddingService::start(
+        test_model(),
+        native(),
+        ServiceConfig::default(),
+    )
+    .unwrap();
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        ..Default::default()
+    };
+    let server = HttpServer::start(svc.handle(), &cfg).unwrap();
+    let target = server.local_addr().to_string();
+    (svc, server, target)
+}
+
+/// A `{"rows": [[...]...]}` embed body with `rows` two-feature rows.
+fn embed_body(rows: usize) -> String {
+    let mut s = String::from("{\"rows\":[");
+    for i in 0..rows {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "[{}.0,{}.5]", i % 7, (i + 3) % 5);
+    }
+    s.push_str("]}");
+    s
+}
+
+/// Scrape `GET /metrics` and run it through the strict parser.
+fn scrape(conn: &mut ClientConn) -> prom::ParsedMetrics {
+    let resp = conn.request("GET", "/metrics", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let text = std::str::from_utf8(&resp.body).unwrap();
+    prom::parse(text).unwrap_or_else(|e| {
+        panic!("exposition failed strict parse: {e}\n{text}")
+    })
+}
+
+/// The `/metrics` document agrees with `/stats` on every counter the
+/// embed path owns (those are stable between the two scrapes — only
+/// the scrape requests themselves touch the other families).
+#[test]
+fn metrics_exposition_matches_stats_snapshot() {
+    let (svc, server, target) = start();
+    let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+    let body = embed_body(3);
+    for _ in 0..12 {
+        let resp = conn
+            .request("POST", "/embed", body.as_bytes())
+            .unwrap();
+        assert_eq!(resp.status, 200);
+    }
+
+    let resp = conn.request("GET", "/stats", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let stats = resp.json().unwrap();
+    let parsed = scrape(&mut conn);
+    let value = |name: &str| {
+        parsed
+            .value(name)
+            .unwrap_or_else(|| panic!("missing sample {name}"))
+    };
+
+    // Coordinator counters: /metrics and /stats took the same
+    // snapshot source, so they must agree exactly.
+    let service = stats.req("service").unwrap();
+    assert_eq!(
+        value("rskpca_requests_total"),
+        service.req_f64("requests").unwrap()
+    );
+    assert_eq!(value("rskpca_requests_total"), 12.0);
+    assert_eq!(value("rskpca_rows_total"), 36.0);
+    assert_eq!(value("rskpca_rejected_total"), 0.0);
+    assert_eq!(
+        value("rskpca_batches_total"),
+        service.req_f64("batches").unwrap()
+    );
+    assert_eq!(value("rskpca_model_version"), 1.0);
+
+    // Stage histograms: one queue-wait sample per embed request, one
+    // occupancy sample per batch, rows conserved across batches.
+    assert_eq!(value("rskpca_queue_wait_us_count"), 12.0);
+    assert_eq!(
+        value("rskpca_queue_wait_us_count"),
+        stats
+            .req("stages")
+            .unwrap()
+            .req("queue_wait_us")
+            .unwrap()
+            .req_f64("count")
+            .unwrap()
+    );
+    assert_eq!(
+        value("rskpca_batch_rows_count"),
+        value("rskpca_batches_total")
+    );
+    assert_eq!(
+        value("rskpca_batch_rows_count"),
+        stats
+            .req("batch_occupancy")
+            .unwrap()
+            .req_f64("batches")
+            .unwrap()
+    );
+    assert_eq!(
+        value("rskpca_batch_rows_sum"),
+        value("rskpca_rows_total")
+    );
+    // The response-write stage drained at least the twelve embeds.
+    assert!(value("rskpca_write_us_count") >= 12.0);
+
+    // Cumulative buckets: monotone, and +Inf equals the count.
+    for stage in ["rskpca_queue_wait_us", "rskpca_batch_rows"] {
+        let buckets = parsed.family(&format!("{stage}_bucket"));
+        assert!(!buckets.is_empty(), "{stage} has no buckets");
+        let mut prev = 0.0;
+        for b in &buckets {
+            assert!(
+                b.value >= prev,
+                "{stage} buckets not cumulative"
+            );
+            prev = b.value;
+        }
+        assert_eq!(buckets.last().unwrap().label("le"), Some("+Inf"));
+        assert_eq!(prev, value(&format!("{stage}_count")));
+    }
+
+    // Route counters carry the full deterministic label set, with the
+    // embed hits where they belong.
+    let hits = parsed.family("rskpca_route_hits_total");
+    assert_eq!(hits.len(), 7, "expected every route label");
+    let embed_hits = hits
+        .iter()
+        .find(|s| s.label("route") == Some("POST /embed"))
+        .unwrap();
+    assert_eq!(embed_hits.value, 12.0);
+    let stats_hits = hits
+        .iter()
+        .find(|s| s.label("route") == Some("GET /stats"))
+        .unwrap();
+    assert!(stats_hits.value >= 1.0);
+    for s in parsed.family("rskpca_route_errors_total") {
+        assert_eq!(s.value, 0.0, "unexpected route errors");
+    }
+
+    // Gauges and metadata.
+    assert!(value("rskpca_http_conns_open") >= 1.0);
+    assert!(value("rskpca_http_conns_accepted_total") >= 1.0);
+    assert_eq!(value("rskpca_requests_1m"), 12.0);
+    assert!(value("rskpca_uptime_seconds") > 0.0);
+    assert_eq!(value("rskpca_obs_events_dropped_total"), 0.0);
+    assert_eq!(
+        parsed.types.get("rskpca_requests_total").map(String::as_str),
+        Some("counter")
+    );
+    assert_eq!(
+        parsed.types.get("rskpca_http_conns_open").map(String::as_str),
+        Some("gauge")
+    );
+    assert_eq!(
+        parsed.types.get("rskpca_queue_wait_us").map(String::as_str),
+        Some("histogram")
+    );
+
+    server.shutdown();
+    svc.shutdown();
+}
+
+/// Every embed answered over the wire leaves an `http.request` event
+/// whose trace id matches exactly one coordinator `span.embed`: the
+/// id is minted once at the accept path and carried through the queue
+/// into the batch worker.
+#[test]
+fn trace_ids_tie_http_requests_to_embed_spans() {
+    let (svc, server, target) = start();
+    let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+    let body = embed_body(2);
+    for _ in 0..5 {
+        let resp = conn
+            .request("POST", "/embed", body.as_bytes())
+            .unwrap();
+        assert_eq!(resp.status, 200);
+    }
+
+    let obs = svc.handle().obs();
+    let http_ids: BTreeSet<u64> = obs
+        .events_named("http.request")
+        .iter()
+        .filter(|e| {
+            e.prop("route").and_then(|v| v.as_str())
+                == Some("POST /embed")
+        })
+        .map(Event::trace_id)
+        .collect();
+    let span_ids: BTreeSet<u64> = obs
+        .events_named("span.embed")
+        .iter()
+        .map(Event::trace_id)
+        .collect();
+    assert_eq!(http_ids.len(), 5, "five distinct request traces");
+    assert!(!http_ids.contains(&0), "trace ids must be non-zero");
+    assert_eq!(
+        http_ids, span_ids,
+        "HTTP roots and embed spans must pair one-to-one"
+    );
+
+    server.shutdown();
+    svc.shutdown();
+}
+
+/// `[obs] metrics = false` turns the endpoint off (404) without
+/// disturbing the serving path.
+#[test]
+fn metrics_endpoint_is_gated_by_config() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish(DEFAULT_MODEL, test_model());
+    let obs = Arc::new(
+        Obs::new(&ObsConfig {
+            metrics: false,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let svc = serve_registry_obs(
+        registry,
+        DEFAULT_MODEL,
+        native(),
+        ServiceConfig::default(),
+        obs,
+    )
+    .unwrap();
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        ..Default::default()
+    };
+    let server = HttpServer::start(svc.handle(), &cfg).unwrap();
+    let target = server.local_addr().to_string();
+
+    let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+    let resp = conn.request("GET", "/metrics", b"").unwrap();
+    assert_eq!(resp.status, 404);
+    let body = embed_body(2);
+    let resp = conn
+        .request("POST", "/embed", body.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 200, "serving path unaffected");
+
+    server.shutdown();
+    svc.shutdown();
+}
+
+/// Release-gated overhead bound: a hot-path record (stage histogram)
+/// plus a ring emit must stay well under a microsecond each — the
+/// facade is atomics and a fixed-size ring slot, never a lock or an
+/// allocation.  Debug builds skip: unoptimized atomics are not what
+/// production pays.
+#[test]
+fn obs_hot_path_overhead_release_gate() {
+    if cfg!(debug_assertions) {
+        return;
+    }
+    let obs = Obs::default();
+    const N: u32 = 100_000;
+    let t0 = Instant::now();
+    for i in 0..N {
+        obs.hub.queue_wait_us.record(f64::from(i % 1000));
+        obs.emit(
+            Event::new("bench.tick")
+                .trace(u64::from(i) + 1)
+                .with("i", u64::from(i)),
+        );
+    }
+    let per_op_ns =
+        t0.elapsed().as_nanos() as f64 / f64::from(N);
+    assert!(
+        per_op_ns < 5_000.0,
+        "record+emit cost {per_op_ns:.0} ns — the obs hot path has \
+         stopped being allocation-free"
+    );
+    assert_eq!(obs.hub.queue_wait_us.snapshot().count, u64::from(N));
+}
