@@ -36,11 +36,13 @@ if [ "${1:-}" != "quick" ]; then
     cargo test --release -q --test parallel_consistency
 
     # The fault-injection suite (slow-loris, mid-body disconnects,
-    # never-reading clients, the 1000-idle-connection soak) and the
-    # release-gated saturation tail check (p99 <= 2x p50 under a
-    # 1000-connection closed-loop burst) need release-mode compute to
-    # produce meaningful latency distributions.
-    step "serving fault-injection suite under --release"
+    # never-reading clients, the 1000-idle-connection soak), the chaos
+    # scenarios (panic-injecting backend, expired-deadline shedding,
+    # corrupt-model quarantine), and the release-gated saturation tail
+    # check (p99 <= 2x p50 under a 1000-connection closed-loop burst)
+    # need release-mode compute to produce meaningful latency
+    # distributions and acceptance-scale post-panic traffic.
+    step "serving fault-injection + chaos suite under --release"
     cargo test --release -q --test server_faults
 fi
 
@@ -59,6 +61,25 @@ gated=$(grep -rc 'ignore = "environment-dependent' tests/pjrt_integration.rs)
 others=$(grep -rl 'ignore = "' --include='*.rs' src tests | grep -v 'tests/pjrt_integration.rs' || true)
 if [ "$gated" -ne 7 ] || [ -n "$others" ]; then
     echo "#[ignore] drift: pjrt gated count=$gated (want 7), others='$others'"
+    exit 1
+fi
+
+step "lock-hygiene gate (no bare .unwrap() on lock guards)"
+# Crash-only rule: production code acquires locks through
+# crate::sync::{lock, read, write}, which recover the guard from
+# poisoning; a bare `.lock().unwrap()` turns one panicked holder into
+# a service-wide cascade.  Test modules and testutil are exempt (tests
+# poison locks on purpose).
+lock_unwraps=$(awk '
+    FNR == 1 { in_tests = 0 }
+    /#\[cfg\(test\)\]/ { in_tests = 1 }
+    !in_tests && /\.(lock|read|write)\(\)[[:space:]]*\.unwrap\(\)/ {
+        print FILENAME ":" FNR ": " $0
+    }
+' $(find src -name '*.rs' ! -path '*testutil*'))
+if [ -n "$lock_unwraps" ]; then
+    echo "bare .unwrap() on a lock guard (use crate::sync helpers):"
+    echo "$lock_unwraps"
     exit 1
 fi
 
@@ -130,6 +151,23 @@ EOF
     grep -q '"metrics_samples": *\[ *{' "$smoke_dir/loadgen.json" \
         || { echo "loadgen captured no /metrics samples"; \
              cat "$smoke_dir/loadgen.json"; exit 1; }
+    # Healthz recovery: right after the 1000-connection burst the
+    # probe must answer 200 — saturation sheds load, it never wedges
+    # the serving path.
+    exec 3<>"/dev/tcp/127.0.0.1/$port"
+    printf 'GET /healthz HTTP/1.1\r\nhost: ci\r\nconnection: close\r\n\r\n' >&3
+    head -n1 <&3 | grep -q ' 200 ' \
+        || { echo "healthz did not answer 200 after the burst"; exit 1; }
+    exec 3<&- 3>&-
+    # End-to-end deadline propagation: a request whose budget is
+    # already spent (X-Deadline-Ms: 0) is shed before compute with 504.
+    shed_body='{"rows":[[0.1,0.2]]}'
+    exec 3<>"/dev/tcp/127.0.0.1/$port"
+    printf 'POST /embed HTTP/1.1\r\nhost: ci\r\nx-deadline-ms: 0\r\ncontent-type: application/json\r\ncontent-length: %s\r\nconnection: close\r\n\r\n%s' \
+        "${#shed_body}" "$shed_body" >&3
+    head -n1 <&3 | grep -q ' 504 ' \
+        || { echo "expired-deadline request was not shed with 504"; exit 1; }
+    exec 3<&- 3>&-
     # Clean SIGTERM shutdown: stop accepting -> drain -> join -> exit 0.
     kill -TERM "$serve_pid"
     wait "$serve_pid"

@@ -130,6 +130,7 @@ fn main() {
                 warmup_ms: 3000,
                 rate: 0.0,
                 metrics_poll_s: 0,
+                retry: false,
             })
             .unwrap();
             let label = format!("serving/{name}/w{workers}");

@@ -19,6 +19,7 @@ use crate::kpca::{
 };
 use crate::linalg::Matrix;
 use crate::metrics::Timer;
+use crate::obs::{Event, Obs};
 use crate::prng::Pcg64;
 use crate::runtime::factory_from_name;
 use crate::server::loadgen::LoadgenConfig;
@@ -157,6 +158,93 @@ pub fn embed(args: &Args) -> Result<()> {
     save_dataset_csv(&emb, Path::new(&out))
 }
 
+/// Refresher-local circuit breaker.  `threshold` consecutive refresh
+/// failures open the circuit: refresh attempts are skipped (the service
+/// keeps answering from the last good model) until a half-open probe
+/// after a backoff that starts at `probe_ms` and doubles per failed
+/// probe, capped at 16x.  One successful refresh closes it again.  The
+/// state is mirrored into the metrics-hub gauge (0 closed / 1 open /
+/// 2 half-open) so `/healthz` and `/metrics` can surface degradation.
+struct RefreshBreaker {
+    threshold: usize,
+    probe_base_ms: u64,
+    consecutive: usize,
+    probe_wait_ms: u64,
+    open_until: Option<std::time::Instant>,
+}
+
+impl RefreshBreaker {
+    fn new(threshold: usize, probe_ms: u64) -> Self {
+        RefreshBreaker {
+            threshold,
+            probe_base_ms: probe_ms,
+            consecutive: 0,
+            probe_wait_ms: probe_ms,
+            open_until: None,
+        }
+    }
+
+    /// May a refresh be attempted now?  While open this answers `false`
+    /// until the probe timer elapses, then flags half-open and lets one
+    /// probe refresh through.
+    fn allow(&mut self, obs: &Obs) -> bool {
+        match self.open_until {
+            None => true,
+            Some(at) if std::time::Instant::now() >= at => {
+                obs.hub.set_breaker_state(2);
+                obs.emit(
+                    Event::new("refresh.breaker").with("state", "half-open"),
+                );
+                true
+            }
+            Some(_) => false,
+        }
+    }
+
+    fn on_success(&mut self, obs: &Obs) {
+        if self.consecutive > 0 || self.open_until.is_some() {
+            obs.emit(
+                Event::new("refresh.breaker").with("state", "closed"),
+            );
+        }
+        self.consecutive = 0;
+        self.probe_wait_ms = self.probe_base_ms;
+        self.open_until = None;
+        obs.hub.set_breaker_state(0);
+    }
+
+    fn on_failure(&mut self, obs: &Obs, cause: &'static str) {
+        self.consecutive += 1;
+        let probing = self.open_until.is_some();
+        if probing {
+            // A failed half-open probe backs off harder (capped 16x).
+            self.probe_wait_ms = self
+                .probe_wait_ms
+                .saturating_mul(2)
+                .min(self.probe_base_ms.saturating_mul(16));
+        }
+        if probing || self.consecutive >= self.threshold {
+            self.open_until = Some(
+                std::time::Instant::now()
+                    + std::time::Duration::from_millis(self.probe_wait_ms),
+            );
+            obs.hub.set_breaker_state(1);
+            obs.emit(
+                Event::new("refresh.breaker")
+                    .with("state", "open")
+                    .with("failures", self.consecutive as u64)
+                    .with("probe_ms", self.probe_wait_ms)
+                    .with("cause", cause),
+            );
+            eprintln!(
+                "refresh breaker open after {} consecutive failure(s); \
+                 next probe in {}ms",
+                self.consecutive, self.probe_wait_ms
+            );
+        }
+    }
+}
+
 /// `rskpca serve --model FILE [--listen ADDR | --selftest] [...]` —
 /// starts the embedding service and fronts it with the HTTP serving
 /// layer ([`HttpServer`]): `POST /embed`, `GET /stats`, `GET /healthz`,
@@ -247,7 +335,7 @@ pub fn serve(args: &Args) -> Result<()> {
         DEFAULT_MODEL,
         factory_from_name(&backend_name, &artifacts),
         cfg,
-        obs,
+        obs.clone(),
     )?;
     // Future publishes (refresher hot swaps, POST /models/swap) are
     // quantized by the registry to match the configured precision.
@@ -259,27 +347,72 @@ pub fn serve(args: &Args) -> Result<()> {
     // producer): when a refresh is in progress, samples are dropped
     // instead of queued, so memory stays bounded and the post-run join
     // never has a backlog of expensive refreshes to drain.
+    //
+    // Failure handling is two-layered.  Each `refresh()` runs under
+    // `catch_unwind` and feeds a [`RefreshBreaker`]: after
+    // `[server] breaker_threshold` consecutive failures the breaker
+    // opens — the service keeps answering from the last good model,
+    // refreshes are skipped until a half-open probe after
+    // `breaker_probe_ms` (doubling per failed probe, capped at 16x),
+    // and `/healthz` reports "degraded" via the hub gauge.  The whole
+    // loop additionally runs under a [`crate::sync::Supervisor`], so a
+    // panic *outside* the guarded refresh (ingest, publish) restarts
+    // the loop instead of silently ending refreshes for the rest of
+    // the process lifetime.
     let (feed_tx, feed_rx) =
         std::sync::mpsc::sync_channel::<Matrix>(2 * refresh_every.max(1));
     let refresher = (refresh_every > 0).then(|| {
         let registry = svc.registry();
         let slot = svc.model_name().to_string();
+        let obs = obs.clone();
+        let threshold = server_cfg.breaker_threshold;
+        let probe_ms = server_cfg.breaker_probe_ms;
         std::thread::spawn(move || -> usize {
             let mut online =
                 OnlineRskpca::new(kernel, ell, dim, rank, solver);
             let mut published = 0usize;
             let mut pending = 0usize;
-            while let Ok(rows) = feed_rx.recv() {
-                online.observe_rows(&rows);
-                pending += 1;
-                if pending >= refresh_every {
+            let mut breaker = RefreshBreaker::new(threshold, probe_ms);
+            let sup = crate::sync::Supervisor {
+                give_up: crate::sync::GiveUp::Return,
+                ..crate::sync::Supervisor::new("rskpca-refresher")
+            };
+            sup.run(&obs, || {
+                while let Ok(rows) = feed_rx.recv() {
+                    online.observe_rows(&rows);
+                    pending += 1;
+                    if pending < refresh_every {
+                        continue;
+                    }
                     pending = 0;
-                    if let Ok(Some(m)) = online.refresh() {
-                        registry.publish(&slot, m.clone());
-                        published += 1;
+                    if !breaker.allow(&obs) {
+                        continue; // open: serve the last good model
+                    }
+                    let attempt = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| online.refresh()),
+                    );
+                    match attempt {
+                        Ok(Ok(maybe)) => {
+                            breaker.on_success(&obs);
+                            if let Some(m) = maybe {
+                                registry.publish(&slot, m.clone());
+                                published += 1;
+                            }
+                        }
+                        Ok(Err(e)) => {
+                            eprintln!("refresh failed: {e}");
+                            breaker.on_failure(&obs, "error");
+                        }
+                        Err(payload) => {
+                            eprintln!("refresh panicked");
+                            breaker.on_failure(
+                                &obs,
+                                crate::sync::panic_label(&*payload),
+                            );
+                        }
                     }
                 }
-            }
+            });
             published
         })
     });
@@ -415,10 +548,11 @@ pub fn loadgen(args: &Args) -> Result<()> {
         warmup_ms: args.flag_usize("wait-ms", 5000)? as u64,
         rate: args.flag_f64("rate", 0.0)?,
         metrics_poll_s: args.flag_usize("metrics-poll", 0)? as u64,
+        retry: args.has("retry"),
     };
     println!(
         "loadgen: target={} concurrency={} requests/client={} \
-         rows/request={} rate={}",
+         rows/request={} rate={}{}",
         cfg.target,
         cfg.clients,
         cfg.requests_per_client,
@@ -428,6 +562,7 @@ pub fn loadgen(args: &Args) -> Result<()> {
         } else {
             "closed loop".into()
         },
+        if cfg.retry { " retry=on" } else { "" },
     );
     let mut report = crate::server::loadgen::run(&cfg)?;
     println!("{}", report.render());
@@ -908,4 +1043,49 @@ pub fn info(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refresh_breaker_opens_probes_and_recloses() {
+        let obs = Obs::default();
+        let mut b = RefreshBreaker::new(2, 30);
+        assert!(b.allow(&obs));
+        b.on_failure(&obs, "error");
+        // One failure below the threshold keeps the circuit closed.
+        assert!(b.allow(&obs));
+        assert_eq!(obs.hub.breaker_state(), 0);
+        b.on_failure(&obs, "error");
+        assert_eq!(obs.hub.breaker_state(), 1);
+        assert!(!b.allow(&obs), "freshly opened breaker blocks refreshes");
+        // After the probe window a single half-open probe is let through.
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        assert!(b.allow(&obs));
+        assert_eq!(obs.hub.breaker_state(), 2);
+        // A failed probe re-opens with a doubled wait.
+        b.on_failure(&obs, "panic");
+        assert_eq!(obs.hub.breaker_state(), 1);
+        assert_eq!(b.probe_wait_ms, 60);
+        std::thread::sleep(std::time::Duration::from_millis(120));
+        assert!(b.allow(&obs));
+        // A successful probe closes the circuit and resets the backoff.
+        b.on_success(&obs);
+        assert_eq!(obs.hub.breaker_state(), 0);
+        assert_eq!(b.probe_wait_ms, 30);
+        assert!(b.allow(&obs));
+        assert!(obs.events_named("refresh.breaker").len() >= 5);
+    }
+
+    #[test]
+    fn refresh_breaker_probe_backoff_is_capped_at_16x() {
+        let obs = Obs::default();
+        let mut b = RefreshBreaker::new(1, 10);
+        for _ in 0..10 {
+            b.on_failure(&obs, "error");
+        }
+        assert_eq!(b.probe_wait_ms, 160);
+    }
 }

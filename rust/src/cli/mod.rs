@@ -15,7 +15,7 @@
 //! rskpca loadgen [--target HOST:PORT] [--concurrency N] [--requests N]
 //!                [--rows-per-request N] [--dim D] [--seed N]
 //!                [--wait-ms MS] [--rate R] [--json [FILE]]
-//!                [--metrics-poll S]
+//!                [--metrics-poll S] [--retry]
 //! rskpca bench   gemm  [--quick] [--json] [--sizes N,N,..] [--threads N]
 //!                [--out FILE]
 //! rskpca bench   eigen [--quick] [--json] [--sizes N,N,..] [--threads N]
@@ -119,9 +119,15 @@ USAGE:
       --selftest runs the in-process synthetic loop instead of listening
       --refresh N hot-swaps the served model every N requests from a
       background online-RSKPCA refresher fed by the live traffic
+      (refresh failures trip a circuit breaker after [server]
+      breaker_threshold consecutive failures — last good model keeps
+      serving, /healthz reports degraded, probes resume after
+      breaker_probe_ms); requests honor an X-Deadline-Ms header (or
+      [server] default_deadline_ms) — work expired in the queue is
+      shed before compute with a 504
   rskpca loadgen [--target HOST:PORT] [--concurrency N] [--requests N]
                 [--rows-per-request N] [--dim D] [--seed N] [--wait-ms MS]
-                [--rate R] [--json [FILE]] [--metrics-poll S]
+                [--rate R] [--json [FILE]] [--metrics-poll S] [--retry]
       load generator against a running serve instance over multiplexed
       keep-alive connections (--concurrency 1000 costs ~4 threads;
       --clients is an alias); closed loop by default, --rate R switches
@@ -129,7 +135,10 @@ USAGE:
       reports rows/s and latency p50/p95/p99 (row dim auto-discovered
       via GET /models unless --dim is given); --json prints or writes
       a machine-readable summary; --metrics-poll S scrapes GET /metrics
-      every S seconds mid-run (strictly parsed) into the report
+      every S seconds mid-run (strictly parsed) into the report;
+      --retry re-sends 429/503 responses after their Retry-After (plus
+      jitter) instead of counting them rejected, reporting retries and
+      deadline 504s separately
   rskpca bench  gemm [--quick] [--json] [--sizes N,N,..] [--out FILE]
       effective GFLOP/s for the packed GEMM (f64 and the f32 serving
       micro-kernel, with the f32-vs-f64 speedup) and the distance-free

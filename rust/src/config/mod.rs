@@ -317,6 +317,20 @@ pub struct ServerConfig {
     /// recording a probe-block embedding-error diagnostic; training
     /// always stays f64).
     pub precision: Precision,
+    /// Default end-to-end request deadline, milliseconds, applied when
+    /// a request carries no `X-Deadline-Ms` header (0 = no default —
+    /// requests without the header never expire).  A request whose
+    /// budget has already elapsed at batch pickup is shed before
+    /// compute with `504 Gateway Timeout`.
+    pub default_deadline_ms: u64,
+    /// Refresher circuit breaker: consecutive refresh failures that
+    /// trip the breaker open (the server keeps serving the last good
+    /// model; `/healthz` reports `degraded`).
+    pub breaker_threshold: usize,
+    /// Base interval between half-open probe attempts while the
+    /// refresher breaker is open, milliseconds (doubles per failed
+    /// probe, capped at 16x).
+    pub breaker_probe_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -331,6 +345,9 @@ impl Default for ServerConfig {
             max_conns: 8192,
             allow_path_swap: false,
             precision: Precision::F64,
+            default_deadline_ms: 0,
+            breaker_threshold: 3,
+            breaker_probe_ms: 1000,
         }
     }
 }
@@ -468,6 +485,27 @@ impl RunConfig {
                 "precision must be 'f32' or 'f64', got '{prec}'"
             ))
         })?;
+        sv.default_deadline_ms = doc.get_f64(
+            "server",
+            "default_deadline_ms",
+            sv.default_deadline_ms as f64,
+        ) as u64;
+        sv.breaker_threshold = doc.get_usize(
+            "server",
+            "breaker_threshold",
+            sv.breaker_threshold,
+        );
+        sv.breaker_probe_ms = doc.get_f64(
+            "server",
+            "breaker_probe_ms",
+            sv.breaker_probe_ms as f64,
+        ) as u64;
+        if sv.breaker_threshold == 0 || sv.breaker_probe_ms == 0 {
+            return Err(Error::Config(
+                "server breaker_threshold / breaker_probe_ms must be \
+                 >= 1".into(),
+            ));
+        }
         if sv.workers == 0 || sv.max_conns == 0 || sv.keep_alive_ms == 0 {
             return Err(Error::Config(
                 "server workers / max_conns / keep_alive_ms must be \
@@ -730,6 +768,34 @@ metrics = false
             RunConfig::from_toml("[obs]\nring_size = 100000000").is_err()
         );
         assert!(RunConfig::from_toml("[obs]\nlog_json = 3").is_err());
+    }
+
+    #[test]
+    fn resilience_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.server.default_deadline_ms, 0); // off by default
+        assert_eq!(cfg.server.breaker_threshold, 3);
+        assert_eq!(cfg.server.breaker_probe_ms, 1000);
+        let cfg = RunConfig::from_toml(
+            r#"
+[server]
+default_deadline_ms = 250
+breaker_threshold = 5
+breaker_probe_ms = 400
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.server.default_deadline_ms, 250);
+        assert_eq!(cfg.server.breaker_threshold, 5);
+        assert_eq!(cfg.server.breaker_probe_ms, 400);
+        assert!(RunConfig::from_toml(
+            "[server]\nbreaker_threshold = 0"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "[server]\nbreaker_probe_ms = 0"
+        )
+        .is_err());
     }
 
     #[test]

@@ -50,12 +50,12 @@ impl ModelRegistry {
     /// already in slots are untouched; republish (or let the refresher
     /// republish) to requantize.
     pub fn set_serving_precision(&self, precision: Precision) {
-        *self.precision.write().unwrap() = precision;
+        *crate::sync::write(&self.precision) = precision;
     }
 
     /// Serving precision applied at publish time.
     pub fn serving_precision(&self) -> Precision {
-        *self.precision.read().unwrap()
+        *crate::sync::read(&self.precision)
     }
 
     /// Attach an observability handle: subsequent publishes emit
@@ -63,7 +63,7 @@ impl ModelRegistry {
     /// `EmbeddingService::start_full`, so a registry shared by several
     /// services reports through whichever service attached last.
     pub fn set_obs(&self, obs: Arc<Obs>) {
-        *self.obs.write().unwrap() = Some(obs);
+        *crate::sync::write(&self.obs) = Some(obs);
     }
 
     /// Publish a model under `name`, returning its version (1 for a new
@@ -81,7 +81,7 @@ impl ModelRegistry {
         {
             model.clear_quantization();
         }
-        let mut slots = self.slots.write().unwrap();
+        let mut slots = crate::sync::write(&self.slots);
         let (version, swapped) = match slots.get_mut(name) {
             Some(slot) => {
                 slot.model = Arc::new(model);
@@ -98,7 +98,7 @@ impl ModelRegistry {
             }
         };
         drop(slots);
-        if let Some(obs) = self.obs.read().unwrap().as_ref() {
+        if let Some(obs) = crate::sync::read(&self.obs).as_ref() {
             obs.emit(
                 Event::new("model.publish")
                     .with("version", version)
@@ -110,9 +110,7 @@ impl ModelRegistry {
 
     /// Current model under `name`.
     pub fn get(&self, name: &str) -> Option<Arc<EmbeddingModel>> {
-        self.slots
-            .read()
-            .unwrap()
+        crate::sync::read(&self.slots)
             .get(name)
             .map(|slot| slot.model.clone())
     }
@@ -122,26 +120,24 @@ impl ModelRegistry {
         &self,
         name: &str,
     ) -> Option<(Arc<EmbeddingModel>, u64)> {
-        self.slots
-            .read()
-            .unwrap()
+        crate::sync::read(&self.slots)
             .get(name)
             .map(|slot| (slot.model.clone(), slot.version))
     }
 
     /// Current version under `name`.
     pub fn version(&self, name: &str) -> Option<u64> {
-        self.slots.read().unwrap().get(name).map(|slot| slot.version)
+        crate::sync::read(&self.slots).get(name).map(|slot| slot.version)
     }
 
     /// Registered model names (sorted).
     pub fn names(&self) -> Vec<String> {
-        self.slots.read().unwrap().keys().cloned().collect()
+        crate::sync::read(&self.slots).keys().cloned().collect()
     }
 
     /// Number of registered models.
     pub fn len(&self) -> usize {
-        self.slots.read().unwrap().len()
+        crate::sync::read(&self.slots).len()
     }
 
     /// Is the registry empty?

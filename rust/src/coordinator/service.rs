@@ -36,6 +36,11 @@ struct EmbedRequest {
     /// Request-scoped trace id — minted at HTTP accept time (or by the
     /// handle for direct callers) and carried into `span.embed` events.
     trace_id: u64,
+    /// Absolute end-to-end deadline on the service clock (µs), or `0`
+    /// for no deadline.  Checked at batch pickup: an expired request is
+    /// shed with [`Error::DeadlineExceeded`] *before* it contributes
+    /// rows to the stacked GEMM.
+    deadline_us: u64,
     reply: mpsc::Sender<Result<Matrix>>,
 }
 
@@ -114,6 +119,7 @@ impl ServiceHandle {
             enqueued_us: self.clock.now_us(),
             popped_us: 0,
             trace_id: self.obs.next_trace_id(),
+            deadline_us: 0,
             reply: reply_tx,
         };
         self.tx
@@ -130,31 +136,41 @@ impl ServiceHandle {
     pub fn try_embed(&self, rows: Matrix)
         -> Result<mpsc::Receiver<Result<Matrix>>> {
         let trace_id = self.obs.next_trace_id();
-        self.try_embed_inner(rows, trace_id, true)
+        self.try_embed_inner(rows, trace_id, 0, true)
     }
 
     /// Like [`ServiceHandle::try_embed`], but carries the caller's
-    /// trace id and a saturated queue does not bump the `rejected`
-    /// counter — used by the HTTP layer's block policy, whose parked
-    /// re-admission attempts are retries of one request, not a stream
-    /// of fresh rejections.
-    pub(crate) fn try_embed_quiet(&self, rows: Matrix, trace_id: u64)
-        -> Result<mpsc::Receiver<Result<Matrix>>> {
-        self.try_embed_inner(rows, trace_id, false)
+    /// trace id and deadline, and a saturated queue does not bump the
+    /// `rejected` counter — used by the HTTP layer's block policy,
+    /// whose parked re-admission attempts are retries of one request,
+    /// not a stream of fresh rejections.
+    pub(crate) fn try_embed_quiet(
+        &self,
+        rows: Matrix,
+        trace_id: u64,
+        deadline_us: u64,
+    ) -> Result<mpsc::Receiver<Result<Matrix>>> {
+        self.try_embed_inner(rows, trace_id, deadline_us, false)
     }
 
     /// Like [`ServiceHandle::try_embed`], but carries the caller's
-    /// trace id (minted at accept time by the HTTP layer) — a full
-    /// queue still counts as a rejection.
-    pub(crate) fn try_embed_traced(&self, rows: Matrix, trace_id: u64)
-        -> Result<mpsc::Receiver<Result<Matrix>>> {
-        self.try_embed_inner(rows, trace_id, true)
+    /// trace id (minted at accept time by the HTTP layer) and absolute
+    /// deadline (`0` = none) — a full queue still counts as a
+    /// rejection.
+    pub(crate) fn try_embed_traced(
+        &self,
+        rows: Matrix,
+        trace_id: u64,
+        deadline_us: u64,
+    ) -> Result<mpsc::Receiver<Result<Matrix>>> {
+        self.try_embed_inner(rows, trace_id, deadline_us, true)
     }
 
     fn try_embed_inner(
         &self,
         rows: Matrix,
         trace_id: u64,
+        deadline_us: u64,
         count_reject: bool,
     ) -> Result<mpsc::Receiver<Result<Matrix>>> {
         self.validate(&rows)?;
@@ -164,13 +180,14 @@ impl ServiceHandle {
             enqueued_us: self.clock.now_us(),
             popped_us: 0,
             trace_id,
+            deadline_us,
             reply: reply_tx,
         };
         match self.tx.try_send(Msg::Embed(req)) {
             Ok(()) => Ok(reply_rx),
             Err(mpsc::TrySendError::Full(_)) => {
                 if count_reject {
-                    self.stats.lock().unwrap().rejected += 1;
+                    crate::sync::lock(&self.stats).rejected += 1;
                     self.obs.emit(
                         Event::new("req.rejected")
                             .trace(trace_id)
@@ -201,6 +218,15 @@ impl ServiceHandle {
         Ok(())
     }
 
+    /// Current time on the service clock, in microseconds — the domain
+    /// request deadlines are expressed in.  Callers computing an
+    /// absolute deadline from a millisecond budget must anchor it here
+    /// (`now_us() + budget_ms * 1000`) so the batch worker's expiry
+    /// check at pickup compares like with like.
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
     /// Embedding rank of the model the service started with (hot swaps
     /// may serve a different rank; replies carry their own width).
     pub fn rank(&self) -> usize {
@@ -227,7 +253,7 @@ impl ServiceHandle {
 
     /// Metrics snapshot.
     pub fn stats(&self) -> ServiceStatsSnapshot {
-        let mut s = self.stats.lock().unwrap();
+        let mut s = crate::sync::lock(&self.stats);
         ServiceStatsSnapshot {
             requests: s.requests,
             rejected: s.rejected,
@@ -380,19 +406,44 @@ impl EmbeddingService {
                 }
                 drop(model0);
                 let _ = ready_tx.send(Ok(()));
-                worker_loop(
-                    rx,
-                    backend,
-                    version0,
-                    WorkerCtx {
-                        registry,
-                        model_name: name,
-                        cfg,
-                        stats,
-                        clock,
-                        obs,
-                    },
-                )
+                let ctx = WorkerCtx {
+                    registry,
+                    model_name: name,
+                    cfg,
+                    stats,
+                    clock,
+                    obs,
+                    factory,
+                };
+                // Crash-only posture: panics raised *inside* a backend
+                // call are isolated per batch by `execute_batch` (that
+                // batch gets an error reply, the backend is rebuilt,
+                // the worker survives).  This supervisor catches
+                // anything that escapes the batch path — a bug in
+                // batching or stats code — restarts the loop with a
+                // rebuilt backend, and exits the process only after
+                // the give-up threshold.
+                let sup = crate::sync::Supervisor::new(
+                    "rskpca-embed-worker",
+                );
+                let obs2 = ctx.obs.clone();
+                let mut slot = Some(backend);
+                sup.run(&obs2, || {
+                    let mut backend = match slot.take() {
+                        Some(b) => b,
+                        // A panic unwound the previous loop body and
+                        // dropped its backend; rebuild or re-panic so
+                        // the supervisor's backoff/give-up governs
+                        // repeated construction failures too.
+                        None => match (ctx.factory)() {
+                            Ok(b) => b,
+                            Err(e) => panic!(
+                                "backend rebuild after panic failed: {e}"
+                            ),
+                        },
+                    };
+                    worker_loop(&rx, &mut backend, version0, &ctx);
+                });
             })
             .map_err(|e| Error::Service(format!("spawn worker: {e}")))?;
         ready_rx
@@ -447,6 +498,10 @@ struct WorkerCtx {
     stats: Arc<Mutex<ServiceStats>>,
     clock: Arc<dyn Clock>,
     obs: Arc<Obs>,
+    /// Rebuilds the backend after a caught panic: a panicking backend
+    /// left its internal state suspect, so the worker replaces it
+    /// rather than reusing it.
+    factory: crate::runtime::BackendFactory,
 }
 
 /// The batching worker: collect (size-OR-deadline) -> fetch current
@@ -459,10 +514,10 @@ struct WorkerCtx {
 /// flushed, and the held request seeds the next one — so a batch with
 /// more than one member never exceeds `max_batch` rows.
 fn worker_loop(
-    rx: Receiver<Msg>,
-    mut backend: Box<dyn GramBackend>,
+    rx: &Receiver<Msg>,
+    backend: &mut Box<dyn GramBackend>,
     initial_version: u64,
-    ctx: WorkerCtx,
+    ctx: &WorkerCtx,
 ) {
     let mut last_version = initial_version;
     let mut asm: BatchAssembler<EmbedRequest> =
@@ -527,8 +582,8 @@ fn worker_loop(
             };
             let batch = asm.take();
             execute_batch(
-                &mut backend,
-                &ctx,
+                backend,
+                ctx,
                 &batch,
                 &mut last_version,
                 reason,
@@ -539,8 +594,8 @@ fn worker_loop(
             // as its own final batch so its client gets a reply.
             if let Some(req) = carry.take() {
                 execute_batch(
-                    &mut backend,
-                    &ctx,
+                    backend,
+                    ctx,
                     &[req],
                     &mut last_version,
                     FlushReason::Shutdown,
@@ -558,13 +613,43 @@ fn execute_batch(
     last_version: &mut u64,
     reason: FlushReason,
 ) {
+    // Deadline shedding happens *before* any compute: a request whose
+    // end-to-end budget already expired while it sat in the queue or
+    // the assembler is answered with [`Error::DeadlineExceeded`] (the
+    // HTTP layer maps it to 504) and contributes no rows to the
+    // stacked GEMM.  `>=` so a zero-budget request always sheds
+    // deterministically.
+    let now = ctx.clock.now_us();
+    let mut live: Vec<&EmbedRequest> = Vec::with_capacity(batch.len());
+    for req in batch {
+        if req.deadline_us != 0 && now >= req.deadline_us {
+            ctx.obs.hub.record_deadline_shed();
+            ctx.obs.emit(
+                Event::new("embed.expired")
+                    .trace(req.trace_id)
+                    .with("rows", req.rows.rows())
+                    .with(
+                        "late_us",
+                        now.saturating_sub(req.deadline_us),
+                    ),
+            );
+            let _ = req.reply.send(Err(Error::DeadlineExceeded(
+                "request deadline expired before execution".into(),
+            )));
+        } else {
+            live.push(req);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
     // Fetch the model once per batch: this Arc is what the whole batch
     // executes against, so a concurrent hot swap affects only the *next*
     // batch and never blocks this one.
     let Some((model, version)) =
         ctx.registry.get_versioned(&ctx.model_name)
     else {
-        for req in batch {
+        for req in &live {
             let _ = req.reply.send(Err(Error::Service(format!(
                 "model '{}' was removed from the registry",
                 ctx.model_name
@@ -572,11 +657,11 @@ fn execute_batch(
         }
         return;
     };
-    let total_rows: usize = batch.iter().map(|r| r.rows.rows()).sum();
+    let total_rows: usize = live.iter().map(|r| r.rows.rows()).sum();
     let dim = model.centers.cols();
     let exec_us = ctx.clock.now_us();
     let mut embed_us = 0u64;
-    let result = if batch.iter().any(|r| r.rows.cols() != dim) {
+    let result = if live.iter().any(|r| r.rows.cols() != dim) {
         // Only reachable if a hot swap changed the feature dimension the
         // handles validated against — refuse the batch, keep serving.
         Err(Error::Shape(format!(
@@ -586,7 +671,7 @@ fn execute_batch(
         // Stack the batch.
         let mut stacked = Matrix::zeros(total_rows, dim);
         let mut at = 0usize;
-        for req in batch {
+        for req in &live {
             for i in 0..req.rows.rows() {
                 stacked.row_mut(at).copy_from_slice(req.rows.row(i));
                 at += 1;
@@ -597,10 +682,62 @@ fn execute_batch(
         // or its f32 twin when the model was published quantized): the
         // stacked rows fan out across the `crate::parallel` compute
         // threads, so coalescing directly buys multi-core utilization.
+        //
+        // The call runs under `catch_unwind` so a panicking backend
+        // poisons only *this* batch: its members get an error reply,
+        // every other queued request keeps its place, and the worker
+        // replaces the backend (whose state is now suspect) from the
+        // factory before the next batch.
         let t0 = ctx.clock.now_us();
-        let r = backend.embed_model(&stacked, &model);
+        let call = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                backend.embed_model(&stacked, &model)
+            }),
+        );
         embed_us = ctx.clock.now_us().saturating_sub(t0);
-        r
+        match call {
+            Ok(r) => r,
+            Err(payload) => {
+                ctx.obs.hub.record_panic();
+                ctx.obs.emit(
+                    Event::new("worker.panic")
+                        .trace(live.first().map_or(0, |r| r.trace_id))
+                        .with("thread", "rskpca-embed-worker")
+                        .with(
+                            "payload",
+                            crate::sync::panic_label(&*payload),
+                        )
+                        .with("requests", live.len()),
+                );
+                match (ctx.factory)() {
+                    Ok(fresh) => {
+                        *backend = fresh;
+                        ctx.obs.hub.record_restart();
+                        ctx.obs.emit(
+                            Event::new("worker.restart")
+                                .with(
+                                    "thread",
+                                    "rskpca-embed-worker",
+                                )
+                                .with("scope", "backend"),
+                        );
+                    }
+                    Err(e) => {
+                        // Keep the old backend: it may still serve,
+                        // and failing the *next* batch beats killing
+                        // the worker here.
+                        eprintln!(
+                            "rskpca: backend rebuild after panic \
+                             failed: {e}"
+                        );
+                    }
+                }
+                Err(Error::Service(
+                    "backend panicked during embed; batch aborted"
+                        .into(),
+                ))
+            }
+        }
     };
     let prev_version = *last_version;
     let swapped = version != prev_version;
@@ -608,9 +745,9 @@ fn execute_batch(
     // already see this batch reflected in a stats snapshot.
     {
         let now_us = ctx.clock.now_us();
-        let mut s = ctx.stats.lock().unwrap();
+        let mut s = crate::sync::lock(&ctx.stats);
         s.batches += 1;
-        s.requests += batch.len() as u64;
+        s.requests += live.len() as u64;
         s.rows += total_rows as u64;
         s.batch_rows.record(total_rows as f64);
         if swapped {
@@ -620,7 +757,7 @@ fn execute_batch(
         s.model_version = version;
         s.model_precision = model.precision();
         s.model_quant = model.quant_error();
-        for req in batch {
+        for req in &live {
             s.latency_us
                 .record(now_us.saturating_sub(req.enqueued_us) as f64);
         }
@@ -631,7 +768,7 @@ fn execute_batch(
     let obs = &ctx.obs;
     if obs.metrics_enabled() {
         let hub = &obs.hub;
-        hub.requests_1m.incr(obs.now_s(), batch.len() as u64);
+        hub.requests_1m.incr(obs.now_s(), live.len() as u64);
         hub.batch_rows.record(total_rows as f64);
         hub.embed_us.record(embed_us as f64);
         if let Some(t) = backend.last_stage_times() {
@@ -639,7 +776,7 @@ fn execute_batch(
             hub.profile_us.record(t.profile_ns as f64 / 1_000.0);
             hub.coeff_us.record(t.coeff_ns as f64 / 1_000.0);
         }
-        for req in batch {
+        for req in &live {
             hub.queue_wait_us.record(
                 req.popped_us.saturating_sub(req.enqueued_us) as f64,
             );
@@ -655,7 +792,7 @@ fn execute_batch(
                 .with("to", version),
         );
     }
-    for req in batch {
+    for req in &live {
         obs.emit(
             Event::new("span.embed")
                 .trace(req.trace_id)
@@ -674,9 +811,9 @@ fn execute_batch(
     }
     obs.emit(
         Event::new("batch.flush")
-            .trace(batch.first().map_or(0, |r| r.trace_id))
+            .trace(live.first().map_or(0, |r| r.trace_id))
             .with("reason", reason.name())
-            .with("requests", batch.len())
+            .with("requests", live.len())
             .with("rows", total_rows)
             .with("embed_us", embed_us)
             .with("ok", u64::from(result.is_ok())),
@@ -685,7 +822,7 @@ fn execute_batch(
     match result {
         Ok(embedded) => {
             let mut at = 0usize;
-            for req in batch {
+            for req in &live {
                 let q = req.rows.rows();
                 let idx: Vec<usize> = (at..at + q).collect();
                 let part = embedded.select_rows(&idx);
@@ -694,7 +831,7 @@ fn execute_batch(
             }
         }
         Err(e) => {
-            for req in batch {
+            for req in &live {
                 let _ = req
                     .reply
                     .send(Err(Error::Service(format!("batch failed: {e}"))));
@@ -1169,6 +1306,102 @@ mod tests {
         assert!(r1.recv().unwrap().is_err());
         assert!(r2.recv().unwrap().is_err());
         // The service keeps running after a failed batch.
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_before_compute() {
+        let (model, x) = test_model();
+        let svc = EmbeddingService::start(
+            model,
+            native(),
+            ServiceConfig {
+                max_batch: 4,
+                max_wait_us: 500,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = svc.handle();
+        // An absolute deadline of 1µs is long past by the time the
+        // worker picks the request up (startup warmup alone took
+        // longer), so the batch worker must shed it pre-compute.
+        let rx = h.try_embed_traced(x.select_rows(&[0]), 7, 1).unwrap();
+        let err = rx.recv().unwrap().err().expect("must be shed");
+        assert!(matches!(err, Error::DeadlineExceeded(_)), "{err}");
+        // A deadline-free request on the same service still computes.
+        let ok = h.embed(x.select_rows(&[1])).unwrap();
+        assert_eq!(ok.rows(), 1);
+        let obs = h.obs();
+        assert_eq!(obs.hub.deadline_shed(), 1);
+        assert_eq!(obs.events_named("embed.expired").len(), 1);
+        let snap = svc.shutdown();
+        // The shed request never counted as served work.
+        assert_eq!(snap.requests, 1);
+    }
+
+    /// A backend that panics on its `panic_on`-th gram call (counted
+    /// across rebuilds through the shared counter) — chaos injection
+    /// for the per-batch panic-isolation path.
+    struct PanicNth {
+        calls: Arc<std::sync::atomic::AtomicUsize>,
+        panic_on: usize,
+        inner: NativeBackend,
+    }
+
+    impl GramBackend for PanicNth {
+        fn gram(
+            &mut self,
+            x: &Matrix,
+            y: &Matrix,
+            kernel: &Kernel,
+        ) -> Result<Matrix> {
+            let n = self
+                .calls
+                .fetch_add(1, std::sync::atomic::Ordering::SeqCst)
+                + 1;
+            if n == self.panic_on {
+                panic!("injected backend panic");
+            }
+            self.inner.gram(x, y, kernel)
+        }
+        fn name(&self) -> &'static str {
+            "panic-nth"
+        }
+    }
+
+    #[test]
+    fn backend_panic_poisons_only_its_batch() {
+        let (model, x) = test_model();
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let c2 = calls.clone();
+        let svc = EmbeddingService::start(
+            model,
+            // The factory is `Fn`, so the worker can rebuild the
+            // backend after a caught panic; the shared call counter
+            // makes the panic a one-shot across rebuilds.
+            Box::new(move || {
+                Ok(Box::new(PanicNth {
+                    calls: c2.clone(),
+                    panic_on: 2, // call 1 is the startup warmup
+                    inner: NativeBackend::new(),
+                }) as Box<dyn GramBackend>)
+            }),
+            ServiceConfig::default(),
+        )
+        .unwrap();
+        let h = svc.handle();
+        let r1 = h.try_embed(x.select_rows(&[0])).unwrap();
+        let e = r1.recv().unwrap().err().expect("panicked batch errors");
+        assert!(e.to_string().contains("panicked"), "{e}");
+        // The worker survived and the rebuilt backend serves.
+        let z = h.embed(x.select_rows(&[1])).unwrap();
+        assert_eq!(z.rows(), 1);
+        let obs = h.obs();
+        assert_eq!(obs.hub.worker_panics(), 1);
+        assert_eq!(obs.hub.worker_restarts(), 1);
+        assert_eq!(obs.events_named("worker.panic").len(), 1);
+        assert_eq!(obs.events_named("worker.restart").len(), 1);
         svc.shutdown();
     }
 

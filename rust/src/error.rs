@@ -29,6 +29,11 @@ pub enum Error {
     /// off (the HTTP layer maps it to `429 Too Many Requests` with a
     /// `Retry-After` hint).
     Saturated(String),
+    /// The request's end-to-end deadline expired before the work ran;
+    /// it was shed instead of computed.  The HTTP layer maps it to
+    /// `504 Gateway Timeout` — retrying with a larger `X-Deadline-Ms`
+    /// budget (or none) may succeed.
+    DeadlineExceeded(String),
 }
 
 impl fmt::Display for Error {
@@ -42,6 +47,9 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Service(m) => write!(f, "service error: {m}"),
             Error::Saturated(m) => write!(f, "saturated: {m}"),
+            Error::DeadlineExceeded(m) => {
+                write!(f, "deadline exceeded: {m}")
+            }
         }
     }
 }

@@ -3,40 +3,110 @@
 //! process invocations (fit once, serve forever — the RSKPCA deployment
 //! story).
 //!
-//! Format versioning: the `format` field is the version byte.  v3
-//! (`rskpca-model-v3`, current) adds the serving `precision` and the
-//! quantization-error diagnostic (`quant_max_rel` / `quant_mean_rel`)
-//! recorded at publish time.  The f32 payload itself is **not** stored:
-//! quantization is a deterministic function of the f64 operands, so an
-//! f32-precision file re-quantizes on load — the file stays half the
-//! size it would be and the f64 numerics are the single source of
-//! truth.  v2 (`rskpca-model-v2`) added the lifecycle metadata —
-//! refresh `version` counter, eigensolver policy, and source RSDE kind.
-//! v1/v2 files still load (as f64-serving models with default / their
-//! recorded metadata); refresh numerics are unchanged by the upgrade.
+//! Format versioning: the `format` field is the version byte.  v4
+//! (`rskpca-model-v4`, current) adds *durability*: the file carries a
+//! CRC32 trailer (`\ncrc32:<8 hex>\n` after the JSON document) that
+//! [`EmbeddingModel::load`] verifies, and saves go through a
+//! write-temp → fsync → atomic-rename sequence so a crash mid-save
+//! leaves either the old file or the new one, never a torn hybrid.  A
+//! file whose trailer fails verification is *quarantined* (renamed to
+//! `<path>.corrupt`) rather than silently served.  The JSON document
+//! itself is unchanged from v3, which added the serving `precision`
+//! and the quantization-error diagnostic (`quant_max_rel` /
+//! `quant_mean_rel`) recorded at publish time.  The f32 payload itself
+//! is **not** stored: quantization is a deterministic function of the
+//! f64 operands, so an f32-precision file re-quantizes on load — the
+//! file stays half the size it would be and the f64 numerics are the
+//! single source of truth.  v2 (`rskpca-model-v2`) added the lifecycle
+//! metadata — refresh `version` counter, eigensolver policy, and
+//! source RSDE kind.  v1–v3 files still load (trailer-less, as
+//! f64-serving models where they predate `precision`); refresh
+//! numerics are unchanged by the upgrade.
 
-use std::path::Path;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 
 use super::{EigSolver, EmbeddingModel, ModelMeta, Precision};
 use crate::error::{Error, Result};
 use crate::kernel::{Kernel, KernelKind};
 use crate::linalg::Matrix;
+use crate::obs::{Event, Obs};
 use crate::ser::{parse, Json};
 
 /// Current on-disk format tag.
-const FORMAT_V3: &str = "rskpca-model-v3";
+const FORMAT_V4: &str = "rskpca-model-v4";
 /// Legacy format tags (read-only compatibility).
+const FORMAT_V3: &str = "rskpca-model-v3";
 const FORMAT_V2: &str = "rskpca-model-v2";
 const FORMAT_V1: &str = "rskpca-model-v1";
 
+/// CRC-32 (IEEE 802.3, reflected, polynomial `0xEDB88320`) — the same
+/// checksum gzip/zip/PNG use, computed bitwise; model files are small
+/// and loaded rarely, so a lookup table would buy nothing.
+fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Split a model file into its JSON payload and optional checksum
+/// trailer.  `Ok` returns the payload to parse: the text before the
+/// trailer for a verified v4 file, or the whole text for a trailer-less
+/// legacy (v1–v3) file.  `Err` means the file has a trailer and it
+/// failed — the bytes are corrupt.
+fn verify_trailer(text: &str) -> std::result::Result<&str, String> {
+    // Legacy files are single-line JSON documents; only v4 writes a
+    // "\ncrc32:" line, so its absence means "no checksum to check".
+    let Some(idx) = text.rfind("\ncrc32:") else {
+        return Ok(text);
+    };
+    let payload = &text[..idx];
+    let hex = text[idx + 1..]
+        .strip_prefix("crc32:")
+        .and_then(|rest| rest.strip_suffix('\n'))
+        .ok_or_else(|| "malformed checksum trailer".to_string())?;
+    let want = u32::from_str_radix(hex, 16)
+        .map_err(|_| "malformed checksum trailer".to_string())?;
+    let got = crc32(payload.as_bytes());
+    if got != want {
+        return Err(format!(
+            "checksum mismatch: trailer says {want:08x}, \
+             content hashes to {got:08x}"
+        ));
+    }
+    Ok(payload)
+}
+
+/// Rename a corrupt model file to `<path>.corrupt` so it can't be
+/// load-looped or silently served; returns whether the rename landed.
+fn quarantine(path: &Path) -> bool {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".corrupt");
+    std::fs::rename(path, PathBuf::from(os)).is_ok()
+}
+
+/// Sibling temp path for the atomic save (same directory, so the
+/// final `rename` never crosses a filesystem boundary).
+fn sibling_tmp(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(format!(".tmp.{}", std::process::id()));
+    PathBuf::from(os)
+}
+
 impl EmbeddingModel {
-    /// Serialize to JSON (always writes the current v3 format).  The
+    /// Serialize to JSON (always writes the current v4 format).  The
     /// serving `precision` is persisted; for f32-published models the
     /// recorded probe-block error rides along as a diagnostic (the f32
     /// payload itself is recomputed deterministically on load).
     pub fn to_json(&self) -> Json {
         let mut doc = Json::obj()
-            .with("format", Json::Str(FORMAT_V3.into()))
+            .with("format", Json::Str(FORMAT_V4.into()))
             .with("version", Json::Num(self.meta.version as f64))
             .with("solver", Json::Str(self.meta.solver.name()))
             .with(
@@ -68,8 +138,8 @@ impl EmbeddingModel {
     }
 
     /// Deserialize from JSON (validating shapes); accepts the current
-    /// v3 format and legacy v2/v1 files (which load as f64-serving
-    /// models, v1 additionally with default metadata).  A v3 file
+    /// v4 format and legacy v3/v2/v1 files (v2/v1 load as f64-serving
+    /// models, v1 additionally with default metadata).  A v3/v4 file
     /// published at f32 precision is re-quantized on load (a
     /// deterministic function of the stored f64 operands).
     pub fn from_json(v: &Json) -> Result<EmbeddingModel> {
@@ -86,7 +156,7 @@ impl EmbeddingModel {
                 },
                 Precision::F64,
             ),
-            FORMAT_V2 | FORMAT_V3 => {
+            FORMAT_V2 | FORMAT_V3 | FORMAT_V4 => {
                 let version = v.req_usize("version")? as u64;
                 let solver_name = v.req_str("solver")?;
                 let solver = EigSolver::parse(solver_name)
@@ -105,15 +175,15 @@ impl EmbeddingModel {
                     }
                 };
                 // v2 predates the precision field: always f64 serving.
-                let precision = if format == FORMAT_V3 {
+                let precision = if format == FORMAT_V2 {
+                    Precision::F64
+                } else {
                     let p = v.req_str("precision")?;
                     Precision::parse(p).ok_or_else(|| {
                         Error::Parse(format!(
                             "unknown serving precision '{p}'"
                         ))
                     })?
-                } else {
-                    Precision::F64
                 };
                 (ModelMeta { version, solver, rsde }, precision)
             }
@@ -159,17 +229,74 @@ impl EmbeddingModel {
         Ok(model)
     }
 
-    /// Save to a file.
+    /// Durable save: JSON payload + CRC32 trailer, written to a
+    /// sibling temp file, fsynced, and atomically renamed over the
+    /// target.  A crash at any point leaves either the previous file
+    /// or the complete new one — never a torn hybrid, which is what
+    /// the checksum-verifying [`EmbeddingModel::load`] would otherwise
+    /// have to quarantine.
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string())
-            .map_err(|e| Error::Io(format!("{}: {e}", path.display())))
+        let payload = self.to_json().to_string();
+        let crc = crc32(payload.as_bytes());
+        let mut data = payload.into_bytes();
+        data.extend_from_slice(
+            format!("\ncrc32:{crc:08x}\n").as_bytes(),
+        );
+        let tmp = sibling_tmp(path);
+        let write = (|| -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&data)?;
+            // fsync before rename: the rename must never make visible
+            // a file whose bytes are still only in the page cache.
+            f.sync_all()?;
+            drop(f);
+            std::fs::rename(&tmp, path)
+        })();
+        write.map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            Error::Io(format!("{}: {e}", path.display()))
+        })
     }
 
-    /// Load from a file.
+    /// Load from a file, verifying the v4 checksum trailer (legacy
+    /// v1–v3 files have none and are parsed as-is).  A file whose
+    /// trailer fails verification is quarantined — renamed to
+    /// `<path>.corrupt` — and the load errors.
     pub fn load(path: &Path) -> Result<EmbeddingModel> {
+        Self::load_checked(path, None)
+    }
+
+    /// [`EmbeddingModel::load`] with an observability handle: a
+    /// quarantined file additionally bumps the `model_corrupt` counter
+    /// and leaves a `model.corrupt` event in the ring.
+    pub fn load_checked(
+        path: &Path,
+        obs: Option<&Obs>,
+    ) -> Result<EmbeddingModel> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
-        EmbeddingModel::from_json(&parse(&text)?)
+        match verify_trailer(&text) {
+            Ok(payload) => EmbeddingModel::from_json(&parse(payload)?),
+            Err(why) => {
+                let quarantined = quarantine(path);
+                if let Some(obs) = obs {
+                    obs.hub.record_model_corrupt();
+                    obs.emit(
+                        Event::new("model.corrupt")
+                            .with("quarantined", u64::from(quarantined)),
+                    );
+                }
+                Err(Error::Io(format!(
+                    "{}: {why}{}",
+                    path.display(),
+                    if quarantined {
+                        " (file quarantined as .corrupt)"
+                    } else {
+                        ""
+                    }
+                )))
+            }
+        }
     }
 }
 
@@ -236,22 +363,22 @@ mod tests {
         assert_eq!(model.precision(), crate::kpca::Precision::F64);
         // ... and re-saving upgrades the file to the current format.
         let upgraded = model.to_json();
-        assert_eq!(upgraded.req_str("format").unwrap(), "rskpca-model-v3");
+        assert_eq!(upgraded.req_str("format").unwrap(), "rskpca-model-v4");
         assert_eq!(upgraded.req_str("precision").unwrap(), "f64");
     }
 
     #[test]
-    fn all_three_format_versions_roundtrip() {
+    fn all_four_format_versions_roundtrip() {
         let ds = gaussian_mixture_2d(60, 3, 0.4, 9);
         let k = Kernel::gaussian(1.0);
         let mut model = fit_kpca(&ds.x, &k, 3).unwrap();
         model.quantize_for_serving().unwrap();
         let z_ref = model.transform(&ds.x);
 
-        // v3 (current): precision + diagnostic round-trip; the f32
+        // v4 (current): precision + diagnostic round-trip; the f32
         // payload is rebuilt deterministically on load.
         let doc = model.to_json();
-        assert_eq!(doc.req_str("format").unwrap(), "rskpca-model-v3");
+        assert_eq!(doc.req_str("format").unwrap(), "rskpca-model-v4");
         assert_eq!(doc.req_str("precision").unwrap(), "f32");
         let err = model.quant_error().unwrap();
         assert_eq!(doc.req_f64("quant_max_rel").unwrap(), err.max_rel);
@@ -265,9 +392,34 @@ mod tests {
             z_ref.sub(&back.transform(&ds.x)).unwrap().max_abs() < 1e-12
         );
 
+        // v3 (legacy): identical document body under the v3 tag (v4
+        // only added the file-level checksum trailer).
+        let v3_doc = match doc.clone() {
+            Json::Obj(fields) => Json::Obj(
+                fields
+                    .into_iter()
+                    .map(|(key, val)| {
+                        if key == "format" {
+                            (key, Json::Str(FORMAT_V3.into()))
+                        } else {
+                            (key, val)
+                        }
+                    })
+                    .collect(),
+            ),
+            _ => unreachable!(),
+        };
+        let v3_back = EmbeddingModel::from_json(&v3_doc).unwrap();
+        assert_eq!(v3_back.precision(), crate::kpca::Precision::F32);
+        assert_eq!(v3_back.meta, model.meta);
+        assert!(
+            z_ref.sub(&v3_back.transform(&ds.x)).unwrap().max_abs()
+                < 1e-12
+        );
+
         // v2 (legacy): same document minus the v3 fields — loads as an
         // f64-serving model with its recorded metadata.
-        let v2_doc = match doc.clone() {
+        let v2_doc = match v3_doc {
             Json::Obj(fields) => Json::Obj(
                 fields
                     .into_iter()
@@ -334,6 +486,64 @@ mod tests {
         let z1 = model.transform(&ds.x);
         let z2 = back.transform(&ds.x);
         assert!(z1.sub(&z2).unwrap().max_abs() < 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn saved_files_carry_a_verifying_checksum_trailer() {
+        let ds = gaussian_mixture_2d(30, 2, 0.4, 4);
+        let model = fit_kpca(&ds.x, &Kernel::gaussian(1.0), 2).unwrap();
+        let path = std::env::temp_dir().join("rskpca_model_crc.json");
+        model.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let idx = text.rfind("\ncrc32:").expect("v4 trailer present");
+        assert!(text.ends_with('\n'));
+        // The trailer verifies against the payload it covers.
+        assert_eq!(verify_trailer(&text).unwrap(), &text[..idx]);
+        // The atomic save left no temp file behind.
+        assert!(!sibling_tmp(&path).exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_file_is_detected_and_quarantined() {
+        let ds = gaussian_mixture_2d(30, 2, 0.4, 5);
+        let model = fit_kpca(&ds.x, &Kernel::gaussian(1.0), 2).unwrap();
+        let dir = std::env::temp_dir();
+        let path = dir.join("rskpca_model_corrupt.json");
+        let qpath = dir.join("rskpca_model_corrupt.json.corrupt");
+        std::fs::remove_file(&qpath).ok();
+        model.save(&path).unwrap();
+        // Flip payload bytes without touching the trailer (same
+        // length, different content — exactly what bit rot does).
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replacen("kernel", "kernal", 1);
+        assert_ne!(tampered, text);
+        std::fs::write(&path, &tampered).unwrap();
+        let obs = Obs::default();
+        let err = EmbeddingModel::load_checked(&path, Some(&obs))
+            .err()
+            .expect("corrupt file must not load");
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Quarantined: original gone, `.corrupt` sibling present.
+        assert!(!path.exists());
+        assert!(qpath.exists());
+        assert_eq!(obs.hub.model_corrupt(), 1);
+        assert_eq!(obs.events_named("model.corrupt").len(), 1);
+        std::fs::remove_file(&qpath).ok();
+    }
+
+    #[test]
+    fn legacy_trailerless_files_still_load() {
+        let ds = gaussian_mixture_2d(30, 2, 0.4, 6);
+        let model = fit_kpca(&ds.x, &Kernel::gaussian(1.0), 2).unwrap();
+        let path =
+            std::env::temp_dir().join("rskpca_model_legacy.json");
+        // Simulate a pre-v4 file: bare JSON document, no trailer (the
+        // document's format tag is independent of the file trailer).
+        std::fs::write(&path, model.to_json().to_string()).unwrap();
+        let back = EmbeddingModel::load(&path).unwrap();
+        assert_eq!(back.r(), model.r());
         std::fs::remove_file(&path).ok();
     }
 

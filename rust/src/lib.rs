@@ -67,6 +67,7 @@ pub mod prng;
 pub mod runtime;
 pub mod ser;
 pub mod server;
+pub mod sync;
 pub mod testutil;
 
 pub use error::{Error, Result};

@@ -253,7 +253,7 @@ impl RingEmitter {
     pub fn snapshot(&self) -> Vec<Event> {
         let mut out = Vec::new();
         for shard in &self.shards {
-            let guard = shard.lock().unwrap();
+            let guard = crate::sync::lock(shard);
             // Oldest-first within the shard: head..end then 0..head.
             if guard.buf.len() == self.shard_cap {
                 out.extend_from_slice(&guard.buf[guard.head..]);
@@ -345,6 +345,70 @@ pub struct MetricsHub {
     pub batch_rows: StageHistogram,
     /// Requests completed over the trailing window (rate gauge).
     pub requests_1m: WindowedCounter,
+    /// Panics caught by a supervisor or the batch worker's per-batch
+    /// isolation (`worker.panic` events).
+    worker_panics: AtomicU64,
+    /// Thread restarts / backend rebuilds performed after a caught
+    /// panic (`worker.restart` events).
+    worker_restarts: AtomicU64,
+    /// Requests shed at batch pickup because their end-to-end deadline
+    /// had already expired (`embed.expired` events, 504s).
+    deadline_shed: AtomicU64,
+    /// Refresher circuit-breaker state gauge: 0 = closed (healthy),
+    /// 1 = open (refreshes suspended, serving last good model),
+    /// 2 = half-open (probe in flight).
+    breaker_state: AtomicU64,
+    /// Model files quarantined on checksum mismatch (`model.corrupt`
+    /// events).
+    model_corrupt: AtomicU64,
+}
+
+impl MetricsHub {
+    /// Count one caught panic (supervisor or per-batch isolation).
+    pub fn record_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one restart / backend rebuild after a caught panic.
+    pub fn record_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request shed for an expired deadline.
+    pub fn record_deadline_shed(&self) {
+        self.deadline_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish the refresher breaker state (0 closed / 1 open /
+    /// 2 half-open).
+    pub fn set_breaker_state(&self, state: u64) {
+        self.breaker_state.store(state, Ordering::Relaxed);
+    }
+
+    /// Count one quarantined (checksum-mismatch) model file.
+    pub fn record_model_corrupt(&self) {
+        self.model_corrupt.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn worker_panics(&self) -> u64 {
+        self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_shed(&self) -> u64 {
+        self.deadline_shed.load(Ordering::Relaxed)
+    }
+
+    pub fn breaker_state(&self) -> u64 {
+        self.breaker_state.load(Ordering::Relaxed)
+    }
+
+    pub fn model_corrupt(&self) -> u64 {
+        self.model_corrupt.load(Ordering::Relaxed)
+    }
 }
 
 impl Default for MetricsHub {
@@ -360,6 +424,11 @@ impl Default for MetricsHub {
             write_us: StageHistogram::new(US_BOUNDS),
             batch_rows: StageHistogram::new(ROWS_BOUNDS),
             requests_1m: WindowedCounter::new(60),
+            worker_panics: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            deadline_shed: AtomicU64::new(0),
+            breaker_state: AtomicU64::new(0),
+            model_corrupt: AtomicU64::new(0),
         }
     }
 }

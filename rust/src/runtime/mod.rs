@@ -195,8 +195,12 @@ pub fn backend_from_name(
 
 /// A thread-portable recipe for constructing a backend; the coordinator
 /// worker invokes it on its own thread (PJRT handles are not `Send`).
+///
+/// `Fn`, not `FnOnce`: the worker keeps the factory and re-invokes it
+/// to *rebuild* the backend after a caught panic (a panicking backend
+/// left its internal state suspect) or a supervised restart.
 pub type BackendFactory =
-    Box<dyn FnOnce() -> Result<Box<dyn GramBackend>> + Send>;
+    Box<dyn Fn() -> Result<Box<dyn GramBackend>> + Send>;
 
 /// Factory for a named backend over an artifacts dir.
 pub fn factory_from_name(name: &str, artifacts_dir: &std::path::Path)

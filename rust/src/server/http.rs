@@ -329,6 +329,7 @@ pub fn reason(status: u16) -> &'static str {
         500 => "Internal Server Error",
         501 => "Not Implemented",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         505 => "HTTP Version Not Supported",
         _ => "Unknown",
     }
@@ -570,10 +571,29 @@ impl ClientConn {
         path: &str,
         body: &[u8],
     ) -> crate::error::Result<ClientResponse> {
+        self.request_with_headers(method, path, &[], body)
+    }
+
+    /// [`ClientConn::request`] with extra request headers (for
+    /// per-request metadata such as `X-Deadline-Ms`).
+    pub fn request_with_headers(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> crate::error::Result<ClientResponse> {
+        let mut extra = String::new();
+        for (k, v) in headers {
+            extra.push_str(k);
+            extra.push_str(": ");
+            extra.push_str(v);
+            extra.push_str("\r\n");
+        }
         let head = format!(
             "{method} {path} HTTP/1.1\r\nhost: rskpca\r\n\
              content-type: application/json\r\n\
-             content-length: {}\r\n\r\n",
+             {extra}content-length: {}\r\n\r\n",
             body.len()
         );
         self.stream

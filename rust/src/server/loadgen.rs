@@ -28,7 +28,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::event::{poll_fds, stream_fd, PollFd, POLLIN, POLLOUT};
-use super::http::{ClientConn, ResponseReader};
+use super::http::{ClientConn, ClientResponse, ResponseReader};
 use crate::error::{Error, Result};
 use crate::metrics::Histogram;
 use crate::obs::prom;
@@ -69,6 +69,11 @@ pub struct LoadgenConfig {
     /// flight (strictly parsed; samples land in the report);
     /// 0 = no polling.
     pub metrics_poll_s: u64,
+    /// Re-send 429/503 responses after the server's `Retry-After`
+    /// hint (plus jitter) instead of counting them rejected.  Each
+    /// request retries at most [`MAX_RETRIES`] times before being
+    /// tallied as rejected after all.
+    pub retry: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -83,9 +88,17 @@ impl Default for LoadgenConfig {
             warmup_ms: 5000,
             rate: 0.0,
             metrics_poll_s: 0,
+            retry: false,
         }
     }
 }
+
+/// Retry budget per request under `--retry`, so a permanently
+/// saturated server cannot keep the run alive forever.
+const MAX_RETRIES: u32 = 8;
+
+/// Fallback backoff when a 429/503 carries no usable hint.
+const RETRY_FALLBACK_MS: u64 = 100;
 
 /// One mid-run `GET /metrics` scrape captured by `--metrics-poll`.
 /// Each scrape is validated by the strict [`prom::parse`] checker, so
@@ -123,6 +136,13 @@ pub struct LoadgenReport {
     pub requests_ok: u64,
     /// 429 responses (admission control working as designed).
     pub rejected: u64,
+    /// 504 responses: the request's end-to-end deadline expired and
+    /// the server shed the work before compute.  Counted apart from
+    /// `errors` — a 504 is the deadline machinery working as designed.
+    pub deadline_504: u64,
+    /// Re-sends performed under `--retry` (each counted once per
+    /// re-issued attempt; the final outcome lands in ok/rejected).
+    pub retries: u64,
     /// Transport failures and non-200/429 statuses.
     pub errors: u64,
     /// Open-loop ticks that found no idle connection (offered load
@@ -166,6 +186,8 @@ impl LoadgenReport {
             .with("clients", Json::Num(self.clients as f64))
             .with("requests_ok", Json::Num(self.requests_ok as f64))
             .with("rejected", Json::Num(self.rejected as f64))
+            .with("deadline_504", Json::Num(self.deadline_504 as f64))
+            .with("retries", Json::Num(self.retries as f64))
             .with("errors", Json::Num(self.errors as f64))
             .with("overruns", Json::Num(self.overruns as f64))
             .with("rows_ok", Json::Num(self.rows_ok as f64))
@@ -196,20 +218,28 @@ impl LoadgenReport {
 
     /// Multi-line human-readable report.
     pub fn render(&mut self) -> String {
-        let total = self.requests_ok + self.rejected + self.errors;
+        let total = self.requests_ok
+            + self.rejected
+            + self.deadline_504
+            + self.errors;
         let max_us = if self.latency_us.is_empty() {
             0.0
         } else {
             self.latency_us.max()
         };
-        let overruns = if self.overruns > 0 {
-            format!(", {} overruns", self.overruns)
-        } else {
-            String::new()
-        };
+        let mut extras = String::new();
+        if self.deadline_504 > 0 {
+            extras += &format!(", {} deadline (504)", self.deadline_504);
+        }
+        if self.retries > 0 {
+            extras += &format!(", {} retries", self.retries);
+        }
+        if self.overruns > 0 {
+            extras += &format!(", {} overruns", self.overruns);
+        }
         format!(
             "loadgen: {total} requests from {} clients in {:.3}s — \
-             {} ok, {} rejected (429), {} errors{overruns}\n\
+             {} ok, {} rejected (429), {} errors{extras}\n\
              throughput: {:.0} rows/s ({:.1} req/s)\n\
              latency: mean={:.0}us p50={:.0}us p95={:.0}us \
              p99={:.0}us max={:.0}us",
@@ -288,6 +318,8 @@ pub fn discover_dim(target: &str) -> Result<usize> {
 struct ShardTally {
     requests_ok: u64,
     rejected: u64,
+    deadline_504: u64,
+    retries: u64,
     errors: u64,
     overruns: u64,
     rows_ok: u64,
@@ -305,12 +337,17 @@ struct Slot {
     in_flight: bool,
     t_start: Instant,
     requests_left: usize,
+    /// Under `--retry`: when set, the slot is parked until this
+    /// instant, then re-issues the rejected request.
+    retry_at: Option<Instant>,
+    /// Retries consumed by the current request (reset on completion).
+    attempts: u32,
     rng: Pcg64,
 }
 
 impl Slot {
     fn idle(&self) -> bool {
-        !self.in_flight && self.requests_left > 0
+        !self.in_flight && self.requests_left > 0 && self.retry_at.is_none()
     }
 
     fn wants_write(&self) -> bool {
@@ -327,6 +364,8 @@ impl Slot {
         self.write_buf.clear();
         self.write_at = 0;
         self.in_flight = false;
+        self.retry_at = None;
+        self.attempts = 0;
     }
 }
 
@@ -394,6 +433,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         })?;
         report.requests_ok += part.requests_ok;
         report.rejected += part.rejected;
+        report.deadline_504 += part.deadline_504;
+        report.retries += part.retries;
         report.errors += part.errors;
         report.overruns += part.overruns;
         report.rows_ok += part.rows_ok;
@@ -484,6 +525,8 @@ fn shard_loop(
             in_flight: false,
             t_start: Instant::now(),
             requests_left: cfg.requests_per_client,
+            retry_at: None,
+            attempts: 0,
             rng: Pcg64::new(
                 cfg.seed
                     ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -505,6 +548,16 @@ fn shard_loop(
     loop {
         if slots.iter().all(|s| s.requests_left == 0) {
             return tally;
+        }
+        // Parked retries re-issue as soon as their backoff elapses.
+        // A retransmit of an admitted-then-rejected request, so it
+        // does not consume an open-loop tick.
+        let now = Instant::now();
+        for s in slots.iter_mut() {
+            if s.retry_at.is_some_and(|at| at <= now) {
+                s.retry_at = None;
+                issue(s, cfg, sock, dim, &mut tally);
+            }
         }
         if open_loop {
             // Fire every due tick; overrun when no slot is free to
@@ -647,10 +700,11 @@ fn advance_read(
                 match s.reader.try_next() {
                     Ok(Some(resp)) => {
                         s.in_flight = false;
-                        s.requests_left =
-                            s.requests_left.saturating_sub(1);
                         match resp.status {
                             200 => {
+                                s.requests_left =
+                                    s.requests_left.saturating_sub(1);
+                                s.attempts = 0;
                                 tally.requests_ok += 1;
                                 tally.rows_ok +=
                                     cfg.rows_per_request as u64;
@@ -661,8 +715,44 @@ fn advance_read(
                                         * 1e6,
                                 );
                             }
-                            429 => tally.rejected += 1,
-                            _ => tally.errors += 1,
+                            429 | 503
+                                if cfg.retry
+                                    && s.attempts < MAX_RETRIES =>
+                            {
+                                // Park the slot and re-send after the
+                                // server's backoff hint plus jitter;
+                                // the request is not consumed.
+                                s.attempts += 1;
+                                tally.retries += 1;
+                                let base = retry_hint_ms(&resp);
+                                let jitter =
+                                    s.rng.below(base as usize / 2 + 1)
+                                        as u64;
+                                s.retry_at = Some(
+                                    Instant::now()
+                                        + Duration::from_millis(
+                                            base + jitter,
+                                        ),
+                                );
+                            }
+                            429 => {
+                                s.requests_left =
+                                    s.requests_left.saturating_sub(1);
+                                s.attempts = 0;
+                                tally.rejected += 1;
+                            }
+                            504 => {
+                                s.requests_left =
+                                    s.requests_left.saturating_sub(1);
+                                s.attempts = 0;
+                                tally.deadline_504 += 1;
+                            }
+                            _ => {
+                                s.requests_left =
+                                    s.requests_left.saturating_sub(1);
+                                s.attempts = 0;
+                                tally.errors += 1;
+                            }
                         }
                         return;
                     }
@@ -683,6 +773,26 @@ fn advance_read(
             Err(_) => return s.fail(tally),
         }
     }
+}
+
+/// Backoff hint of a 429/503 response, milliseconds.  Prefers the
+/// body's millisecond-precision `retry_after_ms` field, falls back to
+/// the coarser `Retry-After` header (whole seconds), then to
+/// [`RETRY_FALLBACK_MS`].
+fn retry_hint_ms(resp: &ClientResponse) -> u64 {
+    if let Ok(v) = resp.json() {
+        if let Some(ms) =
+            v.get("retry_after_ms").and_then(|m| m.as_f64())
+        {
+            if ms >= 0.0 {
+                return ms as u64;
+            }
+        }
+    }
+    resp.header("retry-after")
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map(|secs| secs.saturating_mul(1000))
+        .unwrap_or(RETRY_FALLBACK_MS)
 }
 
 /// A `{"rows": [[...], ...]}` body of standard-normal rows.
@@ -750,6 +860,46 @@ mod tests {
         assert!(j.get("latency_p50_us").is_some());
         assert!(j.get("latency_p99_us").is_some());
         assert!(j.get("overruns").is_some());
+        assert!(j.get("retries").is_some());
+        assert!(j.get("deadline_504").is_some());
+    }
+
+    #[test]
+    fn retry_hint_prefers_body_ms_over_header_seconds() {
+        let with_body = ClientResponse {
+            status: 429,
+            headers: vec![("retry-after".into(), "1".into())],
+            body: br#"{"error":"x","status":429,"retry_after_ms":250}"#
+                .to_vec(),
+        };
+        assert_eq!(retry_hint_ms(&with_body), 250);
+        let header_only = ClientResponse {
+            status: 503,
+            headers: vec![("retry-after".into(), "2".into())],
+            body: b"busy".to_vec(),
+        };
+        assert_eq!(retry_hint_ms(&header_only), 2000);
+        let bare = ClientResponse {
+            status: 503,
+            headers: Vec::new(),
+            body: Vec::new(),
+        };
+        assert_eq!(retry_hint_ms(&bare), RETRY_FALLBACK_MS);
+    }
+
+    #[test]
+    fn retried_and_shed_outcomes_render_separately() {
+        let mut r = LoadgenReport {
+            requests_ok: 5,
+            rejected: 1,
+            deadline_504: 2,
+            retries: 3,
+            ..Default::default()
+        };
+        let text = r.render();
+        assert!(text.contains("8 requests"), "{text}");
+        assert!(text.contains("2 deadline (504)"), "{text}");
+        assert!(text.contains("3 retries"), "{text}");
     }
 
     #[test]

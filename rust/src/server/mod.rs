@@ -199,10 +199,27 @@ struct Conn {
     drain_until: Option<Instant>,
     /// Peer sent EOF; serve out what's in flight, accept nothing new.
     read_closed: bool,
+    /// Back-reference for the [`Drop`]-based `conns_open` decrement.
+    state: Arc<ServerState>,
+}
+
+/// `conns_open` is the `max_conns` admission gate, so it must stay
+/// honest on *every* path a connection can die — including a panic
+/// unwinding an event loop and dropping that thread's whole set before
+/// the supervisor restarts it.  Tying the decrement to `Drop` makes
+/// leaking a slot impossible by construction.
+impl Drop for Conn {
+    fn drop(&mut self) {
+        self.state.conns_open.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 impl Conn {
-    fn new(stream: TcpStream, conn_id: u64) -> Conn {
+    fn new(
+        stream: TcpStream,
+        conn_id: u64,
+        state: Arc<ServerState>,
+    ) -> Conn {
         Conn {
             stream,
             reader: RequestReader::new(),
@@ -216,6 +233,7 @@ impl Conn {
             discard_input: false,
             drain_until: None,
             read_closed: false,
+            state,
         }
     }
 
@@ -323,7 +341,19 @@ impl HttpServer {
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("rskpca-http-{i}"))
-                    .spawn(move || event_loop(&l, &st))
+                    .spawn(move || {
+                        // Supervised: a panic in the event loop (a
+                        // server bug — clients can't trigger one by
+                        // protocol) drops that thread's connections,
+                        // but the thread restarts with a fresh set
+                        // instead of silently shrinking the pool.  A
+                        // crash loop past the give-up threshold exits
+                        // the process (crash-only posture).
+                        let sup =
+                            crate::sync::Supervisor::new("rskpca-http");
+                        let obs = st.obs.clone();
+                        sup.run(&obs, || event_loop(&l, &st));
+                    })
                     .map_err(|e| {
                         Error::Service(format!(
                             "spawn event thread: {e}"
@@ -513,13 +543,11 @@ fn event_loop(listener: &Arc<TcpListener>, state: &Arc<ServerState>) {
             }
         }
 
-        // 6. Remove the dead.
+        // 6. Remove the dead (each drop decrements `conns_open`).
         if dead.iter().any(|&d| d) {
             let mut kept = Vec::with_capacity(conns.len());
             for (i, c) in conns.drain(..).enumerate() {
-                if dead[i] {
-                    state.conns_open.fetch_sub(1, Ordering::Relaxed);
-                } else {
+                if !dead[i] {
                     kept.push(c);
                 }
             }
@@ -531,9 +559,6 @@ fn event_loop(listener: &Arc<TcpListener>, state: &Arc<ServerState>) {
                 .map(|t| t.elapsed() >= SHUTDOWN_GRACE)
                 .unwrap_or(true);
             if conns.is_empty() || grace_over {
-                state
-                    .conns_open
-                    .fetch_sub(conns.len() as u64, Ordering::Relaxed);
                 return;
             }
         }
@@ -573,7 +598,7 @@ fn accept_burst(
                     continue;
                 }
                 state.conns_open.fetch_add(1, Ordering::Relaxed);
-                let mut c = Conn::new(stream, conn_id);
+                let mut c = Conn::new(stream, conn_id, state.clone());
                 if open >= cap {
                     state
                         .conns_rejected

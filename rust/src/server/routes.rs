@@ -47,6 +47,29 @@ pub(super) struct PendingEmbed {
     trace_id: u64,
 }
 
+/// Resolve a request's absolute deadline on the service clock:
+/// explicit `X-Deadline-Ms` header first (an unparsable value is
+/// treated as absent; an explicit `0` is a valid, already-expired
+/// budget), then the `[server] default_deadline_ms` fallback; `0`
+/// means no deadline.
+fn resolve_deadline(state: &ServerState, req: &Request) -> u64 {
+    match req
+        .header("x-deadline-ms")
+        .and_then(|v| v.trim().parse::<u64>().ok())
+    {
+        Some(ms) => state
+            .handle
+            .now_us()
+            .saturating_add(ms.saturating_mul(1000)),
+        None if state.cfg.default_deadline_ms > 0 => {
+            state.handle.now_us().saturating_add(
+                state.cfg.default_deadline_ms.saturating_mul(1000),
+            )
+        }
+        None => 0,
+    }
+}
+
 /// An embed request refused by a saturated queue under
 /// `queue_policy = "block"`: the connection parks (no thread blocks)
 /// and the event loop re-attempts admission each cycle via
@@ -56,6 +79,10 @@ pub(super) struct BlockedEmbed {
     version_before: u64,
     t_start: Instant,
     trace_id: u64,
+    /// Absolute end-to-end deadline (service clock, µs); `0` = none.
+    /// Checked on every re-admission attempt so a parked request can't
+    /// outlive its budget waiting for queue space.
+    deadline_us: u64,
 }
 
 /// The three ways a request leaves the router.
@@ -128,14 +155,25 @@ fn emit_request(
 }
 
 fn healthz(state: &ServerState) -> Response {
+    // Liveness stays 200 even when degraded: the server is up and
+    // serving its last good model; "degraded" flags that the
+    // background refresher's circuit breaker is open (or probing).
+    let breaker = state.obs.hub.breaker_state();
+    let status = if breaker == 0 { "ok" } else { "degraded" };
+    let breaker_name = match breaker {
+        0 => "closed",
+        1 => "open",
+        _ => "half-open",
+    };
     Response::json(
         200,
         &Json::obj()
-            .with("status", Json::Str("ok".into()))
+            .with("status", Json::Str(status.into()))
             .with(
                 "model",
                 Json::Str(state.handle.model_name().to_string()),
             )
+            .with("refresh_breaker", Json::Str(breaker_name.into()))
             .with(
                 "uptime_s",
                 Json::Num(state.started.elapsed().as_secs_f64()),
@@ -313,6 +351,35 @@ fn metrics(state: &ServerState) -> Response {
         "Observability events dropped by the bounded ring.",
         state.obs.events_dropped() as f64,
     );
+    p.counter(
+        "rskpca_worker_panics_total",
+        "Panics caught by supervised workers (batch worker, event \
+         loops, refresher).",
+        hub.worker_panics() as f64,
+    );
+    p.counter(
+        "rskpca_worker_restarts_total",
+        "Supervised restarts: thread restarts and post-panic backend \
+         rebuilds.",
+        hub.worker_restarts() as f64,
+    );
+    p.counter(
+        "rskpca_deadline_shed_total",
+        "Embed requests shed because their end-to-end deadline \
+         expired before compute.",
+        hub.deadline_shed() as f64,
+    );
+    p.counter(
+        "rskpca_model_corrupt_total",
+        "Model files quarantined after checksum verification failed.",
+        hub.model_corrupt() as f64,
+    );
+    p.gauge(
+        "rskpca_refresh_breaker_state",
+        "Background-refresher circuit breaker (0=closed, 1=open, \
+         2=half-open).",
+        hub.breaker_state() as f64,
+    );
     let hits: Vec<(&str, f64)> = ROUTES
         .iter()
         .map(|r| (*r, state.routes.hits(r) as f64))
@@ -466,7 +533,13 @@ fn swap(state: &ServerState, req: &Request) -> Response {
                  or set [server] allow_path_swap = true",
             );
         }
-        match EmbeddingModel::load(Path::new(p)) {
+        // Checked load: verifies the v4 checksum trailer and
+        // quarantines (renames to `.corrupt`) a file that fails it,
+        // emitting a `model.corrupt` event into the shared ring.
+        match EmbeddingModel::load_checked(
+            Path::new(p),
+            Some(&state.obs),
+        ) {
             Ok(m) => m,
             Err(e) => {
                 return Response::error(
@@ -551,12 +624,17 @@ fn embed_submit(
         .registry()
         .version(state.handle.model_name())
         .unwrap_or(0);
+    let deadline_us = resolve_deadline(state, req);
     if state.cfg.queue_policy == QueuePolicy::Block {
         // Block policy, event-loop style: a saturated queue parks the
         // *connection*, not a thread — admission is retried each
         // cycle (and the parked attempts never count as rejections,
         // matching the old blocking-send semantics).
-        match state.handle.try_embed_quiet(rows.clone(), trace_id) {
+        match state.handle.try_embed_quiet(
+            rows.clone(),
+            trace_id,
+            deadline_us,
+        ) {
             Ok(rx) => Handled::Pending(PendingEmbed {
                 rx,
                 version_before,
@@ -568,6 +646,7 @@ fn embed_submit(
                 version_before,
                 t_start,
                 trace_id,
+                deadline_us,
             }),
             Err(e) => done_embed(
                 state,
@@ -577,7 +656,8 @@ fn embed_submit(
             ),
         }
     } else {
-        match state.handle.try_embed_traced(rows, trace_id) {
+        match state.handle.try_embed_traced(rows, trace_id, deadline_us)
+        {
             Ok(rx) => Handled::Pending(PendingEmbed {
                 rx,
                 version_before,
@@ -610,12 +690,37 @@ pub(super) fn poll_pending(
     }
 }
 
-/// Re-attempt admission for a parked (block-policy) embed.
+/// Re-attempt admission for a parked (block-policy) embed.  An expired
+/// deadline is checked *first*: a request that outlived its budget
+/// waiting for queue space is shed here with a 504 instead of being
+/// admitted to compute it can no longer use.
 pub(super) fn retry_blocked(
     state: &ServerState,
     b: BlockedEmbed,
 ) -> Handled {
-    match state.handle.try_embed_quiet(b.rows.clone(), b.trace_id) {
+    if b.deadline_us != 0 && state.handle.now_us() >= b.deadline_us {
+        state.obs.hub.record_deadline_shed();
+        state.obs.emit(
+            Event::new("embed.expired")
+                .trace(b.trace_id)
+                .with("rows", b.rows.rows())
+                .with("where", "parked"),
+        );
+        let resp = embed_error(
+            state,
+            Error::DeadlineExceeded(
+                "deadline expired while parked on a saturated queue"
+                    .into(),
+            ),
+        );
+        record_embed(state, &resp, b.t_start, b.trace_id);
+        return Handled::Done(resp);
+    }
+    match state.handle.try_embed_quiet(
+        b.rows.clone(),
+        b.trace_id,
+        b.deadline_us,
+    ) {
         Ok(rx) => Handled::Pending(PendingEmbed {
             rx,
             version_before: b.version_before,
@@ -687,6 +792,17 @@ fn embed_error(state: &ServerState, e: Error) -> Response {
                     ),
             )
             .with_header("retry-after", &retry_s.to_string())
+        }
+        Error::DeadlineExceeded(m) => {
+            // The request's end-to-end budget ran out before compute;
+            // the work was shed, not attempted — 504, and retrying
+            // with a larger `X-Deadline-Ms` may succeed.
+            Response::json(
+                504,
+                &Json::obj()
+                    .with("error", Json::Str(m))
+                    .with("status", Json::Num(504.0)),
+            )
         }
         Error::Shape(m) => Response::error(400, &m),
         e => Response::error(500, &e.to_string()),

@@ -75,7 +75,7 @@ impl RouteStats {
         if error {
             e.errors.fetch_add(1, Ordering::Relaxed);
         }
-        e.latency_us.lock().unwrap().record(latency_us);
+        crate::sync::lock(&e.latency_us).record(latency_us);
     }
 
     /// Hit count for a route label (lock-free).
@@ -98,7 +98,7 @@ impl RouteStats {
             if hits == 0 {
                 continue;
             }
-            let lat = e.latency_us.lock().unwrap().clone();
+            let lat = crate::sync::lock(&e.latency_us).clone();
             obj = obj.with(
                 route,
                 Json::obj()

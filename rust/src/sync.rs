@@ -1,0 +1,299 @@
+//! Crash-only synchronization primitives: poison-recovering lock
+//! accessors and the panic-isolating thread supervisor.
+//!
+//! **Why poison recovery is correct here.** `std` poisons a `Mutex` /
+//! `RwLock` when a holder panics, and `.unwrap()` on the guard turns
+//! every *subsequent* acquisition into a panic too — one crashed batch
+//! poisons the `ModelRegistry` and takes the whole service down with
+//! it.  All shared state in this crate is kept consistent *within* a
+//! single guard scope (counters bumped, a map entry replaced, a
+//! histogram sample recorded); there is no multi-step invariant that a
+//! mid-panic unwind could leave half-applied.  Recovering the guard
+//! with [`PoisonError::into_inner`] is therefore safe, and it converts
+//! a lock-poisoning cascade into at worst one lost counter increment.
+//! The repo-wide rule (enforced by a ci.sh grep gate) is: no bare
+//! `.unwrap()` on a lock guard outside tests — use [`lock`], [`read`],
+//! [`write`].
+//!
+//! **Supervision.** [`Supervisor`] wraps a thread body in
+//! `catch_unwind`: a panic emits a typed `worker.panic` event, bumps
+//! the `/metrics` panic/restart counters, and re-enters the body after
+//! a capped exponential backoff.  A thread that keeps dying faster
+//! than [`Supervisor::reset_after_ms`] trips the give-up threshold:
+//! the process exits with a clear error rather than limping along with
+//! a permanently broken worker (crash-only semantics — the orchestrator
+//! restarts a whole process, never a half-alive one).
+
+use std::panic::AssertUnwindSafe;
+use std::sync::{
+    Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard,
+    RwLockWriteGuard,
+};
+use std::time::Instant;
+
+use crate::obs::{Event, Obs};
+
+/// Acquire a mutex, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Acquire a read lock, recovering the guard from poisoning.
+pub fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Acquire a write lock, recovering the guard from poisoning.
+pub fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Render a caught panic payload as a `&'static str` category for the
+/// (allocation-free) event stream, with the full text to stderr.
+pub fn panic_label(payload: &(dyn std::any::Any + Send)) -> &'static str {
+    if payload.downcast_ref::<&str>().is_some()
+        || payload.downcast_ref::<String>().is_some()
+    {
+        "message"
+    } else {
+        "opaque"
+    }
+}
+
+/// What the supervisor does when a thread exceeds its restart budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GiveUp {
+    /// Production: print the error and exit the process (crash-only —
+    /// a permanently broken worker must not serve half a service).
+    ExitProcess,
+    /// Tests: return from [`Supervisor::run`] instead of exiting.
+    Return,
+}
+
+/// Restart policy for one supervised thread.
+#[derive(Clone, Copy, Debug)]
+pub struct Supervisor {
+    /// Thread label stamped on `worker.panic` events.
+    pub name: &'static str,
+    /// Consecutive quick failures tolerated before giving up.
+    pub max_restarts: u32,
+    /// First backoff sleep; doubles per consecutive failure.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling.
+    pub backoff_cap_ms: u64,
+    /// A body that ran at least this long before panicking resets the
+    /// consecutive-failure count (the thread was healthy for a while).
+    pub reset_after_ms: u64,
+    /// Behavior past `max_restarts`.
+    pub give_up: GiveUp,
+}
+
+impl Supervisor {
+    /// The production policy: 50 ms · 2ⁿ backoff capped at 2 s, give up
+    /// (process exit) after 8 consecutive quick deaths.
+    pub fn new(name: &'static str) -> Supervisor {
+        Supervisor {
+            name,
+            max_restarts: 8,
+            backoff_base_ms: 50,
+            backoff_cap_ms: 2_000,
+            reset_after_ms: 10_000,
+            give_up: GiveUp::ExitProcess,
+        }
+    }
+
+    /// Backoff before restart number `attempt` (1-based).
+    fn backoff_ms(&self, attempt: u32) -> u64 {
+        let shift = attempt.saturating_sub(1).min(16);
+        (self.backoff_base_ms << shift).min(self.backoff_cap_ms)
+    }
+
+    /// Run `body` until it returns normally, restarting it after each
+    /// panic with capped exponential backoff.  Every panic emits a
+    /// `worker.panic` event and bumps `obs.hub.worker_panics`; every
+    /// restart bumps `obs.hub.worker_restarts`.  Returns the number of
+    /// restarts performed (only reachable under [`GiveUp::Return`] or
+    /// a normal body return).
+    pub fn run<F: FnMut()>(&self, obs: &Obs, mut body: F) -> u32 {
+        let mut consecutive = 0u32;
+        let mut restarts = 0u32;
+        loop {
+            let started = Instant::now();
+            match std::panic::catch_unwind(AssertUnwindSafe(&mut body)) {
+                Ok(()) => return restarts,
+                Err(payload) => {
+                    if started.elapsed().as_millis() as u64
+                        >= self.reset_after_ms
+                    {
+                        consecutive = 0;
+                    }
+                    consecutive += 1;
+                    obs.hub.record_panic();
+                    obs.emit(
+                        Event::new("worker.panic")
+                            .with("thread", self.name)
+                            .with("payload", panic_label(&*payload))
+                            .with("consecutive", consecutive as u64),
+                    );
+                    eprintln!(
+                        "worker.panic: thread '{}' panicked \
+                         (consecutive failure {consecutive})",
+                        self.name
+                    );
+                    if consecutive > self.max_restarts {
+                        eprintln!(
+                            "supervisor: thread '{}' exceeded {} \
+                             consecutive restarts; giving up",
+                            self.name, self.max_restarts
+                        );
+                        match self.give_up {
+                            GiveUp::ExitProcess => std::process::exit(17),
+                            GiveUp::Return => return restarts,
+                        }
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        self.backoff_ms(consecutive),
+                    ));
+                    obs.hub.record_restart();
+                    obs.emit(
+                        Event::new("worker.restart")
+                            .with("thread", self.name)
+                            .with("attempt", consecutive as u64),
+                    );
+                    restarts += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Spawn a named OS thread whose body runs under `policy`: panics are
+/// caught, counted, and restarted with backoff instead of killing the
+/// thread.  The returned handle joins when `body` returns normally
+/// (e.g. at shutdown).
+pub fn spawn_supervised<F>(
+    policy: Supervisor,
+    thread_name: String,
+    obs: std::sync::Arc<Obs>,
+    body: F,
+) -> std::io::Result<std::thread::JoinHandle<()>>
+where
+    F: FnMut() + Send + 'static,
+{
+    let mut body = body;
+    std::thread::Builder::new().name(thread_name).spawn(move || {
+        policy.run(&obs, &mut body);
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_helpers_recover_from_poisoning() {
+        let m = Arc::new(Mutex::new(5usize));
+        let r = Arc::new(RwLock::new(7usize));
+        let (mc, rc) = (m.clone(), r.clone());
+        let _ = std::thread::spawn(move || {
+            let _g1 = mc.lock().unwrap();
+            let _g2 = rc.write().unwrap();
+            panic!("poison both");
+        })
+        .join();
+        assert!(m.is_poisoned() && r.is_poisoned());
+        // Recovering accessors still see the pre-panic values.
+        assert_eq!(*lock(&m), 5);
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 6);
+        assert_eq!(*read(&r), 7);
+        *write(&r) = 8;
+        assert_eq!(*read(&r), 8);
+    }
+
+    #[test]
+    fn supervisor_restarts_until_body_succeeds() {
+        let obs = Obs::default();
+        let calls = AtomicU32::new(0);
+        let policy = Supervisor {
+            backoff_base_ms: 1,
+            backoff_cap_ms: 4,
+            give_up: GiveUp::Return,
+            ..Supervisor::new("test-worker")
+        };
+        let restarts = policy.run(&obs, || {
+            if calls.fetch_add(1, Ordering::SeqCst) < 3 {
+                panic!("flaky");
+            }
+        });
+        assert_eq!(restarts, 3);
+        assert_eq!(calls.load(Ordering::SeqCst), 4);
+        assert_eq!(obs.events_named("worker.panic").len(), 3);
+        assert_eq!(obs.events_named("worker.restart").len(), 3);
+        assert_eq!(obs.hub.worker_panics(), 3);
+        assert_eq!(obs.hub.worker_restarts(), 3);
+    }
+
+    #[test]
+    fn supervisor_gives_up_after_max_restarts() {
+        let obs = Obs::default();
+        let calls = AtomicU32::new(0);
+        let policy = Supervisor {
+            max_restarts: 2,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 2,
+            give_up: GiveUp::Return,
+            ..Supervisor::new("doomed")
+        };
+        policy.run(&obs, || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            panic!("always");
+        });
+        // Initial run + max_restarts retries, then give up.
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+        assert_eq!(obs.events_named("worker.panic").len(), 3);
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let p = Supervisor {
+            backoff_base_ms: 50,
+            backoff_cap_ms: 2_000,
+            ..Supervisor::new("x")
+        };
+        assert_eq!(p.backoff_ms(1), 50);
+        assert_eq!(p.backoff_ms(2), 100);
+        assert_eq!(p.backoff_ms(3), 200);
+        assert_eq!(p.backoff_ms(7), 2_000);
+        assert_eq!(p.backoff_ms(60), 2_000); // shift clamp, no overflow
+    }
+
+    #[test]
+    fn spawn_supervised_joins_on_normal_return() {
+        let obs = Arc::new(Obs::default());
+        let policy = Supervisor {
+            backoff_base_ms: 1,
+            backoff_cap_ms: 2,
+            give_up: GiveUp::Return,
+            ..Supervisor::new("spawned")
+        };
+        let n = Arc::new(AtomicU32::new(0));
+        let nc = n.clone();
+        let h = spawn_supervised(
+            policy,
+            "rskpca-test-supervised".into(),
+            obs.clone(),
+            move || {
+                if nc.fetch_add(1, Ordering::SeqCst) == 0 {
+                    panic!("first run dies");
+                }
+            },
+        )
+        .unwrap();
+        h.join().unwrap();
+        assert_eq!(n.load(Ordering::SeqCst), 2);
+        assert_eq!(obs.hub.worker_panics(), 1);
+    }
+}

@@ -7,10 +7,19 @@
 //! the sharpest: with one event thread, any scenario that blocked a
 //! thread (as each of these did under the old thread-per-connection
 //! pool) would stall the probe outright.
+//!
+//! The chaos half of the suite injects faults *behind* the HTTP
+//! layer: a backend that panics on its Nth Gram call (the panicked
+//! batch answers 500, everything after keeps answering 200), expired
+//! request deadlines (shed with 504 before any GEMM runs), and a
+//! corrupted model file on the swap path (detected by the checksum
+//! trailer, quarantined, never served).
 
 use std::fmt::Write as _;
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use rskpca::config::{ServerConfig, ServiceConfig};
@@ -18,7 +27,9 @@ use rskpca::coordinator::EmbeddingService;
 use rskpca::data::gaussian_mixture_2d;
 use rskpca::kernel::Kernel;
 use rskpca::kpca::{fit_kpca, EmbeddingModel};
-use rskpca::runtime::{BackendFactory, NativeBackend};
+use rskpca::linalg::Matrix;
+use rskpca::obs::prom;
+use rskpca::runtime::{BackendFactory, GramBackend, NativeBackend};
 use rskpca::server::http::ClientConn;
 use rskpca::server::HttpServer;
 
@@ -36,27 +47,88 @@ fn native() -> BackendFactory {
     Box::new(|| Ok(Box::new(NativeBackend::new())))
 }
 
+/// A backend whose `panic_on`-th Gram call panics (then never again —
+/// the shared counter keeps climbing past the trigger).  `embed` and
+/// `embed_model` ride the default trait implementations, so every
+/// served batch routes through exactly one counted `gram` call.  Note
+/// the worker's startup warmup is call #1.
+struct PanicOnNthGram {
+    calls: Arc<AtomicUsize>,
+    panic_on: usize,
+    inner: NativeBackend,
+}
+
+impl GramBackend for PanicOnNthGram {
+    fn gram(
+        &mut self,
+        x: &Matrix,
+        y: &Matrix,
+        kernel: &Kernel,
+    ) -> rskpca::error::Result<Matrix> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if n == self.panic_on {
+            panic!("injected backend panic (gram call {n})");
+        }
+        self.inner.gram(x, y, kernel)
+    }
+
+    fn name(&self) -> &'static str {
+        "panic-nth"
+    }
+}
+
+fn panicking(calls: Arc<AtomicUsize>, panic_on: usize) -> BackendFactory {
+    Box::new(move || {
+        Ok(Box::new(PanicOnNthGram {
+            calls: calls.clone(),
+            panic_on,
+            inner: NativeBackend::new(),
+        }) as Box<dyn GramBackend>)
+    })
+}
+
+/// Spawn service + front end with full control over the backend and
+/// both config layers (`listen`/`workers`/`keep_alive_ms` are forced).
+fn start_custom(
+    workers: usize,
+    keep_alive_ms: u64,
+    factory: BackendFactory,
+    svc_cfg: ServiceConfig,
+    mut server_cfg: ServerConfig,
+) -> (EmbeddingService, HttpServer, String) {
+    let svc =
+        EmbeddingService::start(test_model(), factory, svc_cfg).unwrap();
+    server_cfg.listen = "127.0.0.1:0".into();
+    server_cfg.workers = workers;
+    server_cfg.keep_alive_ms = keep_alive_ms;
+    let server = HttpServer::start(svc.handle(), &server_cfg).unwrap();
+    let target = server.local_addr().to_string();
+    (svc, server, target)
+}
+
 /// Spawn service + front end with `workers` event threads and the
 /// given idle timeout.
 fn start(
     workers: usize,
     keep_alive_ms: u64,
 ) -> (EmbeddingService, HttpServer, String) {
-    let svc = EmbeddingService::start(
-        test_model(),
-        native(),
-        ServiceConfig::default(),
-    )
-    .unwrap();
-    let cfg = ServerConfig {
-        listen: "127.0.0.1:0".into(),
+    start_custom(
         workers,
         keep_alive_ms,
-        ..Default::default()
-    };
-    let server = HttpServer::start(svc.handle(), &cfg).unwrap();
-    let target = server.local_addr().to_string();
-    (svc, server, target)
+        native(),
+        ServiceConfig::default(),
+        ServerConfig::default(),
+    )
+}
+
+/// Scrape `GET /metrics` (strictly parsed) and read one series.
+fn metric(target: &str, name: &str) -> f64 {
+    let mut conn = ClientConn::connect(target, CONNECT).unwrap();
+    let resp = conn.request("GET", "/metrics", b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let text = std::str::from_utf8(&resp.body).unwrap();
+    let parsed = prom::parse(text).unwrap();
+    parsed.value(name).unwrap_or(0.0)
 }
 
 /// Assert `GET /healthz` answers 200 within [`PROBE_DEADLINE`].
@@ -358,6 +430,7 @@ fn saturation_tail_latency_release_gate() {
         warmup_ms: 5000,
         rate: 0.0,
         metrics_poll_s: 0,
+        retry: false,
     })
     .unwrap();
     assert_eq!(
@@ -371,6 +444,275 @@ fn saturation_tail_latency_release_gate() {
         "tail blew past the batcher bound: p50={p50:.0}us \
          p99={p99:.0}us"
     );
+    server.shutdown();
+    svc.shutdown();
+}
+
+/// Chaos: the backend panics mid-run.  The panicked batch answers 500
+/// to its own clients; every request after it answers 200 (the worker
+/// rebuilds its backend and keeps going), the panic and restart are
+/// visible in `/metrics`, and the probe never degrades.  Run at event
+/// thread counts {1, 2, 8}.
+#[test]
+fn backend_panic_is_isolated_and_server_keeps_answering() {
+    // Acceptance-scale subsequent traffic in release; debug builds run
+    // a shorter tail so tier-1 stays fast.
+    let subsequent =
+        if cfg!(debug_assertions) { 300usize } else { 1000 };
+    for workers in [1usize, 2, 8] {
+        let calls = Arc::new(AtomicUsize::new(0));
+        // Warmup is gram call #1, so the panic lands on the 2nd
+        // served request.
+        let (svc, server, target) = start_custom(
+            workers,
+            5000,
+            panicking(calls.clone(), 3),
+            ServiceConfig::default(),
+            ServerConfig::default(),
+        );
+        let body = embed_body(3);
+        let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+        let mut statuses = Vec::new();
+        for _ in 0..(2 + subsequent) {
+            let resp = conn
+                .request("POST", "/embed", body.as_bytes())
+                .unwrap();
+            statuses.push(resp.status);
+        }
+        assert_eq!(
+            statuses[0], 200,
+            "pre-panic request must succeed (workers={workers})"
+        );
+        assert_eq!(
+            statuses[1], 500,
+            "the panicked batch answers 500 to its own requests \
+             (workers={workers})"
+        );
+        assert!(
+            statuses[2..].iter().all(|&s| s == 200),
+            "a request after the panic did not answer 200 \
+             (workers={workers})"
+        );
+        assert_probe_healthy(&target);
+        // The panic and the backend rebuild are observable.
+        assert!(
+            metric(&target, "rskpca_worker_panics_total") >= 1.0,
+            "panic counter missing from /metrics (workers={workers})"
+        );
+        assert!(
+            metric(&target, "rskpca_worker_restarts_total") >= 1.0,
+            "restart counter missing from /metrics (workers={workers})"
+        );
+        let obs = svc.handle().obs();
+        assert_eq!(obs.events_named("worker.panic").len(), 1);
+        assert_eq!(obs.events_named("worker.restart").len(), 1);
+        server.shutdown();
+        svc.shutdown();
+    }
+}
+
+/// Chaos under concurrency: clients sharing batches with a poisoned
+/// request all get a definite answer — 500 for the co-batched victims,
+/// 200 for everyone else, and never a malformed or dropped response.
+#[test]
+fn co_batched_requests_all_complete_when_one_batch_panics() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let svc_cfg = ServiceConfig {
+        max_batch: 8,
+        max_wait_us: 2000,
+        ..Default::default()
+    };
+    let (svc, server, target) = start_custom(
+        2,
+        5000,
+        panicking(calls.clone(), 10),
+        svc_cfg,
+        ServerConfig::default(),
+    );
+    let mut threads = Vec::new();
+    for _ in 0..4 {
+        let target = target.clone();
+        threads.push(std::thread::spawn(move || {
+            let body = embed_body(2);
+            let mut statuses = Vec::with_capacity(25);
+            for _ in 0..25 {
+                let mut conn =
+                    ClientConn::connect(&target, CONNECT).unwrap();
+                let resp = conn
+                    .request("POST", "/embed", body.as_bytes())
+                    .unwrap();
+                statuses.push(resp.status);
+            }
+            statuses
+        }));
+    }
+    let mut statuses = Vec::new();
+    for t in threads {
+        statuses.extend(t.join().unwrap());
+    }
+    assert_eq!(statuses.len(), 100, "every request got an answer");
+    assert!(
+        statuses.iter().all(|&s| s == 200 || s == 500),
+        "unexpected statuses: {statuses:?}"
+    );
+    let failed = statuses.iter().filter(|&&s| s == 500).count();
+    assert!(
+        (1..=8).contains(&failed),
+        "exactly one batch (1..=max_batch requests) fails, got {failed}"
+    );
+    assert_eq!(svc.handle().obs().hub.worker_panics(), 1);
+    assert_probe_healthy(&target);
+    server.shutdown();
+    svc.shutdown();
+}
+
+/// Chaos: a request whose deadline already expired (`X-Deadline-Ms:
+/// 0`) is shed at batch pickup — 504 to the client, the deadline-shed
+/// counter ticks, and the GEMM stage histogram records nothing (the
+/// work truly never reached compute).
+#[test]
+fn expired_deadline_is_shed_with_504_before_compute() {
+    let (svc, server, target) = start(1, 5000);
+    let body = embed_body(3);
+    let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+    // Warm request: gives the GEMM histogram a baseline count.
+    let ok = conn.request("POST", "/embed", body.as_bytes()).unwrap();
+    assert_eq!(ok.status, 200);
+    let gemm_before = metric(&target, "rskpca_gemm_us_count");
+    let shed = conn
+        .request_with_headers(
+            "POST",
+            "/embed",
+            &[("x-deadline-ms", "0")],
+            body.as_bytes(),
+        )
+        .unwrap();
+    assert_eq!(shed.status, 504, "expired deadline must answer 504");
+    assert_eq!(
+        metric(&target, "rskpca_gemm_us_count"),
+        gemm_before,
+        "shed work must never reach the GEMM stage"
+    );
+    assert_eq!(metric(&target, "rskpca_deadline_shed_total"), 1.0);
+    assert_eq!(
+        svc.handle().obs().events_named("embed.expired").len(),
+        1
+    );
+    // A generous deadline embeds normally.
+    let fine = conn
+        .request_with_headers(
+            "POST",
+            "/embed",
+            &[("x-deadline-ms", "30000")],
+            body.as_bytes(),
+        )
+        .unwrap();
+    assert_eq!(fine.status, 200);
+    server.shutdown();
+    svc.shutdown();
+}
+
+/// Chaos: a model file corrupted on disk is caught by the v4 checksum
+/// trailer at swap time — the swap is refused, the file is quarantined
+/// as `.corrupt`, the serving model keeps answering, and the corruption
+/// is visible in `/metrics`.  Pristine v4 and legacy trailerless files
+/// still swap in fine.
+#[test]
+fn corrupt_model_file_is_quarantined_and_never_served() {
+    let dir = std::env::temp_dir()
+        .join(format!("rskpca_faults_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let server_cfg =
+        ServerConfig { allow_path_swap: true, ..Default::default() };
+    let (svc, server, target) = start_custom(
+        2,
+        5000,
+        native(),
+        ServiceConfig::default(),
+        server_cfg,
+    );
+
+    // Corrupt a saved model by one byte inside the payload.
+    let path = dir.join("swap.rskpca");
+    test_model().save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replacen("kernel", "kernal", 1)).unwrap();
+    let swap_body = format!(
+        "{{\"path\": {:?}}}",
+        path.to_str().unwrap()
+    );
+    let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+    let resp = conn
+        .request("POST", "/models/swap", swap_body.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 400, "corrupt model must be refused");
+    assert!(
+        std::str::from_utf8(&resp.body).unwrap().contains("checksum"),
+        "refusal names the checksum failure"
+    );
+    assert!(!path.exists(), "corrupt file must be moved aside");
+    let quarantined = dir.join("swap.rskpca.corrupt");
+    assert!(quarantined.exists(), "quarantine file must exist");
+    assert_eq!(metric(&target, "rskpca_model_corrupt_total"), 1.0);
+
+    // The old model never stopped serving.
+    let body = embed_body(3);
+    let ok = conn.request("POST", "/embed", body.as_bytes()).unwrap();
+    assert_eq!(ok.status, 200);
+    assert_probe_healthy(&target);
+
+    // A pristine v4 file swaps in...
+    let good = dir.join("good.rskpca");
+    test_model().save(&good).unwrap();
+    let swap_good =
+        format!("{{\"path\": {:?}}}", good.to_str().unwrap());
+    let resp = conn
+        .request("POST", "/models/swap", swap_good.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    // ...and so does a legacy trailerless document (pre-v4 files carry
+    // no checksum and must remain loadable).
+    let legacy = dir.join("legacy.rskpca");
+    std::fs::write(&legacy, test_model().to_json().to_string())
+        .unwrap();
+    let swap_legacy =
+        format!("{{\"path\": {:?}}}", legacy.to_str().unwrap());
+    let resp = conn
+        .request("POST", "/models/swap", swap_legacy.as_bytes())
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    let ok = conn.request("POST", "/embed", body.as_bytes()).unwrap();
+    assert_eq!(ok.status, 200);
+
+    server.shutdown();
+    svc.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `/healthz` mirrors the refresh circuit breaker: an open or
+/// half-open breaker reports "degraded" (still HTTP 200 — the serving
+/// path is fine, the model is just stale), and closing it restores
+/// "ok".
+#[test]
+fn healthz_reports_breaker_degradation_and_recovery() {
+    let (svc, server, target) = start(1, 5000);
+    let obs = svc.handle().obs();
+    let hub = &obs.hub;
+    let probe = |expect: &str| {
+        let mut conn = ClientConn::connect(&target, CONNECT).unwrap();
+        let resp = conn.request("GET", "/healthz", b"").unwrap();
+        assert_eq!(resp.status, 200);
+        let v = resp.json().unwrap();
+        assert_eq!(v.req_str("status").unwrap(), expect);
+        v.req_str("refresh_breaker").unwrap().to_string()
+    };
+    assert_eq!(probe("ok"), "closed");
+    hub.set_breaker_state(1);
+    assert_eq!(probe("degraded"), "open");
+    hub.set_breaker_state(2);
+    assert_eq!(probe("degraded"), "half-open");
+    hub.set_breaker_state(0);
+    assert_eq!(probe("ok"), "closed");
     server.shutdown();
     svc.shutdown();
 }

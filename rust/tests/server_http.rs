@@ -523,6 +523,7 @@ fn loadgen_round_trip_reports_throughput() {
         warmup_ms: 3000,
         rate: 0.0,
         metrics_poll_s: 1,
+        retry: false,
     })
     .unwrap();
     assert_eq!(report.requests_ok, 30);
