@@ -25,6 +25,13 @@ fi
 step "cargo test -q"
 cargo test -q
 
+# The SIMD-vs-scalar agreement tests pass trivially when the host (or
+# the env) pins the scalar tiles, so run the GEMM suite both ways: the
+# default dispatch AND with the RSKPCA_FORCE_SCALAR kill switch set —
+# the latter proves the forced-scalar path stays correct end to end.
+step "GEMM cross-check suite under RSKPCA_FORCE_SCALAR=1"
+RSKPCA_FORCE_SCALAR=1 cargo test -q --lib linalg::
+
 # The GEMM/norm-trick cross-check bounds (<= 1e-10 vs the naive serial
 # references) and the blocked-eigensolver cross-checks (<= 1e-9 vs
 # eigh_serial/jacobi, including the 513-order multi-panel case that is
@@ -44,6 +51,12 @@ if [ "${1:-}" != "quick" ]; then
     # distributions and acceptance-scale post-panic traffic.
     step "serving fault-injection + chaos suite under --release"
     cargo test --release -q --test server_faults
+
+    # SIMD agreement must hold under release codegen (the acceptance
+    # bar), on both dispatch paths.
+    step "GEMM SIMD agreement under --release (default + forced scalar)"
+    cargo test --release -q --lib linalg::
+    RSKPCA_FORCE_SCALAR=1 cargo test --release -q --lib linalg::
 fi
 
 step "#[ignore] drift check (tier-1 suites)"
@@ -80,6 +93,26 @@ lock_unwraps=$(awk '
 if [ -n "$lock_unwraps" ]; then
     echo "bare .unwrap() on a lock guard (use crate::sync helpers):"
     echo "$lock_unwraps"
+    exit 1
+fi
+
+step "thread-spawn hygiene gate (raw thread::spawn outside parallel/)"
+# Compute threads belong to the persistent pool (parallel/) or to the
+# supervised spawn helpers in sync.rs; anywhere else a raw anonymous
+# `thread::spawn(` dodges naming and panic accounting.  Named
+# `Builder::new().name(..).spawn(..)` does not match and stays allowed.
+# Test modules and testutil are exempt.
+raw_spawns=$(awk '
+    FNR == 1 { in_tests = 0 }
+    /#\[cfg\(test\)\]/ { in_tests = 1 }
+    !in_tests && /thread::spawn\(/ {
+        print FILENAME ":" FNR ": " $0
+    }
+' $(find src -name '*.rs' ! -path '*parallel*' ! -name 'sync.rs' \
+    ! -path '*testutil*'))
+if [ -n "$raw_spawns" ]; then
+    echo "raw thread::spawn outside parallel/ and sync.rs:"
+    echo "$raw_spawns"
     exit 1
 fi
 
@@ -159,6 +192,27 @@ EOF
     head -n1 <&3 | grep -q ' 200 ' \
         || { echo "healthz did not answer 200 after the burst"; exit 1; }
     exec 3<&- 3>&-
+    # /stats must report the GEMM kernel the runtime dispatch actually
+    # selected for this host (the scrape-visible SIMD satellite).
+    if [ -n "${RSKPCA_FORCE_SCALAR:-}" ] \
+        && [ "${RSKPCA_FORCE_SCALAR}" != "0" ]; then
+        want_kernel="scalar"
+    elif grep -qw avx2 /proc/cpuinfo 2>/dev/null \
+        && grep -qw fma /proc/cpuinfo 2>/dev/null; then
+        want_kernel="avx2+fma"
+    elif [ "$(uname -m)" = "aarch64" ]; then
+        want_kernel="neon"
+    else
+        want_kernel="scalar"
+    fi
+    exec 3<>"/dev/tcp/127.0.0.1/$port"
+    printf 'GET /stats HTTP/1.1\r\nhost: ci\r\nconnection: close\r\n\r\n' >&3
+    stats_body=$(cat <&3)
+    exec 3<&- 3>&-
+    # Compact JSON: no space after the colon.
+    echo "$stats_body" | grep -q "\"simd_kernel\":\"$want_kernel\"" \
+        || { echo "/stats did not report simd_kernel=$want_kernel:"; \
+             echo "$stats_body"; exit 1; }
     # End-to-end deadline propagation: a request whose budget is
     # already spent (X-Deadline-Ms: 0) is shed before compute with 504.
     shed_body='{"rows":[[0.1,0.2]]}'

@@ -16,6 +16,11 @@
 //! machine-readable `BENCH_SERVING.json` at the repo root (model, op,
 //! centers, http workers, rows/s, latency percentiles) so serving perf
 //! is tracked across PRs.
+//!
+//! A final `serving/batch1_dispatch/{pool,spawn}` row pair times one
+//! 8-part parallel fan-out with a trivial body through the persistent
+//! worker pool vs the per-call spawn fallback (ns/op) — the dispatch
+//! overhead every served batch pays, isolated from compute.
 
 use rskpca::bench::quick_mode;
 use rskpca::ser::Json;
@@ -235,6 +240,61 @@ fn main() {
             "f32 serving speedup {name} vs {base} (4 http workers): \
              {:.2}x",
             rate(name, 4) / f64_rate
+        );
+    }
+    // Batch-size-1 dispatch latency: the serving hot path pays one
+    // parallel fan-out per executed batch, so the spawn-vs-wake win is
+    // isolated here — an 8-part dispatch with a trivial body, timed
+    // through the persistent pool and then with the per-call
+    // scoped-spawn fallback forced.  The compute is nil by design; the
+    // difference IS the dispatch overhead.
+    rskpca::parallel::set_threads(8);
+    let ranges = rskpca::parallel::even_ranges(8, 8);
+    let iters = if quick { 2_000usize } else { 20_000 };
+    let dispatch_ns = |iters: usize| -> f64 {
+        for _ in 0..100 {
+            std::hint::black_box(rskpca::parallel::par_map_parts(
+                &ranges,
+                |_, r| r.start,
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(rskpca::parallel::par_map_parts(
+                &ranges,
+                |_, r| r.start,
+            ));
+        }
+        t0.elapsed().as_secs_f64() * 1e9 / iters as f64
+    };
+    let pool_ns = dispatch_ns(iters);
+    rskpca::parallel::force_spawn_fallback(true);
+    let spawn_ns = dispatch_ns(iters);
+    rskpca::parallel::force_spawn_fallback(false);
+    rskpca::parallel::set_threads(0);
+    println!(
+        "\nbatch-1 dispatch (8 parts, trivial body): pool {pool_ns:.0} \
+         ns/op vs spawn {spawn_ns:.0} ns/op ({:.1}x)",
+        spawn_ns / pool_ns.max(1e-9)
+    );
+    for (variant, ns) in
+        [("pool", pool_ns), ("spawn", spawn_ns)]
+    {
+        json_rows.push(
+            Json::obj()
+                .with(
+                    "name",
+                    Json::Str(format!(
+                        "serving/batch1_dispatch/{variant}"
+                    )),
+                )
+                .with("op", Json::Str("dispatch".into()))
+                .with("model", Json::Str(variant.into()))
+                .with("n", Json::Num(1.0))
+                .with("m", Json::Num(8.0))
+                .with("d", Json::Num(0.0))
+                .with("threads", Json::Num(8.0))
+                .with("ns_per_op", Json::Num(ns)),
         );
     }
     std::fs::write("bench_serving.csv", csv)

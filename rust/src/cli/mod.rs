@@ -105,11 +105,12 @@ USAGE:
                     [--ell-step F] [--seed N] [--quick]
       names: table1 table2 fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 bounds
   rskpca fit    --config FILE --model-out FILE [--data FILE]
+                [--simd auto|scalar]
   rskpca embed  --model FILE --data FILE --out FILE [--backend native|pjrt]
                 [--artifacts DIR]
   rskpca serve  --model FILE [--listen HOST:PORT] [--backend native|pjrt]
                 [--artifacts DIR] [--config FILE] [--refresh N] [--ell F]
-                [--log-json FILE]
+                [--log-json FILE] [--simd auto|scalar]
                 [--selftest [--requests N] [--rows-per-request N]]
       serves HTTP (POST /embed, GET /stats, GET /metrics, GET /healthz,
       GET /models, POST /models/swap) until Ctrl-C / SIGTERM; --listen
@@ -140,11 +141,14 @@ USAGE:
       jitter) instead of counting them rejected, reporting retries and
       deadline 504s separately
   rskpca bench  gemm [--quick] [--json] [--sizes N,N,..] [--out FILE]
+                [--simd auto|scalar]
       effective GFLOP/s for the packed GEMM (f64 and the f32 serving
       micro-kernel, with the f32-vs-f64 speedup) and the distance-free
-      symmetric Gram at n in {512, 2048, 8192} (quick: 512 only);
-      --json writes BENCH_GEMM.json at the repo root for cross-PR
-      roofline tracking
+      symmetric Gram at n in {512, 2048, 8192} (quick: 512 only); each
+      shape also reruns with the portable scalar tiles pinned
+      (gemm_scalar/*, gemm_f32_scalar/* rows), so one run shows the
+      SIMD-vs-scalar win; --json writes BENCH_GEMM.json at the repo
+      root for cross-PR roofline tracking
   rskpca bench  eigen [--quick] [--json] [--sizes N,N,..] [--threads N]
                 [--out FILE]
       symmetric eigensolver suite: blocked eigh (1 vs --threads compute

@@ -210,6 +210,11 @@ pub struct RunConfig {
     /// 0 = auto (one per available core).  Flows into
     /// `parallel::set_threads` when the CLI loads the config.
     pub threads: usize,
+    /// GEMM kernel selection: `simd = "auto"` (default — best ISA the
+    /// host supports) or `"scalar"` (pin the portable tiles).  Flows
+    /// into `linalg::simd::set_mode` when the CLI loads the config;
+    /// the `RSKPCA_FORCE_SCALAR` environment kill switch still wins.
+    pub simd: crate::linalg::simd::SimdMode,
     /// Eigensolver policy for the fit pipeline: `solver = "auto"`
     /// (default — residual-gated subspace solve for truncated fits,
     /// exact fallback), `"exact"`, or `"subspace"`, the latter tunable
@@ -386,6 +391,7 @@ impl Default for RunConfig {
             backend: "native".into(),
             artifacts_dir: "artifacts".into(),
             threads: 0,
+            simd: crate::linalg::simd::SimdMode::Auto,
             solver: EigSolver::Auto,
             service: ServiceConfig::default(),
             server: ServerConfig::default(),
@@ -412,6 +418,13 @@ impl RunConfig {
         cfg.artifacts_dir =
             doc.get_str("run", "artifacts_dir", &cfg.artifacts_dir);
         cfg.threads = doc.get_usize("run", "threads", cfg.threads);
+        let simd_name = doc.get_str("run", "simd", cfg.simd.name());
+        cfg.simd = crate::linalg::simd::SimdMode::parse(&simd_name)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "simd must be 'auto' or 'scalar', got '{simd_name}'"
+                ))
+            })?;
         let solver_name = doc.get_str("run", "solver", "auto");
         cfg.solver = EigSolver::parse(&solver_name).ok_or_else(|| {
             Error::Config(format!(
@@ -650,6 +663,22 @@ workers = 2
             "[run]\nsolver = \"subspace\"\nsolver_tol = -1"
         )
         .is_err());
+        assert!(
+            RunConfig::from_toml("[run]\nsimd = \"avx512\"").is_err()
+        );
+    }
+
+    #[test]
+    fn simd_mode_parses_and_defaults_to_auto() {
+        use crate::linalg::simd::SimdMode;
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.simd, SimdMode::Auto);
+        let cfg =
+            RunConfig::from_toml("[run]\nsimd = \"scalar\"").unwrap();
+        assert_eq!(cfg.simd, SimdMode::Scalar);
+        let cfg =
+            RunConfig::from_toml("[run]\nsimd = \"auto\"").unwrap();
+        assert_eq!(cfg.simd, SimdMode::Auto);
     }
 
     #[test]

@@ -362,6 +362,10 @@ impl EmbeddingService {
                 ))
             })?;
         registry.set_obs(obs.clone());
+        // Hand the same observability handle to the parallel engine so
+        // panics inside pool machinery land in the shared accounting
+        // (rebuilds the pool only when the handle actually changed).
+        crate::parallel::set_obs(obs.clone());
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.queue_depth);
         let stats = Arc::new(Mutex::new(ServiceStats {
             model_version: version0,

@@ -52,13 +52,15 @@ use crate::linalg::gemm::{self, BSrc, Element};
 use crate::linalg::{dot4, sq_euclidean, Matrix, MatrixF32};
 use crate::parallel;
 
-/// Minimum output elements before the Gram paths fan out to threads;
-/// below this, thread-spawn latency dominates the compute.
+/// Minimum output elements before the Gram paths fan out to the
+/// worker pool; below this, dispatch/wake latency dominates the
+/// compute.
 const GRAM_PAR_MIN: usize = 4096;
 
 /// Minimum scalar-op estimate before the fused projection
 /// ([`Kernel::embed_rows`]) fans out.  Flop-scaled (n·m·d), matching
-/// `linalg`'s threshold, so small serve batches never pay spawn latency.
+/// `linalg`'s threshold, so small serve batches never pay even the
+/// pool's wake latency.
 const EMBED_PAR_MIN_FLOPS: usize = 1 << 16;
 
 /// Row-block height of the fused projection: one Gram tile
@@ -645,21 +647,9 @@ impl Kernel {
                 out_rest = out_tail;
                 bands_rest = bs_tail;
             }
-            std::thread::scope(|scope| {
-                let ctx = &ctx;
-                let mut it = jobs.into_iter();
-                let head = it.next().expect("at least two bands");
-                let handles: Vec<_> = it
-                    .map(|(range, band_out, bs)| {
-                        scope.spawn(move || {
-                            embed_band(ctx, range, band_out, bs)
-                        })
-                    })
-                    .collect();
-                embed_band(ctx, head.0, head.1, head.2);
-                for h in handles {
-                    h.join().expect("embed worker panicked");
-                }
+            let ctx = &ctx;
+            parallel::for_each_part(jobs, |_, (range, band_out, bs)| {
+                embed_band(ctx, range, band_out, bs)
             });
         }
         s.stages = EmbedStageTimes::default();
@@ -754,21 +744,9 @@ impl Kernel {
                 out_rest = out_tail;
                 bands_rest = bs_tail;
             }
-            std::thread::scope(|scope| {
-                let ctx = &ctx;
-                let mut it = jobs.into_iter();
-                let head = it.next().expect("at least two bands");
-                let handles: Vec<_> = it
-                    .map(|(range, band_out, bs)| {
-                        scope.spawn(move || {
-                            embed_band_f32(ctx, range, band_out, bs)
-                        })
-                    })
-                    .collect();
-                embed_band_f32(ctx, head.0, head.1, head.2);
-                for h in handles {
-                    h.join().expect("embed_f32 worker panicked");
-                }
+            let ctx = &ctx;
+            parallel::for_each_part(jobs, |_, (range, band_out, bs)| {
+                embed_band_f32(ctx, range, band_out, bs)
             });
         }
         s.stages = EmbedStageTimes::default();

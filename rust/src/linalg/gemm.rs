@@ -24,9 +24,16 @@
 //!   panels and each A panel k-major into MR-wide columns, so the micro
 //!   kernel reads both operands contiguously (and the `transb` form pays
 //!   its strided reads once, in the pack, not `m` times in the loop).
-//! * **Parallelism**: row bands of whole A panels fan out across scoped
-//!   threads (via [`crate::parallel::even_ranges`] splits); packed B is
-//!   shared read-only.  There is no work stealing and no atomics.
+//! * **Parallelism**: row bands of whole A panels fan out across the
+//!   persistent [`crate::parallel`] worker pool (via
+//!   [`crate::parallel::even_ranges`] splits); packed B is shared
+//!   read-only.  There is no work stealing and no atomics.
+//! * **SIMD dispatch**: each `Element::micro_kernel` consults
+//!   [`super::simd::active`] once per tile and routes to the explicit
+//!   AVX2+FMA (or NEON) register tile when the host supports it; the
+//!   portable scalar tile below is always compiled and serves as both
+//!   fallback and cross-check reference (`RSKPCA_FORCE_SCALAR` /
+//!   `[run] simd = "scalar"` pin it).
 //!
 //! ## Element abstraction
 //!
@@ -51,10 +58,14 @@
 //! tile boundaries only change *which lanes ride along*, never the
 //! per-element operation sequence, so results are **bitwise identical at
 //! any thread count** — for every element type — the same guarantee the
-//! rest of the [`crate::parallel`] engine gives.  Against the naive
-//! `*_serial` references the agreement is to rounding (the references
-//! use the same k order, so in practice it is exact as well; tests
-//! enforce <= 1e-10 for f64 and a k-scaled f32-epsilon bound for f32).
+//! rest of the [`crate::parallel`] engine gives.  The SIMD tiles keep
+//! this contract per ISA (lanes span output columns, k stays
+//! sequential), but SIMD-vs-scalar is *not* bitwise: FMA contracts the
+//! multiply-add rounding, so the two kernels agree to rounding (tests
+//! bound f64 at 1e-10).  Against the naive `*_serial` references the
+//! agreement is likewise to rounding (the references use the same k
+//! order; tests enforce <= 1e-10 for f64 and a k-scaled f32-epsilon
+//! bound for f32).
 //!
 //! Tail tiles (m % MR, n % NR) are computed through a zero-padded stack
 //! tile: padded lanes contribute `+0.0` terms that cannot perturb the
@@ -86,8 +97,9 @@ pub(crate) const KC32: usize = 512;
 const MAX_TILE: usize = 64;
 
 /// Minimum per-KC-block scalar-op estimate before a product fans out
-/// to threads; below this, the per-block spawn/join latency beats the
-/// parallel win (bands are re-spawned once per KC block).
+/// to threads; below this, the per-block dispatch/wake latency beats
+/// the parallel win (bands are dispatched to the pool once per KC
+/// block).
 const BLOCK_PAR_MIN_FLOPS: usize = 1 << 16;
 
 mod sealed {
@@ -149,31 +161,66 @@ impl Element for f64 {
         self
     }
 
-    /// The 4x8 register tile: 32 f64 accumulators in locals, one
-    /// multiply-add lane per (row, col) pair per k step.
+    /// The 4x8 register tile, routed to the active ISA (AVX2+FMA /
+    /// NEON / portable scalar) selected once per process.
     #[inline(always)]
     fn micro_kernel(kc: usize, pa: &[f64], pb: &[f64], acc: &mut [f64]) {
-        let mut c0: [f64; NR] = acc[..NR].try_into().unwrap();
-        let mut c1: [f64; NR] = acc[NR..2 * NR].try_into().unwrap();
-        let mut c2: [f64; NR] = acc[2 * NR..3 * NR].try_into().unwrap();
-        let mut c3: [f64; NR] = acc[3 * NR..4 * NR].try_into().unwrap();
-        for kk in 0..kc {
-            let a: &[f64; MR] =
-                pa[kk * MR..kk * MR + MR].try_into().unwrap();
-            let b: &[f64; NR] =
-                pb[kk * NR..kk * NR + NR].try_into().unwrap();
-            for t in 0..NR {
-                c0[t] += a[0] * b[t];
-                c1[t] += a[1] * b[t];
-                c2[t] += a[2] * b[t];
-                c3[t] += a[3] * b[t];
-            }
+        let isa = super::simd::active();
+        #[cfg(target_arch = "x86_64")]
+        if isa == super::simd::Isa::Avx2Fma {
+            // SAFETY: `active()` returns Avx2Fma only after runtime
+            // `is_x86_feature_detected!("avx2"/"fma")`; slice lengths
+            // are re-asserted inside the kernel.
+            unsafe { super::simd::x86::f64_kernel_4x8(kc, pa, pb, acc) };
+            return;
         }
-        acc[..NR].copy_from_slice(&c0);
-        acc[NR..2 * NR].copy_from_slice(&c1);
-        acc[2 * NR..3 * NR].copy_from_slice(&c2);
-        acc[3 * NR..4 * NR].copy_from_slice(&c3);
+        #[cfg(target_arch = "aarch64")]
+        if isa == super::simd::Isa::Neon {
+            // SAFETY: NEON is baseline on aarch64; slice lengths are
+            // re-asserted inside the kernel.
+            unsafe {
+                super::simd::neon::f64_kernel_4x8(kc, pa, pb, acc)
+            };
+            return;
+        }
+        #[cfg(not(any(
+            target_arch = "x86_64",
+            target_arch = "aarch64"
+        )))]
+        let _ = isa;
+        scalar_kernel_f64(kc, pa, pb, acc);
     }
+}
+
+/// Portable f64 4x8 tile: 32 accumulators in locals, one multiply-add
+/// lane per (row, col) pair per k step.  Always compiled — the fallback
+/// for hosts without the detected ISA and the cross-check reference the
+/// SIMD agreement tests compare against.
+#[inline(always)]
+pub(crate) fn scalar_kernel_f64(
+    kc: usize,
+    pa: &[f64],
+    pb: &[f64],
+    acc: &mut [f64],
+) {
+    let mut c0: [f64; NR] = acc[..NR].try_into().unwrap();
+    let mut c1: [f64; NR] = acc[NR..2 * NR].try_into().unwrap();
+    let mut c2: [f64; NR] = acc[2 * NR..3 * NR].try_into().unwrap();
+    let mut c3: [f64; NR] = acc[3 * NR..4 * NR].try_into().unwrap();
+    for kk in 0..kc {
+        let a: &[f64; MR] = pa[kk * MR..kk * MR + MR].try_into().unwrap();
+        let b: &[f64; NR] = pb[kk * NR..kk * NR + NR].try_into().unwrap();
+        for t in 0..NR {
+            c0[t] += a[0] * b[t];
+            c1[t] += a[1] * b[t];
+            c2[t] += a[2] * b[t];
+            c3[t] += a[3] * b[t];
+        }
+    }
+    acc[..NR].copy_from_slice(&c0);
+    acc[NR..2 * NR].copy_from_slice(&c1);
+    acc[2 * NR..3 * NR].copy_from_slice(&c2);
+    acc[3 * NR..4 * NR].copy_from_slice(&c3);
 }
 
 impl Element for f32 {
@@ -192,51 +239,86 @@ impl Element for f32 {
         self as f64
     }
 
-    /// The 8x8 register tile: 64 f32 accumulators in locals — the same
-    /// 256-byte register footprint as the f64 4x8 tile, twice the lanes
-    /// per loaded cache line.
+    /// The 8x8 register tile, routed to the active ISA (AVX2+FMA /
+    /// NEON / portable scalar) selected once per process.
     #[inline(always)]
     fn micro_kernel(kc: usize, pa: &[f32], pb: &[f32], acc: &mut [f32]) {
-        let mut c0: [f32; NR32] = acc[..NR32].try_into().unwrap();
-        let mut c1: [f32; NR32] =
-            acc[NR32..2 * NR32].try_into().unwrap();
-        let mut c2: [f32; NR32] =
-            acc[2 * NR32..3 * NR32].try_into().unwrap();
-        let mut c3: [f32; NR32] =
-            acc[3 * NR32..4 * NR32].try_into().unwrap();
-        let mut c4: [f32; NR32] =
-            acc[4 * NR32..5 * NR32].try_into().unwrap();
-        let mut c5: [f32; NR32] =
-            acc[5 * NR32..6 * NR32].try_into().unwrap();
-        let mut c6: [f32; NR32] =
-            acc[6 * NR32..7 * NR32].try_into().unwrap();
-        let mut c7: [f32; NR32] =
-            acc[7 * NR32..8 * NR32].try_into().unwrap();
-        for kk in 0..kc {
-            let a: &[f32; MR32] =
-                pa[kk * MR32..kk * MR32 + MR32].try_into().unwrap();
-            let b: &[f32; NR32] =
-                pb[kk * NR32..kk * NR32 + NR32].try_into().unwrap();
-            for t in 0..NR32 {
-                c0[t] += a[0] * b[t];
-                c1[t] += a[1] * b[t];
-                c2[t] += a[2] * b[t];
-                c3[t] += a[3] * b[t];
-                c4[t] += a[4] * b[t];
-                c5[t] += a[5] * b[t];
-                c6[t] += a[6] * b[t];
-                c7[t] += a[7] * b[t];
-            }
+        let isa = super::simd::active();
+        #[cfg(target_arch = "x86_64")]
+        if isa == super::simd::Isa::Avx2Fma {
+            // SAFETY: `active()` returns Avx2Fma only after runtime
+            // `is_x86_feature_detected!("avx2"/"fma")`; slice lengths
+            // are re-asserted inside the kernel.
+            unsafe { super::simd::x86::f32_kernel_8x8(kc, pa, pb, acc) };
+            return;
         }
-        acc[..NR32].copy_from_slice(&c0);
-        acc[NR32..2 * NR32].copy_from_slice(&c1);
-        acc[2 * NR32..3 * NR32].copy_from_slice(&c2);
-        acc[3 * NR32..4 * NR32].copy_from_slice(&c3);
-        acc[4 * NR32..5 * NR32].copy_from_slice(&c4);
-        acc[5 * NR32..6 * NR32].copy_from_slice(&c5);
-        acc[6 * NR32..7 * NR32].copy_from_slice(&c6);
-        acc[7 * NR32..8 * NR32].copy_from_slice(&c7);
+        #[cfg(target_arch = "aarch64")]
+        if isa == super::simd::Isa::Neon {
+            // SAFETY: NEON is baseline on aarch64; slice lengths are
+            // re-asserted inside the kernel.
+            unsafe {
+                super::simd::neon::f32_kernel_8x8(kc, pa, pb, acc)
+            };
+            return;
+        }
+        #[cfg(not(any(
+            target_arch = "x86_64",
+            target_arch = "aarch64"
+        )))]
+        let _ = isa;
+        scalar_kernel_f32(kc, pa, pb, acc);
     }
+}
+
+/// Portable f32 8x8 tile: 64 accumulators in locals — the same 256-byte
+/// register footprint as the f64 4x8 tile, twice the lanes per loaded
+/// cache line.  Always compiled; fallback and SIMD cross-check
+/// reference.
+#[inline(always)]
+pub(crate) fn scalar_kernel_f32(
+    kc: usize,
+    pa: &[f32],
+    pb: &[f32],
+    acc: &mut [f32],
+) {
+    let mut c0: [f32; NR32] = acc[..NR32].try_into().unwrap();
+    let mut c1: [f32; NR32] = acc[NR32..2 * NR32].try_into().unwrap();
+    let mut c2: [f32; NR32] =
+        acc[2 * NR32..3 * NR32].try_into().unwrap();
+    let mut c3: [f32; NR32] =
+        acc[3 * NR32..4 * NR32].try_into().unwrap();
+    let mut c4: [f32; NR32] =
+        acc[4 * NR32..5 * NR32].try_into().unwrap();
+    let mut c5: [f32; NR32] =
+        acc[5 * NR32..6 * NR32].try_into().unwrap();
+    let mut c6: [f32; NR32] =
+        acc[6 * NR32..7 * NR32].try_into().unwrap();
+    let mut c7: [f32; NR32] =
+        acc[7 * NR32..8 * NR32].try_into().unwrap();
+    for kk in 0..kc {
+        let a: &[f32; MR32] =
+            pa[kk * MR32..kk * MR32 + MR32].try_into().unwrap();
+        let b: &[f32; NR32] =
+            pb[kk * NR32..kk * NR32 + NR32].try_into().unwrap();
+        for t in 0..NR32 {
+            c0[t] += a[0] * b[t];
+            c1[t] += a[1] * b[t];
+            c2[t] += a[2] * b[t];
+            c3[t] += a[3] * b[t];
+            c4[t] += a[4] * b[t];
+            c5[t] += a[5] * b[t];
+            c6[t] += a[6] * b[t];
+            c7[t] += a[7] * b[t];
+        }
+    }
+    acc[..NR32].copy_from_slice(&c0);
+    acc[NR32..2 * NR32].copy_from_slice(&c1);
+    acc[2 * NR32..3 * NR32].copy_from_slice(&c2);
+    acc[3 * NR32..4 * NR32].copy_from_slice(&c3);
+    acc[4 * NR32..5 * NR32].copy_from_slice(&c4);
+    acc[5 * NR32..6 * NR32].copy_from_slice(&c5);
+    acc[6 * NR32..7 * NR32].copy_from_slice(&c6);
+    acc[7 * NR32..8 * NR32].copy_from_slice(&c7);
 }
 
 /// Reusable packing buffers for the GEMM entry point (`gemm_into`).
@@ -413,12 +495,13 @@ fn gemm_impl<E: Element>(
     let kc_max = k.min(E::KC);
     let (pa, pb) =
         scratch.buffers(m_panels * mr * kc_max, n_panels * nr * kc_max);
-    // Threads are re-spawned per KC block (packed B is shared, so the
-    // scope cannot be hoisted without a barrier); guard against shapes
-    // where the per-block work would be dominated by spawn latency
-    // (skinny m x n with a deep k).  For the common shapes — Gram
-    // cross-products (k = d <= KC, one block) and square-ish products —
-    // the per-block work dwarfs the spawn cost.
+    // Bands are dispatched to the persistent pool once per KC block
+    // (packed B is shared, so the dispatch cannot be hoisted without a
+    // barrier); guard against shapes where the per-block work would be
+    // dominated by dispatch latency (skinny m x n with a deep k).  For
+    // the common shapes — Gram cross-products (k = d <= KC, one block)
+    // and square-ish products — the per-block work dwarfs the wake
+    // cost.
     let threads = if m.saturating_mul(n).saturating_mul(kc_max)
         < BLOCK_PAR_MIN_FLOPS
     {
@@ -472,25 +555,13 @@ fn gemm_impl<E: Element>(
                 pa_rest = pa_tail;
             }
             let pb_shared: &[E] = pb;
-            std::thread::scope(|s| {
-                let ctx = &ctx;
-                let mut it = jobs.into_iter();
-                let head = it.next().expect("at least two bands");
-                let handles: Vec<_> = it
-                    .map(|(r, cb, pab)| {
-                        s.spawn(move || {
-                            run_band(
-                                ctx, r, cb, pab, pb_shared, kb, kc,
-                                first,
-                            )
-                        })
-                    })
-                    .collect();
-                run_band(ctx, head.0, head.1, head.2, pb_shared, kb, kc, first);
-                for h in handles {
-                    h.join().expect("gemm worker panicked");
-                }
-            });
+            let ctx = &ctx;
+            crate::parallel::for_each_part(
+                jobs,
+                |_, (r, cb, pab): (Range<usize>, &mut [E], &mut [E])| {
+                    run_band(ctx, r, cb, pab, pb_shared, kb, kc, first)
+                },
+            );
         }
         kb += kc;
     }
@@ -628,7 +699,7 @@ fn run_band<E: Element>(
 /// * `upper_only` skips the strictly-lower triangle (the caller mirrors
 ///   it, e.g. via [`mirror_upper_to_lower`]); the full square costs 2x
 ///   the flops but needs no mirror pass.
-/// * Rows fan out over scoped threads through the [`crate::parallel`]
+/// * Rows fan out over the [`crate::parallel`] worker pool through its
 ///   range splits, cost-weighted by the surviving column count when
 ///   `upper_only`.  Each output element accumulates its `k` terms in a
 ///   fixed order independent of the band split, so results are bitwise
@@ -689,18 +760,7 @@ pub(crate) fn syr2k_sub_into(
         bands.push((r.clone(), band));
         rest = tail;
     }
-    std::thread::scope(|s| {
-        let run = &run;
-        let mut it = bands.into_iter();
-        let head = it.next().expect("at least two bands");
-        let handles: Vec<_> = it
-            .map(|(r, band)| s.spawn(move || run(r, band)))
-            .collect();
-        run(head.0, head.1);
-        for h in handles {
-            h.join().expect("syr2k worker panicked");
-        }
-    });
+    crate::parallel::for_each_part(bands, |_, (r, band)| run(r, band));
 }
 
 /// Copy the upper triangle of an `mm x mm` (sub)matrix with row stride
@@ -829,8 +889,18 @@ mod tests {
         assert!(c.iter().all(|&v| v == 0.0));
     }
 
+    /// Holds [`crate::linalg::simd::SIMD_TEST_LOCK`] so tests asserting
+    /// bitwise equality between two gemm calls cannot race a
+    /// mode-flipping test switching the ISA between those calls.
+    fn simd_lock() -> std::sync::MutexGuard<'static, ()> {
+        crate::linalg::simd::SIMD_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+    }
+
     #[test]
     fn gemm_bitwise_thread_invariant() {
+        let _simd = simd_lock();
         let mut s = GemmScratch::new();
         let (m, n, k) = (53, 29, 300);
         let a = random_matrix(m, k, 1);
@@ -866,6 +936,7 @@ mod tests {
 
     #[test]
     fn upper_only_leaves_lower_tiles_untouched() {
+        let _simd = simd_lock();
         let mut s = GemmScratch::new();
         let n = 30;
         let x = random_matrix(n, 6, 9);
@@ -1215,6 +1286,7 @@ mod tests {
 
     #[test]
     fn f32_gemm_bitwise_thread_invariant() {
+        let _simd = simd_lock();
         let mut s: GemmScratch<f32> = GemmScratch::new();
         // Crosses the f32 KC boundary so the store/reload between KC
         // blocks is exercised under every fan-out.
@@ -1297,5 +1369,213 @@ mod tests {
             );
         }
         assert_eq!(s.grow_events(), warm, "f32 scratch grew after warmup");
+    }
+
+    // ---- SIMD dispatch ----
+
+    /// Restores `SimdMode::Auto` when dropped, so a failing assertion
+    /// cannot leave the process pinned to the scalar tiles.
+    struct AutoOnDrop;
+    impl Drop for AutoOnDrop {
+        fn drop(&mut self) {
+            crate::linalg::simd::set_mode(
+                crate::linalg::simd::SimdMode::Auto,
+            );
+        }
+    }
+
+    /// FMA contraction makes the SIMD tiles differ from the scalar
+    /// tiles by at most one rounding step per multiply-add, so a
+    /// k-long accumulation chain drifts by ~k ulps of the running sum.
+    #[test]
+    fn simd_gemm_agrees_with_forced_scalar() {
+        use crate::linalg::simd::{set_mode, SimdMode};
+        let _simd = simd_lock();
+        let _restore = AutoOnDrop;
+        let mut s = GemmScratch::new();
+        // Tile-exact (4x8), tails in every dimension, and KC-crossing.
+        for &(m, n, k) in &[
+            (4usize, 8usize, 16usize),
+            (5, 9, 7),
+            (37, 23, 19),
+            (6, 6, KC + 13),
+        ] {
+            let a = random_matrix(m, k, (m * 91 + n) as u64);
+            let b = random_matrix(k, n, (n * 53 + k) as u64);
+            for threads in [1usize, 2, 8] {
+                set_mode(SimdMode::Auto);
+                let mut c_simd = vec![f64::NAN; m * n];
+                gemm_into(
+                    &mut c_simd,
+                    m,
+                    n,
+                    k,
+                    a.as_slice(),
+                    BSrc::Normal(b.as_slice()),
+                    false,
+                    threads,
+                    &mut s,
+                );
+                set_mode(SimdMode::Scalar);
+                let mut c_scalar = vec![f64::NAN; m * n];
+                gemm_into(
+                    &mut c_scalar,
+                    m,
+                    n,
+                    k,
+                    a.as_slice(),
+                    BSrc::Normal(b.as_slice()),
+                    false,
+                    threads,
+                    &mut s,
+                );
+                for i in 0..m * n {
+                    let bound = 1e-10 * c_scalar[i].abs().max(1.0);
+                    assert!(
+                        (c_simd[i] - c_scalar[i]).abs() <= bound,
+                        "{m}x{n}x{k} t={threads} elem {i}: simd {} \
+                         scalar {}",
+                        c_simd[i],
+                        c_scalar[i],
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_simd_gemm_agrees_with_forced_scalar() {
+        use crate::linalg::simd::{set_mode, SimdMode};
+        let _simd = simd_lock();
+        let _restore = AutoOnDrop;
+        let mut s: GemmScratch<f32> = GemmScratch::new();
+        // Tile-exact (8x8), tails, and f32-KC-crossing shapes.
+        for &(m, n, k) in &[
+            (8usize, 8usize, 16usize),
+            (9, 7, 5),
+            (37, 23, 19),
+            (17, 9, KC32 + 44),
+        ] {
+            let a = to_f32_vec(&random_matrix(m, k, (m * 91 + n) as u64));
+            let b = to_f32_vec(&random_matrix(k, n, (n * 53 + k) as u64));
+            let tol = (k as f64) * (f32::EPSILON as f64) * 8.0;
+            for threads in [1usize, 2, 8] {
+                set_mode(SimdMode::Auto);
+                let mut c_simd = vec![f32::NAN; m * n];
+                gemm_into(
+                    &mut c_simd,
+                    m,
+                    n,
+                    k,
+                    &a,
+                    BSrc::Normal(&b),
+                    false,
+                    threads,
+                    &mut s,
+                );
+                set_mode(SimdMode::Scalar);
+                let mut c_scalar = vec![f32::NAN; m * n];
+                gemm_into(
+                    &mut c_scalar,
+                    m,
+                    n,
+                    k,
+                    &a,
+                    BSrc::Normal(&b),
+                    false,
+                    threads,
+                    &mut s,
+                );
+                for i in 0..m * n {
+                    let dev =
+                        (c_simd[i] as f64 - c_scalar[i] as f64).abs();
+                    let bound =
+                        tol * (c_scalar[i] as f64).abs().max(1.0);
+                    assert!(
+                        dev <= bound,
+                        "{m}x{n}x{k} t={threads} elem {i}: simd {} \
+                         scalar {} dev {dev:e}",
+                        c_simd[i],
+                        c_scalar[i],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Both dispatch targets — whatever `Auto` resolves to on this
+    /// host, and the pinned scalar tiles — must each be bitwise
+    /// invariant across thread counts (the crate-wide determinism
+    /// contract holds per ISA, not just for the portable path).
+    #[test]
+    fn both_isa_paths_bitwise_thread_invariant() {
+        use crate::linalg::simd::{set_mode, SimdMode};
+        let _simd = simd_lock();
+        let _restore = AutoOnDrop;
+        let (m, n, k) = (53usize, 29usize, 300usize);
+        let a = random_matrix(m, k, 101);
+        let b = random_matrix(k, n, 102);
+        let a32 = to_f32_vec(&a);
+        let b32 = to_f32_vec(&b);
+        for mode in [SimdMode::Auto, SimdMode::Scalar] {
+            set_mode(mode);
+            let mut s = GemmScratch::new();
+            let mut s32: GemmScratch<f32> = GemmScratch::new();
+            let mut c1 = vec![0.0f64; m * n];
+            gemm_into(
+                &mut c1,
+                m,
+                n,
+                k,
+                a.as_slice(),
+                BSrc::Normal(b.as_slice()),
+                false,
+                1,
+                &mut s,
+            );
+            let mut c1_32 = vec![0.0f32; m * n];
+            gemm_into(
+                &mut c1_32,
+                m,
+                n,
+                k,
+                &a32,
+                BSrc::Normal(&b32),
+                false,
+                1,
+                &mut s32,
+            );
+            for threads in [2usize, 8] {
+                let mut ct = vec![0.0f64; m * n];
+                gemm_into(
+                    &mut ct,
+                    m,
+                    n,
+                    k,
+                    a.as_slice(),
+                    BSrc::Normal(b.as_slice()),
+                    false,
+                    threads,
+                    &mut s,
+                );
+                assert_eq!(c1, ct, "{mode:?} f64 threads={threads}");
+                let mut ct32 = vec![0.0f32; m * n];
+                gemm_into(
+                    &mut ct32,
+                    m,
+                    n,
+                    k,
+                    &a32,
+                    BSrc::Normal(&b32),
+                    false,
+                    threads,
+                    &mut s32,
+                );
+                assert_eq!(
+                    c1_32, ct32,
+                    "{mode:?} f32 threads={threads}"
+                );
+            }
+        }
     }
 }

@@ -12,9 +12,12 @@
 //! The dense products (`matmul`, `matmul_transb`) lower to the packed,
 //! register-blocked micro-kernel GEMM in `gemm.rs` (4x8 register tile,
 //! KC-blocked, B-panel packing), parallel over row bands of panels above
-//! a flop threshold.  Every output element is accumulated in strictly
-//! increasing k order, so results are bitwise identical at any thread
-//! count; the naive `*_serial` triple loops are retained as cross-check
+//! a flop threshold.  The register tiles dispatch once per process to
+//! the best ISA the host supports (`simd.rs`: AVX2+FMA / NEON / portable
+//! scalar, overridable via `RSKPCA_FORCE_SCALAR` or `[run] simd`).
+//! Every output element is accumulated in strictly increasing k order,
+//! so results are bitwise identical at any thread count under a fixed
+//! ISA; the naive `*_serial` triple loops are retained as cross-check
 //! references (property-tested to <= 1e-10 agreement, exact in
 //! practice).  The symmetric eigensolver rides the same engine: `eigh`
 //! is a blocked Householder tridiagonalization (panel reflectors
@@ -27,6 +30,7 @@
 mod eigen;
 pub(crate) mod gemm;
 mod qr;
+pub mod simd;
 
 pub use eigen::{
     eigh, eigh_serial, jacobi_eigh, subspace_eigh, subspace_eigh_resid,
@@ -38,7 +42,7 @@ pub use qr::{lstsq, solve_upper_triangular, QrFactor};
 use crate::error::{Error, Result};
 
 /// Minimum scalar-op estimate before a dense product fans out to
-/// threads; below this, spawn latency beats the parallel win.
+/// threads; below this, dispatch latency beats the parallel win.
 const PAR_MIN_FLOPS: usize = 1 << 16;
 
 /// Thread count for a dense kernel of `flops` scalar ops (1 below the

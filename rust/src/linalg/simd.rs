@@ -1,0 +1,524 @@
+//! Runtime-dispatched SIMD micro-kernels for the packed GEMM core.
+//!
+//! The blocked GEMM in [`super::gemm`] spends essentially all of its
+//! time in two register tiles: the f64 4×8 and the f32 8×8
+//! micro-kernel.  Autovectorization of the portable scalar tiles stops
+//! at the target baseline (SSE2 on `x86_64`: 2×f64 / 4×f32 lanes, no
+//! fused multiply-add), which ROADMAP item 3 calls the current
+//! ceiling.  This module adds explicit AVX2+FMA tiles (4×f64 / 8×f32
+//! lanes, fused multiply-add) selected **once per process** via
+//! [`std::arch::is_x86_feature_detected!`], plus NEON tiles where they
+//! are cheap (`aarch64`, where NEON is baseline).  The portable scalar
+//! tiles remain compiled on every target as the fallback and as the
+//! cross-check reference.
+//!
+//! Selection precedence, checked at every [`active`] call (all inputs
+//! are process-global and cheap to read):
+//!
+//! 1. `RSKPCA_FORCE_SCALAR` in the environment (read once, pins scalar
+//!    for the whole process — the ci.sh kill switch),
+//! 2. the configured [`SimdMode`] (`[run] simd = "auto" | "scalar"`,
+//!    wired through [`set_mode`]),
+//! 3. the startup-detected best ISA for the host.
+//!
+//! **Determinism.**  The SIMD tiles accumulate in strict k-order
+//! exactly like the scalar tiles — vector lanes span the *output*
+//! columns (NR direction), never the reduction — so every output
+//! element still sees one fixed operation sequence and the engine-wide
+//! bitwise thread-count-invariance contract holds per ISA.  SIMD vs
+//! scalar is **not** bitwise: FMA contracts the multiply-add rounding
+//! step, so the two kernels agree to rounding (tests bound f64 at
+//! 1e-10 relative).
+//!
+//! **Unsafety.**  Together with `signal.rs` (libc `signal` shim) and
+//! `server/event.rs` (libc for poll), this module is one of the
+//! crate's sanctioned `unsafe` regions: `#[target_feature]` intrinsics
+//! are callable only from `unsafe fn`, guarded here by the runtime
+//! detection above plus up-front slice-length asserts.  (The fourth
+//! and final region is the one lifetime-erasing transmute in
+//! `parallel::run_parts_pool`.)
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Kernel-selection mode from config (`[run] simd`) or CLI.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Use the best ISA the host supports (the default).
+    #[default]
+    Auto,
+    /// Pin the portable scalar tiles (baseline comparisons, debugging
+    /// a suspected kernel miscompile, bit-identical runs across
+    /// heterogeneous hosts).
+    Scalar,
+}
+
+impl SimdMode {
+    /// Parse the `[run] simd` knob; `None` for unknown values.
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s {
+            "auto" => Some(SimdMode::Auto),
+            "scalar" => Some(SimdMode::Scalar),
+            _ => None,
+        }
+    }
+
+    /// The config-file spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Scalar => "scalar",
+        }
+    }
+}
+
+/// The instruction set the micro-kernels dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// AVX2 + FMA tiles (x86_64, runtime-detected).
+    Avx2Fma,
+    /// NEON tiles (aarch64 baseline).
+    Neon,
+    /// Portable scalar tiles (always available).
+    Scalar,
+}
+
+impl Isa {
+    /// Label used by `/stats`, `/metrics` and bench rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2Fma => "avx2+fma",
+            Isa::Neon => "neon",
+            Isa::Scalar => "scalar",
+        }
+    }
+}
+
+/// Configured mode (0 = auto, 1 = scalar); see [`set_mode`].
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Set the kernel-selection mode (wired from `[run] simd`).  The
+/// `RSKPCA_FORCE_SCALAR` environment kill switch still wins.
+pub fn set_mode(mode: SimdMode) {
+    MODE.store(
+        matches!(mode, SimdMode::Scalar) as u8,
+        Ordering::Relaxed,
+    );
+}
+
+/// The currently configured mode.
+pub fn mode() -> SimdMode {
+    if MODE.load(Ordering::Relaxed) == 1 {
+        SimdMode::Scalar
+    } else {
+        SimdMode::Auto
+    }
+}
+
+/// `RSKPCA_FORCE_SCALAR` (any non-empty value other than `0`), read
+/// once per process.
+fn env_forced_scalar() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        std::env::var("RSKPCA_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// The best ISA this host supports, detected once per process.
+pub fn detected() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    fn arch_detect() -> Isa {
+        if is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+        {
+            Isa::Avx2Fma
+        } else {
+            Isa::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    fn arch_detect() -> Isa {
+        // NEON is part of the aarch64 baseline: no runtime check.
+        Isa::Neon
+    }
+    #[cfg(not(any(
+        target_arch = "x86_64",
+        target_arch = "aarch64"
+    )))]
+    fn arch_detect() -> Isa {
+        Isa::Scalar
+    }
+    arch_detect()
+}
+
+/// The ISA the micro-kernels dispatch to right now: scalar when forced
+/// (env beats config beats detection), else the detected best.
+pub fn active() -> Isa {
+    if env_forced_scalar() || mode() == SimdMode::Scalar {
+        Isa::Scalar
+    } else {
+        detected()
+    }
+}
+
+/// Short label of the active kernel for `/stats`, `/metrics`, benches.
+pub fn active_name() -> &'static str {
+    active().name()
+}
+
+/// Serializes tests that flip the process-global SIMD mode with the
+/// tests whose assertions a mid-run kernel switch would break (the
+/// bitwise GEMM invariance suite); mirrors
+/// `parallel::TEST_THREAD_LOCK`.
+#[cfg(test)]
+pub(crate) static SIMD_TEST_LOCK: std::sync::Mutex<()> =
+    std::sync::Mutex::new(());
+
+/// AVX2 + FMA register tiles for the packed micro-kernels.
+///
+/// Layout contract (identical to the scalar tiles in `gemm.rs`): `pa`
+/// holds `kc` packed A columns of MR rows, `pb` holds `kc` packed B
+/// rows of NR columns, `acc` is the row-major MR×NR accumulator tile.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use core::arch::x86_64::{
+        _mm256_fmadd_pd, _mm256_fmadd_ps, _mm256_loadu_pd,
+        _mm256_loadu_ps, _mm256_set1_pd, _mm256_set1_ps,
+        _mm256_storeu_pd, _mm256_storeu_ps,
+    };
+
+    /// f64 4×8 tile: 8 YMM accumulators (4 rows × 2 vectors of 4
+    /// lanes); per k step, one broadcast per row and one FMA per
+    /// accumulator.  Strict k-order accumulation — vector lanes span
+    /// output columns, so per-element operation order matches the
+    /// scalar tile modulo FMA contraction.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 and FMA support at runtime
+    /// ([`crate::linalg::simd::active`] only returns
+    /// [`super::Isa::Avx2Fma`] after `is_x86_feature_detected!`).
+    /// Slice-length requirements are asserted on entry.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn f64_kernel_4x8(
+        kc: usize,
+        pa: &[f64],
+        pb: &[f64],
+        acc: &mut [f64],
+    ) {
+        assert!(pa.len() >= kc * 4, "packed A too short");
+        assert!(pb.len() >= kc * 8, "packed B too short");
+        assert!(acc.len() >= 32, "accumulator tile too short");
+        let pa = pa.as_ptr();
+        let pb = pb.as_ptr();
+        let c = acc.as_mut_ptr();
+        let mut c00 = _mm256_loadu_pd(c);
+        let mut c01 = _mm256_loadu_pd(c.add(4));
+        let mut c10 = _mm256_loadu_pd(c.add(8));
+        let mut c11 = _mm256_loadu_pd(c.add(12));
+        let mut c20 = _mm256_loadu_pd(c.add(16));
+        let mut c21 = _mm256_loadu_pd(c.add(20));
+        let mut c30 = _mm256_loadu_pd(c.add(24));
+        let mut c31 = _mm256_loadu_pd(c.add(28));
+        for kk in 0..kc {
+            let b0 = _mm256_loadu_pd(pb.add(kk * 8));
+            let b1 = _mm256_loadu_pd(pb.add(kk * 8 + 4));
+            let a0 = _mm256_set1_pd(*pa.add(kk * 4));
+            c00 = _mm256_fmadd_pd(a0, b0, c00);
+            c01 = _mm256_fmadd_pd(a0, b1, c01);
+            let a1 = _mm256_set1_pd(*pa.add(kk * 4 + 1));
+            c10 = _mm256_fmadd_pd(a1, b0, c10);
+            c11 = _mm256_fmadd_pd(a1, b1, c11);
+            let a2 = _mm256_set1_pd(*pa.add(kk * 4 + 2));
+            c20 = _mm256_fmadd_pd(a2, b0, c20);
+            c21 = _mm256_fmadd_pd(a2, b1, c21);
+            let a3 = _mm256_set1_pd(*pa.add(kk * 4 + 3));
+            c30 = _mm256_fmadd_pd(a3, b0, c30);
+            c31 = _mm256_fmadd_pd(a3, b1, c31);
+        }
+        _mm256_storeu_pd(c, c00);
+        _mm256_storeu_pd(c.add(4), c01);
+        _mm256_storeu_pd(c.add(8), c10);
+        _mm256_storeu_pd(c.add(12), c11);
+        _mm256_storeu_pd(c.add(16), c20);
+        _mm256_storeu_pd(c.add(20), c21);
+        _mm256_storeu_pd(c.add(24), c30);
+        _mm256_storeu_pd(c.add(28), c31);
+    }
+
+    /// f32 8×8 tile: 8 YMM accumulators (one 8-lane vector per row);
+    /// per k step, one B load, then one broadcast + FMA per row.
+    ///
+    /// # Safety
+    /// Same contract as [`f64_kernel_4x8`].
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn f32_kernel_8x8(
+        kc: usize,
+        pa: &[f32],
+        pb: &[f32],
+        acc: &mut [f32],
+    ) {
+        assert!(pa.len() >= kc * 8, "packed A too short");
+        assert!(pb.len() >= kc * 8, "packed B too short");
+        assert!(acc.len() >= 64, "accumulator tile too short");
+        let pa = pa.as_ptr();
+        let pb = pb.as_ptr();
+        let c = acc.as_mut_ptr();
+        let mut c0 = _mm256_loadu_ps(c);
+        let mut c1 = _mm256_loadu_ps(c.add(8));
+        let mut c2 = _mm256_loadu_ps(c.add(16));
+        let mut c3 = _mm256_loadu_ps(c.add(24));
+        let mut c4 = _mm256_loadu_ps(c.add(32));
+        let mut c5 = _mm256_loadu_ps(c.add(40));
+        let mut c6 = _mm256_loadu_ps(c.add(48));
+        let mut c7 = _mm256_loadu_ps(c.add(56));
+        for kk in 0..kc {
+            let b = _mm256_loadu_ps(pb.add(kk * 8));
+            c0 = _mm256_fmadd_ps(_mm256_set1_ps(*pa.add(kk * 8)), b, c0);
+            c1 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(kk * 8 + 1)),
+                b,
+                c1,
+            );
+            c2 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(kk * 8 + 2)),
+                b,
+                c2,
+            );
+            c3 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(kk * 8 + 3)),
+                b,
+                c3,
+            );
+            c4 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(kk * 8 + 4)),
+                b,
+                c4,
+            );
+            c5 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(kk * 8 + 5)),
+                b,
+                c5,
+            );
+            c6 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(kk * 8 + 6)),
+                b,
+                c6,
+            );
+            c7 = _mm256_fmadd_ps(
+                _mm256_set1_ps(*pa.add(kk * 8 + 7)),
+                b,
+                c7,
+            );
+        }
+        _mm256_storeu_ps(c, c0);
+        _mm256_storeu_ps(c.add(8), c1);
+        _mm256_storeu_ps(c.add(16), c2);
+        _mm256_storeu_ps(c.add(24), c3);
+        _mm256_storeu_ps(c.add(32), c4);
+        _mm256_storeu_ps(c.add(40), c5);
+        _mm256_storeu_ps(c.add(48), c6);
+        _mm256_storeu_ps(c.add(56), c7);
+    }
+}
+
+/// NEON register tiles (aarch64; NEON is baseline there, so there is
+/// no runtime feature check — only the slice-contract asserts).
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use core::arch::aarch64::{
+        float32x4_t, float64x2_t, vdupq_n_f32, vdupq_n_f64, vfmaq_f32,
+        vfmaq_f64, vld1q_f32, vld1q_f64, vst1q_f32, vst1q_f64,
+    };
+
+    /// f64 4×8 tile as 4 rows × 4 vectors of 2 lanes.
+    ///
+    /// # Safety
+    /// Slice-length requirements are asserted on entry; NEON needs no
+    /// runtime detection on aarch64.
+    pub(crate) unsafe fn f64_kernel_4x8(
+        kc: usize,
+        pa: &[f64],
+        pb: &[f64],
+        acc: &mut [f64],
+    ) {
+        assert!(pa.len() >= kc * 4, "packed A too short");
+        assert!(pb.len() >= kc * 8, "packed B too short");
+        assert!(acc.len() >= 32, "accumulator tile too short");
+        let mut c: [float64x2_t; 16] = [vdupq_n_f64(0.0); 16];
+        for r in 0..4 {
+            for v in 0..4 {
+                c[r * 4 + v] =
+                    vld1q_f64(acc.as_ptr().add(r * 8 + v * 2));
+            }
+        }
+        for kk in 0..kc {
+            let b: [float64x2_t; 4] = [
+                vld1q_f64(pb.as_ptr().add(kk * 8)),
+                vld1q_f64(pb.as_ptr().add(kk * 8 + 2)),
+                vld1q_f64(pb.as_ptr().add(kk * 8 + 4)),
+                vld1q_f64(pb.as_ptr().add(kk * 8 + 6)),
+            ];
+            for r in 0..4 {
+                let a = vdupq_n_f64(*pa.get_unchecked(kk * 4 + r));
+                for v in 0..4 {
+                    c[r * 4 + v] = vfmaq_f64(c[r * 4 + v], a, b[v]);
+                }
+            }
+        }
+        for r in 0..4 {
+            for v in 0..4 {
+                vst1q_f64(
+                    acc.as_mut_ptr().add(r * 8 + v * 2),
+                    c[r * 4 + v],
+                );
+            }
+        }
+    }
+
+    /// f32 8×8 tile as 8 rows × 2 vectors of 4 lanes.
+    ///
+    /// # Safety
+    /// Same contract as [`f64_kernel_4x8`].
+    pub(crate) unsafe fn f32_kernel_8x8(
+        kc: usize,
+        pa: &[f32],
+        pb: &[f32],
+        acc: &mut [f32],
+    ) {
+        assert!(pa.len() >= kc * 8, "packed A too short");
+        assert!(pb.len() >= kc * 8, "packed B too short");
+        assert!(acc.len() >= 64, "accumulator tile too short");
+        let mut c: [float32x4_t; 16] = [vdupq_n_f32(0.0); 16];
+        for r in 0..8 {
+            for v in 0..2 {
+                c[r * 2 + v] =
+                    vld1q_f32(acc.as_ptr().add(r * 8 + v * 4));
+            }
+        }
+        for kk in 0..kc {
+            let b: [float32x4_t; 2] = [
+                vld1q_f32(pb.as_ptr().add(kk * 8)),
+                vld1q_f32(pb.as_ptr().add(kk * 8 + 4)),
+            ];
+            for r in 0..8 {
+                let a = vdupq_n_f32(*pa.get_unchecked(kk * 8 + r));
+                for v in 0..2 {
+                    c[r * 2 + v] = vfmaq_f32(c[r * 2 + v], a, b[v]);
+                }
+            }
+        }
+        for r in 0..8 {
+            for v in 0..2 {
+                vst1q_f32(
+                    acc.as_mut_ptr().add(r * 8 + v * 4),
+                    c[r * 2 + v],
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_round_trips_and_rejects_unknown() {
+        assert_eq!(SimdMode::parse("auto"), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse("scalar"), Some(SimdMode::Scalar));
+        assert_eq!(SimdMode::parse("avx512"), None);
+        assert_eq!(SimdMode::parse(""), None);
+        for m in [SimdMode::Auto, SimdMode::Scalar] {
+            assert_eq!(SimdMode::parse(m.name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn isa_names_are_stable_labels() {
+        assert_eq!(Isa::Avx2Fma.name(), "avx2+fma");
+        assert_eq!(Isa::Neon.name(), "neon");
+        assert_eq!(Isa::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn set_mode_pins_scalar_and_auto_restores_detection() {
+        let _guard = SIMD_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        set_mode(SimdMode::Scalar);
+        assert_eq!(mode(), SimdMode::Scalar);
+        assert_eq!(active(), Isa::Scalar);
+        set_mode(SimdMode::Auto);
+        assert_eq!(mode(), SimdMode::Auto);
+        // Auto resolves to the detected ISA unless the env kill
+        // switch pinned scalar for this whole process.
+        let want = if std::env::var("RSKPCA_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+        {
+            Isa::Scalar
+        } else {
+            detected()
+        };
+        assert_eq!(active(), want);
+        assert_eq!(active_name(), want.name());
+    }
+
+    /// Direct tile-level cross-check: the AVX2 kernels must agree with
+    /// the portable scalar tiles on random packed panels.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_tiles_match_scalar_tiles() {
+        if !(is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma"))
+        {
+            eprintln!("avx2+fma unavailable; tile cross-check skipped");
+            return;
+        }
+        use crate::linalg::gemm::{
+            scalar_kernel_f32, scalar_kernel_f64,
+        };
+        let mut rng = crate::prng::Pcg64::new(0x51D);
+        for kc in [1usize, 2, 7, 64, 256] {
+            let pa: Vec<f64> =
+                (0..kc * 4).map(|_| rng.range(-1.0, 1.0)).collect();
+            let pb: Vec<f64> =
+                (0..kc * 8).map(|_| rng.range(-1.0, 1.0)).collect();
+            let mut simd = vec![0.25f64; 32];
+            let mut scalar = simd.clone();
+            unsafe { x86::f64_kernel_4x8(kc, &pa, &pb, &mut simd) };
+            scalar_kernel_f64(kc, &pa, &pb, &mut scalar);
+            for (s, r) in simd.iter().zip(&scalar) {
+                assert!(
+                    (s - r).abs() <= 1e-10 * r.abs().max(1.0),
+                    "f64 kc={kc}: {s} vs {r}"
+                );
+            }
+            let pa: Vec<f32> = (0..kc * 8)
+                .map(|_| rng.range(-1.0, 1.0) as f32)
+                .collect();
+            let pb: Vec<f32> = (0..kc * 8)
+                .map(|_| rng.range(-1.0, 1.0) as f32)
+                .collect();
+            let mut simd = vec![0.25f32; 64];
+            let mut scalar = simd.clone();
+            unsafe { x86::f32_kernel_8x8(kc, &pa, &pb, &mut simd) };
+            scalar_kernel_f32(kc, &pa, &pb, &mut scalar);
+            let tol = (kc as f64) * f32::EPSILON as f64 * 8.0;
+            for (s, r) in simd.iter().zip(&scalar) {
+                let (s, r) = (*s as f64, *r as f64);
+                assert!(
+                    (s - r).abs() <= tol * r.abs().max(1.0),
+                    "f32 kc={kc}: {s} vs {r}"
+                );
+            }
+        }
+    }
+}

@@ -114,6 +114,26 @@ impl PromText {
         }
     }
 
+    /// A gauge family with one label dimension (e.g. the one-hot
+    /// "which variant is active" idiom).
+    pub fn gauge_vec(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        label: &'static str,
+        samples: &[(&str, f64)],
+    ) {
+        self.header(name, help, "gauge");
+        for (value, v) in samples {
+            let _ = writeln!(
+                self.out,
+                "{name}{{{label}=\"{}\"}} {}",
+                escape_label(value),
+                fmt_value(*v)
+            );
+        }
+    }
+
     /// A full histogram family from a [`StageSnapshot`]: cumulative
     /// `_bucket` series (closed by `le="+Inf"`), `_sum`, `_count`.
     pub fn histogram(
@@ -491,6 +511,12 @@ mod tests {
             "route",
             &[("GET /stats", 5.0), ("POST /embed", 37.0)],
         );
+        p.gauge_vec(
+            "rskpca_simd_kernel",
+            "Active GEMM kernel (one-hot).",
+            "kernel",
+            &[("avx2+fma", 1.0)],
+        );
         p.histogram(
             "rskpca_queue_wait_us",
             "Queue wait (us).",
@@ -512,6 +538,14 @@ mod tests {
         let hits = parsed.family("rskpca_route_hits_total");
         assert_eq!(hits.len(), 2);
         assert_eq!(hits[1].label("route"), Some("POST /embed"));
+        // gauge_vec renders a TYPE'd labeled gauge family.
+        assert_eq!(
+            parsed.types.get("rskpca_simd_kernel").map(String::as_str),
+            Some("gauge")
+        );
+        let kernels = parsed.family("rskpca_simd_kernel");
+        assert_eq!(kernels.len(), 1);
+        assert_eq!(kernels[0].label("kernel"), Some("avx2+fma"));
         // Bucket count: every bound plus +Inf.
         let buckets = parsed.family("rskpca_queue_wait_us_bucket");
         assert_eq!(buckets.len(), US_BOUNDS.len() + 1);

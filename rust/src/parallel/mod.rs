@@ -1,4 +1,5 @@
-//! Shared parallel blocked compute engine (std threads, zero deps).
+//! Shared parallel blocked compute engine (std threads, zero deps),
+//! built around a **persistent worker pool**.
 //!
 //! Every compute hot path in the crate — Gram construction
 //! ([`crate::kernel`]), dense products ([`crate::linalg`]), subspace
@@ -14,15 +15,52 @@
 //!    elements, projections) it is *bitwise identical at any thread
 //!    count*, because each output element is produced by the exact same
 //!    operation sequence (strict k-order accumulation) regardless of
-//!    band boundaries.  Only chunked *reductions* ([`par_sum`])
-//!    re-associate additions.  The naive `*_serial` cross-check
-//!    references agree to rounding (<= 1e-10), not bitwise — the
-//!    GEMM/norm-trick engine restructures their flops.
+//!    band boundaries.  Which OS thread runs a part is irrelevant to
+//!    the result, so the pool keeps the contract trivially.  Only
+//!    chunked *reductions* ([`par_sum`]) re-associate additions.  The
+//!    naive `*_serial` cross-check references agree to rounding
+//!    (<= 1e-10), not bitwise — the GEMM/norm-trick engine restructures
+//!    their flops.
 //! 2. **Safety.**  Mutable outputs are partitioned with `split_at_mut`
-//!    into disjoint row bands before any thread starts; there is no
-//!    `unsafe` anywhere in the engine.
-//! 3. **Scoped lifetimes.**  [`std::thread::scope`] lets workers borrow
-//!    inputs directly — no `Arc`, no cloning of matrices.
+//!    into disjoint row bands before any part starts.  The engine holds
+//!    the crate's one sanctioned dispatch-layer `unsafe`: a single
+//!    lifetime-erasing transmute in [`run_parts_pool`] that lets the
+//!    long-lived pool workers borrow the caller's task, sound because
+//!    dispatch blocks until every part has completed before returning.
+//! 3. **Scoped borrows without per-call spawn.**  Tasks borrow inputs
+//!    directly (no `Arc`, no cloning of matrices) exactly as with
+//!    [`std::thread::scope`], but the threads running them are created
+//!    once — at [`set_threads`] time or on first dispatch — and parked
+//!    on a condvar between jobs.  Waking a parked worker costs a futex
+//!    wake (~1-2 us) instead of a thread spawn (~20-60 us), which the
+//!    serving hot path pays per batch.  Per-call `thread::scope` spawn
+//!    survives only as the fallback when the pool is busy (nested
+//!    parallelism), absent (one effective thread), or explicitly
+//!    bypassed ([`force_spawn_fallback`]).
+//!
+//! ## Pool protocol
+//!
+//! ```text
+//!             submit lock (one job at a time; busy => scoped fallback)
+//!                 |
+//!   caller ---publish job {task, parts, next=1}---+--> work_cv.notify
+//!     |                                           |
+//!     | runs part 0, then help-claims             v
+//!     |                            rskpca-pool-0 .. rskpca-pool-(w-1)
+//!     |                            parked -> wake -> claim next part
+//!     |                                           |
+//!     +<--- done_cv (last part completed) --------+
+//! ```
+//!
+//! Workers are named `rskpca-pool-{i}` and run under the
+//! [`crate::sync::Supervisor`] restart policy; task panics are caught
+//! per part (the submitter re-raises them as "parallel worker
+//! panicked", identical to the scoped engine), so a supervisor restart
+//! only ever signals a bug in the pool machinery itself.
+//! Reconfiguring the thread count drains the old pool (shutdown flag +
+//! wake + join — no leaked parked workers) before the new one spawns,
+//! and `set_threads(0)` auto-detection clamps to
+//! [`std::thread::available_parallelism`] at build time.
 //!
 //! ## Thread-count resolution
 //!
@@ -31,7 +69,7 @@
 //! into the process-global [`set_threads`]; `0` means "auto" (one thread
 //! per available core, capped at [`MAX_THREADS`]).  Hot paths fall back
 //! to serial execution below a work threshold so tiny inputs never pay
-//! thread-spawn latency.
+//! dispatch latency.
 //!
 //! ```
 //! use rskpca::parallel;
@@ -49,7 +87,17 @@
 //! ```
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
+use std::sync::{
+    Arc, Condvar, Mutex, PoisonError, TryLockError,
+};
+use std::thread::JoinHandle;
+
+use crate::obs::Obs;
+use crate::sync::{lock, spawn_supervised, GiveUp, Supervisor};
 
 /// Serializes in-crate unit tests that flip the process-global thread
 /// count (the parallel cargo-test runner would otherwise interleave
@@ -68,10 +116,109 @@ pub const MAX_THREADS: usize = 64;
 /// Process-global configured thread count; 0 = auto.
 static CONFIGURED_THREADS: AtomicUsize = AtomicUsize::new(0);
 
+/// Benchmark/test hook: route every dispatch through the per-call
+/// scoped-spawn fallback.
+static FORCE_SPAWN: AtomicBool = AtomicBool::new(false);
+
+// Pool counters survive rebuilds (exposed via [`pool_stats`]).
+static POOL_PARKS: AtomicU64 = AtomicU64::new(0);
+static POOL_WAKES: AtomicU64 = AtomicU64::new(0);
+static POOL_JOBS: AtomicU64 = AtomicU64::new(0);
+static POOL_SPAWN_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+static BUSY_PARTS: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-global pool (built lazily on first dispatch, rebuilt by
+/// [`set_threads`] / [`set_obs`] when the target shape changes).
+static POOL: Mutex<PoolCell> =
+    Mutex::new(PoolCell { built: false, pool: None });
+
+/// Observability handle pool-worker supervision reports to.
+static POOL_OBS: Mutex<Option<Arc<Obs>>> = Mutex::new(None);
+
+struct PoolCell {
+    /// Whether a build was ever attempted (a pool of zero workers is
+    /// represented as `built && pool.is_none()`).
+    built: bool,
+    pool: Option<Pool>,
+}
+
+/// A borrowed task whose lifetime has been erased so the long-lived
+/// pool workers can run it.  `&T` is `Send` because the task is
+/// `Sync`; soundness of the erasure is argued at the single transmute
+/// in [`run_parts_pool`].
+#[derive(Clone, Copy)]
+struct TaskRef(&'static (dyn Fn(usize) + Sync));
+
+/// The job currently posted to the pool.
+struct Job {
+    task: TaskRef,
+    parts: usize,
+    /// Next unclaimed part index (part 0 is pre-claimed by the caller).
+    next: usize,
+    /// Parts not yet completed; the last completion publishes
+    /// `done_gen` and wakes the submitter.
+    pending: usize,
+    panicked: bool,
+}
+
+struct JobSlot {
+    job: Option<Job>,
+    /// Monotonic job generation (incremented at publish time).
+    gen: u64,
+    /// Generation of the most recently *completed* job.
+    done_gen: u64,
+    /// Whether any part of that job panicked.
+    last_panicked: bool,
+}
+
+struct PoolShared {
+    slot: Mutex<JobSlot>,
+    /// Parked workers wait here for a published job.
+    work_cv: Condvar,
+    /// The submitter waits here for its job's last part.
+    done_cv: Condvar,
+    /// Serializes whole jobs; a busy pool (or nested parallelism) makes
+    /// the dispatcher fall back to per-call scoped spawn, which also
+    /// keeps nesting deadlock-free.
+    submit: Mutex<()>,
+    shutdown: AtomicBool,
+    workers: usize,
+}
+
+struct Pool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    /// The handle the workers' supervisors were built with (compared by
+    /// [`set_obs`] to skip no-op rebuilds).
+    obs: Arc<Obs>,
+}
+
+impl Drop for Pool {
+    /// Drain and join: no leaked parked workers across a reconfigure.
+    /// An in-flight job still completes — its submitter help-claims
+    /// every remaining part itself, and a worker never abandons a part
+    /// it already claimed.
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Set the global compute-thread count (0 = auto-detect).  Wired from
-/// the `[run] threads` config knob / `--threads` CLI flag.
+/// the `[run] threads` config knob / `--threads` CLI flag.  Builds (or
+/// drains and rebuilds) the persistent pool to match; a call that
+/// resolves to the current pool shape is a no-op re-validation.
 pub fn set_threads(n: usize) {
     CONFIGURED_THREADS.store(n.min(MAX_THREADS), Ordering::Relaxed);
+    let mut cell = lock(&POOL);
+    let workers = effective_threads().saturating_sub(1);
+    let current = cell.pool.as_ref().map_or(0, |p| p.shared.workers);
+    if !cell.built || workers != current {
+        rebuild_locked(&mut cell);
+    }
 }
 
 /// The globally configured thread count (0 = auto).
@@ -86,8 +233,20 @@ pub fn available_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// The fan-out width the pool is built for: the configured count, with
+/// 0 (auto) resolved — and re-validated on every reconfigure — against
+/// [`std::thread::available_parallelism`] at build time, so auto never
+/// oversubscribes the host.
+fn effective_threads() -> usize {
+    let n = match configured_threads() {
+        0 => available_threads(),
+        n => n,
+    };
+    n.clamp(1, MAX_THREADS)
+}
+
 /// Thread count for a job of `work` units with a serial-fallback
-/// threshold: 1 below `min_work` (callers skip spawn latency without
+/// threshold: 1 below `min_work` (callers skip dispatch latency without
 /// touching the resolver), else the configured/auto count.  The single
 /// entry point every sized hot path dispatches through.
 pub fn threads_for_work(work: usize, min_work: usize) -> usize {
@@ -111,6 +270,330 @@ pub fn resolve_threads(requested: usize) -> usize {
         }
     };
     n.clamp(1, MAX_THREADS)
+}
+
+/// Register the observability handle pool-worker supervision reports
+/// panic accounting to (wired at service start).  Rebuilds the pool so
+/// already-running workers pick the handle up; a repeat registration of
+/// the same handle is a no-op.
+pub fn set_obs(obs: Arc<Obs>) {
+    {
+        let mut slot = lock(&POOL_OBS);
+        if slot.as_ref().is_some_and(|o| Arc::ptr_eq(o, &obs)) {
+            return;
+        }
+        *slot = Some(obs);
+    }
+    let mut cell = lock(&POOL);
+    if cell.built && cell.pool.is_some() {
+        rebuild_locked(&mut cell);
+    }
+}
+
+/// Benchmark/test hook: force every dispatch through the per-call
+/// scoped-spawn fallback (isolates pool wake-up vs thread-spawn cost).
+pub fn force_spawn_fallback(on: bool) {
+    FORCE_SPAWN.store(on, Ordering::Relaxed);
+}
+
+/// Snapshot of the persistent pool for `/stats`, `/metrics`, benches
+/// and tests.  Counters are process-lifetime (they survive rebuilds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Compute fan-out width: pool workers + the submitting thread.
+    pub threads: usize,
+    /// Parked worker threads owned by the pool.
+    pub workers: usize,
+    /// Parts executing right now (pool and fallback paths).
+    pub busy: usize,
+    /// Times a worker parked on the work condvar.
+    pub parks: u64,
+    /// Times a parked worker woke up to look for work.
+    pub wakes: u64,
+    /// Jobs dispatched through the pool.
+    pub jobs: u64,
+    /// Dispatches that used the per-call scoped-spawn fallback.
+    pub spawn_fallbacks: u64,
+}
+
+/// Current pool shape and lifetime counters.
+pub fn pool_stats() -> PoolStats {
+    let workers = {
+        let cell = lock(&POOL);
+        cell.pool.as_ref().map_or(0, |p| p.shared.workers)
+    };
+    PoolStats {
+        threads: workers + 1,
+        workers,
+        busy: BUSY_PARTS.load(Ordering::Relaxed),
+        parks: POOL_PARKS.load(Ordering::Relaxed),
+        wakes: POOL_WAKES.load(Ordering::Relaxed),
+        jobs: POOL_JOBS.load(Ordering::Relaxed),
+        spawn_fallbacks: POOL_SPAWN_FALLBACKS.load(Ordering::Relaxed),
+    }
+}
+
+/// (Re)build the pool to match the configured thread count: dropping
+/// the old pool drains and joins its workers before the new set
+/// spawns.  Called with the `POOL` mutex held.
+fn rebuild_locked(cell: &mut PoolCell) {
+    cell.built = true;
+    cell.pool = None;
+    let workers = effective_threads().saturating_sub(1);
+    cell.pool = spawn_pool(workers, pool_obs());
+}
+
+fn pool_obs() -> Arc<Obs> {
+    lock(&POOL_OBS)
+        .clone()
+        .unwrap_or_else(|| Arc::new(Obs::default()))
+}
+
+/// Spawn `workers` parked pool threads (named `rskpca-pool-{i}`, each
+/// under `Supervisor` restart accounting).  `None` when no worker is
+/// wanted or none could be spawned — dispatch then uses the fallback.
+fn spawn_pool(workers: usize, obs: Arc<Obs>) -> Option<Pool> {
+    if workers == 0 {
+        return None;
+    }
+    let shared = Arc::new(PoolShared {
+        slot: Mutex::new(JobSlot {
+            job: None,
+            gen: 0,
+            done_gen: 0,
+            last_panicked: false,
+        }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+        submit: Mutex::new(()),
+        shutdown: AtomicBool::new(false),
+        workers,
+    });
+    let policy = Supervisor {
+        give_up: GiveUp::Return,
+        ..Supervisor::new("rskpca-pool")
+    };
+    let mut handles = Vec::with_capacity(workers);
+    for i in 0..workers {
+        let worker_shared = Arc::clone(&shared);
+        let spawned = spawn_supervised(
+            policy,
+            format!("rskpca-pool-{i}"),
+            Arc::clone(&obs),
+            move || worker_loop(&worker_shared),
+        );
+        match spawned {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                eprintln!(
+                    "parallel: failed to spawn pool worker {i}: {e} \
+                     (continuing with {} workers)",
+                    handles.len()
+                );
+                break;
+            }
+        }
+    }
+    if handles.is_empty() {
+        shared.shutdown.store(true, Ordering::Release);
+        return None;
+    }
+    Some(Pool { shared, handles, obs })
+}
+
+/// Body of one pool worker: claim parts while a job is posted, park on
+/// the work condvar otherwise, exit on shutdown.  Task panics never
+/// unwind here (they are caught per part in [`run_one_part`]), so a
+/// supervisor restart of this loop only ever signals a pool bug.
+fn worker_loop(shared: &PoolShared) {
+    let mut slot = lock(&shared.slot);
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let claimed = match slot.job.as_mut() {
+            Some(job) if job.next < job.parts => {
+                let part = job.next;
+                job.next += 1;
+                Some((job.task, part))
+            }
+            _ => None,
+        };
+        match claimed {
+            Some((task, part)) => {
+                drop(slot);
+                run_one_part(shared, task, part);
+                slot = lock(&shared.slot);
+            }
+            None => {
+                POOL_PARKS.fetch_add(1, Ordering::Relaxed);
+                slot = shared
+                    .work_cv
+                    .wait(slot)
+                    .unwrap_or_else(PoisonError::into_inner);
+                POOL_WAKES.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Run one part of the posted job.  A task panic is caught so the slot
+/// bookkeeping always completes (no deadlocked submitter); the
+/// submitter re-raises it as "parallel worker panicked" once the job
+/// has fully drained.
+fn run_one_part(shared: &PoolShared, task: TaskRef, part: usize) {
+    BUSY_PARTS.fetch_add(1, Ordering::Relaxed);
+    let result =
+        std::panic::catch_unwind(AssertUnwindSafe(|| (task.0)(part)));
+    BUSY_PARTS.fetch_sub(1, Ordering::Relaxed);
+    let mut slot = lock(&shared.slot);
+    if let Some(job) = slot.job.as_mut() {
+        job.panicked |= result.is_err();
+        job.pending -= 1;
+        if job.pending == 0 {
+            let panicked = job.panicked;
+            slot.job = None;
+            slot.done_gen = slot.gen;
+            slot.last_panicked = panicked;
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Dispatch `parts` parts through the persistent pool.  The caller must
+/// hold the pool's `submit` lock (one job at a time).  Part 0 runs on
+/// the submitting thread (same contract as the scoped fallback), which
+/// then help-claims any still-unclaimed parts before blocking on the
+/// completion condvar.
+fn run_parts_pool(
+    shared: &PoolShared,
+    parts: usize,
+    task: &(dyn Fn(usize) + Sync),
+) {
+    // SAFETY: the engine's single `unsafe` region.  The borrow's
+    // lifetime is erased so pool workers (spawned long before this
+    // call) can run the task.  Sound because this function does not
+    // return until every part has completed — the wait below blocks on
+    // `done_cv` until the last part decrements `pending` to zero, and
+    // no worker touches the task after that decrement — so the erased
+    // borrow strictly outlives every dereference.
+    let task = TaskRef(unsafe {
+        std::mem::transmute::<
+            &(dyn Fn(usize) + Sync),
+            &'static (dyn Fn(usize) + Sync),
+        >(task)
+    });
+    let job_gen = {
+        let mut slot = lock(&shared.slot);
+        slot.gen += 1;
+        slot.job = Some(Job {
+            task,
+            parts,
+            next: 1,
+            pending: parts,
+            panicked: false,
+        });
+        POOL_JOBS.fetch_add(1, Ordering::Relaxed);
+        // Wake exactly as many workers as there are spare parts; the
+        // notifications happen while the slot is held, so a worker
+        // either sees the posted job or is parked and gets woken —
+        // no lost wakeups.
+        let spare = parts - 1;
+        if spare >= shared.workers {
+            shared.work_cv.notify_all();
+        } else {
+            for _ in 0..spare {
+                shared.work_cv.notify_one();
+            }
+        }
+        slot.gen
+    };
+    run_one_part(shared, task, 0);
+    loop {
+        let claimed = {
+            let mut slot = lock(&shared.slot);
+            match slot.job.as_mut() {
+                Some(job) if job.next < job.parts => {
+                    let part = job.next;
+                    job.next += 1;
+                    Some(part)
+                }
+                _ => None,
+            }
+        };
+        match claimed {
+            Some(part) => run_one_part(shared, task, part),
+            None => break,
+        }
+    }
+    if wait_done(shared, job_gen) {
+        panic!("parallel worker panicked");
+    }
+}
+
+/// Block until the job published as generation `job_gen` has fully
+/// completed; returns whether any of its parts panicked.
+fn wait_done(shared: &PoolShared, job_gen: u64) -> bool {
+    let mut slot = lock(&shared.slot);
+    while slot.done_gen < job_gen {
+        slot = shared
+            .done_cv
+            .wait(slot)
+            .unwrap_or_else(PoisonError::into_inner);
+    }
+    slot.last_panicked
+}
+
+/// Per-call scoped-spawn fallback: used when the pool has no workers,
+/// is busy with another job (including nested parallelism), or is
+/// explicitly bypassed.  Same contract: part 0 on the caller's thread,
+/// a worker panic re-raised as "parallel worker panicked".
+fn run_parts_spawn(parts: usize, task: &(dyn Fn(usize) + Sync)) {
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            (1..parts).map(|p| s.spawn(move || task(p))).collect();
+        task(0);
+        for h in handles {
+            h.join().expect("parallel worker panicked");
+        }
+    });
+}
+
+/// Run `task(part)` for every part in `0..parts`: through the pool when
+/// it is free, else via scoped spawn.  Blocks until all parts complete.
+fn run_parts(parts: usize, task: &(dyn Fn(usize) + Sync)) {
+    if parts <= 1 {
+        if parts == 1 {
+            task(0);
+        }
+        return;
+    }
+    if !FORCE_SPAWN.load(Ordering::Relaxed) {
+        if let Some(shared) = pool_shared() {
+            let submit = match shared.submit.try_lock() {
+                Ok(g) => Some(g),
+                Err(TryLockError::Poisoned(p)) => Some(p.into_inner()),
+                Err(TryLockError::WouldBlock) => None,
+            };
+            if let Some(_submit) = submit {
+                if !shared.shutdown.load(Ordering::Acquire) {
+                    run_parts_pool(&shared, parts, task);
+                    return;
+                }
+            }
+        }
+    }
+    POOL_SPAWN_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+    run_parts_spawn(parts, task);
+}
+
+/// The live pool's shared state, building the pool on first use.
+fn pool_shared() -> Option<Arc<PoolShared>> {
+    let mut cell = lock(&POOL);
+    if !cell.built {
+        rebuild_locked(&mut cell);
+    }
+    cell.pool.as_ref().map(|p| Arc::clone(&p.shared))
 }
 
 /// Split `0..n` into at most `parts` non-empty contiguous ranges of
@@ -182,9 +665,38 @@ pub fn weighted_ranges(
     out
 }
 
-/// Run `f(part_index, range)` for each range, each on its own scoped
-/// thread (part 0 runs on the caller's thread); results are returned in
-/// part order.  With zero or one range no thread is spawned.
+/// Run `f(index, item)` once per item, fanned out across the pool
+/// (part 0 on the caller's thread).  The closure may borrow freely from
+/// the caller's stack: dispatch blocks until every part has completed.
+pub fn for_each_part<T, F>(items: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    match items.len() {
+        0 => {}
+        1 => {
+            let mut items = items;
+            f(0, items.pop().expect("one item"));
+        }
+        n => {
+            let slots: Vec<Mutex<Option<T>>> = items
+                .into_iter()
+                .map(|t| Mutex::new(Some(t)))
+                .collect();
+            run_parts(n, &|part| {
+                let item = lock(&slots[part])
+                    .take()
+                    .expect("each part dispatched exactly once");
+                f(part, item);
+            });
+        }
+    }
+}
+
+/// Run `f(part_index, range)` for each range across the pool (part 0
+/// runs on the caller's thread); results are returned in part order.
+/// With zero or one range nothing is dispatched.
 pub fn par_map_parts<R, F>(ranges: &[Range<usize>], f: F) -> Vec<R>
 where
     R: Send,
@@ -193,23 +705,22 @@ where
     match ranges.len() {
         0 => Vec::new(),
         1 => vec![f(0, ranges[0].clone())],
-        _ => std::thread::scope(|s| {
-            let f = &f;
-            let handles: Vec<_> = ranges[1..]
-                .iter()
-                .enumerate()
-                .map(|(i, r)| {
-                    let r = r.clone();
-                    s.spawn(move || f(i + 1, r))
+        n => {
+            let slots: Vec<Mutex<Option<R>>> =
+                (0..n).map(|_| Mutex::new(None)).collect();
+            run_parts(n, &|part| {
+                let r = f(part, ranges[part].clone());
+                *lock(&slots[part]) = Some(r);
+            });
+            slots
+                .into_iter()
+                .map(|s| {
+                    s.into_inner()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .expect("every part produced a result")
                 })
-                .collect();
-            let mut out = Vec::with_capacity(ranges.len());
-            out.push(f(0, ranges[0].clone()));
-            for h in handles {
-                out.push(h.join().expect("parallel worker panicked"));
-            }
-            out
-        }),
+                .collect()
+        }
     }
 }
 
@@ -222,12 +733,28 @@ where
     RA: Send,
     RB: Send,
 {
-    std::thread::scope(|s| {
-        let hb = s.spawn(b);
-        let ra = a();
-        let rb = hb.join().expect("parallel worker panicked");
-        (ra, rb)
-    })
+    let fa = Mutex::new(Some(a));
+    let fb = Mutex::new(Some(b));
+    let ra: Mutex<Option<RA>> = Mutex::new(None);
+    let rb: Mutex<Option<RB>> = Mutex::new(None);
+    run_parts(2, &|part| {
+        if part == 0 {
+            let f = lock(&fa).take().expect("part 0 runs once");
+            *lock(&ra) = Some(f());
+        } else {
+            let f = lock(&fb).take().expect("part 1 runs once");
+            *lock(&rb) = Some(f());
+        }
+    });
+    let ra = ra
+        .into_inner()
+        .unwrap_or_else(PoisonError::into_inner)
+        .expect("join produced a");
+    let rb = rb
+        .into_inner()
+        .unwrap_or_else(PoisonError::into_inner)
+        .expect("join produced b");
+    (ra, rb)
 }
 
 /// Partition a row-major buffer (`row_len` elements per row) into the
@@ -257,9 +784,9 @@ pub fn par_row_bands_mut<T, F>(
         f(ranges[0].clone(), data);
         return;
     }
-    // Pre-split into disjoint bands (no unsafe, no overlap by
-    // construction).  `mem::take` moves the full-lifetime slice out of
-    // `rest` so each split's halves keep the original lifetime.
+    // Pre-split into disjoint bands (no overlap by construction).
+    // `mem::take` moves the full-lifetime slice out of `rest` so each
+    // split's halves keep the original lifetime.
     let mut bands: Vec<(Range<usize>, &mut [T])> =
         Vec::with_capacity(ranges.len());
     let mut rest = data;
@@ -272,18 +799,7 @@ pub fn par_row_bands_mut<T, F>(
         bands.push((r.clone(), head));
         rest = tail;
     }
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut iter = bands.into_iter();
-        let first = iter.next().expect("at least two bands");
-        let handles: Vec<_> = iter
-            .map(|(r, band)| s.spawn(move || f(r, band)))
-            .collect();
-        f(first.0, first.1);
-        for h in handles {
-            h.join().expect("parallel worker panicked");
-        }
-    });
+    for_each_part(bands, |_, (r, band)| f(r, band));
 }
 
 /// Fill every row of a row-major `rows x row_len` buffer in parallel:
@@ -330,6 +846,8 @@ pub fn par_sum(n: usize, parts: usize, term: impl Fn(usize) -> f64 + Sync)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
+    use std::sync::Barrier;
 
     #[test]
     fn even_ranges_tile_and_balance() {
@@ -470,5 +988,153 @@ mod tests {
         assert_eq!(threads_for_work(99, 100), 1);
         assert!(threads_for_work(100, 100) >= 1);
         assert_eq!(threads_for_work(0, 1), 1);
+    }
+
+    #[test]
+    fn for_each_part_visits_every_item_once() {
+        let n = 16;
+        let hits: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let items: Vec<usize> = (0..n).collect();
+        for_each_part(items, |idx, item| {
+            assert_eq!(idx, item);
+            hits[item].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits
+            .iter()
+            .all(|h| h.load(Ordering::Relaxed) == 1));
+        // Degenerate sizes: empty dispatches nothing, a single item
+        // runs inline on the caller.
+        for_each_part(Vec::<usize>::new(), |_, _| unreachable!());
+        let caller = std::thread::current().id();
+        let one = AtomicUsize::new(0);
+        for_each_part(vec![7usize], |idx, item| {
+            assert_eq!((idx, item), (0, 7));
+            assert_eq!(std::thread::current().id(), caller);
+            one.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(one.load(Ordering::Relaxed), 1);
+    }
+
+    /// Tentpole guarantee: after warmup the pool never creates another
+    /// OS thread — 1000 dispatches reuse the same worker set — and
+    /// dropping the pool drains and joins every worker.  Uses a private
+    /// pool so concurrently running tests can't steal the global one
+    /// (which would route this test through the scoped fallback and
+    /// legitimately mint new thread ids).
+    #[test]
+    fn pool_threads_stable_across_1000_calls_and_join_on_drop() {
+        let obs = Arc::new(Obs::default());
+        let pool = spawn_pool(3, obs).expect("3 pool workers");
+        let shared = Arc::clone(&pool.shared);
+
+        // Warmup: a barrier task forces all 4 participants (caller +
+        // 3 workers) to run concurrently, so the full thread set is
+        // known exactly after one job.
+        let ids = Mutex::new(HashSet::new());
+        let barrier = Barrier::new(4);
+        {
+            let _submit = shared.submit.lock().unwrap();
+            run_parts_pool(&shared, 4, &|_part| {
+                ids.lock()
+                    .unwrap()
+                    .insert(std::thread::current().id());
+                barrier.wait();
+            });
+        }
+        let warm_ids = ids.lock().unwrap().clone();
+        assert_eq!(warm_ids.len(), 4, "caller + 3 pool workers");
+
+        // 1000 dispatches after warmup: every part must land on a
+        // thread from the warmup set (no thread creation, ever).
+        for _ in 0..1000 {
+            let _submit = shared.submit.lock().unwrap();
+            run_parts_pool(&shared, 4, &|_part| {
+                let id = std::thread::current().id();
+                assert!(
+                    ids.lock().unwrap().contains(&id),
+                    "pool minted a new thread after warmup"
+                );
+            });
+        }
+
+        // Clean shutdown: Drop drains + joins, after which the test's
+        // clone is the only reference to the shared state left.
+        drop(pool);
+        assert_eq!(
+            Arc::strong_count(&shared),
+            1,
+            "workers joined and released their handles"
+        );
+        assert!(shared.shutdown.load(Ordering::Acquire));
+    }
+
+    #[test]
+    fn set_threads_rebuilds_and_auto_clamps_to_host() {
+        let _guard = TEST_THREAD_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let saved = configured_threads();
+
+        set_threads(3);
+        let s = pool_stats();
+        assert_eq!((s.threads, s.workers), (3, 2));
+
+        // Reconfigure down: the old workers are drained and joined,
+        // not leaked as parked threads.
+        set_threads(1);
+        assert_eq!(pool_stats().workers, 0);
+
+        // Auto (0) clamps to the host's available parallelism at
+        // build time.
+        set_threads(0);
+        assert_eq!(
+            pool_stats().threads,
+            available_threads().clamp(1, MAX_THREADS)
+        );
+
+        // Dispatch at the rebuilt size still sums correctly.
+        let ranges = even_ranges(100, 4);
+        let sums =
+            par_map_parts(&ranges, |_, r| r.sum::<usize>());
+        assert_eq!(sums.iter().sum::<usize>(), 4950);
+
+        set_threads(saved);
+    }
+
+    #[test]
+    fn part_panic_propagates_and_pool_survives() {
+        let _guard = TEST_THREAD_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let saved = configured_threads();
+        set_threads(4);
+        let ranges = even_ranges(8, 4);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            par_map_parts(&ranges, |part, _r| {
+                assert!(part != 2, "boom");
+                part
+            })
+        }));
+        assert!(caught.is_err(), "part panic must propagate");
+        // The pool is intact: the next dispatch works, in order.
+        let vals = par_map_parts(&ranges, |part, _| part);
+        assert_eq!(vals, vec![0, 1, 2, 3]);
+        set_threads(saved);
+    }
+
+    #[test]
+    fn forced_spawn_fallback_counts_and_computes() {
+        force_spawn_fallback(true);
+        let before = pool_stats().spawn_fallbacks;
+        let ranges = even_ranges(40, 4);
+        let sums =
+            par_map_parts(&ranges, |_, r| r.sum::<usize>());
+        force_spawn_fallback(false);
+        assert_eq!(
+            sums.iter().sum::<usize>(),
+            (0..40usize).sum::<usize>()
+        );
+        assert!(pool_stats().spawn_fallbacks > before);
     }
 }

@@ -1,8 +1,9 @@
 //! Readiness notification for the event loop: a two-declaration shim
 //! over the C runtime's `poll(2)` entry point (already linked into
 //! every Rust binary), in the style of the `signal` shim in
-//! [`super::signal`] — together they are the crate's entire `unsafe`
-//! inventory.
+//! [`super::signal`] — together with the SIMD micro-kernels
+//! (`linalg/simd.rs`) and the parallel pool's lifetime-erasing cast,
+//! they form the crate's entire `unsafe` inventory.
 //!
 //! The interface is deliberately minimal: the caller builds a slice of
 //! [`PollFd`] interest records each cycle (level-triggered, like the

@@ -404,9 +404,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         let target = target.clone();
         let period = Duration::from_secs(cfg.metrics_poll_s);
         let stop = stop.clone();
-        Some(std::thread::spawn(move || {
-            metrics_poll_loop(&target, period, t0, &stop)
-        }))
+        let h = std::thread::Builder::new()
+            .name("rskpca-loadgen-poll".into())
+            .spawn(move || metrics_poll_loop(&target, period, t0, &stop))
+            .map_err(|e| {
+                Error::Service(format!("spawn metrics poller: {e}"))
+            })?;
+        Some(h)
     } else {
         None
     };
@@ -419,9 +423,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         }
         let cfg = cfg.clone();
         let rate = cfg.rate / shards as f64;
-        threads.push(std::thread::spawn(move || {
-            shard_loop(&cfg, sock, dim, lo..hi, rate)
-        }));
+        let h = std::thread::Builder::new()
+            .name(format!("rskpca-loadgen-{shard}"))
+            .spawn(move || shard_loop(&cfg, sock, dim, lo..hi, rate))
+            .map_err(|e| {
+                Error::Service(format!("spawn loadgen shard: {e}"))
+            })?;
+        threads.push(h);
     }
     let mut report = LoadgenReport {
         clients: cfg.clients,

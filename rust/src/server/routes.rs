@@ -232,6 +232,26 @@ fn stats(state: &ServerState) -> Response {
         stages = stages.with(name, stage_json(&snap));
     }
     let occupancy = hub.batch_rows.snapshot();
+    // Which GEMM kernel production is actually running, plus the
+    // persistent work-pool state (the two hardware levers this crate
+    // pulls) — so a scrape answers "is this host on the SIMD path and
+    // are the workers parked or busy" without a debugger.
+    let pool = crate::parallel::pool_stats();
+    let compute = Json::obj()
+        .with(
+            "simd_kernel",
+            Json::Str(crate::linalg::simd::active_name().into()),
+        )
+        .with("pool_threads", Json::Num(pool.threads as f64))
+        .with("pool_workers", Json::Num(pool.workers as f64))
+        .with("pool_busy", Json::Num(pool.busy as f64))
+        .with("pool_jobs", Json::Num(pool.jobs as f64))
+        .with("pool_wakes", Json::Num(pool.wakes as f64))
+        .with("pool_parks", Json::Num(pool.parks as f64))
+        .with(
+            "pool_spawn_fallbacks",
+            Json::Num(pool.spawn_fallbacks as f64),
+        );
     let obs = Json::obj()
         .with(
             "events_dropped",
@@ -249,6 +269,7 @@ fn stats(state: &ServerState) -> Response {
             .with("service", service)
             .with("routes", state.routes.to_json())
             .with("http", http)
+            .with("compute", compute)
             .with("stages", stages)
             .with(
                 "batch_occupancy",
@@ -379,6 +400,48 @@ fn metrics(state: &ServerState) -> Response {
         "Background-refresher circuit breaker (0=closed, 1=open, \
          2=half-open).",
         hub.breaker_state() as f64,
+    );
+    // Compute-engine state: the active GEMM ISA as a one-hot labeled
+    // gauge (the Prometheus idiom for "which variant"), and the
+    // persistent work-pool counters.
+    let pool = crate::parallel::pool_stats();
+    p.gauge_vec(
+        "rskpca_simd_kernel",
+        "Active GEMM micro-kernel ISA (1 on the selected label).",
+        "kernel",
+        &[(crate::linalg::simd::active_name(), 1.0)],
+    );
+    p.gauge(
+        "rskpca_pool_threads",
+        "Compute threads the parallel engine fans out to (workers + \
+         the submitting caller).",
+        pool.threads as f64,
+    );
+    p.gauge(
+        "rskpca_pool_busy",
+        "Pool parts executing right now.",
+        pool.busy as f64,
+    );
+    p.counter(
+        "rskpca_pool_jobs_total",
+        "Parallel jobs dispatched through the persistent pool.",
+        pool.jobs as f64,
+    );
+    p.counter(
+        "rskpca_pool_wakes_total",
+        "Worker wakeups from the parked state.",
+        pool.wakes as f64,
+    );
+    p.counter(
+        "rskpca_pool_parks_total",
+        "Worker transitions into the parked (idle) state.",
+        pool.parks as f64,
+    );
+    p.counter(
+        "rskpca_pool_spawn_fallback_total",
+        "Dispatches that fell back to per-call spawned threads \
+         (nested parallelism or a draining pool).",
+        pool.spawn_fallbacks as f64,
     );
     let hits: Vec<(&str, f64)> = ROUTES
         .iter()

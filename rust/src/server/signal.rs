@@ -1,7 +1,9 @@
 //! Ctrl-C / SIGTERM → an atomic shutdown flag, with no signal crate:
 //! a two-declaration shim over the C runtime's `signal` entry point
-//! (already linked into every Rust binary), the only `unsafe` in the
-//! crate.  The handler body is async-signal-safe — it stores to a
+//! (already linked into every Rust binary), one of the crate's four
+//! sanctioned `unsafe` sites ({signal, poll, simd, pool} — see
+//! ARCHITECTURE.md).  The handler body is async-signal-safe — it
+//! stores to a
 //! static atomic and returns; the serve loop polls
 //! [`shutdown_requested`] and runs the orderly teardown (acceptor
 //! close → connection drain → worker join) on the main thread.
